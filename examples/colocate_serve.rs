@@ -1,0 +1,98 @@
+//! End-to-end co-located serving driver (DESIGN.md §6): loads the real
+//! AOT-compiled tiny model, replays a mixed online+offline trace through
+//! the OOCO engine (Algorithm 2 batching on calibrated perf-model
+//! predictions), and reports TTFT/TPOT percentiles, SLO violations, and
+//! online/offline token throughput. Optionally compares all three policies.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example colocate_serve -- \
+//!     --duration 20 --online-rate 1.0 --offline-qps 1.0 --compare
+//! ```
+
+use ooco::coordinator::Policy;
+use ooco::engine::{serve_trace_with_runtime, EngineConfig};
+use ooco::runtime::Runtime;
+use ooco::trace::datasets::{DatasetProfile, LengthProfile};
+use ooco::trace::generator::{offline_trace, online_trace};
+use ooco::trace::Trace;
+use ooco::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let duration = args.f64("duration", 20.0);
+    let online_rate = args.f64("online-rate", 1.0);
+    let offline_qps = args.f64("offline-qps", 1.0);
+    let compare = args.has("compare");
+    let seed = args.u64("seed", 42);
+
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!("artifacts not built — run `make artifacts` first");
+    }
+    println!("loading runtime...");
+    let rt = Runtime::load(dir)?;
+
+    // Tiny-model-scale trace: dataset shapes from the paper's Table 5
+    // profiles, lengths rescaled to the tiny model's context budget.
+    let trace = tiny_trace(&rt, online_rate, offline_qps, duration, seed);
+    println!(
+        "trace: {} online + {} offline requests over {:.0}s",
+        trace.count_class(ooco::request::Class::Online),
+        trace.count_class(ooco::request::Class::Offline),
+        duration
+    );
+
+    let policies: Vec<Policy> = if compare {
+        Policy::all().to_vec()
+    } else {
+        vec![Policy::Ooco]
+    };
+    for policy in policies {
+        let cfg = EngineConfig {
+            policy,
+            max_output: 16,
+            seed,
+            ..Default::default()
+        };
+        let out = serve_trace_with_runtime(&rt, &trace, &cfg)?;
+        let r = &out.report;
+        println!("\n=== policy {} (wall {:.1}s) ===", policy.name(), out.wall_s);
+        println!("  {}", r.summary_line());
+        println!(
+            "  prefills {} | strict steps {} | relaxed steps {} | online tok {} | offline tok {}",
+            out.prefills,
+            out.strict_steps,
+            out.relaxed_steps,
+            out.online_tokens,
+            out.offline_tokens
+        );
+        println!(
+            "  online {:.1} tok/s wall, offline {:.1} tok/s wall",
+            out.online_tokens as f64 / out.wall_s,
+            out.offline_tokens as f64 / out.wall_s
+        );
+    }
+    Ok(())
+}
+
+fn tiny_trace(
+    rt: &Runtime,
+    online_rate: f64,
+    offline_qps: f64,
+    duration: f64,
+    seed: u64,
+) -> Trace {
+    // Rescale the Table 5 length profiles into the tiny model's context:
+    // prompts up to ~smax/2, outputs capped by the engine's max_output.
+    let max_prompt = rt.manifest.smax / 2;
+    let mut online_ds = DatasetProfile::azure_conv();
+    online_ds.prompt = LengthProfile::new(96.0, 0.6, 8, max_prompt);
+    online_ds.output = LengthProfile::new(10.0, 0.5, 1, 16);
+    let mut offline_ds = DatasetProfile::ooc_offline();
+    offline_ds.prompt = LengthProfile::new(128.0, 0.6, 8, max_prompt);
+    offline_ds.output = LengthProfile::new(12.0, 0.5, 1, 16);
+
+    online_trace(online_ds, online_rate, duration, seed)
+        .merge(offline_trace(offline_ds, offline_qps, duration, seed + 1))
+}

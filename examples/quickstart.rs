@@ -1,0 +1,71 @@
+//! Quickstart: load the AOT artifacts and run one request end-to-end —
+//! prefill on the "latency-relaxed" path, then a few decode steps.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use ooco::runtime::{DecodeEntry, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!("artifacts not built — run `make artifacts` first");
+    }
+    println!("loading artifacts (compiling all bucket executables)...");
+    let t0 = std::time::Instant::now();
+    let rt = Runtime::load(dir)?;
+    println!(
+        "runtime ready in {:.1}s: model hidden={} layers={} vocab={} smax={}",
+        t0.elapsed().as_secs_f64(),
+        rt.manifest.hidden,
+        rt.manifest.layers,
+        rt.manifest.vocab,
+        rt.manifest.smax
+    );
+
+    // A synthetic prompt (the tiny model has synthetic weights + vocab).
+    let prompt: Vec<i32> = (0..48).map(|i| (i * 7 + 3) % 512).collect();
+    let t0 = std::time::Instant::now();
+    let out = rt.prefill(&prompt)?;
+    println!(
+        "prefill: {} tokens in {:.1} ms (bucket {})",
+        prompt.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        rt.prefill_bucket(prompt.len())?
+    );
+
+    let mut kv = out.kv;
+    let mut token = argmax(&out.logits);
+    let mut pos = prompt.len() as i32;
+    print!("generated tokens:");
+    let t0 = std::time::Instant::now();
+    for _ in 0..12 {
+        let mut entries = [DecodeEntry {
+            token,
+            position: pos,
+            kv: &mut kv,
+        }];
+        let logits = rt.decode(&mut entries)?;
+        token = argmax(&logits[0]);
+        pos += 1;
+        print!(" {token}");
+    }
+    println!();
+    println!(
+        "12 decode steps in {:.1} ms ({:.1} ms/step)",
+        t0.elapsed().as_secs_f64() * 1e3,
+        t0.elapsed().as_secs_f64() * 1e3 / 12.0
+    );
+    println!("quickstart OK");
+    Ok(())
+}
+
+fn argmax(logits: &[f32]) -> i32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0 as i32
+}

@@ -1,0 +1,53 @@
+//! Interactive exploration of the roofline performance model (§3.3):
+//! query prefill/decode latency, bottleneck classification, bs_sat, and
+//! KV capacity for any model/hardware pair.
+//!
+//! ```bash
+//! cargo run --release --example roofline_explore -- --model 7b --hw 910c \
+//!     --batch 128 --kv-len 1000 --prompt 1892
+//! ```
+
+use ooco::config::{HardwareProfile, ModelSpec};
+use ooco::perfmodel::{BatchStats, PerfModel};
+use ooco::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let model = ModelSpec::by_name(args.str("model", "7b"))?;
+    let hw = HardwareProfile::by_name(args.str("hw", "910c"))?;
+    let batch = args.usize("batch", 128);
+    let kv_len = args.usize("kv-len", 1000);
+    let prompt = args.usize("prompt", 1892);
+
+    let pm = PerfModel::new(model.clone(), hw.clone());
+    println!("model {} on {}", model.name, hw.name);
+    println!("  params            {:.2} B", model.param_count() / 1e9);
+    println!("  weights           {:.1} GB", model.weights_bytes() / 1e9);
+    println!("  kv bytes/token    {:.0} B", model.kv_bytes_per_token());
+    println!("  kv capacity       {} tokens", pm.max_kv_tokens());
+    println!("  bs_sat            {} (compute-saturated batch)", pm.bs_sat());
+    println!();
+
+    let pc = pm.prefill_cost(&[prompt]);
+    println!("prefill({prompt} tokens):");
+    println!("  latency           {:.2} ms", pc.latency_s * 1e3);
+    println!("  flops             {:.2} TFLOP", pc.total_flops() / 1e12);
+    println!("  achieved          {:.1} TFLOP/s", pc.achieved_flops() / 1e12);
+    println!("  intensity         {:.1} FLOP/B", pc.intensity());
+    println!();
+
+    let b = BatchStats::new(batch, batch * kv_len);
+    let dc = pm.decode_cost(b);
+    println!("decode(batch={batch}, kv_len={kv_len}):");
+    println!("  latency           {:.2} ms", dc.latency_s * 1e3);
+    println!("  bottleneck        {:?}", pm.decode_bottleneck(b));
+    println!("  memory util       {:.1}%", pm.memory_utilization(b) * 100.0);
+    println!("  achieved          {:.1} TFLOP/s", dc.achieved_flops() / 1e12);
+    println!("  intensity         {:.1} FLOP/B", dc.intensity());
+    println!(
+        "  kv transfer       {:.2} ms ({} tokens over RDMA)",
+        pm.kv_transfer_latency(kv_len) * 1e3,
+        kv_len
+    );
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Full-scale trace replay through the discrete-event simulator: Qwen2.5
+//! 7B/72B on 910c-like hardware, comparing the three policies on one
+//! dataset configuration (the per-point view of Fig. 6).
+//!
+//! ```bash
+//! cargo run --release --example trace_replay -- \
+//!     --model 7b --dataset azure-conv --online-rate 0.5 \
+//!     --offline-qps 10 --duration 1800
+//! ```
+
+use ooco::config::{ModelSpec, ServingConfig};
+use ooco::coordinator::Policy;
+use ooco::sim::{simulate, SimConfig};
+use ooco::trace::datasets::DatasetProfile;
+use ooco::trace::generator::{offline_trace, online_trace};
+use ooco::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let model = args.str("model", "7b");
+    let dataset = args.str("dataset", "azure-conv");
+    let online_rate = args.f64("online-rate", 0.5);
+    let offline_qps = args.f64("offline-qps", 10.0);
+    let duration = args.f64("duration", 1800.0);
+    let seed = args.u64("seed", 42);
+
+    let online_ds = DatasetProfile::by_name(dataset)?;
+    let offline_ds = DatasetProfile::ooc_offline();
+    let trace = online_trace(online_ds, online_rate, duration, seed)
+        .merge(offline_trace(offline_ds, offline_qps, duration, seed + 1));
+    println!(
+        "trace: {} online + {} offline over {:.0}s ({} model, online {:.2} rps, offline {:.2} qps)",
+        trace.count_class(ooco::request::Class::Online),
+        trace.count_class(ooco::request::Class::Offline),
+        duration,
+        model,
+        online_rate,
+        offline_qps,
+    );
+
+    let mut serving = ServingConfig::preset_7b();
+    serving.model = ModelSpec::by_name(model)?;
+
+    println!(
+        "{:<16} {:>8} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8}",
+        "policy", "viol%", "ttft_p99", "tpot_p99", "off_tok/s", "mig", "evict", "preempt"
+    );
+    for policy in Policy::all() {
+        let mut cfg = SimConfig::new(serving.clone(), policy);
+        cfg.seed = seed;
+        let t0 = std::time::Instant::now();
+        let res = simulate(&trace, &cfg);
+        let r = &res.report;
+        println!(
+            "{:<16} {:>7.2}% {:>9.3}s {:>8.1}ms {:>10.1} {:>8} {:>8} {:>8}   [{:.1}s wall]",
+            policy.name(),
+            r.online_violation_rate * 100.0,
+            r.ttft.p99,
+            r.tpot.p99 * 1e3,
+            r.offline_token_throughput,
+            res.migrations,
+            res.evictions,
+            res.preemptions,
+            t0.elapsed().as_secs_f64(),
+        );
+    }
+    Ok(())
+}

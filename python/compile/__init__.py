@@ -1,0 +1,5 @@
+"""OOCO build-time compile package: L2 JAX model + L1 Pallas kernels + AOT.
+
+This package runs only during ``make artifacts``; nothing here is imported on
+the rust request path.
+"""

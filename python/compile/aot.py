@@ -1,0 +1,177 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts + weights.bin + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Weights are NOT baked as constants — ``as_hlo_text`` elides large constants
+to ``{...}`` which the text parser reads back as zeros (verified), and full
+constant printing costs ~36 MB per artifact. Instead every weight leaf is a
+trailing HLO parameter, and the raw f32 values are written once to
+``weights.bin``; the rust runtime uploads them as device-resident PJRT
+buffers at startup and passes them to every ``execute_b`` call.
+
+Lowering uses ``return_tuple=True`` so every artifact returns one tuple the
+rust side unwraps with ``to_tuple()``.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target). Artifacts:
+
+    prefill_s{S}.hlo.txt  (tokens[S] i32, length[] i32, *weights)
+                          -> (logits[V], k[L,Hkv,Smax,Dh], v[L,Hkv,Smax,Dh])
+    decode_b{B}.hlo.txt   (tokens[B] i32, positions[B] i32,
+                           k[B,L,Hkv,Smax,Dh], v[B,L,Hkv,Smax,Dh], *weights)
+                          -> (logits[B,V], k', v')
+    weights.bin           little-endian f32 leaves in manifest order
+    manifest.json         model config, buckets, weight specs, file map
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    DECODE_BUCKETS,
+    PREFILL_BUCKETS,
+    ModelConfig,
+    flatten_params,
+    init_params,
+    make_decode_flat,
+    make_prefill_flat,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (the rust-loadable form)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _weight_specs(leaves):
+    return [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+
+
+def lower_prefill(treedef, leaves, cfg: ModelConfig, s: int) -> str:
+    fn = make_prefill_flat(treedef, cfg)
+    tok = jax.ShapeDtypeStruct((s,), jnp.int32)
+    length = jax.ShapeDtypeStruct((), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(tok, length, *_weight_specs(leaves)))
+
+
+def lower_decode(treedef, leaves, cfg: ModelConfig, b: int) -> str:
+    fn = make_decode_flat(treedef, cfg)
+    tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    kv = jax.ShapeDtypeStruct(
+        (b, cfg.layers, cfg.kv_heads, cfg.smax, cfg.head_dim), jnp.float32
+    )
+    return to_hlo_text(
+        jax.jit(fn).lower(tok, pos, kv, kv, *_weight_specs(leaves))
+    )
+
+
+def write_weights(leaves, names, out_dir):
+    """Raw little-endian f32 blob + per-leaf specs (name, shape, offsets)."""
+    specs = []
+    offset = 0
+    path = os.path.join(out_dir, "weights.bin")
+    with open(path, "wb") as f:
+        for name, leaf in zip(names, leaves):
+            arr = np.asarray(leaf, dtype="<f4")
+            f.write(arr.tobytes())
+            specs.append({
+                "name": name,
+                "shape": list(arr.shape),
+                "offset_bytes": offset,
+                "num_elements": int(arr.size),
+            })
+            offset += arr.nbytes
+    return specs, offset, path
+
+
+def _inputs_fingerprint() -> str:
+    """Hash of the compile-path sources, recorded for staleness checks."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, filenames in sorted(os.walk(here)):
+        for name in sorted(filenames):
+            if name.endswith(".py"):
+                with open(os.path.join(root, name), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--only", default=None,
+        help="comma-separated artifact stems to rebuild (e.g. decode_b4)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = ModelConfig()
+    params = init_params(cfg, seed=args.seed)
+    leaves, treedef, names = flatten_params(params)
+    only = set(args.only.split(",")) if args.only else None
+
+    files = {}
+    for s in PREFILL_BUCKETS:
+        stem = f"prefill_s{s}"
+        files[stem] = stem + ".hlo.txt"
+        if only and stem not in only:
+            continue
+        text = lower_prefill(treedef, leaves, cfg, s)
+        path = os.path.join(args.out_dir, files[stem])
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for b in DECODE_BUCKETS:
+        stem = f"decode_b{b}"
+        files[stem] = stem + ".hlo.txt"
+        if only and stem not in only:
+            continue
+        text = lower_decode(treedef, leaves, cfg, b)
+        path = os.path.join(args.out_dir, files[stem])
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    weight_specs, total_bytes, wpath = write_weights(leaves, names, args.out_dir)
+    print(f"wrote {wpath} ({total_bytes} bytes, {len(weight_specs)} leaves)")
+
+    manifest = {
+        "format": "hlo-text",
+        "seed": args.seed,
+        "model": cfg.as_dict(),
+        "prefill_buckets": list(PREFILL_BUCKETS),
+        "decode_buckets": list(DECODE_BUCKETS),
+        "kv_cache_shape_per_request": [
+            cfg.layers, cfg.kv_heads, cfg.smax, cfg.head_dim
+        ],
+        "weights_file": "weights.bin",
+        "weights": weight_specs,
+        "files": files,
+        "inputs_fingerprint": _inputs_fingerprint(),
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

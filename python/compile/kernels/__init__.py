@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels for the OOCO reproduction.
+
+All kernels are lowered with ``interpret=True`` so they compile to plain HLO
+ops executable on the CPU PJRT client (real-TPU Mosaic custom-calls cannot run
+there — see DESIGN.md §3 Hardware-Adaptation). Correctness is asserted against
+the pure-jnp oracles in :mod:`compile.kernels.ref`.
+"""
+
+from .gemm import pallas_matmul  # noqa: F401
+from .attention import flash_prefill_attention, decode_attention  # noqa: F401

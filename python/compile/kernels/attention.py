@@ -1,0 +1,183 @@
+"""Pallas flash-attention kernels: prefill (causal, blocked online softmax)
+and decode (single query over a padded KV cache).
+
+TPU mapping of the paper's fused attention operator (Table 3 / Fig. 2): the
+intermediate score matrix never touches HBM. The prefill kernel streams K/V
+blocks through VMEM and keeps the online-softmax running statistics (row max
+``m``, row sum ``l``) plus the output accumulator in VMEM scratch — exactly
+the "on-chip buffers" role the paper assigns to the 910c's cache. The decode
+kernel is a single-query variant whose score row fits in one block, masked by
+the per-request cache position.
+
+PERF (§Perf, EXPERIMENTS.md): both kernels are **head-vectorized** — one
+grid step processes *all* attention heads, with GQA expansion done in-VMEM.
+The first version gridded over heads too ``(B, Hq)`` / ``(Hq, S/bq, S/bkv)``;
+collapsing the head dimension cut grid steps 8x and reduced a B=16 decode
+step from 362 ms to 78 ms on the interpret-mode substrate. The same
+restructuring is right for real TPUs: larger per-step work amortizes
+grid/dispatch overhead, and the full-head block still fits VMEM comfortably:
+
+  decode per grid step (f32):  q  Hq*Dh           =  8*32*4    =   1 KiB
+                               kv 2*Hkv*Smax*Dh   =  2*2*448*32*4 = 229 KiB
+                               expanded kv 2*Hq*Smax*Dh          = 917 KiB
+  prefill per grid step:       q 64*8*32*4 = 64 KiB, k/v 2*16 KiB,
+                               acc 64 KiB, m/l 4 KiB
+all far below the ~16 MiB VMEM budget.
+
+All calls use ``interpret=True`` (see gemm.py for why); oracles in ref.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+# Default block sizes along the query / key sequence dimensions.
+BQ, BKV = 64, 64
+
+
+def _prefill_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, n_kv, bq, bkv, group, scale,
+):
+    """Grid step (qi, ki): fold one K/V block into q-block qi, all heads."""
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]                      # [bq, Hq, Dh]
+    k = jnp.repeat(k_ref[...], group, axis=1)  # [bkv, Hq, Dh] (GQA in VMEM)
+    v = jnp.repeat(v_ref[...], group, axis=1)
+    # Scores for all heads at once: [Hq, bq, bkv].
+    s = jnp.einsum("qhd,khd->hqk", q, k) * scale
+
+    # Causal + valid-length mask in global coordinates.
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = jnp.logical_and(k_pos <= q_pos, k_pos < len_ref[0])[None, :, :]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                 # [Hq, bq]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # exp() of NEG_INF-masked rows underflows to 0 — no NaNs.
+    p = jnp.exp(s - m_new[:, :, None])  # [Hq, bq, bkv]
+    alpha = jnp.exp(m_prev - m_new)     # [Hq, bq]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, :, None] + jnp.einsum(
+        "hqk,khd->hqd", p, v
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        # Fully-masked rows (padding beyond `length`) have l == 0; emit 0s.
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        out = acc_ref[...] / safe[:, :, None]     # [Hq, bq, Dh]
+        o_ref[...] = jnp.transpose(out, (1, 0, 2))  # [bq, Hq, Dh]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bkv"))
+def flash_prefill_attention(q, k, v, length, bq=BQ, bkv=BKV):
+    """Causal masked GQA flash attention for the prefill phase.
+
+    Args:
+      q: ``[S, Hq, Dh]`` (padded to the bucket length S).
+      k, v: ``[S, Hkv, Dh]``.
+      length: scalar int32 — number of valid tokens.
+      bq, bkv: query/key block sizes (clamped to S).
+
+    Returns:
+      ``[S, Hq, Dh]``; rows >= length attend over the valid prefix — they are
+      garbage-but-finite (matching the ref oracle) and callers mask them out
+      (the L2 model zeroes padded KV rows before caching).
+    """
+    s, hq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    bq_, bkv_ = min(bq, s), min(bkv, s)
+    assert s % bq_ == 0 and s % bkv_ == 0, f"S={s} must divide blocks {bq_},{bkv_}"
+    n_kv = s // bkv_
+    scale = 1.0 / (dh ** 0.5)
+    len_arr = jnp.reshape(length.astype(jnp.int32), (1,))
+
+    return pl.pallas_call(
+        functools.partial(
+            _prefill_kernel,
+            n_kv=n_kv,
+            bq=bq_,
+            bkv=bkv_,
+            group=group,
+            scale=scale,
+        ),
+        grid=(s // bq_, n_kv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda qi, ki: (0,)),
+            pl.BlockSpec((bq_, hq, dh), lambda qi, ki: (qi, 0, 0)),
+            pl.BlockSpec((bkv_, hkv, dh), lambda qi, ki: (ki, 0, 0)),
+            pl.BlockSpec((bkv_, hkv, dh), lambda qi, ki: (ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq_, hq, dh), lambda qi, ki: (qi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, hq, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((hq, bq_), jnp.float32),      # running max m
+            pltpu.VMEM((hq, bq_), jnp.float32),      # running sum l
+            pltpu.VMEM((hq, bq_, dh), jnp.float32),  # output accumulator
+        ],
+        interpret=True,
+    )(len_arr, q, k, v)
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, smax, scale, group):
+    """Grid step (b,): request b's single query row, all heads at once."""
+    q = q_ref[0]                                # [Hq, Dh]
+    k = jnp.repeat(k_ref[0], group, axis=0)     # [Hq, Smax, Dh]
+    v = jnp.repeat(v_ref[0], group, axis=0)
+    s = jnp.einsum("hd,hsd->hs", q, k) * scale  # [Hq, Smax]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, smax), 1)
+    s = jnp.where(idx <= pos_ref[0], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o_ref[0] = jnp.einsum("hs,hsd->hd", p, v) / jnp.sum(p, axis=-1, keepdims=True)
+
+
+@jax.jit
+def decode_attention(q, k_cache, v_cache, positions):
+    """Single-token GQA attention over padded KV caches (decode phase).
+
+    Args:
+      q: ``[B, Hq, Dh]``.
+      k_cache, v_cache: ``[B, Hkv, Smax, Dh]``.
+      positions: ``[B]`` int32 — request b attends to slots 0..positions[b].
+
+    Returns:
+      ``[B, Hq, Dh]``.
+    """
+    b, hq, dh = q.shape
+    hkv, smax = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    scale = 1.0 / (dh ** 0.5)
+
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, smax=smax, scale=scale, group=group),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb: (bb,)),
+            pl.BlockSpec((1, hq, dh), lambda bb: (bb, 0, 0)),
+            pl.BlockSpec((1, hkv, smax, dh), lambda bb: (bb, 0, 0, 0)),
+            pl.BlockSpec((1, hkv, smax, dh), lambda bb: (bb, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, dh), lambda bb: (bb, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, dh), jnp.float32),
+        interpret=True,
+    )(positions.astype(jnp.int32), q, k_cache, v_cache)

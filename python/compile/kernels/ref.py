@@ -1,0 +1,77 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are tested against (pytest +
+hypothesis sweeps in ``python/tests``). They are deliberately written in the
+most obvious way possible — no tiling, no online softmax — so a disagreement
+always implicates the kernel.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_matmul(a, b):
+    """Plain f32 matmul oracle: ``a[M,K] @ b[K,N] -> [M,N]``."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def ref_prefill_attention(q, k, v, length):
+    """Causal + valid-length masked multi-head attention (prefill phase).
+
+    Args:
+      q: ``[S, Hq, Dh]`` query tensor (padded to bucket length S).
+      k: ``[S, Hkv, Dh]`` key tensor.
+      v: ``[S, Hkv, Dh]`` value tensor.
+      length: scalar int32, number of valid tokens (<= S).
+
+    Returns:
+      ``[S, Hq, Dh]`` attention output. Rows >= length are garbage-but-finite
+      (they attend over the valid prefix); callers mask them out.
+    """
+    s, hq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    # Expand KV heads to match Q heads (GQA).
+    k = jnp.repeat(k, group, axis=1)  # [S, Hq, Dh]
+    v = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    # [Hq, S, S] scores
+    scores = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    causal = ki <= qi
+    valid = ki < length
+    mask = jnp.logical_and(causal, valid)[None, :, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", probs, v)
+
+
+def ref_decode_attention(q, k_cache, v_cache, positions):
+    """Single-token (decode phase) attention over a padded KV cache.
+
+    Args:
+      q: ``[B, Hq, Dh]`` one query token per request.
+      k_cache: ``[B, Hkv, Smax, Dh]`` padded key cache.
+      v_cache: ``[B, Hkv, Smax, Dh]`` padded value cache.
+      positions: ``[B]`` int32; request b attends to cache slots
+        ``0..positions[b]`` inclusive (its own freshly-written token included).
+
+    Returns:
+      ``[B, Hq, Dh]``.
+    """
+    b, hq, dh = q.shape
+    hkv = k_cache.shape[1]
+    group = hq // hkv
+    k = jnp.repeat(k_cache, group, axis=1)  # [B, Hq, Smax, Dh]
+    v = jnp.repeat(v_cache, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k) * scale
+    smax = k_cache.shape[2]
+    valid = jnp.arange(smax)[None, None, :] <= positions[:, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bhsd->bhd", probs, v)

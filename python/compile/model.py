@@ -1,0 +1,261 @@
+"""Layer-2 JAX model: a tiny Qwen2.5-style decoder-only transformer.
+
+Architecture mirrors the Qwen2.5 family evaluated in the paper (RMSNorm,
+rotary position embeddings, grouped-query attention, SwiGLU MLP, tied LM
+head) scaled down so the AOT artifacts execute quickly on the CPU PJRT
+client. The perf-model experiments use the true 7B/72B dimensions (see
+``rust/src/config``); this model exists to prove the full three-layer stack
+composes end-to-end with real numerics (DESIGN.md §2, §6).
+
+Both entry points are *functional*: the KV cache is an explicit argument and
+result, because the rust coordinator owns cache residency (paged KV manager,
+migration between instances) and the HLO executable must stay stateless.
+
+Hot spots call the Layer-1 Pallas kernels:
+  - linear projections -> :func:`compile.kernels.pallas_matmul`
+  - prefill attention  -> :func:`compile.kernels.flash_prefill_attention`
+  - decode attention   -> :func:`compile.kernels.decode_attention`
+
+Weights are generated from a fixed seed and baked into the HLO as constants
+by ``aot.py`` (no network => no real checkpoints; scheduling behaviour does
+not depend on weight values — DESIGN.md §2).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pallas_matmul, flash_prefill_attention, decode_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Dimensions of the tiny serving model.
+
+    ``hidden == q_heads * head_dim`` is assumed throughout. ``smax`` is the
+    padded KV-cache length every request carries (prompt + generation room).
+    """
+
+    vocab: int = 512
+    hidden: int = 256
+    layers: int = 4
+    q_heads: int = 8
+    kv_heads: int = 2
+    head_dim: int = 32
+    ffn: int = 512
+    smax: int = 448
+    rope_theta: float = 10000.0
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+# Prefill sequence-length buckets and decode batch-size buckets the AOT step
+# compiles. The rust engine rounds each request/batch up to the next bucket.
+PREFILL_BUCKETS = (64, 128, 256, 384)
+DECODE_BUCKETS = (1, 2, 4, 8, 16)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic synthetic weights, scaled for stable f32 activations."""
+    key = jax.random.PRNGKey(seed)
+    n_mats = cfg.layers * 7 + 1
+    keys = iter(jax.random.split(key, n_mats))
+
+    def mat(shape, fan_in):
+        return (jax.random.normal(next(keys), shape, jnp.float32)
+                / jnp.sqrt(jnp.float32(fan_in)))
+
+    params = {"embed": mat((cfg.vocab, cfg.hidden), cfg.hidden),
+              "final_norm": jnp.ones((cfg.hidden,), jnp.float32),
+              "layers": []}
+    for _ in range(cfg.layers):
+        params["layers"].append({
+            "ln1": jnp.ones((cfg.hidden,), jnp.float32),
+            "ln2": jnp.ones((cfg.hidden,), jnp.float32),
+            "wq": mat((cfg.hidden, cfg.hidden), cfg.hidden),
+            "wk": mat((cfg.hidden, cfg.kv_dim), cfg.hidden),
+            "wv": mat((cfg.hidden, cfg.kv_dim), cfg.hidden),
+            "wo": mat((cfg.hidden, cfg.hidden), cfg.hidden),
+            "w_gate": mat((cfg.hidden, cfg.ffn), cfg.hidden),
+            "w_up": mat((cfg.hidden, cfg.ffn), cfg.hidden),
+            "w_down": mat((cfg.ffn, cfg.hidden), cfg.ffn),
+        })
+    return params
+
+
+def rms_norm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: [N, H, Dh]; positions: [N] int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [N, half]
+    cos = jnp.cos(angles)[:, None, :]  # [N, 1, half]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def linear(x, w):
+    """Projection via the Pallas GEMM kernel. x: [N, Din], w: [Din, Dout]."""
+    return pallas_matmul(x, w)
+
+
+def swiglu(x, layer):
+    gate = linear(x, layer["w_gate"])
+    up = linear(x, layer["w_up"])
+    return linear(jax.nn.silu(gate) * up, layer["w_down"])
+
+
+def _qkv(x, layer, cfg, positions):
+    """Project + reshape + rope. x: [N, hidden] -> q [N,Hq,Dh], k/v [N,Hkv,Dh]."""
+    n = x.shape[0]
+    q = linear(x, layer["wq"]).reshape(n, cfg.q_heads, cfg.head_dim)
+    k = linear(x, layer["wk"]).reshape(n, cfg.kv_heads, cfg.head_dim)
+    v = linear(x, layer["wv"]).reshape(n, cfg.kv_heads, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def prefill_fn(params, cfg: ModelConfig, tokens, length):
+    """Prefill a single request padded to bucket length S.
+
+    Args:
+      params: weight pytree from :func:`init_params`.
+      tokens: ``[S]`` int32, padded with arbitrary ids beyond ``length``.
+      length: scalar int32 — valid token count, 1 <= length <= S.
+
+    Returns:
+      ``(logits[V], k_cache[L, Hkv, Smax, Dh], v_cache[L, Hkv, Smax, Dh])``
+      where logits are taken at position ``length - 1`` (the first generated
+      token's distribution) and cache rows >= length are zero.
+    """
+    s = tokens.shape[0]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    valid = (positions < length)[:, None]                    # [S, 1]
+    x = params["embed"][tokens]                              # [S, hidden]
+
+    k_caches, v_caches = [], []
+    for layer in params["layers"]:
+        h = rms_norm(x, layer["ln1"])
+        q, k, v = _qkv(h, layer, cfg, positions)
+        attn = flash_prefill_attention(q, k, v, length)      # [S, Hq, Dh]
+        attn = attn.reshape(s, cfg.hidden)
+        x = x + linear(attn, layer["wo"])
+        x = x + swiglu(rms_norm(x, layer["ln2"]), layer)
+
+        # Zero padded rows, pad S -> Smax, to head-major cache layout.
+        kz = jnp.where(valid[:, :, None], k, 0.0)            # [S, Hkv, Dh]
+        vz = jnp.where(valid[:, :, None], v, 0.0)
+        pad = ((0, cfg.smax - s), (0, 0), (0, 0))
+        k_caches.append(jnp.transpose(jnp.pad(kz, pad), (1, 0, 2)))
+        v_caches.append(jnp.transpose(jnp.pad(vz, pad), (1, 0, 2)))
+
+    x = rms_norm(x, params["final_norm"])
+    last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=0)  # [1, hidden]
+    logits = linear(last, params["embed"].T)[0]              # [V]
+    k_cache = jnp.stack(k_caches)                            # [L, Hkv, Smax, Dh]
+    v_cache = jnp.stack(v_caches)
+    return logits, k_cache, v_cache
+
+
+def decode_fn(params, cfg: ModelConfig, tokens, positions, k_cache, v_cache):
+    """One decode step for a batch of B requests.
+
+    Args:
+      tokens: ``[B]`` int32 — the most recent token of each request.
+      positions: ``[B]`` int32 — the slot each token occupies (== current
+        sequence length - 1); the new K/V pair is written there.
+      k_cache, v_cache: ``[B, L, Hkv, Smax, Dh]`` — per-request-contiguous
+        layout so the rust side assembles batches by concatenating each
+        request's cache block.
+
+    Returns:
+      ``(logits[B, V], k_cache', v_cache')`` with caches updated in-place at
+      ``positions``.
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens]                              # [B, hidden]
+
+    write = jax.vmap(  # per-request scatter of one [Hkv, 1, Dh] row
+        lambda cache, kv, pos: jax.lax.dynamic_update_slice(
+            cache, kv[:, None, :], (0, pos, 0)),
+        in_axes=(0, 0, 0))
+
+    # PERF: collect per-layer updated caches and stack once at the end
+    # instead of `k_cache.at[:, li].set(...)` per layer — the .at[].set form
+    # copied the *entire* [B, L, Hkv, Smax, Dh] cache every layer (§Perf).
+    k_layers, v_layers = [], []
+    for li, layer in enumerate(params["layers"]):
+        h = rms_norm(x, layer["ln1"])
+        q, k, v = _qkv(h, layer, cfg, positions)             # q [B,Hq,Dh]
+        kc = write(k_cache[:, li], k, positions)             # [B, Hkv, Smax, Dh]
+        vc = write(v_cache[:, li], v, positions)
+        k_layers.append(kc)
+        v_layers.append(vc)
+        attn = decode_attention(q, kc, vc, positions)        # [B, Hq, Dh]
+        x = x + linear(attn.reshape(b, cfg.hidden), layer["wo"])
+        x = x + swiglu(rms_norm(x, layer["ln2"]), layer)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = linear(x, params["embed"].T)                    # [B, V]
+    return logits, jnp.stack(k_layers, 1), jnp.stack(v_layers, 1)
+
+
+def make_prefill(params, cfg: ModelConfig):
+    """Close over weights (bakes them as HLO constants — test/debug only;
+    ``as_hlo_text`` elides large constants, so AOT uses the *_flat variants)."""
+    return functools.partial(prefill_fn, params, cfg)
+
+
+def make_decode(params, cfg: ModelConfig):
+    return functools.partial(decode_fn, params, cfg)
+
+
+def flatten_params(params):
+    """Deterministic (leaves, treedef, names) flattening of the weight pytree.
+
+    The leaf order here defines both the trailing-parameter order of the AOT
+    artifacts and the layout of ``weights.bin``; the rust runtime replays the
+    same order from the manifest.
+    """
+    paths, treedef = jax.tree_util.tree_flatten_with_path(params)
+    names = [jax.tree_util.keystr(p) for p, _ in paths]
+    leaves = [leaf for _, leaf in paths]
+    return leaves, treedef, names
+
+
+def make_prefill_flat(treedef, cfg: ModelConfig):
+    """Prefill entry point taking weights as trailing parameters.
+
+    Signature: ``fn(tokens[S], length, *weight_leaves)`` — weights become HLO
+    parameters 2..N, loaded once by the rust runtime as device buffers.
+    """
+
+    def fn(tokens, length, *leaves):
+        params = jax.tree_util.tree_unflatten(treedef, leaves)
+        return prefill_fn(params, cfg, tokens, length)
+
+    return fn
+
+
+def make_decode_flat(treedef, cfg: ModelConfig):
+    """Decode entry point: ``fn(tokens[B], positions[B], k, v, *weight_leaves)``."""
+
+    def fn(tokens, positions, k_cache, v_cache, *leaves):
+        params = jax.tree_util.tree_unflatten(treedef, leaves)
+        return decode_fn(params, cfg, tokens, positions, k_cache, v_cache)
+
+    return fn

@@ -1,0 +1,21 @@
+"""Shared fixtures for the compile-path test suite."""
+
+import numpy as np
+import pytest
+
+from compile.model import ModelConfig, init_params
+
+
+@pytest.fixture(scope="session")
+def cfg():
+    return ModelConfig()
+
+
+@pytest.fixture(scope="session")
+def params(cfg):
+    return init_params(cfg, seed=0)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(1234)

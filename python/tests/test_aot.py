@@ -1,0 +1,95 @@
+"""AOT pipeline tests: HLO text emission, weights blob, manifest integrity."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import ModelConfig, flatten_params, init_params
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = ModelConfig(vocab=64, hidden=64, layers=2, q_heads=4, kv_heads=2,
+                      head_dim=16, ffn=128, smax=96)
+    params = init_params(cfg, seed=0)
+    leaves, treedef, names = flatten_params(params)
+    return cfg, leaves, treedef, names
+
+
+class TestLowering:
+    def test_prefill_hlo_text(self, small):
+        cfg, leaves, treedef, _ = small
+        text = aot.lower_prefill(treedef, leaves, cfg, s=32)
+        assert "ENTRY" in text
+        assert "s32[32]" in text              # tokens parameter
+        assert f"f32[{cfg.vocab}]" in text    # logits result
+        # weights travel as parameters, never as elided constants
+        assert "constant({...}" not in text
+
+    def test_decode_hlo_text(self, small):
+        cfg, leaves, treedef, _ = small
+        text = aot.lower_decode(treedef, leaves, cfg, b=2)
+        assert "ENTRY" in text
+        assert "s32[2]" in text
+        kv = f"f32[2,{cfg.layers},{cfg.kv_heads},{cfg.smax},{cfg.head_dim}]"
+        assert kv in text
+
+    def test_parameter_count(self, small):
+        cfg, leaves, treedef, _ = small
+        text = aot.lower_prefill(treedef, leaves, cfg, s=32)
+        entry = text[text.index("ENTRY"):]
+        n_params = entry.count(" parameter(")
+        assert n_params == 2 + len(leaves)
+
+
+class TestWeightsBlob:
+    def test_roundtrip(self, small, tmp_path):
+        cfg, leaves, treedef, names = small
+        specs, total, path = aot.write_weights(leaves, names, str(tmp_path))
+        assert os.path.getsize(path) == total
+        blob = np.fromfile(path, dtype="<f4")
+        for spec, leaf in zip(specs, leaves):
+            off = spec["offset_bytes"] // 4
+            got = blob[off:off + spec["num_elements"]].reshape(spec["shape"])
+            np.testing.assert_array_equal(got, np.asarray(leaf))
+
+    def test_specs_are_contiguous(self, small, tmp_path):
+        cfg, leaves, treedef, names = small
+        specs, total, _ = aot.write_weights(leaves, names, str(tmp_path))
+        off = 0
+        for s in specs:
+            assert s["offset_bytes"] == off
+            off += s["num_elements"] * 4
+        assert off == total
+
+    def test_names_recorded(self, small, tmp_path):
+        cfg, leaves, treedef, names = small
+        specs, _, _ = aot.write_weights(leaves, names, str(tmp_path))
+        assert [s["name"] for s in specs] == names
+        assert "['embed']" in names[0]
+
+
+class TestManifest:
+    def test_fingerprint_stable(self):
+        assert aot._inputs_fingerprint() == aot._inputs_fingerprint()
+
+    def test_built_manifest_matches_artifacts(self):
+        """If `make artifacts` has run, the manifest must describe the files."""
+        art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        mpath = os.path.join(art, "manifest.json")
+        if not os.path.exists(mpath):
+            pytest.skip("artifacts not built")
+        m = json.load(open(mpath))
+        assert m["format"] == "hlo-text"
+        for stem, fname in m["files"].items():
+            assert os.path.exists(os.path.join(art, fname)), fname
+        wsize = os.path.getsize(os.path.join(art, m["weights_file"]))
+        assert wsize == sum(w["num_elements"] * 4 for w in m["weights"])
+        cfg = m["model"]
+        assert cfg["hidden"] == cfg["q_heads"] * cfg["head_dim"]
+        assert m["kv_cache_shape_per_request"] == [
+            cfg["layers"], cfg["kv_heads"], cfg["smax"], cfg["head_dim"]
+        ]

@@ -1,0 +1,147 @@
+"""Pallas attention kernels vs pure-jnp oracles.
+
+Prefill: blocked online-softmax flash kernel, causal + valid-length mask.
+Decode: single-query kernel over padded KV caches with per-request positions.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode_attention, flash_prefill_attention
+from compile.kernels.ref import ref_decode_attention, ref_prefill_attention
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+HQ, HKV, DH = 8, 2, 32
+
+
+def _qkv(rng, s):
+    q = jnp.asarray(rng.normal(size=(s, HQ, DH)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(s, HKV, DH)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(s, HKV, DH)), jnp.float32)
+    return q, k, v
+
+
+class TestPrefill:
+    @pytest.mark.parametrize("s", [32, 64, 128])
+    @pytest.mark.parametrize("frac", [0.1, 0.5, 1.0])
+    def test_matches_ref(self, rng, s, frac):
+        q, k, v = _qkv(rng, s)
+        length = jnp.int32(max(1, int(s * frac)))
+        out = flash_prefill_attention(q, k, v, length)
+        want = ref_prefill_attention(q, k, v, length)
+        lv = int(length)
+        np.testing.assert_allclose(out[:lv], want[:lv], **TOL)
+
+    def test_padding_rows_finite(self, rng):
+        """Rows >= length attend the valid prefix: garbage-but-finite, no NaNs."""
+        q, k, v = _qkv(rng, 64)
+        out = flash_prefill_attention(q, k, v, jnp.int32(10))
+        assert np.all(np.isfinite(np.asarray(out)))
+
+    def test_length_one(self, rng):
+        """A single valid token attends only to itself -> output == its V."""
+        q, k, v = _qkv(rng, 64)
+        out = flash_prefill_attention(q, k, v, jnp.int32(1))
+        group = HQ // HKV
+        want = np.repeat(np.asarray(v[0]), group, axis=0)  # [HQ, DH]
+        np.testing.assert_allclose(out[0], want, **TOL)
+
+    def test_causality(self, rng):
+        """Changing token t's K/V must not affect outputs at positions < t."""
+        q, k, v = _qkv(rng, 64)
+        length = jnp.int32(40)
+        base = flash_prefill_attention(q, k, v, length)
+        k2 = k.at[30].set(k[30] + 100.0)
+        v2 = v.at[30].set(v[30] - 100.0)
+        pert = flash_prefill_attention(q, k2, v2, length)
+        np.testing.assert_allclose(base[:30], pert[:30], **TOL)
+        assert not np.allclose(base[30:40], pert[30:40])
+
+    def test_block_size_invariance(self, rng):
+        q, k, v = _qkv(rng, 128)
+        length = jnp.int32(100)
+        a = flash_prefill_attention(q, k, v, length, bq=64, bkv=64)
+        b = flash_prefill_attention(q, k, v, length, bq=32, bkv=128)
+        c = flash_prefill_attention(q, k, v, length, bq=128, bkv=16)
+        np.testing.assert_allclose(a[:100], b[:100], **TOL)
+        np.testing.assert_allclose(a[:100], c[:100], **TOL)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        s_pow=st.integers(5, 7),
+        length=st.integers(1, 128),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property(self, s_pow, length, seed):
+        s = 2 ** s_pow
+        length = min(length, s)
+        rng = np.random.default_rng(seed)
+        q, k, v = _qkv(rng, s)
+        out = flash_prefill_attention(q, k, v, jnp.int32(length))
+        want = ref_prefill_attention(q, k, v, jnp.int32(length))
+        np.testing.assert_allclose(out[:length], want[:length], **TOL)
+
+
+class TestDecode:
+    def _cache(self, rng, b, smax):
+        q = jnp.asarray(rng.normal(size=(b, HQ, DH)), jnp.float32)
+        kc = jnp.asarray(rng.normal(size=(b, HKV, smax, DH)), jnp.float32)
+        vc = jnp.asarray(rng.normal(size=(b, HKV, smax, DH)), jnp.float32)
+        return q, kc, vc
+
+    @pytest.mark.parametrize("b", [1, 2, 4, 8])
+    def test_matches_ref(self, rng, b):
+        smax = 96
+        q, kc, vc = self._cache(rng, b, smax)
+        pos = jnp.asarray(rng.integers(0, smax, size=b), jnp.int32)
+        out = decode_attention(q, kc, vc, pos)
+        want = ref_decode_attention(q, kc, vc, pos)
+        np.testing.assert_allclose(out, want, **TOL)
+
+    def test_position_zero(self, rng):
+        """position 0 -> attends only slot 0 -> output == V[0] per head group."""
+        q, kc, vc = self._cache(rng, 2, 64)
+        pos = jnp.asarray([0, 0], jnp.int32)
+        out = decode_attention(q, kc, vc, pos)
+        group = HQ // HKV
+        want = np.repeat(np.asarray(vc[:, :, 0, :]), group, axis=1)
+        np.testing.assert_allclose(out, want, **TOL)
+
+    def test_mask_excludes_stale_slots(self, rng):
+        """Garbage beyond positions[b] must not leak into the output."""
+        q, kc, vc = self._cache(rng, 2, 64)
+        pos = jnp.asarray([10, 20], jnp.int32)
+        base = decode_attention(q, kc, vc, pos)
+        kc2 = kc.at[:, :, 40:, :].set(1e6)
+        vc2 = vc.at[:, :, 40:, :].set(-1e6)
+        pert = decode_attention(q, kc2, vc2, pos)
+        np.testing.assert_allclose(base, pert, **TOL)
+
+    def test_batch_independence(self, rng):
+        """Each request's output depends only on its own cache row."""
+        q, kc, vc = self._cache(rng, 4, 64)
+        pos = jnp.asarray([5, 10, 15, 20], jnp.int32)
+        base = decode_attention(q, kc, vc, pos)
+        kc2 = kc.at[2].set(
+            jnp.asarray(rng.normal(size=kc.shape[1:]), jnp.float32))
+        pert = decode_attention(q, kc2, vc, pos)
+        keep = np.asarray([0, 1, 3])
+        np.testing.assert_allclose(
+            np.asarray(base)[keep], np.asarray(pert)[keep], **TOL)
+        assert not np.allclose(base[2], pert[2])
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(1, 8),
+        smax=st.sampled_from([32, 64, 160]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property(self, b, smax, seed):
+        rng = np.random.default_rng(seed)
+        q, kc, vc = self._cache(rng, b, smax)
+        pos = jnp.asarray(rng.integers(0, smax, size=b), jnp.int32)
+        out = decode_attention(q, kc, vc, pos)
+        want = ref_decode_attention(q, kc, vc, pos)
+        np.testing.assert_allclose(out, want, **TOL)

@@ -1,0 +1,79 @@
+"""Pallas GEMM kernel vs the pure-jnp oracle (hypothesis shape sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pallas_matmul
+from compile.kernels.ref import ref_matmul
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),          # degenerate
+        (8, 8, 8),          # single sub-tile
+        (64, 128, 128),     # exactly one (BM, BK, BN) tile
+        (128, 256, 256),    # multi-tile, exact division
+        (100, 70, 130),     # ragged -> padding path
+        (1, 256, 512),      # decode-like single row
+        (384, 256, 64),     # prefill-like tall-skinny
+    ],
+)
+def test_matmul_matches_ref(rng, m, k, n):
+    a, b = _rand(rng, m, k), _rand(rng, k, n)
+    np.testing.assert_allclose(pallas_matmul(a, b), ref_matmul(a, b), **TOL)
+
+
+def test_matmul_identity(rng):
+    a = _rand(rng, 64, 64)
+    eye = jnp.eye(64, dtype=jnp.float32)
+    np.testing.assert_allclose(pallas_matmul(a, eye), a, **TOL)
+
+
+def test_matmul_zeros(rng):
+    a = _rand(rng, 32, 48)
+    z = jnp.zeros((48, 16), jnp.float32)
+    assert np.all(np.asarray(pallas_matmul(a, z)) == 0.0)
+
+
+def test_matmul_custom_tiles(rng):
+    """Non-default tile sizes must not change the result."""
+    a, b = _rand(rng, 96, 96), _rand(rng, 96, 96)
+    want = ref_matmul(a, b)
+    for bm, bn, bk in [(16, 16, 16), (32, 96, 48), (96, 32, 96)]:
+        got = pallas_matmul(a, b, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(got, want, **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    np.testing.assert_allclose(pallas_matmul(a, b), ref_matmul(a, b), **TOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**31 - 1))
+def test_matmul_scale_equivariance(scale, seed):
+    """(s*A) @ B == s * (A @ B) through the kernel (linearity)."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(32, 40)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(40, 24)), jnp.float32)
+    got = pallas_matmul(a * scale, b)
+    want = np.asarray(pallas_matmul(a, b)) * scale
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * scale)

@@ -1,0 +1,180 @@
+"""Layer-2 model tests: shapes, prefill/decode consistency, invariances."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelConfig,
+    decode_fn,
+    flatten_params,
+    init_params,
+    make_decode_flat,
+    make_prefill_flat,
+    prefill_fn,
+)
+
+
+@pytest.fixture(scope="module")
+def jitted(cfg, params):
+    pf = jax.jit(lambda t, l: prefill_fn(params, cfg, t, l))
+    df = jax.jit(lambda t, p, k, v: decode_fn(params, cfg, t, p, k, v))
+    return pf, df
+
+
+def _toks(rng, cfg, n):
+    return jnp.asarray(rng.integers(0, cfg.vocab, size=n), jnp.int32)
+
+
+class TestShapes:
+    def test_prefill_shapes(self, cfg, jitted, rng):
+        pf, _ = jitted
+        logits, kc, vc = pf(_toks(rng, cfg, 64), jnp.int32(20))
+        assert logits.shape == (cfg.vocab,)
+        want_kv = (cfg.layers, cfg.kv_heads, cfg.smax, cfg.head_dim)
+        assert kc.shape == want_kv and vc.shape == want_kv
+
+    def test_decode_shapes(self, cfg, jitted, rng):
+        _, df = jitted
+        b = 3
+        kv_shape = (b, cfg.layers, cfg.kv_heads, cfg.smax, cfg.head_dim)
+        kc = jnp.zeros(kv_shape, jnp.float32)
+        vc = jnp.zeros(kv_shape, jnp.float32)
+        logits, kc2, vc2 = df(
+            _toks(rng, cfg, b), jnp.asarray([0, 1, 2], jnp.int32), kc, vc
+        )
+        assert logits.shape == (b, cfg.vocab)
+        assert kc2.shape == kv_shape and vc2.shape == kv_shape
+
+    def test_prefill_cache_rows_beyond_length_zero(self, cfg, jitted, rng):
+        pf, _ = jitted
+        _, kc, vc = pf(_toks(rng, cfg, 64), jnp.int32(13))
+        assert np.all(np.asarray(kc[:, :, 13:]) == 0.0)
+        assert np.all(np.asarray(vc[:, :, 13:]) == 0.0)
+        assert np.any(np.asarray(kc[:, :, :13]) != 0.0)
+
+
+class TestConsistency:
+    @pytest.mark.parametrize("length", [1, 7, 33, 63])
+    def test_decode_matches_longer_prefill(self, cfg, jitted, rng, length):
+        """prefill(L)+decode(token L) logits == prefill(L+1) logits."""
+        pf, df = jitted
+        toks = _toks(rng, cfg, 64)
+        want, _, _ = pf(toks, jnp.int32(length + 1))
+        _, kc, vc = pf(toks, jnp.int32(length))
+        got, _, _ = df(
+            toks[length:length + 1],
+            jnp.asarray([length], jnp.int32),
+            kc[None],
+            vc[None],
+        )
+        np.testing.assert_allclose(got[0], want, rtol=1e-3, atol=1e-3)
+
+    def test_two_decode_steps_match_prefill(self, cfg, jitted, rng):
+        """prefill(L) + two decode steps == prefill(L+2)."""
+        pf, df = jitted
+        toks = _toks(rng, cfg, 64)
+        length = 10
+        want, _, _ = pf(toks, jnp.int32(length + 2))
+        _, kc, vc = pf(toks, jnp.int32(length))
+        kb, vb = kc[None], vc[None]
+        _, kb, vb = df(toks[length:length + 1],
+                       jnp.asarray([length], jnp.int32), kb, vb)
+        got, _, _ = df(toks[length + 1:length + 2],
+                       jnp.asarray([length + 1], jnp.int32), kb, vb)
+        np.testing.assert_allclose(got[0], want, rtol=1e-3, atol=1e-3)
+
+    def test_batched_decode_matches_single(self, cfg, jitted, rng):
+        """A request's decode output is identical alone or inside a batch."""
+        pf, df = jitted
+        toks_a, toks_b = _toks(rng, cfg, 64), _toks(rng, cfg, 64)
+        _, ka, va = pf(toks_a, jnp.int32(11))
+        _, kb, vb = pf(toks_b, jnp.int32(29))
+        single, _, _ = df(toks_a[11:12], jnp.asarray([11], jnp.int32),
+                          ka[None], va[None])
+        batched, _, _ = df(
+            jnp.concatenate([toks_a[11:12], toks_b[29:30]]),
+            jnp.asarray([11, 29], jnp.int32),
+            jnp.stack([ka, kb]),
+            jnp.stack([va, vb]),
+        )
+        np.testing.assert_allclose(batched[0], single[0], rtol=1e-4, atol=1e-4)
+
+
+class TestInvariances:
+    def test_padding_tokens_do_not_matter(self, cfg, jitted, rng):
+        pf, _ = jitted
+        toks = _toks(rng, cfg, 64)
+        length = jnp.int32(17)
+        base, kc1, _ = pf(toks, length)
+        toks2 = toks.at[17:].set((toks[17:] + 101) % cfg.vocab)
+        pert, kc2, _ = pf(toks2, length)
+        np.testing.assert_allclose(base, pert, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(kc1, kc2, rtol=1e-5, atol=1e-5)
+
+    def test_deterministic(self, cfg, jitted, rng):
+        pf, _ = jitted
+        toks = _toks(rng, cfg, 64)
+        a, _, _ = pf(toks, jnp.int32(30))
+        b, _, _ = pf(toks, jnp.int32(30))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_init_params_seed_reproducible(self, cfg):
+        p1 = init_params(cfg, seed=7)
+        p2 = init_params(cfg, seed=7)
+        l1, _, _ = flatten_params(p1)
+        l2, _, _ = flatten_params(p2)
+        for a, b in zip(l1, l2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_different_seed_different_weights(self, cfg):
+        l1, _, _ = flatten_params(init_params(cfg, seed=0))
+        l2, _, _ = flatten_params(init_params(cfg, seed=1))
+        assert any(not np.allclose(a, b) for a, b in zip(l1, l2))
+
+
+class TestFlatEntryPoints:
+    def test_flat_prefill_matches_closure(self, cfg, params, rng):
+        leaves, treedef, names = flatten_params(params)
+        assert len(names) == len(leaves) == 2 + cfg.layers * 9
+        flat = jax.jit(make_prefill_flat(treedef, cfg))
+        toks = _toks(rng, cfg, 64)
+        want, wk, wv = jax.jit(
+            lambda t, l: prefill_fn(params, cfg, t, l))(toks, jnp.int32(21))
+        got, gk, gv = flat(toks, jnp.int32(21), *leaves)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        np.testing.assert_allclose(gk, wk, rtol=1e-6)
+
+    def test_flat_decode_matches_closure(self, cfg, params, rng):
+        leaves, treedef, _ = flatten_params(params)
+        flat = jax.jit(make_decode_flat(treedef, cfg))
+        b = 2
+        kv_shape = (b, cfg.layers, cfg.kv_heads, cfg.smax, cfg.head_dim)
+        kc = jnp.asarray(rng.normal(size=kv_shape), jnp.float32)
+        vc = jnp.asarray(rng.normal(size=kv_shape), jnp.float32)
+        toks = _toks(rng, cfg, b)
+        pos = jnp.asarray([4, 9], jnp.int32)
+        want, _, _ = jax.jit(
+            lambda t, p, k, v: decode_fn(params, cfg, t, p, k, v)
+        )(toks, pos, kc, vc)
+        got, _, _ = flat(toks, pos, kc, vc, *leaves)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+class TestSmallConfig:
+    """The model must be correct for other dimension choices too."""
+
+    def test_tiny_config_consistency(self):
+        cfg = ModelConfig(vocab=64, hidden=64, layers=2, q_heads=4,
+                          kv_heads=2, head_dim=16, ffn=128, smax=96)
+        params = init_params(cfg, seed=3)
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, size=32), jnp.int32)
+        pf = jax.jit(lambda t, l: prefill_fn(params, cfg, t, l))
+        df = jax.jit(lambda t, p, k, v: decode_fn(params, cfg, t, p, k, v))
+        want, _, _ = pf(toks, jnp.int32(6))
+        _, kc, vc = pf(toks, jnp.int32(5))
+        got, _, _ = df(toks[5:6], jnp.asarray([5], jnp.int32),
+                       kc[None], vc[None])
+        np.testing.assert_allclose(got[0], want, rtol=1e-3, atol=1e-3)

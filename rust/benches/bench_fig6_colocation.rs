@@ -1,0 +1,104 @@
+//! Figure 6 reproduction — the paper's headline experiment.
+//!
+//! For each (dataset, model) combination:
+//!   1. calibrate the online traffic scale so the pure-online system just
+//!      meets the SLO at the traffic peak (§5.2);
+//!   2. sweep offline QPS from ~zero upward for the three systems
+//!      (base P/D, online priority, OOCO);
+//!   3. report the online SLO violation rate at each level, the max
+//!      effective offline throughput per system, and OOCO's improvement
+//!      over the best baseline (paper: 1.17x–3x).
+//!
+//! Flags: --quick (shorter sims, 7B only), --duration, --levels, --seed.
+
+use ooco::config::{ModelSpec, ServingConfig};
+use ooco::coordinator::Policy;
+use ooco::sweep::{
+    find_online_capacity, max_effective_offline, offline_sweep, qps_grid,
+    SweepConfig,
+};
+use ooco::trace::datasets::DatasetProfile;
+use ooco::util::cli::Args;
+
+fn main() {
+    let args = Args::parse_env();
+    let quick = args.has("quick");
+    let duration = args.f64("duration", if quick { 600.0 } else { 1800.0 });
+    let levels = args.usize("levels", if quick { 5 } else { 7 });
+    let seed = args.u64("seed", 42);
+
+    let models: Vec<ModelSpec> = if quick {
+        vec![ModelSpec::qwen2_5_7b()]
+    } else {
+        vec![ModelSpec::qwen2_5_7b(), ModelSpec::qwen2_5_72b()]
+    };
+
+    println!("=== Figure 6: online-offline co-location service experiment ===");
+    println!("(violation threshold 3%; offline = OOC offline pool everywhere)\n");
+
+    for model in &models {
+        for (ds_name, online_ds, offline_ds) in DatasetProfile::experiment_pairs() {
+            let mut serving = ServingConfig::preset_7b();
+            serving.model = model.clone();
+            let sweep = SweepConfig {
+                duration_s: duration,
+                seed,
+                ..Default::default()
+            };
+
+            // Step 1: pure-online capacity.
+            let cap = find_online_capacity(&serving, &online_ds, &sweep);
+            println!(
+                "--- {} x {} | online capacity {:.2} req/s ---",
+                model.name, ds_name, cap
+            );
+
+            // Step 2: offline sweep per policy.
+            let grid = {
+                let mut g = vec![0.25f64];
+                g.extend(qps_grid(0.5, 40.0, levels));
+                g
+            };
+            let mut max_eff = Vec::new();
+            for policy in Policy::all() {
+                let pts = offline_sweep(
+                    &serving,
+                    policy,
+                    &online_ds,
+                    cap,
+                    &offline_ds,
+                    &grid,
+                    &sweep,
+                );
+                println!("  policy {:<16}", policy.name());
+                println!(
+                    "    {:>8} {:>8} {:>12} {:>10} {:>10}",
+                    "qps", "viol%", "off tok/s", "ttft p99", "tpot p99"
+                );
+                for p in &pts {
+                    println!(
+                        "    {:>8.2} {:>7.2}% {:>12.1} {:>9.2}s {:>8.1}ms",
+                        p.offline_qps,
+                        p.violation_rate * 100.0,
+                        p.offline_token_throughput,
+                        p.ttft_p99,
+                        p.tpot_p99 * 1e3,
+                    );
+                }
+                let eff = max_effective_offline(
+                    &pts,
+                    serving.slo.violation_threshold,
+                );
+                println!("    => max effective offline throughput {eff:.1} tok/s");
+                max_eff.push(eff);
+            }
+
+            // Step 3: improvement factor.
+            let best_baseline = max_eff[0].max(max_eff[1]).max(1e-9);
+            println!(
+                "  OOCO improvement over best baseline: {:.2}x  (paper: 1.17x-3x)\n",
+                max_eff[2] / best_baseline
+            );
+        }
+    }
+}

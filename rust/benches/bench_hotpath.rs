@@ -1,0 +1,104 @@
+//! L3 hot-path microbenchmarks (§Perf): the per-iteration scheduler cost.
+//!
+//! Every strict-instance decode iteration runs Algorithm 2; at a 10-100 ms
+//! TPOT budget the scheduler must cost microseconds, not milliseconds.
+//! Measures: O(1) latency predictor, full mix-decode selection across pool
+//! sizes, KV allocator churn, and end-to-end simulated steps/second.
+
+use std::time::Instant;
+
+use ooco::config::{HardwareProfile, ModelSpec, ServingConfig};
+use ooco::coordinator::{select_decode_batch, Candidate, Policy};
+use ooco::kvcache::KvManager;
+use ooco::perfmodel::{BatchStats, PerfModel};
+use ooco::sim::{simulate, SimConfig};
+use ooco::trace::datasets::DatasetProfile;
+use ooco::trace::generator::{offline_trace, online_trace};
+use ooco::util::rng::Pcg;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<52} {:>12.3} us/op", per * 1e6);
+    per
+}
+
+fn main() {
+    println!("=== L3 hot-path microbenchmarks ===");
+    let pm = PerfModel::new(ModelSpec::qwen2_5_7b(), HardwareProfile::ascend_910c());
+
+    // 1. O(1) decode-latency predictor.
+    let mut acc = 0.0f64;
+    bench("decode_latency predictor (O(1))", 2_000_000, || {
+        acc += pm.decode_latency(BatchStats::new(128, 128_000));
+    });
+    std::hint::black_box(acc);
+
+    // 2. Mix-decode selection across offline pool sizes.
+    for &m in &[16usize, 64, 256, 1024] {
+        let online: Vec<Candidate> = (0..16).map(|i| (i as u64, 1000)).collect();
+        let offline: Vec<Candidate> = (0..m)
+            .map(|i| (100 + i as u64, 200 + (i * 37) % 2000))
+            .collect();
+        let mut rng = Pcg::seeded(3);
+        bench(
+            &format!("mix_decode selection (online=16, offline={m})"),
+            20_000,
+            || {
+                let sel =
+                    select_decode_batch(&pm, &online, &offline, 0.08, 8, &mut rng);
+                std::hint::black_box(sel.stats);
+            },
+        );
+    }
+
+    // 3. KV allocator churn (admit/grow/release cycle).
+    let mut kv = KvManager::new(1_000_000, 16);
+    let mut id = 0u64;
+    let mut live: Vec<u64> = Vec::new();
+    let mut rng = Pcg::seeded(5);
+    bench("kv allocator admit+grow+release mix", 200_000, || {
+        match rng.below(4) {
+            0 => {
+                if kv.admit(id, rng.below(2000) + 1).is_ok() {
+                    live.push(id);
+                }
+                id += 1;
+            }
+            3 if !live.is_empty() => {
+                let i = rng.below(live.len());
+                let v = live.swap_remove(i);
+                let _ = kv.release(v);
+            }
+            _ if !live.is_empty() => {
+                let v = live[rng.below(live.len())];
+                let _ = kv.grow(v, 1);
+            }
+            _ => {}
+        }
+    });
+
+    // 4. End-to-end simulator throughput (events/s) — the macro number.
+    println!("\n=== simulator macro throughput ===");
+    let online = online_trace(DatasetProfile::azure_conv(), 0.5, 900.0, 42);
+    let offline = offline_trace(DatasetProfile::ooc_offline(), 10.0, 900.0, 43);
+    let trace = online.merge(offline);
+    let cfg = SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+    let t0 = Instant::now();
+    let res = simulate(&trace, &cfg);
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "sim 900s trace ({} reqs): {:.2}s wall, {:.0} strict steps/s-wall, {:.0}x realtime",
+        trace.len(),
+        wall,
+        res.strict_steps as f64 / wall,
+        900.0 / wall
+    );
+}

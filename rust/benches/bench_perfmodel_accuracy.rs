@@ -1,0 +1,144 @@
+//! Performance-model accuracy (§3.3.2): the paper validates its roofline
+//! model at ~5% mean absolute error against real execution on the 910c.
+//! We replicate the methodology on our testbed: measure real PJRT
+//! latencies of the tiny model across prefill/decode shapes, fit the
+//! achievable-rate parameters from half the samples (the paper's "small
+//! amount of profiling data"), and report the error on the held-out half.
+//!
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use std::time::Instant;
+
+use ooco::config::HardwareProfile;
+use ooco::perfmodel::{
+    calibrate, mean_abs_rel_error, BatchStats, PerfModel, Sample, SampleKind,
+};
+use ooco::runtime::{DecodeEntry, KvBuf, Runtime};
+use ooco::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_perfmodel_accuracy: artifacts not built, skipping");
+        return Ok(());
+    }
+    println!("=== Perf-model accuracy (paper §3.3.2: ~5% on the 910c) ===");
+    println!("loading runtime...");
+    let rt = Runtime::load(dir)?;
+    let mut rng = Pcg::seeded(11);
+
+    // Measure a grid of real executions (median of 3 runs each).
+    let mut samples: Vec<Sample> = Vec::new();
+    for &s in &rt.manifest.prefill_buckets.clone() {
+        for frac in [0.5, 0.95] {
+            let len = ((s as f64 * frac) as usize).max(1);
+            let toks: Vec<i32> = (0..len)
+                .map(|_| rng.below(rt.manifest.vocab) as i32)
+                .collect();
+            let lat = median3(|| {
+                let t0 = Instant::now();
+                rt.prefill(&toks).unwrap();
+                t0.elapsed().as_secs_f64()
+            });
+            samples.push(Sample {
+                kind: SampleKind::Prefill { prompt_len: len },
+                latency_s: lat,
+            });
+        }
+    }
+    let kv_elems = rt.kv_elems();
+    for &b in &rt.manifest.decode_buckets.clone() {
+        for kv_len in [32usize, 256] {
+            let mut kvs: Vec<KvBuf> =
+                (0..b).map(|_| KvBuf::zeros(kv_elems)).collect();
+            let lat = median3(|| {
+                let mut entries: Vec<DecodeEntry> = kvs
+                    .iter_mut()
+                    .map(|kv| DecodeEntry {
+                        token: 1,
+                        position: kv_len as i32,
+                        kv,
+                    })
+                    .collect();
+                let t0 = Instant::now();
+                rt.decode(&mut entries).unwrap();
+                t0.elapsed().as_secs_f64()
+            });
+            samples.push(Sample {
+                kind: SampleKind::Decode {
+                    batch: BatchStats::new(b, b * kv_len),
+                },
+                latency_s: lat,
+            });
+        }
+    }
+
+    // Split into calibration / held-out halves.
+    let (cal, held): (Vec<_>, Vec<_>) = samples
+        .iter()
+        .enumerate()
+        .partition(|(i, _)| i % 2 == 0);
+    let cal: Vec<Sample> = cal.into_iter().map(|(_, s)| *s).collect();
+    let held: Vec<Sample> = held.into_iter().map(|(_, s)| *s).collect();
+
+    let model = {
+        let m = &rt.manifest;
+        ooco::config::ModelSpec {
+            name: "tiny".into(),
+            layers: m.layers,
+            hidden: m.hidden,
+            q_heads: m.q_heads,
+            kv_heads: m.kv_heads,
+            head_dim: m.head_dim,
+            ffn: m.ffn,
+            vocab: m.vocab,
+            bytes_per_value: 4.0,
+            tensor_parallel: 1,
+        }
+    };
+    let initial = HardwareProfile::cpu_tiny();
+    let before = mean_abs_rel_error(&model, &initial, &held);
+    let fitted = calibrate(&model, &initial, &cal, 14);
+    let after_cal = mean_abs_rel_error(&model, &fitted, &cal);
+    let after_held = mean_abs_rel_error(&model, &fitted, &held);
+
+    println!("\nsamples: {} measured ({} cal / {} held out)", samples.len(), cal.len(), held.len());
+    println!("mean abs rel error, uncalibrated profile: {:.1}%", before * 100.0);
+    println!("mean abs rel error, calibration set:      {:.1}%", after_cal * 100.0);
+    println!("mean abs rel error, held-out set:         {:.1}%", after_held * 100.0);
+    println!("(paper reports ~5% on Qwen2.5 7B/72B @ 910c; CPU timing jitter");
+    println!(" on interpret-mode kernels makes our bound looser)");
+
+    let pm = PerfModel::new(model, fitted.clone());
+    println!("\nfitted profile: F_g {:.2} GFLOP/s, M_g {:.2} GB/s, O_p {:.2} ms, O_d {:.2} ms",
+        fitted.flops_gemm / 1e9, fitted.bw_gemm / 1e9,
+        fitted.overhead_prefill * 1e3, fitted.overhead_decode * 1e3);
+    println!("\n-- per-sample detail (held out) --");
+    println!("{:<32} {:>12} {:>12} {:>8}", "shape", "measured", "predicted", "err%");
+    for s in &held {
+        let pred = match s.kind {
+            SampleKind::Prefill { prompt_len } => pm.prefill_latency(prompt_len),
+            SampleKind::Decode { batch } => pm.decode_latency(batch),
+        };
+        let name = match s.kind {
+            SampleKind::Prefill { prompt_len } => format!("prefill s={prompt_len}"),
+            SampleKind::Decode { batch } => {
+                format!("decode B={} kv={}", batch.size, batch.total_kv_tokens)
+            }
+        };
+        println!(
+            "{:<32} {:>10.2}ms {:>10.2}ms {:>7.1}%",
+            name,
+            s.latency_s * 1e3,
+            pred * 1e3,
+            ((pred - s.latency_s) / s.latency_s * 100.0).abs()
+        );
+    }
+    Ok(())
+}
+
+fn median3<F: FnMut() -> f64>(mut f: F) -> f64 {
+    let mut v = [f(), f(), f()];
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[1]
+}

@@ -1,0 +1,584 @@
+//! Configuration: model dimensions, hardware profiles, SLOs, cluster shape,
+//! scheduler parameters.
+//!
+//! Everything is constructible in code (named presets used by the benches)
+//! and loadable from JSON (`configs/*.json`) so deployments can override any
+//! field without recompiling — the "real config system" role a framework
+//! like vLLM/MaxText plays.
+
+use crate::util::json::Json;
+
+/// Decoder-only transformer dimensions — enough to drive the operator-level
+/// performance model of §3.3. Presets carry the true Qwen2.5 numbers used in
+/// the paper's evaluation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub layers: usize,
+    pub hidden: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    /// Bytes per value (Table 2's `d`, e.g. 2 for bf16).
+    pub bytes_per_value: f64,
+    /// Tensor-parallel degree of one serving instance (divides per-chip work).
+    pub tensor_parallel: usize,
+}
+
+impl ModelSpec {
+    /// Qwen2.5 7B (bf16) — the paper's primary model, 1 chip per instance.
+    pub fn qwen2_5_7b() -> Self {
+        ModelSpec {
+            name: "qwen2.5-7b".into(),
+            layers: 28,
+            hidden: 3584,
+            q_heads: 28,
+            kv_heads: 4,
+            head_dim: 128,
+            ffn: 18944,
+            vocab: 152064,
+            bytes_per_value: 2.0,
+            tensor_parallel: 1,
+        }
+    }
+
+    /// Qwen2.5 72B (bf16) — deployed with TP=4 in the paper's evaluation.
+    pub fn qwen2_5_72b() -> Self {
+        ModelSpec {
+            name: "qwen2.5-72b".into(),
+            layers: 80,
+            hidden: 8192,
+            q_heads: 64,
+            kv_heads: 8,
+            head_dim: 128,
+            ffn: 29568,
+            vocab: 152064,
+            bytes_per_value: 2.0,
+            tensor_parallel: 4,
+        }
+    }
+
+    /// The tiny synthetic-weight model the AOT artifacts implement (f32).
+    pub fn tiny() -> Self {
+        ModelSpec {
+            name: "tiny".into(),
+            layers: 4,
+            hidden: 256,
+            q_heads: 8,
+            kv_heads: 2,
+            head_dim: 32,
+            ffn: 512,
+            vocab: 512,
+            bytes_per_value: 4.0,
+            tensor_parallel: 1,
+        }
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "qwen2.5-7b" | "7b" => Ok(Self::qwen2_5_7b()),
+            "qwen2.5-72b" | "72b" => Ok(Self::qwen2_5_72b()),
+            "tiny" => Ok(Self::tiny()),
+            other => anyhow::bail!("unknown model preset `{other}`"),
+        }
+    }
+
+    /// KV-cache bytes for one token (all layers, K and V).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.layers as f64
+            * self.kv_heads as f64
+            * self.head_dim as f64
+            * self.bytes_per_value
+    }
+
+    /// Total parameter count (embedding + per-layer weights + untied head).
+    pub fn param_count(&self) -> f64 {
+        let h = self.hidden as f64;
+        let kv_dim = (self.kv_heads * self.head_dim) as f64;
+        let per_layer = h * h // wq
+            + 2.0 * h * kv_dim // wk, wv
+            + h * h // wo
+            + 3.0 * h * self.ffn as f64 // gate, up, down
+            + 2.0 * h; // norms
+        self.vocab as f64 * h * 2.0 + per_layer * self.layers as f64 + h
+    }
+
+    pub fn weights_bytes(&self) -> f64 {
+        self.param_count() * self.bytes_per_value
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        Ok(ModelSpec {
+            name: v.req_str("name")?.to_string(),
+            layers: v.req_usize("layers")?,
+            hidden: v.req_usize("hidden")?,
+            q_heads: v.req_usize("q_heads")?,
+            kv_heads: v.req_usize("kv_heads")?,
+            head_dim: v.req_usize("head_dim")?,
+            ffn: v.req_usize("ffn")?,
+            vocab: v.req_usize("vocab")?,
+            bytes_per_value: v.req_f64("bytes_per_value")?,
+            tensor_parallel: v.get("tensor_parallel").as_usize().unwrap_or(1),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("layers", Json::Num(self.layers as f64)),
+            ("hidden", Json::Num(self.hidden as f64)),
+            ("q_heads", Json::Num(self.q_heads as f64)),
+            ("kv_heads", Json::Num(self.kv_heads as f64)),
+            ("head_dim", Json::Num(self.head_dim as f64)),
+            ("ffn", Json::Num(self.ffn as f64)),
+            ("vocab", Json::Num(self.vocab as f64)),
+            ("bytes_per_value", Json::Num(self.bytes_per_value)),
+            ("tensor_parallel", Json::Num(self.tensor_parallel as f64)),
+        ])
+    }
+}
+
+/// Achievable-rate hardware profile: the Table 4 parameters plus memory
+/// capacity. Values are *achievable* (measured/profiled), not theoretical
+/// peaks — exactly how the paper parameterizes its roofline model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareProfile {
+    pub name: String,
+    /// F_g — achievable FLOP/s for GEMM operators.
+    pub flops_gemm: f64,
+    /// F_ap — achievable FLOP/s for prefill attention.
+    pub flops_attn_prefill: f64,
+    /// F_ad — achievable FLOP/s for decode attention.
+    pub flops_attn_decode: f64,
+    /// M_g — achievable bytes/s for GEMM operators.
+    pub bw_gemm: f64,
+    /// M_a — achievable bytes/s for attention operators.
+    pub bw_attn: f64,
+    /// O_p — static per-iteration overhead for prefill (s).
+    pub overhead_prefill: f64,
+    /// O_d — static per-iteration overhead for decode (s).
+    pub overhead_decode: f64,
+    /// B_c — effective interconnect bandwidth for KV transfer (bytes/s).
+    pub bw_comm: f64,
+    /// Device memory per chip (bytes) available for weights + KV cache.
+    pub mem_capacity: f64,
+}
+
+impl HardwareProfile {
+    /// Ascend 910c single chip. The paper states one 910c chip is comparable
+    /// to an NVIDIA A100 SXM (312 TFLOP/s bf16, ~2.0 TB/s HBM); achievable
+    /// fractions follow the PRoof-style profiling the paper cites.
+    pub fn ascend_910c() -> Self {
+        let peak_flops = 312e12;
+        let peak_bw = 2.0e12;
+        HardwareProfile {
+            name: "ascend-910c".into(),
+            flops_gemm: 0.62 * peak_flops,
+            flops_attn_prefill: 0.45 * peak_flops,
+            flops_attn_decode: 0.25 * peak_flops,
+            bw_gemm: 0.65 * peak_bw,
+            bw_attn: 0.80 * peak_bw,
+            overhead_prefill: 5.0e-3,
+            overhead_decode: 2.0e-3,
+            bw_comm: 25e9, // RDMA effective
+            // "comparable to the NVIDIA A100 SXM" (§5.1.1) — the 80 GB part.
+            mem_capacity: 80e9,
+        }
+    }
+
+    /// NVIDIA H800-like profile. Table 6 observes ~3x the single-910c-chip
+    /// throughput, "consistent with their theoretical peak FLOPs/s ratio".
+    pub fn h800() -> Self {
+        let peak_flops = 3.0 * 312e12;
+        let peak_bw = 3.35e12;
+        HardwareProfile {
+            name: "h800".into(),
+            flops_gemm: 0.62 * peak_flops,
+            flops_attn_prefill: 0.45 * peak_flops,
+            flops_attn_decode: 0.25 * peak_flops,
+            bw_gemm: 0.65 * peak_bw,
+            bw_attn: 0.80 * peak_bw,
+            overhead_prefill: 4.0e-3,
+            overhead_decode: 1.5e-3,
+            bw_comm: 50e9,
+            mem_capacity: 80e9,
+        }
+    }
+
+    /// A deliberately less-optimized 910c profile representing vLLM on the
+    /// same chip (Table 6 shows xLLM ~1.2x vLLM on the 910c).
+    pub fn ascend_910c_vllm() -> Self {
+        let mut p = Self::ascend_910c();
+        p.name = "ascend-910c-vllm".into();
+        p.flops_gemm *= 0.87;
+        p.flops_attn_prefill *= 0.80;
+        p.flops_attn_decode *= 0.80;
+        p.bw_gemm *= 0.85;
+        p.bw_attn *= 0.82;
+        p.overhead_prefill = 6.5e-3;
+        p.overhead_decode = 2.8e-3;
+        p
+    }
+
+    /// Host-CPU profile for the tiny model; calibrated at runtime against
+    /// measured PJRT latencies (`perfmodel::calibrate`).
+    pub fn cpu_tiny() -> Self {
+        HardwareProfile {
+            name: "cpu-tiny".into(),
+            flops_gemm: 5e10,
+            flops_attn_prefill: 2e10,
+            flops_attn_decode: 1e10,
+            bw_gemm: 2e10,
+            bw_attn: 2e10,
+            overhead_prefill: 2e-3,
+            overhead_decode: 1e-3,
+            bw_comm: 5e9,
+            mem_capacity: 2e9,
+        }
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "ascend-910c" | "910c" => Ok(Self::ascend_910c()),
+            "h800" => Ok(Self::h800()),
+            "ascend-910c-vllm" | "910c-vllm" => Ok(Self::ascend_910c_vllm()),
+            "cpu-tiny" => Ok(Self::cpu_tiny()),
+            other => anyhow::bail!("unknown hardware preset `{other}`"),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        Ok(HardwareProfile {
+            name: v.req_str("name")?.to_string(),
+            flops_gemm: v.req_f64("flops_gemm")?,
+            flops_attn_prefill: v.req_f64("flops_attn_prefill")?,
+            flops_attn_decode: v.req_f64("flops_attn_decode")?,
+            bw_gemm: v.req_f64("bw_gemm")?,
+            bw_attn: v.req_f64("bw_attn")?,
+            overhead_prefill: v.req_f64("overhead_prefill")?,
+            overhead_decode: v.req_f64("overhead_decode")?,
+            bw_comm: v.req_f64("bw_comm")?,
+            mem_capacity: v.req_f64("mem_capacity")?,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("flops_gemm", Json::Num(self.flops_gemm)),
+            ("flops_attn_prefill", Json::Num(self.flops_attn_prefill)),
+            ("flops_attn_decode", Json::Num(self.flops_attn_decode)),
+            ("bw_gemm", Json::Num(self.bw_gemm)),
+            ("bw_attn", Json::Num(self.bw_attn)),
+            ("overhead_prefill", Json::Num(self.overhead_prefill)),
+            ("overhead_decode", Json::Num(self.overhead_decode)),
+            ("bw_comm", Json::Num(self.bw_comm)),
+            ("mem_capacity", Json::Num(self.mem_capacity)),
+        ])
+    }
+}
+
+/// Online-request Service Level Objectives.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Time-to-first-token bound (s).
+    pub ttft: f64,
+    /// Time-per-output-token bound (s) — the `S` in Algorithms 1 and 2.
+    pub tpot: f64,
+    /// Violation-rate threshold above which the system no longer provides
+    /// valid online service (the paper uses 3%).
+    pub violation_threshold: f64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec {
+            ttft: 5.0,
+            tpot: 0.10,
+            violation_threshold: 0.03,
+        }
+    }
+}
+
+impl SloSpec {
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        Ok(SloSpec {
+            ttft: v.req_f64("ttft")?,
+            tpot: v.req_f64("tpot")?,
+            violation_threshold: v
+                .get("violation_threshold")
+                .as_f64()
+                .unwrap_or(0.03),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ttft", Json::Num(self.ttft)),
+            ("tpot", Json::Num(self.tpot)),
+            ("violation_threshold", Json::Num(self.violation_threshold)),
+        ])
+    }
+}
+
+/// Scheduler tunables (§3.4). Defaults follow the paper's descriptions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerParams {
+    /// K — random-probe iterations in mix decoding selection (Alg. 2).
+    pub mix_probe_iters: usize,
+    /// Safety margin under the TPOT SLO kept when admitting offline work
+    /// onto latency-strict nodes (fraction of S).
+    pub slo_margin: f64,
+    /// Token budget for one prefill iteration on a relaxed node.
+    pub prefill_token_budget: usize,
+    /// Max offline decode requests migrated per pull.
+    pub migration_batch: usize,
+    /// Offline gating: required benefit/cost ratio before prefilling new
+    /// offline work (1.0 = paper's break-even rule).
+    pub gating_benefit_ratio: f64,
+    /// Estimated probability a resident offline request is evicted by a
+    /// future online burst (input to the gating cost model).
+    pub eviction_prob: f64,
+    /// `online priority` baseline: fixed cap on decode batch size.
+    pub baseline_decode_cap: usize,
+}
+
+impl Default for SchedulerParams {
+    fn default() -> Self {
+        SchedulerParams {
+            mix_probe_iters: 8,
+            slo_margin: 0.10,
+            prefill_token_budget: 8192,
+            migration_batch: 8,
+            gating_benefit_ratio: 1.0,
+            eviction_prob: 0.15,
+            baseline_decode_cap: 96,
+        }
+    }
+}
+
+impl SchedulerParams {
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let d = Self::default();
+        Ok(SchedulerParams {
+            mix_probe_iters: v
+                .get("mix_probe_iters")
+                .as_usize()
+                .unwrap_or(d.mix_probe_iters),
+            slo_margin: v.get("slo_margin").as_f64().unwrap_or(d.slo_margin),
+            prefill_token_budget: v
+                .get("prefill_token_budget")
+                .as_usize()
+                .unwrap_or(d.prefill_token_budget),
+            migration_batch: v
+                .get("migration_batch")
+                .as_usize()
+                .unwrap_or(d.migration_batch),
+            gating_benefit_ratio: v
+                .get("gating_benefit_ratio")
+                .as_f64()
+                .unwrap_or(d.gating_benefit_ratio),
+            eviction_prob: v
+                .get("eviction_prob")
+                .as_f64()
+                .unwrap_or(d.eviction_prob),
+            baseline_decode_cap: v
+                .get("baseline_decode_cap")
+                .as_usize()
+                .unwrap_or(d.baseline_decode_cap),
+        })
+    }
+}
+
+/// Cluster topology: counts of the two latency-constraint pools.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterSpec {
+    /// Latency-relaxed instances (prefill + offline decode).
+    pub relaxed_instances: usize,
+    /// Latency-strict instances (online decode + mixed-in offline decode).
+    pub strict_instances: usize,
+}
+
+impl Default for ClusterSpec {
+    /// The paper evaluates with one of each.
+    fn default() -> Self {
+        ClusterSpec {
+            relaxed_instances: 1,
+            strict_instances: 1,
+        }
+    }
+}
+
+/// Top-level serving configuration bundle.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub model: ModelSpec,
+    pub hardware: HardwareProfile,
+    pub slo: SloSpec,
+    pub sched: SchedulerParams,
+    pub cluster: ClusterSpec,
+}
+
+impl ServingConfig {
+    pub fn preset_7b() -> Self {
+        ServingConfig {
+            model: ModelSpec::qwen2_5_7b(),
+            hardware: HardwareProfile::ascend_910c(),
+            slo: SloSpec::default(),
+            sched: SchedulerParams::default(),
+            cluster: ClusterSpec::default(),
+        }
+    }
+
+    pub fn preset_72b() -> Self {
+        ServingConfig {
+            model: ModelSpec::qwen2_5_72b(),
+            hardware: HardwareProfile::ascend_910c(),
+            slo: SloSpec::default(),
+            sched: SchedulerParams::default(),
+            cluster: ClusterSpec::default(),
+        }
+    }
+
+    /// Load from a JSON file; missing sections fall back to the 7B preset.
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        let v = Json::parse_file(path)?;
+        let base = Self::preset_7b();
+        Ok(ServingConfig {
+            model: match v.get("model") {
+                Json::Null => base.model,
+                Json::Str(s) => ModelSpec::by_name(s)?,
+                m => ModelSpec::from_json(m)?,
+            },
+            hardware: match v.get("hardware") {
+                Json::Null => base.hardware,
+                Json::Str(s) => HardwareProfile::by_name(s)?,
+                h => HardwareProfile::from_json(h)?,
+            },
+            slo: match v.get("slo") {
+                Json::Null => base.slo,
+                s => SloSpec::from_json(s)?,
+            },
+            sched: match v.get("scheduler") {
+                Json::Null => base.sched,
+                s => SchedulerParams::from_json(s)?,
+            },
+            cluster: ClusterSpec {
+                relaxed_instances: v
+                    .get("cluster")
+                    .get("relaxed_instances")
+                    .as_usize()
+                    .unwrap_or(1),
+                strict_instances: v
+                    .get("cluster")
+                    .get("strict_instances")
+                    .as_usize()
+                    .unwrap_or(1),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_sane() {
+        let m7 = ModelSpec::qwen2_5_7b();
+        assert_eq!(m7.hidden, m7.q_heads * m7.head_dim);
+        // Qwen2.5-7B has ~7.6B params
+        let p = m7.param_count();
+        assert!((6.5e9..8.5e9).contains(&p), "7b params {p}");
+
+        let m72 = ModelSpec::qwen2_5_72b();
+        assert_eq!(m72.hidden, m72.q_heads * m72.head_dim);
+        let p = m72.param_count();
+        assert!((6.5e10..8.5e10).contains(&p), "72b params {p}");
+    }
+
+    #[test]
+    fn kv_bytes_per_token() {
+        let m = ModelSpec::qwen2_5_7b();
+        // 2 * 28 layers * 4 kv heads * 128 dim * 2 bytes = 57344
+        assert_eq!(m.kv_bytes_per_token(), 57344.0);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(ModelSpec::by_name("7b").unwrap(), ModelSpec::qwen2_5_7b());
+        assert_eq!(
+            ModelSpec::by_name("qwen2.5-72b").unwrap().name,
+            "qwen2.5-72b"
+        );
+        assert!(ModelSpec::by_name("gpt-5").is_err());
+        assert!(HardwareProfile::by_name("910c").is_ok());
+        assert!(HardwareProfile::by_name("tpu-v9").is_err());
+    }
+
+    #[test]
+    fn hardware_ratio_matches_table6_structure() {
+        // H800 peak FLOPs ~3x one 910c chip (Table 6 rationale).
+        let h = HardwareProfile::h800();
+        let a = HardwareProfile::ascend_910c();
+        let ratio = h.flops_gemm / a.flops_gemm;
+        assert!((ratio - 3.0).abs() < 0.01, "ratio {ratio}");
+        // vLLM-on-910c strictly slower than xLLM-on-910c.
+        let v = HardwareProfile::ascend_910c_vllm();
+        assert!(v.flops_gemm < a.flops_gemm);
+        assert!(v.overhead_decode > a.overhead_decode);
+    }
+
+    #[test]
+    fn model_json_roundtrip() {
+        let m = ModelSpec::qwen2_5_7b();
+        let j = m.to_json();
+        let m2 = ModelSpec::from_json(&j).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn hardware_json_roundtrip() {
+        let h = HardwareProfile::ascend_910c();
+        let h2 = HardwareProfile::from_json(&h.to_json()).unwrap();
+        assert_eq!(h, h2);
+    }
+
+    #[test]
+    fn serving_config_from_file() {
+        let dir = std::env::temp_dir().join("ooco_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(
+            &path,
+            r#"{
+                "model": "72b",
+                "hardware": "h800",
+                "slo": {"ttft": 3.0, "tpot": 0.05},
+                "scheduler": {"mix_probe_iters": 16},
+                "cluster": {"relaxed_instances": 2, "strict_instances": 3}
+            }"#,
+        )
+        .unwrap();
+        let cfg = ServingConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.model.name, "qwen2.5-72b");
+        assert_eq!(cfg.hardware.name, "h800");
+        assert_eq!(cfg.slo.tpot, 0.05);
+        assert_eq!(cfg.slo.violation_threshold, 0.03); // default preserved
+        assert_eq!(cfg.sched.mix_probe_iters, 16);
+        assert_eq!(cfg.cluster.strict_instances, 3);
+    }
+
+    #[test]
+    fn serving_config_defaults() {
+        let dir = std::env::temp_dir().join("ooco_cfg_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.json");
+        std::fs::write(&path, "{}").unwrap();
+        let cfg = ServingConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.model.name, "qwen2.5-7b");
+        assert_eq!(cfg.cluster.relaxed_instances, 1);
+    }
+}

@@ -1,0 +1,150 @@
+//! Offline Request Gating (§3.4.2).
+//!
+//! When a latency-relaxed node is idle (no online prefill waiting) it can
+//! either decode its resident offline requests or prefill *new* offline
+//! requests to enlarge the future decode batch. Prefilling is worthwhile
+//! only if the effective per-token latency reduction from the larger batch
+//! exceeds the expected recompute cost from potential eviction during a
+//! future online burst:
+//!
+//! `admit  <=>  benefit >= ratio * eviction_prob * recompute_cost`
+//!
+//! where `benefit = remaining_output_tokens * (L(n)/n - L(n+1)/(n+1))`
+//! (decode time saved for the whole pool by amortizing over one more
+//! request) and `recompute_cost = prefill_latency(prompt)`.
+
+use crate::config::SchedulerParams;
+use crate::perfmodel::{BatchStats, PerfModel};
+
+/// Decision input for one gating check on a relaxed node.
+#[derive(Debug, Clone, Copy)]
+pub struct GatingInput {
+    /// Current offline decode pool on this node.
+    pub pool: BatchStats,
+    /// Prompt length of the candidate offline request.
+    pub candidate_prompt: usize,
+    /// Expected output length of the candidate (trace metadata / estimate).
+    pub candidate_output: usize,
+    /// Mean remaining output tokens per pooled request (benefit horizon).
+    pub pool_mean_remaining: f64,
+    /// Free KV tokens on the node after reserving online-prefill headroom.
+    pub free_kv_tokens: usize,
+}
+
+/// Should the node prefill this offline request now?
+pub fn should_prefill_offline(
+    pm: &PerfModel,
+    input: &GatingInput,
+    params: &SchedulerParams,
+) -> bool {
+    // Hard constraint: the candidate's KV must fit in the reserved-free space.
+    if input.candidate_prompt + 1 > input.free_kv_tokens {
+        return false;
+    }
+
+    // An empty pool always benefits from work (nothing to amortize against).
+    if input.pool.is_empty() {
+        return true;
+    }
+
+    // Per-token decode latency now vs with the candidate added.
+    let n = input.pool.size as f64;
+    let now = pm.decode_latency(input.pool) / n;
+    let with = input
+        .pool
+        .with(input.candidate_prompt + input.candidate_output / 2);
+    let later = pm.decode_latency(with) / (n + 1.0);
+    let per_token_gain = (now - later).max(0.0);
+
+    // Benefit accrues over the pool's remaining tokens plus the candidate's.
+    let horizon = input.pool_mean_remaining * n + input.candidate_output as f64;
+    let benefit = per_token_gain * horizon;
+
+    let recompute_cost = pm.prefill_latency(input.candidate_prompt);
+    let cost = params.eviction_prob * recompute_cost;
+
+    benefit >= params.gating_benefit_ratio * cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareProfile, ModelSpec};
+
+    fn pm() -> PerfModel {
+        PerfModel::new(ModelSpec::qwen2_5_7b(), HardwareProfile::ascend_910c())
+    }
+
+    fn input(pool: BatchStats, free: usize) -> GatingInput {
+        GatingInput {
+            pool,
+            candidate_prompt: 1200,
+            candidate_output: 600,
+            pool_mean_remaining: 300.0,
+            free_kv_tokens: free,
+        }
+    }
+
+    #[test]
+    fn empty_pool_admits() {
+        let pm = pm();
+        let inp = input(BatchStats::empty(), 100_000);
+        assert!(should_prefill_offline(&pm, &inp, &SchedulerParams::default()));
+    }
+
+    #[test]
+    fn no_space_rejects() {
+        let pm = pm();
+        let inp = input(BatchStats::empty(), 500); // prompt 1200 won't fit
+        assert!(!should_prefill_offline(&pm, &inp, &SchedulerParams::default()));
+    }
+
+    #[test]
+    fn small_pool_admits_large_pool_rejects() {
+        let pm = pm();
+        let params = SchedulerParams::default();
+        // Small pool: big amortization gain per added request.
+        let small = input(BatchStats::new(3, 3 * 1500), 400_000);
+        assert!(should_prefill_offline(&pm, &small, &params));
+        // Far beyond compute saturation: marginal gain ~0, eviction risk
+        // dominates.
+        let sat = pm.bs_sat();
+        let big = input(BatchStats::new(sat * 3, sat * 3 * 1500), 400_000);
+        assert!(!should_prefill_offline(&pm, &big, &params));
+    }
+
+    #[test]
+    fn higher_eviction_prob_rejects_earlier() {
+        let pm = pm();
+        // Find a pool size where the default admits...
+        let mut params = SchedulerParams::default();
+        params.eviction_prob = 0.05;
+        let sat = pm.bs_sat();
+        let pool = BatchStats::new(sat / 2, sat / 2 * 1500);
+        let inp = input(pool, 400_000);
+        let admits_low = should_prefill_offline(&pm, &inp, &params);
+        // ...and a near-certain eviction rejects.
+        params.eviction_prob = 50.0; // exaggerated to force the flip
+        let admits_high = should_prefill_offline(&pm, &inp, &params);
+        assert!(admits_low || !admits_high); // monotone in eviction_prob
+        assert!(!admits_high, "near-certain eviction must reject");
+    }
+
+    #[test]
+    fn benefit_ratio_knob_monotone() {
+        let pm = pm();
+        let sat = pm.bs_sat();
+        let inp = input(BatchStats::new(sat / 2, sat / 2 * 1200), 400_000);
+        let mut admit_count = 0;
+        for ratio in [0.1, 1.0, 10.0, 1000.0] {
+            let mut p = SchedulerParams::default();
+            p.gating_benefit_ratio = ratio;
+            if should_prefill_offline(&pm, &inp, &p) {
+                admit_count += 1;
+            } else {
+                break; // once rejected, higher ratios must also reject
+            }
+        }
+        assert!(admit_count >= 1);
+    }
+}

@@ -1,0 +1,285 @@
+//! Offline Request Migration — Algorithm 1 (pull model).
+//!
+//! A latency-strict node that (a) is under the TPOT bound with margin and
+//! (b) already includes every resident request in its decode batch, derives
+//! a *length preference* from its performance bottleneck and pulls matching
+//! offline decodes from a latency-relaxed node:
+//!
+//! - compute-saturated (`bs(B) >= bs_sat`): growing the batch no longer
+//!   helps -> fill memory instead: prefer the **longest** requests that keep
+//!   `L(B ∪ r) <= S` and fit capacity;
+//! - not saturated, and saturation reachable within the SLO: prefer the
+//!   **longest length that still fits** (max permissible under S);
+//! - not saturated and unreachable: prefer the **shortest** requests to
+//!   maximize batch growth.
+
+use crate::perfmodel::{BatchStats, PerfModel};
+use crate::request::RequestId;
+
+use super::mix_decode::Candidate;
+
+/// The strict node's advertised preference for pulled offline requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LengthPref {
+    /// No migration this step.
+    None,
+    /// Prefer requests as long as possible but `<= max_len` tokens.
+    LongestUpTo { max_len: usize },
+    /// Prefer the shortest available requests.
+    Shortest,
+}
+
+/// Algorithm 1: derive the length preference. `batch` describes the current
+/// decode batch B; `all_included` is the line-2 condition ("all requests in
+/// node are included in B"); `slo_bound` is S.
+pub fn migration_decision(
+    pm: &PerfModel,
+    batch: BatchStats,
+    all_included: bool,
+    slo_bound: f64,
+    margin: f64,
+) -> LengthPref {
+    let bound = slo_bound * (1.0 - margin);
+    if !all_included || pm.decode_latency(batch) >= bound {
+        return LengthPref::None; // line 16: Pref <- ∅
+    }
+    let bs_sat = pm.bs_sat();
+
+    // Largest single-request KV length admissible under S (and capacity).
+    let max_admissible = max_admissible_len(pm, batch, bound);
+    if max_admissible == 0 {
+        return LengthPref::None;
+    }
+
+    if batch.size >= bs_sat {
+        // Compute-saturated: objective shifts to filling memory capacity.
+        LengthPref::LongestUpTo {
+            max_len: max_admissible,
+        }
+    } else {
+        // Can a group of requests reach compute saturation within the SLO?
+        // Conservatively test with short requests (most batch per token).
+        let need = bs_sat - batch.size;
+        let short = 64usize; // a freshly-started offline decode
+        let saturated = batch.with_group(need, need * short);
+        if pm.decode_latency(saturated) <= bound
+            && pm.memory_utilization(saturated) <= 1.0
+        {
+            // Saturation reachable: take the longest lengths that fit.
+            LengthPref::LongestUpTo {
+                max_len: max_admissible,
+            }
+        } else {
+            // Unreachable: maximize batch size with the shortest requests.
+            LengthPref::Shortest
+        }
+    }
+}
+
+/// Binary-search the largest per-request KV length `l` with
+/// `L(B ∪ r_l) <= bound` and memory fitting.
+fn max_admissible_len(pm: &PerfModel, batch: BatchStats, bound: f64) -> usize {
+    let fits = |l: usize| {
+        let b = batch.with(l);
+        pm.decode_latency(b) <= bound && pm.memory_utilization(b) <= 1.0
+    };
+    if !fits(1) {
+        return 0;
+    }
+    let mut lo = 1usize;
+    let mut hi = 2usize;
+    let cap = pm.max_kv_tokens().max(2);
+    while hi < cap && fits(hi) {
+        lo = hi;
+        hi *= 2;
+    }
+    let mut hi = hi.min(cap);
+    if fits(hi) {
+        return hi;
+    }
+    while lo + 1 < hi {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Relaxed-node side: pick up to `max_count` of its decoding offline
+/// requests "most closed to Pref" (paper line 14).
+pub fn pick_migration_candidates(
+    pref: LengthPref,
+    candidates: &[Candidate],
+    max_count: usize,
+) -> Vec<RequestId> {
+    if max_count == 0 || candidates.is_empty() {
+        return vec![];
+    }
+    match pref {
+        LengthPref::None => vec![],
+        LengthPref::Shortest => {
+            let mut sorted: Vec<Candidate> = candidates.to_vec();
+            sorted.sort_unstable_by_key(|c| c.1);
+            sorted.iter().take(max_count).map(|c| c.0).collect()
+        }
+        LengthPref::LongestUpTo { max_len } => {
+            // Longest-first among those within the cap.
+            let mut eligible: Vec<Candidate> = candidates
+                .iter()
+                .filter(|c| c.1 <= max_len)
+                .copied()
+                .collect();
+            eligible.sort_unstable_by(|a, b| b.1.cmp(&a.1));
+            eligible.iter().take(max_count).map(|c| c.0).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareProfile, ModelSpec};
+
+    fn pm() -> PerfModel {
+        PerfModel::new(ModelSpec::qwen2_5_7b(), HardwareProfile::ascend_910c())
+    }
+
+    const SLO: f64 = 0.1;
+
+    #[test]
+    fn no_migration_when_busy_or_not_all_included() {
+        let pm = pm();
+        // Batch already at/over the bound -> None.
+        let heavy = BatchStats::new(900, 900 * 3000);
+        assert!(pm.decode_latency(heavy) > SLO * 0.9);
+        assert_eq!(
+            migration_decision(&pm, heavy, true, SLO, 0.1),
+            LengthPref::None
+        );
+        // Not all requests included -> None even when idle-ish.
+        let light = BatchStats::new(4, 4000);
+        assert_eq!(
+            migration_decision(&pm, light, false, SLO, 0.1),
+            LengthPref::None
+        );
+    }
+
+    #[test]
+    fn saturated_batch_prefers_longest() {
+        let pm = pm();
+        let sat = pm.bs_sat();
+        let batch = BatchStats::new(sat + 10, (sat + 10) * 100); // short kvs
+        assert!(pm.decode_latency(batch) < SLO * 0.9, "precondition");
+        match migration_decision(&pm, batch, true, SLO, 0.1) {
+            LengthPref::LongestUpTo { max_len } => {
+                assert!(max_len > 1000, "max_len {max_len}");
+                // The advertised length must actually fit under the bound.
+                let b = batch.with(max_len);
+                assert!(pm.decode_latency(b) <= SLO * 0.9 + 1e-12);
+            }
+            other => panic!("expected LongestUpTo, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn small_batch_reachable_saturation_prefers_long_within_slo() {
+        let pm = pm();
+        let batch = BatchStats::new(4, 4 * 500);
+        let pref = migration_decision(&pm, batch, true, SLO, 0.1);
+        // With a 100ms bound, saturation is reachable on this profile.
+        assert!(
+            matches!(pref, LengthPref::LongestUpTo { .. }),
+            "got {pref:?}"
+        );
+    }
+
+    #[test]
+    fn tight_slo_unreachable_saturation_prefers_shortest() {
+        let pm = pm();
+        // A bound barely above the empty-batch latency: saturation would
+        // blow it, so the preference must be Shortest.
+        let batch = BatchStats::new(2, 200);
+        let base = pm.decode_latency(batch);
+        let tight = base * 1.03;
+        let pref = migration_decision(&pm, batch, true, tight / 0.9, 0.1);
+        // (bound after margin == tight)
+        match pref {
+            LengthPref::Shortest => {}
+            LengthPref::None => {} // acceptable when nothing fits
+            other => panic!("expected Shortest/None, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn max_admissible_len_is_maximal() {
+        let pm = pm();
+        let batch = BatchStats::new(50, 50 * 800);
+        let bound = 0.08;
+        let l = max_admissible_len(&pm, batch, bound);
+        assert!(l > 0);
+        assert!(pm.decode_latency(batch.with(l)) <= bound);
+        assert!(
+            pm.decode_latency(batch.with(l + l / 100 + 8)) > bound
+                || pm.memory_utilization(batch.with(l + l / 100 + 8)) > 1.0
+        );
+    }
+
+    #[test]
+    fn candidate_picking() {
+        let cands: Vec<Candidate> =
+            vec![(1, 100), (2, 5000), (3, 800), (4, 2500), (5, 300)];
+        // Shortest: ids by ascending length.
+        assert_eq!(
+            pick_migration_candidates(LengthPref::Shortest, &cands, 2),
+            vec![1, 5]
+        );
+        // LongestUpTo 2600: eligible {100,800,2500,300}, longest first.
+        assert_eq!(
+            pick_migration_candidates(
+                LengthPref::LongestUpTo { max_len: 2600 },
+                &cands,
+                2
+            ),
+            vec![4, 3]
+        );
+        // None / empty.
+        assert!(pick_migration_candidates(LengthPref::None, &cands, 3).is_empty());
+        assert!(
+            pick_migration_candidates(LengthPref::Shortest, &cands, 0).is_empty()
+        );
+        assert!(pick_migration_candidates(LengthPref::Shortest, &[], 3).is_empty());
+    }
+
+    #[test]
+    fn picked_candidates_respect_pref_property() {
+        crate::testutil::forall(40, |r| {
+            let n = r.below(30) + 1;
+            let cands: Vec<Candidate> = (0..n)
+                .map(|i| (i as u64, r.below(4000) + 1))
+                .collect();
+            let max_len = r.below(4000) + 1;
+            let picked = pick_migration_candidates(
+                LengthPref::LongestUpTo { max_len },
+                &cands,
+                r.below(6) + 1,
+            );
+            for id in &picked {
+                let c = cands.iter().find(|c| c.0 == *id).unwrap();
+                crate::prop_assert!(
+                    c.1 <= max_len,
+                    "picked over-length candidate {} > {max_len}",
+                    c.1
+                );
+            }
+            // No duplicates.
+            let mut p = picked.clone();
+            p.sort_unstable();
+            p.dedup();
+            crate::prop_assert!(p.len() == picked.len(), "duplicates");
+            Ok(())
+        });
+    }
+}

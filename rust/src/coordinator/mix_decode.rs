@@ -1,0 +1,380 @@
+//! Mix Decoding Selection — Algorithm 2.
+//!
+//! Every strict-node decode iteration chooses its batch: all online requests
+//! are included first, then offline candidates are admitted under the TPOT
+//! SLO bound using the O(1) latency predictor:
+//!
+//! 1. up to K *random* probes (starvation avoidance — long requests that
+//!    would lose a sorted admission still get sampled);
+//! 2. remaining candidates sorted by ascending KV length;
+//! 3. binary search for the largest prefix that still fits the bound
+//!    (maximizing batch size when only part of the offline set fits).
+//!
+//! All probes are O(1) via [`BatchStats::with`]; the prefix step uses
+//! [`PrefixSums::max_prefix`], so one selection costs
+//! O(K + m log m) (sort) + O(log m) (search).
+
+use crate::perfmodel::{BatchStats, PerfModel, PrefixSums};
+use crate::request::RequestId;
+use crate::util::rng::Pcg;
+
+/// One decode candidate: request id + current KV length.
+pub type Candidate = (RequestId, usize);
+
+/// What to do when the online-only batch already exceeds the SLO bound
+/// (§3.4.4: "this can be configured either to ignore the SLO and still
+/// Decode all online requests (best-effort mode) or to sacrifice a portion
+/// of requests in order to preserve the SLO for the remaining ones").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverloadMode {
+    /// Decode every online request even past the bound (default).
+    #[default]
+    BestEffort,
+    /// Shed the longest online requests until the rest fit the bound.
+    Shed,
+}
+
+/// Trim an over-SLO online batch for [`OverloadMode::Shed`]: drop the
+/// longest-KV requests (most latency relief per shed request) until the
+/// remainder fits `slo_bound`; at least one request is always kept.
+/// Returns (kept, shed).
+pub fn shed_online_overload(
+    pm: &PerfModel,
+    online: &[Candidate],
+    slo_bound: f64,
+) -> (Vec<Candidate>, Vec<RequestId>) {
+    let mut kept: Vec<Candidate> = online.to_vec();
+    kept.sort_unstable_by_key(|c| c.1); // ascending; shed from the tail
+    let mut stats = BatchStats::new(
+        kept.len(),
+        kept.iter().map(|c| c.1).sum(),
+    );
+    let mut shed = Vec::new();
+    while kept.len() > 1 && pm.decode_latency(stats) > slo_bound {
+        let victim = kept.pop().expect("len > 1");
+        stats = stats.without(victim.1);
+        shed.push(victim.0);
+    }
+    (kept, shed)
+}
+
+/// Result of a selection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Selection {
+    /// Offline requests admitted into this iteration's batch.
+    pub offline: Vec<RequestId>,
+    /// Aggregates of the full batch (online + admitted offline).
+    pub stats: BatchStats,
+    /// Predicted iteration latency.
+    pub predicted_latency: f64,
+    /// True if even the online-only batch exceeds the bound (best-effort
+    /// mode decodes it anyway; the caller may alternatively shed load).
+    pub online_over_slo: bool,
+}
+
+/// Algorithm 2. `online`/`offline` carry `(id, kv_len)`; `slo_bound` is the
+/// TPOT bound S (already margin-adjusted by the caller if desired).
+pub fn select_decode_batch(
+    pm: &PerfModel,
+    online: &[Candidate],
+    offline: &[Candidate],
+    slo_bound: f64,
+    probes: usize,
+    rng: &mut Pcg,
+) -> Selection {
+    // Line 1: all online requests are always included.
+    let online_tokens: usize = online.iter().map(|c| c.1).sum();
+    let mut stats = BatchStats::new(online.len(), online_tokens);
+    let online_over_slo = !online.is_empty() && pm.decode_latency(stats) > slo_bound;
+
+    let mut chosen: Vec<RequestId> = Vec::new();
+    if offline.is_empty() {
+        let predicted_latency = pm.decode_latency(stats);
+        return Selection {
+            offline: chosen,
+            stats,
+            predicted_latency,
+            online_over_slo,
+        };
+    }
+
+    // Lines 2-9: random probes over the offline set (up to K distinct).
+    let k = probes.min(offline.len());
+    let probe_idx = rng.sample_indices(offline.len(), k);
+    let mut probed = vec![false; offline.len()];
+    for &i in &probe_idx {
+        probed[i] = true;
+        let (id, kv) = offline[i];
+        let trial = stats.with(kv);
+        if pm.decode_latency(trial) <= slo_bound {
+            stats = trial;
+            chosen.push(id);
+        }
+        // else: discard r (this iteration).
+    }
+
+    // Lines 10-14: if untested candidates remain and we are still under the
+    // bound, sort them ascending by length and binary-search the largest
+    // admissible prefix.
+    if pm.decode_latency(stats) <= slo_bound {
+        let mut rest: Vec<Candidate> = offline
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !probed[*i])
+            .map(|(_, c)| *c)
+            .collect();
+        if !rest.is_empty() {
+            rest.sort_unstable_by_key(|c| c.1);
+            let lens: Vec<usize> = rest.iter().map(|c| c.1).collect();
+            let sums = PrefixSums::of(&lens);
+            let k =
+                sums.max_prefix(stats, |b| pm.decode_latency(b) <= slo_bound);
+            for c in &rest[..k] {
+                chosen.push(c.0);
+            }
+            stats = sums.extend(stats, k);
+        }
+    }
+
+    let predicted_latency = pm.decode_latency(stats);
+    Selection {
+        offline: chosen,
+        stats,
+        predicted_latency,
+        online_over_slo,
+    }
+}
+
+/// The ablation/baseline alternative: admit offline candidates greedily in
+/// arrival order up to `cap` total batch size, with no latency prediction
+/// (what `online priority` does).
+pub fn select_decode_batch_capped(
+    online: &[Candidate],
+    offline: &[Candidate],
+    cap: usize,
+) -> Selection {
+    let online_tokens: usize = online.iter().map(|c| c.1).sum();
+    let mut stats = BatchStats::new(online.len(), online_tokens);
+    let mut chosen = Vec::new();
+    for &(id, kv) in offline {
+        if stats.size >= cap {
+            break;
+        }
+        stats = stats.with(kv);
+        chosen.push(id);
+    }
+    Selection {
+        offline: chosen,
+        stats,
+        predicted_latency: 0.0,
+        online_over_slo: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareProfile, ModelSpec};
+
+    fn pm() -> PerfModel {
+        PerfModel::new(ModelSpec::qwen2_5_7b(), HardwareProfile::ascend_910c())
+    }
+
+    fn rng() -> Pcg {
+        Pcg::seeded(1)
+    }
+
+    fn cands(lens: &[usize], base_id: u64) -> Vec<Candidate> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &l)| (base_id + i as u64, l))
+            .collect()
+    }
+
+    #[test]
+    fn online_always_included() {
+        let pm = pm();
+        let online = cands(&[1000, 2000, 1500], 0);
+        let sel = select_decode_batch(&pm, &online, &[], 0.1, 8, &mut rng());
+        assert_eq!(sel.stats.size, 3);
+        assert_eq!(sel.stats.total_kv_tokens, 4500);
+        assert!(sel.offline.is_empty());
+        assert!(!sel.online_over_slo);
+    }
+
+    #[test]
+    fn respects_slo_bound() {
+        let pm = pm();
+        let online = cands(&[1000; 20], 0);
+        let offline = cands(&[1500; 400], 100);
+        let bound = 0.08;
+        let sel = select_decode_batch(&pm, &online, &offline, bound, 8, &mut rng());
+        assert!(
+            sel.predicted_latency <= bound + 1e-12,
+            "lat {} > bound",
+            sel.predicted_latency
+        );
+        // And it admitted a useful number of offline requests.
+        assert!(sel.offline.len() > 10, "admitted {}", sel.offline.len());
+        // Adding one more of the shortest length would break the bound OR
+        // everything was admitted.
+        if sel.offline.len() < offline.len() {
+            let with_one = sel.stats.with(1500);
+            assert!(pm.decode_latency(with_one) > bound);
+        }
+    }
+
+    #[test]
+    fn admits_everything_when_loose() {
+        let pm = pm();
+        let online = cands(&[500; 4], 0);
+        let offline = cands(&[700; 30], 100);
+        let sel = select_decode_batch(&pm, &online, &offline, 10.0, 8, &mut rng());
+        assert_eq!(sel.offline.len(), 30);
+        assert_eq!(sel.stats.size, 34);
+    }
+
+    #[test]
+    fn online_over_slo_flagged_but_decoded() {
+        let pm = pm();
+        // Enormous online batch that alone blows a tight bound.
+        let online = cands(&[4000; 900], 0);
+        let sel = select_decode_batch(&pm, &online, &cands(&[100; 5], 2000), 0.02, 4, &mut rng());
+        assert!(sel.online_over_slo);
+        assert_eq!(sel.stats.size, 900); // no offline admitted
+        assert!(sel.offline.is_empty());
+    }
+
+    #[test]
+    fn no_duplicate_admissions() {
+        let pm = pm();
+        let offline = cands(&[800; 120], 0);
+        let sel = select_decode_batch(&pm, &[], &offline, 0.06, 16, &mut rng());
+        let mut ids = sel.offline.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), sel.offline.len(), "duplicate admission");
+    }
+
+    #[test]
+    fn stats_match_choice() {
+        // Property: returned stats equal online + chosen offline aggregates.
+        let pm = pm();
+        crate::testutil::forall(30, |r| {
+            let n_on = r.below(10);
+            let n_off = r.below(60);
+            let online: Vec<Candidate> = (0..n_on)
+                .map(|i| (i as u64, r.below(3000) + 1))
+                .collect();
+            let offline: Vec<Candidate> = (0..n_off)
+                .map(|i| (1000 + i as u64, r.below(3000) + 1))
+                .collect();
+            let bound = 0.02 + r.f64() * 0.1;
+            let sel = select_decode_batch(&pm, &online, &offline, bound, 8, r);
+            let mut size = online.len();
+            let mut toks: usize = online.iter().map(|c| c.1).sum();
+            for id in &sel.offline {
+                let c = offline.iter().find(|c| c.0 == *id).unwrap();
+                size += 1;
+                toks += c.1;
+            }
+            crate::prop_assert!(
+                sel.stats == BatchStats::new(size, toks),
+                "stats mismatch {:?} vs ({size},{toks})",
+                sel.stats
+            );
+            // Predictor consistency.
+            crate::prop_assert!(
+                (sel.predicted_latency - pm.decode_latency(sel.stats)).abs() < 1e-12,
+                "latency mismatch"
+            );
+            // SLO respected whenever online alone fits.
+            if !sel.online_over_slo {
+                crate::prop_assert!(
+                    sel.predicted_latency <= bound + 1e-12,
+                    "bound violated: {} > {bound}",
+                    sel.predicted_latency
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn random_probes_reach_long_requests() {
+        // Starvation avoidance: one very long offline request among many
+        // short ones must be admitted in SOME iterations (when probed and
+        // fitting), even though sorted admission would always leave it last.
+        let pm = pm();
+        let mut offline = cands(&[200; 40], 0);
+        offline.push((999, 30_000)); // the long one
+        let bound = 0.065;
+        let mut seen_long = false;
+        let mut r = Pcg::seeded(3);
+        for _ in 0..60 {
+            let sel = select_decode_batch(&pm, &[], &offline, bound, 8, &mut r);
+            if sel.offline.contains(&999) {
+                seen_long = true;
+                break;
+            }
+        }
+        assert!(seen_long, "long request starved across 60 iterations");
+    }
+
+    #[test]
+    fn shed_mode_trims_to_bound() {
+        let pm = pm();
+        // A batch far over a tight bound.
+        let online: Vec<Candidate> =
+            (0..900).map(|i| (i as u64, 2000 + (i as usize % 7) * 500)).collect();
+        let bound = 0.05;
+        let over = {
+            let toks: usize = online.iter().map(|c| c.1).sum();
+            pm.decode_latency(BatchStats::new(online.len(), toks))
+        };
+        assert!(over > bound, "precondition");
+        let (kept, shed) = shed_online_overload(&pm, &online, bound);
+        assert_eq!(kept.len() + shed.len(), online.len());
+        assert!(!kept.is_empty());
+        let toks: usize = kept.iter().map(|c| c.1).sum();
+        assert!(pm.decode_latency(BatchStats::new(kept.len(), toks)) <= bound);
+        // Shed requests are the longest ones.
+        let min_shed = shed
+            .iter()
+            .map(|id| online.iter().find(|c| c.0 == *id).unwrap().1)
+            .min()
+            .unwrap();
+        assert!(kept.iter().all(|c| c.1 <= min_shed));
+    }
+
+    #[test]
+    fn shed_mode_keeps_fitting_batch_intact() {
+        let pm = pm();
+        let online: Vec<Candidate> = (0..4).map(|i| (i as u64, 500)).collect();
+        let (kept, shed) = shed_online_overload(&pm, &online, 1.0);
+        assert_eq!(kept.len(), 4);
+        assert!(shed.is_empty());
+    }
+
+    #[test]
+    fn shed_mode_always_keeps_one() {
+        let pm = pm();
+        let online: Vec<Candidate> = (0..10).map(|i| (i as u64, 4000)).collect();
+        // Bound below even a single request's latency.
+        let (kept, shed) = shed_online_overload(&pm, &online, 1e-6);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(shed.len(), 9);
+    }
+
+    #[test]
+    fn capped_baseline() {
+        let online = cands(&[100; 3], 0);
+        let offline = cands(&[100; 50], 10);
+        let sel = select_decode_batch_capped(&online, &offline, 10);
+        assert_eq!(sel.stats.size, 10);
+        assert_eq!(sel.offline.len(), 7);
+        // Cap below online size admits nothing offline.
+        let sel = select_decode_batch_capped(&online, &offline, 2);
+        assert!(sel.offline.is_empty());
+    }
+}

@@ -1,0 +1,30 @@
+//! The OOCO coordinator: the paper's §3.4 scheduling logic as pure,
+//! instance-agnostic decision functions, shared by the discrete-event
+//! simulator (`sim`) and the real PJRT engine (`engine`).
+//!
+//! Four scheduling points on the data path (Fig. 4):
+//! - [`preemption`] — online request preemption (layer-level interruption +
+//!   bottleneck-aware eviction);
+//! - [`gating`] — offline request gating cost model;
+//! - [`migration`] — offline request migration, Algorithm 1 (pull model);
+//! - [`mix_decode`] — mix decoding selection, Algorithm 2;
+//!
+//! plus [`policy`] (the three compared systems) and [`router`]
+//! (request-level dispatch across instances, the xllm-service analog).
+
+pub mod gating;
+pub mod migration;
+pub mod mix_decode;
+pub mod policy;
+pub mod preemption;
+pub mod router;
+
+pub use gating::{should_prefill_offline, GatingInput};
+pub use migration::{migration_decision, pick_migration_candidates, LengthPref};
+pub use mix_decode::{
+    select_decode_batch, select_decode_batch_capped, shed_online_overload,
+    Candidate, OverloadMode, Selection,
+};
+pub use policy::{Ablation, Policy};
+pub use preemption::{preemption_delay, select_evictions};
+pub use router::Router;

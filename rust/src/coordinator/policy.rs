@@ -1,0 +1,197 @@
+//! The three compared systems (paper §5.1.4), as one policy switch.
+//!
+//! All three run on the same instances, queues and perf model; the policy
+//! only toggles which scheduling mechanisms are active — exactly how the
+//! paper constructs its baselines on top of xLLM.
+
+/// Scheduling policy under evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// `base P/D`: standard P/D disaggregation; offline requests are treated
+    /// as ordinary online requests (vLLM/SGLang/DistServe applied naively).
+    BasePd,
+    /// `online priority`: HyGen/Echo-style online/offline awareness ported
+    /// onto P/D disaggregation — idle-only offline scheduling, fixed decode
+    /// batch cap, preemption on online traffic.
+    OnlinePriority,
+    /// OOCO: latency-constraint disaggregation + bottleneck-based
+    /// scheduling (this paper).
+    Ooco,
+}
+
+impl Policy {
+    pub fn by_name(name: &str) -> anyhow::Result<Policy> {
+        match name {
+            "base-pd" | "base_pd" | "basepd" => Ok(Policy::BasePd),
+            "online-priority" | "online_priority" => Ok(Policy::OnlinePriority),
+            "ooco" => Ok(Policy::Ooco),
+            other => anyhow::bail!("unknown policy `{other}`"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::BasePd => "base-pd",
+            Policy::OnlinePriority => "online-priority",
+            Policy::Ooco => "ooco",
+        }
+    }
+
+    pub fn all() -> [Policy; 3] {
+        [Policy::BasePd, Policy::OnlinePriority, Policy::Ooco]
+    }
+
+    // ------------------------------------------------ mechanism switches
+
+    /// Does online work preempt running offline prefill steps?
+    pub fn preempts_offline_prefill(self) -> bool {
+        !matches!(self, Policy::BasePd)
+    }
+
+    /// Are offline requests only prefilled when no online work is waiting?
+    pub fn offline_idle_only(self) -> bool {
+        !matches!(self, Policy::BasePd)
+    }
+
+    /// May offline requests decode on latency-relaxed instances?
+    /// (The latency-constraint disaggregation — OOCO only.)
+    pub fn offline_decode_on_relaxed(self) -> bool {
+        matches!(self, Policy::Ooco)
+    }
+
+    /// Is the strict-node decode batch chosen by the SLO-aware predictor
+    /// (Algorithm 2) instead of a fixed heuristic?
+    pub fn slo_aware_mix_decode(self) -> bool {
+        matches!(self, Policy::Ooco)
+    }
+
+    /// Does the strict node pull offline decodes from relaxed nodes
+    /// (Algorithm 1)?
+    pub fn migration_enabled(self) -> bool {
+        matches!(self, Policy::Ooco)
+    }
+
+    /// Is the offline-gating cost model active on relaxed nodes?
+    pub fn gating_enabled(self) -> bool {
+        matches!(self, Policy::Ooco)
+    }
+
+    /// Is eviction victim selection bottleneck-aware (vs oldest-first)?
+    pub fn bottleneck_aware_eviction(self) -> bool {
+        matches!(self, Policy::Ooco)
+    }
+
+    /// Fixed decode-batch cap applied to offline mix-in (`online priority`'s
+    /// safeguard). `None` = no static cap.
+    pub fn static_offline_decode_cap(self, cap: usize) -> Option<usize> {
+        match self {
+            Policy::OnlinePriority => Some(cap),
+            _ => None,
+        }
+    }
+}
+
+/// Ablation toggles (used by `bench_ablation`): start from OOCO and switch
+/// individual mechanisms off to quantify their contribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ablation {
+    pub mix_decode: bool,
+    pub migration: bool,
+    pub gating: bool,
+    pub bottleneck_eviction: bool,
+}
+
+impl Default for Ablation {
+    fn default() -> Self {
+        Ablation {
+            mix_decode: true,
+            migration: true,
+            gating: true,
+            bottleneck_eviction: true,
+        }
+    }
+}
+
+impl Ablation {
+    pub fn full() -> Self {
+        Self::default()
+    }
+
+    pub fn without_mix_decode() -> Self {
+        Ablation {
+            mix_decode: false,
+            ..Self::default()
+        }
+    }
+
+    pub fn without_migration() -> Self {
+        Ablation {
+            migration: false,
+            ..Self::default()
+        }
+    }
+
+    pub fn without_gating() -> Self {
+        Ablation {
+            gating: false,
+            ..Self::default()
+        }
+    }
+
+    pub fn without_bottleneck_eviction() -> Self {
+        Ablation {
+            bottleneck_eviction: false,
+            ..Self::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for p in Policy::all() {
+            assert_eq!(Policy::by_name(p.name()).unwrap(), p);
+        }
+        assert!(Policy::by_name("magic").is_err());
+    }
+
+    #[test]
+    fn mechanism_matrix() {
+        // base P/D: nothing online/offline-aware.
+        let p = Policy::BasePd;
+        assert!(!p.preempts_offline_prefill());
+        assert!(!p.offline_idle_only());
+        assert!(!p.offline_decode_on_relaxed());
+        assert!(!p.slo_aware_mix_decode());
+        assert!(p.static_offline_decode_cap(96).is_none());
+
+        // online priority: protection without latency-constraint flexibility.
+        let p = Policy::OnlinePriority;
+        assert!(p.preempts_offline_prefill());
+        assert!(p.offline_idle_only());
+        assert!(!p.offline_decode_on_relaxed());
+        assert!(!p.migration_enabled());
+        assert_eq!(p.static_offline_decode_cap(96), Some(96));
+
+        // OOCO: everything on.
+        let p = Policy::Ooco;
+        assert!(p.offline_decode_on_relaxed());
+        assert!(p.slo_aware_mix_decode());
+        assert!(p.migration_enabled());
+        assert!(p.gating_enabled());
+        assert!(p.bottleneck_aware_eviction());
+        assert!(p.static_offline_decode_cap(96).is_none());
+    }
+
+    #[test]
+    fn ablations() {
+        assert!(Ablation::full().mix_decode);
+        assert!(!Ablation::without_migration().migration);
+        assert!(Ablation::without_migration().mix_decode);
+        assert!(!Ablation::without_gating().gating);
+        assert!(!Ablation::without_bottleneck_eviction().bottleneck_eviction);
+    }
+}

@@ -1,0 +1,124 @@
+//! Request-level routing across instances — the `xllm-service` analog.
+//!
+//! Chooses which latency-relaxed instance prefills a request and which
+//! latency-strict instance receives its decode, by least outstanding load.
+//! Online-to-strict dispatch is a *push* (immediately after prefill, to
+//! start decoding ASAP — §3.4.3); offline migration is the strict nodes'
+//! *pull*, implemented in [`super::migration`].
+
+/// Tracks per-instance outstanding load for balanced dispatch.
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// Outstanding prefill tokens queued per relaxed instance.
+    relaxed_load: Vec<u64>,
+    /// Resident decode KV tokens per strict instance.
+    strict_load: Vec<u64>,
+}
+
+impl Router {
+    pub fn new(relaxed: usize, strict: usize) -> Self {
+        assert!(relaxed > 0 && strict > 0);
+        Router {
+            relaxed_load: vec![0; relaxed],
+            strict_load: vec![0; strict],
+        }
+    }
+
+    pub fn relaxed_count(&self) -> usize {
+        self.relaxed_load.len()
+    }
+
+    pub fn strict_count(&self) -> usize {
+        self.strict_load.len()
+    }
+
+    /// Pick the relaxed instance for a prefill of `tokens`, recording load.
+    pub fn route_prefill(&mut self, tokens: usize) -> usize {
+        let idx = argmin(&self.relaxed_load);
+        self.relaxed_load[idx] += tokens as u64;
+        idx
+    }
+
+    /// Prefill finished: discharge its queued load.
+    pub fn prefill_done(&mut self, instance: usize, tokens: usize) {
+        let l = &mut self.relaxed_load[instance];
+        *l = l.saturating_sub(tokens as u64);
+    }
+
+    /// Pick the strict instance for a decode of `kv_tokens`, recording load.
+    pub fn route_decode(&mut self, kv_tokens: usize) -> usize {
+        let idx = argmin(&self.strict_load);
+        self.strict_load[idx] += kv_tokens as u64;
+        idx
+    }
+
+    /// Decode resident left (finished / evicted / migrated away).
+    pub fn decode_done(&mut self, instance: usize, kv_tokens: usize) {
+        let l = &mut self.strict_load[instance];
+        *l = l.saturating_sub(kv_tokens as u64);
+    }
+
+    /// Decode resident grew by one token (KV growth during decoding).
+    pub fn decode_grow(&mut self, instance: usize, tokens: usize) {
+        self.strict_load[instance] += tokens as u64;
+    }
+}
+
+fn argmin(v: &[u64]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x < v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balances_prefill_load() {
+        let mut r = Router::new(3, 1);
+        let a = r.route_prefill(100);
+        let b = r.route_prefill(100);
+        let c = r.route_prefill(100);
+        // Three equal requests land on three different instances.
+        let mut seen = vec![a, b, c];
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 3);
+        // Fourth goes wherever, but after discharging instance `a` it is
+        // the least loaded again.
+        r.prefill_done(a, 100);
+        assert_eq!(r.route_prefill(10), a);
+    }
+
+    #[test]
+    fn prefers_least_kv_strict() {
+        let mut r = Router::new(1, 2);
+        let a = r.route_decode(5000);
+        let b = r.route_decode(100);
+        assert_ne!(a, b);
+        // b has less load, next goes to b again.
+        assert_eq!(r.route_decode(100), b);
+        r.decode_done(a, 5000);
+        assert_eq!(r.route_decode(1), a);
+    }
+
+    #[test]
+    fn growth_and_saturating_discharge() {
+        let mut r = Router::new(1, 1);
+        let i = r.route_decode(10);
+        r.decode_grow(i, 5);
+        r.decode_done(i, 100); // over-discharge clamps to zero
+        assert_eq!(r.route_decode(1), i);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_instances_panics() {
+        Router::new(0, 1);
+    }
+}

@@ -1,0 +1,520 @@
+//! Real serving engine over the PJRT runtime (the end-to-end proof that
+//! L1 Pallas kernels -> L2 JAX model -> L3 rust coordinator compose).
+//!
+//! One process hosts the two logical pools of the latency-constraint
+//! disaggregated architecture: a latency-relaxed pool (prefill + offline
+//! decode) and a latency-strict pool (online decode + SLO-bounded offline
+//! mix-in, Algorithm 2 on *measured-calibrated* perf-model predictions).
+//! A feeder thread replays the trace in wall-clock time through an mpsc
+//! channel; the engine loop owns the PJRT executables (XLA handles stay on
+//! one thread) and steps both pools.
+//!
+//! Differences from the simulator, by necessity of the substrate:
+//! - layer-level preemption is approximated at step granularity (a single
+//!   CPU process cannot abort a running XLA execution mid-flight);
+//! - both pools share one CPU, so "strict" latency includes interleaved
+//!   prefill time — the engine reports honest wall-clock numbers.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{HardwareProfile, SchedulerParams, SloSpec};
+use crate::coordinator::{select_decode_batch, Candidate, Policy};
+use crate::metrics::{Recorder, Report};
+use crate::perfmodel::{calibrate, PerfModel, Sample, SampleKind};
+use crate::perfmodel::BatchStats;
+use crate::request::{Class, Request};
+use crate::runtime::{DecodeEntry, KvBuf, Runtime};
+use crate::trace::Trace;
+use crate::util::rng::Pcg;
+
+/// Engine parameters.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub policy: Policy,
+    pub slo: SloSpec,
+    pub sched: SchedulerParams,
+    /// Wall-clock compression: trace time / `time_scale` (e.g. 10 replays a
+    /// 600 s trace in 60 s).
+    pub time_scale: f64,
+    /// Hard cap on generated tokens per request (keeps runs bounded).
+    pub max_output: usize,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            policy: Policy::Ooco,
+            // CPU-scale SLOs for the tiny model (calibrated magnitudes).
+            slo: SloSpec {
+                ttft: 2.0,
+                tpot: 0.25,
+                violation_threshold: 0.03,
+            },
+            sched: SchedulerParams::default(),
+            time_scale: 1.0,
+            max_output: 32,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of a serving run.
+#[derive(Debug)]
+pub struct EngineOutcome {
+    pub report: Report,
+    pub wall_s: f64,
+    pub prefills: u64,
+    pub strict_steps: u64,
+    pub relaxed_steps: u64,
+    pub online_tokens: u64,
+    pub offline_tokens: u64,
+    /// Measured (batch/seq, latency) samples collected during the run —
+    /// input for perf-model calibration and accuracy benches.
+    pub samples: Vec<Sample>,
+    /// The CPU-calibrated perf model used for Algorithm 2 during the run.
+    pub perf_model: PerfModel,
+}
+
+struct Live {
+    req: Request,
+    /// Prompt token ids (kept for debugging / future detokenization).
+    #[allow(dead_code)]
+    tokens: Vec<i32>,
+    kv: KvBuf,
+    last_token: i32,
+    position: i32,
+}
+
+/// Probe the runtime and fit a CPU hardware profile for the tiny model —
+/// the engine's analog of the paper's Table 4 profiling step.
+pub fn calibrate_runtime(rt: &Runtime) -> Result<(PerfModel, Vec<Sample>)> {
+    let model = tiny_model_spec(rt);
+    let mut samples = Vec::new();
+    let mut rng = Pcg::seeded(7);
+    // Prefill probes across buckets.
+    for &s in &rt.manifest.prefill_buckets.clone() {
+        let len = s.saturating_sub(4).max(1);
+        let toks: Vec<i32> =
+            (0..len).map(|_| rng.below(rt.manifest.vocab) as i32).collect();
+        let t0 = Instant::now();
+        let _ = rt.prefill(&toks)?;
+        samples.push(Sample {
+            kind: SampleKind::Prefill { prompt_len: len },
+            latency_s: t0.elapsed().as_secs_f64(),
+        });
+    }
+    // Decode probes across buckets.
+    let kv_elems = rt.kv_elems();
+    for &b in &rt.manifest.decode_buckets.clone() {
+        let mut kvs: Vec<KvBuf> = (0..b).map(|_| KvBuf::zeros(kv_elems)).collect();
+        let mut entries: Vec<DecodeEntry> = kvs
+            .iter_mut()
+            .map(|kv| DecodeEntry {
+                token: 1,
+                position: 64,
+                kv,
+            })
+            .collect();
+        let t0 = Instant::now();
+        let _ = rt.decode(&mut entries)?;
+        samples.push(Sample {
+            kind: SampleKind::Decode {
+                batch: BatchStats::new(b, b * 64),
+            },
+            latency_s: t0.elapsed().as_secs_f64(),
+        });
+    }
+    let fitted = calibrate(&model, &HardwareProfile::cpu_tiny(), &samples, 10);
+    Ok((PerfModel::new(model, fitted), samples))
+}
+
+fn tiny_model_spec(rt: &Runtime) -> crate::config::ModelSpec {
+    let m = &rt.manifest;
+    crate::config::ModelSpec {
+        name: "tiny".into(),
+        layers: m.layers,
+        hidden: m.hidden,
+        q_heads: m.q_heads,
+        kv_heads: m.kv_heads,
+        head_dim: m.head_dim,
+        ffn: m.ffn,
+        vocab: m.vocab,
+        bytes_per_value: 4.0,
+        tensor_parallel: 1,
+    }
+}
+
+/// Serve a trace end-to-end with real model execution.
+pub fn serve_trace(
+    artifacts_dir: &Path,
+    trace: &Trace,
+    cfg: &EngineConfig,
+) -> Result<EngineOutcome> {
+    let rt = Runtime::load(artifacts_dir)?;
+    serve_trace_with_runtime(&rt, trace, cfg)
+}
+
+pub fn serve_trace_with_runtime(
+    rt: &Runtime,
+    trace: &Trace,
+    cfg: &EngineConfig,
+) -> Result<EngineOutcome> {
+    let (pm, mut samples) = calibrate_runtime(rt)?;
+    let smax = rt.manifest.smax;
+    let vocab = rt.manifest.vocab;
+    let kv_elems = rt.kv_elems();
+    let max_batch = rt.max_decode_batch();
+
+    // Feeder thread replays arrivals in compressed wall-clock time.
+    let (tx, rx) = mpsc::channel::<Request>();
+    let feed: Vec<Request> = trace.requests.clone();
+    let scale = cfg.time_scale.max(1e-9);
+    let feeder = std::thread::spawn(move || {
+        let start = Instant::now();
+        for r in feed {
+            let due = r.arrival / scale;
+            let now = start.elapsed().as_secs_f64();
+            if due > now {
+                std::thread::sleep(std::time::Duration::from_secs_f64(due - now));
+            }
+            if tx.send(r).is_err() {
+                return;
+            }
+        }
+    });
+
+    let start = Instant::now();
+    let mut rng = Pcg::new(cfg.seed, 616);
+    let mut online_q: VecDeque<Request> = VecDeque::new();
+    let mut offline_q: VecDeque<Request> = VecDeque::new();
+    let mut strict_online: Vec<Live> = Vec::new();
+    let mut strict_offline: Vec<Live> = Vec::new();
+    let mut relaxed_offline: Vec<Live> = Vec::new();
+    let mut recorder = Recorder::new();
+    let mut feeding = true;
+
+    let mut prefills = 0u64;
+    let mut strict_steps = 0u64;
+    let mut relaxed_steps = 0u64;
+    let mut online_tokens = 0u64;
+    let mut offline_tokens = 0u64;
+
+    // Scale SLO to compressed time so violation semantics match the trace.
+    let slo_tpot = cfg.slo.tpot;
+
+    let now_s = |start: &Instant| start.elapsed().as_secs_f64();
+
+    loop {
+        // ---- intake ----
+        loop {
+            match rx.try_recv() {
+                Ok(r) => {
+                    if r.class == Class::Online || cfg.policy == Policy::BasePd {
+                        online_q.push_back(r);
+                    } else {
+                        offline_q.push_back(r);
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    feeding = false;
+                    break;
+                }
+            }
+        }
+
+        let idle = online_q.is_empty()
+            && offline_q.is_empty()
+            && strict_online.is_empty()
+            && strict_offline.is_empty()
+            && relaxed_offline.is_empty();
+        if idle {
+            if !feeding {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            continue;
+        }
+
+        // ---- relaxed pool: online prefill first (priority), else offline ----
+        let next_prefill = if let Some(r) = online_q.pop_front() {
+            Some(r)
+        } else if strict_online.is_empty() || !cfg.policy.offline_idle_only() {
+            // Offline prefill only when the online side is not starved for
+            // compute (single-CPU analog of "idle-only").
+            offline_q.pop_front()
+        } else {
+            None
+        };
+        if let Some(mut req) = next_prefill {
+            let plen = req.prompt_len.min(smax - cfg.max_output.max(1) - 1).max(1);
+            req.prompt_len = plen;
+            req.output_len = req.output_len.min(cfg.max_output).max(1);
+            let toks: Vec<i32> =
+                (0..plen).map(|_| rng.below(vocab) as i32).collect();
+            let t0 = Instant::now();
+            let out = rt.prefill(&toks)?;
+            let lat = t0.elapsed().as_secs_f64();
+            samples.push(Sample {
+                kind: SampleKind::Prefill { prompt_len: plen },
+                latency_s: lat,
+            });
+            prefills += 1;
+            req.mark_first_token(now_s(&start) * scale);
+            if req.class == Class::Online {
+                online_tokens += 1;
+            } else {
+                offline_tokens += 1;
+            }
+            let last = argmax(&out.logits);
+            let live = Live {
+                position: plen as i32,
+                tokens: toks,
+                kv: out.kv,
+                last_token: last,
+                req,
+            };
+            if live.req.is_finished() {
+                let mut r = live.req;
+                r.finished_at = Some(now_s(&start) * scale);
+                recorder.record(&r);
+            } else if live.req.class == Class::Online
+                || cfg.policy == Policy::BasePd
+            {
+                strict_online.push(live);
+            } else if cfg.policy.offline_decode_on_relaxed() {
+                relaxed_offline.push(live);
+            } else {
+                strict_offline.push(live);
+            }
+        }
+
+        // ---- strict pool: mix decoding selection + one real step ----
+        if !strict_online.is_empty() || !strict_offline.is_empty() {
+            let online_c: Vec<Candidate> = strict_online
+                .iter()
+                .enumerate()
+                .map(|(i, l)| (i as u64, l.position as usize))
+                .collect();
+            let offline_c: Vec<Candidate> = strict_offline
+                .iter()
+                .enumerate()
+                .map(|(i, l)| (i as u64, l.position as usize))
+                .collect();
+            let chosen_off: Vec<usize> = if cfg.policy.slo_aware_mix_decode() {
+                let sel = select_decode_batch(
+                    &pm,
+                    &online_c,
+                    &offline_c,
+                    slo_tpot,
+                    cfg.sched.mix_probe_iters,
+                    &mut rng,
+                );
+                sel.offline.iter().map(|&i| i as usize).collect()
+            } else {
+                // Baselines: offline up to the cap / everything for BasePd.
+                let cap = cfg
+                    .policy
+                    .static_offline_decode_cap(cfg.sched.baseline_decode_cap)
+                    .unwrap_or(usize::MAX);
+                let room = cap.saturating_sub(strict_online.len());
+                (0..strict_offline.len().min(room)).collect()
+            };
+            // Respect the runtime's largest decode bucket.
+            let n_on = strict_online.len().min(max_batch);
+            let n_off = chosen_off.len().min(max_batch - n_on.min(max_batch));
+            let mut stats = BatchStats::empty();
+            let mut entries: Vec<DecodeEntry> = Vec::with_capacity(n_on + n_off);
+            // Split borrows: online first, then chosen offline.
+            let (on_slice, off_slice) =
+                (&mut strict_online[..], &mut strict_offline[..]);
+            for l in on_slice.iter_mut().take(n_on) {
+                stats = stats.with(l.position as usize);
+                entries.push(DecodeEntry {
+                    token: l.last_token,
+                    position: l.position,
+                    kv: &mut l.kv,
+                });
+            }
+            let mut picked = 0usize;
+            for (i, l) in off_slice.iter_mut().enumerate() {
+                if picked >= n_off {
+                    break;
+                }
+                if chosen_off.contains(&i) {
+                    stats = stats.with(l.position as usize);
+                    entries.push(DecodeEntry {
+                        token: l.last_token,
+                        position: l.position,
+                        kv: &mut l.kv,
+                    });
+                    picked += 1;
+                }
+            }
+            if !entries.is_empty() {
+                let t0 = Instant::now();
+                let logits = rt.decode(&mut entries)?;
+                let lat = t0.elapsed().as_secs_f64();
+                samples.push(Sample {
+                    kind: SampleKind::Decode { batch: stats },
+                    latency_s: lat,
+                });
+                strict_steps += 1;
+                drop(entries);
+                let now = now_s(&start) * scale;
+                credit_tokens(
+                    &mut strict_online,
+                    &logits[..n_on],
+                    now,
+                    smax,
+                    &mut recorder,
+                    &mut online_tokens,
+                );
+                let off_logits = &logits[n_on..];
+                credit_chosen(
+                    &mut strict_offline,
+                    &chosen_off[..picked],
+                    off_logits,
+                    now,
+                    smax,
+                    &mut recorder,
+                    &mut offline_tokens,
+                );
+            }
+        }
+
+        // ---- relaxed pool: offline decode (OOCO flexibility) ----
+        if cfg.policy.offline_decode_on_relaxed() && !relaxed_offline.is_empty() {
+            let n = relaxed_offline.len().min(max_batch);
+            let mut stats = BatchStats::empty();
+            let mut entries: Vec<DecodeEntry> = Vec::with_capacity(n);
+            for l in relaxed_offline.iter_mut().take(n) {
+                stats = stats.with(l.position as usize);
+                entries.push(DecodeEntry {
+                    token: l.last_token,
+                    position: l.position,
+                    kv: &mut l.kv,
+                });
+            }
+            let t0 = Instant::now();
+            let logits = rt.decode(&mut entries)?;
+            samples.push(Sample {
+                kind: SampleKind::Decode { batch: stats },
+                latency_s: t0.elapsed().as_secs_f64(),
+            });
+            relaxed_steps += 1;
+            drop(entries);
+            let now = now_s(&start) * scale;
+            credit_tokens(
+                &mut relaxed_offline,
+                &logits[..n],
+                now,
+                smax,
+                &mut recorder,
+                &mut offline_tokens,
+            );
+        }
+
+        let _ = kv_elems;
+    }
+
+    feeder.join().ok();
+    let wall = start.elapsed().as_secs_f64();
+    let duration = trace.duration().max(1e-9);
+    let report = recorder.report(&cfg.slo, duration);
+    Ok(EngineOutcome {
+        report,
+        wall_s: wall,
+        prefills,
+        strict_steps,
+        relaxed_steps,
+        online_tokens,
+        offline_tokens,
+        samples,
+        perf_model: pm,
+    })
+}
+
+fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Credit one generated token to the first `logits.len()` entries of `pool`;
+/// retire finished (or KV-exhausted) stepped requests, recording them.
+fn credit_tokens(
+    pool: &mut Vec<Live>,
+    logits: &[Vec<f32>],
+    now: f64,
+    smax: usize,
+    recorder: &mut Recorder,
+    token_counter: &mut u64,
+) {
+    let stepped = logits.len();
+    for (i, lg) in logits.iter().enumerate() {
+        let l = &mut pool[i];
+        l.last_token = argmax(lg);
+        l.position += 1;
+        *token_counter += 1;
+        l.req.mark_token(now);
+    }
+    let mut keep = Vec::with_capacity(pool.len());
+    for (i, mut l) in pool.drain(..).enumerate() {
+        let done = i < stepped
+            && (l.req.is_finished() || l.position as usize >= smax - 1);
+        if done {
+            l.req.finished_at.get_or_insert(now);
+            recorder.record(&l.req);
+        } else {
+            keep.push(l);
+        }
+    }
+    *pool = keep;
+}
+
+/// Same, but for the subset of `pool` indices in `chosen` (offline mix-in).
+fn credit_chosen(
+    pool: &mut Vec<Live>,
+    chosen: &[usize],
+    logits: &[Vec<f32>],
+    now: f64,
+    smax: usize,
+    recorder: &mut Recorder,
+    token_counter: &mut u64,
+) {
+    let mut stepped = vec![false; pool.len()];
+    for (j, &idx) in chosen.iter().enumerate() {
+        if j >= logits.len() {
+            break;
+        }
+        stepped[idx] = true;
+        let l = &mut pool[idx];
+        l.last_token = argmax(&logits[j]);
+        l.position += 1;
+        *token_counter += 1;
+        l.req.mark_token(now);
+    }
+    let mut keep = Vec::with_capacity(pool.len());
+    for (i, mut l) in pool.drain(..).enumerate() {
+        let done = stepped[i]
+            && (l.req.is_finished() || l.position as usize >= smax - 1);
+        if done {
+            l.req.finished_at.get_or_insert(now);
+            recorder.record(&l.req);
+        } else {
+            keep.push(l);
+        }
+    }
+    *pool = keep;
+}

@@ -1,0 +1,170 @@
+//! Instance state for the two latency-constraint pools (§3.2).
+//!
+//! These are passive state containers; the step *decisions* live in
+//! `coordinator` and the time evolution in `sim` (virtual clock) or
+//! `engine` (real PJRT execution). Keeping them dumb means the simulator
+//! and the real engine share exactly the same scheduling code paths.
+
+use std::collections::VecDeque;
+
+use crate::kvcache::KvManager;
+use crate::request::RequestId;
+
+/// What one iteration (step) on an instance is doing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    /// Prefill of online requests (latency-relaxed pool).
+    PrefillOnline,
+    /// Prefill of offline requests (latency-relaxed pool).
+    PrefillOffline,
+    /// Offline decode on a latency-relaxed instance (OOCO's flexibility).
+    DecodeRelaxed,
+    /// Mixed decode on a latency-strict instance.
+    DecodeStrict,
+}
+
+/// A running iteration.
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub kind: StepKind,
+    pub started: f64,
+    pub ends: f64,
+    pub participants: Vec<RequestId>,
+    /// Monotonic id used to invalidate stale completion events after a
+    /// preemption reschedules the step end.
+    pub seq: u64,
+    /// Set when an online arrival truncated this (offline prefill) step at
+    /// a layer boundary — its work is discarded on completion.
+    pub preempted: bool,
+}
+
+/// Latency-relaxed instance: prefill (both classes) + offline decode.
+#[derive(Debug)]
+pub struct RelaxedInstance {
+    pub id: usize,
+    pub kv: KvManager,
+    /// Online requests waiting to prefill here (router-assigned).
+    pub online_queue: VecDeque<RequestId>,
+    /// Offline decode residents (their KV lives here).
+    pub offline_decoding: Vec<RequestId>,
+    pub step: Option<Step>,
+    pub next_seq: u64,
+    // ---- utilization accounting ----
+    pub busy_s: f64,
+    pub busy_online_prefill_s: f64,
+}
+
+impl RelaxedInstance {
+    pub fn new(id: usize, kv_capacity_tokens: usize, block_tokens: usize) -> Self {
+        RelaxedInstance {
+            id,
+            kv: KvManager::new(kv_capacity_tokens, block_tokens),
+            online_queue: VecDeque::new(),
+            offline_decoding: Vec::new(),
+            step: None,
+            next_seq: 0,
+            busy_s: 0.0,
+            busy_online_prefill_s: 0.0,
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.step.is_none()
+    }
+
+    pub fn alloc_seq(&mut self) -> u64 {
+        self.next_seq += 1;
+        self.next_seq
+    }
+}
+
+/// Latency-strict instance: online decode + SLO-bounded offline mix-in.
+#[derive(Debug)]
+pub struct StrictInstance {
+    pub id: usize,
+    pub kv: KvManager,
+    /// Online decode residents.
+    pub online: Vec<RequestId>,
+    /// Offline decode residents (mixed in / migrated here).
+    pub offline: Vec<RequestId>,
+    /// Requests whose KV transfer to this instance is in flight (KV space
+    /// already reserved in `kv`).
+    pub inbound: Vec<RequestId>,
+    /// Online requests that could not reserve KV space yet (overload).
+    pub waiting_for_space: VecDeque<RequestId>,
+    pub step: Option<Step>,
+    pub next_seq: u64,
+    // ---- utilization accounting ----
+    pub busy_s: f64,
+    pub steps: u64,
+    pub offline_decode_tokens: u64,
+}
+
+impl StrictInstance {
+    pub fn new(id: usize, kv_capacity_tokens: usize, block_tokens: usize) -> Self {
+        StrictInstance {
+            id,
+            kv: KvManager::new(kv_capacity_tokens, block_tokens),
+            online: Vec::new(),
+            offline: Vec::new(),
+            inbound: Vec::new(),
+            waiting_for_space: VecDeque::new(),
+            step: None,
+            next_seq: 0,
+            busy_s: 0.0,
+            steps: 0,
+            offline_decode_tokens: 0,
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.step.is_none()
+    }
+
+    pub fn has_decode_work(&self) -> bool {
+        !self.online.is_empty() || !self.offline.is_empty()
+    }
+
+    pub fn alloc_seq(&mut self) -> u64 {
+        self.next_seq += 1;
+        self.next_seq
+    }
+
+    pub fn remove_online(&mut self, id: RequestId) {
+        self.online.retain(|&r| r != id);
+    }
+
+    pub fn remove_offline(&mut self, id: RequestId) {
+        self.offline.retain(|&r| r != id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relaxed_lifecycle() {
+        let mut r = RelaxedInstance::new(0, 1000, 16);
+        assert!(r.is_idle());
+        assert_eq!(r.alloc_seq(), 1);
+        assert_eq!(r.alloc_seq(), 2);
+        r.online_queue.push_back(5);
+        assert_eq!(r.online_queue.pop_front(), Some(5));
+    }
+
+    #[test]
+    fn strict_residency_ops() {
+        let mut s = StrictInstance::new(0, 1000, 16);
+        assert!(!s.has_decode_work());
+        s.online.extend([1, 2, 3]);
+        s.offline.extend([10, 11]);
+        assert!(s.has_decode_work());
+        s.remove_online(2);
+        assert_eq!(s.online, vec![1, 3]);
+        s.remove_offline(10);
+        assert_eq!(s.offline, vec![11]);
+        s.remove_offline(999); // no-op
+        assert_eq!(s.offline, vec![11]);
+    }
+}

@@ -1,0 +1,259 @@
+//! Paged KV-cache manager (the PagedAttention-style memory substrate).
+//!
+//! Tracks block-granular allocations per request on one instance. The
+//! simulator uses it for capacity accounting and eviction decisions; the
+//! real engine uses it to bound admission on the tiny model. A free-list
+//! allocator keeps alloc/free O(blocks) with zero steady-state heap churn
+//! (hot-path requirement: every decode iteration may grow each request by
+//! one token).
+
+use std::collections::HashMap;
+
+use crate::request::RequestId;
+
+/// Block-granular paged allocator for one instance's KV memory.
+#[derive(Debug)]
+pub struct KvManager {
+    /// Tokens per block (vLLM-style page size).
+    block_tokens: usize,
+    /// Total blocks in the pool.
+    total_blocks: usize,
+    /// Free block indices (LIFO for locality).
+    free: Vec<u32>,
+    /// Per-request allocation: block list + exact token count.
+    allocs: HashMap<RequestId, Alloc>,
+}
+
+#[derive(Debug, Clone)]
+struct Alloc {
+    blocks: Vec<u32>,
+    tokens: usize,
+}
+
+/// Why an allocation failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum KvError {
+    #[error("out of KV blocks")]
+    OutOfMemory,
+    #[error("unknown request")]
+    UnknownRequest,
+}
+
+impl KvManager {
+    /// Build a pool covering `capacity_tokens`, paged into `block_tokens`.
+    pub fn new(capacity_tokens: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0);
+        let total_blocks = capacity_tokens / block_tokens;
+        KvManager {
+            block_tokens,
+            total_blocks,
+            free: (0..total_blocks as u32).rev().collect(),
+            allocs: HashMap::new(),
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free.len()
+    }
+
+    /// Tokens that can still be admitted (conservative: whole free blocks).
+    pub fn free_tokens(&self) -> usize {
+        self.free.len() * self.block_tokens
+    }
+
+    pub fn capacity_tokens(&self) -> usize {
+        self.total_blocks * self.block_tokens
+    }
+
+    /// Exact tokens currently stored for `id` (0 when absent).
+    pub fn tokens_of(&self, id: RequestId) -> usize {
+        self.allocs.get(&id).map(|a| a.tokens).unwrap_or(0)
+    }
+
+    pub fn holds(&self, id: RequestId) -> bool {
+        self.allocs.contains_key(&id)
+    }
+
+    pub fn resident_requests(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.allocs.keys().copied()
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Can `tokens` more tokens be admitted for a *new* request?
+    pub fn can_fit(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.free.len()
+    }
+
+    /// Admit a request with an initial token count (post-prefill KV).
+    pub fn admit(&mut self, id: RequestId, tokens: usize) -> Result<(), KvError> {
+        debug_assert!(!self.allocs.contains_key(&id), "double admit {id}");
+        let need = self.blocks_for(tokens.max(1));
+        if need > self.free.len() {
+            return Err(KvError::OutOfMemory);
+        }
+        let blocks = self.free.split_off(self.free.len() - need);
+        self.allocs.insert(
+            id,
+            Alloc {
+                blocks,
+                tokens: tokens.max(1),
+            },
+        );
+        Ok(())
+    }
+
+    /// Grow a resident request by `extra` tokens (decode step). On failure
+    /// the request keeps its current allocation.
+    pub fn grow(&mut self, id: RequestId, extra: usize) -> Result<(), KvError> {
+        let alloc = self.allocs.get_mut(&id).ok_or(KvError::UnknownRequest)?;
+        let new_tokens = alloc.tokens + extra;
+        let need = new_tokens.div_ceil(self.block_tokens);
+        let have = alloc.blocks.len();
+        if need > have {
+            let want = need - have;
+            if want > self.free.len() {
+                return Err(KvError::OutOfMemory);
+            }
+            let mut new_blocks = self.free.split_off(self.free.len() - want);
+            alloc.blocks.append(&mut new_blocks);
+        }
+        alloc.tokens = new_tokens;
+        Ok(())
+    }
+
+    /// Release a request's blocks (finish, eviction, or migration-out).
+    pub fn release(&mut self, id: RequestId) -> Result<usize, KvError> {
+        let alloc = self.allocs.remove(&id).ok_or(KvError::UnknownRequest)?;
+        let tokens = alloc.tokens;
+        self.free.extend(alloc.blocks);
+        Ok(tokens)
+    }
+
+    /// Blocks needed to admit `tokens` (exposed for eviction planning).
+    pub fn blocks_needed(&self, tokens: usize) -> usize {
+        self.blocks_for(tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> KvManager {
+        KvManager::new(1600, 16) // 100 blocks of 16 tokens
+    }
+
+    #[test]
+    fn admit_grow_release_roundtrip() {
+        let mut m = mgr();
+        assert_eq!(m.total_blocks(), 100);
+        m.admit(1, 100).unwrap(); // 7 blocks
+        assert_eq!(m.used_blocks(), 7);
+        assert_eq!(m.tokens_of(1), 100);
+        m.grow(1, 12).unwrap(); // 112 tokens -> still 7 blocks
+        assert_eq!(m.used_blocks(), 7);
+        m.grow(1, 1).unwrap(); // 113 -> 8 blocks
+        assert_eq!(m.used_blocks(), 8);
+        assert_eq!(m.release(1).unwrap(), 113);
+        assert_eq!(m.used_blocks(), 0);
+        assert_eq!(m.free_blocks(), 100);
+    }
+
+    #[test]
+    fn admission_control() {
+        let mut m = mgr();
+        assert!(m.can_fit(1600));
+        assert!(!m.can_fit(1601));
+        m.admit(1, 1590).unwrap(); // 100 blocks (1590/16 -> 100)
+        assert_eq!(m.free_blocks(), 0);
+        assert_eq!(m.admit(2, 1), Err(KvError::OutOfMemory));
+        m.release(1).unwrap();
+        m.admit(2, 1).unwrap();
+        assert_eq!(m.used_blocks(), 1);
+    }
+
+    #[test]
+    fn grow_failure_keeps_allocation() {
+        let mut m = KvManager::new(64, 16); // 4 blocks
+        m.admit(1, 48).unwrap(); // 3 blocks
+        m.admit(2, 16).unwrap(); // 1 block -> pool full
+        assert_eq!(m.grow(1, 32), Err(KvError::OutOfMemory));
+        assert_eq!(m.tokens_of(1), 48); // unchanged
+        m.release(2).unwrap();
+        m.grow(1, 16).unwrap(); // now fits
+        assert_eq!(m.tokens_of(1), 64);
+    }
+
+    #[test]
+    fn unknown_request_errors() {
+        let mut m = mgr();
+        assert_eq!(m.grow(9, 1), Err(KvError::UnknownRequest));
+        assert_eq!(m.release(9), Err(KvError::UnknownRequest));
+        assert_eq!(m.tokens_of(9), 0);
+        assert!(!m.holds(9));
+    }
+
+    #[test]
+    fn zero_token_admit_rounds_up() {
+        let mut m = mgr();
+        m.admit(1, 0).unwrap();
+        assert_eq!(m.tokens_of(1), 1);
+        assert_eq!(m.used_blocks(), 1);
+    }
+
+    #[test]
+    fn no_block_leaks_under_churn() {
+        // Property: after any sequence of admit/grow/release, free + used
+        // block counts always equal the pool size, and blocks are unique.
+        let mut m = KvManager::new(3200, 16);
+        let mut rng = crate::util::rng::Pcg::seeded(5);
+        let mut live: Vec<RequestId> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..2000 {
+            match rng.below(3) {
+                0 => {
+                    let toks = rng.below(200) + 1;
+                    if m.admit(next_id, toks).is_ok() {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 if !live.is_empty() => {
+                    let id = live[rng.below(live.len())];
+                    let _ = m.grow(id, rng.below(40) + 1);
+                }
+                2 if !live.is_empty() => {
+                    let idx = rng.below(live.len());
+                    let id = live.swap_remove(idx);
+                    m.release(id).unwrap();
+                }
+                _ => {}
+            }
+            assert_eq!(m.used_blocks() + m.free_blocks(), m.total_blocks());
+        }
+        for id in live {
+            m.release(id).unwrap();
+        }
+        assert_eq!(m.free_blocks(), m.total_blocks());
+        // Uniqueness: freeing everything restored exactly the pool.
+        let mut all = m.free.clone();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), m.total_blocks());
+    }
+}

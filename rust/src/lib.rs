@@ -1,0 +1,25 @@
+//! OOCO: latency-disaggregated architecture for online-offline co-located
+//! LLM serving — a three-layer Rust + JAX + Pallas reproduction.
+//!
+//! Layer 3 (this crate) owns the serving runtime: the latency-constraint
+//! disaggregated coordinator (§3), the roofline performance model (§3.3),
+//! the discrete-event cluster simulator used for the paper's evaluation
+//! sweeps, and the real PJRT engine that executes the AOT artifacts built
+//! by `python/compile` (Layers 1–2, build-time only).
+//!
+//! See DESIGN.md for the module inventory and the per-experiment index.
+
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod instance;
+pub mod kvcache;
+pub mod metrics;
+pub mod perfmodel;
+pub mod request;
+pub mod runtime;
+pub mod sim;
+pub mod sweep;
+pub mod testutil;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,188 @@
+//! OOCO command-line launcher.
+//!
+//! Subcommands:
+//!   serve      — real PJRT engine over the AOT artifacts (tiny model)
+//!   simulate   — discrete-event cluster simulation at 7B/72B scale
+//!   roofline   — query the performance model
+//!   trace      — generate and export a workload trace (JSON)
+
+use ooco::config::{ModelSpec, ServingConfig};
+use ooco::coordinator::Policy;
+use ooco::sim::{simulate, SimConfig};
+use ooco::trace::datasets::DatasetProfile;
+use ooco::trace::generator::{offline_trace, online_trace};
+use ooco::trace::io::save_trace;
+use ooco::trace::scale_trace;
+use ooco::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let all: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match all.split_first() {
+        Some((c, rest)) if !c.starts_with("--") => (c.as_str(), rest.to_vec()),
+        _ => {
+            print_usage();
+            return Ok(());
+        }
+    };
+    let args = Args::parse(rest);
+    ooco::util::logging::set_level_from_str(args.str("log", "info"));
+
+    match cmd {
+        "serve" => cmd_serve(&args),
+        "simulate" => cmd_simulate(&args),
+        "roofline" => cmd_roofline(&args),
+        "trace" => cmd_trace(&args),
+        other => {
+            print_usage();
+            anyhow::bail!("unknown subcommand `{other}`")
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "ooco — latency-disaggregated online-offline co-located LLM serving
+
+USAGE: ooco <serve|simulate|roofline|trace> [--flags]
+
+  serve     --duration 20 --online-rate 1 --offline-qps 1 --policy ooco
+            [--artifacts artifacts] [--seed 42]
+  simulate  --model 7b --dataset azure-conv --online-rate 0.5
+            --offline-qps 10 --duration 1800 --policy ooco [--seed 42]
+  roofline  --model 7b --hw 910c --batch 128 --kv-len 1000 --prompt 1892
+  trace     --dataset azure-conv --rate 1.0 --duration 3600 --scale 1.0
+            --out trace.json [--offline-qps 0]"
+    );
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use ooco::engine::{serve_trace_with_runtime, EngineConfig};
+    use ooco::runtime::Runtime;
+    use ooco::trace::datasets::LengthProfile;
+
+    let dir = std::path::PathBuf::from(args.str("artifacts", "artifacts"));
+    let rt = Runtime::load(&dir)?;
+    let duration = args.f64("duration", 20.0);
+    let seed = args.u64("seed", 42);
+
+    let max_prompt = rt.manifest.smax / 2;
+    let mut online_ds = DatasetProfile::azure_conv();
+    online_ds.prompt = LengthProfile::new(96.0, 0.6, 8, max_prompt);
+    online_ds.output = LengthProfile::new(10.0, 0.5, 1, 16);
+    let mut offline_ds = DatasetProfile::ooc_offline();
+    offline_ds.prompt = LengthProfile::new(128.0, 0.6, 8, max_prompt);
+    offline_ds.output = LengthProfile::new(12.0, 0.5, 1, 16);
+    let trace = online_trace(online_ds, args.f64("online-rate", 1.0), duration, seed)
+        .merge(offline_trace(
+            offline_ds,
+            args.f64("offline-qps", 1.0),
+            duration,
+            seed + 1,
+        ));
+
+    let cfg = EngineConfig {
+        policy: Policy::by_name(args.str("policy", "ooco"))?,
+        max_output: args.usize("max-output", 16),
+        seed,
+        ..Default::default()
+    };
+    let out = serve_trace_with_runtime(&rt, &trace, &cfg)?;
+    println!("{}", out.report.summary_line());
+    println!(
+        "prefills {} strict_steps {} relaxed_steps {} wall {:.1}s",
+        out.prefills, out.strict_steps, out.relaxed_steps, out.wall_s
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let seed = args.u64("seed", 42);
+    let duration = args.f64("duration", 1800.0);
+    let online_ds = DatasetProfile::by_name(args.str("dataset", "azure-conv"))?;
+    let trace = online_trace(online_ds, args.f64("online-rate", 0.5), duration, seed)
+        .merge(offline_trace(
+            DatasetProfile::ooc_offline(),
+            args.f64("offline-qps", 10.0),
+            duration,
+            seed + 1,
+        ));
+    // Config file first (e.g. configs/serve_7b_910c.json), flags override.
+    let mut serving = match args.opt_str("config") {
+        Some(path) => ServingConfig::from_file(std::path::Path::new(path))?,
+        None => ServingConfig::preset_7b(),
+    };
+    if let Some(m) = args.opt_str("model") {
+        serving.model = ModelSpec::by_name(m)?;
+    }
+    let mut cfg = SimConfig::new(serving, Policy::by_name(args.str("policy", "ooco"))?);
+    if args.str("overload", "best-effort") == "shed" {
+        cfg.overload_mode = ooco::coordinator::OverloadMode::Shed;
+    }
+    cfg.seed = seed;
+    let res = simulate(&trace, &cfg);
+    println!("{}", res.report.summary_line());
+    println!(
+        "strict util {:.1}% relaxed util {:.1}% migrations {} evictions {} preemptions {}",
+        res.strict_utilization * 100.0,
+        res.relaxed_utilization * 100.0,
+        res.migrations,
+        res.evictions,
+        res.preemptions
+    );
+    Ok(())
+}
+
+fn cmd_roofline(args: &Args) -> anyhow::Result<()> {
+    use ooco::perfmodel::{BatchStats, PerfModel};
+    let model = ModelSpec::by_name(args.str("model", "7b"))?;
+    let hw = ooco::config::HardwareProfile::by_name(args.str("hw", "910c"))?;
+    let pm = PerfModel::new(model, hw);
+    let batch = args.usize("batch", 128);
+    let kv = args.usize("kv-len", 1000);
+    let prompt = args.usize("prompt", 1892);
+    println!(
+        "prefill({prompt}) = {:.2} ms | decode({batch}x{kv}) = {:.2} ms | bs_sat {} | kv_cap {}",
+        pm.prefill_latency(prompt) * 1e3,
+        pm.decode_latency(BatchStats::new(batch, batch * kv)) * 1e3,
+        pm.bs_sat(),
+        pm.max_kv_tokens()
+    );
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let seed = args.u64("seed", 42);
+    let duration = args.f64("duration", 3600.0);
+    let ds = DatasetProfile::by_name(args.str("dataset", "azure-conv"))?;
+    let mut trace = online_trace(ds, args.f64("rate", 1.0), duration, seed);
+    let offline_qps = args.f64("offline-qps", 0.0);
+    if offline_qps > 0.0 {
+        trace = trace.merge(offline_trace(
+            DatasetProfile::ooc_offline(),
+            offline_qps,
+            duration,
+            seed + 1,
+        ));
+    }
+    let scale = args.f64("scale", 1.0);
+    if (scale - 1.0).abs() > 1e-9 {
+        trace = scale_trace(&trace, scale, seed + 2);
+    }
+    let out = std::path::PathBuf::from(args.str("out", "trace.json"));
+    save_trace(&trace, &out)?;
+    println!(
+        "wrote {} requests ({} online / {} offline) to {}",
+        trace.len(),
+        trace.count_class(ooco::request::Class::Online),
+        trace.count_class(ooco::request::Class::Offline),
+        out.display()
+    );
+    Ok(())
+}

@@ -1,0 +1,268 @@
+//! Serving metrics: TTFT/TPOT, SLO violation accounting, throughput.
+//!
+//! `Recorder` ingests finished requests (from the simulator or the real
+//! engine) and produces the quantities the paper's evaluation reports:
+//! online SLO violation rate (§5.2's 3% threshold), offline token
+//! throughput, and latency percentiles.
+
+use crate::config::SloSpec;
+use crate::request::{Class, Request};
+use crate::util::stats::Summary;
+
+/// Outcome snapshot for one finished (or dropped) request.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub class: Class,
+    pub arrival: f64,
+    pub prompt_len: usize,
+    pub output_len: usize,
+    pub ttft: Option<f64>,
+    pub avg_tpot: Option<f64>,
+    pub finished_at: Option<f64>,
+    pub evictions: u32,
+}
+
+impl RequestRecord {
+    pub fn from_request(r: &Request) -> Self {
+        RequestRecord {
+            id: r.id,
+            class: r.class,
+            arrival: r.arrival,
+            prompt_len: r.prompt_len,
+            output_len: r.output_len,
+            ttft: r.ttft(),
+            avg_tpot: r.avg_tpot(),
+            finished_at: r.finished_at,
+            evictions: r.evictions,
+        }
+    }
+
+    /// Does this (online) request violate its SLO? Unfinished requests and
+    /// requests with no recorded first token count as violations.
+    pub fn violates(&self, slo: &SloSpec) -> bool {
+        match (self.ttft, self.finished_at) {
+            (Some(ttft), Some(_)) => {
+                ttft > slo.ttft
+                    || self.avg_tpot.map(|t| t > slo.tpot).unwrap_or(false)
+            }
+            _ => true,
+        }
+    }
+}
+
+/// Aggregated experiment metrics.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub duration_s: f64,
+    pub online_total: usize,
+    pub online_finished: usize,
+    pub online_violations: usize,
+    pub online_violation_rate: f64,
+    pub ttft: Summary,
+    pub tpot: Summary,
+    pub offline_total: usize,
+    pub offline_finished: usize,
+    /// Offline output tokens per second (the paper's offline throughput).
+    pub offline_token_throughput: f64,
+    /// Offline finished requests per second.
+    pub offline_request_throughput: f64,
+    /// Total offline tokens recomputed due to evictions.
+    pub offline_evictions: u64,
+}
+
+impl Report {
+    pub fn meets_slo(&self, slo: &SloSpec) -> bool {
+        self.online_violation_rate <= slo.violation_threshold
+    }
+
+    /// One-line summary for bench output.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "online {}/{} fin, viol {:.2}% | ttft p50 {:.3}s p99 {:.3}s | tpot p50 {:.1}ms p99 {:.1}ms | offline {}/{} fin, {:.1} tok/s",
+            self.online_finished,
+            self.online_total,
+            self.online_violation_rate * 100.0,
+            self.ttft.p50,
+            self.ttft.p99,
+            self.tpot.p50 * 1e3,
+            self.tpot.p99 * 1e3,
+            self.offline_finished,
+            self.offline_total,
+            self.offline_token_throughput,
+        )
+    }
+}
+
+/// Collects per-request records during a run.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    records: Vec<RequestRecord>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, r: &Request) {
+        self.records.push(RequestRecord::from_request(r));
+    }
+
+    pub fn push(&mut self, rec: RequestRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    /// Build the aggregate report. `duration_s` is the observation window
+    /// used for throughput denominators.
+    pub fn report(&self, slo: &SloSpec, duration_s: f64) -> Report {
+        let online: Vec<&RequestRecord> = self
+            .records
+            .iter()
+            .filter(|r| r.class == Class::Online)
+            .collect();
+        let offline: Vec<&RequestRecord> = self
+            .records
+            .iter()
+            .filter(|r| r.class == Class::Offline)
+            .collect();
+
+        let online_finished = online.iter().filter(|r| r.finished_at.is_some()).count();
+        let online_violations = online.iter().filter(|r| r.violates(slo)).count();
+        let ttfts: Vec<f64> = online.iter().filter_map(|r| r.ttft).collect();
+        let tpots: Vec<f64> = online.iter().filter_map(|r| r.avg_tpot).collect();
+
+        let offline_finished: Vec<&&RequestRecord> = offline
+            .iter()
+            .filter(|r| r.finished_at.is_some())
+            .collect();
+        let offline_tokens: f64 = offline_finished
+            .iter()
+            .map(|r| r.output_len as f64)
+            .sum();
+        let dur = duration_s.max(1e-9);
+
+        Report {
+            duration_s,
+            online_total: online.len(),
+            online_finished,
+            online_violations,
+            online_violation_rate: if online.is_empty() {
+                0.0
+            } else {
+                online_violations as f64 / online.len() as f64
+            },
+            ttft: Summary::of(&ttfts),
+            tpot: Summary::of(&tpots),
+            offline_total: offline.len(),
+            offline_finished: offline_finished.len(),
+            offline_token_throughput: offline_tokens / dur,
+            offline_request_throughput: offline_finished.len() as f64 / dur,
+            offline_evictions: offline.iter().map(|r| r.evictions as u64).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finished_online(id: u64, ttft: f64, tpot: f64, out: usize) -> RequestRecord {
+        RequestRecord {
+            id,
+            class: Class::Online,
+            arrival: 0.0,
+            prompt_len: 100,
+            output_len: out,
+            ttft: Some(ttft),
+            avg_tpot: Some(tpot),
+            finished_at: Some(ttft + tpot * (out - 1) as f64),
+            evictions: 0,
+        }
+    }
+
+    fn finished_offline(id: u64, out: usize, done: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            class: Class::Offline,
+            arrival: 0.0,
+            prompt_len: 100,
+            output_len: out,
+            ttft: Some(1.0),
+            avg_tpot: Some(0.2),
+            finished_at: Some(done),
+            evictions: 1,
+        }
+    }
+
+    #[test]
+    fn violation_rules() {
+        let slo = SloSpec {
+            ttft: 5.0,
+            tpot: 0.1,
+            violation_threshold: 0.03,
+        };
+        assert!(!finished_online(1, 2.0, 0.05, 10).violates(&slo));
+        assert!(finished_online(2, 6.0, 0.05, 10).violates(&slo)); // TTFT
+        assert!(finished_online(3, 2.0, 0.15, 10).violates(&slo)); // TPOT
+        // Unfinished counts as violation.
+        let mut r = finished_online(4, 2.0, 0.05, 10);
+        r.finished_at = None;
+        assert!(r.violates(&slo));
+        let mut r = finished_online(5, 2.0, 0.05, 10);
+        r.ttft = None;
+        assert!(r.violates(&slo));
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let slo = SloSpec::default();
+        let mut rec = Recorder::new();
+        rec.push(finished_online(1, 1.0, 0.05, 100));
+        rec.push(finished_online(2, 9.0, 0.05, 100)); // ttft violation
+        rec.push(finished_offline(3, 500, 50.0));
+        rec.push(finished_offline(4, 300, 80.0));
+        let rep = rec.report(&slo, 100.0);
+        assert_eq!(rep.online_total, 2);
+        assert_eq!(rep.online_violations, 1);
+        assert!((rep.online_violation_rate - 0.5).abs() < 1e-12);
+        assert_eq!(rep.offline_finished, 2);
+        assert!((rep.offline_token_throughput - 8.0).abs() < 1e-12);
+        assert!((rep.offline_request_throughput - 0.02).abs() < 1e-12);
+        assert_eq!(rep.offline_evictions, 2);
+        assert!(!rep.meets_slo(&slo)); // 50% > 3%
+    }
+
+    #[test]
+    fn empty_report() {
+        let rep = Recorder::new().report(&SloSpec::default(), 10.0);
+        assert_eq!(rep.online_total, 0);
+        assert_eq!(rep.online_violation_rate, 0.0);
+        assert!(rep.meets_slo(&SloSpec::default()));
+        assert!(!rep.summary_line().is_empty());
+    }
+
+    #[test]
+    fn from_request_snapshot() {
+        let mut r = Request::new(7, Class::Online, 10.0, 50, 3);
+        r.mark_first_token(11.0);
+        r.mark_token(11.5);
+        r.mark_token(12.0);
+        let rec = RequestRecord::from_request(&r);
+        assert_eq!(rec.ttft, Some(1.0));
+        assert_eq!(rec.finished_at, Some(12.0));
+        assert!((rec.avg_tpot.unwrap() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,202 @@
+//! O(1) decode-batch aggregates.
+//!
+//! The latency predictor only depends on `(batch_size, total_kv_tokens)`
+//! (see `roofline.rs`), so schedulers carry this tiny value type instead of
+//! walking request lists. `with`/`without` make Algorithm 2's
+//! `L(B ∪ {r})` probes allocation-free, and `PrefixSums` supports its
+//! binary-search step over length-sorted candidates.
+
+/// Aggregates describing one decode iteration's batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BatchStats {
+    /// Number of requests in the batch (each contributes one query token).
+    pub size: usize,
+    /// Sum over requests of their current KV length (attention tokens read).
+    pub total_kv_tokens: usize,
+}
+
+impl BatchStats {
+    pub fn new(size: usize, total_kv_tokens: usize) -> Self {
+        BatchStats {
+            size,
+            total_kv_tokens,
+        }
+    }
+
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.size == 0
+    }
+
+    /// Batch plus one request of KV length `kv_len`.
+    #[inline]
+    pub fn with(self, kv_len: usize) -> Self {
+        BatchStats {
+            size: self.size + 1,
+            total_kv_tokens: self.total_kv_tokens + kv_len,
+        }
+    }
+
+    /// Batch minus one request of KV length `kv_len`.
+    #[inline]
+    pub fn without(self, kv_len: usize) -> Self {
+        debug_assert!(self.size >= 1 && self.total_kv_tokens >= kv_len);
+        BatchStats {
+            size: self.size - 1,
+            total_kv_tokens: self.total_kv_tokens - kv_len,
+        }
+    }
+
+    /// Batch plus `count` requests totalling `tokens` KV tokens.
+    #[inline]
+    pub fn with_group(self, count: usize, tokens: usize) -> Self {
+        BatchStats {
+            size: self.size + count,
+            total_kv_tokens: self.total_kv_tokens + tokens,
+        }
+    }
+
+    pub fn mean_kv_len(&self) -> f64 {
+        if self.size == 0 {
+            0.0
+        } else {
+            self.total_kv_tokens as f64 / self.size as f64
+        }
+    }
+}
+
+/// Prefix sums over a length-sorted candidate list: `stats_of_prefix(k)`
+/// answers "what would the batch look like with the first k candidates
+/// added" in O(1), which turns Algorithm 2's subset search into a plain
+/// binary search.
+#[derive(Debug, Clone)]
+pub struct PrefixSums {
+    sums: Vec<usize>,
+}
+
+impl PrefixSums {
+    pub fn of(lengths: &[usize]) -> Self {
+        let mut sums = Vec::with_capacity(lengths.len() + 1);
+        sums.push(0);
+        let mut acc = 0usize;
+        for &l in lengths {
+            acc += l;
+            sums.push(acc);
+        }
+        PrefixSums { sums }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sums.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total tokens in the first `k` candidates.
+    #[inline]
+    pub fn prefix_tokens(&self, k: usize) -> usize {
+        self.sums[k]
+    }
+
+    /// `base` extended with the first `k` candidates.
+    #[inline]
+    pub fn extend(&self, base: BatchStats, k: usize) -> BatchStats {
+        base.with_group(k, self.sums[k])
+    }
+
+    /// Largest `k` such that `pred(extend(base, k))` holds, assuming `pred`
+    /// is monotone (true for small prefixes, false beyond some point).
+    pub fn max_prefix<F: Fn(BatchStats) -> bool>(
+        &self,
+        base: BatchStats,
+        pred: F,
+    ) -> usize {
+        let (mut lo, mut hi) = (0usize, self.len());
+        // Invariant: pred holds at lo; fails beyond hi (or hi untested-ok).
+        if !pred(self.extend(base, 0)) {
+            return 0;
+        }
+        while lo < hi {
+            let mid = lo + (hi - lo + 1) / 2;
+            if pred(self.extend(base, mid)) {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_without_inverse() {
+        let b = BatchStats::new(5, 900);
+        assert_eq!(b.with(100).without(100), b);
+        assert_eq!(b.with(0).size, 6);
+        assert_eq!(b.with_group(3, 250), BatchStats::new(8, 1150));
+    }
+
+    #[test]
+    fn mean_kv() {
+        assert_eq!(BatchStats::empty().mean_kv_len(), 0.0);
+        assert_eq!(BatchStats::new(4, 100).mean_kv_len(), 25.0);
+    }
+
+    #[test]
+    fn prefix_sums_basic() {
+        let p = PrefixSums::of(&[10, 20, 30]);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.prefix_tokens(0), 0);
+        assert_eq!(p.prefix_tokens(2), 30);
+        assert_eq!(p.prefix_tokens(3), 60);
+        let b = p.extend(BatchStats::new(1, 5), 3);
+        assert_eq!(b, BatchStats::new(4, 65));
+    }
+
+    #[test]
+    fn max_prefix_monotone_search() {
+        let p = PrefixSums::of(&[10, 10, 10, 10, 10]);
+        let base = BatchStats::empty();
+        // Allow at most 35 total tokens -> k = 3.
+        let k = p.max_prefix(base, |b| b.total_kv_tokens <= 35);
+        assert_eq!(k, 3);
+        // Everything fits.
+        assert_eq!(p.max_prefix(base, |b| b.total_kv_tokens <= 1000), 5);
+        // Nothing fits.
+        assert_eq!(p.max_prefix(base, |b| b.total_kv_tokens <= 5 && b.size == 0), 0);
+    }
+
+    #[test]
+    fn max_prefix_empty_list() {
+        let p = PrefixSums::of(&[]);
+        assert_eq!(p.max_prefix(BatchStats::empty(), |_| true), 0);
+    }
+
+    #[test]
+    fn max_prefix_matches_linear_scan() {
+        // Property: binary search result equals the obvious linear scan.
+        let lengths: Vec<usize> = (1..=40).map(|i| (i * 13) % 37 + 1).collect();
+        let mut sorted = lengths.clone();
+        sorted.sort_unstable();
+        let p = PrefixSums::of(&sorted);
+        for cap in [0usize, 5, 50, 200, 400, 10_000] {
+            let base = BatchStats::new(2, 3);
+            let pred =
+                |b: BatchStats| b.total_kv_tokens.saturating_sub(3) <= cap;
+            let want = (0..=sorted.len())
+                .take_while(|&k| pred(p.extend(base, k)))
+                .last()
+                .unwrap_or(0);
+            assert_eq!(p.max_prefix(base, pred), want, "cap {cap}");
+        }
+    }
+}

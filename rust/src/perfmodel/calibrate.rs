@@ -1,0 +1,153 @@
+//! Calibration of achievable-rate parameters from measured latencies.
+//!
+//! The paper obtains Table 4's achievable FLOPs/bandwidth "through a small
+//! amount of profiling data". This module does the same for our substrate:
+//! given measured `(batch-or-seq, latency)` samples from the real PJRT
+//! engine, it fits the hardware profile's achievable rates and static
+//! overheads by coordinate descent on mean absolute relative error — then
+//! `bench_perfmodel_accuracy` replicates the paper's ~5% error claim on our
+//! testbed.
+
+use crate::config::{HardwareProfile, ModelSpec};
+
+use super::batch::BatchStats;
+use super::roofline::PerfModel;
+
+/// One measured iteration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    pub kind: SampleKind,
+    pub latency_s: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SampleKind {
+    /// Single-request prefill with this prompt length.
+    Prefill { prompt_len: usize },
+    /// Decode iteration with these aggregates.
+    Decode { batch: BatchStats },
+}
+
+/// Mean absolute relative error of a profile against samples.
+pub fn mean_abs_rel_error(
+    model: &ModelSpec,
+    hw: &HardwareProfile,
+    samples: &[Sample],
+) -> f64 {
+    let pm = PerfModel::new(model.clone(), hw.clone());
+    let mut total = 0.0;
+    for s in samples {
+        let pred = match s.kind {
+            SampleKind::Prefill { prompt_len } => pm.prefill_latency(prompt_len),
+            SampleKind::Decode { batch } => pm.decode_latency(batch),
+        };
+        total += ((pred - s.latency_s) / s.latency_s).abs();
+    }
+    total / samples.len().max(1) as f64
+}
+
+/// Fit achievable rates + overheads by coordinate descent. Starts from
+/// `initial`, multiplicatively perturbs one parameter at a time, keeps
+/// improvements; converges in a few rounds for this smooth objective.
+pub fn calibrate(
+    model: &ModelSpec,
+    initial: &HardwareProfile,
+    samples: &[Sample],
+    rounds: usize,
+) -> HardwareProfile {
+    let mut best = initial.clone();
+    let mut best_err = mean_abs_rel_error(model, &best, samples);
+
+    // (accessor, is_rate): rates are scaled, overheads too (both positive).
+    let fields: &[fn(&mut HardwareProfile) -> &mut f64] = &[
+        |h| &mut h.flops_gemm,
+        |h| &mut h.flops_attn_prefill,
+        |h| &mut h.flops_attn_decode,
+        |h| &mut h.bw_gemm,
+        |h| &mut h.bw_attn,
+        |h| &mut h.overhead_prefill,
+        |h| &mut h.overhead_decode,
+    ];
+
+    let mut step = 0.5; // +/-50% first round, shrinking
+    for _ in 0..rounds {
+        for field in fields {
+            for factor in [1.0 + step, 1.0 / (1.0 + step)] {
+                let mut cand = best.clone();
+                *field(&mut cand) *= factor;
+                let err = mean_abs_rel_error(model, &cand, samples);
+                if err < best_err {
+                    best_err = err;
+                    best = cand;
+                }
+            }
+        }
+        step *= 0.6;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Generate samples from a known "ground truth" profile and check that
+    /// calibration starting from a perturbed profile recovers low error.
+    #[test]
+    fn recovers_ground_truth_profile() {
+        let model = ModelSpec::qwen2_5_7b();
+        let truth = HardwareProfile::ascend_910c();
+        let pm = PerfModel::new(model.clone(), truth.clone());
+
+        let mut samples = Vec::new();
+        for len in [64usize, 256, 1024, 2048, 4096] {
+            samples.push(Sample {
+                kind: SampleKind::Prefill { prompt_len: len },
+                latency_s: pm.prefill_latency(len),
+            });
+        }
+        for (n, kv) in [(1usize, 800usize), (8, 6_400), (64, 64_000), (256, 400_000)] {
+            let b = BatchStats::new(n, kv);
+            samples.push(Sample {
+                kind: SampleKind::Decode { batch: b },
+                latency_s: pm.decode_latency(b),
+            });
+        }
+
+        // Start 2x off on every parameter.
+        let mut start = truth.clone();
+        start.flops_gemm *= 2.0;
+        start.bw_gemm /= 2.0;
+        start.flops_attn_decode *= 2.0;
+        start.overhead_decode *= 3.0;
+
+        let before = mean_abs_rel_error(&model, &start, &samples);
+        let fitted = calibrate(&model, &start, &samples, 12);
+        let after = mean_abs_rel_error(&model, &fitted, &samples);
+        assert!(before > 0.2, "perturbed error should be large: {before}");
+        assert!(after < 0.05, "calibrated error {after} (paper claims ~5%)");
+    }
+
+    #[test]
+    fn error_zero_for_exact_profile() {
+        let model = ModelSpec::qwen2_5_7b();
+        let hw = HardwareProfile::ascend_910c();
+        let pm = PerfModel::new(model.clone(), hw.clone());
+        let samples = vec![Sample {
+            kind: SampleKind::Decode {
+                batch: BatchStats::new(10, 10_000),
+            },
+            latency_s: pm.decode_latency(BatchStats::new(10, 10_000)),
+        }];
+        assert!(mean_abs_rel_error(&model, &hw, &samples) < 1e-12);
+    }
+
+    #[test]
+    fn empty_samples_no_panic() {
+        let model = ModelSpec::tiny();
+        let hw = HardwareProfile::cpu_tiny();
+        assert_eq!(mean_abs_rel_error(&model, &hw, &[]), 0.0);
+        let fitted = calibrate(&model, &hw, &[], 3);
+        assert_eq!(fitted, hw);
+    }
+}

@@ -1,0 +1,22 @@
+//! Roofline-based LLM inference performance model (paper §3.3).
+//!
+//! An operator-level behavioral simulator for decoder-only transformers:
+//! - [`operators`] — FLOPs/bytes per GEMM and fused-attention op (Table 3);
+//! - [`roofline`] — Eq. 1 latency prediction with Table 4's achievable-rate
+//!   parameters, O(1) in the decode batch via [`batch::BatchStats`];
+//! - [`bottleneck`] — compute/memory-bandwidth classification and the
+//!   `bs_sat` threshold Algorithm 1 branches on (§3.3.3);
+//! - [`calibrate`] — fits achievable rates from profiled samples, as the
+//!   paper does for Table 4.
+
+pub mod batch;
+pub mod bottleneck;
+pub mod calibrate;
+pub mod operators;
+pub mod roofline;
+
+pub use batch::{BatchStats, PrefixSums};
+pub use bottleneck::Bottleneck;
+pub use calibrate::{calibrate, mean_abs_rel_error, Sample, SampleKind};
+pub use operators::OpCost;
+pub use roofline::{IterCost, PerfModel};

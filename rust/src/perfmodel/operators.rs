@@ -1,0 +1,144 @@
+//! Operator-level compute/memory accounting (paper Table 3).
+//!
+//! For computation we use theoretical FLOP counts; for memory traffic we
+//! assume operators effectively use on-chip cache/buffers (the PRoof-style
+//! assumption the paper adopts) and count only the required input/output
+//! tensor bytes. The fused flash-attention kernel is modeled as a single
+//! operator so its intermediate score matrix generates no HBM traffic.
+//!
+//! Note on Table 3's attention-memory row: we account K/V bytes physically
+//! as `2·d·S_kv·H_kv·Dh` (GQA caches only `H_kv` heads). The paper's printed
+//! formula (`S_kv·D_h·H_q/H_kv`) reads as a typo for this same quantity —
+//! with it, GQA would *increase* KV traffic, contradicting §2.3's statement
+//! that MQA/GQA/MLA significantly reduce KV-cache size.
+
+use crate::config::ModelSpec;
+
+/// FLOPs + bytes for one operator instance.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct OpCost {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl OpCost {
+    pub fn add(self, other: OpCost) -> OpCost {
+        OpCost {
+            flops: self.flops + other.flops,
+            bytes: self.bytes + other.bytes,
+        }
+    }
+
+    pub fn scale(self, k: f64) -> OpCost {
+        OpCost {
+            flops: self.flops * k,
+            bytes: self.bytes * k,
+        }
+    }
+
+    /// Arithmetic intensity (FLOPs per byte) — x-axis of the roofline chart.
+    pub fn intensity(&self) -> f64 {
+        if self.bytes == 0.0 {
+            0.0
+        } else {
+            self.flops / self.bytes
+        }
+    }
+}
+
+/// GEMM: `[N, Din] x [Din, Dout]`.
+/// Compute `2·N·Din·Dout`; memory `d·(N·Din + Din·Dout + N·Dout)`.
+pub fn gemm(n: f64, d_in: f64, d_out: f64, d: f64) -> OpCost {
+    OpCost {
+        flops: 2.0 * n * d_in * d_out,
+        bytes: d * (n * d_in + d_in * d_out + n * d_out),
+    }
+}
+
+/// Fused attention for one request: Q of `s_q` tokens against `s_kv` cached
+/// tokens. Compute `4·D_h·S_q·S_kv` (QK^T + PV) with `D_h = H_q·Dh`;
+/// memory = Q + output + K + V tensor bytes.
+pub fn attention(ms: &ModelSpec, s_q: f64, s_kv: f64) -> OpCost {
+    let d = ms.bytes_per_value;
+    let d_h = (ms.q_heads * ms.head_dim) as f64;
+    let d_kv = (ms.kv_heads * ms.head_dim) as f64;
+    OpCost {
+        flops: 4.0 * d_h * s_q * s_kv,
+        bytes: d * (2.0 * s_q * d_h + 2.0 * s_kv * d_kv),
+    }
+}
+
+/// All GEMM work in one transformer layer with `n` token rows
+/// (qkv + output projection + SwiGLU gate/up/down).
+pub fn layer_gemms(ms: &ModelSpec, n: f64) -> OpCost {
+    let d = ms.bytes_per_value;
+    let h = ms.hidden as f64;
+    let qkv_out = ((ms.q_heads + 2 * ms.kv_heads) * ms.head_dim) as f64;
+    let ffn = ms.ffn as f64;
+    gemm(n, h, qkv_out, d)
+        .add(gemm(n, h, h, d)) // output projection
+        .add(gemm(n, h, ffn, d)) // gate
+        .add(gemm(n, h, ffn, d)) // up
+        .add(gemm(n, ffn, h, d)) // down
+}
+
+/// LM-head GEMM for `n` output rows.
+pub fn lm_head(ms: &ModelSpec, n: f64) -> OpCost {
+    gemm(n, ms.hidden as f64, ms.vocab as f64, ms.bytes_per_value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_formula() {
+        let c = gemm(10.0, 100.0, 200.0, 2.0);
+        assert_eq!(c.flops, 2.0 * 10.0 * 100.0 * 200.0);
+        assert_eq!(c.bytes, 2.0 * (10.0 * 100.0 + 100.0 * 200.0 + 10.0 * 200.0));
+    }
+
+    #[test]
+    fn attention_decode_vs_prefill() {
+        let ms = ModelSpec::qwen2_5_7b();
+        // Decode: one query token against 1000 cached tokens.
+        let dec = attention(&ms, 1.0, 1000.0);
+        // Prefill of the same 1000 tokens.
+        let pre = attention(&ms, 1000.0, 1000.0);
+        assert!(pre.flops > dec.flops * 500.0);
+        // Decode attention is far less compute-intense than prefill attention.
+        assert!(dec.intensity() < pre.intensity() / 100.0);
+    }
+
+    #[test]
+    fn gqa_reduces_kv_bytes() {
+        let mut mha = ModelSpec::qwen2_5_7b();
+        mha.kv_heads = mha.q_heads; // pretend MHA
+        let gqa = ModelSpec::qwen2_5_7b();
+        let b_mha = attention(&mha, 1.0, 1000.0).bytes;
+        let b_gqa = attention(&gqa, 1.0, 1000.0).bytes;
+        assert!(b_gqa < b_mha, "GQA must reduce attention memory traffic");
+    }
+
+    #[test]
+    fn layer_gemm_flops_match_param_estimate() {
+        let ms = ModelSpec::qwen2_5_7b();
+        // Per-layer GEMM FLOPs for one token ~= 2 * (per-layer matmul params)
+        let per_layer = layer_gemms(&ms, 1.0).flops;
+        let h = ms.hidden as f64;
+        let params = h * h
+            + 2.0 * h * (ms.kv_heads * ms.head_dim) as f64
+            + h * h
+            + 3.0 * h * ms.ffn as f64;
+        assert!((per_layer / (2.0 * params) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn opcost_algebra() {
+        let a = OpCost { flops: 1.0, bytes: 2.0 };
+        let b = OpCost { flops: 3.0, bytes: 4.0 };
+        let s = a.add(b).scale(2.0);
+        assert_eq!(s, OpCost { flops: 8.0, bytes: 12.0 });
+        assert_eq!(OpCost::default().intensity(), 0.0);
+    }
+}

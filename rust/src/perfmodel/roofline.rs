@@ -1,0 +1,407 @@
+//! Roofline latency model (paper §3.3.2, Eq. 1) over the operator costs.
+//!
+//! `PerfModel` binds a `ModelSpec` to a `HardwareProfile` and predicts the
+//! latency, FLOPs and memory traffic of any Prefill or Decode iteration.
+//! Decode-batch prediction is O(1) in the batch size: it only needs the
+//! `(batch_size, total_kv_tokens)` aggregates carried by
+//! [`BatchStats`](super::batch::BatchStats) — the property Algorithm 2's
+//! binary search and the migration scheduler rely on (DESIGN.md §7).
+
+use crate::config::{HardwareProfile, ModelSpec};
+
+use super::batch::BatchStats;
+use super::operators::{self, OpCost};
+
+/// Cost breakdown of one iteration (a single model forward).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct IterCost {
+    pub gemm: OpCost,
+    pub attn: OpCost,
+    /// Tensor-parallel collective time (s); 0 for TP=1.
+    pub comm_s: f64,
+    /// Static runtime overhead O_p / O_d (s).
+    pub overhead_s: f64,
+    /// Total predicted latency (s).
+    pub latency_s: f64,
+}
+
+impl IterCost {
+    pub fn total_flops(&self) -> f64 {
+        self.gemm.flops + self.attn.flops
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.gemm.bytes + self.attn.bytes
+    }
+
+    /// Achieved FLOP/s of the iteration — the y-axis of Fig. 3's roofline.
+    pub fn achieved_flops(&self) -> f64 {
+        if self.latency_s == 0.0 {
+            0.0
+        } else {
+            self.total_flops() / self.latency_s
+        }
+    }
+
+    /// Arithmetic intensity — the x-axis of Fig. 3's roofline.
+    pub fn intensity(&self) -> f64 {
+        if self.total_bytes() == 0.0 {
+            0.0
+        } else {
+            self.total_flops() / self.total_bytes()
+        }
+    }
+}
+
+/// Eq. 1: `max(flops / F_a, bytes / M_a)`.
+#[inline]
+pub fn op_latency(cost: OpCost, flops_rate: f64, bw: f64) -> f64 {
+    (cost.flops / flops_rate).max(cost.bytes / bw)
+}
+
+/// Intra-instance tensor-parallel interconnect (bytes/s) used for the
+/// per-layer collectives when `tensor_parallel > 1`.
+const TP_INTERCONNECT_BW: f64 = 200e9;
+/// Parallelization efficiency of splitting one GEMM across TP chips.
+const TP_EFFICIENCY: f64 = 0.92;
+
+/// Roofline performance model for one (model, hardware) pair.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    pub model: ModelSpec,
+    pub hw: HardwareProfile,
+    /// Effective achievable rates after tensor-parallel scaling.
+    f_gemm: f64,
+    f_attn_prefill: f64,
+    f_attn_decode: f64,
+    m_gemm: f64,
+    m_attn: f64,
+    // Cached per-layer per-row GEMM costs (hot-path optimization: the decode
+    // predictor runs inside Algorithm 2's inner loop).
+    layer_gemm_unit: OpCost,
+    layer_gemm_fixed: OpCost,
+    lm_head_unit: OpCost,
+    lm_head_fixed: OpCost,
+}
+
+impl PerfModel {
+    pub fn new(model: ModelSpec, hw: HardwareProfile) -> Self {
+        let tp = model.tensor_parallel.max(1) as f64;
+        let scale = if tp > 1.0 { tp * TP_EFFICIENCY } else { 1.0 };
+        // Decompose GEMM cost into N-proportional and fixed (weight) parts so
+        // batch-latency prediction is O(1): cost(N) = fixed + N * unit.
+        let unit = operators::layer_gemms(&model, 1.0);
+        let two = operators::layer_gemms(&model, 2.0);
+        let layer_gemm_unit = OpCost {
+            flops: two.flops - unit.flops,
+            bytes: two.bytes - unit.bytes,
+        };
+        let layer_gemm_fixed = OpCost {
+            flops: unit.flops - layer_gemm_unit.flops,
+            bytes: unit.bytes - layer_gemm_unit.bytes,
+        };
+        let lm1 = operators::lm_head(&model, 1.0);
+        let lm2 = operators::lm_head(&model, 2.0);
+        let lm_head_unit = OpCost {
+            flops: lm2.flops - lm1.flops,
+            bytes: lm2.bytes - lm1.bytes,
+        };
+        let lm_head_fixed = OpCost {
+            flops: lm1.flops - lm_head_unit.flops,
+            bytes: lm1.bytes - lm_head_unit.bytes,
+        };
+        PerfModel {
+            f_gemm: hw.flops_gemm * scale,
+            f_attn_prefill: hw.flops_attn_prefill * scale,
+            f_attn_decode: hw.flops_attn_decode * scale,
+            m_gemm: hw.bw_gemm * scale,
+            m_attn: hw.bw_attn * scale,
+            model,
+            hw,
+            layer_gemm_unit,
+            layer_gemm_fixed,
+            lm_head_unit,
+            lm_head_fixed,
+        }
+    }
+
+    fn tp_comm_s(&self, n_rows: f64) -> f64 {
+        let tp = self.model.tensor_parallel;
+        if tp <= 1 {
+            return 0.0;
+        }
+        // Two all-reduces per layer (after attention and after MLP), ring
+        // style: each chip moves ~2·(tp-1)/tp of the activation bytes.
+        let act_bytes = n_rows * self.model.hidden as f64 * self.model.bytes_per_value;
+        let per_layer =
+            2.0 * act_bytes * 2.0 * (tp as f64 - 1.0) / tp as f64 / TP_INTERCONNECT_BW;
+        per_layer * self.model.layers as f64
+    }
+
+    /// Latency of one prefill iteration over requests with the given prompt
+    /// lengths (batched prefill: GEMMs see the total token count, attention
+    /// runs per request).
+    pub fn prefill_cost(&self, prompt_lens: &[usize]) -> IterCost {
+        let total: f64 = prompt_lens.iter().map(|&s| s as f64).sum();
+        let l = self.model.layers as f64;
+        let gemm = operators::layer_gemms(&self.model, total)
+            .scale(l)
+            .add(operators::lm_head(&self.model, prompt_lens.len() as f64));
+        let mut attn = OpCost::default();
+        for &s in prompt_lens {
+            attn = attn.add(operators::attention(&self.model, s as f64, s as f64));
+        }
+        attn = attn.scale(l);
+        let comm_s = self.tp_comm_s(total);
+        let latency_s = op_latency(gemm, self.f_gemm, self.m_gemm)
+            + op_latency(attn, self.f_attn_prefill, self.m_attn)
+            + comm_s
+            + self.hw.overhead_prefill;
+        IterCost {
+            gemm,
+            attn,
+            comm_s,
+            overhead_s: self.hw.overhead_prefill,
+            latency_s,
+        }
+    }
+
+    /// Convenience: single-request prefill latency (s).
+    pub fn prefill_latency(&self, prompt_len: usize) -> f64 {
+        self.prefill_cost(&[prompt_len]).latency_s
+    }
+
+    /// Full cost breakdown of one decode iteration described by aggregates.
+    pub fn decode_cost(&self, batch: BatchStats) -> IterCost {
+        let n = batch.size as f64;
+        if batch.size == 0 {
+            return IterCost::default();
+        }
+        let l = self.model.layers as f64;
+        let gemm = OpCost {
+            flops: (self.layer_gemm_fixed.flops + n * self.layer_gemm_unit.flops) * l
+                + self.lm_head_fixed.flops
+                + n * self.lm_head_unit.flops,
+            bytes: (self.layer_gemm_fixed.bytes + n * self.layer_gemm_unit.bytes) * l
+                + self.lm_head_fixed.bytes
+                + n * self.lm_head_unit.bytes,
+        };
+        // Batched decode attention: flops/bytes are linear in the aggregates.
+        let d_h = (self.model.q_heads * self.model.head_dim) as f64;
+        let d_kv = (self.model.kv_heads * self.model.head_dim) as f64;
+        let d = self.model.bytes_per_value;
+        let tkv = batch.total_kv_tokens as f64;
+        let attn = OpCost {
+            flops: 4.0 * d_h * tkv * l,
+            bytes: d * (2.0 * n * d_h + 2.0 * tkv * d_kv) * l,
+        };
+        let comm_s = self.tp_comm_s(n);
+        let latency_s = op_latency(gemm, self.f_gemm, self.m_gemm)
+            + op_latency(attn, self.f_attn_decode, self.m_attn)
+            + comm_s
+            + self.hw.overhead_decode;
+        IterCost {
+            gemm,
+            attn,
+            comm_s,
+            overhead_s: self.hw.overhead_decode,
+            latency_s,
+        }
+    }
+
+    /// O(1) decode-iteration latency from batch aggregates — the predictor
+    /// `L(·)` in Algorithms 1 and 2.
+    #[inline]
+    pub fn decode_latency(&self, batch: BatchStats) -> f64 {
+        if batch.size == 0 {
+            return 0.0;
+        }
+        let n = batch.size as f64;
+        let l = self.model.layers as f64;
+        let gemm_flops = (self.layer_gemm_fixed.flops + n * self.layer_gemm_unit.flops)
+            * l
+            + self.lm_head_fixed.flops
+            + n * self.lm_head_unit.flops;
+        let gemm_bytes = (self.layer_gemm_fixed.bytes + n * self.layer_gemm_unit.bytes)
+            * l
+            + self.lm_head_fixed.bytes
+            + n * self.lm_head_unit.bytes;
+        let d_h = (self.model.q_heads * self.model.head_dim) as f64;
+        let d_kv = (self.model.kv_heads * self.model.head_dim) as f64;
+        let d = self.model.bytes_per_value;
+        let tkv = batch.total_kv_tokens as f64;
+        let attn_flops = 4.0 * d_h * tkv * l;
+        let attn_bytes = d * (2.0 * n * d_h + 2.0 * tkv * d_kv) * l;
+        (gemm_flops / self.f_gemm).max(gemm_bytes / self.m_gemm)
+            + (attn_flops / self.f_attn_decode).max(attn_bytes / self.m_attn)
+            + self.tp_comm_s(n)
+            + self.hw.overhead_decode
+    }
+
+    /// KV-cache transfer latency between instances (relaxed -> strict).
+    pub fn kv_transfer_latency(&self, tokens: usize) -> f64 {
+        tokens as f64 * self.model.kv_bytes_per_token() / self.hw.bw_comm
+    }
+
+    /// Per-layer share of a prefill iteration — the layer-level interruption
+    /// granularity of §3.4.1's preemption mechanism.
+    pub fn prefill_layer_latency(&self, prompt_len: usize) -> f64 {
+        self.prefill_latency(prompt_len) / self.model.layers as f64
+    }
+
+    /// Maximum KV-cache tokens one instance can hold
+    /// (capacity − weights − 5% activation reserve).
+    pub fn max_kv_tokens(&self) -> usize {
+        let tp = self.model.tensor_parallel.max(1) as f64;
+        let capacity = self.hw.mem_capacity * tp * 0.95;
+        let free = capacity - self.model.weights_bytes();
+        if free <= 0.0 {
+            return 0;
+        }
+        (free / self.model.kv_bytes_per_token()) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareProfile, ModelSpec};
+
+    fn pm7b() -> PerfModel {
+        PerfModel::new(ModelSpec::qwen2_5_7b(), HardwareProfile::ascend_910c())
+    }
+
+    #[test]
+    fn decode_latency_realistic_range() {
+        let pm = pm7b();
+        // Small batch: dominated by weight streaming + overhead, ~10-25 ms.
+        let lat = pm.decode_latency(BatchStats::new(1, 500));
+        assert!((0.005..0.04).contains(&lat), "1x500 lat {lat}");
+        // Production-size batch stays under a 100 ms TPOT bound.
+        let lat = pm.decode_latency(BatchStats::new(100, 100 * 1000));
+        assert!((0.01..0.1).contains(&lat), "100x1000 lat {lat}");
+        // Huge batch with long contexts exceeds it.
+        let lat = pm.decode_latency(BatchStats::new(800, 800 * 2500));
+        assert!(lat > 0.1, "800x2500 lat {lat}");
+    }
+
+    #[test]
+    fn prefill_latency_realistic_range() {
+        let pm = pm7b();
+        let lat = pm.prefill_latency(1892); // OOC online mean prompt
+        assert!((0.05..0.5).contains(&lat), "prefill lat {lat}");
+        // Longer prompts cost superlinearly more (attention s^2 term).
+        let l1 = pm.prefill_latency(1000);
+        let l4 = pm.prefill_latency(4000);
+        assert!(l4 > 3.5 * l1, "l1={l1} l4={l4}");
+    }
+
+    #[test]
+    fn decode_latency_monotone_in_batch_and_kv() {
+        let pm = pm7b();
+        let base = pm.decode_latency(BatchStats::new(10, 10_000));
+        assert!(pm.decode_latency(BatchStats::new(11, 11_000)) >= base);
+        assert!(pm.decode_latency(BatchStats::new(10, 20_000)) > base);
+        // More batch at same total KV also costs more GEMM rows.
+        assert!(pm.decode_latency(BatchStats::new(20, 10_000)) > base);
+    }
+
+    #[test]
+    fn decode_latency_matches_cost_breakdown() {
+        let pm = pm7b();
+        for (n, tkv) in [(1usize, 100usize), (32, 32_000), (300, 500_000)] {
+            let b = BatchStats::new(n, tkv);
+            let fast = pm.decode_latency(b);
+            let full = pm.decode_cost(b).latency_s;
+            assert!(
+                (fast - full).abs() < 1e-12,
+                "fast {fast} vs full {full}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        let pm = pm7b();
+        assert_eq!(pm.decode_latency(BatchStats::new(0, 0)), 0.0);
+        assert_eq!(pm.decode_cost(BatchStats::new(0, 0)).latency_s, 0.0);
+    }
+
+    #[test]
+    fn small_batch_decode_memory_bound_large_compute_heavy() {
+        let pm = pm7b();
+        // Batch 1 decode: GEMM time dominated by weight reads, not FLOPs.
+        let c = pm.decode_cost(BatchStats::new(1, 500));
+        assert!(c.gemm.bytes / pm.m_gemm > c.gemm.flops / pm.f_gemm);
+        // Batch 1000: compute side dominates.
+        let c = pm.decode_cost(BatchStats::new(1000, 1000 * 200));
+        assert!(c.gemm.flops / pm.f_gemm > c.gemm.bytes / pm.m_gemm);
+    }
+
+    #[test]
+    fn prefill_compute_saturated_beyond_short_lengths() {
+        let pm = pm7b();
+        // Long prefill is compute-bound (paper: beyond ~250-300 tokens).
+        let c = pm.prefill_cost(&[2000]);
+        assert!(c.gemm.flops / pm.f_gemm > c.gemm.bytes / pm.m_gemm);
+        // Very short prefill is not.
+        let c = pm.prefill_cost(&[16]);
+        assert!(c.gemm.flops / pm.f_gemm < c.gemm.bytes / pm.m_gemm);
+    }
+
+    #[test]
+    fn kv_capacity_7b_vs_72b() {
+        let pm7 = pm7b();
+        let cap7 = pm7.max_kv_tokens();
+        // ~48 GB free / 57 KB per token => several hundred thousand tokens.
+        assert!((400_000..1_200_000).contains(&cap7), "cap7 {cap7}");
+        let pm72 = PerfModel::new(
+            ModelSpec::qwen2_5_72b(),
+            HardwareProfile::ascend_910c(),
+        );
+        let cap72 = pm72.max_kv_tokens();
+        assert!(cap72 > 0, "72B TP=4 must fit");
+        assert!(cap72 < cap7, "72B holds fewer KV tokens than 7B");
+    }
+
+    #[test]
+    fn tp_adds_comm_but_scales_compute() {
+        let m1 = ModelSpec::qwen2_5_72b();
+        let mut m_tp1 = m1.clone();
+        m_tp1.tensor_parallel = 1;
+        let pm_tp4 = PerfModel::new(m1, HardwareProfile::ascend_910c());
+        let pm_tp1 = PerfModel::new(m_tp1, HardwareProfile::ascend_910c());
+        let b = BatchStats::new(64, 64_000);
+        assert!(pm_tp4.decode_latency(b) < pm_tp1.decode_latency(b));
+        assert!(pm_tp4.decode_cost(b).comm_s > 0.0);
+        assert_eq!(pm_tp1.decode_cost(b).comm_s, 0.0);
+    }
+
+    #[test]
+    fn kv_transfer_latency_scales() {
+        let pm = pm7b();
+        let t1 = pm.kv_transfer_latency(1000);
+        let t2 = pm.kv_transfer_latency(2000);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        // 1892-token prompt over 25 GB/s RDMA: a few ms.
+        let t = pm.kv_transfer_latency(1892);
+        assert!((0.001..0.02).contains(&t), "transfer {t}");
+    }
+
+    #[test]
+    fn layer_interruption_granularity_tens_of_ms() {
+        let pm = pm7b();
+        // Paper §3.4.1: layer-level preemption lands within tens of ms.
+        let per_layer = pm.prefill_layer_latency(4000);
+        assert!(per_layer < 0.05, "per-layer {per_layer}");
+    }
+
+    #[test]
+    fn roofline_points_consistent() {
+        let pm = pm7b();
+        let c = pm.decode_cost(BatchStats::new(200, 200 * 800));
+        assert!(c.achieved_flops() > 0.0);
+        assert!(c.achieved_flops() <= pm.hw.flops_gemm * 1.001);
+        assert!(c.intensity() > 0.0);
+    }
+}

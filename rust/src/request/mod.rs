@@ -1,0 +1,224 @@
+//! Request types shared by the simulator and the real engine.
+//!
+//! Requests carry their class (online = latency-sensitive, offline =
+//! cost-sensitive), prompt/output lengths, and the timing milestones the
+//! metrics layer turns into TTFT/TPOT/SLO statistics.
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// Service class — the axis the whole paper pivots on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Class {
+    /// Latency-sensitive: TTFT + TPOT SLOs apply.
+    Online,
+    /// Cost-sensitive batch work: no per-request latency constraints.
+    Offline,
+}
+
+impl Class {
+    pub fn is_online(self) -> bool {
+        matches!(self, Class::Online)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Class::Online => "online",
+            Class::Offline => "offline",
+        }
+    }
+}
+
+/// Lifecycle phase of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting for prefill.
+    Queued,
+    /// Prefill running on a latency-relaxed instance.
+    Prefilling,
+    /// KV cache in flight between instances.
+    Migrating,
+    /// Decoding (on either pool, per the latency-constraint rules).
+    Decoding,
+    /// All output tokens produced.
+    Finished,
+}
+
+/// A single inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub class: Class,
+    /// Arrival time (s since experiment start).
+    pub arrival: f64,
+    /// Prompt length in tokens.
+    pub prompt_len: usize,
+    /// Number of output tokens this request will generate (known in traces;
+    /// in the real engine it is the generation limit).
+    pub output_len: usize,
+    pub phase: Phase,
+    /// Output tokens generated so far.
+    pub generated: usize,
+    /// Time the first token was produced (prefill completion), if any.
+    pub first_token_at: Option<f64>,
+    /// Completion time, if finished.
+    pub finished_at: Option<f64>,
+    /// Times this request's offline work was evicted and re-prefilled
+    /// (recompute overhead accounting).
+    pub evictions: u32,
+}
+
+impl Request {
+    pub fn new(
+        id: RequestId,
+        class: Class,
+        arrival: f64,
+        prompt_len: usize,
+        output_len: usize,
+    ) -> Self {
+        Request {
+            id,
+            class,
+            arrival,
+            prompt_len: prompt_len.max(1),
+            output_len: output_len.max(1),
+            phase: Phase::Queued,
+            generated: 0,
+            first_token_at: None,
+            finished_at: None,
+            evictions: 0,
+        }
+    }
+
+    /// Current KV length: prompt + tokens generated so far.
+    pub fn kv_len(&self) -> usize {
+        self.prompt_len + self.generated
+    }
+
+    /// Total tokens this request will ever hold in KV.
+    pub fn final_kv_len(&self) -> usize {
+        self.prompt_len + self.output_len
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.generated >= self.output_len
+    }
+
+    /// Record prefill completion (first token) at time `t`.
+    pub fn mark_first_token(&mut self, t: f64) {
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(t);
+            self.generated = self.generated.max(1);
+        }
+    }
+
+    /// Record one decode-step token at time `t`; returns true if finished.
+    pub fn mark_token(&mut self, t: f64) -> bool {
+        self.generated += 1;
+        if self.is_finished() {
+            self.finished_at = Some(t);
+            self.phase = Phase::Finished;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Reset progress after an eviction: KV is dropped, prefill must rerun.
+    /// Already-generated tokens are part of the recompute prompt (the
+    /// standard recompute-on-restore semantics).
+    pub fn evict(&mut self) {
+        debug_assert!(!self.is_finished());
+        self.evictions += 1;
+        self.phase = Phase::Queued;
+    }
+
+    /// Prompt length a re-prefill after eviction must process.
+    pub fn recompute_len(&self) -> usize {
+        self.kv_len()
+    }
+
+    /// TTFT if the first token has been produced.
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| t - self.arrival)
+    }
+
+    /// Average TPOT over the decode phase (needs >= 2 tokens).
+    pub fn avg_tpot(&self) -> Option<f64> {
+        match (self.first_token_at, self.finished_at) {
+            (Some(first), Some(done)) if self.output_len > 1 => {
+                Some((done - first) / (self.output_len - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_and_metrics() {
+        let mut r = Request::new(1, Class::Online, 10.0, 100, 5);
+        assert_eq!(r.kv_len(), 100);
+        assert_eq!(r.final_kv_len(), 105);
+        r.mark_first_token(12.0);
+        assert_eq!(r.ttft(), Some(2.0));
+        assert_eq!(r.generated, 1);
+        assert_eq!(r.kv_len(), 101);
+        for i in 0..3 {
+            assert!(!r.mark_token(13.0 + i as f64));
+        }
+        assert!(r.mark_token(16.0));
+        assert_eq!(r.finished_at, Some(16.0));
+        // 4 decode tokens over (16 - 12) s -> 1 s/token
+        assert_eq!(r.avg_tpot(), Some(1.0));
+        assert_eq!(r.phase, Phase::Finished);
+    }
+
+    #[test]
+    fn first_token_recorded_once() {
+        let mut r = Request::new(1, Class::Online, 0.0, 10, 3);
+        r.mark_first_token(1.0);
+        r.mark_first_token(2.0);
+        assert_eq!(r.first_token_at, Some(1.0));
+    }
+
+    #[test]
+    fn eviction_recompute() {
+        let mut r = Request::new(2, Class::Offline, 0.0, 200, 100);
+        r.mark_first_token(5.0);
+        r.mark_token(6.0);
+        assert_eq!(r.generated, 2);
+        r.evict();
+        assert_eq!(r.evictions, 1);
+        assert_eq!(r.phase, Phase::Queued);
+        // Recompute must re-process prompt + generated tokens.
+        assert_eq!(r.recompute_len(), 202);
+    }
+
+    #[test]
+    fn zero_lengths_clamped() {
+        let r = Request::new(3, Class::Offline, 0.0, 0, 0);
+        assert_eq!(r.prompt_len, 1);
+        assert_eq!(r.output_len, 1);
+    }
+
+    #[test]
+    fn tpot_requires_completion() {
+        let mut r = Request::new(4, Class::Online, 0.0, 10, 1);
+        assert_eq!(r.avg_tpot(), None);
+        r.mark_first_token(1.0);
+        r.finished_at = Some(1.0);
+        // output_len == 1 -> no decode phase -> no TPOT.
+        assert_eq!(r.avg_tpot(), None);
+    }
+
+    #[test]
+    fn class_helpers() {
+        assert!(Class::Online.is_online());
+        assert!(!Class::Offline.is_online());
+        assert_eq!(Class::Offline.name(), "offline");
+    }
+}

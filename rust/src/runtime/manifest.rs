@@ -1,0 +1,176 @@
+//! Artifacts manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. The rust side never hard-codes model dimensions — they all
+//! come from here.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// One weight leaf's layout inside `weights.bin`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub num_elements: usize,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub seed: u64,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub smax: usize,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_buckets: Vec<usize>,
+    pub weights_file: String,
+    pub weights: Vec<WeightSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let v = Json::parse_file(&path)?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        if v.get("format").as_str() != Some("hlo-text") {
+            bail!("unsupported manifest format {:?}", v.get("format"));
+        }
+        let model = v.get("model");
+        let buckets = |key: &str| -> Result<Vec<usize>> {
+            v.get(key)
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("missing `{key}`"))?
+                .iter()
+                .map(|x| {
+                    x.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("non-integer bucket"))
+                })
+                .collect()
+        };
+        let mut weights = Vec::new();
+        for w in v
+            .get("weights")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing `weights`"))?
+        {
+            weights.push(WeightSpec {
+                name: w.req_str("name")?.to_string(),
+                shape: w
+                    .get("shape")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect(),
+                offset_bytes: w.req_usize("offset_bytes")?,
+                num_elements: w.req_usize("num_elements")?,
+            });
+        }
+        let m = Manifest {
+            seed: v.get("seed").as_u64().unwrap_or(0),
+            vocab: model.req_usize("vocab")?,
+            hidden: model.req_usize("hidden")?,
+            layers: model.req_usize("layers")?,
+            q_heads: model.req_usize("q_heads")?,
+            kv_heads: model.req_usize("kv_heads")?,
+            head_dim: model.req_usize("head_dim")?,
+            ffn: model.req_usize("ffn")?,
+            smax: model.req_usize("smax")?,
+            prefill_buckets: buckets("prefill_buckets")?,
+            decode_buckets: buckets("decode_buckets")?,
+            weights_file: v.req_str("weights_file")?.to_string(),
+            weights,
+        };
+        if m.prefill_buckets.is_empty() || m.decode_buckets.is_empty() {
+            bail!("manifest has empty bucket lists");
+        }
+        if m.hidden != m.q_heads * m.head_dim {
+            bail!("inconsistent manifest: hidden != q_heads * head_dim");
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{
+                "format": "hlo-text",
+                "seed": 0,
+                "model": {"vocab": 512, "hidden": 256, "layers": 4,
+                          "q_heads": 8, "kv_heads": 2, "head_dim": 32,
+                          "ffn": 512, "smax": 448, "rope_theta": 10000.0,
+                          "bytes_per_value": 4},
+                "prefill_buckets": [64, 128],
+                "decode_buckets": [1, 2, 4],
+                "weights_file": "weights.bin",
+                "weights": [
+                    {"name": "a", "shape": [2, 3], "offset_bytes": 0, "num_elements": 6},
+                    {"name": "b", "shape": [4], "offset_bytes": 24, "num_elements": 4}
+                ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        assert_eq!(m.vocab, 512);
+        assert_eq!(m.smax, 448);
+        assert_eq!(m.prefill_buckets, vec![64, 128]);
+        assert_eq!(m.weights.len(), 2);
+        assert_eq!(m.weights[1].offset_bytes, 24);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let mut v = sample();
+        if let Json::Obj(o) = &mut v {
+            o.insert("format".into(), Json::Str("protobuf".into()));
+        }
+        assert!(Manifest::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_dims() {
+        let v = Json::parse(
+            r#"{
+                "format": "hlo-text",
+                "model": {"vocab": 10, "hidden": 100, "layers": 1,
+                          "q_heads": 2, "kv_heads": 1, "head_dim": 32,
+                          "ffn": 10, "smax": 64},
+                "prefill_buckets": [8], "decode_buckets": [1],
+                "weights_file": "w.bin", "weights": []
+            }"#,
+        )
+        .unwrap();
+        assert!(Manifest::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.hidden, m.q_heads * m.head_dim);
+        assert!(!m.weights.is_empty());
+        assert_eq!(m.weights_file, "weights.bin");
+    }
+}

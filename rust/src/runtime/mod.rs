@@ -1,0 +1,280 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile` and
+//! executes them from the rust hot path. Python never runs here.
+//!
+//! Pipeline (see /opt/xla-example and DESIGN.md §4):
+//!   `artifacts/manifest.json` -> HLO text -> `HloModuleProto::from_text_file`
+//!   -> `XlaComputation` -> `PjRtClient::compile` -> `execute_b`.
+//!
+//! Weights travel as trailing HLO parameters; [`Runtime::load`] uploads them
+//! once as device-resident `PjRtBuffer`s (`weights.bin` -> buffers) so each
+//! step only copies its activations. KV caches round-trip as host `Vec<f32>`
+//! per request — the rust coordinator owns residency (paging, migration),
+//! matching the paper's architecture where KV movement is a scheduling
+//! concern.
+
+pub mod manifest;
+
+pub use manifest::Manifest;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Per-request KV cache block: `[L, Hkv, Smax, Dh]` each for K and V.
+#[derive(Debug, Clone)]
+pub struct KvBuf {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl KvBuf {
+    pub fn zeros(len: usize) -> Self {
+        KvBuf {
+            k: vec![0.0; len],
+            v: vec![0.0; len],
+        }
+    }
+}
+
+/// Prefill result: next-token logits + the request's KV cache block.
+#[derive(Debug)]
+pub struct PrefillOut {
+    pub logits: Vec<f32>,
+    pub kv: KvBuf,
+}
+
+/// One decode-batch entry: the request's last token, its position
+/// (== current KV length - 1), and its KV block (updated in place).
+pub struct DecodeEntry<'a> {
+    pub token: i32,
+    pub position: i32,
+    pub kv: &'a mut KvBuf,
+}
+
+/// Loaded PJRT runtime with all shape buckets compiled.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    prefill_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    weights: Vec<xla::PjRtBuffer>,
+}
+
+impl Runtime {
+    /// Load manifest, weights and compile every bucket executable.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt client: {e:?}"))?;
+
+        // Upload weights once as device-resident buffers.
+        let blob = std::fs::read(dir.join(&manifest.weights_file))
+            .with_context(|| "reading weights.bin")?;
+        let mut weights = Vec::with_capacity(manifest.weights.len());
+        for spec in &manifest.weights {
+            let start = spec.offset_bytes;
+            let end = start + spec.num_elements * 4;
+            if end > blob.len() {
+                bail!("weights.bin too short for {}", spec.name);
+            }
+            let floats: Vec<f32> = blob[start..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let dims: Vec<usize> = if spec.shape.is_empty() {
+                vec![1]
+            } else {
+                spec.shape.clone()
+            };
+            let buf = client
+                .buffer_from_host_buffer(&floats, &dims, None)
+                .map_err(|e| anyhow::anyhow!("weight upload {}: {e:?}", spec.name))?;
+            weights.push(buf);
+        }
+
+        let mut prefill_exes = BTreeMap::new();
+        for &s in &manifest.prefill_buckets {
+            let path = dir.join(format!("prefill_s{s}.hlo.txt"));
+            prefill_exes.insert(s, compile(&client, &path)?);
+        }
+        let mut decode_exes = BTreeMap::new();
+        for &b in &manifest.decode_buckets {
+            let path = dir.join(format!("decode_b{b}.hlo.txt"));
+            decode_exes.insert(b, compile(&client, &path)?);
+        }
+
+        Ok(Runtime {
+            manifest,
+            client,
+            prefill_exes,
+            decode_exes,
+            weights,
+        })
+    }
+
+    /// Elements in one request's K (or V) cache block.
+    pub fn kv_elems(&self) -> usize {
+        let m = &self.manifest;
+        m.layers * m.kv_heads * m.smax * m.head_dim
+    }
+
+    /// Smallest prefill bucket >= `len` (error if prompt too long).
+    pub fn prefill_bucket(&self, len: usize) -> Result<usize> {
+        self.manifest
+            .prefill_buckets
+            .iter()
+            .copied()
+            .find(|&s| s >= len)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "prompt of {len} tokens exceeds largest bucket {:?}",
+                    self.manifest.prefill_buckets.last()
+                )
+            })
+    }
+
+    /// Smallest decode bucket >= `batch`.
+    pub fn decode_bucket(&self, batch: usize) -> Result<usize> {
+        self.manifest
+            .decode_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= batch)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "decode batch {batch} exceeds largest bucket {:?}",
+                    self.manifest.decode_buckets.last()
+                )
+            })
+    }
+
+    /// Largest decode bucket (the engine's max batch size).
+    pub fn max_decode_batch(&self) -> usize {
+        *self.manifest.decode_buckets.last().unwrap_or(&1)
+    }
+
+    /// Run a prefill for one request. `tokens.len()` must be <= the largest
+    /// bucket and <= `smax - 1` (room to decode at least one token).
+    pub fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        let len = tokens.len();
+        if len == 0 {
+            bail!("empty prompt");
+        }
+        if len >= self.manifest.smax {
+            bail!("prompt {len} >= smax {}", self.manifest.smax);
+        }
+        let bucket = self.prefill_bucket(len)?;
+        let exe = &self.prefill_exes[&bucket];
+
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket, 0);
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&padded, &[bucket], None)
+            .map_err(xe)?;
+        let len_buf = self
+            .client
+            .buffer_from_host_buffer(&[len as i32], &[], None)
+            .map_err(xe)?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(2 + self.weights.len());
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        for w in &self.weights {
+            args.push(w);
+        }
+        let out = exe.execute_b::<&xla::PjRtBuffer>(&args).map_err(xe)?;
+        let lit = out[0][0].to_literal_sync().map_err(xe)?;
+        let parts = lit.to_tuple().map_err(xe)?;
+        let logits = parts[0].to_vec::<f32>().map_err(xe)?;
+        let k = parts[1].to_vec::<f32>().map_err(xe)?;
+        let v = parts[2].to_vec::<f32>().map_err(xe)?;
+        Ok(PrefillOut {
+            logits,
+            kv: KvBuf { k, v },
+        })
+    }
+
+    /// Run one decode step over a batch. Each entry's KV block is updated
+    /// in place; returns per-entry logits.
+    pub fn decode(&self, entries: &mut [DecodeEntry<'_>]) -> Result<Vec<Vec<f32>>> {
+        if entries.is_empty() {
+            return Ok(vec![]);
+        }
+        let n = entries.len();
+        let bucket = self.decode_bucket(n)?;
+        let exe = &self.decode_exes[&bucket];
+        let kv_elems = self.kv_elems();
+
+        // Assemble padded batch tensors (per-request-contiguous KV layout).
+        let mut tokens = vec![0i32; bucket];
+        let mut positions = vec![0i32; bucket];
+        let mut k = vec![0f32; bucket * kv_elems];
+        let mut v = vec![0f32; bucket * kv_elems];
+        for (i, e) in entries.iter().enumerate() {
+            tokens[i] = e.token;
+            positions[i] = e.position;
+            k[i * kv_elems..(i + 1) * kv_elems].copy_from_slice(&e.kv.k);
+            v[i * kv_elems..(i + 1) * kv_elems].copy_from_slice(&e.kv.v);
+        }
+        let m = &self.manifest;
+        let kv_dims = [bucket, m.layers, m.kv_heads, m.smax, m.head_dim];
+
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&tokens, &[bucket], None)
+            .map_err(xe)?;
+        let pos_buf = self
+            .client
+            .buffer_from_host_buffer(&positions, &[bucket], None)
+            .map_err(xe)?;
+        let k_buf = self
+            .client
+            .buffer_from_host_buffer(&k, &kv_dims, None)
+            .map_err(xe)?;
+        let v_buf = self
+            .client
+            .buffer_from_host_buffer(&v, &kv_dims, None)
+            .map_err(xe)?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(4 + self.weights.len());
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        args.push(&k_buf);
+        args.push(&v_buf);
+        for w in &self.weights {
+            args.push(w);
+        }
+        let out = exe.execute_b::<&xla::PjRtBuffer>(&args).map_err(xe)?;
+        let lit = out[0][0].to_literal_sync().map_err(xe)?;
+        let parts = lit.to_tuple().map_err(xe)?;
+        let logits_flat = parts[0].to_vec::<f32>().map_err(xe)?;
+        let k_out = parts[1].to_vec::<f32>().map_err(xe)?;
+        let v_out = parts[2].to_vec::<f32>().map_err(xe)?;
+
+        let vocab = self.manifest.vocab;
+        let mut result = Vec::with_capacity(n);
+        for (i, e) in entries.iter_mut().enumerate() {
+            result.push(logits_flat[i * vocab..(i + 1) * vocab].to_vec());
+            e.kv.k.copy_from_slice(&k_out[i * kv_elems..(i + 1) * kv_elems]);
+            e.kv.v.copy_from_slice(&v_out[i * kv_elems..(i + 1) * kv_elems]);
+        }
+        Ok(result)
+    }
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 path")?,
+    )
+    .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
+}
+
+fn xe(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e:?}")
+}

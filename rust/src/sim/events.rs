@@ -1,0 +1,127 @@
+//! Event queue for the discrete-event simulator.
+//!
+//! A binary min-heap keyed on (time, insertion order). The tie-breaking
+//! sequence number makes the simulation fully deterministic regardless of
+//! float equality between event times.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::request::RequestId;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// A request arrives at the cluster.
+    Arrival(RequestId),
+    /// A relaxed instance's step (with `seq`) finishes.
+    RelaxedStep { inst: usize, seq: u64 },
+    /// A strict instance's step finishes.
+    StrictStep { inst: usize, seq: u64 },
+    /// A KV transfer to a strict instance completes.
+    TransferDone { req: RequestId, strict: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub time: f64,
+    pub tie: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.tie == other.tie
+    }
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse order: BinaryHeap is a max-heap, we want earliest first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.tie.cmp(&self.tie))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic min-heap of simulation events.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_tie: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        debug_assert!(time.is_finite(), "non-finite event time");
+        let tie = self.next_tie;
+        self.next_tie += 1;
+        self.heap.push(Event { time, tie, kind });
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EventKind::Arrival(3));
+        q.push(1.0, EventKind::Arrival(1));
+        q.push(2.0, EventKind::Arrival(2));
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::Arrival(10));
+        q.push(1.0, EventKind::Arrival(20));
+        q.push(1.0, EventKind::Arrival(30));
+        let ids: Vec<RequestId> = std::iter::from_fn(|| q.pop())
+            .map(|e| match e.kind {
+                EventKind::Arrival(r) => r,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn len_tracking() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(1.0, EventKind::Arrival(0));
+        q.push(2.0, EventKind::StrictStep { inst: 0, seq: 1 });
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,291 @@
+//! Arrival-process generation: Figure 1's tide + burst structure.
+//!
+//! Online traffic is a non-homogeneous Poisson process whose rate function
+//! combines a sinusoidal daily tide with minute-scale multiplicative bursts;
+//! sampling uses Lewis–Shedler thinning so the generated trace is an exact
+//! draw from the rate function. Offline traffic is uniform-QPS (the paper
+//! regulates offline load that way in §5.2).
+
+use crate::request::{Class, Request};
+use crate::util::rng::Pcg;
+
+use super::datasets::DatasetProfile;
+use super::Trace;
+
+/// Arrival pattern selector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalPattern {
+    /// Tide + bursts non-homogeneous Poisson (online services).
+    Fluctuating,
+    /// Constant-rate Poisson (offline QPS control uses uniform spacing;
+    /// Poisson here models the submission jitter of batch producers).
+    UniformQps,
+}
+
+/// Everything needed to synthesize one class's trace.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub dataset: DatasetProfile,
+    pub class: Class,
+    pub pattern: ArrivalPattern,
+    /// Mean arrival rate (requests/s) before fluctuation.
+    pub base_rate: f64,
+    /// Trace duration (s).
+    pub duration_s: f64,
+    /// Phase offset into the day (s) — where on the tide the trace starts.
+    pub day_phase_s: f64,
+    pub seed: u64,
+}
+
+/// Generator holding the burst schedule derived from the spec.
+#[derive(Debug, Clone)]
+pub struct TraceGenerator {
+    spec: TraceSpec,
+    bursts: Vec<(f64, f64, f64)>, // (start, end, multiplier)
+}
+
+const DAY_S: f64 = 86_400.0;
+
+impl TraceGenerator {
+    pub fn new(spec: TraceSpec) -> Self {
+        let mut rng = Pcg::new(spec.seed, 101);
+        let fl = spec.dataset.fluctuation;
+        let mut bursts = Vec::new();
+        if spec.pattern == ArrivalPattern::Fluctuating && fl.bursts_per_hour > 0.0 {
+            let expected = fl.bursts_per_hour * spec.duration_s / 3600.0;
+            let count = rng.poisson(expected);
+            for _ in 0..count {
+                let start = rng.range_f64(0.0, spec.duration_s);
+                let dur = fl.burst_duration_s * rng.range_f64(0.5, 1.5);
+                let mult = 1.0 + (fl.burst_multiplier - 1.0) * rng.range_f64(0.5, 1.5);
+                bursts.push((start, start + dur, mult));
+            }
+            bursts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        }
+        TraceGenerator { spec, bursts }
+    }
+
+    /// Instantaneous arrival rate at time `t` (requests/s).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let fl = self.spec.dataset.fluctuation;
+        let mut rate = self.spec.base_rate;
+        if self.spec.pattern == ArrivalPattern::Fluctuating {
+            // Daily tide: trough at phase 0, peak mid-day.
+            let day_t = (t + self.spec.day_phase_s) % DAY_S;
+            let tide = 1.0
+                + fl.tide_amplitude
+                    * (2.0 * std::f64::consts::PI * day_t / DAY_S
+                        - std::f64::consts::PI / 2.0)
+                        .sin();
+            rate *= tide;
+            for &(s, e, m) in &self.bursts {
+                if t >= s && t < e {
+                    rate *= m;
+                }
+            }
+        }
+        rate.max(0.0)
+    }
+
+    /// Upper bound on the rate over the whole trace (thinning envelope).
+    fn rate_bound(&self) -> f64 {
+        let fl = self.spec.dataset.fluctuation;
+        let max_burst = self
+            .bursts
+            .iter()
+            .map(|b| b.2)
+            .fold(1.0f64, |a, b| a.max(b));
+        self.spec.base_rate * (1.0 + fl.tide_amplitude) * max_burst
+    }
+
+    /// Generate the trace (requests sorted by arrival, ids 0..n).
+    pub fn generate(&self) -> Trace {
+        let mut rng = Pcg::new(self.spec.seed, 202);
+        let mut len_rng = Pcg::new(self.spec.seed, 303);
+        let mut requests = Vec::new();
+        let mut id = 0u64;
+        match self.spec.pattern {
+            ArrivalPattern::Fluctuating => {
+                let bound = self.rate_bound();
+                if bound <= 0.0 {
+                    return Trace::default();
+                }
+                let mut t = 0.0;
+                loop {
+                    t += rng.exp(bound);
+                    if t >= self.spec.duration_s {
+                        break;
+                    }
+                    // Thinning: accept with prob rate(t)/bound.
+                    if rng.f64() < self.rate_at(t) / bound {
+                        requests.push(self.make_request(id, t, &mut len_rng));
+                        id += 1;
+                    }
+                }
+            }
+            ArrivalPattern::UniformQps => {
+                if self.spec.base_rate <= 0.0 {
+                    return Trace::default();
+                }
+                let gap = 1.0 / self.spec.base_rate;
+                let mut t = gap * rng.f64(); // random phase
+                while t < self.spec.duration_s {
+                    requests.push(self.make_request(id, t, &mut len_rng));
+                    id += 1;
+                    t += gap;
+                }
+            }
+        }
+        Trace::new(requests)
+    }
+
+    fn make_request(&self, id: u64, t: f64, len_rng: &mut Pcg) -> Request {
+        let prompt = self.spec.dataset.prompt.sample(len_rng);
+        let output = self.spec.dataset.output.sample(len_rng);
+        Request::new(id, self.spec.class, t, prompt, output)
+    }
+}
+
+/// Convenience: synthesize an online trace for a dataset.
+pub fn online_trace(
+    dataset: DatasetProfile,
+    base_rate: f64,
+    duration_s: f64,
+    seed: u64,
+) -> Trace {
+    TraceGenerator::new(TraceSpec {
+        dataset,
+        class: Class::Online,
+        pattern: ArrivalPattern::Fluctuating,
+        base_rate,
+        duration_s,
+        day_phase_s: 10.0 * 3600.0, // start near mid-morning ramp
+        seed,
+    })
+    .generate()
+}
+
+/// Convenience: uniform-QPS offline trace (the §5.2 offline load control).
+pub fn offline_trace(
+    dataset: DatasetProfile,
+    qps: f64,
+    duration_s: f64,
+    seed: u64,
+) -> Trace {
+    TraceGenerator::new(TraceSpec {
+        dataset,
+        class: Class::Offline,
+        pattern: ArrivalPattern::UniformQps,
+        base_rate: qps,
+        duration_s,
+        day_phase_s: 0.0,
+        seed,
+    })
+    .generate()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(base_rate: f64, duration: f64, seed: u64) -> TraceGenerator {
+        TraceGenerator::new(TraceSpec {
+            dataset: DatasetProfile::ooc_online(),
+            class: Class::Online,
+            pattern: ArrivalPattern::Fluctuating,
+            base_rate,
+            duration_s: duration,
+            day_phase_s: 0.0,
+            seed,
+        })
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = gen(2.0, 600.0, 7).generate();
+        let b = gen(2.0, 600.0, 7).generate();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.prompt_len, y.prompt_len);
+        }
+        let c = gen(2.0, 600.0, 8).generate();
+        assert_ne!(a.len(), c.len());
+    }
+
+    #[test]
+    fn mean_rate_close_to_base() {
+        // Over a full day the tide averages out to ~base rate; bursts add a
+        // small positive bias. Check within tolerance on a half-day window.
+        let g = gen(1.0, 43_200.0, 3);
+        let t = g.generate();
+        let rate = t.len() as f64 / 43_200.0;
+        assert!((0.5..2.0).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn rate_function_respects_bound() {
+        let g = gen(2.0, 7200.0, 11);
+        let bound = g.rate_bound();
+        for i in 0..1000 {
+            let t = i as f64 * 7.2;
+            assert!(g.rate_at(t) <= bound + 1e-9);
+        }
+    }
+
+    #[test]
+    fn bursts_create_visible_spikes() {
+        // With strong bursts, the max minute-bucket should clearly exceed
+        // the median minute-bucket (Fig. 1's bursty spikes).
+        let t = online_trace(DatasetProfile::azure_code(), 3.0, 7200.0, 5);
+        let series = t.rate_series(60.0);
+        let mut sorted: Vec<usize> = series.clone();
+        sorted.sort_unstable();
+        let median = sorted[sorted.len() / 2] as f64;
+        let max = *sorted.last().unwrap() as f64;
+        assert!(max > 1.8 * median.max(1.0), "median {median} max {max}");
+    }
+
+    #[test]
+    fn tide_shape_visible_over_a_day() {
+        // Compare trough-quarter vs peak-quarter volumes over one day.
+        let g = gen(1.0, DAY_S, 13);
+        let t = g.generate();
+        let q = (DAY_S / 4.0) as usize;
+        let series = t.rate_series(1.0);
+        let sum = |a: usize, b: usize| -> usize {
+            series[a.min(series.len())..b.min(series.len())].iter().sum()
+        };
+        let q1 = sum(0, q); // starts at trough (phase 0)
+        let q3 = sum(2 * q, 3 * q); // mid-day peak
+        assert!(
+            q3 as f64 > 1.5 * q1 as f64,
+            "trough {q1} vs peak {q3}"
+        );
+    }
+
+    #[test]
+    fn uniform_qps_spacing() {
+        let t = offline_trace(DatasetProfile::ooc_offline(), 2.0, 100.0, 1);
+        assert!((t.len() as i64 - 200).abs() <= 2, "n {}", t.len());
+        for w in t.requests.windows(2) {
+            let gap = w[1].arrival - w[0].arrival;
+            assert!((gap - 0.5).abs() < 1e-9, "gap {gap}");
+        }
+        assert!(t.requests.iter().all(|r| r.class == Class::Offline));
+    }
+
+    #[test]
+    fn zero_rate_empty() {
+        assert!(offline_trace(DatasetProfile::ooc_offline(), 0.0, 100.0, 1)
+            .is_empty());
+    }
+
+    #[test]
+    fn lengths_match_profile_means() {
+        let t = online_trace(DatasetProfile::azure_conv(), 5.0, 7200.0, 9);
+        let (p, o) = t.mean_lengths(None);
+        assert!((p / 1512.30 - 1.0).abs() < 0.15, "prompt mean {p}");
+        assert!((o / 98.75 - 1.0).abs() < 0.15, "output mean {o}");
+    }
+}

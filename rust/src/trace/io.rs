@@ -1,0 +1,100 @@
+//! Trace file I/O (JSON) — export generated traces, import external ones.
+//!
+//! Format: `{"requests": [{"class": "online", "arrival": 1.5,
+//! "prompt_len": 100, "output_len": 50}, ...]}` — the same fields a
+//! de-identified production trace (like the paper's OOC dataset) would
+//! carry.
+
+use std::path::Path;
+
+use crate::request::{Class, Request};
+use crate::util::json::Json;
+
+use super::Trace;
+
+pub fn trace_to_json(trace: &Trace) -> Json {
+    let requests: Vec<Json> = trace
+        .requests
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("class", Json::Str(r.class.name().to_string())),
+                ("arrival", Json::Num(r.arrival)),
+                ("prompt_len", Json::Num(r.prompt_len as f64)),
+                ("output_len", Json::Num(r.output_len as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("requests", Json::Arr(requests))])
+}
+
+pub fn trace_from_json(v: &Json) -> anyhow::Result<Trace> {
+    let arr = v
+        .get("requests")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("trace file missing `requests` array"))?;
+    let mut requests = Vec::with_capacity(arr.len());
+    for (i, item) in arr.iter().enumerate() {
+        let class = match item.req_str("class")? {
+            "online" => Class::Online,
+            "offline" => Class::Offline,
+            other => anyhow::bail!("request {i}: unknown class `{other}`"),
+        };
+        requests.push(Request::new(
+            i as u64,
+            class,
+            item.req_f64("arrival")?,
+            item.req_usize("prompt_len")?,
+            item.req_usize("output_len")?,
+        ));
+    }
+    Ok(Trace::new(requests))
+}
+
+pub fn save_trace(trace: &Trace, path: &Path) -> anyhow::Result<()> {
+    std::fs::write(path, trace_to_json(trace).to_string())
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+}
+
+pub fn load_trace(path: &Path) -> anyhow::Result<Trace> {
+    trace_from_json(&Json::parse_file(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::datasets::DatasetProfile;
+    use crate::trace::generator::{offline_trace, online_trace};
+
+    #[test]
+    fn roundtrip_through_file() {
+        let t = online_trace(DatasetProfile::azure_conv(), 1.0, 300.0, 5)
+            .merge(offline_trace(DatasetProfile::ooc_offline(), 0.5, 300.0, 6));
+        let dir = std::env::temp_dir().join("ooco_trace_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        save_trace(&t, &path).unwrap();
+        let t2 = load_trace(&path).unwrap();
+        assert_eq!(t.len(), t2.len());
+        for (a, b) in t.requests.iter().zip(&t2.requests) {
+            assert_eq!(a.class, b.class);
+            assert!((a.arrival - b.arrival).abs() < 1e-9);
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.output_len, b.output_len);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_class() {
+        let v = Json::parse(
+            r#"{"requests": [{"class": "turbo", "arrival": 0, "prompt_len": 1, "output_len": 1}]}"#,
+        )
+        .unwrap();
+        assert!(trace_from_json(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_requests() {
+        assert!(trace_from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+}

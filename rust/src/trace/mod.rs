@@ -1,0 +1,140 @@
+//! Workload traces: dataset profiles, arrival-process generation, scaling.
+//!
+//! The paper's traces (company OOC production trace, Azure LLM Inference
+//! Traces 2024) are not redistributable/downloadable here, so this module
+//! synthesizes traces matching their *published statistics*: Table 5 length
+//! means and Figure 1's temporal structure (hour/day tide + minute-scale
+//! bursts). The paper's own trace-scaling procedure (§5.1.3) is implemented
+//! verbatim in [`scaling`].
+
+pub mod datasets;
+pub mod generator;
+pub mod io;
+pub mod scaling;
+
+pub use datasets::{DatasetProfile, LengthProfile};
+pub use generator::{ArrivalPattern, TraceGenerator, TraceSpec};
+pub use scaling::scale_trace;
+
+use crate::request::{Class, Request};
+
+/// A generated or loaded workload trace: requests sorted by arrival time.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn new(mut requests: Vec<Request>) -> Self {
+        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        Trace { requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival).unwrap_or(0.0)
+    }
+
+    pub fn count_class(&self, class: Class) -> usize {
+        self.requests.iter().filter(|r| r.class == class).count()
+    }
+
+    /// Merge two traces (e.g. online + offline), re-sorting by arrival and
+    /// re-assigning ids to stay unique.
+    pub fn merge(self, other: Trace) -> Trace {
+        let mut all = self.requests;
+        all.extend(other.requests);
+        all.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        for (i, r) in all.iter_mut().enumerate() {
+            r.id = i as u64;
+        }
+        Trace { requests: all }
+    }
+
+    /// Per-bucket request counts — the Fig. 1 rate series.
+    pub fn rate_series(&self, bucket_s: f64) -> Vec<usize> {
+        if self.requests.is_empty() {
+            return vec![];
+        }
+        let buckets = (self.duration() / bucket_s).floor() as usize + 1;
+        let mut counts = vec![0usize; buckets];
+        for r in &self.requests {
+            let b = (r.arrival / bucket_s) as usize;
+            counts[b.min(buckets - 1)] += 1;
+        }
+        counts
+    }
+
+    /// Mean prompt/output lengths (Table 5 reproduction).
+    pub fn mean_lengths(&self, class: Option<Class>) -> (f64, f64) {
+        let sel: Vec<&Request> = self
+            .requests
+            .iter()
+            .filter(|r| class.map(|c| r.class == c).unwrap_or(true))
+            .collect();
+        if sel.is_empty() {
+            return (0.0, 0.0);
+        }
+        let n = sel.len() as f64;
+        let p = sel.iter().map(|r| r.prompt_len as f64).sum::<f64>() / n;
+        let o = sel.iter().map(|r| r.output_len as f64).sum::<f64>() / n;
+        (p, o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, t: f64) -> Request {
+        Request::new(id, Class::Online, t, 10, 10)
+    }
+
+    #[test]
+    fn new_sorts_by_arrival() {
+        let t = Trace::new(vec![req(0, 5.0), req(1, 1.0), req(2, 3.0)]);
+        let times: Vec<f64> = t.requests.iter().map(|r| r.arrival).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0]);
+        assert_eq!(t.duration(), 5.0);
+    }
+
+    #[test]
+    fn merge_reassigns_ids() {
+        let a = Trace::new(vec![req(0, 1.0), req(1, 4.0)]);
+        let b = Trace::new(vec![req(0, 2.0)]);
+        let m = a.merge(b);
+        assert_eq!(m.len(), 3);
+        let ids: Vec<u64> = m.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert!(m.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    #[test]
+    fn rate_series_buckets() {
+        let t = Trace::new(vec![req(0, 0.1), req(1, 0.2), req(2, 1.5), req(3, 2.9)]);
+        assert_eq!(t.rate_series(1.0), vec![2, 1, 1]);
+        assert!(Trace::default().rate_series(60.0).is_empty());
+    }
+
+    #[test]
+    fn mean_lengths_by_class() {
+        let mut reqs = vec![
+            Request::new(0, Class::Online, 0.0, 100, 10),
+            Request::new(1, Class::Offline, 0.0, 300, 30),
+        ];
+        reqs.push(Request::new(2, Class::Online, 0.0, 200, 20));
+        let t = Trace::new(reqs);
+        let (p, o) = t.mean_lengths(Some(Class::Online));
+        assert_eq!((p, o), (150.0, 15.0));
+        let (p, _) = t.mean_lengths(None);
+        assert_eq!(p, 200.0);
+        assert_eq!(t.count_class(Class::Offline), 1);
+    }
+}

@@ -1,0 +1,178 @@
+//! Trace scaling — the paper's §5.1.3 procedure, verbatim:
+//!
+//! - scale **down** by randomly dropping requests at a fixed ratio;
+//! - scale **up** by replicating existing request prompt/output lengths
+//!   while *interpolating* their timestamps between neighbors.
+//!
+//! Both transforms only change the aggregate rate: a 5-minute spike stays a
+//! 5-minute spike, and the peak/trough ratio is preserved.
+
+use crate::request::Request;
+use crate::util::rng::Pcg;
+
+use super::Trace;
+
+/// Scale a trace's aggregate request rate by `factor` (> 0).
+///
+/// `factor < 1` drops requests uniformly at random; `factor > 1` first
+/// applies the integer part by replication+interpolation, then the
+/// fractional remainder by another replication pass at the leftover ratio.
+pub fn scale_trace(trace: &Trace, factor: f64, seed: u64) -> Trace {
+    assert!(factor > 0.0, "scale factor must be positive");
+    let mut rng = Pcg::new(seed, 404);
+    if trace.is_empty() {
+        return Trace::default();
+    }
+    if (factor - 1.0).abs() < 1e-12 {
+        return relabel(trace.requests.clone());
+    }
+    if factor < 1.0 {
+        let kept: Vec<Request> = trace
+            .requests
+            .iter()
+            .filter(|_| rng.chance(factor))
+            .cloned()
+            .collect();
+        return relabel(kept);
+    }
+    // Scale up: keep originals, add (factor - 1) replicas in expectation.
+    let mut out = trace.requests.clone();
+    let extra = factor - 1.0;
+    let whole = extra.floor() as usize;
+    let frac = extra - whole as f64;
+    for (i, r) in trace.requests.iter().enumerate() {
+        let copies = whole + if rng.chance(frac) { 1 } else { 0 };
+        for _ in 0..copies {
+            let mut c = r.clone();
+            // Interpolate the timestamp toward the next arrival so replicas
+            // land inside the same local traffic regime.
+            let next = trace
+                .requests
+                .get(i + 1)
+                .map(|n| n.arrival)
+                .unwrap_or(r.arrival);
+            c.arrival = r.arrival + (next - r.arrival) * rng.f64();
+            // Donor lengths are reused verbatim (paper: "replicating
+            // existing request prompt and output lengths").
+            out.push(c);
+        }
+    }
+    relabel(out)
+}
+
+fn relabel(mut requests: Vec<Request>) -> Trace {
+    requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    Trace { requests }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::Class;
+    use crate::trace::datasets::DatasetProfile;
+    use crate::trace::generator::online_trace;
+
+    fn base() -> Trace {
+        online_trace(DatasetProfile::ooc_online(), 2.0, 7200.0, 42)
+    }
+
+    #[test]
+    fn downscale_rate() {
+        let t = base();
+        let s = scale_trace(&t, 0.5, 1);
+        let ratio = s.len() as f64 / t.len() as f64;
+        assert!((ratio - 0.5).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn upscale_rate_integer_and_fraction() {
+        let t = base();
+        for factor in [2.0, 2.5, 3.75] {
+            let s = scale_trace(&t, factor, 2);
+            let ratio = s.len() as f64 / t.len() as f64;
+            assert!((ratio / factor - 1.0).abs() < 0.06, "f {factor} r {ratio}");
+        }
+    }
+
+    #[test]
+    fn identity_scale() {
+        let t = base();
+        let s = scale_trace(&t, 1.0, 3);
+        assert_eq!(s.len(), t.len());
+    }
+
+    #[test]
+    fn temporal_pattern_preserved() {
+        // The minute-bucket correlation between original and 3x-scaled trace
+        // must be high: spikes stay where they were.
+        let t = base();
+        let s = scale_trace(&t, 3.0, 4);
+        let a = t.rate_series(60.0);
+        let b = s.rate_series(60.0);
+        let n = a.len().min(b.len());
+        let (a, b) = (&a[..n], &b[..n]);
+        let ma = a.iter().sum::<usize>() as f64 / n as f64;
+        let mb = b.iter().sum::<usize>() as f64 / n as f64;
+        let mut cov = 0.0;
+        let mut va = 0.0;
+        let mut vb = 0.0;
+        for i in 0..n {
+            let da = a[i] as f64 - ma;
+            let db = b[i] as f64 - mb;
+            cov += da * db;
+            va += da * da;
+            vb += db * db;
+        }
+        let corr = cov / (va.sqrt() * vb.sqrt());
+        assert!(corr > 0.75, "corr {corr}");
+    }
+
+    #[test]
+    fn peak_trough_ratio_roughly_preserved() {
+        let t = online_trace(DatasetProfile::ooc_online(), 4.0, 86_400.0, 7);
+        let s = scale_trace(&t, 2.0, 8);
+        let ratio = |tr: &Trace| {
+            let series = tr.rate_series(3600.0);
+            let max = *series.iter().max().unwrap() as f64;
+            let min = *series.iter().min().unwrap() as f64;
+            max / min.max(1.0)
+        };
+        let r0 = ratio(&t);
+        let r1 = ratio(&s);
+        assert!((r1 / r0 - 1.0).abs() < 0.5, "r0 {r0} r1 {r1}");
+    }
+
+    #[test]
+    fn replicas_reuse_donor_lengths() {
+        let t = base();
+        let s = scale_trace(&t, 2.0, 9);
+        use std::collections::HashSet;
+        let originals: HashSet<(usize, usize)> = t
+            .requests
+            .iter()
+            .map(|r| (r.prompt_len, r.output_len))
+            .collect();
+        for r in &s.requests {
+            assert!(originals.contains(&(r.prompt_len, r.output_len)));
+        }
+    }
+
+    #[test]
+    fn ids_unique_and_sorted() {
+        let s = scale_trace(&base(), 2.5, 10);
+        for (i, r) in s.requests.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+        assert!(s.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(s.requests.iter().all(|r| r.class == Class::Online));
+    }
+
+    #[test]
+    fn empty_trace() {
+        let e = scale_trace(&Trace::default(), 2.0, 1);
+        assert!(e.is_empty());
+    }
+}

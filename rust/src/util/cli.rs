@@ -1,0 +1,170 @@
+//! Tiny flag-style argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Typed getters with defaults keep call sites terse:
+//!
+//! ```ignore
+//! let args = Args::parse_env();
+//! let qps = args.f64("offline-qps", 2.0);
+//! let policy = args.str("policy", "ooco");
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(body) = item.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(item);
+            }
+        }
+        out
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+
+    /// Comma-separated list of f64 values.
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.flags.get(key) {
+            Some(s) => s
+                .split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// Comma-separated list of strings.
+    pub fn str_list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.flags.get(key) {
+            Some(s) => s.split(',').map(|t| t.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse(items.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        // Note: a bare `--flag` immediately followed by a positional would
+        // consume it as a value — use `--flag=true` in that position.
+        let a = parse(&["--x", "1.5", "--y=hello", "pos1", "pos2", "--flag"]);
+        assert_eq!(a.f64("x", 0.0), 1.5);
+        assert_eq!(a.str("y", ""), "hello");
+        assert!(a.bool("flag", false));
+        assert_eq!(a.positional(), &["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.f64("missing", 3.25), 3.25);
+        assert_eq!(a.usize("missing", 7), 7);
+        assert_eq!(a.str("missing", "d"), "d");
+        assert!(!a.bool("missing", false));
+    }
+
+    #[test]
+    fn bool_spellings() {
+        assert!(parse(&["--a", "yes"]).bool("a", false));
+        assert!(!parse(&["--a", "no"]).bool("a", true));
+        assert!(parse(&["--a=1"]).bool("a", false));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["--verbose"]);
+        assert!(a.bool("verbose", false));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--qps", "0.5, 1, 2.5", "--names=a,b"]);
+        assert_eq!(a.f64_list("qps", &[]), vec![0.5, 1.0, 2.5]);
+        assert_eq!(a.str_list("names", &[]), vec!["a", "b"]);
+        assert_eq!(a.f64_list("missing", &[9.0]), vec![9.0]);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        // "--x -3" would treat -3 as a value because it doesn't start with --
+        let a = parse(&["--x", "-3"]);
+        assert_eq!(a.f64("x", 0.0), -3.0);
+    }
+}

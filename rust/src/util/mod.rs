@@ -1,0 +1,10 @@
+//! Substrate utilities: JSON, RNG, statistics, CLI parsing, logging.
+//!
+//! These exist because the offline vendor set has no serde/clap/rand/criterion;
+//! each is a small, fully-tested replacement scoped to what OOCO needs.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,247 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! eviction, migration) using the in-repo `testutil::forall` harness.
+
+use ooco::config::{HardwareProfile, ModelSpec, SloSpec};
+use ooco::coordinator::{
+    migration_decision, pick_migration_candidates, select_decode_batch,
+    select_evictions, Candidate, LengthPref, Router,
+};
+use ooco::perfmodel::{BatchStats, Bottleneck, PerfModel};
+use ooco::prop_assert;
+use ooco::testutil::forall;
+use ooco::util::rng::Pcg;
+
+fn pm() -> PerfModel {
+    PerfModel::new(ModelSpec::qwen2_5_7b(), HardwareProfile::ascend_910c())
+}
+
+#[test]
+fn mix_decode_never_violates_bound_when_online_fits() {
+    let pm = pm();
+    forall(60, |r| {
+        let n_on = r.below(8);
+        let online: Vec<Candidate> =
+            (0..n_on).map(|i| (i as u64, r.below(2500) + 1)).collect();
+        let n_off = r.below(80);
+        let offline: Vec<Candidate> = (0..n_off)
+            .map(|i| (100 + i as u64, r.below(2500) + 1))
+            .collect();
+        let bound = 0.03 + r.f64() * 0.08;
+        let sel = select_decode_batch(&pm, &online, &offline, bound, 8, r);
+        if !sel.online_over_slo {
+            prop_assert!(
+                sel.predicted_latency <= bound + 1e-12,
+                "bound {bound} violated: {}",
+                sel.predicted_latency
+            );
+        }
+        // Chosen offline ids must come from the candidate set, once each.
+        let mut seen = std::collections::HashSet::new();
+        for id in &sel.offline {
+            prop_assert!(
+                offline.iter().any(|c| c.0 == *id),
+                "unknown id {id}"
+            );
+            prop_assert!(seen.insert(*id), "duplicate {id}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mix_decode_maximal_under_uniform_lengths() {
+    // With equal-length candidates the selection must be maximal: either
+    // everything is admitted or adding one more would break the bound.
+    let pm = pm();
+    forall(40, |r| {
+        let len = r.below(2000) + 50;
+        let n = r.below(100) + 1;
+        let offline: Vec<Candidate> =
+            (0..n).map(|i| (i as u64, len)).collect();
+        let bound = 0.02 + r.f64() * 0.08;
+        let sel = select_decode_batch(&pm, &[], &offline, bound, 8, r);
+        if sel.offline.len() < n {
+            let bigger = sel.stats.with(len);
+            prop_assert!(
+                pm.decode_latency(bigger) > bound,
+                "not maximal: {} chosen of {n}",
+                sel.offline.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn eviction_order_respects_bottleneck() {
+    let pm = pm();
+    forall(40, |r| {
+        let n = r.below(20) + 2;
+        let victims: Vec<Candidate> = (0..n)
+            .map(|i| (i as u64, r.below(5000) + 1))
+            .collect();
+        let total: usize = victims.iter().map(|c| c.1).sum();
+        let needed = r.below(total.max(2) - 1) + 1;
+
+        // Compute-bound: chosen victims must dominate the unchosen by
+        // length (longest-first policy).
+        let chosen =
+            select_evictions(&pm, &victims, needed, Bottleneck::Compute, true);
+        let chosen_lens: Vec<usize> = chosen
+            .iter()
+            .map(|id| victims.iter().find(|c| c.0 == *id).unwrap().1)
+            .collect();
+        let min_chosen = chosen_lens.iter().min().copied().unwrap_or(0);
+        for c in &victims {
+            prop_assert!(
+                c.1 <= min_chosen || chosen.contains(&c.0),
+                "longer victim {} (len {}) skipped; min chosen {}",
+                c.0,
+                c.1,
+                min_chosen
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn migration_pref_consistent_with_predictor() {
+    let pm = pm();
+    let slo = SloSpec::default();
+    forall(60, |r| {
+        let n = r.below(400) + 1;
+        let mean_len = r.below(2000) + 50;
+        let batch = BatchStats::new(n, n * mean_len);
+        let pref = migration_decision(&pm, batch, true, slo.tpot, 0.1);
+        let bound = slo.tpot * 0.9;
+        match pref {
+            LengthPref::None => {
+                let over = pm.decode_latency(batch) >= bound;
+                let nothing_fits = {
+                    let b = batch.with(1);
+                    pm.decode_latency(b) > bound
+                        || pm.memory_utilization(b) > 1.0
+                };
+                prop_assert!(over || nothing_fits, "None without reason");
+            }
+            LengthPref::LongestUpTo { max_len } => {
+                prop_assert!(max_len >= 1, "degenerate max_len");
+                let b = batch.with(max_len);
+                prop_assert!(
+                    pm.decode_latency(b) <= bound + 1e-9,
+                    "advertised length breaks bound"
+                );
+                prop_assert!(
+                    pm.memory_utilization(b) <= 1.0 + 1e-9,
+                    "advertised length breaks capacity"
+                );
+            }
+            LengthPref::Shortest => {
+                prop_assert!(batch.size < pm.bs_sat(), "Shortest above sat");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn migration_candidates_subset_and_bounded() {
+    forall(60, |r| {
+        let n = r.below(50);
+        let cands: Vec<Candidate> = (0..n)
+            .map(|i| (i as u64, r.below(4000) + 1))
+            .collect();
+        let max_count = r.below(10);
+        let pref = match r.below(3) {
+            0 => LengthPref::None,
+            1 => LengthPref::Shortest,
+            _ => LengthPref::LongestUpTo {
+                max_len: r.below(4000) + 1,
+            },
+        };
+        let picked = pick_migration_candidates(pref, &cands, max_count);
+        prop_assert!(picked.len() <= max_count, "over max_count");
+        if pref == LengthPref::None {
+            prop_assert!(picked.is_empty(), "None must pick nothing");
+        }
+        for id in &picked {
+            prop_assert!(cands.iter().any(|c| c.0 == *id), "foreign id");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn router_load_conservation() {
+    forall(30, |r| {
+        let n_relaxed = r.below(4) + 1;
+        let n_strict = r.below(4) + 1;
+        let mut router = Router::new(n_relaxed, n_strict);
+        let mut outstanding: Vec<(usize, usize)> = Vec::new();
+        for _ in 0..200 {
+            if r.chance(0.6) || outstanding.is_empty() {
+                let tokens = r.below(4000) + 1;
+                let inst = router.route_prefill(tokens);
+                prop_assert!(inst < n_relaxed, "bad instance");
+                outstanding.push((inst, tokens));
+            } else {
+                let idx = r.below(outstanding.len());
+                let (inst, tokens) = outstanding.swap_remove(idx);
+                router.prefill_done(inst, tokens);
+            }
+        }
+        for (inst, tokens) in outstanding {
+            router.prefill_done(inst, tokens);
+        }
+        prop_assert!(router.route_prefill(1) < n_relaxed, "post-drain route");
+        Ok(())
+    });
+}
+
+#[test]
+fn selection_deterministic_given_rng_seed() {
+    let pm = pm();
+    let online: Vec<Candidate> = (0..5).map(|i| (i, 800)).collect();
+    let offline: Vec<Candidate> = (0..50)
+        .map(|i| (100 + i, 500 + (i as usize * 37) % 1500))
+        .collect();
+    let mut r1 = Pcg::seeded(9);
+    let mut r2 = Pcg::seeded(9);
+    let a = select_decode_batch(&pm, &online, &offline, 0.06, 8, &mut r1);
+    let b = select_decode_batch(&pm, &online, &offline, 0.06, 8, &mut r2);
+    assert_eq!(a.offline, b.offline);
+    assert_eq!(a.stats, b.stats);
+}
+
+#[test]
+fn sim_seed_sensitivity_is_bounded() {
+    // Different seeds shift the trace but the policy ordering (OOCO >=
+    // online-priority offline throughput at saturation) must be stable.
+    use ooco::config::ServingConfig;
+    use ooco::coordinator::Policy;
+    use ooco::sim::{simulate, SimConfig};
+    use ooco::trace::datasets::DatasetProfile;
+    use ooco::trace::generator::{offline_trace, online_trace};
+
+    for seed in [1u64, 7, 23] {
+        let online =
+            online_trace(DatasetProfile::azure_conv(), 0.5, 600.0, seed);
+        let offline =
+            offline_trace(DatasetProfile::ooc_offline(), 20.0, 600.0, seed + 50);
+        let trace = online.merge(offline);
+        let mut results = Vec::new();
+        for policy in [Policy::OnlinePriority, Policy::Ooco] {
+            let mut cfg = SimConfig::new(ServingConfig::preset_7b(), policy);
+            cfg.seed = seed;
+            results.push(simulate(&trace, &cfg));
+        }
+        assert!(
+            results[1].report.offline_token_throughput
+                >= results[0].report.offline_token_throughput,
+            "seed {seed}: ooco {} < op {}",
+            results[1].report.offline_token_throughput,
+            results[0].report.offline_token_throughput
+        );
+    }
+}

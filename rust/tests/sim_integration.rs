@@ -1,0 +1,313 @@
+//! Integration tests: the discrete-event simulator end-to-end, across
+//! policies, with conservation and determinism checks.
+
+use ooco::config::ServingConfig;
+use ooco::coordinator::{Ablation, Policy};
+use ooco::request::Class;
+use ooco::sim::{simulate, SimConfig, SimResult};
+use ooco::trace::datasets::DatasetProfile;
+use ooco::trace::generator::{offline_trace, online_trace};
+use ooco::trace::Trace;
+
+fn mixed_trace(online_rate: f64, offline_qps: f64, duration: f64, seed: u64) -> Trace {
+    let online = online_trace(DatasetProfile::azure_conv(), online_rate, duration, seed);
+    let offline =
+        offline_trace(DatasetProfile::ooc_offline(), offline_qps, duration, seed + 1);
+    online.merge(offline)
+}
+
+fn run(policy: Policy, online_rate: f64, offline_qps: f64, duration: f64) -> SimResult {
+    let trace = mixed_trace(online_rate, offline_qps, duration, 42);
+    let cfg = SimConfig::new(ServingConfig::preset_7b(), policy);
+    simulate(&trace, &cfg)
+}
+
+#[test]
+fn pure_online_light_load_meets_slo() {
+    let res = run(Policy::Ooco, 0.5, 0.0, 900.0);
+    let rep = &res.report;
+    assert!(rep.online_total > 100, "online_total {}", rep.online_total);
+    assert_eq!(rep.online_finished, rep.online_total, "all must finish");
+    assert!(
+        rep.online_violation_rate < 0.03,
+        "violation {} ({})",
+        rep.online_violation_rate,
+        rep.summary_line()
+    );
+    // TTFT ~ queue + prefill: well under a second at this load.
+    assert!(rep.ttft.p50 < 1.0, "ttft p50 {}", rep.ttft.p50);
+    // TPOT bounded by the SLO-aware batching.
+    assert!(rep.tpot.p99 <= 0.101, "tpot p99 {}", rep.tpot.p99);
+}
+
+#[test]
+fn ooco_serves_offline_without_breaking_online() {
+    let res = run(Policy::Ooco, 0.5, 1.0, 900.0);
+    let rep = &res.report;
+    assert!(
+        rep.online_violation_rate < 0.03,
+        "violations {} ({})",
+        rep.online_violation_rate,
+        rep.summary_line()
+    );
+    assert!(
+        rep.offline_token_throughput > 50.0,
+        "offline throughput {}",
+        rep.offline_token_throughput
+    );
+    assert!(rep.offline_finished > 0);
+}
+
+#[test]
+fn base_pd_collapses_under_offline_load() {
+    // With offline requests treated as online and no protection, a heavy
+    // offline stream (~10 qps saturates the strict pool's decode capacity)
+    // must push violations past the 3% threshold while OOCO stays clean.
+    let base = run(Policy::BasePd, 0.5, 10.0, 900.0);
+    let ooco = run(Policy::Ooco, 0.5, 10.0, 900.0);
+    assert!(
+        base.report.online_violation_rate > 0.03,
+        "base should collapse: {}",
+        base.report.online_violation_rate
+    );
+    assert!(
+        ooco.report.online_violation_rate < 0.03,
+        "ooco should hold: {}",
+        ooco.report.online_violation_rate
+    );
+}
+
+#[test]
+fn ooco_beats_online_priority_offline_throughput() {
+    // At saturating offline load, OOCO's SLO-aware mix-in and migration
+    // must deliver more offline tokens than the static-cap baseline.
+    let op = run(Policy::OnlinePriority, 0.5, 20.0, 900.0);
+    let ooco = run(Policy::Ooco, 0.5, 20.0, 900.0);
+    assert!(
+        ooco.report.offline_token_throughput
+            > 1.1 * op.report.offline_token_throughput,
+        "ooco {} vs op {}",
+        ooco.report.offline_token_throughput,
+        op.report.offline_token_throughput
+    );
+    // And both keep the online SLO at this online load.
+    assert!(ooco.report.online_violation_rate < 0.03);
+    assert!(op.report.online_violation_rate < 0.03);
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let a = run(Policy::Ooco, 0.4, 0.8, 600.0);
+    let b = run(Policy::Ooco, 0.4, 0.8, 600.0);
+    assert_eq!(a.report.online_total, b.report.online_total);
+    assert_eq!(a.report.online_violations, b.report.online_violations);
+    assert_eq!(a.report.offline_finished, b.report.offline_finished);
+    assert_eq!(a.strict_steps, b.strict_steps);
+    assert_eq!(a.migrations, b.migrations);
+    assert!((a.report.ttft.p99 - b.report.ttft.p99).abs() < 1e-12);
+}
+
+#[test]
+fn ooco_uses_migration_and_mixin() {
+    let res = run(Policy::Ooco, 0.4, 1.5, 900.0);
+    assert!(res.migrations > 0, "no migrations happened");
+    assert!(
+        res.strict_offline_tokens > 0,
+        "no offline tokens decoded on strict nodes"
+    );
+}
+
+#[test]
+fn baselines_never_migrate() {
+    for policy in [Policy::BasePd, Policy::OnlinePriority] {
+        let res = run(policy, 0.4, 1.0, 600.0);
+        assert_eq!(res.migrations, 0, "{policy:?} migrated");
+    }
+}
+
+#[test]
+fn preemption_only_with_protection_policies() {
+    let base = run(Policy::BasePd, 0.6, 1.0, 600.0);
+    assert_eq!(base.preemptions, 0);
+    // OOCO preempts offline prefill when online arrives mid-step.
+    let ooco = run(Policy::Ooco, 0.6, 1.5, 900.0);
+    assert!(ooco.preemptions > 0, "expected some preemptions");
+}
+
+#[test]
+fn offline_only_trace_all_classes_finish_eventually() {
+    let trace = offline_trace(DatasetProfile::ooc_offline(), 0.5, 600.0, 3);
+    let mut cfg = SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+    cfg.drain_s = 3000.0;
+    let res = simulate(&trace, &cfg);
+    let rep = &res.report;
+    assert_eq!(rep.online_total, 0);
+    assert!(
+        rep.offline_finished as f64 >= 0.9 * rep.offline_total as f64,
+        "finished {}/{}",
+        rep.offline_finished,
+        rep.offline_total
+    );
+}
+
+#[test]
+fn online_class_requests_keep_slo_fields() {
+    let trace = mixed_trace(0.3, 0.5, 300.0, 9);
+    let cfg = SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+    let res = simulate(&trace, &cfg);
+    // Spot check: finished online requests all have ttft + tpot recorded.
+    assert!(res.report.ttft.count > 0);
+    assert!(res.report.tpot.count > 0);
+    assert!(res.report.ttft.min >= 0.0);
+    assert!(res.report.tpot.min >= 0.0);
+}
+
+#[test]
+fn ablations_change_behavior() {
+    let trace = mixed_trace(0.5, 1.5, 900.0, 21);
+    let serving = ServingConfig::preset_7b();
+    let mut full = SimConfig::new(serving.clone(), Policy::Ooco);
+    full.ablation = Ablation::full();
+    let full_res = simulate(&trace, &full);
+
+    let mut no_mig = SimConfig::new(serving.clone(), Policy::Ooco);
+    no_mig.ablation = Ablation::without_migration();
+    let no_mig_res = simulate(&trace, &no_mig);
+    assert_eq!(no_mig_res.migrations, 0);
+    // Without migration the strict pool decodes fewer offline tokens.
+    assert!(
+        no_mig_res.strict_offline_tokens < full_res.strict_offline_tokens,
+        "full {} no-mig {}",
+        full_res.strict_offline_tokens,
+        no_mig_res.strict_offline_tokens
+    );
+}
+
+#[test]
+fn heavier_offline_load_more_offline_throughput_until_saturation() {
+    let lo = run(Policy::Ooco, 0.4, 0.5, 900.0);
+    let hi = run(Policy::Ooco, 0.4, 1.5, 900.0);
+    assert!(
+        hi.report.offline_token_throughput > lo.report.offline_token_throughput,
+        "lo {} hi {}",
+        lo.report.offline_token_throughput,
+        hi.report.offline_token_throughput
+    );
+}
+
+#[test]
+fn utilization_sane() {
+    let res = run(Policy::Ooco, 0.5, 1.0, 900.0);
+    assert!(res.strict_utilization > 0.05 && res.strict_utilization <= 1.5);
+    assert!(res.relaxed_utilization > 0.05 && res.relaxed_utilization <= 1.5);
+    assert!(res.strict_steps > 100);
+}
+
+#[test]
+fn class_counts_conserved() {
+    let trace = mixed_trace(0.4, 0.8, 600.0, 17);
+    let n_online = trace.count_class(Class::Online);
+    let n_offline = trace.count_class(Class::Offline);
+    let cfg = SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+    let res = simulate(&trace, &cfg);
+    assert_eq!(res.report.online_total, n_online);
+    assert_eq!(res.report.offline_total, n_offline);
+}
+
+#[test]
+fn multi_instance_cluster_scales_capacity() {
+    // 2 relaxed + 2 strict must sustain roughly double the online load of
+    // 1+1 (router balances across the pools).
+    let duration = 600.0;
+    let trace = mixed_trace(1.2, 4.0, duration, 33);
+    let mut small = SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+    small.seed = 33;
+    let small_res = simulate(&trace, &small);
+
+    let mut big_cfg = ServingConfig::preset_7b();
+    big_cfg.cluster.relaxed_instances = 2;
+    big_cfg.cluster.strict_instances = 2;
+    let mut big = SimConfig::new(big_cfg, Policy::Ooco);
+    big.seed = 33;
+    let big_res = simulate(&trace, &big);
+
+    // Same workload, more instances: violations cannot be worse and
+    // per-instance utilization drops.
+    assert!(
+        big_res.report.online_violation_rate
+            <= small_res.report.online_violation_rate + 1e-9
+    );
+    assert!(big_res.strict_utilization < small_res.strict_utilization);
+    assert!(big_res.report.offline_token_throughput
+        >= small_res.report.offline_token_throughput * 0.95);
+}
+
+#[test]
+fn multi_instance_conservation() {
+    let trace = mixed_trace(0.8, 2.0, 400.0, 55);
+    let mut cfg_s = ServingConfig::preset_7b();
+    cfg_s.cluster.relaxed_instances = 3;
+    cfg_s.cluster.strict_instances = 2;
+    let mut cfg = SimConfig::new(cfg_s, Policy::Ooco);
+    cfg.drain_s = 2000.0;
+    let res = simulate(&trace, &cfg);
+    assert_eq!(
+        res.report.online_total,
+        trace.count_class(Class::Online)
+    );
+    assert_eq!(res.report.online_finished, res.report.online_total);
+}
+
+#[test]
+fn shed_mode_caps_tpot_at_overload() {
+    use ooco::coordinator::OverloadMode;
+    // Online load far beyond capacity: best-effort lets TPOT blow up;
+    // shed mode keeps the survivors' TPOT p50 under the bound at the cost
+    // of sacrificed requests (higher violation count).
+    let trace = mixed_trace(8.0, 0.0, 400.0, 77);
+    let mk = |mode| {
+        let mut cfg = SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+        cfg.overload_mode = mode;
+        simulate(&trace, &cfg)
+    };
+    let best = mk(OverloadMode::BestEffort);
+    let shed = mk(OverloadMode::Shed);
+    let slo = ServingConfig::preset_7b().slo;
+    // Both overloaded...
+    assert!(best.report.online_violation_rate > slo.violation_threshold);
+    assert!(shed.report.online_violation_rate > slo.violation_threshold);
+    // ...but shed keeps surviving decode steps within the bound.
+    assert!(
+        shed.report.tpot.p50 <= slo.tpot * 1.05,
+        "shed tpot p50 {} > bound",
+        shed.report.tpot.p50
+    );
+    assert!(
+        shed.report.tpot.p50 <= best.report.tpot.p50,
+        "shed {} vs best-effort {}",
+        shed.report.tpot.p50,
+        best.report.tpot.p50
+    );
+}
+
+#[test]
+fn shed_mode_noop_at_normal_load() {
+    use ooco::coordinator::OverloadMode;
+    let trace = mixed_trace(0.4, 1.0, 400.0, 88);
+    let mk = |mode| {
+        let mut cfg = SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+        cfg.overload_mode = mode;
+        simulate(&trace, &cfg)
+    };
+    let best = mk(OverloadMode::BestEffort);
+    let shed = mk(OverloadMode::Shed);
+    // Under the SLO nothing is ever shed: identical outcomes.
+    assert_eq!(
+        best.report.online_finished,
+        shed.report.online_finished
+    );
+    assert_eq!(
+        best.report.online_violations,
+        shed.report.online_violations
+    );
+}
