@@ -8,7 +8,7 @@
 use std::time::Instant;
 
 use ooco::config::{HardwareProfile, ModelSpec, ServingConfig};
-use ooco::coordinator::{select_decode_batch, Candidate, Policy};
+use ooco::scheduler::{select_decode_batch, Candidate, Policy};
 use ooco::kvcache::KvManager;
 use ooco::perfmodel::{BatchStats, PerfModel};
 use ooco::sim::{simulate, SimConfig};

@@ -34,6 +34,27 @@ pub enum OverloadMode {
     Shed,
 }
 
+impl std::str::FromStr for OverloadMode {
+    type Err = anyhow::Error;
+
+    fn from_str(name: &str) -> anyhow::Result<OverloadMode> {
+        match name {
+            "best-effort" | "best_effort" => Ok(OverloadMode::BestEffort),
+            "shed" => Ok(OverloadMode::Shed),
+            other => anyhow::bail!("unknown overload mode `{other}`"),
+        }
+    }
+}
+
+impl std::fmt::Display for OverloadMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            OverloadMode::BestEffort => "best-effort",
+            OverloadMode::Shed => "shed",
+        })
+    }
+}
+
 /// Trim an over-SLO online batch for [`OverloadMode::Shed`]: drop the
 /// longest-KV requests (most latency relief per shed request) until the
 /// remainder fits `slo_bound`; at least one request is always kept.
@@ -364,6 +385,14 @@ mod tests {
         let (kept, shed) = shed_online_overload(&pm, &online, 1e-6);
         assert_eq!(kept.len(), 1);
         assert_eq!(shed.len(), 9);
+    }
+
+    #[test]
+    fn overload_mode_roundtrip() {
+        for m in [OverloadMode::BestEffort, OverloadMode::Shed] {
+            assert_eq!(m.to_string().parse::<OverloadMode>().unwrap(), m);
+        }
+        assert!("panic".parse::<OverloadMode>().is_err());
     }
 
     #[test]

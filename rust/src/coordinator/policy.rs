@@ -19,14 +19,30 @@ pub enum Policy {
     Ooco,
 }
 
-impl Policy {
-    pub fn by_name(name: &str) -> anyhow::Result<Policy> {
+impl std::str::FromStr for Policy {
+    type Err = anyhow::Error;
+
+    fn from_str(name: &str) -> anyhow::Result<Policy> {
         match name {
             "base-pd" | "base_pd" | "basepd" => Ok(Policy::BasePd),
             "online-priority" | "online_priority" => Ok(Policy::OnlinePriority),
             "ooco" => Ok(Policy::Ooco),
             other => anyhow::bail!("unknown policy `{other}`"),
         }
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl Policy {
+    /// Deprecated alias for the [`std::str::FromStr`] implementation.
+    #[deprecated(since = "0.2.0", note = "use `name.parse::<Policy>()` instead")]
+    pub fn by_name(name: &str) -> anyhow::Result<Policy> {
+        name.parse()
     }
 
     pub fn name(self) -> &'static str {
@@ -112,9 +128,93 @@ impl Default for Ablation {
     }
 }
 
+impl std::str::FromStr for Ablation {
+    type Err = anyhow::Error;
+
+    /// Parse a named ablation preset (the `bench_ablation` vocabulary).
+    fn from_str(name: &str) -> anyhow::Result<Ablation> {
+        match name {
+            "full" => Ok(Ablation::full()),
+            "no-mix-decode" | "no_mix_decode" => {
+                Ok(Ablation::without_mix_decode())
+            }
+            "no-migration" | "no_migration" => {
+                Ok(Ablation::without_migration())
+            }
+            "no-gating" | "no_gating" => Ok(Ablation::without_gating()),
+            "no-bottleneck-eviction" | "no_bottleneck_eviction" => {
+                Ok(Ablation::without_bottleneck_eviction())
+            }
+            // The `custom(+a,-b,...)` form produced by `Display` for
+            // combinations without a preset name — Display/FromStr
+            // roundtrip for every value, like Policy and OverloadMode.
+            other => {
+                let Some(body) = other
+                    .strip_prefix("custom(")
+                    .and_then(|s| s.strip_suffix(')'))
+                else {
+                    anyhow::bail!("unknown ablation preset `{other}`");
+                };
+                let mut a = Ablation::full();
+                for tok in body.split(',') {
+                    let tok = tok.trim();
+                    let (on, name) = if let Some(n) = tok.strip_prefix('+') {
+                        (true, n)
+                    } else if let Some(n) = tok.strip_prefix('-') {
+                        (false, n)
+                    } else {
+                        anyhow::bail!("bad ablation toggle `{tok}`");
+                    };
+                    match name {
+                        "mix_decode" => a.mix_decode = on,
+                        "migration" => a.migration = on,
+                        "gating" => a.gating = on,
+                        "bottleneck_eviction" => a.bottleneck_eviction = on,
+                        _ => anyhow::bail!("unknown ablation toggle `{name}`"),
+                    }
+                }
+                Ok(a)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Ablation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
 impl Ablation {
     pub fn full() -> Self {
         Self::default()
+    }
+
+    /// Preset name when this combination matches one; a `+`/`-` toggle list
+    /// otherwise (e.g. `custom(-mix_decode,-gating)`).
+    pub fn name(&self) -> String {
+        match (
+            self.mix_decode,
+            self.migration,
+            self.gating,
+            self.bottleneck_eviction,
+        ) {
+            (true, true, true, true) => "full".into(),
+            (false, true, true, true) => "no-mix-decode".into(),
+            (true, false, true, true) => "no-migration".into(),
+            (true, true, false, true) => "no-gating".into(),
+            (true, true, true, false) => "no-bottleneck-eviction".into(),
+            _ => {
+                let flag = |on: bool| if on { '+' } else { '-' };
+                format!(
+                    "custom({}mix_decode,{}migration,{}gating,{}bottleneck_eviction)",
+                    flag(self.mix_decode),
+                    flag(self.migration),
+                    flag(self.gating),
+                    flag(self.bottleneck_eviction)
+                )
+            }
+        }
     }
 
     pub fn without_mix_decode() -> Self {
@@ -153,9 +253,38 @@ mod tests {
     #[test]
     fn names_roundtrip() {
         for p in Policy::all() {
-            assert_eq!(Policy::by_name(p.name()).unwrap(), p);
+            assert_eq!(p.name().parse::<Policy>().unwrap(), p);
+            assert_eq!(p.to_string(), p.name());
         }
-        assert!(Policy::by_name("magic").is_err());
+        assert!("magic".parse::<Policy>().is_err());
+        // The deprecated alias keeps working.
+        #[allow(deprecated)]
+        {
+            assert_eq!(Policy::by_name("ooco").unwrap(), Policy::Ooco);
+        }
+    }
+
+    #[test]
+    fn ablation_presets_roundtrip() {
+        for name in [
+            "full",
+            "no-mix-decode",
+            "no-migration",
+            "no-gating",
+            "no-bottleneck-eviction",
+        ] {
+            let a: Ablation = name.parse().unwrap();
+            assert_eq!(a.name(), name);
+            assert_eq!(a.to_string(), name);
+        }
+        assert!("no-everything".parse::<Ablation>().is_err());
+        assert!("custom(+mix_decode,?gating)".parse::<Ablation>().is_err());
+        // Unnamed combinations render as a toggle list that roundtrips too.
+        let mut odd = Ablation::full();
+        odd.mix_decode = false;
+        odd.gating = false;
+        assert!(odd.name().starts_with("custom("));
+        assert_eq!(odd.to_string().parse::<Ablation>().unwrap(), odd);
     }
 
     #[test]

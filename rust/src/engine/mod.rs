@@ -1,34 +1,44 @@
 //! Real serving engine over the PJRT runtime (the end-to-end proof that
 //! L1 Pallas kernels -> L2 JAX model -> L3 rust coordinator compose).
 //!
-//! One process hosts the two logical pools of the latency-constraint
-//! disaggregated architecture: a latency-relaxed pool (prefill + offline
-//! decode) and a latency-strict pool (online decode + SLO-bounded offline
-//! mix-in, Algorithm 2 on *measured-calibrated* perf-model predictions).
-//! A feeder thread replays the trace in wall-clock time through an mpsc
-//! channel; the engine loop owns the PJRT executables (XLA handles stay on
-//! one thread) and steps both pools.
+//! Since the `SchedulerCore` redesign the engine is the wall-clock
+//! [`crate::scheduler::Executor`]: every scheduling decision — routing,
+//! gating, migration (Algorithm 1), SLO-aware mix decoding (Algorithm 2 on
+//! *measured-calibrated* perf-model predictions), eviction — is made by the
+//! exact same [`crate::scheduler::SchedulerCore`] the simulator drives;
+//! only the clock and the execution substrate differ. [`EngineExecutor`]
+//! replays the trace through an mpsc feeder thread, executes the core's
+//! `StartStep` actions on the real PJRT executables (XLA handles stay on
+//! one thread), and reports honest wall-clock numbers.
 //!
-//! Differences from the simulator, by necessity of the substrate:
+//! Differences from the virtual substrate, by necessity:
 //! - layer-level preemption is approximated at step granularity (a single
-//!   CPU process cannot abort a running XLA execution mid-flight);
+//!   CPU process cannot abort a running XLA execution mid-flight): the
+//!   preempted prefill still runs, but the core discards its work;
+//! - KV transfers are instantaneous (both logical pools share one host);
 //! - both pools share one CPU, so "strict" latency includes interleaved
-//!   prefill time — the engine reports honest wall-clock numbers.
+//!   prefill time.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::path::Path;
 use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::{HardwareProfile, SchedulerParams, SloSpec};
-use crate::coordinator::{select_decode_batch, Candidate, Policy};
+use crate::config::{
+    ClusterSpec, HardwareProfile, SchedulerParams, ServingConfig, SloSpec,
+};
+use crate::coordinator::{Ablation, OverloadMode, Policy};
+use crate::instance::StepKind;
 use crate::metrics::{Recorder, Report};
-use crate::perfmodel::{calibrate, PerfModel, Sample, SampleKind};
 use crate::perfmodel::BatchStats;
-use crate::request::{Class, Request};
+use crate::perfmodel::{calibrate, PerfModel, Sample, SampleKind};
+use crate::request::{Class, Request, RequestId};
 use crate::runtime::{DecodeEntry, KvBuf, Runtime};
+use crate::scheduler::{
+    Action, CoreConfig, ExecStats, Executor, InstanceRef, SchedulerCore,
+};
 use crate::trace::Trace;
 use crate::util::rng::Pcg;
 
@@ -81,14 +91,23 @@ pub struct EngineOutcome {
     pub perf_model: PerfModel,
 }
 
+/// Live execution state of one request on the real substrate: its KV cache
+/// block and decode cursor. Scheduling state lives in the core's
+/// `ClusterState`; this is substrate-only.
 struct Live {
-    req: Request,
-    /// Prompt token ids (kept for debugging / future detokenization).
-    #[allow(dead_code)]
-    tokens: Vec<i32>,
     kv: KvBuf,
     last_token: i32,
     position: i32,
+    class: Class,
+}
+
+/// A `StartStep` work order queued for synchronous execution.
+#[derive(Debug, Clone)]
+struct PendingStep {
+    inst: InstanceRef,
+    kind: StepKind,
+    participants: Vec<RequestId>,
+    seq: u64,
 }
 
 /// Probe the runtime and fit a CPU hardware profile for the tiny model —
@@ -160,285 +179,375 @@ pub fn serve_trace(
     serve_trace_with_runtime(&rt, trace, cfg)
 }
 
+/// Serve a trace through the unified scheduler: calibrate the perf model,
+/// build a [`SchedulerCore`] over the (runtime-clamped) requests, and drive
+/// it with the wall-clock [`EngineExecutor`].
 pub fn serve_trace_with_runtime(
     rt: &Runtime,
     trace: &Trace,
     cfg: &EngineConfig,
 ) -> Result<EngineOutcome> {
-    let (pm, mut samples) = calibrate_runtime(rt)?;
+    let (pm, samples) = calibrate_runtime(rt)?;
+
+    // Clamp requests to the tiny runtime's shape limits up front so the
+    // core's accounting matches what actually executes.
     let smax = rt.manifest.smax;
-    let vocab = rt.manifest.vocab;
-    let kv_elems = rt.kv_elems();
-    let max_batch = rt.max_decode_batch();
-
-    // Feeder thread replays arrivals in compressed wall-clock time.
-    let (tx, rx) = mpsc::channel::<Request>();
-    let feed: Vec<Request> = trace.requests.clone();
-    let scale = cfg.time_scale.max(1e-9);
-    let feeder = std::thread::spawn(move || {
-        let start = Instant::now();
-        for r in feed {
-            let due = r.arrival / scale;
-            let now = start.elapsed().as_secs_f64();
-            if due > now {
-                std::thread::sleep(std::time::Duration::from_secs_f64(due - now));
-            }
-            if tx.send(r).is_err() {
-                return;
-            }
-        }
-    });
-
-    let start = Instant::now();
-    let mut rng = Pcg::new(cfg.seed, 616);
-    let mut online_q: VecDeque<Request> = VecDeque::new();
-    let mut offline_q: VecDeque<Request> = VecDeque::new();
-    let mut strict_online: Vec<Live> = Vec::new();
-    let mut strict_offline: Vec<Live> = Vec::new();
-    let mut relaxed_offline: Vec<Live> = Vec::new();
-    let mut recorder = Recorder::new();
-    let mut feeding = true;
-
-    let mut prefills = 0u64;
-    let mut strict_steps = 0u64;
-    let mut relaxed_steps = 0u64;
-    let mut online_tokens = 0u64;
-    let mut offline_tokens = 0u64;
-
-    // Scale SLO to compressed time so violation semantics match the trace.
-    let slo_tpot = cfg.slo.tpot;
-
-    let now_s = |start: &Instant| start.elapsed().as_secs_f64();
-
-    loop {
-        // ---- intake ----
-        loop {
-            match rx.try_recv() {
-                Ok(r) => {
-                    if r.class == Class::Online || cfg.policy == Policy::BasePd {
-                        online_q.push_back(r);
-                    } else {
-                        offline_q.push_back(r);
-                    }
-                }
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => {
-                    feeding = false;
-                    break;
-                }
-            }
-        }
-
-        let idle = online_q.is_empty()
-            && offline_q.is_empty()
-            && strict_online.is_empty()
-            && strict_offline.is_empty()
-            && relaxed_offline.is_empty();
-        if idle {
-            if !feeding {
-                break;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(1));
-            continue;
-        }
-
-        // ---- relaxed pool: online prefill first (priority), else offline ----
-        let next_prefill = if let Some(r) = online_q.pop_front() {
-            Some(r)
-        } else if strict_online.is_empty() || !cfg.policy.offline_idle_only() {
-            // Offline prefill only when the online side is not starved for
-            // compute (single-CPU analog of "idle-only").
-            offline_q.pop_front()
-        } else {
-            None
-        };
-        if let Some(mut req) = next_prefill {
-            let plen = req.prompt_len.min(smax - cfg.max_output.max(1) - 1).max(1);
-            req.prompt_len = plen;
-            req.output_len = req.output_len.min(cfg.max_output).max(1);
-            let toks: Vec<i32> =
-                (0..plen).map(|_| rng.below(vocab) as i32).collect();
-            let t0 = Instant::now();
-            let out = rt.prefill(&toks)?;
-            let lat = t0.elapsed().as_secs_f64();
-            samples.push(Sample {
-                kind: SampleKind::Prefill { prompt_len: plen },
-                latency_s: lat,
-            });
-            prefills += 1;
-            req.mark_first_token(now_s(&start) * scale);
-            if req.class == Class::Online {
-                online_tokens += 1;
-            } else {
-                offline_tokens += 1;
-            }
-            let last = argmax(&out.logits);
-            let live = Live {
-                position: plen as i32,
-                tokens: toks,
-                kv: out.kv,
-                last_token: last,
-                req,
-            };
-            if live.req.is_finished() {
-                let mut r = live.req;
-                r.finished_at = Some(now_s(&start) * scale);
-                recorder.record(&r);
-            } else if live.req.class == Class::Online
-                || cfg.policy == Policy::BasePd
-            {
-                strict_online.push(live);
-            } else if cfg.policy.offline_decode_on_relaxed() {
-                relaxed_offline.push(live);
-            } else {
-                strict_offline.push(live);
-            }
-        }
-
-        // ---- strict pool: mix decoding selection + one real step ----
-        if !strict_online.is_empty() || !strict_offline.is_empty() {
-            let online_c: Vec<Candidate> = strict_online
-                .iter()
-                .enumerate()
-                .map(|(i, l)| (i as u64, l.position as usize))
-                .collect();
-            let offline_c: Vec<Candidate> = strict_offline
-                .iter()
-                .enumerate()
-                .map(|(i, l)| (i as u64, l.position as usize))
-                .collect();
-            let chosen_off: Vec<usize> = if cfg.policy.slo_aware_mix_decode() {
-                let sel = select_decode_batch(
-                    &pm,
-                    &online_c,
-                    &offline_c,
-                    slo_tpot,
-                    cfg.sched.mix_probe_iters,
-                    &mut rng,
-                );
-                sel.offline.iter().map(|&i| i as usize).collect()
-            } else {
-                // Baselines: offline up to the cap / everything for BasePd.
-                let cap = cfg
-                    .policy
-                    .static_offline_decode_cap(cfg.sched.baseline_decode_cap)
-                    .unwrap_or(usize::MAX);
-                let room = cap.saturating_sub(strict_online.len());
-                (0..strict_offline.len().min(room)).collect()
-            };
-            // Respect the runtime's largest decode bucket.
-            let n_on = strict_online.len().min(max_batch);
-            let n_off = chosen_off.len().min(max_batch - n_on.min(max_batch));
-            let mut stats = BatchStats::empty();
-            let mut entries: Vec<DecodeEntry> = Vec::with_capacity(n_on + n_off);
-            // Split borrows: online first, then chosen offline.
-            let (on_slice, off_slice) =
-                (&mut strict_online[..], &mut strict_offline[..]);
-            for l in on_slice.iter_mut().take(n_on) {
-                stats = stats.with(l.position as usize);
-                entries.push(DecodeEntry {
-                    token: l.last_token,
-                    position: l.position,
-                    kv: &mut l.kv,
-                });
-            }
-            let mut picked = 0usize;
-            for (i, l) in off_slice.iter_mut().enumerate() {
-                if picked >= n_off {
-                    break;
-                }
-                if chosen_off.contains(&i) {
-                    stats = stats.with(l.position as usize);
-                    entries.push(DecodeEntry {
-                        token: l.last_token,
-                        position: l.position,
-                        kv: &mut l.kv,
-                    });
-                    picked += 1;
-                }
-            }
-            if !entries.is_empty() {
-                let t0 = Instant::now();
-                let logits = rt.decode(&mut entries)?;
-                let lat = t0.elapsed().as_secs_f64();
-                samples.push(Sample {
-                    kind: SampleKind::Decode { batch: stats },
-                    latency_s: lat,
-                });
-                strict_steps += 1;
-                drop(entries);
-                let now = now_s(&start) * scale;
-                credit_tokens(
-                    &mut strict_online,
-                    &logits[..n_on],
-                    now,
-                    smax,
-                    &mut recorder,
-                    &mut online_tokens,
-                );
-                let off_logits = &logits[n_on..];
-                credit_chosen(
-                    &mut strict_offline,
-                    &chosen_off[..picked],
-                    off_logits,
-                    now,
-                    smax,
-                    &mut recorder,
-                    &mut offline_tokens,
-                );
-            }
-        }
-
-        // ---- relaxed pool: offline decode (OOCO flexibility) ----
-        if cfg.policy.offline_decode_on_relaxed() && !relaxed_offline.is_empty() {
-            let n = relaxed_offline.len().min(max_batch);
-            let mut stats = BatchStats::empty();
-            let mut entries: Vec<DecodeEntry> = Vec::with_capacity(n);
-            for l in relaxed_offline.iter_mut().take(n) {
-                stats = stats.with(l.position as usize);
-                entries.push(DecodeEntry {
-                    token: l.last_token,
-                    position: l.position,
-                    kv: &mut l.kv,
-                });
-            }
-            let t0 = Instant::now();
-            let logits = rt.decode(&mut entries)?;
-            samples.push(Sample {
-                kind: SampleKind::Decode { batch: stats },
-                latency_s: t0.elapsed().as_secs_f64(),
-            });
-            relaxed_steps += 1;
-            drop(entries);
-            let now = now_s(&start) * scale;
-            credit_tokens(
-                &mut relaxed_offline,
-                &logits[..n],
-                now,
-                smax,
-                &mut recorder,
-                &mut offline_tokens,
-            );
-        }
-
-        let _ = kv_elems;
+    let reserve = cfg.max_output.max(1) + 1;
+    let mut requests = trace.requests.clone();
+    for r in &mut requests {
+        r.prompt_len = r.prompt_len.min(smax.saturating_sub(reserve)).max(1);
+        r.output_len = r.output_len.min(cfg.max_output).max(1);
     }
 
-    feeder.join().ok();
-    let wall = start.elapsed().as_secs_f64();
-    let duration = trace.duration().max(1e-9);
-    let report = recorder.report(&cfg.slo, duration);
-    Ok(EngineOutcome {
-        report,
-        wall_s: wall,
-        prefills,
-        strict_steps,
-        relaxed_steps,
-        online_tokens,
-        offline_tokens,
-        samples,
-        perf_model: pm,
-    })
+    let core_cfg = CoreConfig {
+        serving: ServingConfig {
+            model: tiny_model_spec(rt),
+            hardware: pm.hw.clone(),
+            slo: cfg.slo,
+            sched: cfg.sched.clone(),
+            cluster: ClusterSpec {
+                relaxed_instances: 1,
+                strict_instances: 1,
+            },
+        },
+        policy: cfg.policy,
+        ablation: Ablation::full(),
+        overload_mode: OverloadMode::BestEffort,
+        block_tokens: 16,
+        seed: cfg.seed,
+    };
+    let mut core = SchedulerCore::with_perf_model(requests, core_cfg, pm.clone());
+
+    let mut executor = EngineExecutor::new(rt, trace, cfg.clone(), samples);
+    executor.run(&mut core)?;
+    Ok(executor.into_outcome(&core, trace, pm))
+}
+
+/// Wall-clock [`Executor`] over the real PJRT runtime.
+pub struct EngineExecutor<'rt> {
+    rt: &'rt Runtime,
+    cfg: EngineConfig,
+    start: Instant,
+    rx: mpsc::Receiver<Request>,
+    feeder: Option<std::thread::JoinHandle<()>>,
+    /// Per-request substrate state (KV buffer + decode cursor).
+    lives: HashMap<RequestId, Live>,
+    /// StartStep work orders awaiting synchronous execution.
+    pending: VecDeque<PendingStep>,
+    rng: Pcg,
+    feeding: bool,
+    events: u64,
+    // ---- run statistics ----
+    prefills: u64,
+    strict_steps: u64,
+    relaxed_steps: u64,
+    online_tokens: u64,
+    offline_tokens: u64,
+    samples: Vec<Sample>,
+}
+
+impl<'rt> EngineExecutor<'rt> {
+    /// Start the feeder thread replaying `trace` arrivals in compressed
+    /// wall-clock time; `samples` seeds the measurement log (calibration
+    /// probes).
+    pub fn new(
+        rt: &'rt Runtime,
+        trace: &Trace,
+        cfg: EngineConfig,
+        samples: Vec<Sample>,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let feed: Vec<Request> = trace.requests.clone();
+        let scale = cfg.time_scale.max(1e-9);
+        let feeder = std::thread::spawn(move || {
+            let start = Instant::now();
+            for r in feed {
+                let due = r.arrival / scale;
+                let now = start.elapsed().as_secs_f64();
+                if due > now {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        due - now,
+                    ));
+                }
+                if tx.send(r).is_err() {
+                    return;
+                }
+            }
+        });
+        let seed = cfg.seed;
+        EngineExecutor {
+            rt,
+            cfg,
+            start: Instant::now(),
+            rx,
+            feeder: Some(feeder),
+            lives: HashMap::new(),
+            pending: VecDeque::new(),
+            rng: Pcg::new(seed, 616),
+            feeding: true,
+            events: 0,
+            prefills: 0,
+            strict_steps: 0,
+            relaxed_steps: 0,
+            online_tokens: 0,
+            offline_tokens: 0,
+            samples,
+        }
+    }
+
+    /// Interpret the core's actions on the real substrate.
+    fn apply(
+        &mut self,
+        core: &mut SchedulerCore,
+        actions: Vec<Action>,
+    ) -> Result<()> {
+        let mut queue: VecDeque<Action> = actions.into();
+        while let Some(a) = queue.pop_front() {
+            match a {
+                Action::StartStep {
+                    inst,
+                    kind,
+                    participants,
+                    seq,
+                    ..
+                } => {
+                    self.pending.push_back(PendingStep {
+                        inst,
+                        kind,
+                        participants,
+                        seq,
+                    });
+                }
+                Action::Preempt { inst, seq, .. } => {
+                    // Step-granularity approximation: the preempted prefill
+                    // cannot be aborted mid-execution, but the core already
+                    // discarded its work — re-tag the queued step so its
+                    // completion delivers the superseding sequence id.
+                    for p in self.pending.iter_mut() {
+                        if p.inst == InstanceRef::Relaxed(inst) {
+                            p.seq = seq;
+                        }
+                    }
+                }
+                Action::Transfer { req, to_strict, .. } => {
+                    // One host: KV "transfer" is immediate.
+                    let now = self.now();
+                    self.events += 1;
+                    let more = core.on_transfer_done(now, req, to_strict);
+                    queue.extend(more);
+                }
+                Action::Evict { req, .. } => {
+                    // KV dropped for recompute; the core re-prefills later.
+                    self.lives.remove(&req);
+                }
+                Action::Complete { req } => {
+                    self.lives.remove(&req);
+                }
+                Action::Migrate { .. } | Action::Admit { .. } => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one StartStep work order on the runtime, then report the
+    /// step boundary back to the core.
+    fn execute(
+        &mut self,
+        core: &mut SchedulerCore,
+        step: PendingStep,
+    ) -> Result<()> {
+        match step.kind {
+            StepKind::PrefillOnline | StepKind::PrefillOffline => {
+                self.exec_prefill(core, &step)?;
+            }
+            StepKind::DecodeRelaxed | StepKind::DecodeStrict => {
+                self.exec_decode(&step)?;
+            }
+        }
+        match step.inst {
+            InstanceRef::Relaxed(_) => self.relaxed_steps += 1,
+            InstanceRef::Strict(_) => self.strict_steps += 1,
+        }
+        let now = self.now();
+        self.events += 1;
+        let actions = core.on_step_end(now, step.inst, step.seq);
+        self.apply(core, actions)
+    }
+
+    /// Run each participant's (re-)prefill through the runtime.
+    fn exec_prefill(
+        &mut self,
+        core: &mut SchedulerCore,
+        step: &PendingStep,
+    ) -> Result<()> {
+        let smax = self.rt.manifest.smax;
+        let vocab = self.rt.manifest.vocab;
+        let largest = self
+            .rt
+            .manifest
+            .prefill_buckets
+            .last()
+            .copied()
+            .unwrap_or(smax);
+        for &rid in &step.participants {
+            let (len, class) = {
+                let req = &core.cluster.requests[rid as usize];
+                (
+                    req.recompute_len()
+                        .min(largest)
+                        .min(smax.saturating_sub(2))
+                        .max(1),
+                    req.class,
+                )
+            };
+            let toks: Vec<i32> =
+                (0..len).map(|_| self.rng.below(vocab) as i32).collect();
+            let t0 = Instant::now();
+            let out = self.rt.prefill(&toks)?;
+            self.samples.push(Sample {
+                kind: SampleKind::Prefill { prompt_len: len },
+                latency_s: t0.elapsed().as_secs_f64(),
+            });
+            self.prefills += 1;
+            // The prefill's next-token prediction is the first output token.
+            match class {
+                Class::Online => self.online_tokens += 1,
+                Class::Offline => self.offline_tokens += 1,
+            }
+            let last = argmax(&out.logits);
+            self.lives.insert(
+                rid,
+                Live {
+                    kv: out.kv,
+                    last_token: last,
+                    position: len as i32,
+                    class,
+                },
+            );
+        }
+        Ok(())
+    }
+
+    /// Run one decode iteration over the step's participants, chunked to
+    /// the runtime's largest decode bucket. Every participant advances one
+    /// token, matching the core's step semantics.
+    fn exec_decode(&mut self, step: &PendingStep) -> Result<()> {
+        let max_batch = self.rt.max_decode_batch().max(1);
+        let smax = self.rt.manifest.smax as i32;
+        for chunk in step.participants.chunks(max_batch) {
+            let mut batch: Vec<(RequestId, Live)> = chunk
+                .iter()
+                .filter_map(|&rid| self.lives.remove(&rid).map(|l| (rid, l)))
+                .collect();
+            if batch.is_empty() {
+                continue;
+            }
+            let mut stats = BatchStats::empty();
+            let mut entries: Vec<DecodeEntry> =
+                Vec::with_capacity(batch.len());
+            for (_, l) in batch.iter_mut() {
+                stats = stats.with(l.position as usize);
+                entries.push(DecodeEntry {
+                    token: l.last_token,
+                    position: l.position,
+                    kv: &mut l.kv,
+                });
+            }
+            let t0 = Instant::now();
+            let logits = self.rt.decode(&mut entries)?;
+            let lat = t0.elapsed().as_secs_f64();
+            drop(entries);
+            self.samples.push(Sample {
+                kind: SampleKind::Decode { batch: stats },
+                latency_s: lat,
+            });
+            for (i, (_, l)) in batch.iter_mut().enumerate() {
+                l.last_token = argmax(&logits[i]);
+                l.position = (l.position + 1).min(smax - 1);
+                match l.class {
+                    Class::Online => self.online_tokens += 1,
+                    Class::Offline => self.offline_tokens += 1,
+                }
+            }
+            for (rid, l) in batch {
+                self.lives.insert(rid, l);
+            }
+        }
+        Ok(())
+    }
+
+    /// Consume the executor into the run outcome, reading final request
+    /// state from the core.
+    pub fn into_outcome(
+        mut self,
+        core: &SchedulerCore,
+        trace: &Trace,
+        pm: PerfModel,
+    ) -> EngineOutcome {
+        if let Some(f) = self.feeder.take() {
+            f.join().ok();
+        }
+        let mut recorder = Recorder::new();
+        for r in &core.cluster.requests {
+            recorder.record(r);
+        }
+        let duration = trace.duration().max(1e-9);
+        EngineOutcome {
+            report: recorder.report(&self.cfg.slo, duration),
+            wall_s: self.start.elapsed().as_secs_f64(),
+            prefills: self.prefills,
+            strict_steps: self.strict_steps,
+            relaxed_steps: self.relaxed_steps,
+            online_tokens: self.online_tokens,
+            offline_tokens: self.offline_tokens,
+            samples: self.samples,
+            perf_model: pm,
+        }
+    }
+}
+
+impl Executor for EngineExecutor<'_> {
+    /// Wall-clock seconds since the run started, scaled back to trace time
+    /// so SLO semantics match the trace's arrival process.
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * self.cfg.time_scale.max(1e-9)
+    }
+
+    fn run(&mut self, core: &mut SchedulerCore) -> Result<ExecStats> {
+        loop {
+            // ---- intake: deliver arrivals to the core ----
+            loop {
+                match self.rx.try_recv() {
+                    Ok(r) => {
+                        let now = self.now();
+                        self.events += 1;
+                        let actions = core.on_arrival(now, r.id);
+                        self.apply(core, actions)?;
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        self.feeding = false;
+                        break;
+                    }
+                }
+            }
+
+            // ---- execute the next step the core scheduled ----
+            if let Some(step) = self.pending.pop_front() {
+                self.execute(core, step)?;
+            } else if !self.feeding {
+                // No runnable work and no more arrivals: drained (or
+                // stalled on capacity, which matches simulator semantics).
+                break;
+            } else {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        Ok(ExecStats {
+            end_time: self.now(),
+            events: self.events,
+        })
+    }
 }
 
 fn argmax(logits: &[f32]) -> i32 {
@@ -449,72 +558,4 @@ fn argmax(logits: &[f32]) -> i32 {
         }
     }
     best as i32
-}
-
-/// Credit one generated token to the first `logits.len()` entries of `pool`;
-/// retire finished (or KV-exhausted) stepped requests, recording them.
-fn credit_tokens(
-    pool: &mut Vec<Live>,
-    logits: &[Vec<f32>],
-    now: f64,
-    smax: usize,
-    recorder: &mut Recorder,
-    token_counter: &mut u64,
-) {
-    let stepped = logits.len();
-    for (i, lg) in logits.iter().enumerate() {
-        let l = &mut pool[i];
-        l.last_token = argmax(lg);
-        l.position += 1;
-        *token_counter += 1;
-        l.req.mark_token(now);
-    }
-    let mut keep = Vec::with_capacity(pool.len());
-    for (i, mut l) in pool.drain(..).enumerate() {
-        let done = i < stepped
-            && (l.req.is_finished() || l.position as usize >= smax - 1);
-        if done {
-            l.req.finished_at.get_or_insert(now);
-            recorder.record(&l.req);
-        } else {
-            keep.push(l);
-        }
-    }
-    *pool = keep;
-}
-
-/// Same, but for the subset of `pool` indices in `chosen` (offline mix-in).
-fn credit_chosen(
-    pool: &mut Vec<Live>,
-    chosen: &[usize],
-    logits: &[Vec<f32>],
-    now: f64,
-    smax: usize,
-    recorder: &mut Recorder,
-    token_counter: &mut u64,
-) {
-    let mut stepped = vec![false; pool.len()];
-    for (j, &idx) in chosen.iter().enumerate() {
-        if j >= logits.len() {
-            break;
-        }
-        stepped[idx] = true;
-        let l = &mut pool[idx];
-        l.last_token = argmax(&logits[j]);
-        l.position += 1;
-        *token_counter += 1;
-        l.req.mark_token(now);
-    }
-    let mut keep = Vec::with_capacity(pool.len());
-    for (i, mut l) in pool.drain(..).enumerate() {
-        let done = stepped[i]
-            && (l.req.is_finished() || l.position as usize >= smax - 1);
-        if done {
-            l.req.finished_at.get_or_insert(now);
-            recorder.record(&l.req);
-        } else {
-            keep.push(l);
-        }
-    }
-    *pool = keep;
 }

@@ -1,9 +1,11 @@
 //! Instance state for the two latency-constraint pools (§3.2).
 //!
 //! These are passive state containers; the step *decisions* live in
-//! `coordinator` and the time evolution in `sim` (virtual clock) or
-//! `engine` (real PJRT execution). Keeping them dumb means the simulator
-//! and the real engine share exactly the same scheduling code paths.
+//! `scheduler::SchedulerCore` (over the pure `coordinator` functions) and
+//! the time evolution in an `scheduler::Executor` — virtual clock for the
+//! simulator, real PJRT execution for the engine. Keeping them dumb means
+//! the simulator and the real engine share exactly the same scheduling
+//! code paths.
 
 use std::collections::VecDeque;
 

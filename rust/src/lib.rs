@@ -3,9 +3,10 @@
 //!
 //! Layer 3 (this crate) owns the serving runtime: the latency-constraint
 //! disaggregated coordinator (§3), the roofline performance model (§3.3),
-//! the discrete-event cluster simulator used for the paper's evaluation
-//! sweeps, and the real PJRT engine that executes the AOT artifacts built
-//! by `python/compile` (Layers 1–2, build-time only).
+//! the unified scheduling subsystem ([`scheduler`]) whose single §3.4
+//! decision loop drives both the discrete-event cluster simulator used for
+//! the paper's evaluation sweeps and the real PJRT engine that executes the
+//! AOT artifacts built by `python/compile` (Layers 1–2, build-time only).
 //!
 //! See DESIGN.md for the module inventory and the per-experiment index.
 
@@ -18,8 +19,43 @@ pub mod metrics;
 pub mod perfmodel;
 pub mod request;
 pub mod runtime;
+pub mod scheduler;
 pub mod sim;
 pub mod sweep;
 pub mod testutil;
 pub mod trace;
 pub mod util;
+
+/// One-stop import surface for the public scheduling API.
+///
+/// ```ignore
+/// use ooco::prelude::*;
+///
+/// let trace = online_trace(DatasetProfile::azure_conv(), 0.5, 600.0, 42);
+/// let cfg = SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+/// let result = simulate(&trace, &cfg);
+/// ```
+pub mod prelude {
+    pub use crate::config::{
+        ClusterSpec, HardwareProfile, ModelSpec, SchedulerParams,
+        ServingConfig, SloSpec,
+    };
+    pub use crate::coordinator::{Ablation, OverloadMode, Policy};
+    pub use crate::engine::{
+        serve_trace, serve_trace_with_runtime, EngineConfig, EngineExecutor,
+        EngineOutcome,
+    };
+    pub use crate::metrics::{Recorder, Report};
+    pub use crate::perfmodel::{BatchStats, Bottleneck, PerfModel};
+    pub use crate::request::{Class, Phase, Request, RequestId};
+    pub use crate::scheduler::{
+        Action, ClusterState, CoreConfig, ExecStats, Executor, InstanceRef,
+        KvHome, SchedulerCore, StubWallClockExecutor, VirtualExecutor,
+    };
+    pub use crate::sim::{simulate, SimConfig, SimResult};
+    pub use crate::trace::{
+        datasets::DatasetProfile,
+        generator::{offline_trace, online_trace},
+        Trace,
+    };
+}

@@ -55,7 +55,8 @@ USAGE: ooco <serve|simulate|roofline|trace> [--flags]
   serve     --duration 20 --online-rate 1 --offline-qps 1 --policy ooco
             [--artifacts artifacts] [--seed 42]
   simulate  --model 7b --dataset azure-conv --online-rate 0.5
-            --offline-qps 10 --duration 1800 --policy ooco [--seed 42]
+            --offline-qps 10 --duration 1800 --policy ooco
+            [--ablation full] [--overload best-effort|shed] [--seed 42]
   roofline  --model 7b --hw 910c --batch 128 --kv-len 1000 --prompt 1892
   trace     --dataset azure-conv --rate 1.0 --duration 3600 --scale 1.0
             --out trace.json [--offline-qps 0]"
@@ -88,7 +89,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ));
 
     let cfg = EngineConfig {
-        policy: Policy::by_name(args.str("policy", "ooco"))?,
+        policy: args.parse_flag("policy", Policy::Ooco)?,
         max_output: args.usize("max-output", 16),
         seed,
         ..Default::default()
@@ -121,10 +122,11 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     if let Some(m) = args.opt_str("model") {
         serving.model = ModelSpec::by_name(m)?;
     }
-    let mut cfg = SimConfig::new(serving, Policy::by_name(args.str("policy", "ooco"))?);
-    if args.str("overload", "best-effort") == "shed" {
-        cfg.overload_mode = ooco::coordinator::OverloadMode::Shed;
-    }
+    let mut cfg =
+        SimConfig::new(serving, args.parse_flag("policy", Policy::Ooco)?);
+    cfg.overload_mode =
+        args.parse_flag("overload", ooco::coordinator::OverloadMode::BestEffort)?;
+    cfg.ablation = args.parse_flag("ablation", ooco::coordinator::Ablation::full())?;
     cfg.seed = seed;
     let res = simulate(&trace, &cfg);
     println!("{}", res.report.summary_line());

@@ -1,0 +1,123 @@
+//! Typed scheduling decisions — the protocol between [`super::SchedulerCore`]
+//! and an [`super::Executor`].
+//!
+//! Every entry point on the core returns a `Vec<Action>` describing what the
+//! substrate must do next. Actions split into two kinds:
+//!
+//! - **work orders** the executor must act on: [`Action::StartStep`] (run an
+//!   iteration and call `on_step_end` when it finishes), [`Action::Transfer`]
+//!   (move a KV cache and call `on_transfer_done`), and [`Action::Preempt`]
+//!   (reschedule a truncated offline-prefill step);
+//! - **notifications** that carry no scheduling obligation but let the
+//!   executor track per-request resources (real KV buffers, logs, metrics):
+//!   [`Action::Evict`], [`Action::Migrate`], [`Action::Admit`],
+//!   [`Action::Complete`].
+//!
+//! The stream of actions is the core's *observable behaviour*: two executors
+//! driving the same core over the same trace must produce identical streams
+//! (asserted by `tests/scheduler_differential.rs`). All scheduling state
+//! (queues, KV accounting, routing) lives in the core; executors only own
+//! the clock and the execution substrate.
+
+use crate::instance::StepKind;
+use crate::request::RequestId;
+
+/// Which pool instance an action refers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceRef {
+    /// Latency-relaxed instance (prefill + offline decode).
+    Relaxed(usize),
+    /// Latency-strict instance (online decode + SLO-bounded mix-in).
+    Strict(usize),
+}
+
+/// One scheduling decision emitted at a step boundary (§3.4).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Begin an iteration on `inst` with `participants`. The executor must
+    /// invoke [`super::SchedulerCore::on_step_end`] with this `seq` when the
+    /// step completes — after `predicted_latency` on a virtual clock, or
+    /// after the measured execution on a real substrate.
+    StartStep {
+        inst: InstanceRef,
+        kind: StepKind,
+        participants: Vec<RequestId>,
+        /// Roofline-predicted iteration latency (s). The virtual executor
+        /// uses it as the actual duration; real executors measure instead.
+        predicted_latency: f64,
+        /// Step sequence id; stale completions are ignored by the core.
+        seq: u64,
+    },
+    /// An online arrival truncated the running offline prefill on relaxed
+    /// instance `inst` at the next layer boundary (§3.4.1). The executor
+    /// must deliver the step's `on_step_end(inst, seq)` after `delay`
+    /// instead of at the originally scheduled end.
+    Preempt { inst: usize, delay: f64, seq: u64 },
+    /// An offline request's KV was dropped to make room; it re-enters the
+    /// backlog for recompute. Executors holding real KV buffers free them.
+    Evict { inst: InstanceRef, req: RequestId },
+    /// Algorithm 1 pull: `req`'s offline decode moves from a relaxed to a
+    /// strict instance. Always followed by the matching [`Action::Transfer`].
+    Migrate {
+        req: RequestId,
+        from_relaxed: usize,
+        to_strict: usize,
+    },
+    /// A KV transfer to strict instance `to_strict` started. The executor
+    /// must invoke [`super::SchedulerCore::on_transfer_done`] once the
+    /// `kv_tokens`-sized cache has moved (`predicted_latency` on a virtual
+    /// interconnect; immediately on a shared-memory substrate).
+    Transfer {
+        req: RequestId,
+        to_strict: usize,
+        kv_tokens: usize,
+        predicted_latency: f64,
+    },
+    /// The gating cost model (§3.4.2) admitted an offline request for
+    /// (re-)prefill on relaxed instance `inst`.
+    Admit { inst: usize, req: RequestId },
+    /// `req` produced its final token (or was sacrificed under
+    /// [`crate::coordinator::OverloadMode::Shed`]) and left the cluster.
+    Complete { req: RequestId },
+}
+
+impl Action {
+    /// Request this action is primarily about, when it names one.
+    pub fn request(&self) -> Option<RequestId> {
+        match self {
+            Action::StartStep { .. } => None,
+            Action::Preempt { .. } => None,
+            Action::Evict { req, .. }
+            | Action::Migrate { req, .. }
+            | Action::Transfer { req, .. }
+            | Action::Admit { req, .. }
+            | Action::Complete { req } => Some(*req),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_extraction() {
+        assert_eq!(Action::Complete { req: 7 }.request(), Some(7));
+        assert_eq!(
+            Action::Evict {
+                inst: InstanceRef::Strict(0),
+                req: 3
+            }
+            .request(),
+            Some(3)
+        );
+        let step = Action::StartStep {
+            inst: InstanceRef::Relaxed(1),
+            kind: StepKind::PrefillOnline,
+            participants: vec![1, 2],
+            predicted_latency: 0.5,
+            seq: 4,
+        };
+        assert_eq!(step.request(), None);
+    }
+}

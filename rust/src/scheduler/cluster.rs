@@ -1,0 +1,166 @@
+//! [`ClusterState`]: everything the §3.4 decision loop reasons about —
+//! the two latency-constraint pools, the shared offline backlog, per-request
+//! KV residency, and the load-balancing router. Pure state; all transitions
+//! happen in [`super::SchedulerCore`], all time in an [`super::Executor`].
+
+use std::collections::VecDeque;
+
+use crate::coordinator::Router;
+use crate::instance::{RelaxedInstance, StrictInstance};
+use crate::perfmodel::BatchStats;
+use crate::request::{Request, RequestId};
+
+/// Where a not-yet-decoding request's KV currently lives.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KvHome {
+    None,
+    Relaxed(usize),
+    Strict(usize),
+}
+
+/// Scheduling state for one cluster: instances, backlog, KV homes, router.
+#[derive(Debug)]
+pub struct ClusterState {
+    /// All requests of the workload, indexed by `RequestId`.
+    pub requests: Vec<Request>,
+    /// Per-request KV location index (O(1) residency checks on the decode
+    /// hot path).
+    pub kv_home: Vec<KvHome>,
+    pub relaxed: Vec<RelaxedInstance>,
+    pub strict: Vec<StrictInstance>,
+    /// Offline requests waiting for (re-)prefill, shared across the pool.
+    pub offline_backlog: VecDeque<RequestId>,
+    pub router: Router,
+    /// Per-strict-instance (batch stats, all-included) of the running step,
+    /// consumed by the Algorithm 1 decision at the step boundary.
+    pub strict_step_meta: Vec<Option<(BatchStats, bool)>>,
+    // ---- counters ----
+    /// Online arrivals truncating a running offline prefill (§3.4.1).
+    pub preemptions: u64,
+    /// Offline KV drops (strict + relaxed) forcing recompute.
+    pub evictions: u64,
+    /// Algorithm 1 pulls (offline decode relaxed -> strict).
+    pub migrations: u64,
+}
+
+impl ClusterState {
+    /// Build the cluster for `requests` with `n_relaxed`/`n_strict`
+    /// instances of `kv_capacity_tokens` each. Requests are re-sorted by id
+    /// so `requests[rid]` indexing holds for traces whose arrival order
+    /// differs from id order.
+    pub fn new(
+        mut requests: Vec<Request>,
+        n_relaxed: usize,
+        n_strict: usize,
+        kv_capacity_tokens: usize,
+        block_tokens: usize,
+    ) -> Self {
+        requests.sort_by_key(|r| r.id);
+        debug_assert!(
+            requests.iter().enumerate().all(|(i, r)| r.id == i as u64),
+            "request ids must be dense 0..n"
+        );
+        let n_relaxed = n_relaxed.max(1);
+        let n_strict = n_strict.max(1);
+        let relaxed = (0..n_relaxed)
+            .map(|i| RelaxedInstance::new(i, kv_capacity_tokens, block_tokens))
+            .collect();
+        let strict = (0..n_strict)
+            .map(|i| StrictInstance::new(i, kv_capacity_tokens, block_tokens))
+            .collect();
+        ClusterState {
+            kv_home: vec![KvHome::None; requests.len()],
+            requests,
+            relaxed,
+            strict,
+            offline_backlog: VecDeque::new(),
+            router: Router::new(n_relaxed, n_strict),
+            strict_step_meta: vec![None; n_strict],
+            preemptions: 0,
+            evictions: 0,
+            migrations: 0,
+        }
+    }
+
+    /// No queued, running, or in-flight work anywhere in the cluster.
+    /// (The backlog may legitimately stay non-empty when gating keeps
+    /// rejecting; executors treat "drained" as a stop condition only once
+    /// no more events can fire.)
+    pub fn drained(&self) -> bool {
+        self.offline_backlog.is_empty()
+            && self.relaxed.iter().all(|r| {
+                r.step.is_none()
+                    && r.online_queue.is_empty()
+                    && r.offline_decoding.is_empty()
+            })
+            && self.strict.iter().all(|s| {
+                s.step.is_none()
+                    && s.online.is_empty()
+                    && s.offline.is_empty()
+                    && s.inbound.is_empty()
+                    && s.waiting_for_space.is_empty()
+            })
+    }
+
+    /// Aggregate busy seconds over the strict pool.
+    pub fn strict_busy_s(&self) -> f64 {
+        self.strict.iter().map(|s| s.busy_s).sum()
+    }
+
+    /// Aggregate busy seconds over the relaxed pool.
+    pub fn relaxed_busy_s(&self) -> f64 {
+        self.relaxed.iter().map(|r| r.busy_s).sum()
+    }
+
+    /// Total strict decode iterations executed so far.
+    pub fn strict_steps(&self) -> u64 {
+        self.strict.iter().map(|s| s.steps).sum()
+    }
+
+    /// Offline tokens decoded on strict instances (mix-in volume).
+    pub fn strict_offline_tokens(&self) -> u64 {
+        self.strict.iter().map(|s| s.offline_decode_tokens).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::Class;
+
+    fn reqs(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request::new(i as u64, Class::Online, i as f64, 10, 2))
+            .collect()
+    }
+
+    #[test]
+    fn new_clamps_instance_counts() {
+        let c = ClusterState::new(reqs(3), 0, 0, 1000, 16);
+        assert_eq!(c.relaxed.len(), 1);
+        assert_eq!(c.strict.len(), 1);
+        assert_eq!(c.kv_home.len(), 3);
+        assert!(c.drained());
+    }
+
+    #[test]
+    fn reorders_requests_by_id() {
+        let mut rs = reqs(4);
+        rs.reverse();
+        let c = ClusterState::new(rs, 1, 1, 1000, 16);
+        for (i, r) in c.requests.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn drained_tracks_backlog_and_residents() {
+        let mut c = ClusterState::new(reqs(2), 1, 1, 1000, 16);
+        assert!(c.drained());
+        c.offline_backlog.push_back(0);
+        assert!(!c.drained());
+        c.offline_backlog.clear();
+        c.strict[0].online.push(1);
+        assert!(!c.drained());
+    }
+}

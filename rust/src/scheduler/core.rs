@@ -1,0 +1,1122 @@
+//! [`SchedulerCore`] — the paper's §3.4 decision loop as one reusable state
+//! machine, shared verbatim by the discrete-event simulator and the real
+//! engine ("only the clock is virtual").
+//!
+//! The core owns every scheduling decision of the four coordinator points
+//! (gating, migration/Algorithm 1, mix-decode/Algorithm 2, preemption +
+//! bottleneck-aware eviction) plus routing and KV accounting, exposed
+//! through three step-boundary entry points:
+//!
+//! - [`SchedulerCore::on_arrival`] — a request reached the cluster;
+//! - [`SchedulerCore::on_step_end`] — an iteration finished on an instance;
+//! - [`SchedulerCore::on_transfer_done`] — a KV transfer landed.
+//!
+//! Each returns the typed [`Action`]s the executor must carry out. The core
+//! never sleeps, measures, or schedules: time enters exclusively through the
+//! `now` argument of the entry points, which is a virtual clock under
+//! [`super::VirtualExecutor`] and a wall clock under the engine's executor.
+
+use crate::config::ServingConfig;
+use crate::coordinator::{
+    migration_decision, pick_migration_candidates, preemption_delay,
+    select_decode_batch, select_decode_batch_capped, select_evictions,
+    shed_online_overload, Ablation, Candidate, LengthPref, OverloadMode,
+    Policy,
+};
+use crate::instance::{Step, StepKind};
+use crate::perfmodel::{BatchStats, PerfModel};
+use crate::request::{Phase, Request, RequestId};
+use crate::util::rng::Pcg;
+
+use super::action::{Action, InstanceRef};
+use super::cluster::{ClusterState, KvHome};
+
+/// Configuration of the decision core (substrate-independent: no drain
+/// horizon, no wall-clock compression — those belong to executors).
+#[derive(Debug, Clone)]
+pub struct CoreConfig {
+    pub serving: ServingConfig,
+    pub policy: Policy,
+    pub ablation: Ablation,
+    /// §3.4.4 behaviour when the online-only batch exceeds the SLO bound.
+    pub overload_mode: OverloadMode,
+    /// KV page size in tokens.
+    pub block_tokens: usize,
+    pub seed: u64,
+}
+
+impl CoreConfig {
+    pub fn new(serving: ServingConfig, policy: Policy) -> Self {
+        CoreConfig {
+            serving,
+            policy,
+            ablation: Ablation::full(),
+            overload_mode: OverloadMode::BestEffort,
+            block_tokens: 16,
+            seed: 0,
+        }
+    }
+}
+
+/// The unified §3.4 scheduling state machine.
+#[derive(Debug)]
+pub struct SchedulerCore {
+    pub cfg: CoreConfig,
+    pub pm: PerfModel,
+    pub cluster: ClusterState,
+    /// Mix-decode probe randomness (Algorithm 2's starvation avoidance).
+    rng: Pcg,
+    /// Clock of the most recent entry-point invocation.
+    now: f64,
+    /// Action buffer of the entry point currently executing.
+    actions: Vec<Action>,
+}
+
+impl SchedulerCore {
+    /// Build a core whose perf model derives from `cfg.serving` (the
+    /// simulator path; the engine calibrates its own model instead).
+    pub fn new(requests: Vec<Request>, cfg: CoreConfig) -> Self {
+        let pm = PerfModel::new(
+            cfg.serving.model.clone(),
+            cfg.serving.hardware.clone(),
+        );
+        Self::with_perf_model(requests, cfg, pm)
+    }
+
+    /// Build a core around an explicit (e.g. runtime-calibrated) perf model.
+    pub fn with_perf_model(
+        requests: Vec<Request>,
+        cfg: CoreConfig,
+        pm: PerfModel,
+    ) -> Self {
+        let cap = pm.max_kv_tokens().max(cfg.block_tokens);
+        let cluster = ClusterState::new(
+            requests,
+            cfg.serving.cluster.relaxed_instances,
+            cfg.serving.cluster.strict_instances,
+            cap,
+            cfg.block_tokens,
+        );
+        let rng = Pcg::new(cfg.seed, 9090);
+        SchedulerCore {
+            cfg,
+            pm,
+            cluster,
+            rng,
+            now: 0.0,
+            actions: Vec::new(),
+        }
+    }
+
+    /// Clock of the most recent entry-point invocation.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    // ------------------------------------------------------- entry points
+
+    /// A request arrived at time `now`.
+    pub fn on_arrival(&mut self, now: f64, rid: RequestId) -> Vec<Action> {
+        self.now = now;
+        self.arrival(rid);
+        std::mem::take(&mut self.actions)
+    }
+
+    /// The step with sequence id `seq` on `inst` finished at `now`. Stale
+    /// sequence ids (superseded by a preemption reschedule) are ignored.
+    pub fn on_step_end(
+        &mut self,
+        now: f64,
+        inst: InstanceRef,
+        seq: u64,
+    ) -> Vec<Action> {
+        self.now = now;
+        match inst {
+            InstanceRef::Relaxed(i) => self.relaxed_step_end(i, seq),
+            InstanceRef::Strict(i) => self.strict_step_end(i, seq),
+        }
+        std::mem::take(&mut self.actions)
+    }
+
+    /// The KV transfer of `rid` to strict instance `strict` completed.
+    pub fn on_transfer_done(
+        &mut self,
+        now: f64,
+        rid: RequestId,
+        strict: usize,
+    ) -> Vec<Action> {
+        self.now = now;
+        self.transfer_done(rid, strict);
+        std::mem::take(&mut self.actions)
+    }
+
+    // ------------------------------------------------------------ arrivals
+
+    /// Is this request scheduled as "online" by the active policy?
+    /// (`base P/D` treats offline requests as ordinary online requests.)
+    fn scheduled_online(&self, rid: RequestId) -> bool {
+        self.cluster.requests[rid as usize].class.is_online()
+            || self.cfg.policy == Policy::BasePd
+    }
+
+    fn arrival(&mut self, rid: RequestId) {
+        if self.scheduled_online(rid) {
+            let prompt = self.cluster.requests[rid as usize].prompt_len;
+            let inst = self.cluster.router.route_prefill(prompt);
+            self.cluster.relaxed[inst].online_queue.push_back(rid);
+            self.maybe_preempt(inst);
+            if self.cluster.relaxed[inst].is_idle() {
+                self.start_relaxed_step(inst);
+            }
+        } else {
+            self.cluster.offline_backlog.push_back(rid);
+            self.kick_idle_relaxed();
+        }
+    }
+
+    /// Truncate a running offline prefill at the next layer boundary
+    /// (§3.4.1 layer-level interruption).
+    fn maybe_preempt(&mut self, inst: usize) {
+        if !self.cfg.policy.preempts_offline_prefill() {
+            return;
+        }
+        let now = self.now;
+        let inst_ref = &mut self.cluster.relaxed[inst];
+        let Some(step) = inst_ref.step.as_mut() else {
+            return;
+        };
+        if step.kind != StepKind::PrefillOffline || step.preempted {
+            return;
+        }
+        let span = (step.ends - step.started).max(1e-9);
+        let elapsed_frac = ((now - step.started) / span).clamp(0.0, 1.0);
+        let mean_prompt = (step
+            .participants
+            .iter()
+            .map(|&r| self.cluster.requests[r as usize].recompute_len())
+            .sum::<usize>()
+            / step.participants.len().max(1))
+        .max(1);
+        let delay = preemption_delay(&self.pm, mean_prompt, elapsed_frac);
+        let new_end = now + delay;
+        if new_end < step.ends {
+            step.ends = new_end;
+            step.preempted = true;
+            inst_ref.next_seq += 1;
+            let seq = inst_ref.next_seq;
+            step.seq = seq;
+            self.actions.push(Action::Preempt { inst, delay, seq });
+            self.cluster.preemptions += 1;
+        }
+    }
+
+    fn kick_idle_relaxed(&mut self) {
+        for i in 0..self.cluster.relaxed.len() {
+            if self.cluster.relaxed[i].is_idle() {
+                self.start_relaxed_step(i);
+                if !self.cluster.relaxed[i].is_idle() {
+                    return;
+                }
+            }
+        }
+    }
+
+    // ----------------------------------------------------- relaxed stepping
+
+    fn start_relaxed_step(&mut self, inst: usize) {
+        if !self.cluster.relaxed[inst].is_idle() {
+            return;
+        }
+        if self.start_online_prefill(inst) {
+            return;
+        }
+        if self.start_offline_prefill(inst) {
+            return;
+        }
+        self.start_relaxed_decode(inst);
+    }
+
+    /// Batch online prefills up to the token budget.
+    fn start_online_prefill(&mut self, inst: usize) -> bool {
+        if self.cluster.relaxed[inst].online_queue.is_empty() {
+            return false;
+        }
+        let budget = self.cfg.serving.sched.prefill_token_budget;
+        let mut batch: Vec<RequestId> = Vec::new();
+        let mut lens: Vec<usize> = Vec::new();
+        let mut used = 0usize;
+        while let Some(&rid) = self.cluster.relaxed[inst].online_queue.front() {
+            let len = self.cluster.requests[rid as usize].recompute_len();
+            if !batch.is_empty() && used + len > budget {
+                break;
+            }
+            // KV space for the prefill output, evicting offline if needed.
+            if !self.fit_on_relaxed(inst, len + 1) {
+                if batch.is_empty() {
+                    // Head request cannot fit even after eviction: reject.
+                    self.cluster.relaxed[inst].online_queue.pop_front();
+                    self.cluster.requests[rid as usize].phase = Phase::Finished;
+                    self.actions.push(Action::Complete { req: rid });
+                    continue;
+                }
+                break;
+            }
+            self.cluster.relaxed[inst].online_queue.pop_front();
+            self.cluster.relaxed[inst]
+                .kv
+                .admit(rid, len + 1)
+                .expect("fit checked");
+            self.cluster.kv_home[rid as usize] = KvHome::Relaxed(inst);
+            self.cluster.requests[rid as usize].phase = Phase::Prefilling;
+            used += len;
+            batch.push(rid);
+            lens.push(len);
+        }
+        if batch.is_empty() {
+            return false;
+        }
+        let latency = self.pm.prefill_cost(&lens).latency_s;
+        self.begin_relaxed_step(inst, StepKind::PrefillOnline, batch, latency);
+        self.cluster.relaxed[inst].busy_online_prefill_s += latency;
+        true
+    }
+
+    /// Make room for `tokens` on a relaxed instance by evicting offline
+    /// decode residents (oldest first — relaxed nodes have no bottleneck
+    /// preference; their decode batch has no SLO).
+    fn fit_on_relaxed(&mut self, inst: usize, tokens: usize) -> bool {
+        while !self.cluster.relaxed[inst].kv.can_fit(tokens) {
+            // Evict a parked/decoding offline resident not in the current
+            // step (relaxed instance is idle here, so all are safe).
+            let Some(&victim) =
+                self.cluster.relaxed[inst].offline_decoding.first()
+            else {
+                return false;
+            };
+            self.evict_offline_from_relaxed(inst, victim);
+        }
+        true
+    }
+
+    fn evict_offline_from_relaxed(&mut self, inst: usize, rid: RequestId) {
+        self.cluster.relaxed[inst].kv.release(rid).expect("resident kv");
+        self.cluster.relaxed[inst]
+            .offline_decoding
+            .retain(|&r| r != rid);
+        self.cluster.kv_home[rid as usize] = KvHome::None;
+        self.cluster.requests[rid as usize].evict();
+        self.cluster.offline_backlog.push_back(rid);
+        self.cluster.evictions += 1;
+        self.actions.push(Action::Evict {
+            inst: InstanceRef::Relaxed(inst),
+            req: rid,
+        });
+    }
+
+    /// Admit offline prefills from the global backlog (gating in OOCO,
+    /// plain idle-only admission in `online priority`).
+    fn start_offline_prefill(&mut self, inst: usize) -> bool {
+        if self.cluster.offline_backlog.is_empty() {
+            return false;
+        }
+        // base P/D never reaches here (offline went through the online path).
+        let budget = self.cfg.serving.sched.prefill_token_budget;
+        let gating_on =
+            self.cfg.policy.gating_enabled() && self.cfg.ablation.gating;
+        let mut batch = Vec::new();
+        let mut lens = Vec::new();
+        let mut used = 0usize;
+        // Reserve headroom for a typical online prefill so offline work
+        // doesn't crowd out preempting arrivals.
+        let reserve = 4096usize;
+        while let Some(&rid) = self.cluster.offline_backlog.front() {
+            let len = self.cluster.requests[rid as usize].recompute_len();
+            if !batch.is_empty() && used + len > budget {
+                break;
+            }
+            let free = self.cluster.relaxed[inst].kv.free_tokens();
+            if free < len + 1 + reserve {
+                break;
+            }
+            if gating_on && !self.gating_admits(inst, rid, free - reserve) {
+                break;
+            }
+            self.cluster.offline_backlog.pop_front();
+            self.cluster.relaxed[inst]
+                .kv
+                .admit(rid, len + 1)
+                .expect("fit checked");
+            self.cluster.kv_home[rid as usize] = KvHome::Relaxed(inst);
+            self.cluster.requests[rid as usize].phase = Phase::Prefilling;
+            used += len;
+            batch.push(rid);
+            lens.push(len);
+            self.actions.push(Action::Admit { inst, req: rid });
+        }
+        if batch.is_empty() {
+            return false;
+        }
+        let latency = self.pm.prefill_cost(&lens).latency_s;
+        self.begin_relaxed_step(inst, StepKind::PrefillOffline, batch, latency);
+        true
+    }
+
+    fn gating_admits(&mut self, inst: usize, rid: RequestId, free: usize) -> bool {
+        let pool = self.relaxed_pool_stats(inst);
+        let req = &self.cluster.requests[rid as usize];
+        let remaining: f64 = if self.cluster.relaxed[inst]
+            .offline_decoding
+            .is_empty()
+        {
+            0.0
+        } else {
+            self.cluster.relaxed[inst]
+                .offline_decoding
+                .iter()
+                .map(|&r| {
+                    let q = &self.cluster.requests[r as usize];
+                    (q.output_len - q.generated.min(q.output_len)) as f64
+                })
+                .sum::<f64>()
+                / self.cluster.relaxed[inst].offline_decoding.len() as f64
+        };
+        let input = crate::coordinator::GatingInput {
+            pool,
+            candidate_prompt: req.recompute_len(),
+            candidate_output: req.output_len,
+            pool_mean_remaining: remaining,
+            free_kv_tokens: free,
+        };
+        crate::coordinator::should_prefill_offline(
+            &self.pm,
+            &input,
+            &self.cfg.serving.sched,
+        )
+    }
+
+    fn relaxed_pool_stats(&self, inst: usize) -> BatchStats {
+        let mut s = BatchStats::empty();
+        for &r in &self.cluster.relaxed[inst].offline_decoding {
+            s = s.with(self.cluster.requests[r as usize].kv_len());
+        }
+        s
+    }
+
+    /// Offline decode on a relaxed instance (OOCO's latency-constraint
+    /// flexibility): batch every resident — no per-iteration bound here.
+    fn start_relaxed_decode(&mut self, inst: usize) {
+        if !self.cfg.policy.offline_decode_on_relaxed()
+            || self.cluster.relaxed[inst].offline_decoding.is_empty()
+        {
+            return;
+        }
+        let batch: Vec<RequestId> =
+            self.cluster.relaxed[inst].offline_decoding.clone();
+        let stats = self.relaxed_pool_stats(inst);
+        let latency = self.pm.decode_latency(stats);
+        self.begin_relaxed_step(inst, StepKind::DecodeRelaxed, batch, latency);
+    }
+
+    fn begin_relaxed_step(
+        &mut self,
+        inst: usize,
+        kind: StepKind,
+        participants: Vec<RequestId>,
+        latency: f64,
+    ) {
+        let seq = self.cluster.relaxed[inst].alloc_seq();
+        let span = latency.max(1e-9);
+        let ends = self.now + span;
+        self.actions.push(Action::StartStep {
+            inst: InstanceRef::Relaxed(inst),
+            kind,
+            participants: participants.clone(),
+            predicted_latency: span,
+            seq,
+        });
+        self.cluster.relaxed[inst].step = Some(Step {
+            kind,
+            started: self.now,
+            ends,
+            participants,
+            seq,
+            preempted: false,
+        });
+        self.cluster.relaxed[inst].busy_s += latency;
+    }
+
+    fn relaxed_step_end(&mut self, inst: usize, seq: u64) {
+        let valid = self.cluster.relaxed[inst]
+            .step
+            .as_ref()
+            .map(|s| s.seq == seq)
+            .unwrap_or(false);
+        if !valid {
+            return; // stale completion after preemption reschedule
+        }
+        let step = self.cluster.relaxed[inst].step.take().expect("checked");
+        match step.kind {
+            StepKind::PrefillOnline => {
+                for &rid in &step.participants {
+                    self.finish_prefill_online(inst, rid);
+                }
+            }
+            StepKind::PrefillOffline => {
+                if step.preempted {
+                    // Layer-level interruption: work discarded, requests
+                    // return to the backlog for recompute.
+                    for &rid in &step.participants {
+                        self.cluster.relaxed[inst].kv.release(rid).expect("kv");
+                        self.cluster.kv_home[rid as usize] = KvHome::None;
+                        self.cluster.requests[rid as usize].phase = Phase::Queued;
+                        self.cluster.offline_backlog.push_front(rid);
+                    }
+                } else {
+                    for &rid in &step.participants {
+                        self.finish_prefill_offline(inst, rid);
+                    }
+                }
+            }
+            StepKind::DecodeRelaxed => {
+                for &rid in &step.participants {
+                    self.relaxed_decode_token(inst, rid);
+                }
+            }
+            StepKind::DecodeStrict => unreachable!("strict step on relaxed"),
+        }
+        self.start_relaxed_step(inst);
+    }
+
+    fn finish_prefill_online(&mut self, inst: usize, rid: RequestId) {
+        let recompute = self.cluster.requests[rid as usize].recompute_len();
+        self.cluster.router.prefill_done(inst, recompute);
+        self.cluster.requests[rid as usize].mark_first_token(self.now);
+        if self.cluster.requests[rid as usize].is_finished() {
+            // Single-token request: done at prefill.
+            self.cluster.requests[rid as usize].finished_at = Some(self.now);
+            self.cluster.requests[rid as usize].phase = Phase::Finished;
+            self.cluster.relaxed[inst].kv.release(rid).expect("kv");
+            self.cluster.kv_home[rid as usize] = KvHome::None;
+            self.actions.push(Action::Complete { req: rid });
+            return;
+        }
+        // Push model: dispatch to a strict instance immediately.
+        let kv_len = self.cluster.requests[rid as usize].kv_len();
+        let target = self.cluster.router.route_decode(kv_len);
+        self.try_dispatch_to_strict(rid, inst, target);
+    }
+
+    /// Reserve KV on the strict instance (evicting offline per policy) and
+    /// start the transfer; park in `waiting_for_space` on failure.
+    fn try_dispatch_to_strict(
+        &mut self,
+        rid: RequestId,
+        from_relaxed: usize,
+        target: usize,
+    ) {
+        let kv_len = self.cluster.requests[rid as usize].kv_len();
+        let need = kv_len + 1;
+        if !self.cluster.strict[target].kv.can_fit(need) {
+            self.make_room_on_strict(target, need);
+        }
+        if self.cluster.strict[target].kv.can_fit(need) {
+            self.cluster.strict[target]
+                .kv
+                .admit(rid, need)
+                .expect("fit checked");
+            self.cluster.relaxed[from_relaxed].kv.release(rid).expect("kv");
+            self.cluster.kv_home[rid as usize] = KvHome::Strict(target);
+            self.cluster.requests[rid as usize].phase = Phase::Migrating;
+            self.cluster.strict[target].inbound.push(rid);
+            let delay = self.pm.kv_transfer_latency(kv_len);
+            self.actions.push(Action::Transfer {
+                req: rid,
+                to_strict: target,
+                kv_tokens: kv_len,
+                predicted_latency: delay,
+            });
+        } else {
+            // Overload: wait (KV stays on the relaxed node).
+            self.cluster.strict[target].waiting_for_space.push_back(rid);
+        }
+    }
+
+    /// Evict offline decode residents on a strict instance to free `need`
+    /// tokens. Only legal between steps; callers run at step boundaries.
+    fn make_room_on_strict(&mut self, inst: usize, need: usize) {
+        if self.cluster.strict[inst].offline.is_empty() {
+            return;
+        }
+        // Never evict requests participating in a running step.
+        let in_flight: Vec<RequestId> = self.cluster.strict[inst]
+            .step
+            .as_ref()
+            .map(|s| s.participants.clone())
+            .unwrap_or_default();
+        let victims: Vec<Candidate> = self.cluster.strict[inst]
+            .offline
+            .iter()
+            .filter(|r| !in_flight.contains(r))
+            .map(|&r| (r, self.cluster.requests[r as usize].kv_len()))
+            .collect();
+        if victims.is_empty() {
+            return;
+        }
+        let free_now = self.cluster.strict[inst].kv.free_tokens();
+        let deficit = need.saturating_sub(free_now);
+        if deficit == 0 {
+            return;
+        }
+        let stats = self.strict_resident_stats(inst);
+        let bottleneck = self.pm.decode_bottleneck(stats);
+        let aware = self.cfg.policy.bottleneck_aware_eviction()
+            && self.cfg.ablation.bottleneck_eviction;
+        let chosen =
+            select_evictions(&self.pm, &victims, deficit, bottleneck, aware);
+        for rid in chosen {
+            self.evict_offline_from_strict(inst, rid);
+        }
+    }
+
+    fn evict_offline_from_strict(&mut self, inst: usize, rid: RequestId) {
+        let kv = self.cluster.requests[rid as usize].kv_len();
+        self.cluster.strict[inst].kv.release(rid).expect("resident");
+        self.cluster.strict[inst].remove_offline(rid);
+        self.cluster.router.decode_done(inst, kv);
+        self.cluster.kv_home[rid as usize] = KvHome::None;
+        self.cluster.requests[rid as usize].evict();
+        self.cluster.offline_backlog.push_back(rid);
+        self.cluster.evictions += 1;
+        self.actions.push(Action::Evict {
+            inst: InstanceRef::Strict(inst),
+            req: rid,
+        });
+        self.kick_idle_relaxed();
+    }
+
+    fn finish_prefill_offline(&mut self, inst: usize, rid: RequestId) {
+        self.cluster.requests[rid as usize].mark_first_token(self.now);
+        if self.cluster.requests[rid as usize].is_finished() {
+            self.cluster.requests[rid as usize].finished_at = Some(self.now);
+            self.cluster.requests[rid as usize].phase = Phase::Finished;
+            self.cluster.relaxed[inst].kv.release(rid).expect("kv");
+            self.cluster.kv_home[rid as usize] = KvHome::None;
+            self.actions.push(Action::Complete { req: rid });
+            return;
+        }
+        if self.cfg.policy.offline_decode_on_relaxed() {
+            // OOCO: decode right here; the strict pool pulls later (Alg. 1).
+            self.cluster.requests[rid as usize].phase = Phase::Decoding;
+            self.cluster.relaxed[inst].offline_decoding.push(rid);
+        } else {
+            // online priority: offline decode belongs to the strict pool.
+            let kv_len = self.cluster.requests[rid as usize].kv_len();
+            let target = self.cluster.router.route_decode(kv_len);
+            if self.cluster.strict[target].kv.can_fit(kv_len + 1) {
+                self.cluster.strict[target]
+                    .kv
+                    .admit(rid, kv_len + 1)
+                    .expect("fit");
+                self.cluster.relaxed[inst].kv.release(rid).expect("kv");
+                self.cluster.kv_home[rid as usize] = KvHome::Strict(target);
+                self.cluster.requests[rid as usize].phase = Phase::Migrating;
+                self.cluster.strict[target].inbound.push(rid);
+                let delay = self.pm.kv_transfer_latency(kv_len);
+                self.actions.push(Action::Transfer {
+                    req: rid,
+                    to_strict: target,
+                    kv_tokens: kv_len,
+                    predicted_latency: delay,
+                });
+            } else {
+                // Park on the relaxed node (holds KV, does not decode);
+                // retried at strict step boundaries.
+                self.cluster.router.decode_done(target, kv_len);
+                self.cluster.relaxed[inst].offline_decoding.push(rid);
+            }
+        }
+    }
+
+    fn relaxed_decode_token(&mut self, inst: usize, rid: RequestId) {
+        // Evicted/migrated-mid-step guard, O(1) via the location index
+        // (migration moves kv_home to Strict; eviction resets it to None).
+        if self.cluster.kv_home[rid as usize] != KvHome::Relaxed(inst) {
+            return;
+        }
+        let done = self.cluster.requests[rid as usize].mark_token(self.now);
+        if done {
+            self.cluster.relaxed[inst].kv.release(rid).expect("kv");
+            self.cluster.relaxed[inst]
+                .offline_decoding
+                .retain(|&r| r != rid);
+            self.cluster.kv_home[rid as usize] = KvHome::None;
+            self.actions.push(Action::Complete { req: rid });
+            return;
+        }
+        if self.cluster.relaxed[inst].kv.grow(rid, 1).is_err() {
+            self.evict_offline_from_relaxed(inst, rid);
+        }
+    }
+
+    // ------------------------------------------------------ strict stepping
+
+    fn strict_resident_stats(&self, inst: usize) -> BatchStats {
+        let mut s = BatchStats::empty();
+        for &r in self.cluster.strict[inst]
+            .online
+            .iter()
+            .chain(&self.cluster.strict[inst].offline)
+        {
+            s = s.with(self.cluster.requests[r as usize].kv_len());
+        }
+        s
+    }
+
+    fn start_strict_step(&mut self, inst: usize) {
+        if !self.cluster.strict[inst].is_idle()
+            || !self.cluster.strict[inst].has_decode_work()
+        {
+            return;
+        }
+        let mut online: Vec<Candidate> = self.cluster.strict[inst]
+            .online
+            .iter()
+            .map(|&r| (r, self.cluster.requests[r as usize].kv_len()))
+            .collect();
+
+        // §3.4.4 overload handling: in Shed mode, sacrifice the longest
+        // online requests when even the online-only batch exceeds the SLO,
+        // preserving the SLO for the remainder (OOCO only — baselines have
+        // no latency predictor to act on).
+        if self.cfg.overload_mode == OverloadMode::Shed
+            && self.cfg.policy == Policy::Ooco
+            && !online.is_empty()
+        {
+            let toks: usize = online.iter().map(|c| c.1).sum();
+            let stats = BatchStats::new(online.len(), toks);
+            if self.pm.decode_latency(stats) > self.cfg.serving.slo.tpot {
+                let (kept, shed) = shed_online_overload(
+                    &self.pm,
+                    &online,
+                    self.cfg.serving.slo.tpot,
+                );
+                for rid in shed {
+                    let kv = self.cluster.requests[rid as usize].kv_len();
+                    self.cluster.strict[inst].kv.release(rid).expect("resident");
+                    self.cluster.strict[inst].remove_online(rid);
+                    self.cluster.router.decode_done(inst, kv);
+                    self.cluster.kv_home[rid as usize] = KvHome::None;
+                    // Sacrificed: terminal, unfinished -> counts as an SLO
+                    // violation in the report (the paper's trade).
+                    self.cluster.requests[rid as usize].phase = Phase::Finished;
+                    self.actions.push(Action::Complete { req: rid });
+                }
+                online = kept;
+            }
+        }
+        let offline: Vec<Candidate> = self.cluster.strict[inst]
+            .offline
+            .iter()
+            .map(|&r| (r, self.cluster.requests[r as usize].kv_len()))
+            .collect();
+
+        let slo = self.cfg.serving.slo.tpot;
+        let selection = match self.cfg.policy {
+            Policy::Ooco if self.cfg.ablation.mix_decode => select_decode_batch(
+                &self.pm,
+                &online,
+                &offline,
+                slo,
+                self.cfg.serving.sched.mix_probe_iters,
+                &mut self.rng,
+            ),
+            Policy::Ooco => select_decode_batch_capped(
+                &online,
+                &offline,
+                self.cfg.serving.sched.baseline_decode_cap,
+            ),
+            Policy::OnlinePriority => select_decode_batch_capped(
+                &online,
+                &offline,
+                self.cfg.serving.sched.baseline_decode_cap,
+            ),
+            Policy::BasePd => {
+                // Everything is "online": batch all residents, no bound.
+                select_decode_batch_capped(&online, &offline, usize::MAX)
+            }
+        };
+
+        let mut participants: Vec<RequestId> =
+            online.iter().map(|c| c.0).collect();
+        participants.extend(&selection.offline);
+        if participants.is_empty() {
+            return;
+        }
+        let stats = selection.stats;
+        let latency = self.pm.decode_latency(stats);
+        let all_included = participants.len()
+            == self.cluster.strict[inst].online.len()
+                + self.cluster.strict[inst].offline.len();
+
+        let seq = self.cluster.strict[inst].alloc_seq();
+        let span = latency.max(1e-9);
+        let ends = self.now + span;
+        self.actions.push(Action::StartStep {
+            inst: InstanceRef::Strict(inst),
+            kind: StepKind::DecodeStrict,
+            participants: participants.clone(),
+            predicted_latency: span,
+            seq,
+        });
+        self.cluster.strict[inst].step = Some(Step {
+            kind: StepKind::DecodeStrict,
+            started: self.now,
+            ends,
+            participants,
+            seq,
+            preempted: false,
+        });
+        self.cluster.strict[inst].busy_s += latency;
+        self.cluster.strict[inst].steps += 1;
+        // Stash per-step info for the migration decision at the boundary.
+        self.cluster.strict_step_meta[inst] = Some((stats, all_included));
+    }
+
+    fn strict_step_end(&mut self, inst: usize, seq: u64) {
+        let valid = self.cluster.strict[inst]
+            .step
+            .as_ref()
+            .map(|s| s.seq == seq)
+            .unwrap_or(false);
+        if !valid {
+            return;
+        }
+        let step = self.cluster.strict[inst].step.take().expect("checked");
+        for &rid in &step.participants {
+            self.strict_decode_token(inst, rid);
+        }
+        // Step boundary work: retry waiting admissions, then migration pull.
+        self.retry_waiting(inst);
+        self.maybe_pull_migration(inst);
+        self.pull_parked_offline(inst);
+        self.start_strict_step(inst);
+    }
+
+    fn strict_decode_token(&mut self, inst: usize, rid: RequestId) {
+        let is_online = self.cluster.requests[rid as usize].class.is_online()
+            || self.cfg.policy == Policy::BasePd;
+        // Evicted-mid-step guard. PERF (§Perf): O(1) via the kv_home
+        // location index — a `Vec::contains` residency check would be
+        // O(batch) per participant, O(batch^2) per step.
+        if self.cluster.kv_home[rid as usize] != KvHome::Strict(inst) {
+            return;
+        }
+        if self.cluster.requests[rid as usize].class
+            == crate::request::Class::Offline
+        {
+            self.cluster.strict[inst].offline_decode_tokens += 1;
+        }
+        let done = self.cluster.requests[rid as usize].mark_token(self.now);
+        let kv = self.cluster.requests[rid as usize].kv_len();
+        if done {
+            self.cluster.strict[inst].kv.release(rid).expect("kv");
+            if is_online {
+                self.cluster.strict[inst].remove_online(rid);
+            } else {
+                self.cluster.strict[inst].remove_offline(rid);
+            }
+            self.cluster.router.decode_done(inst, kv);
+            self.cluster.kv_home[rid as usize] = KvHome::None;
+            self.actions.push(Action::Complete { req: rid });
+            return;
+        }
+        self.cluster.router.decode_grow(inst, 1);
+        if self.cluster.strict[inst].kv.grow(rid, 1).is_err() {
+            if is_online {
+                // Free offline space for the online request's growth.
+                self.make_room_on_strict(inst, self.cfg.block_tokens);
+                if self.cluster.strict[inst].kv.grow(rid, 1).is_err() {
+                    // True overload; token produced, KV undercounted by one
+                    // block until space frees (documented approximation).
+                }
+            } else {
+                self.evict_offline_from_strict(inst, rid);
+            }
+        }
+    }
+
+    /// Retry online requests that were waiting for strict KV space.
+    fn retry_waiting(&mut self, inst: usize) {
+        let mut remaining = std::collections::VecDeque::new();
+        while let Some(rid) =
+            self.cluster.strict[inst].waiting_for_space.pop_front()
+        {
+            let kv_len = self.cluster.requests[rid as usize].kv_len();
+            let need = kv_len + 1;
+            if !self.cluster.strict[inst].kv.can_fit(need) {
+                self.make_room_on_strict(inst, need);
+            }
+            if self.cluster.strict[inst].kv.can_fit(need) {
+                let from = match self.cluster.kv_home[rid as usize] {
+                    KvHome::Relaxed(i) => i,
+                    _ => unreachable!("waiting request KV must be on relaxed"),
+                };
+                self.cluster.strict[inst].kv.admit(rid, need).expect("fit");
+                self.cluster.relaxed[from].kv.release(rid).expect("kv");
+                self.cluster.kv_home[rid as usize] = KvHome::Strict(inst);
+                self.cluster.strict[inst].inbound.push(rid);
+                let delay = self.pm.kv_transfer_latency(kv_len);
+                self.actions.push(Action::Transfer {
+                    req: rid,
+                    to_strict: inst,
+                    kv_tokens: kv_len,
+                    predicted_latency: delay,
+                });
+            } else {
+                remaining.push_back(rid);
+            }
+        }
+        self.cluster.strict[inst].waiting_for_space = remaining;
+    }
+
+    /// Algorithm 1: pull offline decodes from relaxed nodes when headroom
+    /// exists (OOCO only).
+    fn maybe_pull_migration(&mut self, inst: usize) {
+        if !self.cfg.policy.migration_enabled() || !self.cfg.ablation.migration
+        {
+            return;
+        }
+        let Some((stats, all_included)) =
+            self.cluster.strict_step_meta[inst].take()
+        else {
+            return;
+        };
+        let pref = migration_decision(
+            &self.pm,
+            stats,
+            all_included,
+            self.cfg.serving.slo.tpot,
+            self.cfg.serving.sched.slo_margin,
+        );
+        if pref == LengthPref::None {
+            return;
+        }
+        // Pull from the relaxed instance with the largest offline pool.
+        let Some(src) = (0..self.cluster.relaxed.len())
+            .filter(|&i| !self.cluster.relaxed[i].offline_decoding.is_empty())
+            .max_by_key(|&i| self.cluster.relaxed[i].offline_decoding.len())
+        else {
+            return;
+        };
+        let cands: Vec<Candidate> = self.cluster.relaxed[src]
+            .offline_decoding
+            .iter()
+            .map(|&r| (r, self.cluster.requests[r as usize].kv_len()))
+            .collect();
+        let picked = pick_migration_candidates(
+            pref,
+            &cands,
+            self.cfg.serving.sched.migration_batch,
+        );
+        for rid in picked {
+            // Relaxed decode step may be running with this request; removal
+            // from residency makes the in-flight token a no-op (guarded in
+            // relaxed_decode_token).
+            let kv_len = self.cluster.requests[rid as usize].kv_len();
+            if !self.cluster.strict[inst].kv.can_fit(kv_len + 1) {
+                break;
+            }
+            self.cluster.strict[inst]
+                .kv
+                .admit(rid, kv_len + 1)
+                .expect("fit");
+            self.cluster.relaxed[src].kv.release(rid).expect("kv");
+            self.cluster.relaxed[src]
+                .offline_decoding
+                .retain(|&r| r != rid);
+            self.cluster.kv_home[rid as usize] = KvHome::Strict(inst);
+            self.cluster.requests[rid as usize].phase = Phase::Migrating;
+            self.cluster.router.route_decode(kv_len);
+            self.cluster.strict[inst].inbound.push(rid);
+            let delay = self.pm.kv_transfer_latency(kv_len);
+            self.actions.push(Action::Migrate {
+                req: rid,
+                from_relaxed: src,
+                to_strict: inst,
+            });
+            self.actions.push(Action::Transfer {
+                req: rid,
+                to_strict: inst,
+                kv_tokens: kv_len,
+                predicted_latency: delay,
+            });
+            self.cluster.migrations += 1;
+        }
+    }
+
+    /// `online priority`: parked offline requests (prefilled on relaxed,
+    /// waiting for strict space) move over as space frees — fit-only, no
+    /// Algorithm 1.
+    fn pull_parked_offline(&mut self, inst: usize) {
+        if self.cfg.policy.offline_decode_on_relaxed()
+            || self.cfg.policy == Policy::BasePd
+        {
+            return;
+        }
+        for src in 0..self.cluster.relaxed.len() {
+            while let Some(&rid) =
+                self.cluster.relaxed[src].offline_decoding.first()
+            {
+                let kv_len = self.cluster.requests[rid as usize].kv_len();
+                if !self.cluster.strict[inst].kv.can_fit(kv_len + 1) {
+                    return;
+                }
+                self.cluster.strict[inst]
+                    .kv
+                    .admit(rid, kv_len + 1)
+                    .expect("fit");
+                self.cluster.relaxed[src].kv.release(rid).expect("kv");
+                self.cluster.relaxed[src]
+                    .offline_decoding
+                    .retain(|&r| r != rid);
+                self.cluster.kv_home[rid as usize] = KvHome::Strict(inst);
+                self.cluster.requests[rid as usize].phase = Phase::Migrating;
+                self.cluster.router.route_decode(kv_len);
+                self.cluster.strict[inst].inbound.push(rid);
+                let delay = self.pm.kv_transfer_latency(kv_len);
+                self.actions.push(Action::Transfer {
+                    req: rid,
+                    to_strict: inst,
+                    kv_tokens: kv_len,
+                    predicted_latency: delay,
+                });
+            }
+        }
+    }
+
+    fn transfer_done(&mut self, rid: RequestId, inst: usize) {
+        self.cluster.strict[inst].inbound.retain(|&r| r != rid);
+        let is_online = self.cluster.requests[rid as usize].class.is_online()
+            || self.cfg.policy == Policy::BasePd;
+        self.cluster.requests[rid as usize].phase = Phase::Decoding;
+        if is_online {
+            self.cluster.strict[inst].online.push(rid);
+        } else {
+            self.cluster.strict[inst].offline.push(rid);
+        }
+        self.start_strict_step(inst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::Class;
+
+    fn core_with(reqs: Vec<Request>) -> SchedulerCore {
+        let cfg = CoreConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+        SchedulerCore::new(reqs, cfg)
+    }
+
+    #[test]
+    fn online_arrival_starts_a_prefill_step() {
+        let mut core =
+            core_with(vec![Request::new(0, Class::Online, 0.0, 500, 8)]);
+        let actions = core.on_arrival(0.0, 0);
+        assert!(matches!(
+            actions.as_slice(),
+            [Action::StartStep {
+                inst: InstanceRef::Relaxed(0),
+                kind: StepKind::PrefillOnline,
+                ..
+            }]
+        ));
+        // The step is registered; a stale step-end seq is ignored.
+        assert!(core.on_step_end(1.0, InstanceRef::Relaxed(0), 999).is_empty());
+    }
+
+    #[test]
+    fn prefill_completion_dispatches_to_strict() {
+        let mut core =
+            core_with(vec![Request::new(0, Class::Online, 0.0, 500, 8)]);
+        let actions = core.on_arrival(0.0, 0);
+        let Action::StartStep { seq, predicted_latency, .. } = &actions[0]
+        else {
+            panic!("expected StartStep");
+        };
+        let end = core.on_step_end(*predicted_latency, InstanceRef::Relaxed(0), *seq);
+        assert!(
+            end.iter().any(|a| matches!(a, Action::Transfer { req: 0, .. })),
+            "prefill end must start a KV transfer, got {end:?}"
+        );
+        // Transfer completion starts the strict decode step.
+        let dec = core.on_transfer_done(0.2, 0, 0);
+        assert!(matches!(
+            dec.as_slice(),
+            [Action::StartStep {
+                inst: InstanceRef::Strict(0),
+                kind: StepKind::DecodeStrict,
+                ..
+            }]
+        ));
+    }
+
+    #[test]
+    fn offline_arrival_goes_through_gating_admit() {
+        let mut core =
+            core_with(vec![Request::new(0, Class::Offline, 0.0, 400, 16)]);
+        let actions = core.on_arrival(0.0, 0);
+        assert!(
+            actions
+                .iter()
+                .any(|a| matches!(a, Action::Admit { req: 0, .. })),
+            "offline request must be gated-in on an idle cluster: {actions:?}"
+        );
+        assert!(actions.iter().any(|a| matches!(
+            a,
+            Action::StartStep {
+                kind: StepKind::PrefillOffline,
+                ..
+            }
+        )));
+    }
+
+    #[test]
+    fn base_pd_treats_offline_as_online() {
+        let cfg = CoreConfig::new(ServingConfig::preset_7b(), Policy::BasePd);
+        let mut core = SchedulerCore::new(
+            vec![Request::new(0, Class::Offline, 0.0, 400, 16)],
+            cfg,
+        );
+        let actions = core.on_arrival(0.0, 0);
+        assert!(matches!(
+            actions.as_slice(),
+            [Action::StartStep {
+                kind: StepKind::PrefillOnline,
+                ..
+            }]
+        ));
+    }
+
+    #[test]
+    fn online_arrival_preempts_running_offline_prefill() {
+        let mut core = core_with(vec![
+            Request::new(0, Class::Offline, 0.0, 4000, 64),
+            Request::new(1, Class::Online, 0.001, 500, 8),
+        ]);
+        let a0 = core.on_arrival(0.0, 0);
+        assert!(a0.iter().any(|a| matches!(
+            a,
+            Action::StartStep {
+                kind: StepKind::PrefillOffline,
+                ..
+            }
+        )));
+        let a1 = core.on_arrival(0.001, 1);
+        assert!(
+            a1.iter().any(|a| matches!(a, Action::Preempt { .. })),
+            "online arrival mid-offline-prefill must preempt: {a1:?}"
+        );
+        assert_eq!(core.cluster.preemptions, 1);
+    }
+}

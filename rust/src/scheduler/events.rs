@@ -1,4 +1,5 @@
-//! Event queue for the discrete-event simulator.
+//! Event queue for virtual-clock executors (moved here from `sim::events`;
+//! `sim` re-exports it for compatibility).
 //!
 //! A binary min-heap keyed on (time, insertion order). The tie-breaking
 //! sequence number makes the simulation fully deterministic regardless of

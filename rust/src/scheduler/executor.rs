@@ -1,0 +1,388 @@
+//! Execution substrates for [`SchedulerCore`].
+//!
+//! An [`Executor`] owns the clock and the machinery that *performs* the work
+//! the core decides on: it delivers arrivals, runs (or simulates) steps, and
+//! moves KV caches, invoking the core's entry points at its own step
+//! boundaries and interpreting the returned [`Action`]s.
+//!
+//! Two library implementations:
+//!
+//! - [`VirtualExecutor`] — discrete-event queue + roofline-predicted
+//!   latencies; the simulation substrate (`sim::simulate` is a shim over
+//!   it). Steps "run" by scheduling their completion `predicted_latency`
+//!   in the future.
+//! - [`StubWallClockExecutor`] — an engine-shaped synchronous loop over a
+//!   *stub* wall clock: work is executed one item at a time in completion
+//!   order (linear-scan agenda, no heap) and the clock advances by the
+//!   predicted latency, standing in for a measured execution. Used by the
+//!   differential tests to prove the decision core is substrate-independent.
+//!
+//! The third implementation, `engine::EngineExecutor`, lives next to the
+//! PJRT runtime it drives and uses a real wall clock and real model steps.
+
+use crate::trace::Trace;
+
+use super::action::{Action, InstanceRef};
+use super::core::SchedulerCore;
+use super::events::{EventKind, EventQueue};
+
+/// Substrate-side outcome of driving a core to completion.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ExecStats {
+    /// Clock reading when the run ended (virtual seconds or wall seconds).
+    pub end_time: f64,
+    /// Entry-point invocations delivered to the core.
+    pub events: u64,
+}
+
+/// The execution substrate behind a [`SchedulerCore`]: owns the clock,
+/// delivers events, and carries out the core's [`Action`]s.
+pub trait Executor {
+    /// Current clock reading.
+    fn now(&self) -> f64;
+
+    /// Drive `core` until the workload drains (or the substrate's horizon
+    /// passes). Entry points are invoked with this executor's clock.
+    fn run(&mut self, core: &mut SchedulerCore) -> anyhow::Result<ExecStats>;
+}
+
+// --------------------------------------------------------------- virtual
+
+/// Discrete-event substrate: a binary-heap event queue on a virtual clock,
+/// with step/transfer durations taken from the core's roofline predictions.
+#[derive(Debug)]
+pub struct VirtualExecutor {
+    queue: EventQueue,
+    now: f64,
+    horizon: f64,
+    events: u64,
+    /// When `Some`, every action the core emits is appended — the
+    /// observable stream asserted by the differential tests.
+    pub log: Option<Vec<Action>>,
+}
+
+impl VirtualExecutor {
+    /// Schedule `trace`'s arrivals; process events up to `horizon` seconds.
+    pub fn new(trace: &Trace, horizon: f64) -> Self {
+        let mut queue = EventQueue::new();
+        for r in &trace.requests {
+            queue.push(r.arrival, EventKind::Arrival(r.id));
+        }
+        VirtualExecutor {
+            queue,
+            now: 0.0,
+            horizon,
+            events: 0,
+            log: None,
+        }
+    }
+
+    fn apply(&mut self, actions: Vec<Action>) {
+        for a in &actions {
+            match *a {
+                Action::StartStep {
+                    inst,
+                    predicted_latency,
+                    seq,
+                    ..
+                } => {
+                    let kind = match inst {
+                        InstanceRef::Relaxed(i) => {
+                            EventKind::RelaxedStep { inst: i, seq }
+                        }
+                        InstanceRef::Strict(i) => {
+                            EventKind::StrictStep { inst: i, seq }
+                        }
+                    };
+                    self.queue.push(self.now + predicted_latency, kind);
+                }
+                Action::Preempt { inst, delay, seq } => {
+                    self.queue.push(
+                        self.now + delay,
+                        EventKind::RelaxedStep { inst, seq },
+                    );
+                }
+                Action::Transfer {
+                    req,
+                    to_strict,
+                    predicted_latency,
+                    ..
+                } => {
+                    self.queue.push(
+                        self.now + predicted_latency,
+                        EventKind::TransferDone {
+                            req,
+                            strict: to_strict,
+                        },
+                    );
+                }
+                // Notifications: no virtual resources to manage.
+                Action::Evict { .. }
+                | Action::Migrate { .. }
+                | Action::Admit { .. }
+                | Action::Complete { .. } => {}
+            }
+        }
+        if let Some(log) = &mut self.log {
+            log.extend(actions);
+        }
+    }
+}
+
+impl Executor for VirtualExecutor {
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn run(&mut self, core: &mut SchedulerCore) -> anyhow::Result<ExecStats> {
+        while let Some(ev) = self.queue.pop() {
+            if ev.time > self.horizon {
+                break;
+            }
+            self.now = ev.time;
+            self.events += 1;
+            let actions = match ev.kind {
+                EventKind::Arrival(rid) => core.on_arrival(self.now, rid),
+                EventKind::RelaxedStep { inst, seq } => {
+                    core.on_step_end(self.now, InstanceRef::Relaxed(inst), seq)
+                }
+                EventKind::StrictStep { inst, seq } => {
+                    core.on_step_end(self.now, InstanceRef::Strict(inst), seq)
+                }
+                EventKind::TransferDone { req, strict } => {
+                    core.on_transfer_done(self.now, req, strict)
+                }
+            };
+            self.apply(actions);
+        }
+        Ok(ExecStats {
+            end_time: self.now,
+            events: self.events,
+        })
+    }
+}
+
+// ------------------------------------------------------------- stub wall
+
+/// Engine-shaped synchronous substrate over a stub wall clock.
+///
+/// Mirrors the real engine's control structure — one work item executed at a
+/// time, completion observed, then the next item picked — but the "measured"
+/// duration of each item is the core's prediction, and the agenda is a flat
+/// linear-scan list rather than a heap. Because the decision core is shared
+/// and its clock inputs coincide, the emitted action stream must be
+/// *identical* to [`VirtualExecutor`]'s; `tests/scheduler_differential.rs`
+/// asserts exactly that for all three policies.
+#[derive(Debug)]
+pub struct StubWallClockExecutor {
+    agenda: Vec<AgendaItem>,
+    next_tie: u64,
+    now: f64,
+    horizon: f64,
+    events: u64,
+    /// When `Some`, records the core's emitted actions.
+    pub log: Option<Vec<Action>>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct AgendaItem {
+    time: f64,
+    tie: u64,
+    kind: EventKind,
+}
+
+impl StubWallClockExecutor {
+    pub fn new(trace: &Trace, horizon: f64) -> Self {
+        let mut agenda = Vec::with_capacity(trace.requests.len());
+        let mut next_tie = 0u64;
+        for r in &trace.requests {
+            agenda.push(AgendaItem {
+                time: r.arrival,
+                tie: next_tie,
+                kind: EventKind::Arrival(r.id),
+            });
+            next_tie += 1;
+        }
+        StubWallClockExecutor {
+            agenda,
+            next_tie,
+            now: 0.0,
+            horizon,
+            events: 0,
+            log: None,
+        }
+    }
+
+    fn push(&mut self, time: f64, kind: EventKind) {
+        let tie = self.next_tie;
+        self.next_tie += 1;
+        self.agenda.push(AgendaItem { time, tie, kind });
+    }
+
+    /// Earliest agenda item by (time, insertion order) via linear scan.
+    fn take_next(&mut self) -> Option<AgendaItem> {
+        if self.agenda.is_empty() {
+            return None;
+        }
+        let mut best = 0usize;
+        for i in 1..self.agenda.len() {
+            let (a, b) = (&self.agenda[i], &self.agenda[best]);
+            if a.time < b.time || (a.time == b.time && a.tie < b.tie) {
+                best = i;
+            }
+        }
+        Some(self.agenda.swap_remove(best))
+    }
+
+    fn apply(&mut self, actions: Vec<Action>) {
+        for a in &actions {
+            match *a {
+                Action::StartStep {
+                    inst,
+                    predicted_latency,
+                    seq,
+                    ..
+                } => {
+                    // "Execute" the step: its completion lands on the stub
+                    // wall clock after the predicted (stand-in measured)
+                    // duration.
+                    let kind = match inst {
+                        InstanceRef::Relaxed(i) => {
+                            EventKind::RelaxedStep { inst: i, seq }
+                        }
+                        InstanceRef::Strict(i) => {
+                            EventKind::StrictStep { inst: i, seq }
+                        }
+                    };
+                    self.push(self.now + predicted_latency, kind);
+                }
+                Action::Preempt { inst, delay, seq } => {
+                    self.push(
+                        self.now + delay,
+                        EventKind::RelaxedStep { inst, seq },
+                    );
+                }
+                Action::Transfer {
+                    req,
+                    to_strict,
+                    predicted_latency,
+                    ..
+                } => {
+                    self.push(
+                        self.now + predicted_latency,
+                        EventKind::TransferDone {
+                            req,
+                            strict: to_strict,
+                        },
+                    );
+                }
+                Action::Evict { .. }
+                | Action::Migrate { .. }
+                | Action::Admit { .. }
+                | Action::Complete { .. } => {}
+            }
+        }
+        if let Some(log) = &mut self.log {
+            log.extend(actions);
+        }
+    }
+}
+
+impl Executor for StubWallClockExecutor {
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn run(&mut self, core: &mut SchedulerCore) -> anyhow::Result<ExecStats> {
+        while let Some(item) = self.take_next() {
+            if item.time > self.horizon {
+                break;
+            }
+            // The stub wall clock only moves forward.
+            self.now = self.now.max(item.time);
+            self.events += 1;
+            let actions = match item.kind {
+                EventKind::Arrival(rid) => core.on_arrival(self.now, rid),
+                EventKind::RelaxedStep { inst, seq } => {
+                    core.on_step_end(self.now, InstanceRef::Relaxed(inst), seq)
+                }
+                EventKind::StrictStep { inst, seq } => {
+                    core.on_step_end(self.now, InstanceRef::Strict(inst), seq)
+                }
+                EventKind::TransferDone { req, strict } => {
+                    core.on_transfer_done(self.now, req, strict)
+                }
+            };
+            self.apply(actions);
+        }
+        Ok(ExecStats {
+            end_time: self.now,
+            events: self.events,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+    use crate::coordinator::Policy;
+    use crate::request::{Class, Request};
+    use crate::scheduler::CoreConfig;
+
+    fn tiny_trace() -> Trace {
+        let mut reqs = Vec::new();
+        for i in 0..4u64 {
+            reqs.push(Request::new(i, Class::Online, 0.2 * i as f64, 300, 6));
+        }
+        for i in 4..8u64 {
+            reqs.push(Request::new(
+                i,
+                Class::Offline,
+                0.15 * (i - 4) as f64 + 0.05,
+                600,
+                10,
+            ));
+        }
+        Trace::new(reqs)
+    }
+
+    fn run_with<E: Executor>(mut ex: E) -> (SchedulerCore, ExecStats, E) {
+        let cfg = CoreConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+        let mut core = SchedulerCore::new(tiny_trace().requests, cfg);
+        let stats = ex.run(&mut core).unwrap();
+        (core, stats, ex)
+    }
+
+    #[test]
+    fn virtual_executor_drains_tiny_trace() {
+        let ex = VirtualExecutor::new(&tiny_trace(), 1e6);
+        let (core, stats, _) = run_with(ex);
+        assert!(core.cluster.drained(), "cluster must drain");
+        assert!(stats.events > 8, "events {}", stats.events);
+        assert!(core
+            .cluster
+            .requests
+            .iter()
+            .all(|r| r.finished_at.is_some()));
+    }
+
+    #[test]
+    fn stub_executor_matches_virtual_stream() {
+        let trace = tiny_trace();
+        let cfg = CoreConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+
+        let mut virt = VirtualExecutor::new(&trace, 1e6);
+        virt.log = Some(Vec::new());
+        let mut core_v = SchedulerCore::new(trace.requests.clone(), cfg.clone());
+        virt.run(&mut core_v).unwrap();
+
+        let mut stub = StubWallClockExecutor::new(&trace, 1e6);
+        stub.log = Some(Vec::new());
+        let mut core_s = SchedulerCore::new(trace.requests.clone(), cfg);
+        stub.run(&mut core_s).unwrap();
+
+        assert_eq!(virt.log, stub.log, "action streams must be identical");
+        assert!(core_s.cluster.drained());
+    }
+}

@@ -1,0 +1,52 @@
+//! Unified scheduling subsystem — one §3.4 decision loop driving both the
+//! simulator and the real engine.
+//!
+//! The paper's central architectural claim is that the simulator and the
+//! real engine exercise *the same* scheduling code; this module makes that
+//! structural. It splits serving into three roles:
+//!
+//! - [`ClusterState`] — pure state: the two latency-constraint pools, the
+//!   shared offline backlog, per-request KV residency, and the router;
+//! - [`SchedulerCore`] — the decision loop: three step-boundary entry
+//!   points ([`SchedulerCore::on_arrival`], [`SchedulerCore::on_step_end`],
+//!   [`SchedulerCore::on_transfer_done`]) that fold the four coordinator
+//!   scheduling points (gating, migration, mix-decode, preemption) into
+//!   typed [`Action`]s;
+//! - [`Executor`] — the substrate: owns the clock, executes the actions,
+//!   and calls back into the core at its own step boundaries.
+//!
+//! Two executors ship here ([`VirtualExecutor`] on a discrete-event virtual
+//! clock, [`StubWallClockExecutor`] as an engine-shaped verification
+//! harness); the real `engine::EngineExecutor` lives with the PJRT runtime
+//! it drives. `sim::simulate` and `engine::serve_trace_with_runtime` are
+//! thin compatibility shims over this module. New policies, substrates
+//! (multi-GPU, sharded), and workloads plug in as `Executor`/`Action`
+//! implementations instead of a third copy of the loop. See DESIGN.md §3.
+//!
+//! The low-level decision *functions* stay in [`crate::coordinator`] as
+//! pure math; this module re-exports them so every scheduling call site can
+//! import through `scheduler::` — outside this subsystem nothing needs to
+//! reach into `coordinator::` directly.
+
+pub mod action;
+pub mod cluster;
+pub mod core;
+pub mod events;
+pub mod executor;
+
+pub use self::action::{Action, InstanceRef};
+pub use self::cluster::{ClusterState, KvHome};
+pub use self::core::{CoreConfig, SchedulerCore};
+pub use self::events::{Event, EventKind, EventQueue};
+pub use self::executor::{
+    ExecStats, Executor, StubWallClockExecutor, VirtualExecutor,
+};
+
+// The underlying §3.4 decision functions, re-exported so all scheduling
+// call sites (benches, tests, tools) go through the `scheduler` surface.
+pub use crate::coordinator::{
+    migration_decision, pick_migration_candidates, preemption_delay,
+    select_decode_batch, select_decode_batch_capped, select_evictions,
+    shed_online_overload, should_prefill_offline, Ablation, Candidate,
+    GatingInput, LengthPref, OverloadMode, Policy, Selection,
+};

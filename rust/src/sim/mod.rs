@@ -1,9 +1,12 @@
-//! Discrete-event cluster simulator.
+//! Discrete-event cluster simulator — a thin compatibility shim over the
+//! unified scheduling subsystem ([`crate::scheduler`]).
 //!
-//! Drives the coordinator's scheduling logic (Algorithms 1–2, preemption,
-//! gating) over a workload trace with iteration latencies from the roofline
-//! performance model — the substrate substitution for the paper's 910c
-//! testbed (DESIGN.md §2). Because OOCO's own scheduler acts on perf-model
+//! The §3.4 decision loop (Algorithms 1–2, preemption, gating) lives in
+//! [`crate::scheduler::SchedulerCore`]; this module pairs it with a
+//! [`crate::scheduler::VirtualExecutor`] that replays a workload trace on a
+//! virtual clock with iteration latencies from the roofline performance
+//! model — the substrate substitution for the paper's 910c testbed
+//! (DESIGN.md §2). Because OOCO's own scheduler acts on perf-model
 //! predictions, the simulator exercises *exactly* the same decision code
 //! the real engine runs; only the clock is virtual.
 //!
@@ -13,25 +16,13 @@
 //! (layer-level truncation of a running offline prefill) and eviction
 //! (which only takes effect between iterations, as in real engines).
 
-mod events;
-
-pub use events::{Event, EventKind, EventQueue};
-
-use std::collections::VecDeque;
+pub use crate::scheduler::{Event, EventKind, EventQueue};
 
 use crate::config::ServingConfig;
-use crate::coordinator::{
-    migration_decision, pick_migration_candidates, preemption_delay,
-    select_decode_batch, select_decode_batch_capped, select_evictions,
-    shed_online_overload, Ablation, Candidate, LengthPref, OverloadMode,
-    Policy, Router,
-};
-use crate::instance::{RelaxedInstance, Step, StepKind, StrictInstance};
+use crate::coordinator::{Ablation, OverloadMode, Policy};
 use crate::metrics::{Recorder, Report};
-use crate::perfmodel::{BatchStats, PerfModel};
-use crate::request::{Class, Phase, Request, RequestId};
+use crate::scheduler::{CoreConfig, Executor, SchedulerCore, VirtualExecutor};
 use crate::trace::Trace;
-use crate::util::rng::Pcg;
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -60,6 +51,18 @@ impl SimConfig {
             seed: 0,
         }
     }
+
+    /// The substrate-independent slice of this configuration.
+    pub fn core(&self) -> CoreConfig {
+        CoreConfig {
+            serving: self.serving.clone(),
+            policy: self.policy,
+            ablation: self.ablation,
+            overload_mode: self.overload_mode,
+            block_tokens: self.block_tokens,
+            seed: self.seed,
+        }
+    }
 }
 
 /// Simulation outcome.
@@ -84,908 +87,42 @@ pub struct SimResult {
     pub migrations: u64,
 }
 
-/// Where a not-yet-decoding request's KV currently lives.
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum KvHome {
-    None,
-    Relaxed(usize),
-    Strict(usize),
-}
-
-/// Run the simulation of `trace` under `cfg`.
+/// Run the simulation of `trace` under `cfg`: build a [`SchedulerCore`],
+/// drive it with a [`VirtualExecutor`], and aggregate the outcome.
 pub fn simulate(trace: &Trace, cfg: &SimConfig) -> SimResult {
-    Sim::new(trace, cfg).run()
+    let mut core = SchedulerCore::new(trace.requests.clone(), cfg.core());
+    let horizon = trace.duration() + cfg.drain_s;
+    let mut executor = VirtualExecutor::new(trace, horizon);
+    let stats = executor
+        .run(&mut core)
+        .expect("virtual execution is infallible");
+    build_result(&core, trace, cfg, stats.end_time)
 }
 
-struct Sim<'a> {
-    cfg: &'a SimConfig,
-    pm: PerfModel,
-    requests: Vec<Request>,
-    kv_home: Vec<KvHome>,
-    relaxed: Vec<RelaxedInstance>,
-    strict: Vec<StrictInstance>,
-    /// Offline requests waiting for (re-)prefill, shared across the pool.
-    offline_backlog: VecDeque<RequestId>,
-    router: Router,
-    queue: EventQueue,
-    now: f64,
-    trace_end: f64,
-    horizon: f64,
-    rng: Pcg,
-    /// Per-strict-instance (batch stats, all-included) of the running step,
-    /// consumed by the Algorithm 1 decision at the step boundary.
-    strict_step_meta: Vec<Option<(BatchStats, bool)>>,
-    // counters
-    preemptions: u64,
-    evictions: u64,
-    migrations: u64,
-}
-
-impl<'a> Sim<'a> {
-    fn new(trace: &Trace, cfg: &'a SimConfig) -> Self {
-        let pm = PerfModel::new(
-            cfg.serving.model.clone(),
-            cfg.serving.hardware.clone(),
-        );
-        let cap = pm.max_kv_tokens().max(cfg.block_tokens);
-        let n_relaxed = cfg.serving.cluster.relaxed_instances.max(1);
-        let n_strict = cfg.serving.cluster.strict_instances.max(1);
-        let relaxed = (0..n_relaxed)
-            .map(|i| RelaxedInstance::new(i, cap, cfg.block_tokens))
-            .collect();
-        let strict = (0..n_strict)
-            .map(|i| StrictInstance::new(i, cap, cfg.block_tokens))
-            .collect();
-
-        let mut queue = EventQueue::new();
-        for r in &trace.requests {
-            queue.push(r.arrival, EventKind::Arrival(r.id));
-        }
-        let trace_end = trace.duration();
-        Sim {
-            cfg,
-            pm,
-            kv_home: vec![KvHome::None; trace.requests.len()],
-            requests: trace.requests.clone(),
-            relaxed,
-            strict,
-            offline_backlog: VecDeque::new(),
-            router: Router::new(n_relaxed, n_strict),
-            queue,
-            now: 0.0,
-            trace_end,
-            horizon: trace_end + cfg.drain_s,
-            rng: Pcg::new(cfg.seed, 9090),
-            strict_step_meta: vec![None; n_strict],
-            preemptions: 0,
-            evictions: 0,
-            migrations: 0,
-        }
+fn build_result(
+    core: &SchedulerCore,
+    trace: &Trace,
+    cfg: &SimConfig,
+    end_time: f64,
+) -> SimResult {
+    let cluster = &core.cluster;
+    let mut recorder = Recorder::new();
+    for r in &cluster.requests {
+        recorder.record(r);
     }
-
-    // ------------------------------------------------------------ main loop
-
-    fn run(mut self) -> SimResult {
-        while let Some(ev) = self.queue.pop() {
-            if ev.time > self.horizon {
-                break;
-            }
-            self.now = ev.time;
-            match ev.kind {
-                EventKind::Arrival(rid) => self.on_arrival(rid),
-                EventKind::RelaxedStep { inst, seq } => {
-                    self.on_relaxed_step_end(inst, seq)
-                }
-                EventKind::StrictStep { inst, seq } => {
-                    self.on_strict_step_end(inst, seq)
-                }
-                EventKind::TransferDone { req, strict } => {
-                    self.on_transfer_done(req, strict)
-                }
-            }
-        }
-        self.build_result()
-    }
-
-    // ------------------------------------------------------------- arrivals
-
-    /// Is this request scheduled as "online" by the active policy?
-    /// (`base P/D` treats offline requests as ordinary online requests.)
-    fn scheduled_online(&self, rid: RequestId) -> bool {
-        self.requests[rid as usize].class.is_online()
-            || self.cfg.policy == Policy::BasePd
-    }
-
-    fn on_arrival(&mut self, rid: RequestId) {
-        if self.scheduled_online(rid) {
-            let prompt = self.requests[rid as usize].prompt_len;
-            let inst = self.router.route_prefill(prompt);
-            self.relaxed[inst].online_queue.push_back(rid);
-            self.maybe_preempt(inst);
-            if self.relaxed[inst].is_idle() {
-                self.start_relaxed_step(inst);
-            }
-        } else {
-            self.offline_backlog.push_back(rid);
-            self.kick_idle_relaxed();
-        }
-    }
-
-    /// Truncate a running offline prefill at the next layer boundary
-    /// (§3.4.1 layer-level interruption).
-    fn maybe_preempt(&mut self, inst: usize) {
-        if !self.cfg.policy.preempts_offline_prefill() {
-            return;
-        }
-        let now = self.now;
-        let inst_ref = &mut self.relaxed[inst];
-        let Some(step) = inst_ref.step.as_mut() else {
-            return;
-        };
-        if step.kind != StepKind::PrefillOffline || step.preempted {
-            return;
-        }
-        let span = (step.ends - step.started).max(1e-9);
-        let elapsed_frac = ((now - step.started) / span).clamp(0.0, 1.0);
-        let mean_prompt = (step
-            .participants
-            .iter()
-            .map(|&r| self.requests[r as usize].recompute_len())
-            .sum::<usize>()
-            / step.participants.len().max(1))
-        .max(1);
-        let delay = preemption_delay(&self.pm, mean_prompt, elapsed_frac);
-        let new_end = now + delay;
-        if new_end < step.ends {
-            step.ends = new_end;
-            step.preempted = true;
-            step.seq = {
-                // can't call alloc_seq while holding step borrow
-                let seq = inst_ref.next_seq + 1;
-                seq
-            };
-            inst_ref.next_seq += 1;
-            let seq = inst_ref.next_seq;
-            self.queue
-                .push(new_end, EventKind::RelaxedStep { inst, seq });
-            self.preemptions += 1;
-        }
-    }
-
-    fn kick_idle_relaxed(&mut self) {
-        for i in 0..self.relaxed.len() {
-            if self.relaxed[i].is_idle() {
-                self.start_relaxed_step(i);
-                if !self.relaxed[i].is_idle() {
-                    return;
-                }
-            }
-        }
-    }
-
-    // ----------------------------------------------------- relaxed stepping
-
-    fn start_relaxed_step(&mut self, inst: usize) {
-        if !self.relaxed[inst].is_idle() {
-            return;
-        }
-        if self.start_online_prefill(inst) {
-            return;
-        }
-        if self.start_offline_prefill(inst) {
-            return;
-        }
-        self.start_relaxed_decode(inst);
-    }
-
-    /// Batch online prefills up to the token budget.
-    fn start_online_prefill(&mut self, inst: usize) -> bool {
-        if self.relaxed[inst].online_queue.is_empty() {
-            return false;
-        }
-        let budget = self.cfg.serving.sched.prefill_token_budget;
-        let mut batch: Vec<RequestId> = Vec::new();
-        let mut lens: Vec<usize> = Vec::new();
-        let mut used = 0usize;
-        while let Some(&rid) = self.relaxed[inst].online_queue.front() {
-            let len = self.requests[rid as usize].recompute_len();
-            if !batch.is_empty() && used + len > budget {
-                break;
-            }
-            // KV space for the prefill output, evicting offline if needed.
-            if !self.fit_on_relaxed(inst, rid, len + 1) {
-                if batch.is_empty() {
-                    // Head request cannot fit even after eviction: reject.
-                    self.relaxed[inst].online_queue.pop_front();
-                    self.requests[rid as usize].phase = Phase::Finished;
-                    continue;
-                }
-                break;
-            }
-            self.relaxed[inst].online_queue.pop_front();
-            self.relaxed[inst].kv.admit(rid, len + 1).expect("fit checked");
-            self.kv_home[rid as usize] = KvHome::Relaxed(inst);
-            self.requests[rid as usize].phase = Phase::Prefilling;
-            used += len;
-            batch.push(rid);
-            lens.push(len);
-        }
-        if batch.is_empty() {
-            return false;
-        }
-        let latency = self.pm.prefill_cost(&lens).latency_s;
-        self.begin_step(inst, StepKind::PrefillOnline, batch, latency);
-        self.relaxed[inst].busy_online_prefill_s += latency;
-        true
-    }
-
-    /// Make room for `tokens` on a relaxed instance by evicting offline
-    /// decode residents (oldest first — relaxed nodes have no bottleneck
-    /// preference; their decode batch has no SLO).
-    fn fit_on_relaxed(&mut self, inst: usize, _for_rid: RequestId, tokens: usize) -> bool {
-        while !self.relaxed[inst].kv.can_fit(tokens) {
-            // Evict a parked/decoding offline resident not in the current
-            // step (relaxed instance is idle here, so all are safe).
-            let Some(&victim) = self.relaxed[inst].offline_decoding.first() else {
-                return false;
-            };
-            self.evict_offline_from_relaxed(inst, victim);
-        }
-        true
-    }
-
-    fn evict_offline_from_relaxed(&mut self, inst: usize, rid: RequestId) {
-        self.relaxed[inst].kv.release(rid).expect("resident kv");
-        self.relaxed[inst].offline_decoding.retain(|&r| r != rid);
-        self.kv_home[rid as usize] = KvHome::None;
-        self.requests[rid as usize].evict();
-        self.offline_backlog.push_back(rid);
-        self.evictions += 1;
-    }
-
-    /// Admit offline prefills from the global backlog (gating in OOCO,
-    /// plain idle-only admission in `online priority`).
-    fn start_offline_prefill(&mut self, inst: usize) -> bool {
-        if self.offline_backlog.is_empty() {
-            return false;
-        }
-        // base P/D never reaches here (offline went through the online path).
-        let budget = self.cfg.serving.sched.prefill_token_budget;
-        let gating_on =
-            self.cfg.policy.gating_enabled() && self.cfg.ablation.gating;
-        let mut batch = Vec::new();
-        let mut lens = Vec::new();
-        let mut used = 0usize;
-        // Reserve headroom for a typical online prefill so offline work
-        // doesn't crowd out preempting arrivals.
-        let reserve = 4096usize;
-        while let Some(&rid) = self.offline_backlog.front() {
-            let len = self.requests[rid as usize].recompute_len();
-            if !batch.is_empty() && used + len > budget {
-                break;
-            }
-            let free = self.relaxed[inst].kv.free_tokens();
-            if free < len + 1 + reserve {
-                break;
-            }
-            if gating_on && !self.gating_admits(inst, rid, free - reserve) {
-                break;
-            }
-            self.offline_backlog.pop_front();
-            self.relaxed[inst].kv.admit(rid, len + 1).expect("fit checked");
-            self.kv_home[rid as usize] = KvHome::Relaxed(inst);
-            self.requests[rid as usize].phase = Phase::Prefilling;
-            used += len;
-            batch.push(rid);
-            lens.push(len);
-        }
-        if batch.is_empty() {
-            return false;
-        }
-        let latency = self.pm.prefill_cost(&lens).latency_s;
-        self.begin_step(inst, StepKind::PrefillOffline, batch, latency);
-        true
-    }
-
-    fn gating_admits(&mut self, inst: usize, rid: RequestId, free: usize) -> bool {
-        let pool = self.relaxed_pool_stats(inst);
-        let req = &self.requests[rid as usize];
-        let remaining: f64 = if self.relaxed[inst].offline_decoding.is_empty() {
-            0.0
-        } else {
-            self.relaxed[inst]
-                .offline_decoding
-                .iter()
-                .map(|&r| {
-                    let q = &self.requests[r as usize];
-                    (q.output_len - q.generated.min(q.output_len)) as f64
-                })
-                .sum::<f64>()
-                / self.relaxed[inst].offline_decoding.len() as f64
-        };
-        let input = crate::coordinator::GatingInput {
-            pool,
-            candidate_prompt: req.recompute_len(),
-            candidate_output: req.output_len,
-            pool_mean_remaining: remaining,
-            free_kv_tokens: free,
-        };
-        crate::coordinator::should_prefill_offline(
-            &self.pm,
-            &input,
-            &self.cfg.serving.sched,
-        )
-    }
-
-    fn relaxed_pool_stats(&self, inst: usize) -> BatchStats {
-        let mut s = BatchStats::empty();
-        for &r in &self.relaxed[inst].offline_decoding {
-            s = s.with(self.requests[r as usize].kv_len());
-        }
-        s
-    }
-
-    /// Offline decode on a relaxed instance (OOCO's latency-constraint
-    /// flexibility): batch every resident — no per-iteration bound here.
-    fn start_relaxed_decode(&mut self, inst: usize) {
-        if !self.cfg.policy.offline_decode_on_relaxed()
-            || self.relaxed[inst].offline_decoding.is_empty()
-        {
-            return;
-        }
-        let batch: Vec<RequestId> = self.relaxed[inst].offline_decoding.clone();
-        let stats = self.relaxed_pool_stats(inst);
-        let latency = self.pm.decode_latency(stats);
-        self.begin_step(inst, StepKind::DecodeRelaxed, batch, latency);
-    }
-
-    fn begin_step(
-        &mut self,
-        inst: usize,
-        kind: StepKind,
-        participants: Vec<RequestId>,
-        latency: f64,
-    ) {
-        let seq = self.relaxed[inst].alloc_seq();
-        let ends = self.now + latency.max(1e-9);
-        self.relaxed[inst].step = Some(Step {
-            kind,
-            started: self.now,
-            ends,
-            participants,
-            seq,
-            preempted: false,
-        });
-        self.relaxed[inst].busy_s += latency;
-        self.queue.push(ends, EventKind::RelaxedStep { inst, seq });
-    }
-
-    fn on_relaxed_step_end(&mut self, inst: usize, seq: u64) {
-        let valid = self.relaxed[inst]
-            .step
-            .as_ref()
-            .map(|s| s.seq == seq)
-            .unwrap_or(false);
-        if !valid {
-            return; // stale completion after preemption reschedule
-        }
-        let step = self.relaxed[inst].step.take().expect("checked");
-        match step.kind {
-            StepKind::PrefillOnline => {
-                for &rid in &step.participants {
-                    self.finish_prefill_online(inst, rid);
-                }
-            }
-            StepKind::PrefillOffline => {
-                if step.preempted {
-                    // Layer-level interruption: work discarded, requests
-                    // return to the backlog for recompute.
-                    for &rid in &step.participants {
-                        self.relaxed[inst].kv.release(rid).expect("kv");
-                        self.kv_home[rid as usize] = KvHome::None;
-                        self.requests[rid as usize].phase = Phase::Queued;
-                        self.offline_backlog.push_front(rid);
-                    }
-                } else {
-                    for &rid in &step.participants {
-                        self.finish_prefill_offline(inst, rid);
-                    }
-                }
-            }
-            StepKind::DecodeRelaxed => {
-                for &rid in &step.participants {
-                    self.relaxed_decode_token(inst, rid);
-                }
-            }
-            StepKind::DecodeStrict => unreachable!("strict step on relaxed"),
-        }
-        self.start_relaxed_step(inst);
-    }
-
-    fn finish_prefill_online(&mut self, inst: usize, rid: RequestId) {
-        self.router
-            .prefill_done(inst, self.requests[rid as usize].recompute_len());
-        self.requests[rid as usize].mark_first_token(self.now);
-        if self.requests[rid as usize].is_finished() {
-            // Single-token request: done at prefill.
-            self.requests[rid as usize].finished_at = Some(self.now);
-            self.requests[rid as usize].phase = Phase::Finished;
-            self.relaxed[inst].kv.release(rid).expect("kv");
-            self.kv_home[rid as usize] = KvHome::None;
-            return;
-        }
-        // Push model: dispatch to a strict instance immediately.
-        let target = self.router.route_decode(self.requests[rid as usize].kv_len());
-        self.try_dispatch_to_strict(rid, inst, target);
-    }
-
-    /// Reserve KV on the strict instance (evicting offline per policy) and
-    /// start the transfer; park in `waiting_for_space` on failure.
-    fn try_dispatch_to_strict(&mut self, rid: RequestId, from_relaxed: usize, target: usize) {
-        let kv_len = self.requests[rid as usize].kv_len();
-        let need = kv_len + 1;
-        if !self.strict[target].kv.can_fit(need) {
-            self.make_room_on_strict(target, need);
-        }
-        if self.strict[target].kv.can_fit(need) {
-            self.strict[target].kv.admit(rid, need).expect("fit checked");
-            self.relaxed[from_relaxed].kv.release(rid).expect("kv");
-            self.kv_home[rid as usize] = KvHome::Strict(target);
-            self.requests[rid as usize].phase = Phase::Migrating;
-            self.strict[target].inbound.push(rid);
-            let delay = self.pm.kv_transfer_latency(kv_len);
-            self.queue.push(
-                self.now + delay,
-                EventKind::TransferDone {
-                    req: rid,
-                    strict: target,
-                },
-            );
-        } else {
-            // Overload: wait (KV stays on the relaxed node).
-            self.strict[target].waiting_for_space.push_back(rid);
-        }
-    }
-
-    /// Evict offline decode residents on a strict instance to free `need`
-    /// tokens. Only legal between steps; callers run at step boundaries.
-    fn make_room_on_strict(&mut self, inst: usize, need: usize) {
-        if self.strict[inst].offline.is_empty() {
-            return;
-        }
-        // Never evict requests participating in a running step.
-        let in_flight: Vec<RequestId> = self.strict[inst]
-            .step
-            .as_ref()
-            .map(|s| s.participants.clone())
-            .unwrap_or_default();
-        let victims: Vec<Candidate> = self.strict[inst]
-            .offline
-            .iter()
-            .filter(|r| !in_flight.contains(r))
-            .map(|&r| (r, self.requests[r as usize].kv_len()))
-            .collect();
-        if victims.is_empty() {
-            return;
-        }
-        let free_now = self.strict[inst].kv.free_tokens();
-        let deficit = need.saturating_sub(free_now);
-        if deficit == 0 {
-            return;
-        }
-        let stats = self.strict_resident_stats(inst);
-        let bottleneck = self.pm.decode_bottleneck(stats);
-        let aware = self.cfg.policy.bottleneck_aware_eviction()
-            && self.cfg.ablation.bottleneck_eviction;
-        let chosen =
-            select_evictions(&self.pm, &victims, deficit, bottleneck, aware);
-        for rid in chosen {
-            self.evict_offline_from_strict(inst, rid);
-        }
-    }
-
-    fn evict_offline_from_strict(&mut self, inst: usize, rid: RequestId) {
-        let kv = self.requests[rid as usize].kv_len();
-        self.strict[inst].kv.release(rid).expect("resident");
-        self.strict[inst].remove_offline(rid);
-        self.router.decode_done(inst, kv);
-        self.kv_home[rid as usize] = KvHome::None;
-        self.requests[rid as usize].evict();
-        self.offline_backlog.push_back(rid);
-        self.evictions += 1;
-        self.kick_idle_relaxed();
-    }
-
-    fn finish_prefill_offline(&mut self, inst: usize, rid: RequestId) {
-        self.requests[rid as usize].mark_first_token(self.now);
-        if self.requests[rid as usize].is_finished() {
-            self.requests[rid as usize].finished_at = Some(self.now);
-            self.requests[rid as usize].phase = Phase::Finished;
-            self.relaxed[inst].kv.release(rid).expect("kv");
-            self.kv_home[rid as usize] = KvHome::None;
-            return;
-        }
-        if self.cfg.policy.offline_decode_on_relaxed() {
-            // OOCO: decode right here; the strict pool pulls later (Alg. 1).
-            self.requests[rid as usize].phase = Phase::Decoding;
-            self.relaxed[inst].offline_decoding.push(rid);
-        } else {
-            // online priority: offline decode belongs to the strict pool.
-            let target = self
-                .router
-                .route_decode(self.requests[rid as usize].kv_len());
-            let kv_len = self.requests[rid as usize].kv_len();
-            if self.strict[target].kv.can_fit(kv_len + 1) {
-                self.strict[target].kv.admit(rid, kv_len + 1).expect("fit");
-                self.relaxed[inst].kv.release(rid).expect("kv");
-                self.kv_home[rid as usize] = KvHome::Strict(target);
-                self.requests[rid as usize].phase = Phase::Migrating;
-                self.strict[target].inbound.push(rid);
-                let delay = self.pm.kv_transfer_latency(kv_len);
-                self.queue.push(
-                    self.now + delay,
-                    EventKind::TransferDone {
-                        req: rid,
-                        strict: target,
-                    },
-                );
-            } else {
-                // Park on the relaxed node (holds KV, does not decode);
-                // retried at strict step boundaries.
-                self.router.decode_done(target, kv_len);
-                self.relaxed[inst].offline_decoding.push(rid);
-            }
-        }
-    }
-
-    fn relaxed_decode_token(&mut self, inst: usize, rid: RequestId) {
-        // Evicted/migrated-mid-step guard, O(1) via the location index
-        // (migration moves kv_home to Strict; eviction resets it to None).
-        if self.kv_home[rid as usize] != KvHome::Relaxed(inst) {
-            return;
-        }
-        let done = self.requests[rid as usize].mark_token(self.now);
-        if done {
-            self.relaxed[inst].kv.release(rid).expect("kv");
-            self.relaxed[inst].offline_decoding.retain(|&r| r != rid);
-            self.kv_home[rid as usize] = KvHome::None;
-            return;
-        }
-        if self.relaxed[inst].kv.grow(rid, 1).is_err() {
-            self.evict_offline_from_relaxed(inst, rid);
-        }
-    }
-
-    // ------------------------------------------------------ strict stepping
-
-    fn strict_resident_stats(&self, inst: usize) -> BatchStats {
-        let mut s = BatchStats::empty();
-        for &r in self.strict[inst].online.iter().chain(&self.strict[inst].offline) {
-            s = s.with(self.requests[r as usize].kv_len());
-        }
-        s
-    }
-
-    fn start_strict_step(&mut self, inst: usize) {
-        if !self.strict[inst].is_idle() || !self.strict[inst].has_decode_work() {
-            return;
-        }
-        let mut online: Vec<Candidate> = self.strict[inst]
-            .online
-            .iter()
-            .map(|&r| (r, self.requests[r as usize].kv_len()))
-            .collect();
-
-        // §3.4.4 overload handling: in Shed mode, sacrifice the longest
-        // online requests when even the online-only batch exceeds the SLO,
-        // preserving the SLO for the remainder (OOCO only — baselines have
-        // no latency predictor to act on).
-        if self.cfg.overload_mode == OverloadMode::Shed
-            && self.cfg.policy == Policy::Ooco
-            && !online.is_empty()
-        {
-            let toks: usize = online.iter().map(|c| c.1).sum();
-            let stats = BatchStats::new(online.len(), toks);
-            if self.pm.decode_latency(stats) > self.cfg.serving.slo.tpot {
-                let (kept, shed) = shed_online_overload(
-                    &self.pm,
-                    &online,
-                    self.cfg.serving.slo.tpot,
-                );
-                for rid in shed {
-                    let kv = self.requests[rid as usize].kv_len();
-                    self.strict[inst].kv.release(rid).expect("resident");
-                    self.strict[inst].remove_online(rid);
-                    self.router.decode_done(inst, kv);
-                    self.kv_home[rid as usize] = KvHome::None;
-                    // Sacrificed: terminal, unfinished -> counts as an SLO
-                    // violation in the report (the paper's trade).
-                    self.requests[rid as usize].phase = Phase::Finished;
-                }
-                online = kept;
-            }
-        }
-        let offline: Vec<Candidate> = self.strict[inst]
-            .offline
-            .iter()
-            .map(|&r| (r, self.requests[r as usize].kv_len()))
-            .collect();
-
-        let slo = self.cfg.serving.slo.tpot;
-        let selection = match self.cfg.policy {
-            Policy::Ooco if self.cfg.ablation.mix_decode => select_decode_batch(
-                &self.pm,
-                &online,
-                &offline,
-                slo,
-                self.cfg.serving.sched.mix_probe_iters,
-                &mut self.rng,
-            ),
-            Policy::Ooco => select_decode_batch_capped(
-                &online,
-                &offline,
-                self.cfg.serving.sched.baseline_decode_cap,
-            ),
-            Policy::OnlinePriority => select_decode_batch_capped(
-                &online,
-                &offline,
-                self.cfg.serving.sched.baseline_decode_cap,
-            ),
-            Policy::BasePd => {
-                // Everything is "online": batch all residents, no bound.
-                select_decode_batch_capped(&online, &offline, usize::MAX)
-            }
-        };
-
-        let mut participants: Vec<RequestId> =
-            online.iter().map(|c| c.0).collect();
-        participants.extend(&selection.offline);
-        if participants.is_empty() {
-            return;
-        }
-        let stats = selection.stats;
-        let latency = self.pm.decode_latency(stats);
-        let all_included =
-            participants.len() == self.strict[inst].online.len() + self.strict[inst].offline.len();
-
-        let seq = self.strict[inst].alloc_seq();
-        let ends = self.now + latency.max(1e-9);
-        self.strict[inst].step = Some(Step {
-            kind: StepKind::DecodeStrict,
-            started: self.now,
-            ends,
-            participants,
-            seq,
-            preempted: false,
-        });
-        self.strict[inst].busy_s += latency;
-        self.strict[inst].steps += 1;
-        // Stash per-step info for the migration decision at the boundary.
-        self.strict_step_meta[inst] = Some((stats, all_included));
-        self.queue.push(ends, EventKind::StrictStep { inst, seq });
-    }
-
-    fn on_strict_step_end(&mut self, inst: usize, seq: u64) {
-        let valid = self.strict[inst]
-            .step
-            .as_ref()
-            .map(|s| s.seq == seq)
-            .unwrap_or(false);
-        if !valid {
-            return;
-        }
-        let step = self.strict[inst].step.take().expect("checked");
-        for &rid in &step.participants {
-            self.strict_decode_token(inst, rid);
-        }
-        // Step boundary work: retry waiting admissions, then migration pull.
-        self.retry_waiting(inst);
-        self.maybe_pull_migration(inst);
-        self.pull_parked_offline(inst);
-        self.start_strict_step(inst);
-    }
-
-    fn strict_decode_token(&mut self, inst: usize, rid: RequestId) {
-        let is_online = self.requests[rid as usize].class.is_online()
-            || self.cfg.policy == Policy::BasePd;
-        // Evicted-mid-step guard. PERF (§Perf): O(1) via the kv_home
-        // location index — the original `Vec::contains` residency check was
-        // O(batch) per participant, O(batch^2) per step.
-        if self.kv_home[rid as usize] != KvHome::Strict(inst) {
-            return;
-        }
-        if self.requests[rid as usize].class == Class::Offline {
-            self.strict[inst].offline_decode_tokens += 1;
-        }
-        let done = self.requests[rid as usize].mark_token(self.now);
-        let kv = self.requests[rid as usize].kv_len();
-        if done {
-            self.strict[inst].kv.release(rid).expect("kv");
-            if is_online {
-                self.strict[inst].remove_online(rid);
-            } else {
-                self.strict[inst].remove_offline(rid);
-            }
-            self.router.decode_done(inst, kv);
-            self.kv_home[rid as usize] = KvHome::None;
-            return;
-        }
-        self.router.decode_grow(inst, 1);
-        if self.strict[inst].kv.grow(rid, 1).is_err() {
-            if is_online {
-                // Free offline space for the online request's growth.
-                self.make_room_on_strict(inst, self.cfg.block_tokens);
-                if self.strict[inst].kv.grow(rid, 1).is_err() {
-                    // True overload; token produced, KV undercounted by one
-                    // block until space frees (documented approximation).
-                }
-            } else {
-                self.evict_offline_from_strict(inst, rid);
-            }
-        }
-    }
-
-    /// Retry online requests that were waiting for strict KV space.
-    fn retry_waiting(&mut self, inst: usize) {
-        let mut remaining = VecDeque::new();
-        while let Some(rid) = self.strict[inst].waiting_for_space.pop_front() {
-            let kv_len = self.requests[rid as usize].kv_len();
-            let need = kv_len + 1;
-            if !self.strict[inst].kv.can_fit(need) {
-                self.make_room_on_strict(inst, need);
-            }
-            if self.strict[inst].kv.can_fit(need) {
-                let from = match self.kv_home[rid as usize] {
-                    KvHome::Relaxed(i) => i,
-                    _ => unreachable!("waiting request KV must be on relaxed"),
-                };
-                self.strict[inst].kv.admit(rid, need).expect("fit");
-                self.relaxed[from].kv.release(rid).expect("kv");
-                self.kv_home[rid as usize] = KvHome::Strict(inst);
-                self.strict[inst].inbound.push(rid);
-                let delay = self.pm.kv_transfer_latency(kv_len);
-                self.queue.push(
-                    self.now + delay,
-                    EventKind::TransferDone { req: rid, strict: inst },
-                );
-            } else {
-                remaining.push_back(rid);
-            }
-        }
-        self.strict[inst].waiting_for_space = remaining;
-    }
-
-    /// Algorithm 1: pull offline decodes from relaxed nodes when headroom
-    /// exists (OOCO only).
-    fn maybe_pull_migration(&mut self, inst: usize) {
-        if !self.cfg.policy.migration_enabled() || !self.cfg.ablation.migration {
-            return;
-        }
-        let Some((stats, all_included)) = self.strict_step_meta[inst].take() else {
-            return;
-        };
-        let pref = migration_decision(
-            &self.pm,
-            stats,
-            all_included,
-            self.cfg.serving.slo.tpot,
-            self.cfg.serving.sched.slo_margin,
-        );
-        if pref == LengthPref::None {
-            return;
-        }
-        // Pull from the relaxed instance with the largest offline pool.
-        let Some(src) = (0..self.relaxed.len())
-            .filter(|&i| !self.relaxed[i].offline_decoding.is_empty())
-            .max_by_key(|&i| self.relaxed[i].offline_decoding.len())
-        else {
-            return;
-        };
-        let cands: Vec<Candidate> = self.relaxed[src]
-            .offline_decoding
-            .iter()
-            .map(|&r| (r, self.requests[r as usize].kv_len()))
-            .collect();
-        let picked = pick_migration_candidates(
-            pref,
-            &cands,
-            self.cfg.serving.sched.migration_batch,
-        );
-        for rid in picked {
-            // Relaxed decode step may be running with this request; removal
-            // from residency makes the in-flight token a no-op (guarded in
-            // relaxed_decode_token).
-            let kv_len = self.requests[rid as usize].kv_len();
-            if !self.strict[inst].kv.can_fit(kv_len + 1) {
-                break;
-            }
-            self.strict[inst].kv.admit(rid, kv_len + 1).expect("fit");
-            self.relaxed[src].kv.release(rid).expect("kv");
-            self.relaxed[src].offline_decoding.retain(|&r| r != rid);
-            self.kv_home[rid as usize] = KvHome::Strict(inst);
-            self.requests[rid as usize].phase = Phase::Migrating;
-            self.router.route_decode(kv_len);
-            self.strict[inst].inbound.push(rid);
-            let delay = self.pm.kv_transfer_latency(kv_len);
-            self.queue.push(
-                self.now + delay,
-                EventKind::TransferDone { req: rid, strict: inst },
-            );
-            self.migrations += 1;
-        }
-    }
-
-    /// `online priority`: parked offline requests (prefilled on relaxed,
-    /// waiting for strict space) move over as space frees — fit-only, no
-    /// Algorithm 1.
-    fn pull_parked_offline(&mut self, inst: usize) {
-        if self.cfg.policy.offline_decode_on_relaxed()
-            || self.cfg.policy == Policy::BasePd
-        {
-            return;
-        }
-        for src in 0..self.relaxed.len() {
-            while let Some(&rid) = self.relaxed[src].offline_decoding.first() {
-                let kv_len = self.requests[rid as usize].kv_len();
-                if !self.strict[inst].kv.can_fit(kv_len + 1) {
-                    return;
-                }
-                self.strict[inst].kv.admit(rid, kv_len + 1).expect("fit");
-                self.relaxed[src].kv.release(rid).expect("kv");
-                self.relaxed[src].offline_decoding.retain(|&r| r != rid);
-                self.kv_home[rid as usize] = KvHome::Strict(inst);
-                self.requests[rid as usize].phase = Phase::Migrating;
-                self.router.route_decode(kv_len);
-                self.strict[inst].inbound.push(rid);
-                let delay = self.pm.kv_transfer_latency(kv_len);
-                self.queue.push(
-                    self.now + delay,
-                    EventKind::TransferDone { req: rid, strict: inst },
-                );
-            }
-        }
-    }
-
-    fn on_transfer_done(&mut self, rid: RequestId, inst: usize) {
-        self.strict[inst].inbound.retain(|&r| r != rid);
-        let is_online = self.requests[rid as usize].class.is_online()
-            || self.cfg.policy == Policy::BasePd;
-        self.requests[rid as usize].phase = Phase::Decoding;
-        if is_online {
-            self.strict[inst].online.push(rid);
-        } else {
-            self.strict[inst].offline.push(rid);
-        }
-        self.start_strict_step(inst);
-    }
-
-    // -------------------------------------------------------------- results
-
-    fn build_result(self) -> SimResult {
-        let mut recorder = Recorder::new();
-        for r in &self.requests {
-            recorder.record(r);
-        }
-        let duration = self.trace_end.max(1e-9);
-        let report = recorder.report(&self.cfg.serving.slo, duration);
-        let strict_busy: f64 = self.strict.iter().map(|s| s.busy_s).sum();
-        let relaxed_busy: f64 = self.relaxed.iter().map(|s| s.busy_s).sum();
-        SimResult {
-            report,
-            end_time: self.now,
-            strict_utilization: strict_busy
-                / (duration * self.strict.len() as f64),
-            relaxed_utilization: relaxed_busy
-                / (duration * self.relaxed.len() as f64),
-            strict_steps: self.strict.iter().map(|s| s.steps).sum(),
-            strict_offline_tokens: self
-                .strict
-                .iter()
-                .map(|s| s.offline_decode_tokens)
-                .sum(),
-            preemptions: self.preemptions,
-            evictions: self.evictions,
-            migrations: self.migrations,
-        }
+    let duration = trace.duration().max(1e-9);
+    let report = recorder.report(&cfg.serving.slo, duration);
+    SimResult {
+        report,
+        end_time,
+        strict_utilization: cluster.strict_busy_s()
+            / (duration * cluster.strict.len() as f64),
+        relaxed_utilization: cluster.relaxed_busy_s()
+            / (duration * cluster.relaxed.len() as f64),
+        strict_steps: cluster.strict_steps(),
+        strict_offline_tokens: cluster.strict_offline_tokens(),
+        preemptions: cluster.preemptions,
+        evictions: cluster.evictions,
+        migrations: cluster.migrations,
     }
 }

@@ -83,6 +83,21 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Parse a flag through [`std::str::FromStr`] (the idiomatic path for
+    /// domain types like `Policy`, `Ablation`, `OverloadMode`). Absent flags
+    /// yield `default`; present-but-invalid values surface the type's parse
+    /// error instead of being silently defaulted.
+    pub fn parse_flag<T>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T: std::str::FromStr,
+        T::Err: Into<anyhow::Error>,
+    {
+        match self.flags.get(key) {
+            Some(s) => s.parse::<T>().map_err(Into::into),
+            None => Ok(default),
+        }
+    }
+
     pub fn bool(&self, key: &str, default: bool) -> bool {
         match self.flags.get(key).map(|s| s.as_str()) {
             Some("true") | Some("1") | Some("yes") => true,
@@ -159,6 +174,21 @@ mod tests {
         assert_eq!(a.f64_list("qps", &[]), vec![0.5, 1.0, 2.5]);
         assert_eq!(a.str_list("names", &[]), vec!["a", "b"]);
         assert_eq!(a.f64_list("missing", &[9.0]), vec![9.0]);
+    }
+
+    #[test]
+    fn parse_flag_via_fromstr() {
+        use crate::coordinator::{OverloadMode, Policy};
+        let a = parse(&["--policy", "base-pd", "--overload", "nonsense"]);
+        let p: Policy = a.parse_flag("policy", Policy::Ooco).unwrap();
+        assert_eq!(p, Policy::BasePd);
+        // Absent flag -> default.
+        let d: Policy = a.parse_flag("missing", Policy::Ooco).unwrap();
+        assert_eq!(d, Policy::Ooco);
+        // Present but invalid -> error, not silent default.
+        assert!(a
+            .parse_flag("overload", OverloadMode::BestEffort)
+            .is_err());
     }
 
     #[test]

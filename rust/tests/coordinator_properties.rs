@@ -1,10 +1,14 @@
 //! Property-based tests over coordinator invariants (routing, batching,
 //! eviction, migration) using the in-repo `testutil::forall` harness.
+//!
+//! Decision functions are imported through the `scheduler` surface — the
+//! single public entry to the §3.4 logic since the SchedulerCore redesign.
 
 use ooco::config::{HardwareProfile, ModelSpec, SloSpec};
-use ooco::coordinator::{
+use ooco::coordinator::Router;
+use ooco::scheduler::{
     migration_decision, pick_migration_candidates, select_decode_batch,
-    select_evictions, Candidate, LengthPref, Router,
+    select_evictions, Candidate, LengthPref,
 };
 use ooco::perfmodel::{BatchStats, Bottleneck, PerfModel};
 use ooco::prop_assert;

@@ -1,0 +1,202 @@
+//! Differential tests for the unified scheduling API: the same
+//! `SchedulerCore` driven by two independently implemented executors — the
+//! discrete-event `VirtualExecutor` (binary-heap queue, virtual clock) and
+//! the engine-shaped `StubWallClockExecutor` (linear-scan agenda, stub wall
+//! clock) — must emit byte-identical `Action` streams. This is the
+//! structural proof behind the paper's "only the clock is virtual" claim.
+//!
+//! Plus property tests over `select_decode_batch_capped`: selections never
+//! exceed the configured cap nor the KV tokens actually resident on the
+//! instance (its KvManager-bounded candidate pool).
+
+use ooco::config::ServingConfig;
+use ooco::coordinator::{Ablation, OverloadMode};
+use ooco::prop_assert;
+use ooco::scheduler::{
+    select_decode_batch_capped, Action, Candidate, CoreConfig, Executor,
+    Policy, SchedulerCore, StubWallClockExecutor, VirtualExecutor,
+};
+use ooco::testutil::forall;
+use ooco::trace::datasets::DatasetProfile;
+use ooco::trace::generator::{offline_trace, online_trace};
+use ooco::trace::Trace;
+
+fn mixed_trace(duration: f64, seed: u64) -> Trace {
+    let online =
+        online_trace(DatasetProfile::azure_conv(), 0.6, duration, seed);
+    let offline =
+        offline_trace(DatasetProfile::ooc_offline(), 1.5, duration, seed + 1);
+    online.merge(offline)
+}
+
+/// The acceptance-criterion test: identical action streams under both
+/// substrates, for every policy.
+#[test]
+fn action_streams_identical_across_executors_all_policies() {
+    let trace = mixed_trace(90.0, 42);
+    let horizon = trace.duration() + 300.0;
+    for policy in Policy::all() {
+        let mut virt = VirtualExecutor::new(&trace, horizon);
+        virt.log = Some(Vec::new());
+        let mut cfg = CoreConfig::new(ServingConfig::preset_7b(), policy);
+        cfg.seed = 11;
+        let mut core_v = SchedulerCore::new(trace.requests.clone(), cfg.clone());
+        virt.run(&mut core_v).unwrap();
+
+        let mut stub = StubWallClockExecutor::new(&trace, horizon);
+        stub.log = Some(Vec::new());
+        let mut core_s = SchedulerCore::new(trace.requests.clone(), cfg);
+        stub.run(&mut core_s).unwrap();
+
+        let (v, s) = (virt.log.unwrap(), stub.log.unwrap());
+        assert!(!v.is_empty(), "{policy:?}: empty action stream");
+        assert_eq!(
+            v.len(),
+            s.len(),
+            "{policy:?}: stream lengths differ ({} vs {})",
+            v.len(),
+            s.len()
+        );
+        for (i, (a, b)) in v.iter().zip(&s).enumerate() {
+            assert_eq!(a, b, "{policy:?}: streams diverge at action {i}");
+        }
+        // And the decisions left both clusters in identical shape.
+        assert_eq!(core_v.cluster.preemptions, core_s.cluster.preemptions);
+        assert_eq!(core_v.cluster.evictions, core_s.cluster.evictions);
+        assert_eq!(core_v.cluster.migrations, core_s.cluster.migrations);
+    }
+}
+
+/// The stream is rich under OOCO: it must exercise step starts, transfers,
+/// completions, and offline admissions (the four coordinator scheduling
+/// points leave visible traces).
+#[test]
+fn ooco_stream_covers_action_vocabulary() {
+    let trace = mixed_trace(120.0, 7);
+    let horizon = trace.duration() + 300.0;
+    let mut virt = VirtualExecutor::new(&trace, horizon);
+    virt.log = Some(Vec::new());
+    let mut cfg = CoreConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+    cfg.seed = 11;
+    let mut core = SchedulerCore::new(trace.requests.clone(), cfg);
+    virt.run(&mut core).unwrap();
+    let stream = virt.log.unwrap();
+    let has = |pred: fn(&Action) -> bool| stream.iter().any(pred);
+    assert!(has(|a| matches!(a, Action::StartStep { .. })), "no steps");
+    assert!(has(|a| matches!(a, Action::Transfer { .. })), "no transfers");
+    assert!(has(|a| matches!(a, Action::Complete { .. })), "no completions");
+    assert!(has(|a| matches!(a, Action::Admit { .. })), "no admissions");
+}
+
+#[test]
+fn base_pd_and_ooco_streams_differ() {
+    // Sanity: the differential harness is sensitive — different policies
+    // must produce different streams on the same trace.
+    let trace = mixed_trace(90.0, 42);
+    let horizon = trace.duration() + 300.0;
+    let mut streams = Vec::new();
+    for policy in [Policy::BasePd, Policy::Ooco] {
+        let mut virt = VirtualExecutor::new(&trace, horizon);
+        virt.log = Some(Vec::new());
+        let mut cfg = CoreConfig::new(ServingConfig::preset_7b(), policy);
+        cfg.seed = 11;
+        let mut core = SchedulerCore::new(trace.requests.clone(), cfg);
+        virt.run(&mut core).unwrap();
+        streams.push(virt.log.unwrap());
+    }
+    assert_ne!(streams[0], streams[1], "policies indistinguishable");
+}
+
+#[test]
+fn shed_overload_mode_still_differential() {
+    // Overload shedding is a §3.4.4 decision; it too must be
+    // substrate-independent.
+    let online = online_trace(DatasetProfile::azure_conv(), 6.0, 40.0, 5);
+    let horizon = online.duration() + 120.0;
+    let mut cfg = CoreConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+    cfg.overload_mode = OverloadMode::Shed;
+    cfg.ablation = Ablation::full();
+
+    let mut virt = VirtualExecutor::new(&online, horizon);
+    virt.log = Some(Vec::new());
+    let mut core_v = SchedulerCore::new(online.requests.clone(), cfg.clone());
+    virt.run(&mut core_v).unwrap();
+
+    let mut stub = StubWallClockExecutor::new(&online, horizon);
+    stub.log = Some(Vec::new());
+    let mut core_s = SchedulerCore::new(online.requests.clone(), cfg);
+    stub.run(&mut core_s).unwrap();
+
+    assert_eq!(virt.log, stub.log);
+}
+
+// ------------------------------------------------------ capped selection
+
+#[test]
+fn capped_selection_never_exceeds_cap_or_resident_kv() {
+    forall(80, |r| {
+        let n_on = r.below(12);
+        let n_off = r.below(60);
+        let online: Vec<Candidate> = (0..n_on)
+            .map(|i| (i as u64, r.below(3000) + 1))
+            .collect();
+        let offline: Vec<Candidate> = (0..n_off)
+            .map(|i| (1000 + i as u64, r.below(3000) + 1))
+            .collect();
+        // Candidates are KV residents of one instance, so their total
+        // tokens bound what any legal selection may reference.
+        let resident_kv: usize =
+            online.iter().chain(&offline).map(|c| c.1).sum();
+        let cap = r.below(80);
+        let sel = select_decode_batch_capped(&online, &offline, cap);
+
+        // 1. Batch size never exceeds the cap (beyond the always-included
+        //    online set, which the §3.4.4 contract admits unconditionally).
+        prop_assert!(
+            sel.stats.size <= cap.max(online.len()),
+            "size {} > cap {} (online {})",
+            sel.stats.size,
+            cap,
+            online.len()
+        );
+        prop_assert!(
+            online.len() + sel.offline.len() == sel.stats.size,
+            "stats size mismatch"
+        );
+
+        // 2. Selection KV never exceeds the instance's resident KV.
+        prop_assert!(
+            sel.stats.total_kv_tokens <= resident_kv,
+            "selection kv {} > resident {}",
+            sel.stats.total_kv_tokens,
+            resident_kv
+        );
+
+        // 3. Chosen offline ids come from the candidate set, once each, in
+        //    arrival order (the baseline's greedy contract).
+        let mut last_idx = None;
+        for id in &sel.offline {
+            let idx = offline
+                .iter()
+                .position(|c| c.0 == *id)
+                .expect("foreign id");
+            if let Some(prev) = last_idx {
+                prop_assert!(idx > prev, "not arrival-ordered");
+            }
+            last_idx = Some(idx);
+        }
+
+        // 4. Exact KV accounting: stats equal online + chosen aggregates.
+        let chosen_kv: usize = sel
+            .offline
+            .iter()
+            .map(|id| offline.iter().find(|c| c.0 == *id).unwrap().1)
+            .sum();
+        let online_kv: usize = online.iter().map(|c| c.1).sum();
+        prop_assert!(
+            sel.stats.total_kv_tokens == online_kv + chosen_kv,
+            "kv accounting off"
+        );
+        Ok(())
+    });
+}
