@@ -13,8 +13,8 @@ use ooco::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env();
-    let model = ModelSpec::by_name(args.str("model", "7b"))?;
-    let hw = HardwareProfile::by_name(args.str("hw", "910c"))?;
+    let model = args.str("model", "7b").parse::<ModelSpec>()?;
+    let hw = args.str("hw", "910c").parse::<HardwareProfile>()?;
     let batch = args.usize("batch", 128);
     let kv_len = args.usize("kv-len", 1000);
     let prompt = args.usize("prompt", 1892);

@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut serving = ServingConfig::preset_7b();
-    serving.model = ModelSpec::by_name(model)?;
+    serving.model = model.parse::<ModelSpec>()?;
 
     println!(
         "{:<16} {:>8} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8}",

@@ -10,8 +10,8 @@ use ooco::util::cli::Args;
 
 fn main() {
     let args = Args::parse_env();
-    let model = ModelSpec::by_name(args.str("model", "7b")).unwrap();
-    let hw = HardwareProfile::by_name(args.str("hw", "910c")).unwrap();
+    let model = args.str("model", "7b").parse::<ModelSpec>().unwrap();
+    let hw = args.str("hw", "910c").parse::<HardwareProfile>().unwrap();
     let pm = PerfModel::new(model.clone(), hw.clone());
 
     println!("=== Figure 2: operator compute patterns (per layer) ===");

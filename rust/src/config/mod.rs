@@ -27,6 +27,26 @@ pub struct ModelSpec {
     pub tensor_parallel: usize,
 }
 
+impl std::str::FromStr for ModelSpec {
+    type Err = anyhow::Error;
+
+    /// Parse a named model preset (consistent with `Policy`/`Ablation`).
+    fn from_str(name: &str) -> anyhow::Result<ModelSpec> {
+        match name {
+            "qwen2.5-7b" | "7b" => Ok(ModelSpec::qwen2_5_7b()),
+            "qwen2.5-72b" | "72b" => Ok(ModelSpec::qwen2_5_72b()),
+            "tiny" => Ok(ModelSpec::tiny()),
+            other => anyhow::bail!("unknown model preset `{other}`"),
+        }
+    }
+}
+
+impl std::fmt::Display for ModelSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name)
+    }
+}
+
 impl ModelSpec {
     /// Qwen2.5 7B (bf16) — the paper's primary model, 1 chip per instance.
     pub fn qwen2_5_7b() -> Self {
@@ -76,13 +96,13 @@ impl ModelSpec {
         }
     }
 
+    /// Deprecated alias for the [`std::str::FromStr`] implementation.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use `name.parse::<ModelSpec>()` instead"
+    )]
     pub fn by_name(name: &str) -> anyhow::Result<Self> {
-        match name {
-            "qwen2.5-7b" | "7b" => Ok(Self::qwen2_5_7b()),
-            "qwen2.5-72b" | "72b" => Ok(Self::qwen2_5_72b()),
-            "tiny" => Ok(Self::tiny()),
-            other => anyhow::bail!("unknown model preset `{other}`"),
-        }
+        name.parse()
     }
 
     /// KV-cache bytes for one token (all layers, K and V).
@@ -166,6 +186,29 @@ pub struct HardwareProfile {
     pub mem_capacity: f64,
 }
 
+impl std::str::FromStr for HardwareProfile {
+    type Err = anyhow::Error;
+
+    /// Parse a named hardware preset (consistent with `Policy`/`Ablation`).
+    fn from_str(name: &str) -> anyhow::Result<HardwareProfile> {
+        match name {
+            "ascend-910c" | "910c" => Ok(HardwareProfile::ascend_910c()),
+            "h800" => Ok(HardwareProfile::h800()),
+            "ascend-910c-vllm" | "910c-vllm" => {
+                Ok(HardwareProfile::ascend_910c_vllm())
+            }
+            "cpu-tiny" => Ok(HardwareProfile::cpu_tiny()),
+            other => anyhow::bail!("unknown hardware preset `{other}`"),
+        }
+    }
+}
+
+impl std::fmt::Display for HardwareProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name)
+    }
+}
+
 impl HardwareProfile {
     /// Ascend 910c single chip. The paper states one 910c chip is comparable
     /// to an NVIDIA A100 SXM (312 TFLOP/s bf16, ~2.0 TB/s HBM); achievable
@@ -239,14 +282,13 @@ impl HardwareProfile {
         }
     }
 
+    /// Deprecated alias for the [`std::str::FromStr`] implementation.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use `name.parse::<HardwareProfile>()` instead"
+    )]
     pub fn by_name(name: &str) -> anyhow::Result<Self> {
-        match name {
-            "ascend-910c" | "910c" => Ok(Self::ascend_910c()),
-            "h800" => Ok(Self::h800()),
-            "ascend-910c-vllm" | "910c-vllm" => Ok(Self::ascend_910c_vllm()),
-            "cpu-tiny" => Ok(Self::cpu_tiny()),
-            other => anyhow::bail!("unknown hardware preset `{other}`"),
-        }
+        name.parse()
     }
 
     pub fn from_json(v: &Json) -> anyhow::Result<Self> {
@@ -276,6 +318,161 @@ impl HardwareProfile {
             ("overhead_decode", Json::Num(self.overhead_decode)),
             ("bw_comm", Json::Num(self.bw_comm)),
             ("mem_capacity", Json::Num(self.mem_capacity)),
+        ])
+    }
+}
+
+/// How concurrent transfer jobs share one link's bandwidth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkSharing {
+    /// Jobs are served to completion in enqueue order.
+    Fifo,
+    /// Active jobs round-robin at chunk granularity (processor sharing
+    /// approximated at the layer-chunk level).
+    FairShare,
+}
+
+impl std::str::FromStr for LinkSharing {
+    type Err = anyhow::Error;
+
+    fn from_str(name: &str) -> anyhow::Result<LinkSharing> {
+        match name {
+            "fifo" => Ok(LinkSharing::Fifo),
+            "fair-share" | "fair_share" => Ok(LinkSharing::FairShare),
+            other => anyhow::bail!("unknown link sharing `{other}`"),
+        }
+    }
+}
+
+impl std::fmt::Display for LinkSharing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            LinkSharing::Fifo => "fifo",
+            LinkSharing::FairShare => "fair-share",
+        })
+    }
+}
+
+/// One named interconnect link of the cluster's KV-transport topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSpec {
+    pub name: String,
+    /// Achievable bandwidth (bytes/s).
+    pub bandwidth: f64,
+    /// Per-chunk setup latency (s) — RDMA post/doorbell cost.
+    pub latency: f64,
+    pub sharing: LinkSharing,
+}
+
+impl LinkSpec {
+    /// Parse from JSON, falling back to `base` for absent fields.
+    pub fn from_json(v: &Json, base: &LinkSpec) -> anyhow::Result<Self> {
+        Ok(LinkSpec {
+            name: v
+                .get("name")
+                .as_str()
+                .unwrap_or(&base.name)
+                .to_string(),
+            bandwidth: v.get("bandwidth").as_f64().unwrap_or(base.bandwidth),
+            latency: v.get("latency").as_f64().unwrap_or(base.latency),
+            sharing: match v.get("sharing").as_str() {
+                Some(s) => s.parse()?,
+                None => base.sharing,
+            },
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("bandwidth", Json::Num(self.bandwidth)),
+            ("latency", Json::Num(self.latency)),
+            ("sharing", Json::Str(self.sharing.to_string())),
+        ])
+    }
+}
+
+/// KV-transport topology and fast-preemption knobs (`transport` section of
+/// the JSON config — see DESIGN.md §3.5 for the schema).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransportSpec {
+    /// Model layers moved per transfer chunk (§3.4.1 layer-wise
+    /// granularity; 1 = one chunk per layer).
+    pub chunk_layers: usize,
+    /// Fast preemption: stream evicted offline KV out (to the relaxed pool
+    /// or host staging) instead of discarding it for full recompute.
+    pub recoverable_eviction: bool,
+    /// Allow the host-staging buffer as an eviction destination when no
+    /// relaxed instance has room.
+    pub host_staging: bool,
+    /// Inter-pool interconnect (relaxed <-> strict KV movement).
+    pub pool: LinkSpec,
+    /// Device <-> host staging link (recoverable-eviction offload/restore).
+    pub host: LinkSpec,
+}
+
+impl TransportSpec {
+    /// Defaults derived from a hardware profile: the pool link carries the
+    /// profile's effective interconnect bandwidth (`B_c`); host staging
+    /// moves over the (faster) device-to-host DMA path.
+    pub fn for_hardware(hw: &HardwareProfile) -> Self {
+        TransportSpec {
+            chunk_layers: 1,
+            recoverable_eviction: true,
+            host_staging: true,
+            pool: LinkSpec {
+                name: "pool".into(),
+                bandwidth: hw.bw_comm,
+                latency: 5e-6,
+                sharing: LinkSharing::Fifo,
+            },
+            host: LinkSpec {
+                name: "host".into(),
+                bandwidth: 2.0 * hw.bw_comm,
+                latency: 5e-6,
+                sharing: LinkSharing::Fifo,
+            },
+        }
+    }
+
+    /// Parse the `transport` config section; absent fields fall back to the
+    /// hardware-derived defaults in `base`.
+    pub fn from_json(v: &Json, base: &TransportSpec) -> anyhow::Result<Self> {
+        Ok(TransportSpec {
+            chunk_layers: v
+                .get("chunk_layers")
+                .as_usize()
+                .unwrap_or(base.chunk_layers)
+                .max(1),
+            recoverable_eviction: v
+                .get("recoverable_eviction")
+                .as_bool()
+                .unwrap_or(base.recoverable_eviction),
+            host_staging: v
+                .get("host_staging")
+                .as_bool()
+                .unwrap_or(base.host_staging),
+            pool: match v.get("pool") {
+                Json::Null => base.pool.clone(),
+                p => LinkSpec::from_json(p, &base.pool)?,
+            },
+            host: match v.get("host") {
+                Json::Null => base.host.clone(),
+                h => LinkSpec::from_json(h, &base.host)?,
+            },
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("chunk_layers", Json::Num(self.chunk_layers as f64)),
+            (
+                "recoverable_eviction",
+                Json::Bool(self.recoverable_eviction),
+            ),
+            ("host_staging", Json::Bool(self.host_staging)),
+            ("pool", self.pool.to_json()),
+            ("host", self.host.to_json()),
         ])
     }
 }
@@ -419,13 +616,17 @@ pub struct ServingConfig {
     pub slo: SloSpec,
     pub sched: SchedulerParams,
     pub cluster: ClusterSpec,
+    /// KV-transport link topology + fast-preemption configuration.
+    pub transport: TransportSpec,
 }
 
 impl ServingConfig {
     pub fn preset_7b() -> Self {
+        let hardware = HardwareProfile::ascend_910c();
         ServingConfig {
             model: ModelSpec::qwen2_5_7b(),
-            hardware: HardwareProfile::ascend_910c(),
+            transport: TransportSpec::for_hardware(&hardware),
+            hardware,
             slo: SloSpec::default(),
             sched: SchedulerParams::default(),
             cluster: ClusterSpec::default(),
@@ -433,30 +634,39 @@ impl ServingConfig {
     }
 
     pub fn preset_72b() -> Self {
+        let hardware = HardwareProfile::ascend_910c();
         ServingConfig {
             model: ModelSpec::qwen2_5_72b(),
-            hardware: HardwareProfile::ascend_910c(),
+            transport: TransportSpec::for_hardware(&hardware),
+            hardware,
             slo: SloSpec::default(),
             sched: SchedulerParams::default(),
             cluster: ClusterSpec::default(),
         }
     }
 
-    /// Load from a JSON file; missing sections fall back to the 7B preset.
+    /// Load from a JSON file; missing sections fall back to the 7B preset
+    /// (transport defaults derive from the resolved hardware profile).
     pub fn from_file(path: &std::path::Path) -> anyhow::Result<Self> {
         let v = Json::parse_file(path)?;
         let base = Self::preset_7b();
+        let hardware = match v.get("hardware") {
+            Json::Null => base.hardware,
+            Json::Str(s) => s.parse()?,
+            h => HardwareProfile::from_json(h)?,
+        };
+        let transport_base = TransportSpec::for_hardware(&hardware);
         Ok(ServingConfig {
             model: match v.get("model") {
                 Json::Null => base.model,
-                Json::Str(s) => ModelSpec::by_name(s)?,
+                Json::Str(s) => s.parse()?,
                 m => ModelSpec::from_json(m)?,
             },
-            hardware: match v.get("hardware") {
-                Json::Null => base.hardware,
-                Json::Str(s) => HardwareProfile::by_name(s)?,
-                h => HardwareProfile::from_json(h)?,
+            transport: match v.get("transport") {
+                Json::Null => transport_base,
+                t => TransportSpec::from_json(t, &transport_base)?,
             },
+            hardware,
             slo: match v.get("slo") {
                 Json::Null => base.slo,
                 s => SloSpec::from_json(s)?,
@@ -507,15 +717,58 @@ mod tests {
     }
 
     #[test]
-    fn by_name_roundtrip() {
-        assert_eq!(ModelSpec::by_name("7b").unwrap(), ModelSpec::qwen2_5_7b());
+    fn parse_and_display_roundtrip() {
         assert_eq!(
-            ModelSpec::by_name("qwen2.5-72b").unwrap().name,
-            "qwen2.5-72b"
+            "7b".parse::<ModelSpec>().unwrap(),
+            ModelSpec::qwen2_5_7b()
         );
-        assert!(ModelSpec::by_name("gpt-5").is_err());
-        assert!(HardwareProfile::by_name("910c").is_ok());
-        assert!(HardwareProfile::by_name("tpu-v9").is_err());
+        assert!("gpt-5".parse::<ModelSpec>().is_err());
+        assert!("tpu-v9".parse::<HardwareProfile>().is_err());
+        // Display emits the canonical name, which parses back to the preset.
+        for name in ["qwen2.5-7b", "qwen2.5-72b", "tiny"] {
+            let m: ModelSpec = name.parse().unwrap();
+            assert_eq!(m.to_string(), name);
+            assert_eq!(m.to_string().parse::<ModelSpec>().unwrap(), m);
+        }
+        for name in ["ascend-910c", "h800", "ascend-910c-vllm", "cpu-tiny"] {
+            let h: HardwareProfile = name.parse().unwrap();
+            assert_eq!(h.to_string(), name);
+            assert_eq!(h.to_string().parse::<HardwareProfile>().unwrap(), h);
+        }
+        // The deprecated aliases keep working.
+        #[allow(deprecated)]
+        {
+            assert_eq!(
+                ModelSpec::by_name("7b").unwrap(),
+                ModelSpec::qwen2_5_7b()
+            );
+            assert!(HardwareProfile::by_name("910c").is_ok());
+        }
+    }
+
+    #[test]
+    fn transport_defaults_follow_hardware() {
+        let t = TransportSpec::for_hardware(&HardwareProfile::ascend_910c());
+        assert_eq!(t.pool.bandwidth, 25e9);
+        assert_eq!(t.host.bandwidth, 50e9);
+        assert_eq!(t.pool.sharing, LinkSharing::Fifo);
+        assert!(t.recoverable_eviction && t.host_staging);
+        assert_eq!(t.chunk_layers, 1);
+        // JSON roundtrip.
+        let base = t.clone();
+        let t2 = TransportSpec::from_json(&t.to_json(), &base).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn link_sharing_parses() {
+        assert_eq!("fifo".parse::<LinkSharing>().unwrap(), LinkSharing::Fifo);
+        assert_eq!(
+            "fair-share".parse::<LinkSharing>().unwrap(),
+            LinkSharing::FairShare
+        );
+        assert!("token-ring".parse::<LinkSharing>().is_err());
+        assert_eq!(LinkSharing::FairShare.to_string(), "fair-share");
     }
 
     #[test]
@@ -558,7 +811,12 @@ mod tests {
                 "hardware": "h800",
                 "slo": {"ttft": 3.0, "tpot": 0.05},
                 "scheduler": {"mix_probe_iters": 16},
-                "cluster": {"relaxed_instances": 2, "strict_instances": 3}
+                "cluster": {"relaxed_instances": 2, "strict_instances": 3},
+                "transport": {
+                    "chunk_layers": 4,
+                    "recoverable_eviction": false,
+                    "pool": {"bandwidth": 2e9, "sharing": "fair-share"}
+                }
             }"#,
         )
         .unwrap();
@@ -569,6 +827,13 @@ mod tests {
         assert_eq!(cfg.slo.violation_threshold, 0.03); // default preserved
         assert_eq!(cfg.sched.mix_probe_iters, 16);
         assert_eq!(cfg.cluster.strict_instances, 3);
+        assert_eq!(cfg.transport.chunk_layers, 4);
+        assert!(!cfg.transport.recoverable_eviction);
+        assert!(cfg.transport.host_staging); // default preserved
+        assert_eq!(cfg.transport.pool.bandwidth, 2e9);
+        assert_eq!(cfg.transport.pool.sharing, LinkSharing::FairShare);
+        // Absent host link falls back to the h800 hardware default.
+        assert_eq!(cfg.transport.host.bandwidth, 2.0 * cfg.hardware.bw_comm);
     }
 
     #[test]

@@ -15,9 +15,16 @@
 //! - layer-level preemption is approximated at step granularity (a single
 //!   CPU process cannot abort a running XLA execution mid-flight): the
 //!   preempted prefill still runs, but the core discards its work;
-//! - KV transfers are instantaneous (both logical pools share one host);
 //! - both pools share one CPU, so "strict" latency includes interleaved
 //!   prefill time.
+//!
+//! KV transfers are *not* instantaneous anymore: the core's transport
+//! engine times every chunk, and this executor performs the corresponding
+//! real work — each [`Action::TransferChunk`] copies that chunk's range of
+//! the request's KV host vectors into a per-job staging buffer, which is
+//! swapped in when [`Action::TransferDone`] lands. Chunk copies interleave
+//! with model steps on the same agenda, so transfers genuinely overlap
+//! decode execution.
 
 use std::collections::{HashMap, VecDeque};
 use std::path::Path;
@@ -28,10 +35,11 @@ use anyhow::Result;
 
 use crate::config::{
     ClusterSpec, HardwareProfile, SchedulerParams, ServingConfig, SloSpec,
+    TransportSpec,
 };
 use crate::coordinator::{Ablation, OverloadMode, Policy};
 use crate::instance::StepKind;
-use crate::metrics::{Recorder, Report};
+use crate::metrics::{Recorder, Report, TransportReport};
 use crate::perfmodel::BatchStats;
 use crate::perfmodel::{calibrate, PerfModel, Sample, SampleKind};
 use crate::request::{Class, Request, RequestId};
@@ -40,6 +48,7 @@ use crate::scheduler::{
     Action, CoreConfig, ExecStats, Executor, InstanceRef, SchedulerCore,
 };
 use crate::trace::Trace;
+use crate::transport::JobId;
 use crate::util::rng::Pcg;
 
 /// Engine parameters.
@@ -89,6 +98,8 @@ pub struct EngineOutcome {
     pub samples: Vec<Sample>,
     /// The CPU-calibrated perf model used for Algorithm 2 during the run.
     pub perf_model: PerfModel,
+    /// KV transport accounting (chunk copies the engine actually did).
+    pub transport: TransportReport,
 }
 
 /// Live execution state of one request on the real substrate: its KV cache
@@ -108,6 +119,21 @@ struct PendingStep {
     kind: StepKind,
     participants: Vec<RequestId>,
     seq: u64,
+}
+
+/// One agenda item: a model step or a KV-transfer chunk copy.
+#[derive(Debug, Clone)]
+enum PendingWork {
+    Step(PendingStep),
+    Chunk { job: JobId, chunk: usize, seq: u64 },
+}
+
+/// Destination buffer of an in-flight KV transfer, filled chunk-by-chunk.
+struct Staging {
+    req: RequestId,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    chunks: usize,
 }
 
 /// Probe the runtime and fit a CPU hardware profile for the tiny model —
@@ -202,6 +228,7 @@ pub fn serve_trace_with_runtime(
     let core_cfg = CoreConfig {
         serving: ServingConfig {
             model: tiny_model_spec(rt),
+            transport: TransportSpec::for_hardware(&pm.hw),
             hardware: pm.hw.clone(),
             slo: cfg.slo,
             sched: cfg.sched.clone(),
@@ -232,8 +259,10 @@ pub struct EngineExecutor<'rt> {
     feeder: Option<std::thread::JoinHandle<()>>,
     /// Per-request substrate state (KV buffer + decode cursor).
     lives: HashMap<RequestId, Live>,
-    /// StartStep work orders awaiting synchronous execution.
-    pending: VecDeque<PendingStep>,
+    /// Per-job transfer staging buffers (chunk copies land here).
+    staging: HashMap<JobId, Staging>,
+    /// Work orders (steps + transfer chunks) awaiting synchronous execution.
+    pending: VecDeque<PendingWork>,
     rng: Pcg,
     feeding: bool,
     events: u64,
@@ -282,6 +311,7 @@ impl<'rt> EngineExecutor<'rt> {
             rx,
             feeder: Some(feeder),
             lives: HashMap::new(),
+            staging: HashMap::new(),
             pending: VecDeque::new(),
             rng: Pcg::new(seed, 616),
             feeding: true,
@@ -295,14 +325,11 @@ impl<'rt> EngineExecutor<'rt> {
         }
     }
 
-    /// Interpret the core's actions on the real substrate.
-    fn apply(
-        &mut self,
-        core: &mut SchedulerCore,
-        actions: Vec<Action>,
-    ) -> Result<()> {
-        let mut queue: VecDeque<Action> = actions.into();
-        while let Some(a) = queue.pop_front() {
+    /// Interpret the core's actions on the real substrate. Timed work
+    /// (steps, transfer chunks) joins the agenda; notifications manage the
+    /// per-request substrate resources.
+    fn apply(&mut self, actions: Vec<Action>) {
+        for a in actions {
             match a {
                 Action::StartStep {
                     inst,
@@ -311,12 +338,12 @@ impl<'rt> EngineExecutor<'rt> {
                     seq,
                     ..
                 } => {
-                    self.pending.push_back(PendingStep {
+                    self.pending.push_back(PendingWork::Step(PendingStep {
                         inst,
                         kind,
                         participants,
                         seq,
-                    });
+                    }));
                 }
                 Action::Preempt { inst, seq, .. } => {
                     // Step-granularity approximation: the preempted prefill
@@ -324,17 +351,43 @@ impl<'rt> EngineExecutor<'rt> {
                     // discarded its work — re-tag the queued step so its
                     // completion delivers the superseding sequence id.
                     for p in self.pending.iter_mut() {
-                        if p.inst == InstanceRef::Relaxed(inst) {
-                            p.seq = seq;
+                        if let PendingWork::Step(p) = p {
+                            if p.inst == InstanceRef::Relaxed(inst) {
+                                p.seq = seq;
+                            }
                         }
                     }
                 }
-                Action::Transfer { req, to_strict, .. } => {
-                    // One host: KV "transfer" is immediate.
-                    let now = self.now();
-                    self.events += 1;
-                    let more = core.on_transfer_done(now, req, to_strict);
-                    queue.extend(more);
+                Action::TransferStart { job, req, chunks, .. } => {
+                    // Allocate the destination buffer the chunk copies fill.
+                    if let Some(live) = self.lives.get(&req) {
+                        self.staging.insert(
+                            job,
+                            Staging {
+                                req,
+                                k: vec![0.0; live.kv.k.len()],
+                                v: vec![0.0; live.kv.v.len()],
+                                chunks,
+                            },
+                        );
+                    }
+                }
+                Action::TransferChunk { job, chunk, seq, .. } => {
+                    self.pending
+                        .push_back(PendingWork::Chunk { job, chunk, seq });
+                }
+                Action::TransferDone { job, req, .. } => {
+                    // The whole cache has been copied: the staging buffer
+                    // becomes the request's live KV at its new home.
+                    if let Some(st) = self.staging.remove(&job) {
+                        if let Some(live) = self.lives.get_mut(&req) {
+                            live.kv.k = st.k;
+                            live.kv.v = st.v;
+                        }
+                    }
+                }
+                Action::TransferCancel { job, .. } => {
+                    self.staging.remove(&job);
                 }
                 Action::Evict { req, .. } => {
                     // KV dropped for recompute; the core re-prefills later.
@@ -346,7 +399,6 @@ impl<'rt> EngineExecutor<'rt> {
                 Action::Migrate { .. } | Action::Admit { .. } => {}
             }
         }
-        Ok(())
     }
 
     /// Execute one StartStep work order on the runtime, then report the
@@ -371,7 +423,33 @@ impl<'rt> EngineExecutor<'rt> {
         let now = self.now();
         self.events += 1;
         let actions = core.on_step_end(now, step.inst, step.seq);
-        self.apply(core, actions)
+        self.apply(actions);
+        Ok(())
+    }
+
+    /// Perform one transfer chunk: copy its range of the source KV into the
+    /// job's staging buffer, then report progress to the core.
+    fn execute_chunk(
+        &mut self,
+        core: &mut SchedulerCore,
+        job: JobId,
+        chunk: usize,
+        seq: u64,
+    ) {
+        if let Some(st) = self.staging.get_mut(&job) {
+            if let Some(live) = self.lives.get(&st.req) {
+                let len = st.k.len().min(live.kv.k.len());
+                let chunks = st.chunks.max(1);
+                let lo = chunk.min(chunks) * len / chunks;
+                let hi = (chunk + 1).min(chunks) * len / chunks;
+                st.k[lo..hi].copy_from_slice(&live.kv.k[lo..hi]);
+                st.v[lo..hi].copy_from_slice(&live.kv.v[lo..hi]);
+            }
+        }
+        let now = self.now();
+        self.events += 1;
+        let actions = core.on_transfer_progress(now, job, seq);
+        self.apply(actions);
     }
 
     /// Run each participant's (re-)prefill through the runtime.
@@ -494,6 +572,7 @@ impl<'rt> EngineExecutor<'rt> {
         let duration = trace.duration().max(1e-9);
         EngineOutcome {
             report: recorder.report(&self.cfg.slo, duration),
+            transport: core.transport_report(duration),
             wall_s: self.start.elapsed().as_secs_f64(),
             prefills: self.prefills,
             strict_steps: self.strict_steps,
@@ -522,7 +601,7 @@ impl Executor for EngineExecutor<'_> {
                         let now = self.now();
                         self.events += 1;
                         let actions = core.on_arrival(now, r.id);
-                        self.apply(core, actions)?;
+                        self.apply(actions);
                     }
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
@@ -532,9 +611,14 @@ impl Executor for EngineExecutor<'_> {
                 }
             }
 
-            // ---- execute the next step the core scheduled ----
-            if let Some(step) = self.pending.pop_front() {
-                self.execute(core, step)?;
+            // ---- execute the next work item the core scheduled ----
+            if let Some(work) = self.pending.pop_front() {
+                match work {
+                    PendingWork::Step(step) => self.execute(core, step)?,
+                    PendingWork::Chunk { job, chunk, seq } => {
+                        self.execute_chunk(core, job, chunk, seq)
+                    }
+                }
             } else if !self.feeding {
                 // No runnable work and no more arrivals: drained (or
                 // stalled on capacity, which matches simulator semantics).

@@ -49,6 +49,10 @@ pub struct RelaxedInstance {
     pub online_queue: VecDeque<RequestId>,
     /// Offline decode residents (their KV lives here).
     pub offline_decoding: Vec<RequestId>,
+    /// Requests whose KV is streaming *in* (rescue from a strict eviction
+    /// or restore from host staging); space is reserved in `kv` but they
+    /// join `offline_decoding` only when the transfer lands.
+    pub inbound: Vec<RequestId>,
     pub step: Option<Step>,
     pub next_seq: u64,
     // ---- utilization accounting ----
@@ -63,6 +67,7 @@ impl RelaxedInstance {
             kv: KvManager::new(kv_capacity_tokens, block_tokens),
             online_queue: VecDeque::new(),
             offline_decoding: Vec::new(),
+            inbound: Vec::new(),
             step: None,
             next_seq: 0,
             busy_s: 0.0,

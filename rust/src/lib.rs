@@ -24,6 +24,7 @@ pub mod sim;
 pub mod sweep;
 pub mod testutil;
 pub mod trace;
+pub mod transport;
 pub mod util;
 
 /// One-stop import surface for the public scheduling API.
@@ -37,15 +38,15 @@ pub mod util;
 /// ```
 pub mod prelude {
     pub use crate::config::{
-        ClusterSpec, HardwareProfile, ModelSpec, SchedulerParams,
-        ServingConfig, SloSpec,
+        ClusterSpec, HardwareProfile, LinkSharing, LinkSpec, ModelSpec,
+        SchedulerParams, ServingConfig, SloSpec, TransportSpec,
     };
     pub use crate::coordinator::{Ablation, OverloadMode, Policy};
     pub use crate::engine::{
         serve_trace, serve_trace_with_runtime, EngineConfig, EngineExecutor,
         EngineOutcome,
     };
-    pub use crate::metrics::{Recorder, Report};
+    pub use crate::metrics::{LinkReport, Recorder, Report, TransportReport};
     pub use crate::perfmodel::{BatchStats, Bottleneck, PerfModel};
     pub use crate::request::{Class, Phase, Request, RequestId};
     pub use crate::scheduler::{
@@ -53,6 +54,9 @@ pub mod prelude {
         KvHome, SchedulerCore, StubWallClockExecutor, VirtualExecutor,
     };
     pub use crate::sim::{simulate, SimConfig, SimResult};
+    pub use crate::transport::{
+        ChunkOrder, JobId, TransferJob, TransferKind, TransportEngine,
+    };
     pub use crate::trace::{
         datasets::DatasetProfile,
         generator::{offline_trace, online_trace},

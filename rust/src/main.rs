@@ -120,7 +120,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         None => ServingConfig::preset_7b(),
     };
     if let Some(m) = args.opt_str("model") {
-        serving.model = ModelSpec::by_name(m)?;
+        serving.model = m.parse::<ModelSpec>()?;
     }
     let mut cfg =
         SimConfig::new(serving, args.parse_flag("policy", Policy::Ooco)?);
@@ -131,20 +131,24 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let res = simulate(&trace, &cfg);
     println!("{}", res.report.summary_line());
     println!(
-        "strict util {:.1}% relaxed util {:.1}% migrations {} evictions {} preemptions {}",
+        "strict util {:.1}% relaxed util {:.1}% migrations {} evictions {} preemptions {} rescues {}",
         res.strict_utilization * 100.0,
         res.relaxed_utilization * 100.0,
         res.migrations,
         res.evictions,
-        res.preemptions
+        res.preemptions,
+        res.rescues
     );
+    println!("{}", res.transport.summary_line());
     Ok(())
 }
 
 fn cmd_roofline(args: &Args) -> anyhow::Result<()> {
     use ooco::perfmodel::{BatchStats, PerfModel};
-    let model = ModelSpec::by_name(args.str("model", "7b"))?;
-    let hw = ooco::config::HardwareProfile::by_name(args.str("hw", "910c"))?;
+    let model = args.str("model", "7b").parse::<ModelSpec>()?;
+    let hw = args
+        .str("hw", "910c")
+        .parse::<ooco::config::HardwareProfile>()?;
     let pm = PerfModel::new(model, hw);
     let batch = args.usize("batch", 128);
     let kv = args.usize("kv-len", 1000);

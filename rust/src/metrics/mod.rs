@@ -1,13 +1,81 @@
-//! Serving metrics: TTFT/TPOT, SLO violation accounting, throughput.
+//! Serving metrics: TTFT/TPOT, SLO violation accounting, throughput, and
+//! KV-transport accounting.
 //!
 //! `Recorder` ingests finished requests (from the simulator or the real
 //! engine) and produces the quantities the paper's evaluation reports:
 //! online SLO violation rate (§5.2's 3% threshold), offline token
-//! throughput, and latency percentiles.
+//! throughput, and latency percentiles. [`TransportReport`] aggregates the
+//! transport subsystem's link utilization, transfer stall time, and the
+//! recoverable fast-preemption statistics (preemption-to-restart latency).
 
 use crate::config::SloSpec;
 use crate::request::{Class, Request};
 use crate::util::stats::Summary;
+
+/// Per-link transport accounting over one run.
+#[derive(Debug, Clone)]
+pub struct LinkReport {
+    pub name: String,
+    /// Bytes of completed (non-cancelled) chunks.
+    pub bytes_moved: f64,
+    /// Seconds the medium spent serving chunks.
+    pub busy_s: f64,
+    /// `busy_s` over the observation window.
+    pub utilization: f64,
+    pub jobs_completed: u64,
+    /// Queueing/contention delay added on top of contention-free transfer
+    /// time, summed over completed jobs.
+    pub stall_s: f64,
+}
+
+/// KV-transport subsystem metrics (modeled interconnect + recoverable fast
+/// preemption — DESIGN.md §3.5).
+#[derive(Debug, Clone)]
+pub struct TransportReport {
+    pub links: Vec<LinkReport>,
+    /// Total transfer stall across all links (s).
+    pub stall_s: f64,
+    /// Strict evictions recovered by streaming KV into the relaxed pool.
+    pub rescues: u64,
+    /// Evictions recovered via the host staging buffer.
+    pub offloads: u64,
+    /// Staged caches streamed back onto a relaxed instance.
+    pub restores: u64,
+    /// Eviction-to-decode-resume latency of recovered evictions.
+    pub restart_latency: Summary,
+    pub bytes_enqueued: f64,
+    pub bytes_delivered: f64,
+    pub jobs_cancelled: u64,
+}
+
+impl TransportReport {
+    /// One-line summary for bench output.
+    pub fn summary_line(&self) -> String {
+        let links: Vec<String> = self
+            .links
+            .iter()
+            .map(|l| {
+                format!(
+                    "{} {:.1} MB util {:.1}% stall {:.2}s",
+                    l.name,
+                    l.bytes_moved / 1e6,
+                    l.utilization * 100.0,
+                    l.stall_s
+                )
+            })
+            .collect();
+        format!(
+            "transport: {} | rescues {} offloads {} restores {} cancelled {} | restart p50 {:.3}s p99 {:.3}s",
+            links.join(" | "),
+            self.rescues,
+            self.offloads,
+            self.restores,
+            self.jobs_cancelled,
+            self.restart_latency.p50,
+            self.restart_latency.p99,
+        )
+    }
+}
 
 /// Outcome snapshot for one finished (or dropped) request.
 #[derive(Debug, Clone)]
@@ -243,6 +311,31 @@ mod tests {
         assert!((rep.offline_request_throughput - 0.02).abs() < 1e-12);
         assert_eq!(rep.offline_evictions, 2);
         assert!(!rep.meets_slo(&slo)); // 50% > 3%
+    }
+
+    #[test]
+    fn transport_report_summary_line() {
+        let rep = TransportReport {
+            links: vec![LinkReport {
+                name: "pool".into(),
+                bytes_moved: 5e6,
+                busy_s: 2.0,
+                utilization: 0.2,
+                jobs_completed: 3,
+                stall_s: 0.5,
+            }],
+            stall_s: 0.5,
+            rescues: 2,
+            offloads: 1,
+            restores: 1,
+            restart_latency: Summary::of(&[0.1, 0.2]),
+            bytes_enqueued: 5e6,
+            bytes_delivered: 5e6,
+            jobs_cancelled: 0,
+        };
+        let line = rep.summary_line();
+        assert!(line.contains("pool"), "{line}");
+        assert!(line.contains("rescues 2"), "{line}");
     }
 
     #[test]

@@ -238,7 +238,13 @@ impl PerfModel {
             + self.hw.overhead_decode
     }
 
-    /// KV-cache transfer latency between instances (relaxed -> strict).
+    /// Contention-free KV-cache transfer latency between instances over the
+    /// profile's `B_c`. Scheduling no longer uses this directly — the
+    /// `transport` subsystem models links, queuing, and chunking — but it
+    /// stays as the analytic reference: an idle link with zero per-chunk
+    /// setup latency matches it exactly (asserted in
+    /// `tests/transport_properties.rs`); the default link adds
+    /// `chunks x LinkSpec::latency` of setup time on top.
     pub fn kv_transfer_latency(&self, tokens: usize) -> f64 {
         tokens as f64 * self.model.kv_bytes_per_token() / self.hw.bw_comm
     }

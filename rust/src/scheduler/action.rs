@@ -5,22 +5,27 @@
 //! substrate must do next. Actions split into two kinds:
 //!
 //! - **work orders** the executor must act on: [`Action::StartStep`] (run an
-//!   iteration and call `on_step_end` when it finishes), [`Action::Transfer`]
-//!   (move a KV cache and call `on_transfer_done`), and [`Action::Preempt`]
+//!   iteration and call `on_step_end` when it finishes),
+//!   [`Action::TransferChunk`] (move one KV chunk over a link and call
+//!   `on_transfer_progress` when it lands), and [`Action::Preempt`]
 //!   (reschedule a truncated offline-prefill step);
 //! - **notifications** that carry no scheduling obligation but let the
-//!   executor track per-request resources (real KV buffers, logs, metrics):
-//!   [`Action::Evict`], [`Action::Migrate`], [`Action::Admit`],
-//!   [`Action::Complete`].
+//!   executor track per-request resources (real KV buffers, staging copies,
+//!   logs, metrics): [`Action::TransferStart`], [`Action::TransferDone`],
+//!   [`Action::TransferCancel`], [`Action::Evict`], [`Action::Migrate`],
+//!   [`Action::Admit`], [`Action::Complete`].
 //!
 //! The stream of actions is the core's *observable behaviour*: two executors
 //! driving the same core over the same trace must produce identical streams
-//! (asserted by `tests/scheduler_differential.rs`). All scheduling state
-//! (queues, KV accounting, routing) lives in the core; executors only own
-//! the clock and the execution substrate.
+//! — including the chunk-level transfer progress/completion ordering under
+//! link contention (asserted by `tests/scheduler_differential.rs`). All
+//! scheduling state (queues, KV accounting, routing, the transport engine)
+//! lives in the core; executors only own the clock and the execution
+//! substrate.
 
 use crate::instance::StepKind;
 use crate::request::RequestId;
+use crate::transport::{JobId, TransferKind};
 
 /// Which pool instance an action refers to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,22 +62,49 @@ pub enum Action {
     /// backlog for recompute. Executors holding real KV buffers free them.
     Evict { inst: InstanceRef, req: RequestId },
     /// Algorithm 1 pull: `req`'s offline decode moves from a relaxed to a
-    /// strict instance. Always followed by the matching [`Action::Transfer`].
+    /// strict instance. Always followed by the matching
+    /// [`Action::TransferStart`].
     Migrate {
         req: RequestId,
         from_relaxed: usize,
         to_strict: usize,
     },
-    /// A KV transfer to strict instance `to_strict` started. The executor
-    /// must invoke [`super::SchedulerCore::on_transfer_done`] once the
-    /// `kv_tokens`-sized cache has moved (`predicted_latency` on a virtual
-    /// interconnect; immediately on a shared-memory substrate).
-    Transfer {
+    /// A transfer job for `req`'s `kv_tokens`-sized KV cache entered the
+    /// transport subsystem (notification). Executors holding real KV
+    /// allocate the `chunks`-chunk staging for the copy; the timed work
+    /// arrives as [`Action::TransferChunk`] orders.
+    TransferStart {
+        job: JobId,
         req: RequestId,
-        to_strict: usize,
+        kind: TransferKind,
         kv_tokens: usize,
-        predicted_latency: f64,
+        chunks: usize,
     },
+    /// Work order: chunk `chunk` of `job` occupies `link` for
+    /// `predicted_latency` seconds. The executor must invoke
+    /// [`super::SchedulerCore::on_transfer_progress`] with (`job`, `seq`)
+    /// once it has elapsed — and, on a real substrate, actually copy the
+    /// chunk's KV range.
+    TransferChunk {
+        job: JobId,
+        req: RequestId,
+        link: usize,
+        chunk: usize,
+        predicted_latency: f64,
+        seq: u64,
+    },
+    /// `job`'s final chunk landed and `req`'s KV residency was handed off
+    /// (notification). Executors swap their staging copy in.
+    TransferDone {
+        job: JobId,
+        req: RequestId,
+        kind: TransferKind,
+    },
+    /// `job` was aborted mid-flight — its destination reservation was
+    /// released and `req` falls back to discard-and-recompute (always
+    /// followed by the matching [`Action::Evict`]). Executors drop the
+    /// staging copy.
+    TransferCancel { job: JobId, req: RequestId },
     /// The gating cost model (§3.4.2) admitted an offline request for
     /// (re-)prefill on relaxed instance `inst`.
     Admit { inst: usize, req: RequestId },
@@ -89,7 +121,10 @@ impl Action {
             Action::Preempt { .. } => None,
             Action::Evict { req, .. }
             | Action::Migrate { req, .. }
-            | Action::Transfer { req, .. }
+            | Action::TransferStart { req, .. }
+            | Action::TransferChunk { req, .. }
+            | Action::TransferDone { req, .. }
+            | Action::TransferCancel { req, .. }
             | Action::Admit { req, .. }
             | Action::Complete { req } => Some(*req),
         }
@@ -110,6 +145,18 @@ mod tests {
             }
             .request(),
             Some(3)
+        );
+        assert_eq!(
+            Action::TransferChunk {
+                job: 1,
+                req: 9,
+                link: 0,
+                chunk: 2,
+                predicted_latency: 0.01,
+                seq: 5
+            }
+            .request(),
+            Some(9)
         );
         let step = Action::StartStep {
             inst: InstanceRef::Relaxed(1),

@@ -16,6 +16,9 @@ pub enum KvHome {
     None,
     Relaxed(usize),
     Strict(usize),
+    /// Host staging buffer (recoverable fast preemption parked the KV off
+    /// the devices; a `Restore` transfer brings it back).
+    Staged,
 }
 
 /// Scheduling state for one cluster: instances, backlog, KV homes, router.
@@ -30,10 +33,19 @@ pub struct ClusterState {
     pub strict: Vec<StrictInstance>,
     /// Offline requests waiting for (re-)prefill, shared across the pool.
     pub offline_backlog: VecDeque<RequestId>,
+    /// Offline requests whose KV sits in the host staging buffer
+    /// (recoverable fast preemption), waiting for relaxed-pool space to
+    /// stream back in.
+    pub staged_offline: VecDeque<RequestId>,
     pub router: Router,
     /// Per-strict-instance (batch stats, all-included) of the running step,
     /// consumed by the Algorithm 1 decision at the step boundary.
     pub strict_step_meta: Vec<Option<(BatchStats, bool)>>,
+    /// Per-request time of the recoverable eviction currently being
+    /// recovered from (NaN = none); cleared when decode resumes.
+    pub evict_started: Vec<f64>,
+    /// Preemption-to-restart latencies of recovered evictions (s).
+    pub restart_latencies: Vec<f64>,
     // ---- counters ----
     /// Online arrivals truncating a running offline prefill (§3.4.1).
     pub preemptions: u64,
@@ -41,6 +53,12 @@ pub struct ClusterState {
     pub evictions: u64,
     /// Algorithm 1 pulls (offline decode relaxed -> strict).
     pub migrations: u64,
+    /// Strict evictions recovered by streaming KV into the relaxed pool.
+    pub rescues: u64,
+    /// Evictions recovered by streaming KV to host staging.
+    pub offloads: u64,
+    /// Staged KV streams restored to a relaxed instance.
+    pub restores: u64,
 }
 
 impl ClusterState {
@@ -70,15 +88,21 @@ impl ClusterState {
             .collect();
         ClusterState {
             kv_home: vec![KvHome::None; requests.len()],
+            evict_started: vec![f64::NAN; requests.len()],
             requests,
             relaxed,
             strict,
             offline_backlog: VecDeque::new(),
+            staged_offline: VecDeque::new(),
             router: Router::new(n_relaxed, n_strict),
             strict_step_meta: vec![None; n_strict],
+            restart_latencies: Vec::new(),
             preemptions: 0,
             evictions: 0,
             migrations: 0,
+            rescues: 0,
+            offloads: 0,
+            restores: 0,
         }
     }
 
@@ -88,10 +112,12 @@ impl ClusterState {
     /// no more events can fire.)
     pub fn drained(&self) -> bool {
         self.offline_backlog.is_empty()
+            && self.staged_offline.is_empty()
             && self.relaxed.iter().all(|r| {
                 r.step.is_none()
                     && r.online_queue.is_empty()
                     && r.offline_decoding.is_empty()
+                    && r.inbound.is_empty()
             })
             && self.strict.iter().all(|s| {
                 s.step.is_none()

@@ -9,12 +9,18 @@
 //!
 //! - [`SchedulerCore::on_arrival`] — a request reached the cluster;
 //! - [`SchedulerCore::on_step_end`] — an iteration finished on an instance;
-//! - [`SchedulerCore::on_transfer_done`] — a KV transfer landed.
+//! - [`SchedulerCore::on_transfer_progress`] — a KV transfer chunk landed.
 //!
 //! Each returns the typed [`Action`]s the executor must carry out. The core
 //! never sleeps, measures, or schedules: time enters exclusively through the
 //! `now` argument of the entry points, which is a virtual clock under
 //! [`super::VirtualExecutor`] and a wall clock under the engine's executor.
+//!
+//! All inter-instance KV movement flows through the embedded
+//! [`TransportEngine`] (link contention, chunked layer-wise transfers,
+//! recoverable fast preemption — DESIGN.md §3.5); the core turns its chunk
+//! orders into [`Action::TransferChunk`] work orders so the transfer
+//! timeline is part of the substrate-independent action stream.
 
 use crate::config::ServingConfig;
 use crate::coordinator::{
@@ -24,12 +30,23 @@ use crate::coordinator::{
     Policy,
 };
 use crate::instance::{Step, StepKind};
+use crate::metrics::{LinkReport, TransportReport};
 use crate::perfmodel::{BatchStats, PerfModel};
 use crate::request::{Phase, Request, RequestId};
+use crate::transport::{
+    ChunkOrder, JobId, Progress, TransferJob, TransferKind, TransportEngine,
+};
 use crate::util::rng::Pcg;
+use crate::util::stats::Summary;
 
 use super::action::{Action, InstanceRef};
 use super::cluster::{ClusterState, KvHome};
+
+/// KV tokens kept free on a relaxed instance for a typical online prefill,
+/// so offline admission paths (gated prefill, staged-KV restore, strict
+/// rescue) don't crowd out preempting arrivals. One constant, three users —
+/// the headrooms are deliberately coupled.
+const ONLINE_PREFILL_RESERVE_TOKENS: usize = 4096;
 
 /// Configuration of the decision core (substrate-independent: no drain
 /// horizon, no wall-clock compression — those belong to executors).
@@ -64,6 +81,9 @@ pub struct SchedulerCore {
     pub cfg: CoreConfig,
     pub pm: PerfModel,
     pub cluster: ClusterState,
+    /// The KV transport subsystem: every inter-instance (and host-staging)
+    /// KV movement is a chunked job on its modeled links.
+    pub transport: TransportEngine,
     /// Mix-decode probe randomness (Algorithm 2's starvation avoidance).
     rng: Pcg,
     /// Clock of the most recent entry-point invocation.
@@ -98,10 +118,16 @@ impl SchedulerCore {
             cfg.block_tokens,
         );
         let rng = Pcg::new(cfg.seed, 9090);
+        let transport = TransportEngine::new(
+            &cfg.serving.transport,
+            cfg.serving.model.kv_bytes_per_token(),
+            cfg.serving.model.layers,
+        );
         SchedulerCore {
             cfg,
             pm,
             cluster,
+            transport,
             rng,
             now: 0.0,
             actions: Vec::new(),
@@ -138,16 +164,154 @@ impl SchedulerCore {
         std::mem::take(&mut self.actions)
     }
 
-    /// The KV transfer of `rid` to strict instance `strict` completed.
-    pub fn on_transfer_done(
+    /// A chunk of transfer `job` completed on its link at `now`. Stale
+    /// (cancel-reaped or superseded) completions are ignored. When the
+    /// job's final chunk lands, the KV residency hand-off happens here.
+    pub fn on_transfer_progress(
         &mut self,
         now: f64,
-        rid: RequestId,
-        strict: usize,
+        job: JobId,
+        seq: u64,
     ) -> Vec<Action> {
         self.now = now;
-        self.transfer_done(rid, strict);
+        match self.transport.on_chunk_done(now, job, seq) {
+            Progress::Stale => {}
+            Progress::Advanced { orders } => self.emit_chunk_orders(orders),
+            Progress::JobDone { job, orders } => {
+                self.emit_chunk_orders(orders);
+                self.actions.push(Action::TransferDone {
+                    job: job.id,
+                    req: job.req,
+                    kind: job.kind,
+                });
+                self.land_transfer(job);
+            }
+        }
         std::mem::take(&mut self.actions)
+    }
+
+    // ------------------------------------------------------- transport glue
+
+    /// Enqueue a transfer of `rid`'s current KV on the transport engine and
+    /// emit the start notification plus any immediate chunk orders.
+    fn enqueue_transfer(&mut self, rid: RequestId, kind: TransferKind) {
+        let kv_tokens = self.cluster.requests[rid as usize].kv_len();
+        let (job, orders) =
+            self.transport.enqueue(self.now, rid, kind, kv_tokens);
+        self.actions.push(Action::TransferStart {
+            job,
+            req: rid,
+            kind,
+            kv_tokens,
+            chunks: self.transport.chunks_per_job(),
+        });
+        self.emit_chunk_orders(orders);
+    }
+
+    fn emit_chunk_orders(&mut self, orders: Vec<ChunkOrder>) {
+        for o in orders {
+            self.actions.push(Action::TransferChunk {
+                job: o.job,
+                req: o.req,
+                link: o.link,
+                chunk: o.chunk,
+                predicted_latency: o.duration,
+                seq: o.seq,
+            });
+        }
+    }
+
+    /// Hand the moved KV to its destination once the last chunk landed.
+    fn land_transfer(&mut self, job: TransferJob) {
+        let rid = job.req;
+        match job.kind {
+            TransferKind::Dispatch { to_strict }
+            | TransferKind::Migrate { to_strict } => {
+                self.decode_handoff(rid, to_strict);
+            }
+            TransferKind::Rescue { to_relaxed }
+            | TransferKind::Restore { to_relaxed } => {
+                self.cluster.relaxed[to_relaxed]
+                    .inbound
+                    .retain(|&r| r != rid);
+                self.cluster.requests[rid as usize].phase = Phase::Decoding;
+                self.cluster.relaxed[to_relaxed].offline_decoding.push(rid);
+                if matches!(job.kind, TransferKind::Restore { .. }) {
+                    self.cluster.restores += 1;
+                }
+                let started = self.cluster.evict_started[rid as usize];
+                if started.is_finite() {
+                    self.cluster.restart_latencies.push(self.now - started);
+                    self.cluster.evict_started[rid as usize] = f64::NAN;
+                }
+                if self.cluster.relaxed[to_relaxed].is_idle() {
+                    self.start_relaxed_step(to_relaxed);
+                }
+            }
+            TransferKind::Offload => {
+                self.cluster.staged_offline.push_back(rid);
+                // Space may already exist somewhere in the relaxed pool.
+                self.try_restores();
+            }
+        }
+    }
+
+    /// Stream staged KV back into the relaxed pool wherever space permits
+    /// (keeping the same online-prefill headroom the gating path reserves).
+    fn try_restores(&mut self) {
+        for inst in 0..self.cluster.relaxed.len() {
+            while let Some(&rid) = self.cluster.staged_offline.front() {
+                let need =
+                    self.cluster.requests[rid as usize].kv_len() + 1;
+                if self.cluster.relaxed[inst].kv.free_tokens()
+                    < need + ONLINE_PREFILL_RESERVE_TOKENS
+                {
+                    break;
+                }
+                self.cluster.staged_offline.pop_front();
+                self.cluster.relaxed[inst]
+                    .kv
+                    .admit(rid, need)
+                    .expect("fit checked");
+                self.cluster.kv_home[rid as usize] = KvHome::Relaxed(inst);
+                self.cluster.relaxed[inst].inbound.push(rid);
+                self.enqueue_transfer(
+                    rid,
+                    TransferKind::Restore { to_relaxed: inst },
+                );
+            }
+            if self.cluster.staged_offline.is_empty() {
+                break;
+            }
+        }
+    }
+
+    /// Aggregate transport metrics over an observation window.
+    pub fn transport_report(&self, window_s: f64) -> TransportReport {
+        let links = self
+            .transport
+            .links()
+            .iter()
+            .map(|l| LinkReport {
+                name: l.spec.name.clone(),
+                bytes_moved: l.bytes_moved,
+                busy_s: l.busy_s,
+                utilization: l.utilization(window_s),
+                jobs_completed: l.jobs_completed,
+                stall_s: l.stall_s,
+            })
+            .collect::<Vec<_>>();
+        TransportReport {
+            stall_s: links.iter().map(|l| l.stall_s).sum(),
+            links,
+            rescues: self.cluster.rescues,
+            offloads: self.cluster.offloads,
+            restores: self.cluster.restores,
+            restart_latency: Summary::of(&self.cluster.restart_latencies),
+            bytes_enqueued: self.transport.bytes_enqueued,
+            bytes_delivered: self.transport.bytes_delivered,
+            jobs_cancelled: self.transport.jobs_cancelled,
+        }
     }
 
     // ------------------------------------------------------------ arrivals
@@ -224,6 +388,9 @@ impl SchedulerCore {
     // ----------------------------------------------------- relaxed stepping
 
     fn start_relaxed_step(&mut self, inst: usize) {
+        // Step boundaries are also when staged KV gets to stream back in
+        // (restores are transfers — they do not occupy the instance).
+        self.try_restores();
         if !self.cluster.relaxed[inst].is_idle() {
             return;
         }
@@ -283,17 +450,23 @@ impl SchedulerCore {
 
     /// Make room for `tokens` on a relaxed instance by evicting offline
     /// decode residents (oldest first — relaxed nodes have no bottleneck
-    /// preference; their decode batch has no SLO).
+    /// preference; their decode batch has no SLO), then — if still short —
+    /// by cancelling in-flight rescue/restore reservations.
     fn fit_on_relaxed(&mut self, inst: usize, tokens: usize) -> bool {
         while !self.cluster.relaxed[inst].kv.can_fit(tokens) {
             // Evict a parked/decoding offline resident not in the current
             // step (relaxed instance is idle here, so all are safe).
-            let Some(&victim) =
+            if let Some(&victim) =
                 self.cluster.relaxed[inst].offline_decoding.first()
-            else {
+            {
+                self.evict_offline_from_relaxed(inst, victim);
+            } else if let Some(&victim) =
+                self.cluster.relaxed[inst].inbound.first()
+            {
+                self.cancel_inbound_relaxed(inst, victim);
+            } else {
                 return false;
-            };
-            self.evict_offline_from_relaxed(inst, victim);
+            }
         }
         true
     }
@@ -303,7 +476,48 @@ impl SchedulerCore {
         self.cluster.relaxed[inst]
             .offline_decoding
             .retain(|&r| r != rid);
+        // Recoverable fast preemption: park the KV in host staging instead
+        // of discarding it (no second relaxed home for it here — the online
+        // prefill claiming this space may need the whole pool).
+        if self.cfg.policy.offline_decode_on_relaxed()
+            && self.transport.recoverable_eviction
+            && self.transport.host_staging
+        {
+            self.cluster.kv_home[rid as usize] = KvHome::Staged;
+            self.cluster.requests[rid as usize].phase = Phase::Migrating;
+            self.cluster.evict_started[rid as usize] = self.now;
+            self.cluster.offloads += 1;
+            self.enqueue_transfer(rid, TransferKind::Offload);
+            return;
+        }
         self.cluster.kv_home[rid as usize] = KvHome::None;
+        self.cluster.requests[rid as usize].evict();
+        self.cluster.offline_backlog.push_back(rid);
+        self.cluster.evictions += 1;
+        self.actions.push(Action::Evict {
+            inst: InstanceRef::Relaxed(inst),
+            req: rid,
+        });
+    }
+
+    /// Abort an in-flight rescue/restore whose reserved KV the online path
+    /// needs. The transport releases the job's resources exactly once
+    /// (property-tested); the request falls back to discard-and-recompute.
+    fn cancel_inbound_relaxed(&mut self, inst: usize, rid: RequestId) {
+        let job = self
+            .transport
+            .job_of(rid)
+            .expect("inbound request has an active job");
+        let cancelled =
+            self.transport.cancel(job).expect("first cancel of active job");
+        self.actions.push(Action::TransferCancel {
+            job: cancelled.id,
+            req: rid,
+        });
+        self.cluster.relaxed[inst].kv.release(rid).expect("reserved kv");
+        self.cluster.relaxed[inst].inbound.retain(|&r| r != rid);
+        self.cluster.kv_home[rid as usize] = KvHome::None;
+        self.cluster.evict_started[rid as usize] = f64::NAN;
         self.cluster.requests[rid as usize].evict();
         self.cluster.offline_backlog.push_back(rid);
         self.cluster.evictions += 1;
@@ -326,9 +540,7 @@ impl SchedulerCore {
         let mut batch = Vec::new();
         let mut lens = Vec::new();
         let mut used = 0usize;
-        // Reserve headroom for a typical online prefill so offline work
-        // doesn't crowd out preempting arrivals.
-        let reserve = 4096usize;
+        let reserve = ONLINE_PREFILL_RESERVE_TOKENS;
         while let Some(&rid) = self.cluster.offline_backlog.front() {
             let len = self.cluster.requests[rid as usize].recompute_len();
             if !batch.is_empty() && used + len > budget {
@@ -528,13 +740,10 @@ impl SchedulerCore {
             self.cluster.kv_home[rid as usize] = KvHome::Strict(target);
             self.cluster.requests[rid as usize].phase = Phase::Migrating;
             self.cluster.strict[target].inbound.push(rid);
-            let delay = self.pm.kv_transfer_latency(kv_len);
-            self.actions.push(Action::Transfer {
-                req: rid,
-                to_strict: target,
-                kv_tokens: kv_len,
-                predicted_latency: delay,
-            });
+            self.enqueue_transfer(
+                rid,
+                TransferKind::Dispatch { to_strict: target },
+            );
         } else {
             // Overload: wait (KV stays on the relaxed node).
             self.cluster.strict[target].waiting_for_space.push_back(rid);
@@ -583,6 +792,9 @@ impl SchedulerCore {
         self.cluster.strict[inst].kv.release(rid).expect("resident");
         self.cluster.strict[inst].remove_offline(rid);
         self.cluster.router.decode_done(inst, kv);
+        if self.try_rescue(rid) {
+            return;
+        }
         self.cluster.kv_home[rid as usize] = KvHome::None;
         self.cluster.requests[rid as usize].evict();
         self.cluster.offline_backlog.push_back(rid);
@@ -592,6 +804,52 @@ impl SchedulerCore {
             req: rid,
         });
         self.kick_idle_relaxed();
+    }
+
+    /// §3.4.1 recoverable fast preemption: the strict node is freed the
+    /// moment the caller released `rid`'s blocks; instead of discarding the
+    /// KV for full recompute, stream it into the relaxed pool (preferred)
+    /// or the host staging buffer. Returns false when recovery is off or
+    /// nowhere can take the bytes — the caller falls back to
+    /// discard-and-recompute.
+    fn try_rescue(&mut self, rid: RequestId) -> bool {
+        if !(self.cfg.policy.offline_decode_on_relaxed()
+            && self.transport.recoverable_eviction)
+        {
+            return false;
+        }
+        let need = self.cluster.requests[rid as usize].kv_len() + 1;
+        // Keep the online-prefill headroom at the destination: a rescue
+        // that fills the pool to the brim would just be cancelled by the
+        // next online prefill and discarded after burning link bandwidth.
+        let dest = (0..self.cluster.relaxed.len())
+            .filter(|&i| {
+                self.cluster.relaxed[i].kv.free_tokens()
+                    >= need + ONLINE_PREFILL_RESERVE_TOKENS
+            })
+            .max_by_key(|&i| self.cluster.relaxed[i].kv.free_tokens());
+        if let Some(i) = dest {
+            self.cluster.relaxed[i]
+                .kv
+                .admit(rid, need)
+                .expect("fit checked");
+            self.cluster.kv_home[rid as usize] = KvHome::Relaxed(i);
+            self.cluster.requests[rid as usize].phase = Phase::Migrating;
+            self.cluster.relaxed[i].inbound.push(rid);
+            self.cluster.evict_started[rid as usize] = self.now;
+            self.cluster.rescues += 1;
+            self.enqueue_transfer(rid, TransferKind::Rescue { to_relaxed: i });
+            return true;
+        }
+        if self.transport.host_staging {
+            self.cluster.kv_home[rid as usize] = KvHome::Staged;
+            self.cluster.requests[rid as usize].phase = Phase::Migrating;
+            self.cluster.evict_started[rid as usize] = self.now;
+            self.cluster.offloads += 1;
+            self.enqueue_transfer(rid, TransferKind::Offload);
+            return true;
+        }
+        false
     }
 
     fn finish_prefill_offline(&mut self, inst: usize, rid: RequestId) {
@@ -621,13 +879,10 @@ impl SchedulerCore {
                 self.cluster.kv_home[rid as usize] = KvHome::Strict(target);
                 self.cluster.requests[rid as usize].phase = Phase::Migrating;
                 self.cluster.strict[target].inbound.push(rid);
-                let delay = self.pm.kv_transfer_latency(kv_len);
-                self.actions.push(Action::Transfer {
-                    req: rid,
-                    to_strict: target,
-                    kv_tokens: kv_len,
-                    predicted_latency: delay,
-                });
+                self.enqueue_transfer(
+                    rid,
+                    TransferKind::Dispatch { to_strict: target },
+                );
             } else {
                 // Park on the relaxed node (holds KV, does not decode);
                 // retried at strict step boundaries.
@@ -640,7 +895,12 @@ impl SchedulerCore {
     fn relaxed_decode_token(&mut self, inst: usize, rid: RequestId) {
         // Evicted/migrated-mid-step guard, O(1) via the location index
         // (migration moves kv_home to Strict; eviction resets it to None).
-        if self.cluster.kv_home[rid as usize] != KvHome::Relaxed(inst) {
+        // The phase check additionally skips requests whose KV is being
+        // rescued *back* onto this instance mid-step (kv_home already
+        // points here but the stream has not landed: phase is Migrating).
+        if self.cluster.kv_home[rid as usize] != KvHome::Relaxed(inst)
+            || self.cluster.requests[rid as usize].phase != Phase::Decoding
+        {
             return;
         }
         let done = self.cluster.requests[rid as usize].mark_token(self.now);
@@ -865,13 +1125,10 @@ impl SchedulerCore {
                 self.cluster.relaxed[from].kv.release(rid).expect("kv");
                 self.cluster.kv_home[rid as usize] = KvHome::Strict(inst);
                 self.cluster.strict[inst].inbound.push(rid);
-                let delay = self.pm.kv_transfer_latency(kv_len);
-                self.actions.push(Action::Transfer {
-                    req: rid,
-                    to_strict: inst,
-                    kv_tokens: kv_len,
-                    predicted_latency: delay,
-                });
+                self.enqueue_transfer(
+                    rid,
+                    TransferKind::Dispatch { to_strict: inst },
+                );
             } else {
                 remaining.push_back(rid);
             }
@@ -938,18 +1195,15 @@ impl SchedulerCore {
             self.cluster.requests[rid as usize].phase = Phase::Migrating;
             self.cluster.router.route_decode(kv_len);
             self.cluster.strict[inst].inbound.push(rid);
-            let delay = self.pm.kv_transfer_latency(kv_len);
             self.actions.push(Action::Migrate {
                 req: rid,
                 from_relaxed: src,
                 to_strict: inst,
             });
-            self.actions.push(Action::Transfer {
-                req: rid,
-                to_strict: inst,
-                kv_tokens: kv_len,
-                predicted_latency: delay,
-            });
+            self.enqueue_transfer(
+                rid,
+                TransferKind::Migrate { to_strict: inst },
+            );
             self.cluster.migrations += 1;
         }
     }
@@ -983,18 +1237,17 @@ impl SchedulerCore {
                 self.cluster.requests[rid as usize].phase = Phase::Migrating;
                 self.cluster.router.route_decode(kv_len);
                 self.cluster.strict[inst].inbound.push(rid);
-                let delay = self.pm.kv_transfer_latency(kv_len);
-                self.actions.push(Action::Transfer {
-                    req: rid,
-                    to_strict: inst,
-                    kv_tokens: kv_len,
-                    predicted_latency: delay,
-                });
+                self.enqueue_transfer(
+                    rid,
+                    TransferKind::Dispatch { to_strict: inst },
+                );
             }
         }
     }
 
-    fn transfer_done(&mut self, rid: RequestId, inst: usize) {
+    /// A dispatched/migrated KV landed on strict instance `inst`: the
+    /// request becomes a decode resident there.
+    fn decode_handoff(&mut self, rid: RequestId, inst: usize) {
         self.cluster.strict[inst].inbound.retain(|&r| r != rid);
         let is_online = self.cluster.requests[rid as usize].class.is_online()
             || self.cfg.policy == Policy::BasePd;
@@ -1035,6 +1288,47 @@ mod tests {
         assert!(core.on_step_end(1.0, InstanceRef::Relaxed(0), 999).is_empty());
     }
 
+    /// Drive every pending transfer chunk in `actions` (and the follow-up
+    /// chunks they trigger) through the core, advancing a local clock;
+    /// returns all actions the progress callbacks emitted.
+    fn drive_chunks(
+        core: &mut SchedulerCore,
+        actions: &[Action],
+        t0: f64,
+    ) -> Vec<Action> {
+        let mut pending: Vec<(u64, f64, u64)> = actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::TransferChunk {
+                    job,
+                    predicted_latency,
+                    seq,
+                    ..
+                } => Some((*job, *predicted_latency, *seq)),
+                _ => None,
+            })
+            .collect();
+        let mut t = t0;
+        let mut out = Vec::new();
+        while let Some((job, dur, seq)) = pending.pop() {
+            t += dur;
+            let more = core.on_transfer_progress(t, job, seq);
+            for a in &more {
+                if let Action::TransferChunk {
+                    job,
+                    predicted_latency,
+                    seq,
+                    ..
+                } = a
+                {
+                    pending.push((*job, *predicted_latency, *seq));
+                }
+            }
+            out.extend(more);
+        }
+        out
+    }
+
     #[test]
     fn prefill_completion_dispatches_to_strict() {
         let mut core =
@@ -1046,19 +1340,83 @@ mod tests {
         };
         let end = core.on_step_end(*predicted_latency, InstanceRef::Relaxed(0), *seq);
         assert!(
-            end.iter().any(|a| matches!(a, Action::Transfer { req: 0, .. })),
-            "prefill end must start a KV transfer, got {end:?}"
+            end.iter()
+                .any(|a| matches!(a, Action::TransferStart { req: 0, .. })),
+            "prefill end must start a KV transfer job, got {end:?}"
         );
-        // Transfer completion starts the strict decode step.
-        let dec = core.on_transfer_done(0.2, 0, 0);
-        assert!(matches!(
-            dec.as_slice(),
-            [Action::StartStep {
-                inst: InstanceRef::Strict(0),
-                kind: StepKind::DecodeStrict,
-                ..
-            }]
-        ));
+        assert!(
+            end.iter()
+                .any(|a| matches!(a, Action::TransferChunk { req: 0, .. })),
+            "the idle pool link must issue the first chunk, got {end:?}"
+        );
+        // Driving all chunks to completion lands the KV on the strict
+        // instance and starts its decode step.
+        let landed = drive_chunks(&mut core, &end, *predicted_latency);
+        assert!(
+            landed
+                .iter()
+                .any(|a| matches!(a, Action::TransferDone { req: 0, .. })),
+            "transfer must complete: {landed:?}"
+        );
+        assert!(
+            landed.iter().any(|a| matches!(
+                a,
+                Action::StartStep {
+                    inst: InstanceRef::Strict(0),
+                    kind: StepKind::DecodeStrict,
+                    ..
+                }
+            )),
+            "strict decode must start after the last chunk: {landed:?}"
+        );
+    }
+
+    #[test]
+    fn strict_eviction_is_recoverable_not_discarded() {
+        // An offline decode resident forced off the strict node streams its
+        // KV into the relaxed pool (Rescue) instead of re-entering the
+        // backlog for recompute.
+        let mut core =
+            core_with(vec![Request::new(0, Class::Offline, 0.0, 400, 64)]);
+        // Place it on the strict node as Algorithm 1 would have.
+        core.cluster.requests[0].mark_first_token(1.0);
+        core.cluster.requests[0].phase = Phase::Decoding;
+        let kv = core.cluster.requests[0].kv_len();
+        core.cluster.strict[0].kv.admit(0, kv + 1).unwrap();
+        core.cluster.strict[0].offline.push(0);
+        core.cluster.kv_home[0] = KvHome::Strict(0);
+
+        core.now = 5.0;
+        core.evict_offline_from_strict(0, 0);
+        let acts = std::mem::take(&mut core.actions);
+        assert!(
+            acts.iter().any(|a| matches!(
+                a,
+                Action::TransferStart {
+                    req: 0,
+                    kind: TransferKind::Rescue { .. },
+                    ..
+                }
+            )),
+            "recoverable eviction must stream KV out: {acts:?}"
+        );
+        assert!(
+            !acts.iter().any(|a| matches!(a, Action::Evict { .. })),
+            "no discard on the recoverable path: {acts:?}"
+        );
+        assert_eq!(core.cluster.rescues, 1);
+        assert_eq!(core.cluster.requests[0].evictions, 0);
+        assert_eq!(core.cluster.kv_home[0], KvHome::Relaxed(0));
+        // Driving the rescue chunks lands it decoding on the relaxed pool
+        // and records the preemption-to-restart latency.
+        let landed = drive_chunks(&mut core, &acts, 5.0);
+        assert!(landed
+            .iter()
+            .any(|a| matches!(a, Action::TransferDone { req: 0, .. })));
+        assert!(core.cluster.relaxed[0].offline_decoding.contains(&0));
+        assert_eq!(core.cluster.restart_latencies.len(), 1);
+        assert!(core.cluster.restart_latencies[0] > 0.0);
+        assert_eq!(core.cluster.requests[0].phase, Phase::Decoding);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use crate::request::RequestId;
+use crate::transport::JobId;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum EventKind {
@@ -18,8 +19,8 @@ pub enum EventKind {
     RelaxedStep { inst: usize, seq: u64 },
     /// A strict instance's step finishes.
     StrictStep { inst: usize, seq: u64 },
-    /// A KV transfer to a strict instance completes.
-    TransferDone { req: RequestId, strict: usize },
+    /// One chunk of a KV transfer job completes on its link.
+    TransferChunk { job: JobId, seq: u64 },
 }
 
 #[derive(Debug, Clone, Copy)]

@@ -102,22 +102,22 @@ impl VirtualExecutor {
                         EventKind::RelaxedStep { inst, seq },
                     );
                 }
-                Action::Transfer {
-                    req,
-                    to_strict,
+                Action::TransferChunk {
+                    job,
                     predicted_latency,
+                    seq,
                     ..
                 } => {
                     self.queue.push(
                         self.now + predicted_latency,
-                        EventKind::TransferDone {
-                            req,
-                            strict: to_strict,
-                        },
+                        EventKind::TransferChunk { job, seq },
                     );
                 }
                 // Notifications: no virtual resources to manage.
-                Action::Evict { .. }
+                Action::TransferStart { .. }
+                | Action::TransferDone { .. }
+                | Action::TransferCancel { .. }
+                | Action::Evict { .. }
                 | Action::Migrate { .. }
                 | Action::Admit { .. }
                 | Action::Complete { .. } => {}
@@ -149,8 +149,8 @@ impl Executor for VirtualExecutor {
                 EventKind::StrictStep { inst, seq } => {
                     core.on_step_end(self.now, InstanceRef::Strict(inst), seq)
                 }
-                EventKind::TransferDone { req, strict } => {
-                    core.on_transfer_done(self.now, req, strict)
+                EventKind::TransferChunk { job, seq } => {
+                    core.on_transfer_progress(self.now, job, seq)
                 }
             };
             self.apply(actions);
@@ -262,21 +262,21 @@ impl StubWallClockExecutor {
                         EventKind::RelaxedStep { inst, seq },
                     );
                 }
-                Action::Transfer {
-                    req,
-                    to_strict,
+                Action::TransferChunk {
+                    job,
                     predicted_latency,
+                    seq,
                     ..
                 } => {
                     self.push(
                         self.now + predicted_latency,
-                        EventKind::TransferDone {
-                            req,
-                            strict: to_strict,
-                        },
+                        EventKind::TransferChunk { job, seq },
                     );
                 }
-                Action::Evict { .. }
+                Action::TransferStart { .. }
+                | Action::TransferDone { .. }
+                | Action::TransferCancel { .. }
+                | Action::Evict { .. }
                 | Action::Migrate { .. }
                 | Action::Admit { .. }
                 | Action::Complete { .. } => {}
@@ -309,8 +309,8 @@ impl Executor for StubWallClockExecutor {
                 EventKind::StrictStep { inst, seq } => {
                     core.on_step_end(self.now, InstanceRef::Strict(inst), seq)
                 }
-                EventKind::TransferDone { req, strict } => {
-                    core.on_transfer_done(self.now, req, strict)
+                EventKind::TransferChunk { job, seq } => {
+                    core.on_transfer_progress(self.now, job, seq)
                 }
             };
             self.apply(actions);

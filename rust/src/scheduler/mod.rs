@@ -9,9 +9,10 @@
 //!   shared offline backlog, per-request KV residency, and the router;
 //! - [`SchedulerCore`] — the decision loop: three step-boundary entry
 //!   points ([`SchedulerCore::on_arrival`], [`SchedulerCore::on_step_end`],
-//!   [`SchedulerCore::on_transfer_done`]) that fold the four coordinator
-//!   scheduling points (gating, migration, mix-decode, preemption) into
-//!   typed [`Action`]s;
+//!   [`SchedulerCore::on_transfer_progress`]) that fold the four
+//!   coordinator scheduling points (gating, migration, mix-decode,
+//!   preemption) into typed [`Action`]s, with the embedded
+//!   [`crate::transport::TransportEngine`] timing every KV movement;
 //! - [`Executor`] — the substrate: owns the clock, executes the actions,
 //!   and calls back into the core at its own step boundaries.
 //!
@@ -41,6 +42,10 @@ pub use self::events::{Event, EventKind, EventQueue};
 pub use self::executor::{
     ExecStats, Executor, StubWallClockExecutor, VirtualExecutor,
 };
+
+// The KV transport vocabulary actions and events speak, re-exported for
+// the same single-surface reason.
+pub use crate::transport::{JobId, TransferKind, TransportEngine};
 
 // The underlying §3.4 decision functions, re-exported so all scheduling
 // call sites (benches, tests, tools) go through the `scheduler` surface.

@@ -20,7 +20,7 @@ pub use crate::scheduler::{Event, EventKind, EventQueue};
 
 use crate::config::ServingConfig;
 use crate::coordinator::{Ablation, OverloadMode, Policy};
-use crate::metrics::{Recorder, Report};
+use crate::metrics::{Recorder, Report, TransportReport};
 use crate::scheduler::{CoreConfig, Executor, SchedulerCore, VirtualExecutor};
 use crate::trace::Trace;
 
@@ -85,6 +85,12 @@ pub struct SimResult {
     pub evictions: u64,
     /// Total offline requests migrated relaxed -> strict.
     pub migrations: u64,
+    /// Strict evictions recovered by streaming KV out (fast preemption).
+    pub rescues: u64,
+    /// Evictions recovered via the host staging buffer.
+    pub offloads: u64,
+    /// KV-transport link accounting (contention, stall, recovery stats).
+    pub transport: TransportReport,
 }
 
 /// Run the simulation of `trace` under `cfg`: build a [`SchedulerCore`],
@@ -124,5 +130,8 @@ fn build_result(
         preemptions: cluster.preemptions,
         evictions: cluster.evictions,
         migrations: cluster.migrations,
+        rescues: cluster.rescues,
+        offloads: cluster.offloads,
+        transport: core.transport_report(end_time.max(duration)),
     }
 }

@@ -1,0 +1,464 @@
+//! [`TransportEngine`] — deterministic queueing engine for chunked KV
+//! transfers over the configured link topology.
+//!
+//! The engine is clock-free in the same sense as the scheduler core: time
+//! enters only through the `now` argument of [`TransportEngine::enqueue`]
+//! and [`TransportEngine::on_chunk_done`], and every timed obligation
+//! leaves as a [`ChunkOrder`] the surrounding executor must deliver back.
+//! Each link serves one chunk at a time, so concurrent jobs *contend*:
+//! under FIFO a job owns the link until its last chunk; under fair-share
+//! active jobs round-robin chunk-by-chunk. Either way per-link completions
+//! are monotone in time and total bytes are conserved
+//! (`tests/transport_properties.rs`).
+
+use std::collections::HashMap;
+
+use crate::config::{LinkSharing, TransportSpec};
+use crate::request::RequestId;
+
+use super::job::{ChunkOrder, JobId, TransferJob, TransferKind};
+use super::link::LinkState;
+
+/// Link index of the relaxed <-> strict interconnect.
+pub const POOL_LINK: usize = 0;
+/// Link index of the device <-> host staging path.
+pub const HOST_LINK: usize = 1;
+
+/// Outcome of one chunk completion.
+#[derive(Debug)]
+pub enum Progress {
+    /// Not the link's outstanding chunk (superseded by a cancel reap or a
+    /// mis-delivered event): no state changed.
+    Stale,
+    /// The chunk landed; `orders` are the next chunk(s) to time.
+    Advanced { orders: Vec<ChunkOrder> },
+    /// The job's final chunk landed; `job` is the completed job and
+    /// `orders` the chunk(s) the link started for its successors.
+    JobDone {
+        job: TransferJob,
+        orders: Vec<ChunkOrder>,
+    },
+}
+
+/// Deterministic multi-link transfer scheduler (see module docs).
+#[derive(Debug)]
+pub struct TransportEngine {
+    links: Vec<LinkState>,
+    jobs: HashMap<JobId, TransferJob>,
+    /// Active job per request (at most one: a request's KV is a single
+    /// cache that is either somewhere or in flight to one place).
+    by_req: HashMap<RequestId, JobId>,
+    next_job: JobId,
+    next_seq: u64,
+    /// Chunks per job (`ceil(layers / chunk_layers)`).
+    chunks_per_job: usize,
+    /// KV bytes per token (all layers) of the served model.
+    bytes_per_token: f64,
+    /// Fast preemption: stream evicted KV out instead of discarding.
+    pub recoverable_eviction: bool,
+    /// Host staging buffer available as an eviction destination.
+    pub host_staging: bool,
+    // ---- global conservation accounting ----
+    pub bytes_enqueued: f64,
+    pub bytes_delivered: f64,
+    pub bytes_cancelled: f64,
+    pub jobs_cancelled: u64,
+}
+
+impl TransportEngine {
+    pub fn new(
+        spec: &TransportSpec,
+        bytes_per_token: f64,
+        layers: usize,
+    ) -> Self {
+        let chunks_per_job = layers
+            .max(1)
+            .div_ceil(spec.chunk_layers.max(1))
+            .max(1);
+        TransportEngine {
+            links: vec![
+                LinkState::new(spec.pool.clone()),
+                LinkState::new(spec.host.clone()),
+            ],
+            jobs: HashMap::new(),
+            by_req: HashMap::new(),
+            next_job: 0,
+            next_seq: 0,
+            chunks_per_job,
+            bytes_per_token,
+            recoverable_eviction: spec.recoverable_eviction,
+            host_staging: spec.host_staging,
+            bytes_enqueued: 0.0,
+            bytes_delivered: 0.0,
+            bytes_cancelled: 0.0,
+            jobs_cancelled: 0,
+        }
+    }
+
+    pub fn chunks_per_job(&self) -> usize {
+        self.chunks_per_job
+    }
+
+    pub fn links(&self) -> &[LinkState] {
+        &self.links
+    }
+
+    pub fn active_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Bytes still owed to active (non-cancelled) jobs.
+    pub fn in_flight_bytes(&self) -> f64 {
+        self.jobs
+            .values()
+            .filter(|j| !j.cancelled)
+            .map(|j| j.remaining_bytes())
+            .sum()
+    }
+
+    /// The active job moving `req`'s KV, if any.
+    pub fn job_of(&self, req: RequestId) -> Option<JobId> {
+        self.by_req.get(&req).copied()
+    }
+
+    /// Admit a transfer of `kv_tokens` KV tokens for `req`. Returns the job
+    /// id plus the chunk order(s) the link issued (empty when the link is
+    /// already occupied — the job waits its turn).
+    pub fn enqueue(
+        &mut self,
+        now: f64,
+        req: RequestId,
+        kind: TransferKind,
+        kv_tokens: usize,
+    ) -> (JobId, Vec<ChunkOrder>) {
+        debug_assert!(
+            !self.by_req.contains_key(&req),
+            "request {req} already has a transfer in flight"
+        );
+        let link = kind.link();
+        let total_bytes = kv_tokens.max(1) as f64 * self.bytes_per_token;
+        let chunks = self.chunks_per_job;
+        let id = self.next_job;
+        self.next_job += 1;
+        self.jobs.insert(
+            id,
+            TransferJob {
+                id,
+                req,
+                kind,
+                link,
+                kv_tokens,
+                total_bytes,
+                chunk_bytes: total_bytes / chunks as f64,
+                chunks,
+                chunks_done: 0,
+                enqueued_at: now,
+                cancelled: false,
+            },
+        );
+        self.by_req.insert(req, id);
+        self.bytes_enqueued += total_bytes;
+        self.links[link].queue.push_back(id);
+        (id, self.kick(link))
+    }
+
+    /// Start the next chunk on `link` if the medium is free.
+    fn kick(&mut self, link: usize) -> Vec<ChunkOrder> {
+        if self.links[link].outstanding.is_some() {
+            return Vec::new();
+        }
+        let Some(&job_id) = self.links[link].queue.front() else {
+            return Vec::new();
+        };
+        let (req, chunk, duration) = {
+            let job = &self.jobs[&job_id];
+            (
+                job.req,
+                job.chunks_done,
+                self.links[link].chunk_duration(job.chunk_bytes),
+            )
+        };
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.links[link].outstanding = Some((job_id, seq, duration));
+        vec![ChunkOrder {
+            job: job_id,
+            req,
+            link,
+            chunk,
+            duration,
+            seq,
+        }]
+    }
+
+    /// A chunk's timed completion fired. Advances the link: credits the
+    /// chunk, finishes or rotates the job, reaps cancelled jobs, and starts
+    /// the next chunk.
+    pub fn on_chunk_done(
+        &mut self,
+        now: f64,
+        job_id: JobId,
+        seq: u64,
+    ) -> Progress {
+        let Some(job) = self.jobs.get(&job_id) else {
+            return Progress::Stale;
+        };
+        let link = job.link;
+        match self.links[link].outstanding {
+            Some((j, s, _)) if j == job_id && s == seq => {}
+            _ => return Progress::Stale,
+        }
+        let (_, _, duration) = self.links[link].outstanding.take().expect("checked");
+        self.links[link].busy_s += duration;
+        debug_assert_eq!(self.links[link].queue.front(), Some(&job_id));
+
+        if self.jobs[&job_id].cancelled {
+            // Reap: remaining bytes were accounted at cancel time and this
+            // chunk's bytes never count as delivered.
+            self.links[link].queue.retain(|&j| j != job_id);
+            self.jobs.remove(&job_id);
+            return Progress::Advanced {
+                orders: self.kick(link),
+            };
+        }
+
+        let (chunk_bytes, done) = {
+            let job = self.jobs.get_mut(&job_id).expect("checked");
+            job.chunks_done += 1;
+            (job.chunk_bytes, job.is_done())
+        };
+        self.links[link].bytes_moved += chunk_bytes;
+        self.bytes_delivered += chunk_bytes;
+
+        if done {
+            let job = self.jobs.remove(&job_id).expect("checked");
+            self.by_req.remove(&job.req);
+            let popped = self.links[link].queue.pop_front();
+            debug_assert_eq!(popped, Some(job_id));
+            let ideal =
+                self.links[link].ideal_duration(job.chunks, job.chunk_bytes);
+            self.links[link].stall_s += (now - job.enqueued_at - ideal).max(0.0);
+            self.links[link].jobs_completed += 1;
+            let orders = self.kick(link);
+            Progress::JobDone { job, orders }
+        } else {
+            if self.links[link].spec.sharing == LinkSharing::FairShare
+                && self.links[link].queue.len() > 1
+            {
+                // Yield the medium to the next active job.
+                self.links[link].queue.rotate_left(1);
+            }
+            Progress::Advanced {
+                orders: self.kick(link),
+            }
+        }
+    }
+
+    /// Abort a job mid-flight. Returns the job snapshot exactly once so the
+    /// caller can release whatever (KV reservation, staging buffer) it tied
+    /// to the job; repeated cancels and cancels of finished jobs return
+    /// `None`. A job whose chunk currently occupies the medium is reaped
+    /// when that chunk's completion fires (the medium cannot be retracted);
+    /// its bytes are accounted as cancelled immediately.
+    pub fn cancel(&mut self, job_id: JobId) -> Option<TransferJob> {
+        let (req, link, remaining, already) = {
+            let job = self.jobs.get(&job_id)?;
+            (job.req, job.link, job.remaining_bytes(), job.cancelled)
+        };
+        if already {
+            return None;
+        }
+        self.by_req.remove(&req);
+        self.bytes_cancelled += remaining;
+        self.jobs_cancelled += 1;
+        let outstanding_here = matches!(
+            self.links[link].outstanding,
+            Some((j, _, _)) if j == job_id
+        );
+        if outstanding_here {
+            let job = self.jobs.get_mut(&job_id).expect("checked");
+            job.cancelled = true;
+            Some(job.clone())
+        } else {
+            self.links[link].queue.retain(|&j| j != job_id);
+            self.jobs.remove(&job_id)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareProfile;
+
+    fn engine(sharing: LinkSharing) -> TransportEngine {
+        let mut spec =
+            TransportSpec::for_hardware(&HardwareProfile::ascend_910c());
+        spec.pool.bandwidth = 1000.0;
+        spec.pool.latency = 0.0;
+        spec.pool.sharing = sharing;
+        spec.chunk_layers = 1;
+        // 4 bytes per token, 4 layers -> 4 chunks per job.
+        TransportEngine::new(&spec, 4.0, 4)
+    }
+
+    /// Drive all outstanding orders to completion, returning per-job
+    /// completion order.
+    fn drain(eng: &mut TransportEngine, mut orders: Vec<ChunkOrder>, t0: f64) -> Vec<JobId> {
+        let mut t = t0;
+        let mut finished = Vec::new();
+        while let Some(o) = orders.pop() {
+            t += o.duration;
+            match eng.on_chunk_done(t, o.job, o.seq) {
+                Progress::Stale => panic!("unexpected stale completion"),
+                Progress::Advanced { orders: next } => orders.extend(next),
+                Progress::JobDone { job, orders: next } => {
+                    finished.push(job.id);
+                    orders.extend(next);
+                }
+            }
+        }
+        finished
+    }
+
+    #[test]
+    fn single_job_runs_chunk_by_chunk() {
+        let mut eng = engine(LinkSharing::Fifo);
+        // 100 tokens * 4 B = 400 B over 4 chunks of 100 B at 1000 B/s.
+        let (id, orders) = eng.enqueue(0.0, 7, TransferKind::Dispatch { to_strict: 0 }, 100);
+        assert_eq!(orders.len(), 1);
+        assert_eq!(orders[0].chunk, 0);
+        assert!((orders[0].duration - 0.1).abs() < 1e-12);
+        let done = drain(&mut eng, orders, 0.0);
+        assert_eq!(done, vec![id]);
+        assert_eq!(eng.active_jobs(), 0);
+        assert!((eng.bytes_delivered - 400.0).abs() < 1e-9);
+        assert!((eng.links()[POOL_LINK].busy_s - 0.4).abs() < 1e-9);
+        // Uncontended: no stall.
+        assert!(eng.links()[POOL_LINK].stall_s < 1e-9);
+    }
+
+    #[test]
+    fn fifo_serializes_jobs_in_order() {
+        let mut eng = engine(LinkSharing::Fifo);
+        let (a, mut orders) =
+            eng.enqueue(0.0, 1, TransferKind::Dispatch { to_strict: 0 }, 100);
+        let (b, more) =
+            eng.enqueue(0.0, 2, TransferKind::Dispatch { to_strict: 0 }, 100);
+        assert!(more.is_empty(), "link busy: second job must wait");
+        orders.extend(more);
+        let done = drain(&mut eng, orders, 0.0);
+        assert_eq!(done, vec![a, b]);
+        // Job b waited for a: it accrued stall.
+        assert!(eng.links()[POOL_LINK].stall_s > 0.3);
+    }
+
+    #[test]
+    fn fair_share_interleaves_chunks() {
+        let mut eng = engine(LinkSharing::FairShare);
+        let (a, orders) =
+            eng.enqueue(0.0, 1, TransferKind::Dispatch { to_strict: 0 }, 100);
+        let (b, _) =
+            eng.enqueue(0.0, 2, TransferKind::Dispatch { to_strict: 0 }, 100);
+        // Drive to completion recording which job served each chunk.
+        let mut t = 0.0;
+        let mut served = Vec::new();
+        let mut pending = orders;
+        let mut finished = Vec::new();
+        while let Some(o) = pending.pop() {
+            served.push(o.job);
+            t += o.duration;
+            match eng.on_chunk_done(t, o.job, o.seq) {
+                Progress::Stale => panic!("stale"),
+                Progress::Advanced { orders } => pending.extend(orders),
+                Progress::JobDone { job, orders } => {
+                    finished.push(job.id);
+                    pending.extend(orders);
+                }
+            }
+        }
+        assert_eq!(served, vec![a, b, a, b, a, b, a, b]);
+        assert_eq!(finished, vec![a, b]);
+    }
+
+    #[test]
+    fn cancel_queued_job_is_immediate() {
+        let mut eng = engine(LinkSharing::Fifo);
+        let (_a, orders) =
+            eng.enqueue(0.0, 1, TransferKind::Dispatch { to_strict: 0 }, 100);
+        let (b, _) = eng.enqueue(0.0, 2, TransferKind::Offload, 100);
+        let (c, _) =
+            eng.enqueue(0.0, 3, TransferKind::Dispatch { to_strict: 0 }, 100);
+        // c is queued (not outstanding) on the pool link: removed at once.
+        let job = eng.cancel(c).expect("first cancel returns the job");
+        assert_eq!(job.req, 3);
+        assert!(eng.cancel(c).is_none(), "second cancel is a no-op");
+        assert_eq!(eng.job_of(3), None);
+        // b rides the host link, unaffected.
+        assert!(eng.job_of(2).is_some());
+        assert_eq!(b, eng.job_of(2).unwrap());
+        let done = drain(&mut eng, orders, 0.0);
+        assert!(!done.contains(&c));
+        assert!(
+            (eng.bytes_enqueued
+                - eng.bytes_delivered
+                - eng.bytes_cancelled
+                - eng.in_flight_bytes())
+            .abs()
+                < 1e-6
+        );
+    }
+
+    #[test]
+    fn cancel_outstanding_job_reaps_on_completion() {
+        let mut eng = engine(LinkSharing::Fifo);
+        let (a, orders) =
+            eng.enqueue(0.0, 1, TransferKind::Dispatch { to_strict: 0 }, 100);
+        let (b, _) =
+            eng.enqueue(0.0, 2, TransferKind::Dispatch { to_strict: 0 }, 100);
+        assert!(eng.cancel(a).is_some());
+        assert!(eng.cancel(a).is_none(), "no double free");
+        // a's in-flight chunk still completes; it frees the link for b.
+        let o = orders[0];
+        let next = match eng.on_chunk_done(o.duration, o.job, o.seq) {
+            Progress::Advanced { orders } => orders,
+            p => panic!("cancelled job must not complete: {p:?}"),
+        };
+        assert_eq!(next.len(), 1);
+        assert_eq!(next[0].job, b);
+        // a is fully gone; a stale re-delivery of its chunk is ignored.
+        assert!(matches!(
+            eng.on_chunk_done(1.0, o.job, o.seq),
+            Progress::Stale
+        ));
+        assert_eq!(eng.active_jobs(), 1);
+        assert!((eng.bytes_cancelled - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stale_seq_is_ignored() {
+        let mut eng = engine(LinkSharing::Fifo);
+        let (a, orders) =
+            eng.enqueue(0.0, 1, TransferKind::Dispatch { to_strict: 0 }, 100);
+        assert!(matches!(
+            eng.on_chunk_done(0.1, a, orders[0].seq + 999),
+            Progress::Stale
+        ));
+        // The real completion still works afterwards.
+        assert!(matches!(
+            eng.on_chunk_done(0.1, a, orders[0].seq),
+            Progress::Advanced { .. }
+        ));
+    }
+
+    #[test]
+    fn chunk_plan_follows_config() {
+        let mut spec =
+            TransportSpec::for_hardware(&HardwareProfile::ascend_910c());
+        spec.chunk_layers = 7;
+        let eng = TransportEngine::new(&spec, 2.0, 28);
+        assert_eq!(eng.chunks_per_job(), 4);
+        let eng = TransportEngine::new(&spec, 2.0, 4);
+        assert_eq!(eng.chunks_per_job(), 1);
+    }
+}

@@ -1,0 +1,134 @@
+//! Transfer jobs: one KV cache moving over one link, split into
+//! layer-wise chunks (§3.4.1 granularity — a layer's KV is the natural
+//! unit that can stream out while later layers still compute).
+
+use crate::request::RequestId;
+
+/// Unique id of one transfer job within a [`super::TransportEngine`].
+pub type JobId = u64;
+
+/// The five KV movements of the system, naming the destination the
+/// scheduler hands the request to once the last chunk lands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferKind {
+    /// Post-prefill decode dispatch: relaxed -> strict.
+    Dispatch { to_strict: usize },
+    /// Algorithm 1 migration pull: relaxed -> strict.
+    Migrate { to_strict: usize },
+    /// Recoverable fast preemption: an evicted offline decode streams its
+    /// KV from a strict node into the relaxed pool instead of discarding.
+    Rescue { to_relaxed: usize },
+    /// Recoverable fast preemption: evicted KV streams to host staging.
+    Offload,
+    /// Staged KV streams back from host to a relaxed instance.
+    Restore { to_relaxed: usize },
+}
+
+impl TransferKind {
+    /// Which named link carries this movement.
+    pub fn link(self) -> usize {
+        match self {
+            TransferKind::Offload | TransferKind::Restore { .. } => {
+                super::HOST_LINK
+            }
+            _ => super::POOL_LINK,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransferKind::Dispatch { .. } => "dispatch",
+            TransferKind::Migrate { .. } => "migrate",
+            TransferKind::Rescue { .. } => "rescue",
+            TransferKind::Offload => "offload",
+            TransferKind::Restore { .. } => "restore",
+        }
+    }
+}
+
+/// One KV cache in flight: fixed chunk plan plus progress.
+#[derive(Debug, Clone)]
+pub struct TransferJob {
+    pub id: JobId,
+    pub req: RequestId,
+    pub kind: TransferKind,
+    /// Link index in the engine's topology.
+    pub link: usize,
+    /// KV tokens being moved (fixed at enqueue; the request does not decode
+    /// while migrating).
+    pub kv_tokens: usize,
+    pub total_bytes: f64,
+    /// Bytes per chunk (`total_bytes / chunks`).
+    pub chunk_bytes: f64,
+    pub chunks: usize,
+    pub chunks_done: usize,
+    pub enqueued_at: f64,
+    /// Set by [`super::TransportEngine::cancel`] while a chunk is still in
+    /// flight; the job is reaped when that chunk's completion fires.
+    pub cancelled: bool,
+}
+
+impl TransferJob {
+    pub fn remaining_bytes(&self) -> f64 {
+        self.total_bytes - self.chunks_done as f64 * self.chunk_bytes
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.chunks_done >= self.chunks
+    }
+}
+
+/// Work order for the executor: deliver
+/// [`crate::scheduler::SchedulerCore::on_transfer_progress`] with
+/// (`job`, `seq`) once `duration` has elapsed on its clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChunkOrder {
+    pub job: JobId,
+    pub req: RequestId,
+    pub link: usize,
+    /// Index of the chunk being served (0-based).
+    pub chunk: usize,
+    /// Service time: link setup latency + chunk bytes / bandwidth.
+    pub duration: f64,
+    /// Staleness guard: the engine ignores completions whose seq does not
+    /// match the link's outstanding chunk.
+    pub seq: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_links_and_names() {
+        assert_eq!(TransferKind::Dispatch { to_strict: 0 }.link(), 0);
+        assert_eq!(TransferKind::Migrate { to_strict: 1 }.link(), 0);
+        assert_eq!(TransferKind::Rescue { to_relaxed: 0 }.link(), 0);
+        assert_eq!(TransferKind::Offload.link(), 1);
+        assert_eq!(TransferKind::Restore { to_relaxed: 0 }.link(), 1);
+        assert_eq!(TransferKind::Offload.name(), "offload");
+    }
+
+    #[test]
+    fn job_progress_accounting() {
+        let mut j = TransferJob {
+            id: 1,
+            req: 7,
+            kind: TransferKind::Offload,
+            link: 1,
+            kv_tokens: 100,
+            total_bytes: 400.0,
+            chunk_bytes: 100.0,
+            chunks: 4,
+            chunks_done: 0,
+            enqueued_at: 0.0,
+            cancelled: false,
+        };
+        assert_eq!(j.remaining_bytes(), 400.0);
+        j.chunks_done = 3;
+        assert_eq!(j.remaining_bytes(), 100.0);
+        assert!(!j.is_done());
+        j.chunks_done = 4;
+        assert!(j.is_done());
+    }
+}

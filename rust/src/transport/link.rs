@@ -1,0 +1,94 @@
+//! Runtime state of one interconnect link: the serialized medium behind a
+//! [`crate::config::LinkSpec`]. One chunk occupies the link at a time;
+//! which job's chunk goes next is the sharing discipline's choice (FIFO
+//! serves the head job to completion, fair-share round-robins at chunk
+//! granularity).
+
+use std::collections::VecDeque;
+
+use crate::config::LinkSpec;
+
+use super::job::JobId;
+
+/// Mutable per-link queueing and accounting state.
+#[derive(Debug)]
+pub struct LinkState {
+    pub spec: LinkSpec,
+    /// Active jobs on this link, head = next to be served.
+    pub queue: VecDeque<JobId>,
+    /// The chunk currently occupying the medium: (job, seq, duration).
+    pub outstanding: Option<(JobId, u64, f64)>,
+    // ---- accounting ----
+    /// Seconds the medium spent serving chunks.
+    pub busy_s: f64,
+    /// Bytes of completed (non-cancelled) chunks.
+    pub bytes_moved: f64,
+    pub jobs_completed: u64,
+    /// Sum over completed jobs of (actual - ideal) transfer time: the
+    /// queueing/contention delay the link added.
+    pub stall_s: f64,
+}
+
+impl LinkState {
+    pub fn new(spec: LinkSpec) -> Self {
+        LinkState {
+            spec,
+            queue: VecDeque::new(),
+            outstanding: None,
+            busy_s: 0.0,
+            bytes_moved: 0.0,
+            jobs_completed: 0,
+            stall_s: 0.0,
+        }
+    }
+
+    /// Service time of one `bytes`-sized chunk on an idle medium.
+    pub fn chunk_duration(&self, bytes: f64) -> f64 {
+        self.spec.latency + bytes / self.spec.bandwidth.max(1.0)
+    }
+
+    /// Contention-free duration of a whole job (`chunks` chunks of
+    /// `chunk_bytes`): the baseline for stall accounting.
+    pub fn ideal_duration(&self, chunks: usize, chunk_bytes: f64) -> f64 {
+        chunks as f64 * self.chunk_duration(chunk_bytes)
+    }
+
+    /// Busy fraction over an observation window.
+    pub fn utilization(&self, window_s: f64) -> f64 {
+        if window_s <= 0.0 {
+            0.0
+        } else {
+            self.busy_s / window_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LinkSharing;
+
+    fn link() -> LinkState {
+        LinkState::new(LinkSpec {
+            name: "test".into(),
+            bandwidth: 100.0,
+            latency: 0.5,
+            sharing: LinkSharing::Fifo,
+        })
+    }
+
+    #[test]
+    fn durations() {
+        let l = link();
+        assert!((l.chunk_duration(100.0) - 1.5).abs() < 1e-12);
+        assert!((l.ideal_duration(4, 50.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_window() {
+        let mut l = link();
+        l.busy_s = 5.0;
+        assert!((l.utilization(10.0) - 0.5).abs() < 1e-12);
+        assert_eq!(l.utilization(0.0), 0.0);
+    }
+}

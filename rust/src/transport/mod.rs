@@ -1,0 +1,38 @@
+//! KV transport subsystem — every byte of KV cache that moves between
+//! instances (or to/from host staging) flows through here.
+//!
+//! Before this subsystem, inter-instance KV movement was a single scalar
+//! `PerfModel::kv_transfer_latency(kv_len)`: transfers never contended for
+//! the interconnect, never overlapped observably with decode steps, and the
+//! engine moved KV instantaneously (the DESIGN.md §3 divergence). This
+//! module replaces that with a modeled interconnect:
+//!
+//! - [`link`] — per-link state over the [`crate::config::LinkSpec`]
+//!   topology: one chunk in flight per link, FIFO or fair-share job
+//!   scheduling, byte/busy/stall accounting;
+//! - [`job`] — [`TransferJob`]s: chunked layer-wise transfers
+//!   ([`TransferKind`] names the five KV movements of the system — decode
+//!   dispatch, Algorithm 1 migration, and the recoverable fast-preemption
+//!   triple rescue/offload/restore);
+//! - [`engine`] — [`TransportEngine`]: the deterministic queueing engine.
+//!   `enqueue` admits a job and returns the chunk work orders the executor
+//!   must time; `on_chunk_done` advances the link and yields follow-up
+//!   orders or the completed job; `cancel` aborts a job mid-flight with
+//!   exactly-once resource release.
+//!
+//! The engine lives *inside* [`crate::scheduler::SchedulerCore`], so its
+//! decisions are part of the substrate-independent action stream: both the
+//! virtual executors and the real engine drive identical chunk orders
+//! (asserted by `tests/scheduler_differential.rs`), and the real engine
+//! copies KV host vectors chunk-by-chunk on those orders. Conservation
+//! invariants (bytes delivered == bytes enqueued, monotone per-link
+//! completions, exactly-once cancel) are property-tested in
+//! `tests/transport_properties.rs`.
+
+pub mod engine;
+pub mod job;
+pub mod link;
+
+pub use self::engine::{Progress, TransportEngine, HOST_LINK, POOL_LINK};
+pub use self::job::{ChunkOrder, JobId, TransferJob, TransferKind};
+pub use self::link::LinkState;

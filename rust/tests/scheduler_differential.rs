@@ -2,14 +2,18 @@
 //! `SchedulerCore` driven by two independently implemented executors — the
 //! discrete-event `VirtualExecutor` (binary-heap queue, virtual clock) and
 //! the engine-shaped `StubWallClockExecutor` (linear-scan agenda, stub wall
-//! clock) — must emit byte-identical `Action` streams. This is the
-//! structural proof behind the paper's "only the clock is virtual" claim.
+//! clock) — must emit byte-identical `Action` streams, *including* the
+//! chunk-level transfer progress/completion ordering produced by the KV
+//! transport subsystem under link contention. This is the structural proof
+//! behind the paper's "only the clock is virtual" claim.
 //!
 //! Plus property tests over `select_decode_batch_capped`: selections never
 //! exceed the configured cap nor the KV tokens actually resident on the
 //! instance (its KvManager-bounded candidate pool).
 
-use ooco::config::ServingConfig;
+use std::collections::HashMap;
+
+use ooco::config::{LinkSharing, ServingConfig};
 use ooco::coordinator::{Ablation, OverloadMode};
 use ooco::prop_assert;
 use ooco::scheduler::{
@@ -83,9 +87,120 @@ fn ooco_stream_covers_action_vocabulary() {
     let stream = virt.log.unwrap();
     let has = |pred: fn(&Action) -> bool| stream.iter().any(pred);
     assert!(has(|a| matches!(a, Action::StartStep { .. })), "no steps");
-    assert!(has(|a| matches!(a, Action::Transfer { .. })), "no transfers");
+    assert!(
+        has(|a| matches!(a, Action::TransferStart { .. })),
+        "no transfer jobs"
+    );
+    assert!(
+        has(|a| matches!(a, Action::TransferChunk { .. })),
+        "no transfer chunks"
+    );
+    assert!(
+        has(|a| matches!(a, Action::TransferDone { .. })),
+        "no transfer completions"
+    );
     assert!(has(|a| matches!(a, Action::Complete { .. })), "no completions");
     assert!(has(|a| matches!(a, Action::Admit { .. })), "no admissions");
+    assert_transfer_protocol(&stream);
+}
+
+/// Every transfer job in a stream must obey the chunk protocol: start
+/// first, chunks in index order (each chunk order is only issued once its
+/// predecessor completed), completion exactly after the last chunk, and
+/// nothing after a cancel.
+fn assert_transfer_protocol(stream: &[Action]) {
+    // job -> (total chunks, next expected chunk index, done)
+    let mut jobs: HashMap<u64, (usize, usize, bool)> = HashMap::new();
+    for a in stream {
+        match a {
+            Action::TransferStart { job, chunks, .. } => {
+                assert!(
+                    jobs.insert(*job, (*chunks, 0, false)).is_none(),
+                    "job {job} started twice"
+                );
+            }
+            Action::TransferChunk { job, chunk, .. } => {
+                let e = jobs.get_mut(job).expect("chunk before TransferStart");
+                assert!(!e.2, "chunk after TransferDone on job {job}");
+                assert_eq!(
+                    *chunk, e.1,
+                    "job {job}: chunk orders out of sequence"
+                );
+                e.1 += 1;
+                assert!(e.1 <= e.0, "job {job}: more chunks than planned");
+            }
+            Action::TransferDone { job, .. } => {
+                let e = jobs.get_mut(job).expect("done before TransferStart");
+                assert_eq!(
+                    e.1, e.0,
+                    "job {job}: TransferDone before all chunks served"
+                );
+                assert!(!e.2, "job {job} completed twice");
+                e.2 = true;
+            }
+            Action::TransferCancel { job, .. } => {
+                assert!(
+                    jobs.remove(job).is_some(),
+                    "cancel of unknown job {job}"
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+/// The acceptance-criterion test for the transport subsystem: with a
+/// constrained, fair-shared interconnect (so concurrent migrations contend
+/// and chunk orders interleave across jobs), both executors still emit
+/// identical action streams for every policy — and the streams obey the
+/// chunk protocol.
+#[test]
+fn chunked_transfers_differential_under_contention() {
+    let trace = mixed_trace(120.0, 13);
+    let horizon = trace.duration() + 600.0;
+    for policy in Policy::all() {
+        let mut cfg = CoreConfig::new(ServingConfig::preset_7b(), policy);
+        cfg.seed = 23;
+        // ~50x less interconnect bandwidth than the 910c default, shared
+        // fairly: transfers queue, stall, and interleave.
+        cfg.serving.transport.pool.bandwidth = 0.5e9;
+        cfg.serving.transport.pool.sharing = LinkSharing::FairShare;
+        cfg.serving.transport.host.bandwidth = 1e9;
+
+        let mut virt = VirtualExecutor::new(&trace, horizon);
+        virt.log = Some(Vec::new());
+        let mut core_v = SchedulerCore::new(trace.requests.clone(), cfg.clone());
+        virt.run(&mut core_v).unwrap();
+
+        let mut stub = StubWallClockExecutor::new(&trace, horizon);
+        stub.log = Some(Vec::new());
+        let mut core_s = SchedulerCore::new(trace.requests.clone(), cfg);
+        stub.run(&mut core_s).unwrap();
+
+        let (v, s) = (virt.log.unwrap(), stub.log.unwrap());
+        assert_eq!(
+            v.len(),
+            s.len(),
+            "{policy:?}: stream lengths differ ({} vs {})",
+            v.len(),
+            s.len()
+        );
+        for (i, (a, b)) in v.iter().zip(&s).enumerate() {
+            assert_eq!(a, b, "{policy:?}: streams diverge at action {i}");
+        }
+        assert_transfer_protocol(&v);
+        assert!(
+            v.iter().any(|a| matches!(a, Action::TransferChunk { .. })),
+            "{policy:?}: no chunked transfers in stream"
+        );
+        // The constrained link must actually have contended.
+        assert!(
+            core_v.transport.links()[0].stall_s > 0.0,
+            "{policy:?}: no transfer stall despite 50x bandwidth cut"
+        );
+        assert_eq!(core_v.cluster.rescues, core_s.cluster.rescues);
+        assert_eq!(core_v.cluster.offloads, core_s.cluster.offloads);
+    }
 }
 
 #[test]

@@ -1,0 +1,309 @@
+//! Property tests for the KV transport subsystem (conservation, monotone
+//! per-link completions, exactly-once cancellation) plus the simulator-level
+//! acceptance claims: a bandwidth-constrained link produces measurable
+//! transfer stall and lower migration throughput than an unconstrained one,
+//! and recoverable fast preemption replaces discard-and-recompute evictions.
+
+use ooco::config::{
+    HardwareProfile, LinkSharing, ServingConfig, TransportSpec,
+};
+use ooco::prop_assert;
+use ooco::scheduler::Policy;
+use ooco::sim::{simulate, SimConfig, SimResult};
+use ooco::testutil::forall;
+use ooco::trace::datasets::DatasetProfile;
+use ooco::trace::generator::{offline_trace, online_trace};
+use ooco::trace::Trace;
+use ooco::transport::{Progress, TransferKind, TransportEngine};
+use ooco::util::rng::Pcg;
+
+// ------------------------------------------------------------ unit props
+
+fn random_spec(r: &mut Pcg) -> TransportSpec {
+    let mut spec =
+        TransportSpec::for_hardware(&HardwareProfile::ascend_910c());
+    spec.pool.bandwidth = (r.below(1000) + 1) as f64 * 1e6;
+    spec.host.bandwidth = (r.below(1000) + 1) as f64 * 1e6;
+    spec.pool.latency = r.below(100) as f64 * 1e-6;
+    spec.host.latency = r.below(100) as f64 * 1e-6;
+    spec.pool.sharing = if r.below(2) == 0 {
+        LinkSharing::Fifo
+    } else {
+        LinkSharing::FairShare
+    };
+    spec.host.sharing = if r.below(2) == 0 {
+        LinkSharing::Fifo
+    } else {
+        LinkSharing::FairShare
+    };
+    spec.chunk_layers = r.below(28) + 1;
+    spec
+}
+
+fn random_kind(r: &mut Pcg) -> TransferKind {
+    match r.below(5) {
+        0 => TransferKind::Dispatch { to_strict: 0 },
+        1 => TransferKind::Migrate { to_strict: 0 },
+        2 => TransferKind::Rescue { to_relaxed: 0 },
+        3 => TransferKind::Offload,
+        _ => TransferKind::Restore { to_relaxed: 0 },
+    }
+}
+
+fn pop_earliest(
+    events: &mut Vec<(f64, u64, u64, usize)>,
+) -> Option<(f64, u64, u64, usize)> {
+    if events.is_empty() {
+        return None;
+    }
+    let mut best = 0usize;
+    for i in 1..events.len() {
+        if events[i].0 < events[best].0 {
+            best = i;
+        }
+    }
+    Some(events.swap_remove(best))
+}
+
+/// Conservation + monotonicity + exactly-once cancel, under random
+/// interleavings of enqueue / chunk-completion / mid-flight cancel on both
+/// links and both sharing disciplines.
+#[test]
+fn transport_conserves_bytes_and_orders_completions() {
+    forall(60, |r| {
+        let spec = random_spec(r);
+        let mut eng = TransportEngine::new(&spec, 57344.0, 28);
+        // (time, job, seq, link) of scheduled chunk completions.
+        let mut events: Vec<(f64, u64, u64, usize)> = Vec::new();
+        let mut last_done = [f64::NEG_INFINITY; 2];
+        let mut live: Vec<u64> = Vec::new();
+        let mut t = 0.0f64;
+        let n_jobs = r.below(25) + 5;
+
+        let handle = |eng: &mut TransportEngine,
+                          events: &mut Vec<(f64, u64, u64, usize)>,
+                          last_done: &mut [f64; 2],
+                          t: &mut f64|
+         -> Result<bool, String> {
+            let Some((te, job, seq, link)) = pop_earliest(events) else {
+                return Ok(false);
+            };
+            *t = t.max(te);
+            match eng.on_chunk_done(*t, job, seq) {
+                Progress::Stale => {
+                    return Err(format!("unexpected stale chunk ({job},{seq})"))
+                }
+                Progress::Advanced { orders } => {
+                    prop_assert!(
+                        *t >= last_done[link],
+                        "completions regressed on link {link}"
+                    );
+                    last_done[link] = *t;
+                    for o in orders {
+                        events.push((*t + o.duration, o.job, o.seq, o.link));
+                    }
+                }
+                Progress::JobDone { job, orders } => {
+                    prop_assert!(
+                        *t >= last_done[job.link],
+                        "completions regressed on link {}",
+                        job.link
+                    );
+                    prop_assert!(
+                        job.chunks_done == job.chunks,
+                        "job finished early"
+                    );
+                    last_done[job.link] = *t;
+                    for o in orders {
+                        events.push((*t + o.duration, o.job, o.seq, o.link));
+                    }
+                }
+            }
+            Ok(true)
+        };
+
+        for i in 0..n_jobs {
+            let kind = random_kind(r);
+            let tokens = r.below(4000) + 1;
+            let (id, orders) = eng.enqueue(t, i as u64, kind, tokens);
+            live.push(id);
+            for o in orders {
+                events.push((t + o.duration, o.job, o.seq, o.link));
+            }
+            // Occasionally cancel a random job mid-flight; a second cancel
+            // of the same job must never release resources again.
+            if r.below(4) == 0 && !live.is_empty() {
+                let victim = live[r.below(live.len())];
+                if eng.cancel(victim).is_some() {
+                    prop_assert!(
+                        eng.cancel(victim).is_none(),
+                        "double cancel released job {victim} twice"
+                    );
+                }
+            }
+            // Interleave: let a few chunks land between enqueues.
+            for _ in 0..r.below(3) {
+                handle(&mut eng, &mut events, &mut last_done, &mut t)?;
+            }
+        }
+        // Drain everything.
+        while handle(&mut eng, &mut events, &mut last_done, &mut t)? {}
+
+        prop_assert!(
+            eng.active_jobs() == 0,
+            "jobs leaked: {}",
+            eng.active_jobs()
+        );
+        prop_assert!(
+            eng.in_flight_bytes().abs() < 1e-6,
+            "in-flight bytes after drain"
+        );
+        let lhs = eng.bytes_enqueued;
+        let rhs = eng.bytes_delivered + eng.bytes_cancelled;
+        prop_assert!(
+            (lhs - rhs).abs() <= 1e-6 * lhs.max(1.0),
+            "bytes not conserved: enqueued {lhs} vs delivered+cancelled {rhs}"
+        );
+        Ok(())
+    });
+}
+
+/// An uncontended chunked transfer takes exactly its ideal duration: the
+/// chunking must not change total transfer time on an idle link.
+#[test]
+fn uncontended_transfer_matches_ideal_duration() {
+    let mut spec =
+        TransportSpec::for_hardware(&HardwareProfile::ascend_910c());
+    spec.pool.latency = 0.0;
+    let mut eng = TransportEngine::new(&spec, 57344.0, 28);
+    let tokens = 1892usize;
+    let (_, mut orders) =
+        eng.enqueue(0.0, 0, TransferKind::Dispatch { to_strict: 0 }, tokens);
+    let mut t = 0.0;
+    let mut end = None;
+    while let Some(o) = orders.pop() {
+        t += o.duration;
+        match eng.on_chunk_done(t, o.job, o.seq) {
+            Progress::Stale => panic!("stale"),
+            Progress::Advanced { orders: next } => orders.extend(next),
+            Progress::JobDone { .. } => end = Some(t),
+        }
+    }
+    let ideal = tokens as f64 * 57344.0 / spec.pool.bandwidth;
+    let end = end.expect("job must complete");
+    assert!(
+        (end - ideal).abs() < 1e-9 * ideal.max(1.0),
+        "chunked total {end} vs single-shot ideal {ideal}"
+    );
+    assert!(eng.links()[0].stall_s < 1e-9, "idle link must not stall");
+}
+
+// ------------------------------------------------- simulator-level claims
+
+fn migration_workload(seed: u64) -> Trace {
+    let online =
+        online_trace(DatasetProfile::azure_conv(), 0.4, 600.0, seed);
+    let offline =
+        offline_trace(DatasetProfile::ooc_offline(), 1.5, 600.0, seed + 1);
+    online.merge(offline)
+}
+
+fn run_with_bandwidth(trace: &Trace, pool_bw: Option<f64>) -> SimResult {
+    let mut cfg = SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+    cfg.drain_s = 1200.0;
+    cfg.seed = 7;
+    if let Some(bw) = pool_bw {
+        cfg.serving.transport.pool.bandwidth = bw;
+    }
+    simulate(trace, &cfg)
+}
+
+/// Acceptance criterion: constraining the interconnect produces measurable
+/// transfer stall and lower migration throughput (offline tokens decoded on
+/// strict nodes) than the unconstrained run — transfers no longer teleport.
+#[test]
+fn constrained_link_stalls_and_cuts_migration_throughput() {
+    let trace = migration_workload(42);
+    let unconstrained = run_with_bandwidth(&trace, None); // 25 GB/s default
+    let constrained = run_with_bandwidth(&trace, Some(0.2e9)); // 125x less
+
+    assert!(
+        unconstrained.strict_offline_tokens > 0,
+        "workload must exercise migration at all"
+    );
+    assert!(
+        constrained.transport.stall_s > 1.0,
+        "constrained link shows no measurable stall: {:.3}s",
+        constrained.transport.stall_s
+    );
+    assert!(
+        constrained.transport.stall_s > 10.0 * unconstrained.transport.stall_s,
+        "stall must explode under the bandwidth cut: {:.3}s vs {:.3}s",
+        constrained.transport.stall_s,
+        unconstrained.transport.stall_s
+    );
+    assert!(
+        constrained.strict_offline_tokens
+            < unconstrained.strict_offline_tokens,
+        "migration throughput must drop: {} vs {}",
+        constrained.strict_offline_tokens,
+        unconstrained.strict_offline_tokens
+    );
+    // Link utilization is visible and higher under constraint.
+    let util = |r: &SimResult| r.transport.links[0].utilization;
+    assert!(util(&constrained) > util(&unconstrained));
+}
+
+/// Recoverable fast preemption engages under memory pressure and replaces
+/// discard-and-recompute: strictly fewer recompute evictions, with the KV
+/// streamed out (rescues/offloads) and restart latencies recorded instead.
+#[test]
+fn recoverable_eviction_replaces_recompute_under_pressure() {
+    // Shrink device memory so both pools fit only a few dozen requests:
+    // eviction churn is constant.
+    let mut serving = ServingConfig::preset_7b();
+    serving.hardware.mem_capacity = 18e9;
+    let online = online_trace(DatasetProfile::azure_conv(), 0.8, 400.0, 11);
+    let offline =
+        offline_trace(DatasetProfile::ooc_offline(), 4.0, 400.0, 12);
+    let trace = online.merge(offline);
+
+    let mut rec_cfg = SimConfig::new(serving.clone(), Policy::Ooco);
+    rec_cfg.drain_s = 2000.0;
+    let recoverable = simulate(&trace, &rec_cfg);
+
+    let mut dis_cfg = SimConfig::new(serving, Policy::Ooco);
+    dis_cfg.drain_s = 2000.0;
+    dis_cfg.serving.transport.recoverable_eviction = false;
+    dis_cfg.serving.transport.host_staging = false;
+    let discard = simulate(&trace, &dis_cfg);
+
+    assert!(
+        discard.evictions > 0,
+        "workload must force evictions ({} offline finished)",
+        discard.report.offline_finished
+    );
+    assert!(
+        recoverable.rescues + recoverable.offloads > 0,
+        "fast preemption never engaged"
+    );
+    assert_eq!(discard.rescues, 0, "discard run must not rescue");
+    assert!(
+        recoverable.evictions < discard.evictions,
+        "recoverable eviction must replace recompute: {} vs {}",
+        recoverable.evictions,
+        discard.evictions
+    );
+    assert!(
+        recoverable.transport.restart_latency.count > 0,
+        "no preemption-to-restart latencies recorded"
+    );
+    // Not recomputing prefills must not cost offline throughput.
+    assert!(
+        recoverable.report.offline_token_throughput
+            >= 0.95 * discard.report.offline_token_throughput,
+        "recoverable {} vs discard {}",
+        recoverable.report.offline_token_throughput,
+        discard.report.offline_token_throughput
+    );
+}
