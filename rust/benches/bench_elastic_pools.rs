@@ -1,0 +1,164 @@
+//! Elastic pool manager evaluation (DESIGN.md §3.6, ours): static
+//! strict/relaxed split vs `Periodic` vs `Reactive` repartitioning on a
+//! diurnal tide + burst trace.
+//!
+//! The workload compresses one tide edge into the run: a peak phase at
+//! `--peak` base rate (azure-conv bursts ride along) followed by a trough
+//! phase at `--trough`, with a saturating offline backlog throughout. A
+//! static split must provision the strict pool for the peak and strands
+//! that capacity through the trough; the elastic policies hand it to the
+//! relaxed pool once the estimator sees the tide fall — more offline
+//! throughput at equal online SLO attainment. Memory is squeezed
+//! (`--mem-gb`, default 20) so per-instance KV capacity binds at
+//! bench-scale load, exactly like `bench_fast_preemption`.
+//!
+//! Reports, per offline-QPS regime and pool policy: online violation rate,
+//! TTFT/TPOT p99, offline token throughput, flips, transition p50, and
+//! stranded capacity; then a verdict line per regime. Run:
+//! `cargo bench --bench bench_elastic_pools [-- --duration 900]`
+
+use ooco::config::{PoolPolicy, ServingConfig};
+use ooco::scheduler::Policy;
+use ooco::sim::{simulate, SimConfig, SimResult};
+use ooco::trace::datasets::DatasetProfile;
+use ooco::trace::generator::two_phase_trace;
+use ooco::trace::Trace;
+use ooco::util::cli::Args;
+
+fn tide_trace(
+    peak_base: f64,
+    trough_base: f64,
+    duration: f64,
+    offline_qps: f64,
+    seed: u64,
+) -> Trace {
+    two_phase_trace(
+        DatasetProfile::azure_conv(),
+        peak_base,
+        trough_base,
+        duration / 2.0,
+        DatasetProfile::ooc_offline(),
+        offline_qps,
+        seed,
+    )
+}
+
+fn run(
+    trace: &Trace,
+    pool: PoolPolicy,
+    mem_gb: f64,
+    seed: u64,
+) -> SimResult {
+    let mut serving = ServingConfig::preset_7b();
+    serving.hardware.mem_capacity = mem_gb * 1e9;
+    // Static peak provisioning: half the cluster each.
+    serving.cluster.relaxed_instances = 2;
+    serving.cluster.strict_instances = 2;
+    serving.pool = pool;
+    let mut cfg = SimConfig::new(serving, Policy::Ooco);
+    cfg.seed = seed;
+    simulate(trace, &cfg)
+}
+
+fn main() {
+    let args = Args::parse_env();
+    let duration = args.f64("duration", 900.0);
+    // Base rates; azure-conv's tide starts at the mid-morning ramp, so the
+    // effective peak is ≈ 1.4× the base — ~7 req/s needs two strict
+    // instances at the squeezed memory, the trough needs one.
+    let peak = args.f64("peak", 5.0);
+    let trough = args.f64("trough", 0.5);
+    let mem_gb = args.f64("mem-gb", 20.0);
+    let qps_levels = args.f64_list("qps", &[4.0, 10.0]);
+    let seed = args.u64("seed", 42);
+
+    let policies: [(&str, PoolPolicy); 3] = [
+        ("static", PoolPolicy::Static),
+        (
+            "periodic",
+            PoolPolicy::Periodic {
+                epoch_s: 30.0,
+                headroom: 0.15,
+            },
+        ),
+        ("reactive", PoolPolicy::DEFAULT_REACTIVE),
+    ];
+
+    println!(
+        "# elastic pools: tide {peak}->{trough} base req/s over {duration}s, \
+         2r/2s x {mem_gb} GB, offline qps {qps_levels:?}"
+    );
+    let mut wins = 0usize;
+    for &qps in &qps_levels {
+        let trace = tide_trace(peak, trough, duration, qps, seed);
+        println!(
+            "\n## offline {qps} qps ({} online / {} offline requests)",
+            trace.count_class(ooco::request::Class::Online),
+            trace.count_class(ooco::request::Class::Offline)
+        );
+        let mut stat_attain = 0.0;
+        let mut stat_tput = 0.0;
+        let mut elastic: Vec<(&str, f64, f64)> = Vec::new();
+        for (name, pool) in policies {
+            let res = run(&trace, pool, mem_gb, seed);
+            let attain = 1.0 - res.report.online_violation_rate;
+            println!(
+                "{name:>9}: attain {:6.2}% | ttft p99 {:6.3}s tpot p99 {:5.1}ms | offline {:8.1} tok/s | {}",
+                attain * 100.0,
+                res.report.ttft.p99,
+                res.report.tpot.p99 * 1e3,
+                res.report.offline_token_throughput,
+                res.pool.summary_line(),
+            );
+            if name == "static" {
+                stat_attain = attain;
+                stat_tput = res.report.offline_token_throughput;
+            } else {
+                elastic.push((
+                    name,
+                    attain,
+                    res.report.offline_token_throughput,
+                ));
+            }
+        }
+        // "Equal online SLO attainment": within half a percentage point of
+        // the static split (both typically sit at ~100%). Filter first,
+        // then take the best-throughput qualifier — a high-throughput
+        // policy that trades away SLO must not mask a qualified winner.
+        let winner = elastic
+            .iter()
+            .filter(|(_, attain, _)| *attain >= stat_attain - 0.005)
+            .max_by(|a, b| a.2.total_cmp(&b.2))
+            .copied();
+        match winner {
+            Some((name, _, tput)) if tput > stat_tput => {
+                wins += 1;
+                println!(
+                    "=> regime won by `{name}`: offline {:.1} vs static {:.1} tok/s (+{:.1}%) at equal SLO attainment",
+                    tput,
+                    stat_tput,
+                    (tput / stat_tput.max(1e-9) - 1.0) * 100.0
+                );
+            }
+            _ => {
+                let (name, attain, tput) = elastic
+                    .iter()
+                    .max_by(|a, b| a.2.total_cmp(&b.2))
+                    .copied()
+                    .expect("two elastic policies ran");
+                println!(
+                    "=> static holds this regime (best elastic `{name}` {:.1} tok/s @ {:.2}% vs static {:.1} @ {:.2}%)",
+                    tput,
+                    attain * 100.0,
+                    stat_tput,
+                    stat_attain * 100.0
+                );
+            }
+        }
+    }
+    println!(
+        "\n{} of {} regimes won by elastic repartitioning",
+        wins,
+        qps_levels.len()
+    );
+}

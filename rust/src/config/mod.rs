@@ -96,15 +96,6 @@ impl ModelSpec {
         }
     }
 
-    /// Deprecated alias for the [`std::str::FromStr`] implementation.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use `name.parse::<ModelSpec>()` instead"
-    )]
-    pub fn by_name(name: &str) -> anyhow::Result<Self> {
-        name.parse()
-    }
-
     /// KV-cache bytes for one token (all layers, K and V).
     pub fn kv_bytes_per_token(&self) -> f64 {
         2.0 * self.layers as f64
@@ -280,15 +271,6 @@ impl HardwareProfile {
             bw_comm: 5e9,
             mem_capacity: 2e9,
         }
-    }
-
-    /// Deprecated alias for the [`std::str::FromStr`] implementation.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use `name.parse::<HardwareProfile>()` instead"
-    )]
-    pub fn by_name(name: &str) -> anyhow::Result<Self> {
-        name.parse()
     }
 
     pub fn from_json(v: &Json) -> anyhow::Result<Self> {
@@ -477,6 +459,147 @@ impl TransportSpec {
     }
 }
 
+/// Elastic pool-manager policy (DESIGN.md §3.6): how — and whether — the
+/// strict/relaxed instance split is re-planned at runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum PoolPolicy {
+    /// Frozen config-time split (the pre-elastic behaviour).
+    #[default]
+    Static,
+    /// Re-plan every `epoch_s` seconds: the Roofline-guided planner sizes
+    /// the strict pool for the estimated load with `headroom` kept under
+    /// the TPOT SLO.
+    Periodic {
+        epoch_s: f64,
+        /// Fraction of the TPOT budget held back when sizing (0..0.9).
+        headroom: f64,
+    },
+    /// Threshold-triggered: grow the strict pool when estimated decode
+    /// pressure exceeds `up`, shrink when the pool one instance smaller
+    /// would still sit below `down`; at most one transition per
+    /// `cooldown_s`.
+    Reactive {
+        up: f64,
+        down: f64,
+        cooldown_s: f64,
+    },
+}
+
+impl PoolPolicy {
+    pub const DEFAULT_PERIODIC: PoolPolicy = PoolPolicy::Periodic {
+        epoch_s: 60.0,
+        headroom: 0.15,
+    };
+    pub const DEFAULT_REACTIVE: PoolPolicy = PoolPolicy::Reactive {
+        up: 0.85,
+        down: 0.5,
+        cooldown_s: 30.0,
+    };
+
+    /// Does this policy ever repartition at runtime?
+    pub fn is_elastic(&self) -> bool {
+        !matches!(self, PoolPolicy::Static)
+    }
+}
+
+impl std::str::FromStr for PoolPolicy {
+    type Err = anyhow::Error;
+
+    /// Parse `static`, `periodic`, `reactive`, or the parameterized forms
+    /// `Display` emits — `periodic(epoch=60,headroom=0.15)` and
+    /// `reactive(up=0.85,down=0.5,cooldown=30)` (keys optional, any order).
+    fn from_str(name: &str) -> anyhow::Result<PoolPolicy> {
+        fn params<'a>(
+            body: &'a str,
+            kind: &str,
+        ) -> anyhow::Result<Vec<(&'a str, f64)>> {
+            let mut out = Vec::new();
+            for tok in body.split(',').filter(|t| !t.trim().is_empty()) {
+                let (k, v) = tok
+                    .trim()
+                    .split_once('=')
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("bad {kind} parameter `{tok}`")
+                    })?;
+                out.push((k.trim(), v.trim().parse::<f64>()?));
+            }
+            Ok(out)
+        }
+        match name {
+            "static" => return Ok(PoolPolicy::Static),
+            "periodic" => return Ok(PoolPolicy::DEFAULT_PERIODIC),
+            "reactive" => return Ok(PoolPolicy::DEFAULT_REACTIVE),
+            _ => {}
+        }
+        if let Some(body) = name
+            .strip_prefix("periodic(")
+            .and_then(|s| s.strip_suffix(')'))
+        {
+            let (mut epoch_s, mut headroom) =
+                match PoolPolicy::DEFAULT_PERIODIC {
+                    PoolPolicy::Periodic { epoch_s, headroom } => {
+                        (epoch_s, headroom)
+                    }
+                    _ => unreachable!(),
+                };
+            for (k, v) in params(body, "periodic")? {
+                match k {
+                    "epoch" | "epoch_s" => epoch_s = v,
+                    "headroom" => headroom = v,
+                    _ => anyhow::bail!("unknown periodic parameter `{k}`"),
+                }
+            }
+            anyhow::ensure!(epoch_s > 0.0, "epoch must be positive");
+            anyhow::ensure!(
+                (0.0..0.9).contains(&headroom),
+                "headroom must be in [0, 0.9)"
+            );
+            return Ok(PoolPolicy::Periodic { epoch_s, headroom });
+        }
+        if let Some(body) = name
+            .strip_prefix("reactive(")
+            .and_then(|s| s.strip_suffix(')'))
+        {
+            let (mut up, mut down, mut cooldown_s) =
+                match PoolPolicy::DEFAULT_REACTIVE {
+                    PoolPolicy::Reactive { up, down, cooldown_s } => {
+                        (up, down, cooldown_s)
+                    }
+                    _ => unreachable!(),
+                };
+            for (k, v) in params(body, "reactive")? {
+                match k {
+                    "up" => up = v,
+                    "down" => down = v,
+                    "cooldown" | "cooldown_s" => cooldown_s = v,
+                    _ => anyhow::bail!("unknown reactive parameter `{k}`"),
+                }
+            }
+            anyhow::ensure!(
+                up > 0.0 && down >= 0.0 && down < up,
+                "reactive needs 0 <= down < up"
+            );
+            anyhow::ensure!(cooldown_s >= 0.0, "cooldown must be >= 0");
+            return Ok(PoolPolicy::Reactive { up, down, cooldown_s });
+        }
+        anyhow::bail!("unknown pool policy `{name}`")
+    }
+}
+
+impl std::fmt::Display for PoolPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolPolicy::Static => f.write_str("static"),
+            PoolPolicy::Periodic { epoch_s, headroom } => {
+                write!(f, "periodic(epoch={epoch_s},headroom={headroom})")
+            }
+            PoolPolicy::Reactive { up, down, cooldown_s } => {
+                write!(f, "reactive(up={up},down={down},cooldown={cooldown_s})")
+            }
+        }
+    }
+}
+
 /// Online-request Service Level Objectives.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SloSpec {
@@ -618,6 +741,8 @@ pub struct ServingConfig {
     pub cluster: ClusterSpec,
     /// KV-transport link topology + fast-preemption configuration.
     pub transport: TransportSpec,
+    /// Elastic pool-manager policy (DESIGN.md §3.6).
+    pub pool: PoolPolicy,
 }
 
 impl ServingConfig {
@@ -630,6 +755,7 @@ impl ServingConfig {
             slo: SloSpec::default(),
             sched: SchedulerParams::default(),
             cluster: ClusterSpec::default(),
+            pool: PoolPolicy::Static,
         }
     }
 
@@ -642,6 +768,7 @@ impl ServingConfig {
             slo: SloSpec::default(),
             sched: SchedulerParams::default(),
             cluster: ClusterSpec::default(),
+            pool: PoolPolicy::Static,
         }
     }
 
@@ -686,6 +813,14 @@ impl ServingConfig {
                     .get("strict_instances")
                     .as_usize()
                     .unwrap_or(1),
+            },
+            pool: match v.get("pool_policy") {
+                Json::Null => PoolPolicy::Static,
+                Json::Str(s) => s.parse()?,
+                other => anyhow::bail!(
+                    "pool_policy must be a string (e.g. \
+                     \"periodic(epoch=60,headroom=0.15)\"), got {other:?}"
+                ),
             },
         })
     }
@@ -735,15 +870,6 @@ mod tests {
             assert_eq!(h.to_string(), name);
             assert_eq!(h.to_string().parse::<HardwareProfile>().unwrap(), h);
         }
-        // The deprecated aliases keep working.
-        #[allow(deprecated)]
-        {
-            assert_eq!(
-                ModelSpec::by_name("7b").unwrap(),
-                ModelSpec::qwen2_5_7b()
-            );
-            assert!(HardwareProfile::by_name("910c").is_ok());
-        }
     }
 
     #[test]
@@ -758,6 +884,59 @@ mod tests {
         let base = t.clone();
         let t2 = TransportSpec::from_json(&t.to_json(), &base).unwrap();
         assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn pool_policy_parse_display_roundtrip() {
+        assert_eq!("static".parse::<PoolPolicy>().unwrap(), PoolPolicy::Static);
+        assert_eq!(
+            "periodic".parse::<PoolPolicy>().unwrap(),
+            PoolPolicy::DEFAULT_PERIODIC
+        );
+        assert_eq!(
+            "reactive".parse::<PoolPolicy>().unwrap(),
+            PoolPolicy::DEFAULT_REACTIVE
+        );
+        assert_eq!(
+            "periodic(epoch=30,headroom=0.2)"
+                .parse::<PoolPolicy>()
+                .unwrap(),
+            PoolPolicy::Periodic {
+                epoch_s: 30.0,
+                headroom: 0.2
+            }
+        );
+        assert_eq!(
+            "reactive(up=0.9,down=0.4,cooldown=10)"
+                .parse::<PoolPolicy>()
+                .unwrap(),
+            PoolPolicy::Reactive {
+                up: 0.9,
+                down: 0.4,
+                cooldown_s: 10.0
+            }
+        );
+        // Display emits a form that parses back to the same value.
+        for p in [
+            PoolPolicy::Static,
+            PoolPolicy::DEFAULT_PERIODIC,
+            PoolPolicy::DEFAULT_REACTIVE,
+            PoolPolicy::Periodic {
+                epoch_s: 12.5,
+                headroom: 0.25,
+            },
+        ] {
+            assert_eq!(p.to_string().parse::<PoolPolicy>().unwrap(), p);
+        }
+        assert!("elastic".parse::<PoolPolicy>().is_err());
+        assert!("periodic(epoch=0)".parse::<PoolPolicy>().is_err());
+        assert!("periodic(warp=9)".parse::<PoolPolicy>().is_err());
+        assert!("periodic(headroom=1.5)".parse::<PoolPolicy>().is_err());
+        assert!("reactive(up=0.3,down=0.6)".parse::<PoolPolicy>().is_err());
+        assert!("reactive(down=-1)".parse::<PoolPolicy>().is_err());
+        assert!("reactive(cooldown=-30)".parse::<PoolPolicy>().is_err());
+        assert!(PoolPolicy::DEFAULT_PERIODIC.is_elastic());
+        assert!(!PoolPolicy::Static.is_elastic());
     }
 
     #[test]
@@ -812,6 +991,7 @@ mod tests {
                 "slo": {"ttft": 3.0, "tpot": 0.05},
                 "scheduler": {"mix_probe_iters": 16},
                 "cluster": {"relaxed_instances": 2, "strict_instances": 3},
+                "pool_policy": "periodic(epoch=45,headroom=0.1)",
                 "transport": {
                     "chunk_layers": 4,
                     "recoverable_eviction": false,
@@ -827,6 +1007,13 @@ mod tests {
         assert_eq!(cfg.slo.violation_threshold, 0.03); // default preserved
         assert_eq!(cfg.sched.mix_probe_iters, 16);
         assert_eq!(cfg.cluster.strict_instances, 3);
+        assert_eq!(
+            cfg.pool,
+            PoolPolicy::Periodic {
+                epoch_s: 45.0,
+                headroom: 0.1
+            }
+        );
         assert_eq!(cfg.transport.chunk_layers, 4);
         assert!(!cfg.transport.recoverable_eviction);
         assert!(cfg.transport.host_staging); // default preserved
@@ -845,5 +1032,6 @@ mod tests {
         let cfg = ServingConfig::from_file(&path).unwrap();
         assert_eq!(cfg.model.name, "qwen2.5-7b");
         assert_eq!(cfg.cluster.relaxed_instances, 1);
+        assert_eq!(cfg.pool, PoolPolicy::Static);
     }
 }

@@ -39,12 +39,6 @@ impl std::fmt::Display for Policy {
 }
 
 impl Policy {
-    /// Deprecated alias for the [`std::str::FromStr`] implementation.
-    #[deprecated(since = "0.2.0", note = "use `name.parse::<Policy>()` instead")]
-    pub fn by_name(name: &str) -> anyhow::Result<Policy> {
-        name.parse()
-    }
-
     pub fn name(self) -> &'static str {
         match self {
             Policy::BasePd => "base-pd",
@@ -257,11 +251,6 @@ mod tests {
             assert_eq!(p.to_string(), p.name());
         }
         assert!("magic".parse::<Policy>().is_err());
-        // The deprecated alias keeps working.
-        #[allow(deprecated)]
-        {
-            assert_eq!(Policy::by_name("ooco").unwrap(), Policy::Ooco);
-        }
     }
 
     #[test]

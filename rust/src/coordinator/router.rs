@@ -5,6 +5,10 @@
 //! Online-to-strict dispatch is a *push* (immediately after prefill, to
 //! start decoding ASAP — §3.4.3); offline migration is the strict nodes'
 //! *pull*, implemented in [`super::migration`].
+//!
+//! The elastic pool manager (DESIGN.md §3.6) resizes the pools at runtime:
+//! a draining instance is excluded from new-work routing, and a completed
+//! role flip moves one load slot from the tail of one pool to the other.
 
 /// Tracks per-instance outstanding load for balanced dispatch.
 #[derive(Debug, Clone)]
@@ -13,6 +17,10 @@ pub struct Router {
     relaxed_load: Vec<u64>,
     /// Resident decode KV tokens per strict instance.
     strict_load: Vec<u64>,
+    /// Relaxed instance currently draining (excluded from `route_prefill`).
+    drain_relaxed: Option<usize>,
+    /// Strict instance currently draining (excluded from `route_decode`).
+    drain_strict: Option<usize>,
 }
 
 impl Router {
@@ -21,6 +29,8 @@ impl Router {
         Router {
             relaxed_load: vec![0; relaxed],
             strict_load: vec![0; strict],
+            drain_relaxed: None,
+            drain_strict: None,
         }
     }
 
@@ -32,9 +42,38 @@ impl Router {
         self.strict_load.len()
     }
 
+    /// Exclude (or re-include, with `None`) a relaxed instance from
+    /// new-prefill routing while the pool manager drains it.
+    pub fn set_drain_relaxed(&mut self, idx: Option<usize>) {
+        self.drain_relaxed = idx;
+    }
+
+    /// Exclude (or re-include) a strict instance from decode routing.
+    pub fn set_drain_strict(&mut self, idx: Option<usize>) {
+        self.drain_strict = idx;
+    }
+
+    /// Role flip relaxed→strict: retire the tail relaxed load slot and open
+    /// a fresh strict one. The flipped instance carries no load (drained).
+    pub fn flip_relaxed_to_strict(&mut self) {
+        assert!(self.relaxed_load.len() > 1, "last relaxed instance");
+        self.relaxed_load.pop();
+        self.strict_load.push(0);
+        self.drain_relaxed = None;
+    }
+
+    /// Role flip strict→relaxed: retire the tail strict load slot and open
+    /// a fresh relaxed one.
+    pub fn flip_strict_to_relaxed(&mut self) {
+        assert!(self.strict_load.len() > 1, "last strict instance");
+        self.strict_load.pop();
+        self.relaxed_load.push(0);
+        self.drain_strict = None;
+    }
+
     /// Pick the relaxed instance for a prefill of `tokens`, recording load.
     pub fn route_prefill(&mut self, tokens: usize) -> usize {
-        let idx = argmin(&self.relaxed_load);
+        let idx = argmin_excl(&self.relaxed_load, self.drain_relaxed);
         self.relaxed_load[idx] += tokens as u64;
         idx
     }
@@ -47,7 +86,7 @@ impl Router {
 
     /// Pick the strict instance for a decode of `kv_tokens`, recording load.
     pub fn route_decode(&mut self, kv_tokens: usize) -> usize {
-        let idx = argmin(&self.strict_load);
+        let idx = argmin_excl(&self.strict_load, self.drain_strict);
         self.strict_load[idx] += kv_tokens as u64;
         idx
     }
@@ -64,14 +103,19 @@ impl Router {
     }
 }
 
-fn argmin(v: &[u64]) -> usize {
-    let mut best = 0usize;
+/// Least-loaded index, skipping `excl` unless it is the only instance.
+fn argmin_excl(v: &[u64], excl: Option<usize>) -> usize {
+    let mut best: Option<usize> = None;
     for (i, &x) in v.iter().enumerate() {
-        if x < v[best] {
-            best = i;
+        if Some(i) == excl && v.len() > 1 {
+            continue;
+        }
+        match best {
+            Some(b) if x >= v[b] => {}
+            _ => best = Some(i),
         }
     }
-    best
+    best.expect("at least one instance")
 }
 
 #[cfg(test)]
@@ -117,8 +161,53 @@ mod tests {
     }
 
     #[test]
+    fn draining_instance_is_skipped() {
+        let mut r = Router::new(2, 2);
+        r.set_drain_relaxed(Some(0));
+        for _ in 0..4 {
+            assert_eq!(r.route_prefill(10), 1);
+        }
+        r.set_drain_relaxed(None);
+        assert_eq!(r.route_prefill(1), 0); // load 0 < 40, included again
+        r.set_drain_strict(Some(1));
+        for _ in 0..4 {
+            assert_eq!(r.route_decode(10), 0);
+        }
+    }
+
+    #[test]
+    fn sole_instance_still_routes_despite_drain_mark() {
+        let mut r = Router::new(1, 1);
+        r.set_drain_relaxed(Some(0));
+        r.set_drain_strict(Some(0));
+        assert_eq!(r.route_prefill(1), 0);
+        assert_eq!(r.route_decode(1), 0);
+    }
+
+    #[test]
+    fn flips_move_tail_slots() {
+        let mut r = Router::new(2, 1);
+        r.set_drain_relaxed(Some(1));
+        r.flip_relaxed_to_strict();
+        assert_eq!(r.relaxed_count(), 1);
+        assert_eq!(r.strict_count(), 2);
+        // Drain mark cleared; fresh strict slot starts empty and wins.
+        r.route_decode(100); // instance 0
+        assert_eq!(r.route_decode(1), 1);
+        r.flip_strict_to_relaxed();
+        assert_eq!(r.relaxed_count(), 2);
+        assert_eq!(r.strict_count(), 1);
+    }
+
+    #[test]
     #[should_panic]
     fn zero_instances_panics() {
         Router::new(0, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn flip_of_last_strict_panics() {
+        Router::new(1, 1).flip_strict_to_relaxed();
     }
 }

@@ -34,12 +34,12 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::{
-    ClusterSpec, HardwareProfile, SchedulerParams, ServingConfig, SloSpec,
-    TransportSpec,
+    ClusterSpec, HardwareProfile, PoolPolicy, SchedulerParams, ServingConfig,
+    SloSpec, TransportSpec,
 };
 use crate::coordinator::{Ablation, OverloadMode, Policy};
 use crate::instance::StepKind;
-use crate::metrics::{Recorder, Report, TransportReport};
+use crate::metrics::{PoolReport, Recorder, Report, TransportReport};
 use crate::perfmodel::BatchStats;
 use crate::perfmodel::{calibrate, PerfModel, Sample, SampleKind};
 use crate::request::{Class, Request, RequestId};
@@ -57,6 +57,12 @@ pub struct EngineConfig {
     pub policy: Policy,
     pub slo: SloSpec,
     pub sched: SchedulerParams,
+    /// Cluster shape (both pools share the one CPU; multi-instance shapes
+    /// exercise routing and the elastic pool manager on real execution).
+    pub cluster: ClusterSpec,
+    /// Elastic pool-manager policy (needs a `cluster` with more than one
+    /// instance in some pool to ever repartition).
+    pub pool: PoolPolicy,
     /// Wall-clock compression: trace time / `time_scale` (e.g. 10 replays a
     /// 600 s trace in 60 s).
     pub time_scale: f64,
@@ -76,6 +82,11 @@ impl Default for EngineConfig {
                 violation_threshold: 0.03,
             },
             sched: SchedulerParams::default(),
+            cluster: ClusterSpec {
+                relaxed_instances: 1,
+                strict_instances: 1,
+            },
+            pool: PoolPolicy::Static,
             time_scale: 1.0,
             max_output: 32,
             seed: 0,
@@ -100,6 +111,8 @@ pub struct EngineOutcome {
     pub perf_model: PerfModel,
     /// KV transport accounting (chunk copies the engine actually did).
     pub transport: TransportReport,
+    /// Elastic pool-manager accounting (plans, flips, transitions).
+    pub pool: PoolReport,
 }
 
 /// Live execution state of one request on the real substrate: its KV cache
@@ -232,10 +245,8 @@ pub fn serve_trace_with_runtime(
             hardware: pm.hw.clone(),
             slo: cfg.slo,
             sched: cfg.sched.clone(),
-            cluster: ClusterSpec {
-                relaxed_instances: 1,
-                strict_instances: 1,
-            },
+            cluster: cfg.cluster,
+            pool: cfg.pool,
         },
         policy: cfg.policy,
         ablation: Ablation::full(),
@@ -396,7 +407,14 @@ impl<'rt> EngineExecutor<'rt> {
                 Action::Complete { req } => {
                     self.lives.remove(&req);
                 }
-                Action::Migrate { .. } | Action::Admit { .. } => {}
+                // Cluster-level notifications: no per-request substrate
+                // resources to manage (pool flips move whole instances,
+                // whose residents were already streamed off via the
+                // transfer actions above).
+                Action::Migrate { .. }
+                | Action::Admit { .. }
+                | Action::RepartitionPlan { .. }
+                | Action::RoleChange { .. } => {}
             }
         }
     }
@@ -414,6 +432,10 @@ impl<'rt> EngineExecutor<'rt> {
             }
             StepKind::DecodeRelaxed | StepKind::DecodeStrict => {
                 self.exec_decode(&step)?;
+            }
+            StepKind::Warm => {
+                // Role-transition warm-up: no model work on this substrate;
+                // the step boundary below reports it complete.
             }
         }
         match step.inst {
@@ -573,6 +595,7 @@ impl<'rt> EngineExecutor<'rt> {
         EngineOutcome {
             report: recorder.report(&self.cfg.slo, duration),
             transport: core.transport_report(duration),
+            pool: core.pool_report(),
             wall_s: self.start.elapsed().as_secs_f64(),
             prefills: self.prefills,
             strict_steps: self.strict_steps,

@@ -1,6 +1,12 @@
-//! Instance state for the two latency-constraint pools (§3.2).
+//! Instance state for the latency-constraint pools (§3.2).
 //!
-//! These are passive state containers; the step *decisions* live in
+//! Since the elastic pool manager (DESIGN.md §3.6), the pool an instance
+//! serves is *runtime state*, not a type: one [`Instance`] struct carries
+//! the union of relaxed-role and strict-role state plus its current
+//! [`PoolRole`], so the pool manager can drain an instance, flip its role,
+//! and warm it into the other pool without reconstructing it.
+//!
+//! Instances stay passive state containers; the step *decisions* live in
 //! `scheduler::SchedulerCore` (over the pure `coordinator` functions) and
 //! the time evolution in an `scheduler::Executor` — virtual clock for the
 //! simulator, real PJRT execution for the engine. Keeping them dumb means
@@ -11,6 +17,38 @@ use std::collections::VecDeque;
 
 use crate::kvcache::KvManager;
 use crate::request::RequestId;
+
+/// Which latency-constraint pool an instance currently serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolRole {
+    /// Latency-relaxed: prefill (both classes) + offline decode.
+    Relaxed,
+    /// Latency-strict: online decode + SLO-bounded offline mix-in.
+    Strict,
+}
+
+impl PoolRole {
+    pub fn name(self) -> &'static str {
+        match self {
+            PoolRole::Relaxed => "relaxed",
+            PoolRole::Strict => "strict",
+        }
+    }
+
+    /// The pool a repurposed instance moves to.
+    pub fn other(self) -> PoolRole {
+        match self {
+            PoolRole::Relaxed => PoolRole::Strict,
+            PoolRole::Strict => PoolRole::Relaxed,
+        }
+    }
+}
+
+impl std::fmt::Display for PoolRole {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// What one iteration (step) on an instance is doing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -23,6 +61,10 @@ pub enum StepKind {
     DecodeRelaxed,
     /// Mixed decode on a latency-strict instance.
     DecodeStrict,
+    /// Role-transition warm-up after a pool flip (DESIGN.md §3.6): the
+    /// instance re-initializes role-specific runtime state and serves no
+    /// requests until the step completes.
+    Warm,
 }
 
 /// A running iteration.
@@ -40,84 +82,65 @@ pub struct Step {
     pub preempted: bool,
 }
 
-/// Latency-relaxed instance: prefill (both classes) + offline decode.
+/// One serving instance. Which fields are active depends on `role`; the
+/// inactive role's queues stay empty (asserted by `drained_for_flip`
+/// before every role change).
 #[derive(Debug)]
-pub struct RelaxedInstance {
+pub struct Instance {
+    /// Index within the instance's *current* pool (re-assigned on flip).
     pub id: usize,
+    pub role: PoolRole,
+    /// Set while the pool manager drains this instance for a role flip:
+    /// no new work (routing, gating admission, rescue, restore, migration
+    /// pull) may target it; resident work finishes or is moved off.
+    pub draining: bool,
     pub kv: KvManager,
+    // ---- relaxed-role state ----
     /// Online requests waiting to prefill here (router-assigned).
     pub online_queue: VecDeque<RequestId>,
     /// Offline decode residents (their KV lives here).
     pub offline_decoding: Vec<RequestId>,
-    /// Requests whose KV is streaming *in* (rescue from a strict eviction
-    /// or restore from host staging); space is reserved in `kv` but they
-    /// join `offline_decoding` only when the transfer lands.
-    pub inbound: Vec<RequestId>,
-    pub step: Option<Step>,
-    pub next_seq: u64,
-    // ---- utilization accounting ----
-    pub busy_s: f64,
-    pub busy_online_prefill_s: f64,
-}
-
-impl RelaxedInstance {
-    pub fn new(id: usize, kv_capacity_tokens: usize, block_tokens: usize) -> Self {
-        RelaxedInstance {
-            id,
-            kv: KvManager::new(kv_capacity_tokens, block_tokens),
-            online_queue: VecDeque::new(),
-            offline_decoding: Vec::new(),
-            inbound: Vec::new(),
-            step: None,
-            next_seq: 0,
-            busy_s: 0.0,
-            busy_online_prefill_s: 0.0,
-        }
-    }
-
-    pub fn is_idle(&self) -> bool {
-        self.step.is_none()
-    }
-
-    pub fn alloc_seq(&mut self) -> u64 {
-        self.next_seq += 1;
-        self.next_seq
-    }
-}
-
-/// Latency-strict instance: online decode + SLO-bounded offline mix-in.
-#[derive(Debug)]
-pub struct StrictInstance {
-    pub id: usize,
-    pub kv: KvManager,
+    // ---- strict-role state ----
     /// Online decode residents.
     pub online: Vec<RequestId>,
     /// Offline decode residents (mixed in / migrated here).
     pub offline: Vec<RequestId>,
-    /// Requests whose KV transfer to this instance is in flight (KV space
-    /// already reserved in `kv`).
-    pub inbound: Vec<RequestId>,
     /// Online requests that could not reserve KV space yet (overload).
     pub waiting_for_space: VecDeque<RequestId>,
+    // ---- either role ----
+    /// Requests whose KV is streaming *in* (dispatch/migration to a strict
+    /// instance; rescue/restore to a relaxed one); space is reserved in
+    /// `kv` but they join their resident list only when the transfer lands.
+    pub inbound: Vec<RequestId>,
+    /// The running iteration. Step seq ids come from the cluster-global
+    /// counter (`ClusterState::alloc_seq`) so they stay unique across
+    /// elastic role flips.
     pub step: Option<Step>,
-    pub next_seq: u64,
-    // ---- utilization accounting ----
+    // ---- utilization accounting (retired into `ClusterState` on flip) ----
     pub busy_s: f64,
     pub steps: u64,
     pub offline_decode_tokens: u64,
 }
 
-impl StrictInstance {
-    pub fn new(id: usize, kv_capacity_tokens: usize, block_tokens: usize) -> Self {
-        StrictInstance {
+impl Instance {
+    pub fn new(
+        id: usize,
+        role: PoolRole,
+        kv_capacity_tokens: usize,
+        block_tokens: usize,
+    ) -> Self {
+        Instance {
             id,
+            role,
+            draining: false,
             kv: KvManager::new(kv_capacity_tokens, block_tokens),
+            online_queue: VecDeque::new(),
+            offline_decoding: Vec::new(),
             online: Vec::new(),
             offline: Vec::new(),
-            inbound: Vec::new(),
             waiting_for_space: VecDeque::new(),
+            inbound: Vec::new(),
             step: None,
-            next_seq: 0,
             busy_s: 0.0,
             steps: 0,
             offline_decode_tokens: 0,
@@ -132,17 +155,29 @@ impl StrictInstance {
         !self.online.is_empty() || !self.offline.is_empty()
     }
 
-    pub fn alloc_seq(&mut self) -> u64 {
-        self.next_seq += 1;
-        self.next_seq
-    }
-
     pub fn remove_online(&mut self, id: RequestId) {
         self.online.retain(|&r| r != id);
     }
 
     pub fn remove_offline(&mut self, id: RequestId) {
         self.offline.retain(|&r| r != id);
+    }
+
+    /// No queued, resident, or in-flight work of either role, and no KV
+    /// blocks held — the drain phase is complete and the instance may flip
+    /// to its new pool. The KV condition matters beyond the queues: a
+    /// request parked in another instance's `waiting_for_space` keeps its
+    /// prefilled KV *here* without appearing in any local queue, and a
+    /// flip while those blocks remain would dangle its `KvHome`.
+    pub fn drained_for_flip(&self) -> bool {
+        self.step.is_none()
+            && self.online_queue.is_empty()
+            && self.offline_decoding.is_empty()
+            && self.online.is_empty()
+            && self.offline.is_empty()
+            && self.waiting_for_space.is_empty()
+            && self.inbound.is_empty()
+            && self.kv.used_blocks() == 0
     }
 }
 
@@ -152,17 +187,17 @@ mod tests {
 
     #[test]
     fn relaxed_lifecycle() {
-        let mut r = RelaxedInstance::new(0, 1000, 16);
+        let mut r = Instance::new(0, PoolRole::Relaxed, 1000, 16);
         assert!(r.is_idle());
-        assert_eq!(r.alloc_seq(), 1);
-        assert_eq!(r.alloc_seq(), 2);
+        assert_eq!(r.role, PoolRole::Relaxed);
+        assert!(!r.draining);
         r.online_queue.push_back(5);
         assert_eq!(r.online_queue.pop_front(), Some(5));
     }
 
     #[test]
     fn strict_residency_ops() {
-        let mut s = StrictInstance::new(0, 1000, 16);
+        let mut s = Instance::new(0, PoolRole::Strict, 1000, 16);
         assert!(!s.has_decode_work());
         s.online.extend([1, 2, 3]);
         s.offline.extend([10, 11]);
@@ -173,5 +208,29 @@ mod tests {
         assert_eq!(s.offline, vec![11]);
         s.remove_offline(999); // no-op
         assert_eq!(s.offline, vec![11]);
+    }
+
+    #[test]
+    fn drained_for_flip_tracks_every_queue() {
+        let mut i = Instance::new(0, PoolRole::Relaxed, 1000, 16);
+        assert!(i.drained_for_flip());
+        i.online_queue.push_back(1);
+        assert!(!i.drained_for_flip());
+        i.online_queue.clear();
+        i.inbound.push(2);
+        assert!(!i.drained_for_flip());
+        i.inbound.clear();
+        i.waiting_for_space.push_back(3);
+        assert!(!i.drained_for_flip());
+        i.waiting_for_space.clear();
+        assert!(i.drained_for_flip());
+    }
+
+    #[test]
+    fn role_other_and_names() {
+        assert_eq!(PoolRole::Relaxed.other(), PoolRole::Strict);
+        assert_eq!(PoolRole::Strict.other(), PoolRole::Relaxed);
+        assert_eq!(PoolRole::Strict.to_string(), "strict");
+        assert_eq!(PoolRole::Relaxed.name(), "relaxed");
     }
 }

@@ -17,6 +17,7 @@ pub mod instance;
 pub mod kvcache;
 pub mod metrics;
 pub mod perfmodel;
+pub mod pool;
 pub mod request;
 pub mod runtime;
 pub mod scheduler;
@@ -39,19 +40,24 @@ pub mod util;
 pub mod prelude {
     pub use crate::config::{
         ClusterSpec, HardwareProfile, LinkSharing, LinkSpec, ModelSpec,
-        SchedulerParams, ServingConfig, SloSpec, TransportSpec,
+        PoolPolicy, SchedulerParams, ServingConfig, SloSpec, TransportSpec,
     };
     pub use crate::coordinator::{Ablation, OverloadMode, Policy};
     pub use crate::engine::{
         serve_trace, serve_trace_with_runtime, EngineConfig, EngineExecutor,
         EngineOutcome,
     };
-    pub use crate::metrics::{LinkReport, Recorder, Report, TransportReport};
+    pub use crate::instance::PoolRole;
+    pub use crate::metrics::{
+        LinkReport, PoolReport, Recorder, Report, TransportReport,
+    };
     pub use crate::perfmodel::{BatchStats, Bottleneck, PerfModel};
+    pub use crate::pool::{LoadEstimator, PoolManager, PoolPlan};
     pub use crate::request::{Class, Phase, Request, RequestId};
     pub use crate::scheduler::{
         Action, ClusterState, CoreConfig, ExecStats, Executor, InstanceRef,
-        KvHome, SchedulerCore, StubWallClockExecutor, VirtualExecutor,
+        KvHome, RolePhase, SchedulerCore, StubWallClockExecutor,
+        VirtualExecutor,
     };
     pub use crate::sim::{simulate, SimConfig, SimResult};
     pub use crate::transport::{

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   serve      — real PJRT engine over the AOT artifacts (tiny model)
 //!   simulate   — discrete-event cluster simulation at 7B/72B scale
+//!   sweep      — SLO-attainment-vs-load curve (machine-readable JSON)
 //!   roofline   — query the performance model
 //!   trace      — generate and export a workload trace (JSON)
 
@@ -14,6 +15,7 @@ use ooco::trace::generator::{offline_trace, online_trace};
 use ooco::trace::io::save_trace;
 use ooco::trace::scale_trace;
 use ooco::util::cli::Args;
+use ooco::util::json::Json;
 
 fn main() {
     if let Err(e) = run() {
@@ -37,6 +39,7 @@ fn run() -> anyhow::Result<()> {
     match cmd {
         "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
         "roofline" => cmd_roofline(&args),
         "trace" => cmd_trace(&args),
         other => {
@@ -50,13 +53,19 @@ fn print_usage() {
     eprintln!(
         "ooco — latency-disaggregated online-offline co-located LLM serving
 
-USAGE: ooco <serve|simulate|roofline|trace> [--flags]
+USAGE: ooco <serve|simulate|sweep|roofline|trace> [--flags]
 
   serve     --duration 20 --online-rate 1 --offline-qps 1 --policy ooco
             [--artifacts artifacts] [--seed 42]
   simulate  --model 7b --dataset azure-conv --online-rate 0.5
             --offline-qps 10 --duration 1800 --policy ooco
+            [--relaxed 1 --strict 1]
+            [--pool-policy static|periodic|reactive|'periodic(epoch=60,headroom=0.15)']
             [--ablation full] [--overload best-effort|shed] [--seed 42]
+            [--json-out result.json]
+  sweep     --policy ooco --online-rate 0.5 --qps 1,2,4,8 --duration 600
+            [--pool-policy static] [--relaxed 1 --strict 1]
+            [--json-out curve.json]
   roofline  --model 7b --hw 910c --batch 128 --kv-len 1000 --prompt 1892
   trace     --dataset azure-conv --rate 1.0 --duration 3600 --scale 1.0
             --out trace.json [--offline-qps 0]"
@@ -114,14 +123,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             duration,
             seed + 1,
         ));
-    // Config file first (e.g. configs/serve_7b_910c.json), flags override.
-    let mut serving = match args.opt_str("config") {
-        Some(path) => ServingConfig::from_file(std::path::Path::new(path))?,
-        None => ServingConfig::preset_7b(),
-    };
-    if let Some(m) = args.opt_str("model") {
-        serving.model = m.parse::<ModelSpec>()?;
-    }
+    let serving = serving_from_args(args)?;
     let mut cfg =
         SimConfig::new(serving, args.parse_flag("policy", Policy::Ooco)?);
     cfg.overload_mode =
@@ -140,6 +142,83 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         res.rescues
     );
     println!("{}", res.transport.summary_line());
+    if cfg.serving.pool.is_elastic() {
+        println!("{}", res.pool.summary_line());
+    }
+    if let Some(path) = args.opt_str("json-out") {
+        let out = Json::obj(vec![
+            ("policy", Json::Str(cfg.policy.to_string())),
+            ("pool_policy", Json::Str(cfg.serving.pool.to_string())),
+            ("seed", Json::Num(seed as f64)),
+            ("report", res.report.to_json()),
+            ("transport", res.transport.to_json()),
+            ("pool", res.pool.to_json()),
+        ]);
+        std::fs::write(path, out.to_pretty())?;
+        println!("wrote machine-readable result to {path}");
+    }
+    Ok(())
+}
+
+/// Shared `simulate`/`sweep` serving-config assembly: config file first
+/// (e.g. configs/serve_7b_910c.json), then flag overrides.
+fn serving_from_args(args: &Args) -> anyhow::Result<ServingConfig> {
+    let mut serving = match args.opt_str("config") {
+        Some(path) => ServingConfig::from_file(std::path::Path::new(path))?,
+        None => ServingConfig::preset_7b(),
+    };
+    if let Some(m) = args.opt_str("model") {
+        serving.model = m.parse::<ModelSpec>()?;
+    }
+    serving.cluster.relaxed_instances =
+        args.usize("relaxed", serving.cluster.relaxed_instances);
+    serving.cluster.strict_instances =
+        args.usize("strict", serving.cluster.strict_instances);
+    serving.pool = args.parse_flag("pool-policy", serving.pool)?;
+    Ok(serving)
+}
+
+/// SLO-attainment-vs-load curve: sweep offline QPS at a fixed online rate
+/// and emit the machine-readable curve for cross-run comparisons.
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    use ooco::sweep::{curve_to_json, offline_sweep, SweepConfig};
+
+    let serving = serving_from_args(args)?;
+    let policy = args.parse_flag("policy", Policy::Ooco)?;
+    let online_ds = DatasetProfile::by_name(args.str("dataset", "azure-conv"))?;
+    let qps = args.f64_list("qps", &[1.0, 2.0, 4.0, 8.0]);
+    let sweep_cfg = SweepConfig {
+        duration_s: args.f64("duration", 600.0),
+        seed: args.u64("seed", 42),
+        ablation: args.parse_flag("ablation", ooco::coordinator::Ablation::full())?,
+    };
+    let points = offline_sweep(
+        &serving,
+        policy,
+        &online_ds,
+        args.f64("online-rate", 0.5),
+        &DatasetProfile::ooc_offline(),
+        &qps,
+        &sweep_cfg,
+    );
+    for p in &points {
+        println!(
+            "qps {:6.2} | attainment {:6.2}% | offline {:8.1} tok/s | ttft p99 {:.3}s tpot p99 {:.1}ms",
+            p.offline_qps,
+            (1.0 - p.violation_rate) * 100.0,
+            p.offline_token_throughput,
+            p.ttft_p99,
+            p.tpot_p99 * 1e3,
+        );
+    }
+    let label = format!("{policy}+{}", serving.pool);
+    let curve = curve_to_json(&label, &points);
+    if let Some(path) = args.opt_str("json-out") {
+        std::fs::write(path, curve.to_pretty())?;
+        println!("wrote SLO-attainment-vs-load curve to {path}");
+    } else {
+        println!("{}", curve.to_string());
+    }
     Ok(())
 }
 

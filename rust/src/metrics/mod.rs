@@ -1,5 +1,5 @@
-//! Serving metrics: TTFT/TPOT, SLO violation accounting, throughput, and
-//! KV-transport accounting.
+//! Serving metrics: TTFT/TPOT, SLO violation accounting, throughput,
+//! KV-transport accounting, and elastic-pool accounting.
 //!
 //! `Recorder` ingests finished requests (from the simulator or the real
 //! engine) and produces the quantities the paper's evaluation reports:
@@ -7,9 +7,14 @@
 //! throughput, and latency percentiles. [`TransportReport`] aggregates the
 //! transport subsystem's link utilization, transfer stall time, and the
 //! recoverable fast-preemption statistics (preemption-to-restart latency).
+//! [`PoolReport`] tracks the elastic pool manager (DESIGN.md §3.6):
+//! per-epoch pool sizes, role-transition durations, and stranded capacity.
+//! Every report has a `to_json` form (`util::json`) so experiments are
+//! comparable across runs by machine.
 
 use crate::config::SloSpec;
 use crate::request::{Class, Request};
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Per-link transport accounting over one run.
@@ -74,6 +79,122 @@ impl TransportReport {
             self.restart_latency.p50,
             self.restart_latency.p99,
         )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let links: Vec<Json> = self
+            .links
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("name", Json::Str(l.name.clone())),
+                    ("bytes_moved", Json::Num(l.bytes_moved)),
+                    ("busy_s", Json::Num(l.busy_s)),
+                    ("utilization", Json::Num(l.utilization)),
+                    ("jobs_completed", Json::Num(l.jobs_completed as f64)),
+                    ("stall_s", Json::Num(l.stall_s)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("links", Json::Arr(links)),
+            ("stall_s", Json::Num(self.stall_s)),
+            ("rescues", Json::Num(self.rescues as f64)),
+            ("offloads", Json::Num(self.offloads as f64)),
+            ("restores", Json::Num(self.restores as f64)),
+            ("restart_latency", self.restart_latency.to_json()),
+            ("bytes_enqueued", Json::Num(self.bytes_enqueued)),
+            ("bytes_delivered", Json::Num(self.bytes_delivered)),
+            ("jobs_cancelled", Json::Num(self.jobs_cancelled as f64)),
+        ])
+    }
+}
+
+/// One repartition decision of the elastic pool manager.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolEpoch {
+    /// Plan time (virtual or wall seconds).
+    pub at: f64,
+    /// Pool sizes when the plan was computed.
+    pub relaxed: usize,
+    pub strict: usize,
+    /// Strict-pool size the planner asked for.
+    pub planned_strict: usize,
+    /// Burst-corrected arrival-rate estimates the plan was computed from
+    /// (req/s, by *scheduled* class) — the load context for the decision.
+    pub est_online_rate: f64,
+    pub est_offline_rate: f64,
+}
+
+/// Elastic pool-manager metrics over one run (DESIGN.md §3.6).
+#[derive(Debug, Clone)]
+pub struct PoolReport {
+    /// `PoolPolicy` display form.
+    pub policy: String,
+    /// Repartition plans computed (`RepartitionPlan` actions).
+    pub plans: u64,
+    /// Completed role flips (drain → flip → warm cycles).
+    pub flips: u64,
+    /// Per-plan pool sizes (the plan timeline).
+    pub epochs: Vec<PoolEpoch>,
+    /// Drain-start to warm-end durations of completed transitions (s).
+    pub transition_s: Summary,
+    /// Instance-seconds spent away from the planned split — the capacity
+    /// stranded on the wrong side of the pool boundary, integrated as
+    /// `|strict_actual - strict_planned| · dt` over the run.
+    pub stranded_instance_s: f64,
+    /// Pool sizes at the end of the run.
+    pub final_relaxed: usize,
+    pub final_strict: usize,
+}
+
+impl PoolReport {
+    /// One-line summary for bench output.
+    pub fn summary_line(&self) -> String {
+        let (min_s, max_s) = self.epochs.iter().fold(
+            (self.final_strict, self.final_strict),
+            |(lo, hi), e| (lo.min(e.strict), hi.max(e.strict)),
+        );
+        format!(
+            "pool[{}]: plans {} flips {} | strict {}..{} (end {}r/{}s) | transition p50 {:.2}s max {:.2}s | stranded {:.1} inst·s",
+            self.policy,
+            self.plans,
+            self.flips,
+            min_s,
+            max_s,
+            self.final_relaxed,
+            self.final_strict,
+            self.transition_s.p50,
+            self.transition_s.max,
+            self.stranded_instance_s,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let epochs: Vec<Json> = self
+            .epochs
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("at", Json::Num(e.at)),
+                    ("relaxed", Json::Num(e.relaxed as f64)),
+                    ("strict", Json::Num(e.strict as f64)),
+                    ("planned_strict", Json::Num(e.planned_strict as f64)),
+                    ("est_online_rate", Json::Num(e.est_online_rate)),
+                    ("est_offline_rate", Json::Num(e.est_offline_rate)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("policy", Json::Str(self.policy.clone())),
+            ("plans", Json::Num(self.plans as f64)),
+            ("flips", Json::Num(self.flips as f64)),
+            ("epochs", Json::Arr(epochs)),
+            ("transition_s", self.transition_s.to_json()),
+            ("stranded_instance_s", Json::Num(self.stranded_instance_s)),
+            ("final_relaxed", Json::Num(self.final_relaxed as f64)),
+            ("final_strict", Json::Num(self.final_strict as f64)),
+        ])
     }
 }
 
@@ -159,6 +280,44 @@ impl Report {
             self.offline_total,
             self.offline_token_throughput,
         )
+    }
+
+    /// Machine-readable form: the full report including the online
+    /// TTFT/TPOT percentile summaries, for cross-run comparisons.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("duration_s", Json::Num(self.duration_s)),
+            ("online_total", Json::Num(self.online_total as f64)),
+            ("online_finished", Json::Num(self.online_finished as f64)),
+            (
+                "online_violations",
+                Json::Num(self.online_violations as f64),
+            ),
+            (
+                "online_violation_rate",
+                Json::Num(self.online_violation_rate),
+            ),
+            (
+                "slo_attainment",
+                Json::Num(1.0 - self.online_violation_rate),
+            ),
+            ("ttft", self.ttft.to_json()),
+            ("tpot", self.tpot.to_json()),
+            ("offline_total", Json::Num(self.offline_total as f64)),
+            ("offline_finished", Json::Num(self.offline_finished as f64)),
+            (
+                "offline_token_throughput",
+                Json::Num(self.offline_token_throughput),
+            ),
+            (
+                "offline_request_throughput",
+                Json::Num(self.offline_request_throughput),
+            ),
+            (
+                "offline_evictions",
+                Json::Num(self.offline_evictions as f64),
+            ),
+        ])
     }
 }
 
@@ -336,6 +495,65 @@ mod tests {
         let line = rep.summary_line();
         assert!(line.contains("pool"), "{line}");
         assert!(line.contains("rescues 2"), "{line}");
+    }
+
+    #[test]
+    fn report_json_is_machine_readable() {
+        let slo = SloSpec::default();
+        let mut rec = Recorder::new();
+        rec.push(finished_online(1, 1.0, 0.05, 100));
+        rec.push(finished_offline(2, 500, 50.0));
+        let rep = rec.report(&slo, 100.0);
+        let j = rep.to_json();
+        assert_eq!(j.get("online_total").as_f64(), Some(1.0));
+        assert_eq!(j.get("slo_attainment").as_f64(), Some(1.0));
+        assert_eq!(j.get("ttft").get("p50").as_f64(), Some(1.0));
+        assert_eq!(j.get("offline_token_throughput").as_f64(), Some(5.0));
+        // Round-trips through the parser.
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn pool_report_summary_and_json() {
+        let rep = PoolReport {
+            policy: "periodic(epoch=60,headroom=0.15)".into(),
+            plans: 4,
+            flips: 2,
+            epochs: vec![
+                PoolEpoch {
+                    at: 60.0,
+                    relaxed: 2,
+                    strict: 2,
+                    planned_strict: 3,
+                    est_online_rate: 4.0,
+                    est_offline_rate: 1.0,
+                },
+                PoolEpoch {
+                    at: 120.0,
+                    relaxed: 1,
+                    strict: 3,
+                    planned_strict: 3,
+                    est_online_rate: 4.2,
+                    est_offline_rate: 1.0,
+                },
+            ],
+            transition_s: Summary::of(&[4.0, 6.0]),
+            stranded_instance_s: 60.0,
+            final_relaxed: 1,
+            final_strict: 3,
+        };
+        let line = rep.summary_line();
+        assert!(line.contains("plans 4"), "{line}");
+        assert!(line.contains("flips 2"), "{line}");
+        assert!(line.contains("strict 2..3"), "{line}");
+        let j = rep.to_json();
+        assert_eq!(j.get("flips").as_f64(), Some(2.0));
+        assert_eq!(j.get("epochs").idx(1).get("strict").as_f64(), Some(3.0));
+        assert_eq!(
+            j.get("epochs").idx(0).get("est_online_rate").as_f64(),
+            Some(4.0)
+        );
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Load estimation for the elastic pool manager (DESIGN.md §3.6).
+//!
+//! Tracks per-class arrival rates and request-shape means from the action
+//! stream's arrival events. Two exponentially weighted moving averages run
+//! per class — a slow one (the tide tracker) and a fast one (the burst
+//! tracker); the *burst-corrected* rate the planner consumes is the larger
+//! of the two, so a minute-scale burst immediately inflates the plan while
+//! the slow EWMA keeps the diurnal trend.
+//!
+//! The estimator is pure arithmetic over `(now, class, prompt, output)`
+//! observations: it is part of [`crate::scheduler::SchedulerCore`]'s
+//! substrate-independent state, so both executors reach identical
+//! estimates and therefore identical repartition plans (differential-
+//! tested).
+
+use crate::request::Class;
+
+/// One class's estimated load at a read instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassLoad {
+    /// Burst-corrected arrival rate (req/s): max(slow, fast EWMA), capped
+    /// by what the silence since the last arrival can support.
+    pub rate: f64,
+    /// Slow-EWMA (tide-scale) arrival rate (req/s).
+    pub steady_rate: f64,
+    /// EWMA mean prompt length (tokens).
+    pub mean_prompt: f64,
+    /// EWMA mean output length (tokens).
+    pub mean_output: f64,
+}
+
+impl ClassLoad {
+    pub fn zero() -> Self {
+        ClassLoad {
+            rate: 0.0,
+            steady_rate: 0.0,
+            mean_prompt: 0.0,
+            mean_output: 0.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct ClassEst {
+    count: u64,
+    last_arrival: f64,
+    rate_slow: f64,
+    rate_fast: f64,
+    mean_prompt: f64,
+    mean_output: f64,
+}
+
+/// EWMA smoothing weight for request-shape means (prompt/output lengths).
+const LEN_ALPHA: f64 = 0.05;
+
+impl ClassEst {
+    fn observe(
+        &mut self,
+        now: f64,
+        tau_slow: f64,
+        tau_fast: f64,
+        prompt: usize,
+        output: usize,
+    ) {
+        if self.count == 0 {
+            // First arrival carries shape but no inter-arrival information.
+            self.last_arrival = now;
+            self.mean_prompt = prompt as f64;
+            self.mean_output = output as f64;
+            self.count = 1;
+            return;
+        }
+        let dt = (now - self.last_arrival).max(1e-6);
+        self.last_arrival = now;
+        let inst_rate = 1.0 / dt;
+        // Irregular-interval EWMA: weight by how much of the time constant
+        // the gap consumed.
+        let a_slow = 1.0 - (-dt / tau_slow).exp();
+        let a_fast = 1.0 - (-dt / tau_fast).exp();
+        self.rate_slow += a_slow * (inst_rate - self.rate_slow);
+        self.rate_fast += a_fast * (inst_rate - self.rate_fast);
+        self.mean_prompt += LEN_ALPHA * (prompt as f64 - self.mean_prompt);
+        self.mean_output += LEN_ALPHA * (output as f64 - self.mean_output);
+        self.count += 1;
+    }
+
+    fn load(&self, now: f64) -> ClassLoad {
+        if self.count < 2 {
+            return ClassLoad {
+                rate: 0.0,
+                steady_rate: 0.0,
+                mean_prompt: self.mean_prompt,
+                mean_output: self.mean_output,
+            };
+        }
+        // Silence correction: `gap` seconds without an arrival bound the
+        // plausible current rate at ~3 expected events over the gap, so a
+        // stale-high estimate decays on the falling edge of a tide even
+        // though EWMAs only update at arrivals.
+        let gap = (now - self.last_arrival).max(0.0);
+        let cap = if gap > 0.0 { 3.0 / gap } else { f64::INFINITY };
+        ClassLoad {
+            rate: self.rate_fast.max(self.rate_slow).min(cap),
+            steady_rate: self.rate_slow.min(cap),
+            mean_prompt: self.mean_prompt,
+            mean_output: self.mean_output,
+        }
+    }
+}
+
+/// EWMA + burst-corrected arrival/demand tracker for both request classes.
+#[derive(Debug, Clone)]
+pub struct LoadEstimator {
+    tau_slow: f64,
+    tau_fast: f64,
+    online: ClassEst,
+    offline: ClassEst,
+}
+
+impl LoadEstimator {
+    /// `tau_slow`/`tau_fast`: time constants (s) of the tide and burst
+    /// EWMAs.
+    pub fn new(tau_slow: f64, tau_fast: f64) -> Self {
+        LoadEstimator {
+            tau_slow: tau_slow.max(1e-3),
+            tau_fast: tau_fast.max(1e-3),
+            online: ClassEst::default(),
+            offline: ClassEst::default(),
+        }
+    }
+
+    /// Tide-scale 120 s / burst-scale 15 s defaults.
+    pub fn default_taus() -> Self {
+        LoadEstimator::new(120.0, 15.0)
+    }
+
+    /// Feed one arrival observation.
+    pub fn observe_arrival(
+        &mut self,
+        now: f64,
+        class: Class,
+        prompt: usize,
+        output: usize,
+    ) {
+        let est = match class {
+            Class::Online => &mut self.online,
+            Class::Offline => &mut self.offline,
+        };
+        est.observe(now, self.tau_slow, self.tau_fast, prompt, output);
+    }
+
+    /// Estimated online load at `now`.
+    pub fn online(&self, now: f64) -> ClassLoad {
+        self.online.load(now)
+    }
+
+    /// Estimated offline load at `now`.
+    pub fn offline(&self, now: f64) -> ClassLoad {
+        self.offline.load(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed_uniform(e: &mut LoadEstimator, rate: f64, t0: f64, t1: f64) {
+        let dt = 1.0 / rate;
+        let mut t = t0;
+        while t < t1 {
+            e.observe_arrival(t, Class::Online, 1000, 100);
+            t += dt;
+        }
+    }
+
+    #[test]
+    fn converges_to_uniform_rate() {
+        let mut e = LoadEstimator::new(30.0, 5.0);
+        feed_uniform(&mut e, 4.0, 0.0, 300.0);
+        let l = e.online(300.0);
+        assert!((l.rate - 4.0).abs() / 4.0 < 0.05, "rate {}", l.rate);
+        assert!((l.steady_rate - 4.0).abs() / 4.0 < 0.05);
+        assert!((l.mean_prompt - 1000.0).abs() < 1.0);
+        assert!((l.mean_output - 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn burst_correction_reacts_faster_than_tide() {
+        let mut e = LoadEstimator::new(120.0, 5.0);
+        feed_uniform(&mut e, 2.0, 0.0, 300.0);
+        let before = e.online(300.0);
+        // 20 s burst at 5x the base rate.
+        feed_uniform(&mut e, 10.0, 300.0, 320.0);
+        let during = e.online(320.0);
+        assert!(
+            during.rate > 2.0 * before.rate,
+            "burst-corrected rate must jump: {} -> {}",
+            before.rate,
+            during.rate
+        );
+        // The slow tide estimate lags far behind the burst tracker.
+        assert!(
+            during.steady_rate < 0.5 * during.rate,
+            "tide estimate {} vs burst {}",
+            during.steady_rate,
+            during.rate
+        );
+    }
+
+    #[test]
+    fn silence_decays_stale_estimates() {
+        let mut e = LoadEstimator::new(30.0, 5.0);
+        feed_uniform(&mut e, 10.0, 0.0, 120.0);
+        assert!(e.online(120.0).rate > 8.0);
+        // One minute of silence: a 10/s estimate is no longer credible.
+        let l = e.online(180.0);
+        assert!(l.rate <= 3.0 / 60.0 + 1e-9, "stale rate {}", l.rate);
+    }
+
+    #[test]
+    fn classes_tracked_independently() {
+        let mut e = LoadEstimator::default_taus();
+        e.observe_arrival(0.0, Class::Offline, 2000, 500);
+        e.observe_arrival(1.0, Class::Offline, 2000, 500);
+        let online = e.online(1.0);
+        assert_eq!(online.rate, 0.0);
+        assert!(e.offline(1.0).rate > 0.0);
+        assert!((e.offline(1.0).mean_output - 500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn single_arrival_reports_zero_rate() {
+        let mut e = LoadEstimator::default_taus();
+        e.observe_arrival(5.0, Class::Online, 100, 10);
+        let l = e.online(5.0);
+        assert_eq!(l.rate, 0.0);
+        assert_eq!(l.mean_prompt, 100.0);
+    }
+}

@@ -1,0 +1,387 @@
+//! Elastic pool manager (DESIGN.md §3.6): predictive repartitioning of the
+//! strict/relaxed instance pools.
+//!
+//! OOCO's latency-constraint split absorbs P/D imbalance *within* a fixed
+//! pool boundary; a sustained shift in the online/offline mix (a diurnal
+//! tide, a workload regime change) strands capacity on the wrong side of
+//! it. This subsystem sits **above** [`crate::scheduler::SchedulerCore`]'s
+//! per-step decisions and re-plans the boundary itself at coarse
+//! granularity — the scheduler handles bursts, the pool manager handles
+//! tides:
+//!
+//! - [`LoadEstimator`] (estimator.rs) — EWMA + burst-corrected arrival
+//!   rates and request shapes per class, fed from the arrival stream;
+//! - [`min_strict_pool`] (planner.rs) — Roofline-guided capacity planning:
+//!   the minimum strict pool meeting the TPOT SLO at the estimated load,
+//!   headroom-parameterized;
+//! - [`Transition`] (transition.rs) — the drain → flip → warm state
+//!   machine a repurposed instance walks through, never violating online
+//!   SLOs mid-transition.
+//!
+//! [`PoolManager`] ties the three together and owns the plan/transition
+//! bookkeeping. It is *state inside the core* — decisions surface as
+//! [`crate::scheduler::Action::RepartitionPlan`] and
+//! [`crate::scheduler::Action::RoleChange`] entries of the substrate-
+//! independent action stream, so the plan timeline is differential-tested
+//! like every other scheduling decision. Per-epoch pool sizes, transition
+//! durations, and stranded capacity land in [`crate::metrics::PoolReport`].
+
+pub mod estimator;
+pub mod planner;
+pub mod transition;
+
+pub use estimator::{ClassLoad, LoadEstimator};
+pub use planner::{
+    max_slo_batch, min_strict_pool, pressure_with_capacity, strict_pressure,
+    PlannerInput,
+};
+pub use transition::{Transition, TransitionPhase, WARMUP_S};
+
+use crate::config::{PoolPolicy, SloSpec};
+use crate::metrics::{PoolEpoch, PoolReport};
+use crate::perfmodel::PerfModel;
+use crate::request::Class;
+use crate::util::stats::Summary;
+
+/// Minimum interval between `Reactive` trigger evaluations (s) — bounds
+/// plan-evaluation churn on the event-dense decode path.
+const REACTIVE_CHECK_S: f64 = 1.0;
+
+/// Smallest accepted `Periodic` epoch (s). `FromStr` rejects non-positive
+/// epochs, but `PoolPolicy` has public fields — clamping here keeps a
+/// struct-literal `epoch_s: 0.0` from spinning the epoch catch-up loop
+/// forever.
+const MIN_EPOCH_S: f64 = 1e-3;
+
+/// One repartition decision, returned by [`PoolManager::replan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolPlan {
+    /// Monotone plan counter.
+    pub epoch: u64,
+    pub strict_target: usize,
+    pub relaxed_target: usize,
+}
+
+/// The elastic pool manager: load estimation, capacity planning, and
+/// role-transition bookkeeping above the per-step scheduler.
+#[derive(Debug, Clone)]
+pub struct PoolManager {
+    pub policy: PoolPolicy,
+    pub estimator: LoadEstimator,
+    /// The in-flight role transition, if any (at most one at a time; the
+    /// core owns the drain/flip mechanics).
+    pub transition: Option<Transition>,
+    next_epoch_at: f64,
+    next_check_at: f64,
+    cooldown_until: f64,
+    // ---- metrics ----
+    epochs: Vec<PoolEpoch>,
+    transition_s: Vec<f64>,
+    plans: u64,
+    flips: u64,
+    stranded_acc: f64,
+    stranded_last_t: f64,
+    planned_strict: Option<usize>,
+}
+
+impl PoolManager {
+    pub fn new(policy: PoolPolicy) -> Self {
+        let next_epoch_at = match policy {
+            PoolPolicy::Periodic { epoch_s, .. } => epoch_s.max(MIN_EPOCH_S),
+            _ => f64::INFINITY,
+        };
+        PoolManager {
+            policy,
+            estimator: LoadEstimator::default_taus(),
+            transition: None,
+            next_epoch_at,
+            next_check_at: 0.0,
+            cooldown_until: 0.0,
+            epochs: Vec::new(),
+            transition_s: Vec::new(),
+            plans: 0,
+            flips: 0,
+            stranded_acc: 0.0,
+            stranded_last_t: 0.0,
+            planned_strict: None,
+        }
+    }
+
+    /// Feed one arrival into the load estimator.
+    pub fn observe_arrival(
+        &mut self,
+        now: f64,
+        class: Class,
+        prompt: usize,
+        output: usize,
+    ) {
+        if self.policy.is_elastic() {
+            self.estimator.observe_arrival(now, class, prompt, output);
+        }
+    }
+
+    /// Compute a repartition plan if one is due at `now` (Periodic epoch
+    /// boundary crossed, or Reactive thresholds tripped outside the
+    /// cooldown). Returns `None` when nothing is due — including always,
+    /// under `Static`.
+    pub fn replan(
+        &mut self,
+        now: f64,
+        pm: &PerfModel,
+        slo: &SloSpec,
+        n_relaxed: usize,
+        n_strict: usize,
+    ) -> Option<PoolPlan> {
+        let total = n_relaxed + n_strict;
+        match self.policy {
+            PoolPolicy::Static => None,
+            PoolPolicy::Periodic { epoch_s, headroom } => {
+                if now < self.next_epoch_at {
+                    return None;
+                }
+                let epoch_s = epoch_s.max(MIN_EPOCH_S);
+                while self.next_epoch_at <= now {
+                    self.next_epoch_at += epoch_s;
+                }
+                let online = self.estimator.online(now);
+                let load = PlannerInput::from_load(&online);
+                let target = min_strict_pool(pm, slo, &load, total, headroom)
+                    .clamp(1, total.saturating_sub(1).max(1));
+                let rates = (online.rate, self.estimator.offline(now).rate);
+                Some(self.record_plan(now, n_relaxed, n_strict, target, rates))
+            }
+            PoolPolicy::Reactive { up, down, cooldown_s } => {
+                if now < self.next_check_at {
+                    return None;
+                }
+                self.next_check_at = now + REACTIVE_CHECK_S;
+                if now < self.cooldown_until {
+                    return None;
+                }
+                let online = self.estimator.online(now);
+                let load = PlannerInput::from_load(&online);
+                // One roofline capacity probe serves both threshold
+                // checks (`strict_pressure` would rerun its binary search
+                // per call; per-instance capacity does not depend on n).
+                let concurrent = load.concurrent_decodes(slo.tpot);
+                let per_inst = max_slo_batch(pm, load.mean_kv(), slo.tpot);
+                let pressure =
+                    |n: usize| pressure_with_capacity(concurrent, per_inst, n);
+                let target = if pressure(n_strict) > up && n_relaxed > 1 {
+                    n_strict + 1
+                } else if n_strict > 1 && pressure(n_strict - 1) < down {
+                    n_strict - 1
+                } else {
+                    n_strict
+                };
+                if target == n_strict {
+                    return None;
+                }
+                self.cooldown_until = now + cooldown_s;
+                let rates = (online.rate, self.estimator.offline(now).rate);
+                Some(self.record_plan(now, n_relaxed, n_strict, target, rates))
+            }
+        }
+    }
+
+    fn record_plan(
+        &mut self,
+        now: f64,
+        n_relaxed: usize,
+        n_strict: usize,
+        target: usize,
+        (est_online_rate, est_offline_rate): (f64, f64),
+    ) -> PoolPlan {
+        self.accrue_stranded(now, n_strict);
+        self.planned_strict = Some(target);
+        // `plans` doubles as the monotone epoch counter of PoolPlan.
+        self.plans += 1;
+        self.epochs.push(PoolEpoch {
+            at: now,
+            relaxed: n_relaxed,
+            strict: n_strict,
+            planned_strict: target,
+            est_online_rate,
+            est_offline_rate,
+        });
+        PoolPlan {
+            epoch: self.plans,
+            strict_target: target,
+            relaxed_target: n_relaxed + n_strict - target,
+        }
+    }
+
+    /// Integrate stranded capacity up to `now` at the pre-change strict
+    /// size, then move the integration cursor.
+    fn accrue_stranded(&mut self, now: f64, n_strict: usize) {
+        if let Some(p) = self.planned_strict {
+            self.stranded_acc += (now - self.stranded_last_t).max(0.0)
+                * n_strict.abs_diff(p) as f64;
+        }
+        self.stranded_last_t = now;
+    }
+
+    /// A role flip completed (`strict_before` = strict-pool size *before*
+    /// the flip, for the stranded-capacity integral).
+    pub fn on_flip(&mut self, now: f64, strict_before: usize) {
+        self.accrue_stranded(now, strict_before);
+        self.flips += 1;
+    }
+
+    /// The warm step of the in-flight transition finished: the transition
+    /// is complete, record its drain-to-warm duration.
+    pub fn on_warm_done(&mut self, now: f64) {
+        if let Some(t) = self.transition.take() {
+            self.transition_s.push((now - t.started).max(0.0));
+        }
+    }
+
+    /// Snapshot the pool-manager metrics at `now`.
+    pub fn report(
+        &self,
+        now: f64,
+        n_relaxed: usize,
+        n_strict: usize,
+    ) -> PoolReport {
+        let mut stranded = self.stranded_acc;
+        if let Some(p) = self.planned_strict {
+            stranded += (now - self.stranded_last_t).max(0.0)
+                * n_strict.abs_diff(p) as f64;
+        }
+        PoolReport {
+            policy: self.policy.to_string(),
+            plans: self.plans,
+            flips: self.flips,
+            epochs: self.epochs.clone(),
+            transition_s: Summary::of(&self.transition_s),
+            stranded_instance_s: stranded,
+            final_relaxed: n_relaxed,
+            final_strict: n_strict,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+    use crate::instance::PoolRole;
+
+    fn setup() -> (PerfModel, SloSpec) {
+        let cfg = ServingConfig::preset_7b();
+        (PerfModel::new(cfg.model, cfg.hardware), cfg.slo)
+    }
+
+    fn feed(pm: &mut PoolManager, rate: f64, t0: f64, t1: f64) {
+        let dt = 1.0 / rate;
+        let mut t = t0;
+        while t < t1 {
+            pm.observe_arrival(t, Class::Online, 1500, 100);
+            t += dt;
+        }
+    }
+
+    #[test]
+    fn static_policy_never_plans() {
+        let (perf, slo) = setup();
+        let mut mgr = PoolManager::new(PoolPolicy::Static);
+        feed(&mut mgr, 5.0, 0.0, 100.0);
+        assert!(mgr.replan(1000.0, &perf, &slo, 2, 2).is_none());
+        assert_eq!(mgr.report(1000.0, 2, 2).plans, 0);
+    }
+
+    #[test]
+    fn periodic_plans_on_epoch_boundaries_only() {
+        let (perf, slo) = setup();
+        let mut mgr = PoolManager::new(PoolPolicy::Periodic {
+            epoch_s: 60.0,
+            headroom: 0.15,
+        });
+        feed(&mut mgr, 1.0, 0.0, 59.0);
+        assert!(mgr.replan(59.0, &perf, &slo, 2, 2).is_none());
+        let plan = mgr.replan(61.0, &perf, &slo, 2, 2).expect("epoch due");
+        assert_eq!(plan.strict_target + plan.relaxed_target, 4);
+        assert!(plan.strict_target >= 1 && plan.strict_target <= 3);
+        // Same epoch is not re-planned.
+        assert!(mgr.replan(61.5, &perf, &slo, 2, 2).is_none());
+        let rep = mgr.report(61.5, 2, 2);
+        assert_eq!(rep.plans, 1);
+        assert_eq!(rep.epochs.len(), 1);
+    }
+
+    #[test]
+    fn zero_epoch_struct_literal_does_not_hang() {
+        let (perf, slo) = setup();
+        let mut mgr = PoolManager::new(PoolPolicy::Periodic {
+            epoch_s: 0.0,
+            headroom: 0.15,
+        });
+        feed(&mut mgr, 1.0, 0.0, 5.0);
+        // Must terminate (clamped epoch) and produce a plan.
+        assert!(mgr.replan(5.0, &perf, &slo, 2, 2).is_some());
+    }
+
+    #[test]
+    fn reactive_respects_cooldown_and_thresholds() {
+        let (perf, slo) = setup();
+        let mut mgr = PoolManager::new(PoolPolicy::Reactive {
+            up: 0.85,
+            down: 0.5,
+            cooldown_s: 30.0,
+        });
+        // Massive online load: pressure far above `up`.
+        feed(&mut mgr, 150.0, 0.0, 120.0);
+        let plan = mgr
+            .replan(120.0, &perf, &slo, 3, 1)
+            .expect("overload must trigger growth");
+        assert_eq!(plan.strict_target, 2);
+        // Cooldown suppresses the immediate follow-up.
+        assert!(mgr.replan(121.5, &perf, &slo, 3, 1).is_none());
+        // After the cooldown it may move again.
+        assert!(mgr.replan(151.0, &perf, &slo, 2, 2).is_some());
+    }
+
+    #[test]
+    fn reactive_shrinks_an_idle_overprovisioned_pool() {
+        let (perf, slo) = setup();
+        let mut mgr = PoolManager::new(PoolPolicy::DEFAULT_REACTIVE);
+        // Trickle load, huge strict pool.
+        feed(&mut mgr, 0.1, 0.0, 100.0);
+        let plan = mgr
+            .replan(100.0, &perf, &slo, 1, 4)
+            .expect("idle overprovision must trigger shrink");
+        assert_eq!(plan.strict_target, 3);
+    }
+
+    #[test]
+    fn stranded_capacity_integrates_plan_gap() {
+        let (perf, slo) = setup();
+        let mut mgr = PoolManager::new(PoolPolicy::Periodic {
+            epoch_s: 10.0,
+            headroom: 0.15,
+        });
+        // Load that wants more than one strict instance.
+        feed(&mut mgr, 300.0, 0.0, 20.0);
+        let plan = mgr.replan(20.0, &perf, &slo, 3, 1).expect("due");
+        assert!(plan.strict_target > 1, "target {}", plan.strict_target);
+        let gap = (plan.strict_target - 1) as f64;
+        // 5 s at the wrong split before any flip.
+        let rep = mgr.report(25.0, 3, 1);
+        assert!((rep.stranded_instance_s - 5.0 * gap).abs() < 1e-9);
+        // A flip toward the plan shrinks the per-second gap.
+        mgr.transition =
+            Some(Transition::drain(PoolRole::Relaxed, 2, 25.0));
+        mgr.on_flip(26.0, 1);
+        mgr.on_warm_done(27.0);
+        let rep = mgr.report(27.0, 2, 2);
+        assert_eq!(rep.flips, 1);
+        assert_eq!(rep.transition_s.count, 1);
+        assert!((rep.transition_s.mean - 2.0).abs() < 1e-9);
+        let expect = 6.0 * gap + 1.0 * (gap - 1.0);
+        assert!(
+            (rep.stranded_instance_s - expect).abs() < 1e-9,
+            "stranded {} expect {expect}",
+            rep.stranded_instance_s
+        );
+    }
+}

@@ -1,0 +1,248 @@
+//! Roofline-guided capacity planning for the elastic pool manager
+//! (DESIGN.md §3.6).
+//!
+//! The planner answers one question at every re-plan: *how many strict
+//! instances does the estimated online load need to meet its TPOT SLO?*
+//! It converts the burst-corrected arrival rate into an expected number of
+//! concurrent online decodes via Little's law (`L = λ · W`, with the
+//! per-request decode time `W` bounded by `output_len × TPOT`), splits
+//! that residency evenly over a candidate strict pool, and asks the §3.3
+//! roofline model whether the per-instance decode batch stays inside the
+//! (headroom-reduced) TPOT budget and the instance's KV capacity. The
+//! minimum feasible pool size wins; the remainder serves the relaxed pool.
+//!
+//! Monotonicity (property-tested): the roofline's decode latency is
+//! monotone in batch size and KV tokens, so a larger estimated load can
+//! never yield a *smaller* strict pool.
+
+use crate::config::SloSpec;
+use crate::perfmodel::{BatchStats, PerfModel};
+
+use super::estimator::ClassLoad;
+
+/// The load figures one plan is computed from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlannerInput {
+    /// Burst-corrected online arrival rate (req/s).
+    pub online_rate: f64,
+    /// Mean online prompt length (tokens).
+    pub mean_prompt: f64,
+    /// Mean online output length (tokens).
+    pub mean_output: f64,
+}
+
+impl PlannerInput {
+    pub fn from_load(l: &ClassLoad) -> Self {
+        PlannerInput {
+            online_rate: l.rate,
+            mean_prompt: l.mean_prompt,
+            mean_output: l.mean_output,
+        }
+    }
+
+    /// Expected concurrent online decodes (Little's law at the TPOT bound:
+    /// a request meeting its SLO resides at most `output × tpot` seconds).
+    pub fn concurrent_decodes(&self, tpot: f64) -> f64 {
+        (self.online_rate * self.mean_output * tpot).max(0.0)
+    }
+
+    /// Mean resident KV per online decode (prompt + half the output, the
+    /// time-average of linear KV growth).
+    pub fn mean_kv(&self) -> f64 {
+        (self.mean_prompt + 0.5 * self.mean_output).max(1.0)
+    }
+}
+
+/// Is a strict pool of `n` instances sufficient for `concurrent` decodes
+/// of `mean_kv` tokens each within `budget` seconds per token?
+fn pool_feasible(
+    pm: &PerfModel,
+    n: usize,
+    concurrent: f64,
+    mean_kv: f64,
+    budget: f64,
+) -> bool {
+    let batch = (concurrent / n as f64).ceil().max(1.0) as usize;
+    let kv_tokens = (batch as f64 * mean_kv).ceil() as usize;
+    kv_tokens <= pm.max_kv_tokens()
+        && pm.decode_latency(BatchStats::new(batch, kv_tokens)) <= budget
+}
+
+/// Minimum strict-pool size (out of `total` instances) meeting the TPOT
+/// SLO at the estimated load, with `headroom` of the budget held back.
+/// Always leaves at least one instance per pool: the result is in
+/// `1..=total-1` (with `total` clamped to ≥ 2).
+pub fn min_strict_pool(
+    pm: &PerfModel,
+    slo: &SloSpec,
+    load: &PlannerInput,
+    total: usize,
+    headroom: f64,
+) -> usize {
+    let total = total.max(2);
+    let budget = slo.tpot * (1.0 - headroom.clamp(0.0, 0.9));
+    let concurrent = load.concurrent_decodes(slo.tpot);
+    if concurrent <= 0.0 {
+        return 1;
+    }
+    let mean_kv = load.mean_kv();
+    for n in 1..total {
+        if pool_feasible(pm, n, concurrent, mean_kv, budget) {
+            return n;
+        }
+    }
+    // Even `total - 1` misses the SLO: give online everything we can
+    // while keeping one prefill instance.
+    total - 1
+}
+
+/// Largest per-instance decode batch of `mean_kv`-token requests that
+/// stays within `budget` seconds — the strict pool's per-instance
+/// capacity figure the `Reactive` trigger compares pressure against.
+/// Returns 0 when even a single request misses the budget.
+pub fn max_slo_batch(pm: &PerfModel, mean_kv: f64, budget: f64) -> usize {
+    let mean_kv = mean_kv.max(1.0);
+    let fits = |b: usize| -> bool {
+        let kv = (b as f64 * mean_kv).ceil() as usize;
+        kv <= pm.max_kv_tokens()
+            && pm.decode_latency(BatchStats::new(b, kv)) <= budget
+    };
+    if !fits(1) {
+        return 0;
+    }
+    // Exponential probe, then binary search on the monotone predicate.
+    let mut lo = 1usize;
+    let mut hi = 2usize;
+    while hi < (1 << 22) && fits(hi) {
+        lo = hi;
+        hi *= 2;
+    }
+    while lo + 1 < hi {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Decode pressure given a precomputed per-instance capacity — the one
+/// definition both [`strict_pressure`] and the `Reactive` trigger share
+/// (the trigger hoists `max_slo_batch` out of its two threshold checks).
+pub fn pressure_with_capacity(
+    concurrent: f64,
+    per_inst: usize,
+    n: usize,
+) -> f64 {
+    if concurrent <= 0.0 {
+        0.0
+    } else if per_inst == 0 {
+        f64::INFINITY
+    } else {
+        concurrent / (n.max(1) * per_inst) as f64
+    }
+}
+
+/// Estimated decode pressure on a strict pool of `n` instances: expected
+/// concurrent decodes over pool capacity. > 1 means the SLO is predicted
+/// to fail; the `Reactive` policy's thresholds bracket it.
+pub fn strict_pressure(
+    pm: &PerfModel,
+    slo: &SloSpec,
+    load: &PlannerInput,
+    n: usize,
+) -> f64 {
+    pressure_with_capacity(
+        load.concurrent_decodes(slo.tpot),
+        max_slo_batch(pm, load.mean_kv(), slo.tpot),
+        n,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+
+    fn setup() -> (PerfModel, SloSpec) {
+        let cfg = ServingConfig::preset_7b();
+        (PerfModel::new(cfg.model, cfg.hardware), cfg.slo)
+    }
+
+    fn load(rate: f64) -> PlannerInput {
+        PlannerInput {
+            online_rate: rate,
+            mean_prompt: 1500.0,
+            mean_output: 100.0,
+        }
+    }
+
+    #[test]
+    fn idle_load_needs_one_strict_instance() {
+        let (pm, slo) = setup();
+        assert_eq!(min_strict_pool(&pm, &slo, &load(0.0), 8, 0.15), 1);
+    }
+
+    #[test]
+    fn heavier_load_grows_the_plan() {
+        let (pm, slo) = setup();
+        let small = min_strict_pool(&pm, &slo, &load(0.5), 8, 0.15);
+        let big = min_strict_pool(&pm, &slo, &load(500.0), 8, 0.15);
+        assert!(big >= small);
+        assert!(big <= 7, "must leave a relaxed instance, got {big}");
+        assert!(small >= 1);
+    }
+
+    #[test]
+    fn monotone_in_rate() {
+        let (pm, slo) = setup();
+        let mut last = 0usize;
+        for rate in [0.0, 0.2, 1.0, 3.0, 10.0, 40.0, 200.0, 1000.0] {
+            let n = min_strict_pool(&pm, &slo, &load(rate), 6, 0.2);
+            assert!(n >= last, "rate {rate}: {n} < {last}");
+            last = n;
+        }
+    }
+
+    #[test]
+    fn headroom_never_shrinks_the_plan() {
+        let (pm, slo) = setup();
+        for rate in [1.0, 10.0, 100.0] {
+            let loose = min_strict_pool(&pm, &slo, &load(rate), 8, 0.0);
+            let tight = min_strict_pool(&pm, &slo, &load(rate), 8, 0.5);
+            assert!(tight >= loose, "rate {rate}: {tight} < {loose}");
+        }
+    }
+
+    #[test]
+    fn max_slo_batch_is_positive_and_bounded() {
+        let (pm, slo) = setup();
+        let b = max_slo_batch(&pm, 1550.0, slo.tpot);
+        assert!(b >= 1, "7B on a 910c must fit one decode in the SLO");
+        // And the next batch over the answer really misses the budget
+        // or the KV capacity.
+        let kv = ((b + 1) as f64 * 1550.0).ceil() as usize;
+        let over = kv > pm.max_kv_tokens()
+            || pm.decode_latency(BatchStats::new(b + 1, kv)) > slo.tpot;
+        assert!(over, "max_slo_batch {b} is not maximal");
+        // Impossible budget -> zero.
+        assert_eq!(max_slo_batch(&pm, 1550.0, 1e-9), 0);
+    }
+
+    #[test]
+    fn pressure_scales_with_load_and_pool() {
+        let (pm, slo) = setup();
+        let p1 = strict_pressure(&pm, &slo, &load(2.0), 1);
+        let p2 = strict_pressure(&pm, &slo, &load(4.0), 1);
+        let p1_wide = strict_pressure(&pm, &slo, &load(2.0), 2);
+        assert!(p2 > p1);
+        assert!((p1_wide - p1 / 2.0).abs() < 1e-12);
+        assert_eq!(strict_pressure(&pm, &slo, &load(0.0), 1), 0.0);
+        // The shared low-level form handles the edge cases directly.
+        assert_eq!(pressure_with_capacity(0.0, 10, 1), 0.0);
+        assert_eq!(pressure_with_capacity(5.0, 0, 1), f64::INFINITY);
+        assert_eq!(pressure_with_capacity(10.0, 5, 0), 2.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! The drain → flip → warm role-transition state machine (DESIGN.md §3.6).
+//!
+//! A repartition never teleports an instance between pools. The tail
+//! instance of the shrinking pool goes through three phases:
+//!
+//! 1. **Drain** — the instance stops admitting new work (routing, gating
+//!    admission, rescue/restore destinations, and migration pulls all skip
+//!    it); resident offline KV streams off through the transport engine
+//!    (rescue / offload — the §3.4.1 recoverable-eviction machinery),
+//!    in-flight *offline* inbound reservations are cancelled, and online
+//!    work — residents and in-flight dispatches — finishes decoding in
+//!    place so no online SLO is violated mid-transition.
+//! 2. **Flip** — the instant the instance is empty it moves to the tail of
+//!    the other pool (`ClusterState::flip_*`; tail-only movement keeps all
+//!    other per-pool indices and `KvHome` entries valid).
+//! 3. **Warm** — the flipped instance runs one `StepKind::Warm` step of
+//!    [`WARMUP_S`] seconds (role-specific runtime re-initialization) before
+//!    serving its new pool; the step occupies the instance, so ordinary
+//!    idleness checks keep work away without special cases.
+//!
+//! At most one transition is in flight at a time; the pool manager simply
+//! re-plans again if the load still warrants more movement.
+
+use crate::instance::PoolRole;
+
+/// Warm-up duration after a flip (s): role-specific runtime state —
+/// scheduler caches, allocator pools, watermark re-init — modeled as one
+/// fixed-cost step on both substrates.
+pub const WARMUP_S: f64 = 1.0;
+
+/// Phase of the in-flight role transition. (The flip itself is
+/// instantaneous — it happens on the Drain→Warm edge.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransitionPhase {
+    /// Emptying the instance in its old pool.
+    Drain,
+    /// Warm step running in the new pool.
+    Warm,
+}
+
+/// One in-flight role transition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transition {
+    /// Pool the instance is leaving.
+    pub from: PoolRole,
+    /// Index in the source pool while draining; index in the destination
+    /// pool once flipped (both are the pool tail).
+    pub inst: usize,
+    pub phase: TransitionPhase,
+    /// Drain start time (transition duration is measured from here to the
+    /// end of the warm step).
+    pub started: f64,
+}
+
+impl Transition {
+    pub fn drain(from: PoolRole, inst: usize, now: f64) -> Self {
+        Transition {
+            from,
+            inst,
+            phase: TransitionPhase::Drain,
+            started: now,
+        }
+    }
+
+    /// The role the instance is moving to.
+    pub fn to(&self) -> PoolRole {
+        self.from.other()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transition_targets_other_pool() {
+        let t = Transition::drain(PoolRole::Relaxed, 3, 12.5);
+        assert_eq!(t.to(), PoolRole::Strict);
+        assert_eq!(t.phase, TransitionPhase::Drain);
+        assert_eq!(t.started, 12.5);
+        let t = Transition::drain(PoolRole::Strict, 1, 0.0);
+        assert_eq!(t.to(), PoolRole::Relaxed);
+    }
+}

@@ -13,7 +13,10 @@
 //!   executor track per-request resources (real KV buffers, staging copies,
 //!   logs, metrics): [`Action::TransferStart`], [`Action::TransferDone`],
 //!   [`Action::TransferCancel`], [`Action::Evict`], [`Action::Migrate`],
-//!   [`Action::Admit`], [`Action::Complete`].
+//!   [`Action::Admit`], [`Action::Complete`], and the elastic pool
+//!   manager's plan timeline — [`Action::RepartitionPlan`] and
+//!   [`Action::RoleChange`] (the timed warm-up after a flip rides on an
+//!   ordinary [`Action::StartStep`] with [`StepKind::Warm`]).
 //!
 //! The stream of actions is the core's *observable behaviour*: two executors
 //! driving the same core over the same trace must produce identical streams
@@ -23,9 +26,21 @@
 //! lives in the core; executors only own the clock and the execution
 //! substrate.
 
-use crate::instance::StepKind;
+use crate::instance::{PoolRole, StepKind};
 use crate::request::RequestId;
 use crate::transport::{JobId, TransferKind};
+
+/// Phase of an elastic role transition (DESIGN.md §3.6) announced by
+/// [`Action::RoleChange`]: drain → flip → warm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RolePhase {
+    /// The instance stopped admitting new work and is emptying.
+    Drain,
+    /// The drained instance moved to the tail of its new pool.
+    Flip,
+    /// The warm-up step finished; the instance now serves its new pool.
+    Warm,
+}
 
 /// Which pool instance an action refers to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -108,6 +123,29 @@ pub enum Action {
     /// The gating cost model (§3.4.2) admitted an offline request for
     /// (re-)prefill on relaxed instance `inst`.
     Admit { inst: usize, req: RequestId },
+    /// The elastic pool manager re-planned the strict/relaxed split
+    /// (notification; `epoch` is the monotone plan counter). Targets always
+    /// satisfy `relaxed_target + strict_target ==` current cluster size —
+    /// repartitioning repurposes instances, it never adds or removes them.
+    RepartitionPlan {
+        epoch: u64,
+        relaxed_current: usize,
+        strict_current: usize,
+        relaxed_target: usize,
+        strict_target: usize,
+    },
+    /// A role transition advanced (notification). `inst` names the
+    /// instance in the pool it belongs to *when the action is emitted*:
+    /// its old pool for [`RolePhase::Drain`], its new pool for
+    /// [`RolePhase::Flip`] and [`RolePhase::Warm`]. `to` is the role the
+    /// instance is moving to (constant across the three phases). The timed
+    /// warm-up itself arrives as an ordinary [`Action::StartStep`] with
+    /// [`StepKind::Warm`], so executors need no extra work-order type.
+    RoleChange {
+        phase: RolePhase,
+        inst: InstanceRef,
+        to: PoolRole,
+    },
     /// `req` produced its final token (or was sacrificed under
     /// [`crate::coordinator::OverloadMode::Shed`]) and left the cluster.
     Complete { req: RequestId },
@@ -119,6 +157,8 @@ impl Action {
         match self {
             Action::StartStep { .. } => None,
             Action::Preempt { .. } => None,
+            Action::RepartitionPlan { .. } => None,
+            Action::RoleChange { .. } => None,
             Action::Evict { req, .. }
             | Action::Migrate { req, .. }
             | Action::TransferStart { req, .. }
@@ -166,5 +206,20 @@ mod tests {
             seq: 4,
         };
         assert_eq!(step.request(), None);
+        // Pool-manager actions are cluster-level, not per-request.
+        let plan = Action::RepartitionPlan {
+            epoch: 1,
+            relaxed_current: 2,
+            strict_current: 2,
+            relaxed_target: 1,
+            strict_target: 3,
+        };
+        assert_eq!(plan.request(), None);
+        let role = Action::RoleChange {
+            phase: RolePhase::Drain,
+            inst: InstanceRef::Relaxed(1),
+            to: PoolRole::Strict,
+        };
+        assert_eq!(role.request(), None);
     }
 }

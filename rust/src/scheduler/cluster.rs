@@ -2,11 +2,19 @@
 //! the two latency-constraint pools, the shared offline backlog, per-request
 //! KV residency, and the load-balancing router. Pure state; all transitions
 //! happen in [`super::SchedulerCore`], all time in an [`super::Executor`].
+//!
+//! Pool membership is runtime state (DESIGN.md §3.6): `relaxed` and
+//! `strict` hold the *same* unified [`Instance`] type, and the elastic pool
+//! manager moves drained instances between the two vectors at the tail
+//! ([`ClusterState::flip_relaxed_to_strict`] /
+//! [`ClusterState::flip_strict_to_relaxed`]), so per-pool indices of every
+//! other instance — and therefore every [`KvHome`] entry — stay stable
+//! across repartitions.
 
 use std::collections::VecDeque;
 
 use crate::coordinator::Router;
-use crate::instance::{RelaxedInstance, StrictInstance};
+use crate::instance::{Instance, PoolRole};
 use crate::perfmodel::BatchStats;
 use crate::request::{Request, RequestId};
 
@@ -29,8 +37,8 @@ pub struct ClusterState {
     /// Per-request KV location index (O(1) residency checks on the decode
     /// hot path).
     pub kv_home: Vec<KvHome>,
-    pub relaxed: Vec<RelaxedInstance>,
-    pub strict: Vec<StrictInstance>,
+    pub relaxed: Vec<Instance>,
+    pub strict: Vec<Instance>,
     /// Offline requests waiting for (re-)prefill, shared across the pool.
     pub offline_backlog: VecDeque<RequestId>,
     /// Offline requests whose KV sits in the host staging buffer
@@ -41,11 +49,31 @@ pub struct ClusterState {
     /// Per-strict-instance (batch stats, all-included) of the running step,
     /// consumed by the Algorithm 1 decision at the step boundary.
     pub strict_step_meta: Vec<Option<(BatchStats, bool)>>,
+    /// Cluster-global step sequence counter. Seq ids are unique across
+    /// *all* instances and all time — so a stale step-end event addressed
+    /// to a pool index that an elastic flip has since vacated (or refilled
+    /// with a different instance) can never coincidentally match a live
+    /// step's seq.
+    pub next_seq: u64,
     /// Per-request time of the recoverable eviction currently being
     /// recovered from (NaN = none); cleared when decode resumes.
     pub evict_started: Vec<f64>,
     /// Preemption-to-restart latencies of recovered evictions (s).
     pub restart_latencies: Vec<f64>,
+    // ---- role-scoped accounting across flips ----
+    /// Busy seconds earned by instances *while serving a role they have
+    /// since flipped away from* (an instance's live counters are retired
+    /// here and zeroed at each flip, so per-role sums never mix roles).
+    pub retired_relaxed_busy_s: f64,
+    pub retired_strict_busy_s: f64,
+    pub retired_strict_steps: u64,
+    pub retired_strict_offline_tokens: u64,
+    /// Time-integrated per-role instance counts (instance-seconds), accrued
+    /// at every role change via [`ClusterState::accrue_role_seconds`] —
+    /// the honest utilization denominator under elastic repartitioning.
+    pub relaxed_inst_s: f64,
+    pub strict_inst_s: f64,
+    last_role_change_t: f64,
     // ---- counters ----
     /// Online arrivals truncating a running offline prefill (§3.4.1).
     pub preemptions: u64,
@@ -81,10 +109,14 @@ impl ClusterState {
         let n_relaxed = n_relaxed.max(1);
         let n_strict = n_strict.max(1);
         let relaxed = (0..n_relaxed)
-            .map(|i| RelaxedInstance::new(i, kv_capacity_tokens, block_tokens))
+            .map(|i| {
+                Instance::new(i, PoolRole::Relaxed, kv_capacity_tokens, block_tokens)
+            })
             .collect();
         let strict = (0..n_strict)
-            .map(|i| StrictInstance::new(i, kv_capacity_tokens, block_tokens))
+            .map(|i| {
+                Instance::new(i, PoolRole::Strict, kv_capacity_tokens, block_tokens)
+            })
             .collect();
         ClusterState {
             kv_home: vec![KvHome::None; requests.len()],
@@ -96,6 +128,14 @@ impl ClusterState {
             staged_offline: VecDeque::new(),
             router: Router::new(n_relaxed, n_strict),
             strict_step_meta: vec![None; n_strict],
+            next_seq: 0,
+            retired_relaxed_busy_s: 0.0,
+            retired_strict_busy_s: 0.0,
+            retired_strict_steps: 0,
+            retired_strict_offline_tokens: 0,
+            relaxed_inst_s: 0.0,
+            strict_inst_s: 0.0,
+            last_role_change_t: 0.0,
             restart_latencies: Vec::new(),
             preemptions: 0,
             evictions: 0,
@@ -106,6 +146,83 @@ impl ClusterState {
         }
     }
 
+    /// Cluster size — invariant across repartitions (property-tested).
+    pub fn total_instances(&self) -> usize {
+        self.relaxed.len() + self.strict.len()
+    }
+
+    /// Allocate a cluster-unique step sequence id.
+    pub fn alloc_seq(&mut self) -> u64 {
+        self.next_seq += 1;
+        self.next_seq
+    }
+
+    /// Integrate per-role instance-seconds up to `now`. Called by the core
+    /// immediately before every role flip (and by metrics readers via
+    /// [`ClusterState::role_instance_seconds`]).
+    pub fn accrue_role_seconds(&mut self, now: f64) {
+        let dt = (now - self.last_role_change_t).max(0.0);
+        self.relaxed_inst_s += dt * self.relaxed.len() as f64;
+        self.strict_inst_s += dt * self.strict.len() as f64;
+        self.last_role_change_t = now;
+    }
+
+    /// Per-role instance-seconds over `[0, until]` (read-only projection of
+    /// the accrual). With no flips this is exactly `until × pool size`.
+    pub fn role_instance_seconds(&self, until: f64) -> (f64, f64) {
+        let dt = (until - self.last_role_change_t).max(0.0);
+        (
+            self.relaxed_inst_s + dt * self.relaxed.len() as f64,
+            self.strict_inst_s + dt * self.strict.len() as f64,
+        )
+    }
+
+    /// Move the drained tail relaxed instance into the strict pool;
+    /// returns its new strict index. Tail-only movement keeps every other
+    /// per-pool index (and `KvHome`) valid. The instance's relaxed-role
+    /// busy time is retired into the cluster accumulator and its counters
+    /// zeroed, so per-role sums never mix roles across flips.
+    pub fn flip_relaxed_to_strict(&mut self) -> usize {
+        assert!(self.relaxed.len() > 1, "cannot flip the last relaxed instance");
+        let mut inst = self.relaxed.pop().expect("non-empty");
+        assert!(inst.drained_for_flip(), "flip of a non-drained instance");
+        self.retired_relaxed_busy_s += inst.busy_s;
+        inst.busy_s = 0.0;
+        // Strict-role counters were zeroed when it last left that role.
+        debug_assert_eq!(inst.steps, 0);
+        let new_idx = self.strict.len();
+        inst.id = new_idx;
+        inst.role = PoolRole::Strict;
+        inst.draining = false;
+        self.strict.push(inst);
+        self.strict_step_meta.push(None);
+        self.router.flip_relaxed_to_strict();
+        new_idx
+    }
+
+    /// Move the drained tail strict instance into the relaxed pool;
+    /// returns its new relaxed index (strict-role counters retire like
+    /// [`ClusterState::flip_relaxed_to_strict`]'s).
+    pub fn flip_strict_to_relaxed(&mut self) -> usize {
+        assert!(self.strict.len() > 1, "cannot flip the last strict instance");
+        let mut inst = self.strict.pop().expect("non-empty");
+        assert!(inst.drained_for_flip(), "flip of a non-drained instance");
+        self.retired_strict_busy_s += inst.busy_s;
+        self.retired_strict_steps += inst.steps;
+        self.retired_strict_offline_tokens += inst.offline_decode_tokens;
+        inst.busy_s = 0.0;
+        inst.steps = 0;
+        inst.offline_decode_tokens = 0;
+        self.strict_step_meta.pop();
+        let new_idx = self.relaxed.len();
+        inst.id = new_idx;
+        inst.role = PoolRole::Relaxed;
+        inst.draining = false;
+        self.relaxed.push(inst);
+        self.router.flip_strict_to_relaxed();
+        new_idx
+    }
+
     /// No queued, running, or in-flight work anywhere in the cluster.
     /// (The backlog may legitimately stay non-empty when gating keeps
     /// rejecting; executors treat "drained" as a stop condition only once
@@ -113,39 +230,39 @@ impl ClusterState {
     pub fn drained(&self) -> bool {
         self.offline_backlog.is_empty()
             && self.staged_offline.is_empty()
-            && self.relaxed.iter().all(|r| {
-                r.step.is_none()
-                    && r.online_queue.is_empty()
-                    && r.offline_decoding.is_empty()
-                    && r.inbound.is_empty()
-            })
-            && self.strict.iter().all(|s| {
-                s.step.is_none()
-                    && s.online.is_empty()
-                    && s.offline.is_empty()
-                    && s.inbound.is_empty()
-                    && s.waiting_for_space.is_empty()
-            })
+            && self
+                .relaxed
+                .iter()
+                .chain(&self.strict)
+                .all(|i| i.drained_for_flip())
     }
 
-    /// Aggregate busy seconds over the strict pool.
+    /// Aggregate busy seconds earned in the strict role (live + retired).
     pub fn strict_busy_s(&self) -> f64 {
-        self.strict.iter().map(|s| s.busy_s).sum()
+        self.retired_strict_busy_s
+            + self.strict.iter().map(|s| s.busy_s).sum::<f64>()
     }
 
-    /// Aggregate busy seconds over the relaxed pool.
+    /// Aggregate busy seconds earned in the relaxed role (live + retired).
     pub fn relaxed_busy_s(&self) -> f64 {
-        self.relaxed.iter().map(|r| r.busy_s).sum()
+        self.retired_relaxed_busy_s
+            + self.relaxed.iter().map(|r| r.busy_s).sum::<f64>()
     }
 
     /// Total strict decode iterations executed so far.
     pub fn strict_steps(&self) -> u64 {
-        self.strict.iter().map(|s| s.steps).sum()
+        self.retired_strict_steps
+            + self.strict.iter().map(|s| s.steps).sum::<u64>()
     }
 
     /// Offline tokens decoded on strict instances (mix-in volume).
     pub fn strict_offline_tokens(&self) -> u64 {
-        self.strict.iter().map(|s| s.offline_decode_tokens).sum()
+        self.retired_strict_offline_tokens
+            + self
+                .strict
+                .iter()
+                .map(|s| s.offline_decode_tokens)
+                .sum::<u64>()
     }
 }
 
@@ -188,5 +305,67 @@ mod tests {
         c.offline_backlog.clear();
         c.strict[0].online.push(1);
         assert!(!c.drained());
+    }
+
+    #[test]
+    fn role_seconds_integrate_across_flips() {
+        let mut c = ClusterState::new(reqs(2), 2, 1, 1000, 16);
+        c.accrue_role_seconds(10.0); // 10 s at 2r/1s
+        c.flip_relaxed_to_strict();
+        let (r, s) = c.role_instance_seconds(30.0); // +20 s at 1r/2s
+        assert!((r - (10.0 * 2.0 + 20.0)).abs() < 1e-9, "relaxed {r}");
+        assert!((s - (10.0 + 20.0 * 2.0)).abs() < 1e-9, "strict {s}");
+        // Static clusters reduce to duration × size.
+        let c2 = ClusterState::new(reqs(2), 2, 1, 1000, 16);
+        assert_eq!(c2.role_instance_seconds(50.0), (100.0, 50.0));
+    }
+
+    #[test]
+    fn flips_retire_role_scoped_counters() {
+        let mut c = ClusterState::new(reqs(2), 2, 1, 1000, 16);
+        c.relaxed[1].busy_s = 7.0;
+        c.flip_relaxed_to_strict();
+        // Relaxed busy stays attributed to the relaxed role...
+        assert_eq!(c.relaxed_busy_s(), 7.0);
+        // ...and the flipped instance starts its strict life at zero.
+        assert_eq!(c.strict_busy_s(), 0.0);
+        c.strict[1].busy_s = 3.0;
+        c.strict[1].steps = 5;
+        c.strict[1].offline_decode_tokens = 11;
+        c.flip_strict_to_relaxed();
+        assert_eq!(c.strict_busy_s(), 3.0);
+        assert_eq!(c.strict_steps(), 5);
+        assert_eq!(c.strict_offline_tokens(), 11);
+        assert_eq!(c.relaxed_busy_s(), 7.0);
+    }
+
+    #[test]
+    fn flips_conserve_instances_and_update_roles() {
+        let mut c = ClusterState::new(reqs(2), 2, 1, 1000, 16);
+        assert_eq!(c.total_instances(), 3);
+        let idx = c.flip_relaxed_to_strict();
+        assert_eq!(idx, 1);
+        assert_eq!(c.relaxed.len(), 1);
+        assert_eq!(c.strict.len(), 2);
+        assert_eq!(c.total_instances(), 3);
+        assert_eq!(c.strict[1].role, PoolRole::Strict);
+        assert_eq!(c.strict[1].id, 1);
+        assert_eq!(c.strict_step_meta.len(), 2);
+        assert_eq!(c.router.strict_count(), 2);
+        // And back.
+        let idx = c.flip_strict_to_relaxed();
+        assert_eq!(idx, 1);
+        assert_eq!(c.relaxed.len(), 2);
+        assert_eq!(c.relaxed[1].role, PoolRole::Relaxed);
+        assert_eq!(c.strict_step_meta.len(), 1);
+        assert_eq!(c.total_instances(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn flip_of_busy_instance_panics() {
+        let mut c = ClusterState::new(reqs(2), 2, 1, 1000, 16);
+        c.relaxed[1].online_queue.push_back(0);
+        c.flip_relaxed_to_strict();
     }
 }

@@ -29,9 +29,10 @@ use crate::coordinator::{
     shed_online_overload, Ablation, Candidate, LengthPref, OverloadMode,
     Policy,
 };
-use crate::instance::{Step, StepKind};
-use crate::metrics::{LinkReport, TransportReport};
+use crate::instance::{PoolRole, Step, StepKind};
+use crate::metrics::{LinkReport, PoolReport, TransportReport};
 use crate::perfmodel::{BatchStats, PerfModel};
+use crate::pool::{PoolManager, Transition, TransitionPhase, WARMUP_S};
 use crate::request::{Phase, Request, RequestId};
 use crate::transport::{
     ChunkOrder, JobId, Progress, TransferJob, TransferKind, TransportEngine,
@@ -39,7 +40,7 @@ use crate::transport::{
 use crate::util::rng::Pcg;
 use crate::util::stats::Summary;
 
-use super::action::{Action, InstanceRef};
+use super::action::{Action, InstanceRef, RolePhase};
 use super::cluster::{ClusterState, KvHome};
 
 /// KV tokens kept free on a relaxed instance for a typical online prefill,
@@ -84,6 +85,10 @@ pub struct SchedulerCore {
     /// The KV transport subsystem: every inter-instance (and host-staging)
     /// KV movement is a chunked job on its modeled links.
     pub transport: TransportEngine,
+    /// The elastic pool manager (DESIGN.md §3.6): load estimation,
+    /// Roofline-guided repartition planning, and drain/flip/warm
+    /// role-transition bookkeeping above the per-step decisions.
+    pub pool: PoolManager,
     /// Mix-decode probe randomness (Algorithm 2's starvation avoidance).
     rng: Pcg,
     /// Clock of the most recent entry-point invocation.
@@ -123,11 +128,13 @@ impl SchedulerCore {
             cfg.serving.model.kv_bytes_per_token(),
             cfg.serving.model.layers,
         );
+        let pool = PoolManager::new(cfg.serving.pool);
         SchedulerCore {
             cfg,
             pm,
             cluster,
             transport,
+            pool,
             rng,
             now: 0.0,
             actions: Vec::new(),
@@ -144,7 +151,22 @@ impl SchedulerCore {
     /// A request arrived at time `now`.
     pub fn on_arrival(&mut self, now: f64, rid: RequestId) -> Vec<Action> {
         self.now = now;
+        let (prompt, output) = {
+            let r = &self.cluster.requests[rid as usize];
+            (r.prompt_len, r.output_len)
+        };
+        // Estimate by *scheduled* class: `base P/D` pushes offline
+        // requests through the online/strict path, so for pool sizing they
+        // are online load — classifying by raw `Class` would starve the
+        // strict pool under that policy.
+        let class = if self.scheduled_online(rid) {
+            crate::request::Class::Online
+        } else {
+            crate::request::Class::Offline
+        };
+        self.pool.observe_arrival(now, class, prompt, output);
         self.arrival(rid);
+        self.pool_tick();
         std::mem::take(&mut self.actions)
     }
 
@@ -161,6 +183,7 @@ impl SchedulerCore {
             InstanceRef::Relaxed(i) => self.relaxed_step_end(i, seq),
             InstanceRef::Strict(i) => self.strict_step_end(i, seq),
         }
+        self.pool_tick();
         std::mem::take(&mut self.actions)
     }
 
@@ -187,6 +210,7 @@ impl SchedulerCore {
                 self.land_transfer(job);
             }
         }
+        self.pool_tick();
         std::mem::take(&mut self.actions)
     }
 
@@ -260,6 +284,9 @@ impl SchedulerCore {
     /// (keeping the same online-prefill headroom the gating path reserves).
     fn try_restores(&mut self) {
         for inst in 0..self.cluster.relaxed.len() {
+            if self.cluster.relaxed[inst].draining {
+                continue; // no new admissions while draining for a flip
+            }
             while let Some(&rid) = self.cluster.staged_offline.front() {
                 let need =
                     self.cluster.requests[rid as usize].kv_len() + 1;
@@ -314,6 +341,305 @@ impl SchedulerCore {
         }
     }
 
+    // ------------------------------------------------- elastic pool manager
+
+    /// Pool-manager heartbeat, run at the end of every entry point: advance
+    /// the in-flight role transition, and — when none is in flight — ask
+    /// the planner for a repartition plan and start a transition toward it.
+    /// Epochs are evaluated lazily at entry-point granularity; with
+    /// millisecond-scale step events this is indistinguishable from a
+    /// timer, and it keeps the executors free of pool-specific work orders.
+    fn pool_tick(&mut self) {
+        self.advance_transition();
+        if self.pool.transition.is_some() {
+            return;
+        }
+        let n_relaxed = self.cluster.relaxed.len();
+        let n_strict = self.cluster.strict.len();
+        let slo = self.cfg.serving.slo;
+        let Some(plan) =
+            self.pool.replan(self.now, &self.pm, &slo, n_relaxed, n_strict)
+        else {
+            return;
+        };
+        self.actions.push(Action::RepartitionPlan {
+            epoch: plan.epoch,
+            relaxed_current: n_relaxed,
+            strict_current: n_strict,
+            relaxed_target: plan.relaxed_target,
+            strict_target: plan.strict_target,
+        });
+        // One transition at a time, always from the tail of the shrinking
+        // pool (index stability of everything else); the next re-plan keeps
+        // moving if one step was not enough.
+        if plan.strict_target > n_strict && n_relaxed > 1 {
+            self.start_drain(PoolRole::Relaxed);
+        } else if plan.strict_target < n_strict && n_strict > 1 {
+            self.start_drain(PoolRole::Strict);
+        }
+    }
+
+    /// Begin draining the tail instance of `from` for a role flip.
+    fn start_drain(&mut self, from: PoolRole) {
+        let t = match from {
+            PoolRole::Relaxed => {
+                let i = self.cluster.relaxed.len() - 1;
+                self.cluster.relaxed[i].draining = true;
+                self.cluster.router.set_drain_relaxed(Some(i));
+                self.actions.push(Action::RoleChange {
+                    phase: RolePhase::Drain,
+                    inst: InstanceRef::Relaxed(i),
+                    to: PoolRole::Strict,
+                });
+                Transition::drain(from, i, self.now)
+            }
+            PoolRole::Strict => {
+                let i = self.cluster.strict.len() - 1;
+                self.cluster.strict[i].draining = true;
+                self.cluster.router.set_drain_strict(Some(i));
+                self.actions.push(Action::RoleChange {
+                    phase: RolePhase::Drain,
+                    inst: InstanceRef::Strict(i),
+                    to: PoolRole::Relaxed,
+                });
+                // Online admissions parked on the draining instance would
+                // wait forever (it frees no space for new work): re-route
+                // them to the surviving pool now.
+                self.redispatch_waiting(i);
+                Transition::drain(from, i, self.now)
+            }
+        };
+        self.pool.transition = Some(t);
+        self.drain_evictions(t);
+    }
+
+    /// Move resident offline KV off the draining instance through the
+    /// recoverable-eviction transport paths, and cancel in-flight inbound
+    /// reservations. Online residents are left to finish decoding in place
+    /// — a role flip must never violate an online SLO. Step participants
+    /// are skipped (eviction only acts between iterations); they become
+    /// evictable at the next tick once their step completed and the
+    /// draining instance starts no new decode steps.
+    fn drain_evictions(&mut self, t: Transition) {
+        let i = t.inst;
+        match t.from {
+            PoolRole::Relaxed => {
+                // Cheap no-op on the event-dense common case: the tick
+                // runs at every entry point while draining.
+                if self.cluster.relaxed[i].offline_decoding.is_empty()
+                    && self.cluster.relaxed[i].inbound.is_empty()
+                {
+                    return;
+                }
+                let in_step: Vec<RequestId> = self.cluster.relaxed[i]
+                    .step
+                    .as_ref()
+                    .map(|s| s.participants.clone())
+                    .unwrap_or_default();
+                let victims: Vec<RequestId> = self.cluster.relaxed[i]
+                    .offline_decoding
+                    .iter()
+                    .copied()
+                    .filter(|r| !in_step.contains(r))
+                    .collect();
+                for rid in victims {
+                    self.evict_offline_from_relaxed(i, rid);
+                }
+                let inbound: Vec<RequestId> =
+                    self.cluster.relaxed[i].inbound.clone();
+                for rid in inbound {
+                    self.cancel_inbound_relaxed(i, rid);
+                }
+            }
+            PoolRole::Strict => {
+                if self.cluster.strict[i].offline.is_empty()
+                    && self.cluster.strict[i].inbound.is_empty()
+                {
+                    return;
+                }
+                let in_step: Vec<RequestId> = self.cluster.strict[i]
+                    .step
+                    .as_ref()
+                    .map(|s| s.participants.clone())
+                    .unwrap_or_default();
+                let victims: Vec<RequestId> = self.cluster.strict[i]
+                    .offline
+                    .iter()
+                    .copied()
+                    .filter(|r| !in_step.contains(r))
+                    .collect();
+                for rid in victims {
+                    self.evict_offline_from_strict(i, rid);
+                }
+                // Abort in-flight *offline* inbound streams (Algorithm 1
+                // migrations) so the drain need not wait for — and then
+                // immediately re-evict — KV that is still on the wire.
+                // Online dispatches ride out and decode in place: a
+                // cancelled online KV would force a recompute and risk the
+                // very SLO violation the drain contract forbids.
+                let inbound_offline: Vec<RequestId> = self.cluster.strict[i]
+                    .inbound
+                    .iter()
+                    .copied()
+                    .filter(|&r| !self.scheduled_online(r))
+                    .collect();
+                for rid in inbound_offline {
+                    self.cancel_inbound_strict(i, rid);
+                }
+            }
+        }
+    }
+
+    /// Abort an in-flight offline migration into a draining strict
+    /// instance. Mirrors [`SchedulerCore::cancel_inbound_relaxed`]: the
+    /// transport releases the job exactly once and the request falls back
+    /// to discard-and-recompute.
+    fn cancel_inbound_strict(&mut self, inst: usize, rid: RequestId) {
+        let job = self
+            .transport
+            .job_of(rid)
+            .expect("inbound request has an active job");
+        let cancelled =
+            self.transport.cancel(job).expect("first cancel of active job");
+        self.actions.push(Action::TransferCancel {
+            job: cancelled.id,
+            req: rid,
+        });
+        let kv_len = self.cluster.requests[rid as usize].kv_len();
+        self.cluster.strict[inst].kv.release(rid).expect("reserved kv");
+        self.cluster.strict[inst].inbound.retain(|&r| r != rid);
+        self.cluster.router.decode_done(inst, kv_len);
+        self.cluster.kv_home[rid as usize] = KvHome::None;
+        self.cluster.evict_started[rid as usize] = f64::NAN;
+        self.cluster.requests[rid as usize].evict();
+        self.cluster.offline_backlog.push_back(rid);
+        self.cluster.evictions += 1;
+        self.actions.push(Action::Evict {
+            inst: InstanceRef::Strict(inst),
+            req: rid,
+        });
+        self.kick_idle_relaxed();
+    }
+
+    /// Re-route online requests parked for space on a draining strict
+    /// instance to the rest of the strict pool.
+    fn redispatch_waiting(&mut self, inst: usize) {
+        let waiting: Vec<RequestId> = self.cluster.strict[inst]
+            .waiting_for_space
+            .drain(..)
+            .collect();
+        for rid in waiting {
+            let kv_len = self.cluster.requests[rid as usize].kv_len();
+            // Discharge the load the original routing attributed here.
+            self.cluster.router.decode_done(inst, kv_len);
+            let from = match self.cluster.kv_home[rid as usize] {
+                KvHome::Relaxed(i) => i,
+                _ => unreachable!("waiting request KV must be on relaxed"),
+            };
+            let target = self.cluster.router.route_decode(kv_len);
+            self.try_dispatch_to_strict(rid, from, target);
+        }
+    }
+
+    /// Drive the in-flight transition: keep evicting while draining, and
+    /// flip + begin the warm step the moment the instance is empty.
+    fn advance_transition(&mut self) {
+        let Some(t) = self.pool.transition else {
+            return;
+        };
+        if t.phase != TransitionPhase::Drain {
+            return; // warm completion arrives via the warm step's end
+        }
+        self.drain_evictions(t);
+        let drained = match t.from {
+            PoolRole::Relaxed => {
+                self.cluster.relaxed[t.inst].drained_for_flip()
+            }
+            PoolRole::Strict => self.cluster.strict[t.inst].drained_for_flip(),
+        };
+        if !drained {
+            return;
+        }
+        let strict_before = self.cluster.strict.len();
+        // Close the per-role instance-seconds integral at the old sizes.
+        self.cluster.accrue_role_seconds(self.now);
+        let new_ref = match t.from {
+            PoolRole::Relaxed => {
+                InstanceRef::Strict(self.cluster.flip_relaxed_to_strict())
+            }
+            PoolRole::Strict => {
+                InstanceRef::Relaxed(self.cluster.flip_strict_to_relaxed())
+            }
+        };
+        self.pool.on_flip(self.now, strict_before);
+        let new_idx = match new_ref {
+            InstanceRef::Relaxed(i) | InstanceRef::Strict(i) => i,
+        };
+        self.pool.transition = Some(Transition {
+            from: t.from,
+            inst: new_idx,
+            phase: TransitionPhase::Warm,
+            started: t.started,
+        });
+        self.actions.push(Action::RoleChange {
+            phase: RolePhase::Flip,
+            inst: new_ref,
+            to: t.to(),
+        });
+        self.begin_warm(new_ref);
+    }
+
+    /// Occupy the freshly flipped instance with a [`StepKind::Warm`] step:
+    /// an ordinary timed work order, so both executors drive the warm-up
+    /// without pool-specific machinery.
+    fn begin_warm(&mut self, inst_ref: InstanceRef) {
+        let seq = self.cluster.alloc_seq();
+        let inst = match inst_ref {
+            InstanceRef::Relaxed(i) => &mut self.cluster.relaxed[i],
+            InstanceRef::Strict(i) => &mut self.cluster.strict[i],
+        };
+        inst.step = Some(Step {
+            kind: StepKind::Warm,
+            started: self.now,
+            ends: self.now + WARMUP_S,
+            participants: Vec::new(),
+            seq,
+            preempted: false,
+        });
+        self.actions.push(Action::StartStep {
+            inst: inst_ref,
+            kind: StepKind::Warm,
+            participants: Vec::new(),
+            predicted_latency: WARMUP_S,
+            seq,
+        });
+    }
+
+    /// The warm step ended: the transition is complete and the instance
+    /// serves its new pool from here on.
+    fn complete_warm(&mut self, inst_ref: InstanceRef) {
+        let to = match &self.pool.transition {
+            Some(t) if t.phase == TransitionPhase::Warm => t.to(),
+            _ => return,
+        };
+        self.pool.on_warm_done(self.now);
+        self.actions.push(Action::RoleChange {
+            phase: RolePhase::Warm,
+            inst: inst_ref,
+            to,
+        });
+    }
+
+    /// Snapshot the pool-manager metrics (per-epoch pool sizes, transition
+    /// durations, stranded capacity).
+    pub fn pool_report(&self) -> PoolReport {
+        self.pool.report(
+            self.now,
+            self.cluster.relaxed.len(),
+            self.cluster.strict.len(),
+        )
+    }
+
     // ------------------------------------------------------------ arrivals
 
     /// Is this request scheduled as "online" by the active policy?
@@ -345,8 +671,7 @@ impl SchedulerCore {
             return;
         }
         let now = self.now;
-        let inst_ref = &mut self.cluster.relaxed[inst];
-        let Some(step) = inst_ref.step.as_mut() else {
+        let Some(step) = self.cluster.relaxed[inst].step.as_ref() else {
             return;
         };
         if step.kind != StepKind::PrefillOffline || step.preempted {
@@ -363,15 +688,16 @@ impl SchedulerCore {
         .max(1);
         let delay = preemption_delay(&self.pm, mean_prompt, elapsed_frac);
         let new_end = now + delay;
-        if new_end < step.ends {
-            step.ends = new_end;
-            step.preempted = true;
-            inst_ref.next_seq += 1;
-            let seq = inst_ref.next_seq;
-            step.seq = seq;
-            self.actions.push(Action::Preempt { inst, delay, seq });
-            self.cluster.preemptions += 1;
+        if new_end >= step.ends {
+            return;
         }
+        let seq = self.cluster.alloc_seq();
+        let step = self.cluster.relaxed[inst].step.as_mut().expect("checked");
+        step.ends = new_end;
+        step.preempted = true;
+        step.seq = seq;
+        self.actions.push(Action::Preempt { inst, delay, seq });
+        self.cluster.preemptions += 1;
     }
 
     fn kick_idle_relaxed(&mut self) {
@@ -444,7 +770,6 @@ impl SchedulerCore {
         }
         let latency = self.pm.prefill_cost(&lens).latency_s;
         self.begin_relaxed_step(inst, StepKind::PrefillOnline, batch, latency);
-        self.cluster.relaxed[inst].busy_online_prefill_s += latency;
         true
     }
 
@@ -530,7 +855,9 @@ impl SchedulerCore {
     /// Admit offline prefills from the global backlog (gating in OOCO,
     /// plain idle-only admission in `online priority`).
     fn start_offline_prefill(&mut self, inst: usize) -> bool {
-        if self.cluster.offline_backlog.is_empty() {
+        if self.cluster.offline_backlog.is_empty()
+            || self.cluster.relaxed[inst].draining
+        {
             return false;
         }
         // base P/D never reaches here (offline went through the online path).
@@ -619,6 +946,10 @@ impl SchedulerCore {
     fn start_relaxed_decode(&mut self, inst: usize) {
         if !self.cfg.policy.offline_decode_on_relaxed()
             || self.cluster.relaxed[inst].offline_decoding.is_empty()
+            // A draining instance starts no new decode steps: its residents
+            // are being streamed off, and an idle instance is what lets the
+            // next tick evict the stragglers.
+            || self.cluster.relaxed[inst].draining
         {
             return;
         }
@@ -636,7 +967,7 @@ impl SchedulerCore {
         participants: Vec<RequestId>,
         latency: f64,
     ) {
-        let seq = self.cluster.relaxed[inst].alloc_seq();
+        let seq = self.cluster.alloc_seq();
         let span = latency.max(1e-9);
         let ends = self.now + span;
         self.actions.push(Action::StartStep {
@@ -658,13 +989,20 @@ impl SchedulerCore {
     }
 
     fn relaxed_step_end(&mut self, inst: usize, seq: u64) {
-        let valid = self.cluster.relaxed[inst]
-            .step
-            .as_ref()
+        // `.get`: a stale (preemption-superseded) event can name a tail
+        // index an elastic flip has since vacated — treat it exactly like
+        // a superseded seq. Cluster-global seq uniqueness guarantees a
+        // stale event can never alias a different instance's live step
+        // after a later flip refills the index.
+        let valid = self
+            .cluster
+            .relaxed
+            .get(inst)
+            .and_then(|r| r.step.as_ref())
             .map(|s| s.seq == seq)
             .unwrap_or(false);
         if !valid {
-            return; // stale completion after preemption reschedule
+            return; // stale completion after preemption reschedule or flip
         }
         let step = self.cluster.relaxed[inst].step.take().expect("checked");
         match step.kind {
@@ -693,6 +1031,11 @@ impl SchedulerCore {
                 for &rid in &step.participants {
                     self.relaxed_decode_token(inst, rid);
                 }
+            }
+            StepKind::Warm => {
+                // Role-transition warm-up finished (strict→relaxed flip):
+                // the instance joins the relaxed pool for real.
+                self.complete_warm(InstanceRef::Relaxed(inst));
             }
             StepKind::DecodeStrict => unreachable!("strict step on relaxed"),
         }
@@ -824,8 +1167,9 @@ impl SchedulerCore {
         // next online prefill and discarded after burning link bandwidth.
         let dest = (0..self.cluster.relaxed.len())
             .filter(|&i| {
-                self.cluster.relaxed[i].kv.free_tokens()
-                    >= need + ONLINE_PREFILL_RESERVE_TOKENS
+                !self.cluster.relaxed[i].draining
+                    && self.cluster.relaxed[i].kv.free_tokens()
+                        >= need + ONLINE_PREFILL_RESERVE_TOKENS
             })
             .max_by_key(|&i| self.cluster.relaxed[i].kv.free_tokens());
         if let Some(i) = dest {
@@ -974,11 +1318,18 @@ impl SchedulerCore {
                 online = kept;
             }
         }
-        let offline: Vec<Candidate> = self.cluster.strict[inst]
-            .offline
-            .iter()
-            .map(|&r| (r, self.cluster.requests[r as usize].kv_len()))
-            .collect();
+        // A draining strict instance batches online residents only: its
+        // offline mix-ins must sit out the step so the drain ticks can
+        // stream them off between iterations.
+        let offline: Vec<Candidate> = if self.cluster.strict[inst].draining {
+            Vec::new()
+        } else {
+            self.cluster.strict[inst]
+                .offline
+                .iter()
+                .map(|&r| (r, self.cluster.requests[r as usize].kv_len()))
+                .collect()
+        };
 
         let slo = self.cfg.serving.slo.tpot;
         let selection = match self.cfg.policy {
@@ -1018,7 +1369,7 @@ impl SchedulerCore {
             == self.cluster.strict[inst].online.len()
                 + self.cluster.strict[inst].offline.len();
 
-        let seq = self.cluster.strict[inst].alloc_seq();
+        let seq = self.cluster.alloc_seq();
         let span = latency.max(1e-9);
         let ends = self.now + span;
         self.actions.push(Action::StartStep {
@@ -1043,15 +1394,25 @@ impl SchedulerCore {
     }
 
     fn strict_step_end(&mut self, inst: usize, seq: u64) {
-        let valid = self.cluster.strict[inst]
-            .step
-            .as_ref()
+        // `.get` for the same stale-event-after-flip reason as
+        // `relaxed_step_end`.
+        let valid = self
+            .cluster
+            .strict
+            .get(inst)
+            .and_then(|s| s.step.as_ref())
             .map(|s| s.seq == seq)
             .unwrap_or(false);
         if !valid {
             return;
         }
         let step = self.cluster.strict[inst].step.take().expect("checked");
+        if step.kind == StepKind::Warm {
+            // Role-transition warm-up finished (relaxed→strict flip); fall
+            // through to the ordinary boundary work so the fresh instance
+            // starts serving immediately.
+            self.complete_warm(InstanceRef::Strict(inst));
+        }
         for &rid in &step.participants {
             self.strict_decode_token(inst, rid);
         }
@@ -1143,6 +1504,11 @@ impl SchedulerCore {
         {
             return;
         }
+        if self.cluster.strict[inst].draining {
+            // A draining instance pulls no new offline decodes.
+            self.cluster.strict_step_meta[inst] = None;
+            return;
+        }
         let Some((stats, all_included)) =
             self.cluster.strict_step_meta[inst].take()
         else {
@@ -1193,7 +1559,10 @@ impl SchedulerCore {
                 .retain(|&r| r != rid);
             self.cluster.kv_home[rid as usize] = KvHome::Strict(inst);
             self.cluster.requests[rid as usize].phase = Phase::Migrating;
-            self.cluster.router.route_decode(kv_len);
+            // Book the load on the instance that actually receives the KV
+            // (the discharge paths — completion, eviction, drain
+            // cancellation — all debit `inst`).
+            self.cluster.router.decode_grow(inst, kv_len);
             self.cluster.strict[inst].inbound.push(rid);
             self.actions.push(Action::Migrate {
                 req: rid,
@@ -1214,6 +1583,7 @@ impl SchedulerCore {
     fn pull_parked_offline(&mut self, inst: usize) {
         if self.cfg.policy.offline_decode_on_relaxed()
             || self.cfg.policy == Policy::BasePd
+            || self.cluster.strict[inst].draining
         {
             return;
         }
@@ -1235,7 +1605,9 @@ impl SchedulerCore {
                     .retain(|&r| r != rid);
                 self.cluster.kv_home[rid as usize] = KvHome::Strict(inst);
                 self.cluster.requests[rid as usize].phase = Phase::Migrating;
-                self.cluster.router.route_decode(kv_len);
+                // As in `maybe_pull_migration`: charge the receiving
+                // instance, matching the decode_done debits.
+                self.cluster.router.decode_grow(inst, kv_len);
                 self.cluster.strict[inst].inbound.push(rid);
                 self.enqueue_transfer(
                     rid,
@@ -1454,6 +1826,110 @@ mod tests {
                 ..
             }]
         ));
+    }
+
+    #[test]
+    fn drain_flip_warm_relaxed_to_strict() {
+        // 2 relaxed / 1 strict, idle cluster: drain the tail relaxed
+        // instance and watch it flip + warm into the strict pool.
+        let mut cfg = CoreConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+        cfg.serving.cluster.relaxed_instances = 2;
+        let mut core = SchedulerCore::new(Vec::new(), cfg);
+        core.now = 10.0;
+        core.start_drain(PoolRole::Relaxed);
+        core.advance_transition(); // idle instance drains immediately
+        let acts = std::mem::take(&mut core.actions);
+        assert!(acts.iter().any(|a| matches!(
+            a,
+            Action::RoleChange {
+                phase: RolePhase::Drain,
+                inst: InstanceRef::Relaxed(1),
+                to: PoolRole::Strict,
+            }
+        )));
+        assert!(acts.iter().any(|a| matches!(
+            a,
+            Action::RoleChange {
+                phase: RolePhase::Flip,
+                inst: InstanceRef::Strict(1),
+                ..
+            }
+        )));
+        let (seq, warmup) = acts
+            .iter()
+            .find_map(|a| match a {
+                Action::StartStep {
+                    inst: InstanceRef::Strict(1),
+                    kind: StepKind::Warm,
+                    seq,
+                    predicted_latency,
+                    ..
+                } => Some((*seq, *predicted_latency)),
+                _ => None,
+            })
+            .expect("warm step must start on the flipped instance");
+        assert_eq!(core.cluster.relaxed.len(), 1);
+        assert_eq!(core.cluster.strict.len(), 2);
+        assert_eq!(core.cluster.total_instances(), 3);
+        assert!(core.pool.transition.is_some());
+        // Warm completion ends the transition; the instance serves strict.
+        let end = core.on_step_end(10.0 + warmup, InstanceRef::Strict(1), seq);
+        assert!(end.iter().any(|a| matches!(
+            a,
+            Action::RoleChange {
+                phase: RolePhase::Warm,
+                inst: InstanceRef::Strict(1),
+                ..
+            }
+        )));
+        assert!(core.pool.transition.is_none());
+        assert!(core.cluster.strict[1].is_idle());
+        assert_eq!(core.pool_report().flips, 1);
+    }
+
+    #[test]
+    fn draining_relaxed_instance_admits_no_new_work() {
+        let mut cfg = CoreConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+        cfg.serving.cluster.relaxed_instances = 2;
+        let mut core = SchedulerCore::new(
+            vec![
+                Request::new(0, Class::Offline, 0.0, 400, 16),
+                Request::new(1, Class::Online, 0.01, 500, 8),
+            ],
+            cfg,
+        );
+        core.now = 0.0;
+        core.start_drain(PoolRole::Relaxed);
+        // A straggler KV reservation keeps the instance in Drain phase
+        // (idle but not flippable), so admission paths get exercised.
+        core.cluster.relaxed[1].kv.admit(99, 100).unwrap();
+        core.actions.clear();
+
+        let a0 = core.on_arrival(0.0, 0);
+        assert!(
+            !a0.iter()
+                .any(|a| matches!(a, Action::Admit { inst: 1, .. })),
+            "gating must not admit onto the draining instance: {a0:?}"
+        );
+        let a1 = core.on_arrival(0.01, 1);
+        for a in &a1 {
+            if let Action::StartStep { inst, .. } = a {
+                assert_ne!(
+                    *inst,
+                    InstanceRef::Relaxed(1),
+                    "router must not start work on the draining instance"
+                );
+            }
+        }
+        assert!(core.cluster.relaxed[1].online_queue.is_empty());
+        assert!(core.cluster.relaxed[1].offline_decoding.is_empty());
+        // Still draining: the straggler KV blocks the flip.
+        assert_eq!(core.cluster.relaxed.len(), 2);
+        // Releasing it lets the next tick flip the instance.
+        core.cluster.relaxed[1].kv.release(99).unwrap();
+        core.advance_transition();
+        assert_eq!(core.cluster.relaxed.len(), 1);
+        assert_eq!(core.cluster.strict.len(), 2);
     }
 
     #[test]

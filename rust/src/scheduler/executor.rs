@@ -120,7 +120,9 @@ impl VirtualExecutor {
                 | Action::Evict { .. }
                 | Action::Migrate { .. }
                 | Action::Admit { .. }
-                | Action::Complete { .. } => {}
+                | Action::Complete { .. }
+                | Action::RepartitionPlan { .. }
+                | Action::RoleChange { .. } => {}
             }
         }
         if let Some(log) = &mut self.log {
@@ -279,7 +281,9 @@ impl StubWallClockExecutor {
                 | Action::Evict { .. }
                 | Action::Migrate { .. }
                 | Action::Admit { .. }
-                | Action::Complete { .. } => {}
+                | Action::Complete { .. }
+                | Action::RepartitionPlan { .. }
+                | Action::RoleChange { .. } => {}
             }
         }
         if let Some(log) = &mut self.log {

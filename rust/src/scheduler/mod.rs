@@ -35,7 +35,7 @@ pub mod core;
 pub mod events;
 pub mod executor;
 
-pub use self::action::{Action, InstanceRef};
+pub use self::action::{Action, InstanceRef, RolePhase};
 pub use self::cluster::{ClusterState, KvHome};
 pub use self::core::{CoreConfig, SchedulerCore};
 pub use self::events::{Event, EventKind, EventQueue};
@@ -46,6 +46,11 @@ pub use self::executor::{
 // The KV transport vocabulary actions and events speak, re-exported for
 // the same single-surface reason.
 pub use crate::transport::{JobId, TransferKind, TransportEngine};
+
+// The pool-role vocabulary of the elastic pool manager (DESIGN.md §3.6),
+// whose plan/transition decisions ride on this module's action stream.
+pub use crate::instance::PoolRole;
+pub use crate::pool::{PoolManager, PoolPlan};
 
 // The underlying §3.4 decision functions, re-exported so all scheduling
 // call sites (benches, tests, tools) go through the `scheduler` surface.

@@ -20,7 +20,7 @@ pub use crate::scheduler::{Event, EventKind, EventQueue};
 
 use crate::config::ServingConfig;
 use crate::coordinator::{Ablation, OverloadMode, Policy};
-use crate::metrics::{Recorder, Report, TransportReport};
+use crate::metrics::{PoolReport, Recorder, Report, TransportReport};
 use crate::scheduler::{CoreConfig, Executor, SchedulerCore, VirtualExecutor};
 use crate::trace::Trace;
 
@@ -91,6 +91,8 @@ pub struct SimResult {
     pub offloads: u64,
     /// KV-transport link accounting (contention, stall, recovery stats).
     pub transport: TransportReport,
+    /// Elastic pool-manager accounting (plans, flips, stranded capacity).
+    pub pool: PoolReport,
 }
 
 /// Run the simulation of `trace` under `cfg`: build a [`SchedulerCore`],
@@ -118,13 +120,19 @@ fn build_result(
     }
     let duration = trace.duration().max(1e-9);
     let report = recorder.report(&cfg.serving.slo, duration);
+    // Utilization denominators are per-role instance-seconds: under
+    // elastic repartitioning pool sizes change mid-run, so `duration ×
+    // final size` would misattribute. The window runs to the end of the
+    // drain — the same one `transport_report` uses — because busy_s (and
+    // post-arrival flips) accrue until then.
+    let (relaxed_inst_s, strict_inst_s) =
+        cluster.role_instance_seconds(end_time.max(duration));
     SimResult {
         report,
         end_time,
-        strict_utilization: cluster.strict_busy_s()
-            / (duration * cluster.strict.len() as f64),
+        strict_utilization: cluster.strict_busy_s() / strict_inst_s.max(1e-9),
         relaxed_utilization: cluster.relaxed_busy_s()
-            / (duration * cluster.relaxed.len() as f64),
+            / relaxed_inst_s.max(1e-9),
         strict_steps: cluster.strict_steps(),
         strict_offline_tokens: cluster.strict_offline_tokens(),
         preemptions: cluster.preemptions,
@@ -133,5 +141,6 @@ fn build_result(
         rescues: cluster.rescues,
         offloads: cluster.offloads,
         transport: core.transport_report(end_time.max(duration)),
+        pool: core.pool_report(),
     }
 }

@@ -17,6 +17,7 @@ use crate::sim::{simulate, SimConfig, SimResult};
 use crate::trace::datasets::DatasetProfile;
 use crate::trace::generator::{offline_trace, online_trace};
 use crate::trace::Trace;
+use crate::util::json::Json;
 
 /// One point of an offline-load sweep.
 #[derive(Debug, Clone)]
@@ -150,6 +151,37 @@ pub fn offline_sweep(
         .collect()
 }
 
+impl SweepPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offline_qps", Json::Num(self.offline_qps)),
+            ("violation_rate", Json::Num(self.violation_rate)),
+            ("slo_attainment", Json::Num(1.0 - self.violation_rate)),
+            (
+                "offline_token_throughput",
+                Json::Num(self.offline_token_throughput),
+            ),
+            ("ttft_p99", Json::Num(self.ttft_p99)),
+            ("tpot_p99", Json::Num(self.tpot_p99)),
+            ("migrations", Json::Num(self.migrations as f64)),
+            ("evictions", Json::Num(self.evictions as f64)),
+        ])
+    }
+}
+
+/// Machine-readable SLO-attainment-vs-load curve (`util::json`): one entry
+/// per swept load level, so pool-manager experiments are comparable across
+/// runs with `jq`-style tooling instead of scraping summary lines.
+pub fn curve_to_json(label: &str, points: &[SweepPoint]) -> Json {
+    Json::obj(vec![
+        ("label", Json::Str(label.to_string())),
+        (
+            "points",
+            Json::Arr(points.iter().map(SweepPoint::to_json).collect()),
+        ),
+    ])
+}
+
 /// The paper's headline metric: the offline throughput just before the
 /// online violation rate exceeds `threshold` (0 if even the first offline
 /// level violates).
@@ -219,6 +251,12 @@ mod tests {
         assert_eq!(max_effective_offline(&pts, 0.03), 220.0);
         assert_eq!(max_effective_offline(&pts[2..], 0.03), 0.0);
         assert_eq!(max_effective_offline(&[], 0.03), 0.0);
+        // Machine-readable curve: label + per-point SLO attainment.
+        let j = curve_to_json("ooco", &pts);
+        assert_eq!(j.get("label").as_str(), Some("ooco"));
+        let att = j.get("points").idx(2).get("slo_attainment").as_f64();
+        assert!((att.unwrap() - 0.92).abs() < 1e-12);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }
 
     #[test]

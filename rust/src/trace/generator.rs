@@ -165,6 +165,38 @@ pub fn online_trace(
     .generate()
 }
 
+/// Two-phase regime-change workload (a compressed tide edge, used by the
+/// elastic pool-manager tests and `bench_elastic_pools`): online at
+/// `hi_rate` base for the first half and `lo_rate` base for the second,
+/// plus uniform-QPS offline load throughout. Base rates are multiplied by
+/// the dataset's daily tide — [`online_trace`] starts traces at the
+/// mid-morning ramp, a factor of ≈ 1.4 for `azure-conv`.
+pub fn two_phase_trace(
+    online_ds: DatasetProfile,
+    hi_rate: f64,
+    lo_rate: f64,
+    half_s: f64,
+    offline_ds: DatasetProfile,
+    offline_qps: f64,
+    seed: u64,
+) -> Trace {
+    let hi = online_trace(online_ds.clone(), hi_rate, half_s, seed);
+    let mut lo = online_trace(online_ds, lo_rate, half_s, seed + 1);
+    for r in &mut lo.requests {
+        r.arrival += half_s;
+    }
+    let mut trace = hi.merge(lo);
+    if offline_qps > 0.0 {
+        trace = trace.merge(offline_trace(
+            offline_ds,
+            offline_qps,
+            2.0 * half_s,
+            seed + 2,
+        ));
+    }
+    trace
+}
+
 /// Convenience: uniform-QPS offline trace (the §5.2 offline load control).
 pub fn offline_trace(
     dataset: DatasetProfile,
@@ -187,6 +219,35 @@ pub fn offline_trace(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn two_phase_trace_shifts_and_merges() {
+        let t = two_phase_trace(
+            DatasetProfile::azure_conv(),
+            4.0,
+            0.5,
+            100.0,
+            DatasetProfile::ooc_offline(),
+            1.0,
+            7,
+        );
+        // Sorted, dense ids, both classes present.
+        assert!(t.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(t.requests.iter().enumerate().all(|(i, r)| r.id == i as u64));
+        assert!(t.count_class(Class::Offline) > 50);
+        let first_half = t
+            .requests
+            .iter()
+            .filter(|r| r.class == Class::Online && r.arrival < 100.0)
+            .count();
+        let second_half =
+            t.count_class(Class::Online).saturating_sub(first_half);
+        assert!(
+            first_half > 3 * second_half,
+            "hi phase {first_half} vs lo phase {second_half}"
+        );
+        assert!(t.duration() <= 200.0);
+    }
 
     fn gen(base_rate: f64, duration: f64, seed: u64) -> TraceGenerator {
         TraceGenerator::new(TraceSpec {

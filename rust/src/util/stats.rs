@@ -27,6 +27,21 @@ impl Summary {
         }
     }
 
+    /// Machine-readable form (`util::json`), for cross-run comparisons.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean", Json::Num(self.mean)),
+            ("std", Json::Num(self.std)),
+            ("min", Json::Num(self.min)),
+            ("max", Json::Num(self.max)),
+            ("p50", Json::Num(self.p50)),
+            ("p90", Json::Num(self.p90)),
+            ("p99", Json::Num(self.p99)),
+        ])
+    }
+
     pub fn of(values: &[f64]) -> Self {
         if values.is_empty() {
             return Self::empty();

@@ -188,6 +188,63 @@ fn calibrated_perf_model_is_accurate() {
 }
 
 #[test]
+fn elastic_repartition_runs_on_the_real_engine() {
+    // The drain/flip/warm machinery on the wall-clock substrate: start
+    // with an overprovisioned strict pool (1 relaxed / 2 strict) under a
+    // light mixed load; the Periodic planner wants 1 strict instance, so
+    // the engine must drain the strict tail, flip it, run its warm step
+    // (`StepKind::Warm` executes as a no-op model step), and finish with
+    // a 2 relaxed / 1 strict cluster — all on real PJRT execution.
+    with_runtime(|rt| {
+        let mut reqs = Vec::new();
+        for i in 0..8u64 {
+            reqs.push(Request::new(
+                i,
+                Class::Online,
+                0.4 * i as f64,
+                40 + (i as usize) * 11,
+                6,
+            ));
+        }
+        for i in 8..12u64 {
+            reqs.push(Request::new(
+                i,
+                Class::Offline,
+                0.5 * (i - 8) as f64,
+                90 + (i as usize) * 5,
+                8,
+            ));
+        }
+        let trace = Trace::new(reqs);
+        let cfg = EngineConfig {
+            policy: Policy::Ooco,
+            cluster: ooco::config::ClusterSpec {
+                relaxed_instances: 1,
+                strict_instances: 2,
+            },
+            pool: ooco::config::PoolPolicy::Periodic {
+                epoch_s: 1.0,
+                headroom: 0.15,
+            },
+            time_scale: 10.0,
+            max_output: 8,
+            ..Default::default()
+        };
+        let out = serve_trace_with_runtime(rt, &trace, &cfg).unwrap();
+        assert_eq!(out.report.online_finished, 8, "{}", out.report.summary_line());
+        assert!(out.pool.plans >= 1, "{}", out.pool.summary_line());
+        assert!(
+            out.pool.flips >= 1,
+            "overprovisioned strict pool must shrink on the engine: {}",
+            out.pool.summary_line()
+        );
+        assert_eq!(out.pool.final_relaxed, 2, "{}", out.pool.summary_line());
+        assert_eq!(out.pool.final_strict, 1, "{}", out.pool.summary_line());
+        assert_eq!(out.pool.transition_s.count as u64, out.pool.flips);
+    });
+}
+
+#[test]
 fn serve_small_mixed_trace_end_to_end() {
     with_runtime(|rt| {
         let mut reqs = Vec::new();

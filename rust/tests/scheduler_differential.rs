@@ -13,16 +13,16 @@
 
 use std::collections::HashMap;
 
-use ooco::config::{LinkSharing, ServingConfig};
+use ooco::config::{LinkSharing, PoolPolicy, ServingConfig};
 use ooco::coordinator::{Ablation, OverloadMode};
 use ooco::prop_assert;
 use ooco::scheduler::{
     select_decode_batch_capped, Action, Candidate, CoreConfig, Executor,
-    Policy, SchedulerCore, StubWallClockExecutor, VirtualExecutor,
+    Policy, RolePhase, SchedulerCore, StubWallClockExecutor, VirtualExecutor,
 };
 use ooco::testutil::forall;
 use ooco::trace::datasets::DatasetProfile;
-use ooco::trace::generator::{offline_trace, online_trace};
+use ooco::trace::generator::{offline_trace, online_trace, two_phase_trace};
 use ooco::trace::Trace;
 
 fn mixed_trace(duration: f64, seed: u64) -> Trace {
@@ -200,6 +200,85 @@ fn chunked_transfers_differential_under_contention() {
         );
         assert_eq!(core_v.cluster.rescues, core_s.cluster.rescues);
         assert_eq!(core_v.cluster.offloads, core_s.cluster.offloads);
+    }
+}
+
+/// Elastic-pools acceptance criterion: with the pool manager re-planning
+/// every 20 s over a regime-change trace, both executors still emit
+/// identical action streams for every policy — and those streams carry the
+/// full repartition timeline (`RepartitionPlan`, every `RoleChange` phase,
+/// warm steps included), proving the plan/transition machinery is part of
+/// the substrate-independent decision core.
+#[test]
+fn elastic_repartition_streams_identical_across_executors() {
+    // Heavy-then-light online phases force the planner to grow and then
+    // shrink the strict pool; the squeezed memory makes the per-instance
+    // KV capacity bind at test-scale load.
+    let trace = two_phase_trace(
+        DatasetProfile::azure_conv(),
+        5.0,
+        0.5,
+        120.0,
+        DatasetProfile::ooc_offline(),
+        1.0,
+        31,
+    );
+    let horizon = trace.duration() + 300.0;
+
+    for policy in Policy::all() {
+        let mut cfg = CoreConfig::new(ServingConfig::preset_7b(), policy);
+        cfg.seed = 17;
+        cfg.serving.hardware.mem_capacity = 20e9;
+        cfg.serving.cluster.relaxed_instances = 3;
+        cfg.serving.cluster.strict_instances = 1;
+        cfg.serving.pool = PoolPolicy::Periodic {
+            epoch_s: 20.0,
+            headroom: 0.15,
+        };
+
+        let mut virt = VirtualExecutor::new(&trace, horizon);
+        virt.log = Some(Vec::new());
+        let mut core_v = SchedulerCore::new(trace.requests.clone(), cfg.clone());
+        virt.run(&mut core_v).unwrap();
+
+        let mut stub = StubWallClockExecutor::new(&trace, horizon);
+        stub.log = Some(Vec::new());
+        let mut core_s = SchedulerCore::new(trace.requests.clone(), cfg);
+        stub.run(&mut core_s).unwrap();
+
+        let (v, s) = (virt.log.unwrap(), stub.log.unwrap());
+        assert_eq!(
+            v.len(),
+            s.len(),
+            "{policy:?}: stream lengths differ ({} vs {})",
+            v.len(),
+            s.len()
+        );
+        for (i, (a, b)) in v.iter().zip(&s).enumerate() {
+            assert_eq!(a, b, "{policy:?}: streams diverge at action {i}");
+        }
+        // The plan timeline is present and the transition machinery ran.
+        assert!(
+            v.iter()
+                .any(|a| matches!(a, Action::RepartitionPlan { .. })),
+            "{policy:?}: no repartition plans in stream"
+        );
+        for phase in [RolePhase::Drain, RolePhase::Flip, RolePhase::Warm] {
+            assert!(
+                v.iter().any(|a| matches!(
+                    a,
+                    Action::RoleChange { phase: p, .. } if *p == phase
+                )),
+                "{policy:?}: no RoleChange {phase:?} in stream"
+            );
+        }
+        assert_eq!(
+            core_v.pool_report().flips,
+            core_s.pool_report().flips,
+            "{policy:?}: flip counts diverge"
+        );
+        assert!(core_v.pool_report().flips >= 1, "{policy:?}: no flips");
+        assert_eq!(core_v.cluster.total_instances(), 4);
     }
 }
 
