@@ -40,6 +40,7 @@ fn main() {
             duration_s: duration,
             seed,
             ablation,
+            ..Default::default()
         };
         let pts = offline_sweep(
             &serving,

@@ -1,0 +1,125 @@
+//! Prefix-sharing KV cache evaluation (DESIGN.md §3.7, ours): offline
+//! throughput and online TTFT with the cache on vs off across sharing
+//! regimes.
+//!
+//! Three regimes span the sharing spectrum of co-located offline work:
+//! `no-share` (independent batch prompts — the cache must at least do no
+//! harm), `50% shared` (one system prompt roughly the size of the mean
+//! body, the HyGen-style batch-job shape), and `agentic heavy-share`
+//! (multi-turn conversations whose context grows turn over turn, so each
+//! turn recomputes only the last exchange). Online azure-conv traffic
+//! rides along in every regime to watch for SLO regressions.
+//!
+//! Reports per regime and cache setting: online attainment, TTFT/TPOT p99,
+//! offline token throughput, and the prefix summary; then a verdict line
+//! like `bench_elastic_pools.rs`. Run:
+//! `cargo bench --bench bench_prefix_cache [-- --duration 600]`
+
+use ooco::config::ServingConfig;
+use ooco::scheduler::Policy;
+use ooco::sim::{simulate, SimConfig, SimResult};
+use ooco::trace::datasets::DatasetProfile;
+use ooco::trace::generator::{offline_trace_with_prefix, online_trace};
+use ooco::trace::{PrefixProfile, Trace};
+use ooco::util::cli::Args;
+
+fn mixed_trace(
+    offline_prefix: PrefixProfile,
+    online_rate: f64,
+    offline_qps: f64,
+    duration: f64,
+    seed: u64,
+) -> Trace {
+    let online =
+        online_trace(DatasetProfile::azure_conv(), online_rate, duration, seed);
+    let offline = offline_trace_with_prefix(
+        DatasetProfile::ooc_offline(),
+        offline_qps,
+        duration,
+        offline_prefix,
+        seed + 1,
+    );
+    online.merge(offline)
+}
+
+fn run(trace: &Trace, cache_on: bool, mem_gb: f64, seed: u64) -> SimResult {
+    let mut serving = ServingConfig::preset_7b();
+    serving.hardware.mem_capacity = mem_gb * 1e9;
+    serving.prefix.enabled = cache_on;
+    let mut cfg = SimConfig::new(serving, Policy::Ooco);
+    cfg.seed = seed;
+    simulate(trace, &cfg)
+}
+
+fn main() {
+    let args = Args::parse_env();
+    let duration = args.f64("duration", 600.0);
+    let online_rate = args.f64("online-rate", 0.3);
+    let offline_qps = args.f64("offline-qps", 3.0);
+    let mem_gb = args.f64("mem-gb", 24.0);
+    let seed = args.u64("seed", 42);
+
+    let regimes: [(&str, PrefixProfile); 3] = [
+        ("no-share", PrefixProfile::None),
+        (
+            "50% shared",
+            PrefixProfile::SharedSystem { prefix_len: 1200 },
+        ),
+        (
+            "agentic heavy-share",
+            PrefixProfile::Agentic {
+                conversations: 16,
+                turns: 6,
+            },
+        ),
+    ];
+
+    println!(
+        "# prefix cache: online {online_rate} req/s + offline {offline_qps} qps over {duration}s, {mem_gb} GB/instance"
+    );
+    let mut wins = 0usize;
+    for (name, profile) in regimes {
+        let trace =
+            mixed_trace(profile, online_rate, offline_qps, duration, seed);
+        println!(
+            "\n## {name} ({} online / {} offline requests)",
+            trace.count_class(ooco::request::Class::Online),
+            trace.count_class(ooco::request::Class::Offline)
+        );
+        let mut results: Vec<(&str, SimResult)> = Vec::new();
+        for (label, on) in [("cache-off", false), ("cache-on", true)] {
+            let res = run(&trace, on, mem_gb, seed);
+            println!(
+                "{label:>9}: attain {:6.2}% | ttft p99 {:6.3}s tpot p99 {:5.1}ms | offline {:8.1} tok/s | {}",
+                (1.0 - res.report.online_violation_rate) * 100.0,
+                res.report.ttft.p99,
+                res.report.tpot.p99 * 1e3,
+                res.report.offline_token_throughput,
+                res.prefix.summary_line(),
+            );
+            results.push((label, res));
+        }
+        let off = &results[0].1;
+        let on = &results[1].1;
+        let off_attain = 1.0 - off.report.online_violation_rate;
+        let on_attain = 1.0 - on.report.online_violation_rate;
+        let off_tput = off.report.offline_token_throughput;
+        let on_tput = on.report.offline_token_throughput;
+        // "No SLO regression": within half a percentage point.
+        if on_attain >= off_attain - 0.005 && on_tput > off_tput {
+            wins += 1;
+            println!(
+                "=> cache wins `{name}`: offline {on_tput:.1} vs {off_tput:.1} tok/s (+{:.1}%) at hit rate {:.1}%, no SLO regression",
+                (on_tput / off_tput.max(1e-9) - 1.0) * 100.0,
+                on.prefix.hit_rate * 100.0,
+            );
+        } else {
+            println!(
+                "=> no win on `{name}` (cache {on_tput:.1} tok/s @ {:.2}% vs cold {off_tput:.1} @ {:.2}%)",
+                on_attain * 100.0,
+                off_attain * 100.0,
+            );
+        }
+    }
+    println!("\n{wins} of {} regimes won by the prefix cache", 3);
+}

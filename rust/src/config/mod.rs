@@ -600,6 +600,37 @@ impl std::fmt::Display for PoolPolicy {
     }
 }
 
+/// Prefix-sharing KV cache configuration (DESIGN.md §3.7).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefixSpec {
+    /// Resolve shared-prompt prefixes against per-instance block caches at
+    /// admission, shortening prefill to the uncached remainder. Cached
+    /// blocks are reclaimable capacity (LRU-evicted on demand), so turning
+    /// this on never reduces admittable KV.
+    pub enabled: bool,
+}
+
+impl Default for PrefixSpec {
+    fn default() -> Self {
+        PrefixSpec { enabled: true }
+    }
+}
+
+impl PrefixSpec {
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        Ok(PrefixSpec {
+            enabled: v
+                .get("enabled")
+                .as_bool()
+                .unwrap_or(Self::default().enabled),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("enabled", Json::Bool(self.enabled))])
+    }
+}
+
 /// Online-request Service Level Objectives.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SloSpec {
@@ -743,6 +774,8 @@ pub struct ServingConfig {
     pub transport: TransportSpec,
     /// Elastic pool-manager policy (DESIGN.md §3.6).
     pub pool: PoolPolicy,
+    /// Prefix-sharing KV cache (DESIGN.md §3.7).
+    pub prefix: PrefixSpec,
 }
 
 impl ServingConfig {
@@ -756,6 +789,7 @@ impl ServingConfig {
             sched: SchedulerParams::default(),
             cluster: ClusterSpec::default(),
             pool: PoolPolicy::Static,
+            prefix: PrefixSpec::default(),
         }
     }
 
@@ -769,6 +803,7 @@ impl ServingConfig {
             sched: SchedulerParams::default(),
             cluster: ClusterSpec::default(),
             pool: PoolPolicy::Static,
+            prefix: PrefixSpec::default(),
         }
     }
 
@@ -821,6 +856,11 @@ impl ServingConfig {
                     "pool_policy must be a string (e.g. \
                      \"periodic(epoch=60,headroom=0.15)\"), got {other:?}"
                 ),
+            },
+            prefix: match v.get("prefix") {
+                Json::Null => PrefixSpec::default(),
+                Json::Bool(b) => PrefixSpec { enabled: *b },
+                p => PrefixSpec::from_json(p)?,
             },
         })
     }
@@ -992,6 +1032,7 @@ mod tests {
                 "scheduler": {"mix_probe_iters": 16},
                 "cluster": {"relaxed_instances": 2, "strict_instances": 3},
                 "pool_policy": "periodic(epoch=45,headroom=0.1)",
+                "prefix": {"enabled": false},
                 "transport": {
                     "chunk_layers": 4,
                     "recoverable_eviction": false,
@@ -1015,6 +1056,7 @@ mod tests {
             }
         );
         assert_eq!(cfg.transport.chunk_layers, 4);
+        assert!(!cfg.prefix.enabled);
         assert!(!cfg.transport.recoverable_eviction);
         assert!(cfg.transport.host_staging); // default preserved
         assert_eq!(cfg.transport.pool.bandwidth, 2e9);
@@ -1033,5 +1075,18 @@ mod tests {
         assert_eq!(cfg.model.name, "qwen2.5-7b");
         assert_eq!(cfg.cluster.relaxed_instances, 1);
         assert_eq!(cfg.pool, PoolPolicy::Static);
+        assert!(cfg.prefix.enabled); // cache defaults on
+    }
+
+    #[test]
+    fn prefix_spec_json_forms() {
+        // Object form round-trips; bare-bool form is accepted in files.
+        let p = PrefixSpec { enabled: false };
+        assert_eq!(PrefixSpec::from_json(&p.to_json()).unwrap(), p);
+        let dir = std::env::temp_dir().join("ooco_cfg_prefix");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"prefix": false}"#).unwrap();
+        assert!(!ServingConfig::from_file(&path).unwrap().prefix.enabled);
     }
 }

@@ -34,12 +34,14 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::{
-    ClusterSpec, HardwareProfile, PoolPolicy, SchedulerParams, ServingConfig,
-    SloSpec, TransportSpec,
+    ClusterSpec, HardwareProfile, PoolPolicy, PrefixSpec, SchedulerParams,
+    ServingConfig, SloSpec, TransportSpec,
 };
 use crate::coordinator::{Ablation, OverloadMode, Policy};
 use crate::instance::StepKind;
-use crate::metrics::{PoolReport, Recorder, Report, TransportReport};
+use crate::metrics::{
+    PoolReport, PrefixReport, Recorder, Report, TransportReport,
+};
 use crate::perfmodel::BatchStats;
 use crate::perfmodel::{calibrate, PerfModel, Sample, SampleKind};
 use crate::request::{Class, Request, RequestId};
@@ -63,6 +65,10 @@ pub struct EngineConfig {
     /// Elastic pool-manager policy (needs a `cluster` with more than one
     /// instance in some pool to ever repartition).
     pub pool: PoolPolicy,
+    /// Prefix-sharing KV cache (DESIGN.md §3.7). The core shares and
+    /// prices cached blocks; this substrate still recomputes them
+    /// (documented divergence).
+    pub prefix: PrefixSpec,
     /// Wall-clock compression: trace time / `time_scale` (e.g. 10 replays a
     /// 600 s trace in 60 s).
     pub time_scale: f64,
@@ -87,6 +93,7 @@ impl Default for EngineConfig {
                 strict_instances: 1,
             },
             pool: PoolPolicy::Static,
+            prefix: PrefixSpec::default(),
             time_scale: 1.0,
             max_output: 32,
             seed: 0,
@@ -113,6 +120,8 @@ pub struct EngineOutcome {
     pub transport: TransportReport,
     /// Elastic pool-manager accounting (plans, flips, transitions).
     pub pool: PoolReport,
+    /// Prefix-sharing cache accounting (hits, savings, evictions).
+    pub prefix: PrefixReport,
 }
 
 /// Live execution state of one request on the real substrate: its KV cache
@@ -247,6 +256,7 @@ pub fn serve_trace_with_runtime(
             sched: cfg.sched.clone(),
             cluster: cfg.cluster,
             pool: cfg.pool,
+            prefix: cfg.prefix,
         },
         policy: cfg.policy,
         ablation: Ablation::full(),
@@ -410,9 +420,14 @@ impl<'rt> EngineExecutor<'rt> {
                 // Cluster-level notifications: no per-request substrate
                 // resources to manage (pool flips move whole instances,
                 // whose residents were already streamed off via the
-                // transfer actions above).
+                // transfer actions above). Prefix-cache events are
+                // accounting-only here — this substrate recomputes cached
+                // prefixes instead of sharing physical KV (DESIGN.md §3.7
+                // divergence table).
                 Action::Migrate { .. }
                 | Action::Admit { .. }
+                | Action::PrefixResolve { .. }
+                | Action::PrefixEvict { .. }
                 | Action::RepartitionPlan { .. }
                 | Action::RoleChange { .. } => {}
             }
@@ -596,6 +611,7 @@ impl<'rt> EngineExecutor<'rt> {
             report: recorder.report(&self.cfg.slo, duration),
             transport: core.transport_report(duration),
             pool: core.pool_report(),
+            prefix: core.prefix_report(),
             wall_s: self.start.elapsed().as_secs_f64(),
             prefills: self.prefills,
             strict_steps: self.strict_steps,

@@ -16,6 +16,7 @@
 use std::collections::VecDeque;
 
 use crate::kvcache::KvManager;
+use crate::prefix::PrefixIndex;
 use crate::request::RequestId;
 
 /// Which latency-constraint pool an instance currently serves.
@@ -95,6 +96,10 @@ pub struct Instance {
     /// pull) may target it; resident work finishes or is moved off.
     pub draining: bool,
     pub kv: KvManager,
+    /// Prefix-sharing block cache over `kv` (DESIGN.md §3.7): maps hashed
+    /// token-block chains to physical blocks resident on this instance.
+    /// Purged while draining for a role flip.
+    pub cache: PrefixIndex,
     // ---- relaxed-role state ----
     /// Online requests waiting to prefill here (router-assigned).
     pub online_queue: VecDeque<RequestId>,
@@ -134,6 +139,7 @@ impl Instance {
             role,
             draining: false,
             kv: KvManager::new(kv_capacity_tokens, block_tokens),
+            cache: PrefixIndex::new(block_tokens),
             online_queue: VecDeque::new(),
             offline_decoding: Vec::new(),
             online: Vec::new(),
@@ -163,13 +169,8 @@ impl Instance {
         self.offline.retain(|&r| r != id);
     }
 
-    /// No queued, resident, or in-flight work of either role, and no KV
-    /// blocks held — the drain phase is complete and the instance may flip
-    /// to its new pool. The KV condition matters beyond the queues: a
-    /// request parked in another instance's `waiting_for_space` keeps its
-    /// prefilled KV *here* without appearing in any local queue, and a
-    /// flip while those blocks remain would dangle its `KvHome`.
-    pub fn drained_for_flip(&self) -> bool {
+    /// No queued, resident, or in-flight work of either role.
+    pub fn workload_empty(&self) -> bool {
         self.step.is_none()
             && self.online_queue.is_empty()
             && self.offline_decoding.is_empty()
@@ -177,7 +178,18 @@ impl Instance {
             && self.offline.is_empty()
             && self.waiting_for_space.is_empty()
             && self.inbound.is_empty()
-            && self.kv.used_blocks() == 0
+    }
+
+    /// [`Instance::workload_empty`] and no KV blocks held at all — the
+    /// drain phase is complete and the instance may flip to its new pool.
+    /// The KV condition matters beyond the queues: a request parked in
+    /// another instance's `waiting_for_space` keeps its prefilled KV
+    /// *here* without appearing in any local queue, and a flip while those
+    /// blocks remain would dangle its `KvHome`. Reclaimable prefix-cache
+    /// blocks count too — the core purges a draining instance's cache on
+    /// every drain tick, so they never stall a flip in practice.
+    pub fn drained_for_flip(&self) -> bool {
+        self.workload_empty() && self.kv.used_blocks() == 0
     }
 }
 

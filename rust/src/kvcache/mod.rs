@@ -6,8 +6,21 @@
 //! allocator keeps alloc/free O(blocks) with zero steady-state heap churn
 //! (hot-path requirement: every decode iteration may grow each request by
 //! one token).
+//!
+//! Since the prefix-sharing cache (DESIGN.md §3.7) the allocator is
+//! **refcounted**: a block may be referenced by several requests sharing a
+//! prompt prefix, and/or *cache-marked* — retained after its owners left so
+//! a later request with the same prefix skips the recompute. Cache-marked
+//! blocks with no referents are **reclaimable capacity**: they sit on an
+//! LRU list, count toward [`KvManager::free_tokens`], and are reclaimed on
+//! demand when the free list runs dry (the reclaim log lets the owning
+//! [`crate::prefix::PrefixIndex`] drop the matching chain entries).
+//! Divergence inside a shared block is handled by copy-on-write: the
+//! request gets a private block standing in for the copied content
+//! ([`KvManager::admit_shared`]'s `partial` argument, and the grow-path
+//! guard when a write frontier sits in a block with other referents).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::request::RequestId;
 
@@ -20,8 +33,25 @@ pub struct KvManager {
     total_blocks: usize,
     /// Free block indices (LIFO for locality).
     free: Vec<u32>,
+    /// Per-block count of requests referencing it.
+    refcount: Vec<u32>,
+    /// Per-block prefix-cache membership (set by the index layer).
+    cached: Vec<bool>,
+    /// LRU of reclaimable blocks (`cached && refcount == 0`), as
+    /// `(block, stamp)` with lazy invalidation via `lru_stamp`.
+    lru: VecDeque<(u32, u64)>,
+    lru_stamp: Vec<u64>,
+    next_stamp: u64,
+    /// Count of reclaimable blocks (kept O(1); equals the live LRU set).
+    reclaimable: usize,
+    /// Cache blocks reclaimed by the allocator since the last
+    /// [`KvManager::take_reclaimed`] — the index-sync log.
+    reclaimed: Vec<u32>,
     /// Per-request allocation: block list + exact token count.
     allocs: HashMap<RequestId, Alloc>,
+    /// Copy-on-write block copies performed (admission partial reuse +
+    /// grow-path divergence).
+    pub cow_copies: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -48,7 +78,15 @@ impl KvManager {
             block_tokens,
             total_blocks,
             free: (0..total_blocks as u32).rev().collect(),
+            refcount: vec![0; total_blocks],
+            cached: vec![false; total_blocks],
+            lru: VecDeque::new(),
+            lru_stamp: vec![0; total_blocks],
+            next_stamp: 0,
+            reclaimable: 0,
+            reclaimed: Vec::new(),
             allocs: HashMap::new(),
+            cow_copies: 0,
         }
     }
 
@@ -60,17 +98,33 @@ impl KvManager {
         self.total_blocks
     }
 
+    /// Strictly free blocks (not held by any request or the cache).
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
 
+    /// Cache-marked blocks with no referents — capacity an admission can
+    /// reclaim on demand.
+    pub fn reclaimable_blocks(&self) -> usize {
+        self.reclaimable
+    }
+
+    /// Blocks referenced by at least one live request.
+    pub fn pinned_blocks(&self) -> usize {
+        self.total_blocks - self.free.len() - self.reclaimable
+    }
+
+    /// Non-free blocks (pinned + reclaimable cache).
     pub fn used_blocks(&self) -> usize {
         self.total_blocks - self.free.len()
     }
 
-    /// Tokens that can still be admitted (conservative: whole free blocks).
+    /// Tokens that can still be admitted (conservative: whole blocks).
+    /// Reclaimable cached blocks count — they are evicted on demand — so
+    /// this stays *honest under sharing*: an admission of `free_tokens`
+    /// tokens always succeeds (property-tested).
     pub fn free_tokens(&self) -> usize {
-        self.free.len() * self.block_tokens
+        (self.free.len() + self.reclaimable) * self.block_tokens
     }
 
     pub fn capacity_tokens(&self) -> usize {
@@ -90,63 +144,349 @@ impl KvManager {
         self.allocs.keys().copied()
     }
 
+    /// The request's block list in token order (shared prefix first).
+    pub fn blocks_of(&self, id: RequestId) -> Option<&[u32]> {
+        self.allocs.get(&id).map(|a| a.blocks.as_slice())
+    }
+
+    /// Is `block` currently a prefix-cache entry?
+    pub fn is_cached(&self, block: u32) -> bool {
+        self.cached[block as usize]
+    }
+
     fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_tokens)
     }
 
     /// Can `tokens` more tokens be admitted for a *new* request?
     pub fn can_fit(&self, tokens: usize) -> bool {
-        self.blocks_for(tokens) <= self.free.len()
+        self.blocks_for(tokens) <= self.free.len() + self.reclaimable
+    }
+
+    /// Can `tokens` be admitted when the first `shared_full.len()` blocks
+    /// are cache references? Shared blocks that are currently reclaimable
+    /// become pinned by the admission, so they cannot double as the private
+    /// remainder — the math here matches [`KvManager::admit_shared`].
+    pub fn can_admit_shared(&self, tokens: usize, shared_full: &[u32]) -> bool {
+        let need = self
+            .blocks_for(tokens.max(1))
+            .saturating_sub(shared_full.len());
+        let shared_unpinned = shared_full
+            .iter()
+            .filter(|&&b| self.refcount[b as usize] == 0)
+            .count();
+        need + shared_unpinned <= self.free.len() + self.reclaimable
     }
 
     /// Admit a request with an initial token count (post-prefill KV).
     pub fn admit(&mut self, id: RequestId, tokens: usize) -> Result<(), KvError> {
+        self.admit_shared(id, tokens, &[], None)
+    }
+
+    /// Admit a request whose first `shared_full.len()` blocks reference
+    /// cached prefix content (refcounted, zero recompute), optionally
+    /// reusing one terminal partially-filled cached block by copy-on-write
+    /// (`partial`: the source block — a private stand-in is allocated, the
+    /// source stays cached untouched). The private remainder comes from the
+    /// free list, reclaiming LRU cache blocks on demand.
+    pub fn admit_shared(
+        &mut self,
+        id: RequestId,
+        tokens: usize,
+        shared_full: &[u32],
+        partial: Option<(u32, usize)>,
+    ) -> Result<(), KvError> {
         debug_assert!(!self.allocs.contains_key(&id), "double admit {id}");
-        let need = self.blocks_for(tokens.max(1));
-        if need > self.free.len() {
+        let tokens = tokens.max(1);
+        debug_assert!(
+            shared_full.len() * self.block_tokens < tokens,
+            "shared prefix must leave room for a private tail"
+        );
+        if !self.can_admit_shared(tokens, shared_full) {
             return Err(KvError::OutOfMemory);
         }
-        let blocks = self.free.split_off(self.free.len() - need);
-        self.allocs.insert(
-            id,
-            Alloc {
-                blocks,
-                tokens: tokens.max(1),
-            },
-        );
+        // Pin the shared blocks first so the reclamation the private tail
+        // may trigger can never steal them.
+        for &b in shared_full {
+            let bi = b as usize;
+            debug_assert!(
+                self.cached[bi] || self.refcount[bi] > 0,
+                "shared block {b} is neither cached nor referenced"
+            );
+            if self.refcount[bi] == 0 {
+                // Leaves the reclaimable set; its LRU entry goes stale.
+                self.reclaimable -= 1;
+                self.lru_stamp[bi] = self.lru_stamp[bi].wrapping_add(1);
+            }
+            self.refcount[bi] += 1;
+        }
+        let need = self.blocks_for(tokens) - shared_full.len();
+        let mut blocks: Vec<u32> = shared_full.to_vec();
+        for _ in 0..need {
+            let b = self.alloc_block().expect("capacity checked above");
+            blocks.push(b);
+        }
+        if partial.is_some() {
+            // The first private block stands in for the copied content.
+            self.cow_copies += 1;
+        }
+        self.allocs.insert(id, Alloc { blocks, tokens });
         Ok(())
     }
 
-    /// Grow a resident request by `extra` tokens (decode step). On failure
-    /// the request keeps its current allocation.
-    pub fn grow(&mut self, id: RequestId, extra: usize) -> Result<(), KvError> {
-        let alloc = self.allocs.get_mut(&id).ok_or(KvError::UnknownRequest)?;
-        let new_tokens = alloc.tokens + extra;
-        let need = new_tokens.div_ceil(self.block_tokens);
-        let have = alloc.blocks.len();
-        if need > have {
-            let want = need - have;
-            if want > self.free.len() {
-                return Err(KvError::OutOfMemory);
+    /// Pop a block for private use: free list first, then the LRU cache
+    /// (appending to the reclaim log for index sync). Sets refcount to 1.
+    fn alloc_block(&mut self) -> Option<u32> {
+        let b = match self.free.pop() {
+            Some(b) => b,
+            None => {
+                let b = self.pop_lru()?;
+                self.cached[b as usize] = false;
+                self.reclaimable -= 1;
+                self.reclaimed.push(b);
+                b
             }
-            let mut new_blocks = self.free.split_off(self.free.len() - want);
-            alloc.blocks.append(&mut new_blocks);
+        };
+        debug_assert_eq!(self.refcount[b as usize], 0);
+        debug_assert!(!self.cached[b as usize]);
+        self.refcount[b as usize] = 1;
+        Some(b)
+    }
+
+    /// Pop the least-recently-used valid reclaimable block.
+    fn pop_lru(&mut self) -> Option<u32> {
+        while let Some((b, stamp)) = self.lru.pop_front() {
+            let bi = b as usize;
+            if self.lru_stamp[bi] == stamp
+                && self.cached[bi]
+                && self.refcount[bi] == 0
+            {
+                return Some(b);
+            }
         }
-        alloc.tokens = new_tokens;
+        None
+    }
+
+    /// Stamp `block` into the LRU as newly reclaimable.
+    fn enter_lru(&mut self, block: u32) {
+        self.next_stamp += 1;
+        self.lru_stamp[block as usize] = self.next_stamp;
+        self.lru.push_back((block, self.next_stamp));
+        self.reclaimable += 1;
+        self.maybe_compact_lru();
+    }
+
+    /// Move reclaimable `blocks` to most-recently-used (a cache hit's
+    /// recency signal). Pinned or uncached blocks are left alone.
+    pub fn touch_blocks(&mut self, blocks: &[u32]) {
+        for &b in blocks {
+            let bi = b as usize;
+            if self.cached[bi] && self.refcount[bi] == 0 {
+                self.next_stamp += 1;
+                self.lru_stamp[bi] = self.next_stamp;
+                self.lru.push_back((b, self.next_stamp));
+            }
+        }
+        self.maybe_compact_lru();
+    }
+
+    /// Lazy invalidation leaves stale `(block, stamp)` entries behind; on
+    /// a hit-heavy run with no memory pressure nothing would ever drain
+    /// them, so bound the deque: once it exceeds twice the pool size, drop
+    /// every entry whose stamp is no longer current (order-preserving, so
+    /// recency is untouched).
+    fn maybe_compact_lru(&mut self) {
+        if self.lru.len() <= 2 * self.total_blocks.max(16) {
+            return;
+        }
+        let stamps = &self.lru_stamp;
+        let cached = &self.cached;
+        let refcount = &self.refcount;
+        self.lru.retain(|&(b, s)| {
+            let bi = b as usize;
+            stamps[bi] == s && cached[bi] && refcount[bi] == 0
+        });
+    }
+
+    /// Register `block` as a prefix-cache entry (index insertion). A block
+    /// with no referents becomes reclaimable immediately.
+    pub fn mark_cached(&mut self, block: u32) {
+        let bi = block as usize;
+        if self.cached[bi] {
+            return;
+        }
+        debug_assert!(
+            self.refcount[bi] > 0,
+            "cache mark of a free block {block}"
+        );
+        self.cached[bi] = true;
+    }
+
+    /// Drop `block`'s cache membership (index removal/replacement).
+    /// Returns true when the block had no referents and went back to the
+    /// free list.
+    pub fn unmark_cached(&mut self, block: u32) -> bool {
+        let bi = block as usize;
+        if !self.cached[bi] {
+            return false;
+        }
+        self.cached[bi] = false;
+        if self.refcount[bi] == 0 {
+            self.lru_stamp[bi] = self.lru_stamp[bi].wrapping_add(1);
+            self.reclaimable -= 1;
+            self.free.push(block);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Drain the log of cache blocks the allocator reclaimed, so the
+    /// prefix index can forget the matching chain entries.
+    pub fn take_reclaimed(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.reclaimed)
+    }
+
+    /// Drop one reference to `block`; a cached block with no referents left
+    /// becomes reclaimable, an uncached one frees.
+    fn release_ref(&mut self, block: u32) {
+        let bi = block as usize;
+        debug_assert!(self.refcount[bi] > 0, "double free of block {block}");
+        self.refcount[bi] -= 1;
+        if self.refcount[bi] == 0 {
+            if self.cached[bi] {
+                self.enter_lru(block);
+            } else {
+                self.free.push(block);
+            }
+        }
+    }
+
+    /// Grow a resident request by `extra` tokens (decode step). On failure
+    /// the request keeps its current allocation. If the write frontier sits
+    /// in a block shared with another request, the block is copied first
+    /// (copy-on-write divergence).
+    pub fn grow(&mut self, id: RequestId, extra: usize) -> Result<(), KvError> {
+        let (have, old_tokens) = {
+            let a = self.allocs.get(&id).ok_or(KvError::UnknownRequest)?;
+            (a.blocks.len(), a.tokens)
+        };
+        let new_tokens = old_tokens + extra;
+        let need = new_tokens.div_ceil(self.block_tokens);
+        let tail = need.saturating_sub(have);
+        // The next token lands inside the last block iff it is partial;
+        // shared partial blocks must be copied before the write.
+        let frontier = old_tokens % self.block_tokens != 0;
+        let cow = frontier && {
+            let fb = self.allocs[&id].blocks[old_tokens / self.block_tokens];
+            self.refcount[fb as usize] > 1
+        };
+        if tail + usize::from(cow)
+            > self.free.len() + self.reclaimable
+        {
+            return Err(KvError::OutOfMemory);
+        }
+        if cow {
+            let fi = old_tokens / self.block_tokens;
+            let old = self.allocs[&id].blocks[fi];
+            let copy = self.alloc_block().expect("capacity checked");
+            self.allocs.get_mut(&id).expect("resident").blocks[fi] = copy;
+            self.release_ref(old);
+            self.cow_copies += 1;
+        }
+        if tail > 0 {
+            let mut newb = Vec::with_capacity(tail);
+            for _ in 0..tail {
+                newb.push(self.alloc_block().expect("capacity checked"));
+            }
+            self.allocs
+                .get_mut(&id)
+                .expect("resident")
+                .blocks
+                .extend(newb);
+        }
+        self.allocs.get_mut(&id).expect("resident").tokens = new_tokens;
         Ok(())
     }
 
     /// Release a request's blocks (finish, eviction, or migration-out).
+    /// Cache-marked blocks are retained as reclaimable capacity; the rest
+    /// free immediately.
     pub fn release(&mut self, id: RequestId) -> Result<usize, KvError> {
         let alloc = self.allocs.remove(&id).ok_or(KvError::UnknownRequest)?;
         let tokens = alloc.tokens;
-        self.free.extend(alloc.blocks);
+        for b in alloc.blocks {
+            self.release_ref(b);
+        }
         Ok(tokens)
     }
 
     /// Blocks needed to admit `tokens` (exposed for eviction planning).
     pub fn blocks_needed(&self, tokens: usize) -> usize {
         self.blocks_for(tokens)
+    }
+
+    /// Internal-consistency audit for the property tests: every block is
+    /// exactly one of free / pinned / reclaimable, refcounts equal the
+    /// per-request membership counts, and the free list is duplicate-free.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen_free = vec![false; self.total_blocks];
+        for &b in &self.free {
+            let bi = b as usize;
+            if bi >= self.total_blocks {
+                return Err(format!("free block {b} out of range"));
+            }
+            if seen_free[bi] {
+                return Err(format!("block {b} twice on the free list"));
+            }
+            seen_free[bi] = true;
+            if self.refcount[bi] != 0 {
+                return Err(format!("free block {b} has refcount"));
+            }
+            if self.cached[bi] {
+                return Err(format!("free block {b} is cache-marked"));
+            }
+        }
+        let mut expected_rc = vec![0u32; self.total_blocks];
+        for (id, a) in &self.allocs {
+            if a.blocks.len() != self.blocks_for(a.tokens.max(1)) {
+                return Err(format!(
+                    "request {id}: {} blocks for {} tokens",
+                    a.blocks.len(),
+                    a.tokens
+                ));
+            }
+            for &b in &a.blocks {
+                expected_rc[b as usize] += 1;
+            }
+        }
+        let mut reclaimable = 0usize;
+        for b in 0..self.total_blocks {
+            if expected_rc[b] != self.refcount[b] {
+                return Err(format!(
+                    "block {b}: refcount {} but {} owners",
+                    self.refcount[b], expected_rc[b]
+                ));
+            }
+            if self.refcount[b] == 0 && !self.cached[b] && !seen_free[b] {
+                return Err(format!("block {b} leaked (not free, not held)"));
+            }
+            if self.cached[b] && self.refcount[b] == 0 {
+                reclaimable += 1;
+            }
+        }
+        if reclaimable != self.reclaimable {
+            return Err(format!(
+                "reclaimable count {} but {} blocks qualify",
+                self.reclaimable, reclaimable
+            ));
+        }
+        if self.free.len() + self.reclaimable + self.pinned_blocks()
+            != self.total_blocks
+        {
+            return Err("free + reclaimable + pinned != total".into());
+        }
+        Ok(())
     }
 }
 
@@ -172,6 +512,7 @@ mod tests {
         assert_eq!(m.release(1).unwrap(), 113);
         assert_eq!(m.used_blocks(), 0);
         assert_eq!(m.free_blocks(), 100);
+        m.check_invariants().unwrap();
     }
 
     #[test]
@@ -217,6 +558,120 @@ mod tests {
     }
 
     #[test]
+    fn shared_admission_refcounts_and_retains() {
+        let mut m = mgr();
+        m.admit(1, 33).unwrap(); // 3 blocks
+        let blocks = m.blocks_of(1).unwrap().to_vec();
+        // Register the first two blocks as prefix-cache content.
+        m.mark_cached(blocks[0]);
+        m.mark_cached(blocks[1]);
+        assert_eq!(m.reclaimable_blocks(), 0); // pinned while referenced
+
+        // A second request shares the cached prefix.
+        m.admit_shared(2, 40, &blocks[..2], None).unwrap();
+        assert_eq!(m.tokens_of(2), 40);
+        assert_eq!(m.blocks_of(2).unwrap()[..2], blocks[..2]);
+        // 3 private + 2 shared + 1 private tail for request 2.
+        assert_eq!(m.used_blocks(), 4);
+        m.check_invariants().unwrap();
+
+        // First owner leaves: shared blocks stay pinned by request 2.
+        m.release(1).unwrap();
+        assert_eq!(m.reclaimable_blocks(), 0);
+        m.check_invariants().unwrap();
+
+        // Second owner leaves: the cached prefix becomes reclaimable.
+        m.release(2).unwrap();
+        assert_eq!(m.reclaimable_blocks(), 2);
+        assert_eq!(m.pinned_blocks(), 0);
+        assert_eq!(m.free_tokens(), 100 * 16);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn partial_reuse_counts_cow() {
+        let mut m = mgr();
+        m.admit(1, 20).unwrap(); // 2 blocks, second partial
+        let blocks = m.blocks_of(1).unwrap().to_vec();
+        m.mark_cached(blocks[0]);
+        m.mark_cached(blocks[1]);
+        m.release(1).unwrap();
+        assert_eq!(m.reclaimable_blocks(), 2);
+
+        // Share the full block, copy-on-write the partial one.
+        m.admit_shared(2, 25, &blocks[..1], Some((blocks[1], 4)))
+            .unwrap();
+        assert_eq!(m.cow_copies, 1);
+        // The source partial block stays cached and reclaimable.
+        assert!(m.is_cached(blocks[1]));
+        assert_eq!(m.reclaimable_blocks(), 1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_reclaim_feeds_admissions_and_logs() {
+        let mut m = KvManager::new(64, 16); // 4 blocks
+        m.admit(1, 33).unwrap(); // 3 blocks
+        let blocks = m.blocks_of(1).unwrap().to_vec();
+        for &b in &blocks {
+            m.mark_cached(b);
+        }
+        m.release(1).unwrap();
+        assert_eq!(m.free_blocks(), 1);
+        assert_eq!(m.reclaimable_blocks(), 3);
+        assert!(m.can_fit(64));
+
+        // free_tokens honesty: the full pool is admittable.
+        m.admit(2, 64).unwrap();
+        assert_eq!(m.free_blocks(), 0);
+        assert_eq!(m.reclaimable_blocks(), 0);
+        // The three cached blocks were reclaimed oldest-first and logged.
+        let log = m.take_reclaimed();
+        assert_eq!(log, blocks);
+        assert!(m.take_reclaimed().is_empty());
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn grow_cow_on_shared_frontier() {
+        let mut m = mgr();
+        m.admit(1, 20).unwrap();
+        let blocks = m.blocks_of(1).unwrap().to_vec();
+        // Force a *referenced* shared partial frontier (the scheduler only
+        // produces this via admission CoW, but the allocator must guard).
+        m.admit_shared(2, 33, &[], None).unwrap();
+        let b2 = m.blocks_of(2).unwrap().to_vec();
+        let _ = b2;
+        // Manually alias: request 3 shares request 1's partial tail is not
+        // constructible through the public API (partial reuse copies), so
+        // exercise the guard through refcounts: share block 1 fully.
+        m.mark_cached(blocks[0]);
+        m.mark_cached(blocks[1]);
+        m.release(1).unwrap();
+        // Request 4 references both cached blocks; its frontier (token 32)
+        // starts a fresh block, so growth never writes shared state.
+        m.admit_shared(4, 33, &blocks[..2], None).unwrap();
+        m.grow(4, 20).unwrap();
+        assert_eq!(m.tokens_of(4), 53);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn unmark_cached_frees_unreferenced_blocks() {
+        let mut m = mgr();
+        m.admit(1, 32).unwrap();
+        let blocks = m.blocks_of(1).unwrap().to_vec();
+        m.mark_cached(blocks[0]);
+        m.release(1).unwrap();
+        assert_eq!(m.reclaimable_blocks(), 1);
+        assert!(m.unmark_cached(blocks[0]));
+        assert_eq!(m.reclaimable_blocks(), 0);
+        assert_eq!(m.free_blocks(), 100);
+        assert!(!m.unmark_cached(blocks[0])); // idempotent
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
     fn no_block_leaks_under_churn() {
         // Property: after any sequence of admit/grow/release, free + used
         // block counts always equal the pool size, and blocks are unique.
@@ -246,6 +701,7 @@ mod tests {
             }
             assert_eq!(m.used_blocks() + m.free_blocks(), m.total_blocks());
         }
+        m.check_invariants().unwrap();
         for id in live {
             m.release(id).unwrap();
         }

@@ -18,6 +18,7 @@ pub mod kvcache;
 pub mod metrics;
 pub mod perfmodel;
 pub mod pool;
+pub mod prefix;
 pub mod request;
 pub mod runtime;
 pub mod scheduler;
@@ -40,7 +41,8 @@ pub mod util;
 pub mod prelude {
     pub use crate::config::{
         ClusterSpec, HardwareProfile, LinkSharing, LinkSpec, ModelSpec,
-        PoolPolicy, SchedulerParams, ServingConfig, SloSpec, TransportSpec,
+        PoolPolicy, PrefixSpec, SchedulerParams, ServingConfig, SloSpec,
+        TransportSpec,
     };
     pub use crate::coordinator::{Ablation, OverloadMode, Policy};
     pub use crate::engine::{
@@ -49,11 +51,13 @@ pub mod prelude {
     };
     pub use crate::instance::PoolRole;
     pub use crate::metrics::{
-        LinkReport, PoolReport, Recorder, Report, TransportReport,
+        LinkReport, PoolReport, PrefixReport, Recorder, Report,
+        TransportReport,
     };
     pub use crate::perfmodel::{BatchStats, Bottleneck, PerfModel};
     pub use crate::pool::{LoadEstimator, PoolManager, PoolPlan};
-    pub use crate::request::{Class, Phase, Request, RequestId};
+    pub use crate::prefix::{PrefixIndex, PrefixMatch};
+    pub use crate::request::{Class, Phase, PrefixRef, Request, RequestId};
     pub use crate::scheduler::{
         Action, ClusterState, CoreConfig, ExecStats, Executor, InstanceRef,
         KvHome, RolePhase, SchedulerCore, StubWallClockExecutor,

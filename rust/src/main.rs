@@ -59,16 +59,23 @@ USAGE: ooco <serve|simulate|sweep|roofline|trace> [--flags]
             [--artifacts artifacts] [--seed 42]
   simulate  --model 7b --dataset azure-conv --online-rate 0.5
             --offline-qps 10 --duration 1800 --policy ooco
+            [--trace trace.json]  (replay a saved trace instead)
             [--relaxed 1 --strict 1]
             [--pool-policy static|periodic|reactive|'periodic(epoch=60,headroom=0.15)']
+            [--prefix-profile none|shared-system|few-shot|agentic]
+            [--prefix-cache true|false]
             [--ablation full] [--overload best-effort|shed] [--seed 42]
             [--json-out result.json]
   sweep     --policy ooco --online-rate 0.5 --qps 1,2,4,8 --duration 600
             [--pool-policy static] [--relaxed 1 --strict 1]
+            [--prefix-profile shared-system|few-shot|agentic]
+            [--prefix-cache true|false]
             [--json-out curve.json]
   roofline  --model 7b --hw 910c --batch 128 --kv-len 1000 --prompt 1892
   trace     --dataset azure-conv --rate 1.0 --duration 3600 --scale 1.0
-            --out trace.json [--offline-qps 0]"
+            --out trace.json [--offline-qps 0]
+            [--prefix-profile 'shared-system(len=1024)'|'few-shot(groups=8,len=1024)'|'agentic(convs=16,turns=6)']
+            (shared-prefix families apply to the offline portion)"
     );
 }
 
@@ -113,16 +120,30 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    use ooco::trace::generator::offline_trace_with_prefix;
+    use ooco::trace::PrefixProfile;
+
     let seed = args.u64("seed", 42);
     let duration = args.f64("duration", 1800.0);
-    let online_ds = DatasetProfile::by_name(args.str("dataset", "azure-conv"))?;
-    let trace = online_trace(online_ds, args.f64("online-rate", 0.5), duration, seed)
-        .merge(offline_trace(
-            DatasetProfile::ooc_offline(),
-            args.f64("offline-qps", 10.0),
-            duration,
-            seed + 1,
-        ));
+    let trace = match args.opt_str("trace") {
+        Some(path) => {
+            ooco::trace::io::load_trace(std::path::Path::new(path))?
+        }
+        None => {
+            let online_ds =
+                DatasetProfile::by_name(args.str("dataset", "azure-conv"))?;
+            let prefix: PrefixProfile =
+                args.parse_flag("prefix-profile", PrefixProfile::None)?;
+            online_trace(online_ds, args.f64("online-rate", 0.5), duration, seed)
+                .merge(offline_trace_with_prefix(
+                    DatasetProfile::ooc_offline(),
+                    args.f64("offline-qps", 10.0),
+                    duration,
+                    prefix,
+                    seed + 1,
+                ))
+        }
+    };
     let serving = serving_from_args(args)?;
     let mut cfg =
         SimConfig::new(serving, args.parse_flag("policy", Policy::Ooco)?);
@@ -145,6 +166,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     if cfg.serving.pool.is_elastic() {
         println!("{}", res.pool.summary_line());
     }
+    if cfg.serving.prefix.enabled && res.prefix.lookups > 0 {
+        println!("{}", res.prefix.summary_line());
+    }
     if let Some(path) = args.opt_str("json-out") {
         let out = Json::obj(vec![
             ("policy", Json::Str(cfg.policy.to_string())),
@@ -153,6 +177,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             ("report", res.report.to_json()),
             ("transport", res.transport.to_json()),
             ("pool", res.pool.to_json()),
+            ("prefix", res.prefix.to_json()),
         ]);
         std::fs::write(path, out.to_pretty())?;
         println!("wrote machine-readable result to {path}");
@@ -175,6 +200,8 @@ fn serving_from_args(args: &Args) -> anyhow::Result<ServingConfig> {
     serving.cluster.strict_instances =
         args.usize("strict", serving.cluster.strict_instances);
     serving.pool = args.parse_flag("pool-policy", serving.pool)?;
+    serving.prefix.enabled =
+        args.bool("prefix-cache", serving.prefix.enabled);
     Ok(serving)
 }
 
@@ -191,6 +218,10 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         duration_s: args.f64("duration", 600.0),
         seed: args.u64("seed", 42),
         ablation: args.parse_flag("ablation", ooco::coordinator::Ablation::full())?,
+        offline_prefix: args.parse_flag(
+            "prefix-profile",
+            ooco::trace::PrefixProfile::None,
+        )?,
     };
     let points = offline_sweep(
         &serving,
@@ -203,12 +234,13 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     );
     for p in &points {
         println!(
-            "qps {:6.2} | attainment {:6.2}% | offline {:8.1} tok/s | ttft p99 {:.3}s tpot p99 {:.1}ms",
+            "qps {:6.2} | attainment {:6.2}% | offline {:8.1} tok/s | ttft p99 {:.3}s tpot p99 {:.1}ms | prefix hit {:.1}%",
             p.offline_qps,
             (1.0 - p.violation_rate) * 100.0,
             p.offline_token_throughput,
             p.ttft_p99,
             p.tpot_p99 * 1e3,
+            p.prefix_hit_rate * 100.0,
         );
     }
     let label = format!("{policy}+{}", serving.pool);
@@ -243,18 +275,29 @@ fn cmd_roofline(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    use ooco::trace::generator::offline_trace_with_prefix;
+    use ooco::trace::PrefixProfile;
+
     let seed = args.u64("seed", 42);
     let duration = args.f64("duration", 3600.0);
     let ds = DatasetProfile::by_name(args.str("dataset", "azure-conv"))?;
     let mut trace = online_trace(ds, args.f64("rate", 1.0), duration, seed);
     let offline_qps = args.f64("offline-qps", 0.0);
+    let prefix: PrefixProfile =
+        args.parse_flag("prefix-profile", PrefixProfile::None)?;
     if offline_qps > 0.0 {
-        trace = trace.merge(offline_trace(
+        trace = trace.merge(offline_trace_with_prefix(
             DatasetProfile::ooc_offline(),
             offline_qps,
             duration,
+            prefix,
             seed + 1,
         ));
+    } else if prefix != PrefixProfile::None {
+        anyhow::bail!(
+            "--prefix-profile applies to the offline portion; set \
+             --offline-qps > 0"
+        );
     }
     let scale = args.f64("scale", 1.0);
     if (scale - 1.0).abs() > 1e-9 {

@@ -198,6 +198,90 @@ impl PoolReport {
     }
 }
 
+/// Prefix-sharing KV cache metrics over one run (DESIGN.md §3.7).
+#[derive(Debug, Clone)]
+pub struct PrefixReport {
+    pub enabled: bool,
+    /// Cache resolutions at prefill admission (declared-prefix requests).
+    pub lookups: u64,
+    /// Resolutions matching at least one cached block.
+    pub hits: u64,
+    /// Token-weighted hit rate: prompt tokens served from cache over all
+    /// prompt tokens admitted to prefill.
+    pub hit_rate: f64,
+    /// Prompt tokens whose prefill recompute was skipped.
+    pub prefill_tokens_saved: u64,
+    /// Per-scheduled-class breakdown of the saving.
+    pub online_tokens_saved: u64,
+    pub offline_tokens_saved: u64,
+    /// KV tokens not moved by dispatch/migration/rescue/restore because
+    /// the destination already held the blocks.
+    pub transfer_tokens_saved: u64,
+    /// Copy-on-write block copies (partial-block divergence).
+    pub cow_copies: u64,
+    /// Reclaimable cache blocks evicted (LRU reclaim + drain purges).
+    pub evicted_blocks: u64,
+    /// Time-integral of reclaimable cached blocks (block·s): capacity held
+    /// as cache while remaining admittable.
+    pub reclaimed_block_s: f64,
+    /// Reclaimable cache blocks at the end of the run.
+    pub cached_blocks_final: usize,
+}
+
+impl PrefixReport {
+    /// One-line summary for bench output.
+    pub fn summary_line(&self) -> String {
+        if !self.enabled {
+            return "prefix: disabled".into();
+        }
+        format!(
+            "prefix: hit {:.1}% ({}/{} lookups) | saved {} prefill tok ({} online / {} offline) + {} transfer tok | cow {} | evicted {} blocks | reclaimable {:.0} block·s",
+            self.hit_rate * 100.0,
+            self.hits,
+            self.lookups,
+            self.prefill_tokens_saved,
+            self.online_tokens_saved,
+            self.offline_tokens_saved,
+            self.transfer_tokens_saved,
+            self.cow_copies,
+            self.evicted_blocks,
+            self.reclaimed_block_s,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.enabled)),
+            ("lookups", Json::Num(self.lookups as f64)),
+            ("hits", Json::Num(self.hits as f64)),
+            ("hit_rate", Json::Num(self.hit_rate)),
+            (
+                "prefill_tokens_saved",
+                Json::Num(self.prefill_tokens_saved as f64),
+            ),
+            (
+                "online_tokens_saved",
+                Json::Num(self.online_tokens_saved as f64),
+            ),
+            (
+                "offline_tokens_saved",
+                Json::Num(self.offline_tokens_saved as f64),
+            ),
+            (
+                "transfer_tokens_saved",
+                Json::Num(self.transfer_tokens_saved as f64),
+            ),
+            ("cow_copies", Json::Num(self.cow_copies as f64)),
+            ("evicted_blocks", Json::Num(self.evicted_blocks as f64)),
+            ("reclaimed_block_s", Json::Num(self.reclaimed_block_s)),
+            (
+                "cached_blocks_final",
+                Json::Num(self.cached_blocks_final as f64),
+            ),
+        ])
+    }
+}
+
 /// Outcome snapshot for one finished (or dropped) request.
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
@@ -554,6 +638,37 @@ mod tests {
             j.get("epochs").idx(0).get("est_online_rate").as_f64(),
             Some(4.0)
         );
+    }
+
+    #[test]
+    fn prefix_report_summary_and_json() {
+        let rep = PrefixReport {
+            enabled: true,
+            lookups: 10,
+            hits: 7,
+            hit_rate: 0.42,
+            prefill_tokens_saved: 4200,
+            online_tokens_saved: 1200,
+            offline_tokens_saved: 3000,
+            transfer_tokens_saved: 500,
+            cow_copies: 3,
+            evicted_blocks: 9,
+            reclaimed_block_s: 120.5,
+            cached_blocks_final: 11,
+        };
+        let line = rep.summary_line();
+        assert!(line.contains("hit 42.0%"), "{line}");
+        assert!(line.contains("cow 3"), "{line}");
+        let j = rep.to_json();
+        assert_eq!(j.get("hit_rate").as_f64(), Some(0.42));
+        assert_eq!(j.get("prefill_tokens_saved").as_f64(), Some(4200.0));
+        assert_eq!(j.get("evicted_blocks").as_f64(), Some(9.0));
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        let off = PrefixReport {
+            enabled: false,
+            ..rep
+        };
+        assert_eq!(off.summary_line(), "prefix: disabled");
     }
 
     #[test]

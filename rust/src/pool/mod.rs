@@ -32,8 +32,8 @@ pub mod transition;
 
 pub use estimator::{ClassLoad, LoadEstimator};
 pub use planner::{
-    max_slo_batch, min_strict_pool, pressure_with_capacity, strict_pressure,
-    PlannerInput,
+    max_slo_batch, max_slo_batch_shared, min_strict_pool,
+    pressure_with_capacity, strict_pressure, PlannerInput,
 };
 pub use transition::{Transition, TransitionPhase, WARMUP_S};
 
@@ -52,6 +52,10 @@ const REACTIVE_CHECK_S: f64 = 1.0;
 /// struct-literal `epoch_s: 0.0` from spinning the epoch catch-up loop
 /// forever.
 const MIN_EPOCH_S: f64 = 1e-3;
+
+/// EWMA smoothing weight of the prefix-cache hit-share estimate fed to the
+/// planner's cache-adjusted KV footprint (DESIGN.md §3.7).
+const SHARE_ALPHA: f64 = 0.05;
 
 /// One repartition decision, returned by [`PoolManager::replan`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -74,6 +78,9 @@ pub struct PoolManager {
     next_epoch_at: f64,
     next_check_at: f64,
     cooldown_until: f64,
+    /// EWMA fraction of admitted prompt tokens served from the prefix
+    /// cache — the planner's cache-adjusted load signal.
+    prefix_share: f64,
     // ---- metrics ----
     epochs: Vec<PoolEpoch>,
     transition_s: Vec<f64>,
@@ -97,6 +104,7 @@ impl PoolManager {
             next_epoch_at,
             next_check_at: 0.0,
             cooldown_until: 0.0,
+            prefix_share: 0.0,
             epochs: Vec::new(),
             transition_s: Vec::new(),
             plans: 0,
@@ -118,6 +126,22 @@ impl PoolManager {
         if self.policy.is_elastic() {
             self.estimator.observe_arrival(now, class, prompt, output);
         }
+    }
+
+    /// Feed one prefill admission's cache outcome (`cached` of `total`
+    /// prompt tokens served from the prefix cache) into the share EWMA the
+    /// planner consumes. Work the cache absorbs must not inflate the plan.
+    pub fn observe_prefix(&mut self, cached: usize, total: usize) {
+        if !self.policy.is_elastic() || total == 0 {
+            return;
+        }
+        let x = (cached as f64 / total as f64).clamp(0.0, 1.0);
+        self.prefix_share += SHARE_ALPHA * (x - self.prefix_share);
+    }
+
+    /// Current cache-share estimate (exposed for tests/metrics).
+    pub fn prefix_share(&self) -> f64 {
+        self.prefix_share
     }
 
     /// Compute a repartition plan if one is due at `now` (Periodic epoch
@@ -144,7 +168,8 @@ impl PoolManager {
                     self.next_epoch_at += epoch_s;
                 }
                 let online = self.estimator.online(now);
-                let load = PlannerInput::from_load(&online);
+                let mut load = PlannerInput::from_load(&online);
+                load.shared_kv_fraction = self.prefix_share;
                 let target = min_strict_pool(pm, slo, &load, total, headroom)
                     .clamp(1, total.saturating_sub(1).max(1));
                 let rates = (online.rate, self.estimator.offline(now).rate);
@@ -159,12 +184,18 @@ impl PoolManager {
                     return None;
                 }
                 let online = self.estimator.online(now);
-                let load = PlannerInput::from_load(&online);
+                let mut load = PlannerInput::from_load(&online);
+                load.shared_kv_fraction = self.prefix_share;
                 // One roofline capacity probe serves both threshold
                 // checks (`strict_pressure` would rerun its binary search
                 // per call; per-instance capacity does not depend on n).
                 let concurrent = load.concurrent_decodes(slo.tpot);
-                let per_inst = max_slo_batch(pm, load.mean_kv(), slo.tpot);
+                let per_inst = max_slo_batch_shared(
+                    pm,
+                    load.mean_kv(),
+                    slo.tpot,
+                    load.shared_kv_fraction,
+                );
                 let pressure =
                     |n: usize| pressure_with_capacity(concurrent, per_inst, n);
                 let target = if pressure(n_strict) > up && n_relaxed > 1 {
@@ -351,6 +382,25 @@ mod tests {
             .replan(100.0, &perf, &slo, 1, 4)
             .expect("idle overprovision must trigger shrink");
         assert_eq!(plan.strict_target, 3);
+    }
+
+    #[test]
+    fn prefix_share_tracks_admissions_when_elastic() {
+        let mut mgr = PoolManager::new(PoolPolicy::DEFAULT_PERIODIC);
+        assert_eq!(mgr.prefix_share(), 0.0);
+        for _ in 0..200 {
+            mgr.observe_prefix(60, 100);
+        }
+        assert!(
+            (mgr.prefix_share() - 0.6).abs() < 0.05,
+            "share {}",
+            mgr.prefix_share()
+        );
+        mgr.observe_prefix(0, 0); // no-op, not a division by zero
+        // Static pools ignore the signal entirely.
+        let mut st = PoolManager::new(PoolPolicy::Static);
+        st.observe_prefix(60, 100);
+        assert_eq!(st.prefix_share(), 0.0);
     }
 
     #[test]

@@ -29,6 +29,14 @@ pub struct PlannerInput {
     pub mean_prompt: f64,
     /// Mean online output length (tokens).
     pub mean_output: f64,
+    /// EWMA fraction of admitted prompt tokens served from the prefix
+    /// cache (DESIGN.md §3.7). Shared blocks are resident **once** per
+    /// instance, not per request, so the planner's per-instance KV
+    /// *capacity* check deflates the footprint by this fraction — without
+    /// it, repartitioning would size the strict pool for KV the cache
+    /// already deduplicates. Latency stays undeflated: attention reads
+    /// every token per request regardless of block sharing. 0 = no cache.
+    pub shared_kv_fraction: f64,
 }
 
 impl PlannerInput {
@@ -37,6 +45,7 @@ impl PlannerInput {
             online_rate: l.rate,
             mean_prompt: l.mean_prompt,
             mean_output: l.mean_output,
+            shared_kv_fraction: 0.0,
         }
     }
 
@@ -54,18 +63,28 @@ impl PlannerInput {
 }
 
 /// Is a strict pool of `n` instances sufficient for `concurrent` decodes
-/// of `mean_kv` tokens each within `budget` seconds per token?
+/// of `mean_kv` tokens each within `budget` seconds per token? `share` is
+/// the prefix-cache dedup fraction: it shrinks the resident footprint the
+/// capacity check sees, never the latency (attention reads all tokens).
 fn pool_feasible(
     pm: &PerfModel,
     n: usize,
     concurrent: f64,
     mean_kv: f64,
+    share: f64,
     budget: f64,
 ) -> bool {
     let batch = (concurrent / n as f64).ceil().max(1.0) as usize;
     let kv_tokens = (batch as f64 * mean_kv).ceil() as usize;
-    kv_tokens <= pm.max_kv_tokens()
+    let resident = unique_kv(kv_tokens, share);
+    resident <= pm.max_kv_tokens()
         && pm.decode_latency(BatchStats::new(batch, kv_tokens)) <= budget
+}
+
+/// Deduplicated resident footprint of `kv_tokens` at cache share `share`.
+fn unique_kv(kv_tokens: usize, share: f64) -> usize {
+    let share = share.clamp(0.0, 0.95);
+    ((kv_tokens as f64) * (1.0 - share)).ceil() as usize
 }
 
 /// Minimum strict-pool size (out of `total` instances) meeting the TPOT
@@ -87,7 +106,14 @@ pub fn min_strict_pool(
     }
     let mean_kv = load.mean_kv();
     for n in 1..total {
-        if pool_feasible(pm, n, concurrent, mean_kv, budget) {
+        if pool_feasible(
+            pm,
+            n,
+            concurrent,
+            mean_kv,
+            load.shared_kv_fraction,
+            budget,
+        ) {
             return n;
         }
     }
@@ -101,10 +127,21 @@ pub fn min_strict_pool(
 /// capacity figure the `Reactive` trigger compares pressure against.
 /// Returns 0 when even a single request misses the budget.
 pub fn max_slo_batch(pm: &PerfModel, mean_kv: f64, budget: f64) -> usize {
+    max_slo_batch_shared(pm, mean_kv, budget, 0.0)
+}
+
+/// [`max_slo_batch`] with prefix-cache dedup: the KV *capacity* bound sees
+/// the deduplicated footprint, the latency bound the full token count.
+pub fn max_slo_batch_shared(
+    pm: &PerfModel,
+    mean_kv: f64,
+    budget: f64,
+    share: f64,
+) -> usize {
     let mean_kv = mean_kv.max(1.0);
     let fits = |b: usize| -> bool {
         let kv = (b as f64 * mean_kv).ceil() as usize;
-        kv <= pm.max_kv_tokens()
+        unique_kv(kv, share) <= pm.max_kv_tokens()
             && pm.decode_latency(BatchStats::new(b, kv)) <= budget
     };
     if !fits(1) {
@@ -156,7 +193,12 @@ pub fn strict_pressure(
 ) -> f64 {
     pressure_with_capacity(
         load.concurrent_decodes(slo.tpot),
-        max_slo_batch(pm, load.mean_kv(), slo.tpot),
+        max_slo_batch_shared(
+            pm,
+            load.mean_kv(),
+            slo.tpot,
+            load.shared_kv_fraction,
+        ),
         n,
     )
 }
@@ -176,6 +218,7 @@ mod tests {
             online_rate: rate,
             mean_prompt: 1500.0,
             mean_output: 100.0,
+            shared_kv_fraction: 0.0,
         }
     }
 
@@ -229,6 +272,35 @@ mod tests {
         assert!(over, "max_slo_batch {b} is not maximal");
         // Impossible budget -> zero.
         assert_eq!(max_slo_batch(&pm, 1550.0, 1e-9), 0);
+    }
+
+    #[test]
+    fn cache_share_never_grows_the_plan() {
+        // The deduplicated footprint relaxes only the KV-capacity bound:
+        // a shared-prefix workload can need fewer strict instances at the
+        // same load, never more (memory-bound regime), and the latency
+        // bound keeps the plan honest.
+        let (pm, slo) = setup();
+        let mut squeezed = ServingConfig::preset_7b();
+        squeezed.hardware.mem_capacity = 18e9; // KV capacity binds
+        let pm_sq =
+            PerfModel::new(squeezed.model.clone(), squeezed.hardware.clone());
+        for rate in [0.5, 2.0, 8.0, 32.0] {
+            let mut shared = load(rate);
+            shared.shared_kv_fraction = 0.7;
+            for (p, label) in [(&pm, "roomy"), (&pm_sq, "squeezed")] {
+                let base = min_strict_pool(p, &slo, &load(rate), 8, 0.15);
+                let with = min_strict_pool(p, &slo, &shared, 8, 0.15);
+                assert!(
+                    with <= base,
+                    "{label} rate {rate}: share grew plan {base} -> {with}"
+                );
+            }
+        }
+        // And the per-instance capacity figure grows (or holds) with share.
+        let b0 = max_slo_batch_shared(&pm_sq, 1550.0, slo.tpot, 0.0);
+        let b7 = max_slo_batch_shared(&pm_sq, 1550.0, slo.tpot, 0.7);
+        assert!(b7 >= b0, "share shrank capacity {b0} -> {b7}");
     }
 
     #[test]

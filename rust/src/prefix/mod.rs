@@ -1,0 +1,510 @@
+//! Prefix-sharing KV cache subsystem (DESIGN.md §3.7): a radix-tree index
+//! over hashed token blocks, layered on the refcounted
+//! [`crate::kvcache::KvManager`].
+//!
+//! Offline co-located workloads (batch jobs over one system prompt,
+//! few-shot templates, multi-turn agentic loops) overwhelmingly share
+//! prompt prefixes. The simulator carries no real token content, so shared
+//! content is modeled *by identity*: a request declares a prefix family and
+//! a shareable length ([`crate::request::PrefixRef`]), and the first `len`
+//! tokens of every request in a family are — by construction of the trace —
+//! the same tokens. Block `i` of a family's chain therefore has a stable
+//! [`BlockKey`] derived from `(family, i)`, exactly the role a content hash
+//! of the block's tokens plays in a real engine (vLLM/SGLang-style
+//! hash-block prefix caching).
+//!
+//! Each instance owns one [`PrefixIndex`] next to its `KvManager`. The
+//! index maps key chains to *physical* blocks resident on that instance:
+//!
+//! - **lookup** walks the chain and returns the longest cached prefix as
+//!   referencable full blocks plus, when the request's shareable span ends
+//!   inside a block, one partially usable block (taken by copy-on-write —
+//!   the block's leading tokens are reused, the copy diverges);
+//! - **insert** registers a freshly prefilled chain, upgrading partial
+//!   entries when a fuller version of the same block appears;
+//! - **forget/purge** drop chain nodes whose blocks the allocator's LRU
+//!   reclaimed (cached blocks are *reclaimable capacity*, not used
+//!   capacity — see `KvManager::free_tokens`).
+//!
+//! Staleness is tolerated by validation instead of strict ordering: every
+//! node dereference checks that its block is still cache-marked in the
+//! allocator, so an LRU reclaim that has not yet been synced back into the
+//! index can never hand out a reallocated block.
+
+use std::collections::HashMap;
+
+use crate::kvcache::KvManager;
+
+/// Stable identity of one cached token block: stands in for a content hash
+/// of the block's tokens.
+pub type BlockKey = u64;
+
+/// splitmix64 — deterministic across platforms (unlike `DefaultHasher`).
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Key of block `index` in `family`'s token chain.
+pub fn chain_key(family: u64, index: usize) -> BlockKey {
+    splitmix64(family ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Result of resolving a request's shareable prefix against an instance's
+/// cache.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PrefixMatch {
+    /// Fully matched blocks, in chain order — referenced (refcounted) by
+    /// the admitted request, zero recompute.
+    pub full_blocks: Vec<u32>,
+    /// Tokens covered by `full_blocks`.
+    pub full_tokens: usize,
+    /// A terminal partially usable block: `(block, tokens)` — reused by
+    /// copy-on-write (the request's continuation diverges inside it).
+    pub partial: Option<(u32, usize)>,
+    /// Total prompt tokens whose KV needs no recompute
+    /// (`full_tokens` + the partial contribution).
+    pub cached_tokens: usize,
+}
+
+impl PrefixMatch {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Cache entries this match touches (full + partial).
+    pub fn cached_blocks(&self) -> usize {
+        self.full_blocks.len() + usize::from(self.partial.is_some())
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    key: BlockKey,
+    /// Physical block in the co-resident `KvManager` holding this content.
+    block: u32,
+    /// Tokens of chain content in the block (== block size for interior
+    /// nodes; the chain's last node may be partial).
+    tokens: usize,
+    parent: Option<usize>,
+    children: Vec<usize>,
+    live: bool,
+}
+
+/// Radix-tree prefix index of one instance (DESIGN.md §3.7). Chains with a
+/// common ancestry share nodes: multi-turn agentic families extend one
+/// path, distinct few-shot templates branch at the root.
+#[derive(Debug)]
+pub struct PrefixIndex {
+    block_tokens: usize,
+    nodes: Vec<Node>,
+    free_nodes: Vec<usize>,
+    /// Top-level chain heads (block 0 of each family).
+    roots: Vec<usize>,
+    /// Physical block -> node, for reclaim-driven removal.
+    block_node: HashMap<u32, usize>,
+    live: usize,
+}
+
+impl PrefixIndex {
+    pub fn new(block_tokens: usize) -> Self {
+        assert!(block_tokens > 0);
+        PrefixIndex {
+            block_tokens,
+            nodes: Vec::new(),
+            free_nodes: Vec::new(),
+            roots: Vec::new(),
+            block_node: HashMap::new(),
+            live: 0,
+        }
+    }
+
+    /// Number of cached chain entries.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    fn children_of(&self, parent: Option<usize>) -> &[usize] {
+        match parent {
+            Some(p) => &self.nodes[p].children,
+            None => &self.roots,
+        }
+    }
+
+    fn child_with_key(&self, parent: Option<usize>, key: BlockKey) -> Option<usize> {
+        self.children_of(parent)
+            .iter()
+            .copied()
+            .find(|&n| self.nodes[n].live && self.nodes[n].key == key)
+    }
+
+    /// Longest cached prefix of `family`'s chain usable for a request whose
+    /// shareable span is `want` tokens. Pure: recency touching is the
+    /// caller's job (`KvManager::touch_blocks`) so the borrow stays shared.
+    pub fn lookup(&self, family: u64, want: usize, kv: &KvManager) -> PrefixMatch {
+        let bt = self.block_tokens;
+        let mut m = PrefixMatch::empty();
+        let mut parent: Option<usize> = None;
+        let mut i = 0usize;
+        while m.cached_tokens < want {
+            let Some(n) = self.child_with_key(parent, chain_key(family, i)) else {
+                break;
+            };
+            let node = &self.nodes[n];
+            // Stale-entry guard: the allocator's LRU may have reclaimed
+            // this block before the index was synced.
+            if !kv.is_cached(node.block) {
+                break;
+            }
+            let remaining = want - m.cached_tokens;
+            if node.tokens == bt && remaining >= bt {
+                m.full_blocks.push(node.block);
+                m.full_tokens += bt;
+                m.cached_tokens += bt;
+                parent = Some(n);
+                i += 1;
+            } else {
+                // Terminal: either the cached block is partial, or the
+                // request's shareable span ends inside this (full) block.
+                // Its leading tokens are reused by copy-on-write.
+                let t = node.tokens.min(remaining);
+                if t > 0 {
+                    m.partial = Some((node.block, t));
+                    m.cached_tokens += t;
+                }
+                break;
+            }
+        }
+        m
+    }
+
+    /// Register the first `upto` tokens of `family`'s chain, whose KV lives
+    /// in `blocks` (the admitted request's block list, chain order).
+    /// Existing entries are kept when at least as full, upgraded when this
+    /// request carries a fuller version, and replaced when stale.
+    pub fn insert(
+        &mut self,
+        family: u64,
+        upto: usize,
+        blocks: &[u32],
+        kv: &mut KvManager,
+    ) {
+        let bt = self.block_tokens;
+        let mut parent: Option<usize> = None;
+        for (i, &block) in blocks.iter().enumerate() {
+            let covered = i * bt;
+            if covered >= upto {
+                break;
+            }
+            let t = bt.min(upto - covered);
+            let key = chain_key(family, i);
+            let n = match self.child_with_key(parent, key) {
+                Some(n)
+                    if kv.is_cached(self.nodes[n].block)
+                        && self.nodes[n].tokens >= t =>
+                {
+                    n // already cached as good or better
+                }
+                Some(n) => {
+                    // Upgrade a partial (or stale) entry with our block.
+                    // The replacement's coverage is exactly `t`: a stale
+                    // full entry re-registered by a shallower chain must
+                    // NOT keep its old token count, or lookups would serve
+                    // family tokens the new block does not hold (and walk
+                    // on into descendants never re-materialized).
+                    let old = self.nodes[n].block;
+                    if old != block {
+                        kv.unmark_cached(old);
+                        self.block_node.remove(&old);
+                        self.drop_stale_mapping(block, kv);
+                        self.nodes[n].block = block;
+                        self.block_node.insert(block, n);
+                    }
+                    kv.mark_cached(block);
+                    self.nodes[n].tokens = t;
+                    n
+                }
+                None => {
+                    self.drop_stale_mapping(block, kv);
+                    let n = self.alloc_node(key, block, t, parent);
+                    kv.mark_cached(block);
+                    self.block_node.insert(block, n);
+                    n
+                }
+            };
+            if self.nodes[n].tokens < bt {
+                break; // a partial block terminates the chain
+            }
+            parent = Some(n);
+        }
+    }
+
+    fn alloc_node(
+        &mut self,
+        key: BlockKey,
+        block: u32,
+        tokens: usize,
+        parent: Option<usize>,
+    ) -> usize {
+        let node = Node {
+            key,
+            block,
+            tokens,
+            parent,
+            children: Vec::new(),
+            live: true,
+        };
+        let n = match self.free_nodes.pop() {
+            Some(n) => {
+                self.nodes[n] = node;
+                n
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        };
+        match parent {
+            Some(p) => self.nodes[p].children.push(n),
+            None => self.roots.push(n),
+        }
+        self.live += 1;
+        n
+    }
+
+    /// A block being (re-)registered may still carry a stale mapping from
+    /// a chain whose content was reclaimed and reallocated before the
+    /// allocator log was synced; drop that old entry so one physical block
+    /// never backs two chain positions.
+    fn drop_stale_mapping(&mut self, block: u32, kv: &mut KvManager) {
+        if let Some(&stale) = self.block_node.get(&block) {
+            self.remove_subtree(stale, kv, block);
+        }
+    }
+
+    /// Drop the chain entries of LRU-reclaimed `blocks` plus their (now
+    /// unreachable) descendants. Returns how many *additional* blocks were
+    /// unmarked from the cache beyond the input (descendant entries).
+    pub fn forget_blocks(&mut self, blocks: &[u32], kv: &mut KvManager) -> usize {
+        let mut extra = 0usize;
+        for &b in blocks {
+            let Some(&n) = self.block_node.get(&b) else {
+                continue;
+            };
+            extra += self.remove_subtree(n, kv, b);
+        }
+        extra
+    }
+
+    /// Remove `n` and its whole subtree; count cache entries dropped other
+    /// than `origin` (which the allocator already uncached).
+    fn remove_subtree(&mut self, n: usize, kv: &mut KvManager, origin: u32) -> usize {
+        // Detach from the parent first so the walk below owns the subtree.
+        match self.nodes[n].parent {
+            Some(p) => self.nodes[p].children.retain(|&c| c != n),
+            None => self.roots.retain(|&c| c != n),
+        }
+        let mut dropped = 0usize;
+        let mut stack = vec![n];
+        while let Some(x) = stack.pop() {
+            stack.extend(self.nodes[x].children.drain(..));
+            let block = self.nodes[x].block;
+            self.block_node.remove(&block);
+            if block != origin && kv.is_cached(block) {
+                kv.unmark_cached(block);
+                dropped += 1;
+            }
+            self.nodes[x].live = false;
+            self.free_nodes.push(x);
+            self.live -= 1;
+        }
+        dropped
+    }
+
+    /// Drop every cached chain (drain-for-flip hygiene). Returns the number
+    /// of cache entries removed.
+    pub fn purge(&mut self, kv: &mut KvManager) -> usize {
+        let mut dropped = 0usize;
+        for n in 0..self.nodes.len() {
+            if !self.nodes[n].live {
+                continue;
+            }
+            let block = self.nodes[n].block;
+            if kv.is_cached(block) {
+                kv.unmark_cached(block);
+            }
+            dropped += 1;
+            self.nodes[n].live = false;
+            self.nodes[n].children.clear();
+            self.free_nodes.push(n);
+        }
+        self.block_node.clear();
+        self.roots.clear();
+        self.live = 0;
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (PrefixIndex, KvManager) {
+        (PrefixIndex::new(16), KvManager::new(1600, 16))
+    }
+
+    /// Admit a request, hand its blocks to the caller, and register the
+    /// chain (the shape of a prefill completion).
+    fn prefill(
+        idx: &mut PrefixIndex,
+        kv: &mut KvManager,
+        id: u64,
+        family: u64,
+        tokens: usize,
+        upto: usize,
+    ) -> Vec<u32> {
+        kv.admit(id, tokens).unwrap();
+        let blocks = kv.blocks_of(id).unwrap().to_vec();
+        idx.insert(family, upto, &blocks, kv);
+        blocks
+    }
+
+    #[test]
+    fn lookup_matches_full_and_partial_blocks() {
+        let (mut idx, mut kv) = setup();
+        // 40 shareable tokens = 2 full blocks + 8 in the third.
+        let blocks = prefill(&mut idx, &mut kv, 1, 7, 41, 40);
+        assert_eq!(idx.len(), 3);
+
+        let m = idx.lookup(7, 40, &kv);
+        assert_eq!(m.full_blocks, blocks[..2].to_vec());
+        assert_eq!(m.full_tokens, 32);
+        assert_eq!(m.partial, Some((blocks[2], 8)));
+        assert_eq!(m.cached_tokens, 40);
+
+        // A shorter shareable span ends inside block 1: partial reuse of a
+        // full block.
+        let m = idx.lookup(7, 20, &kv);
+        assert_eq!(m.full_blocks.len(), 1);
+        assert_eq!(m.partial, Some((blocks[1], 4)));
+        assert_eq!(m.cached_tokens, 20);
+
+        // Unknown family: miss.
+        assert_eq!(idx.lookup(8, 40, &kv), PrefixMatch::empty());
+    }
+
+    #[test]
+    fn insert_upgrades_partial_entries() {
+        let (mut idx, mut kv) = setup();
+        prefill(&mut idx, &mut kv, 1, 7, 21, 20); // blocks 0 full, 1 partial(4)
+        let m = idx.lookup(7, 40, &kv);
+        assert_eq!(m.cached_tokens, 20);
+
+        // A deeper request of the same family upgrades the chain.
+        prefill(&mut idx, &mut kv, 2, 7, 49, 48);
+        let m = idx.lookup(7, 48, &kv);
+        assert_eq!(m.full_tokens, 48);
+        assert_eq!(m.partial, None);
+        assert_eq!(m.cached_tokens, 48);
+    }
+
+    #[test]
+    fn stale_blocks_never_match() {
+        let (mut idx, mut kv) = setup();
+        let blocks = prefill(&mut idx, &mut kv, 1, 7, 33, 32);
+        kv.release(1).unwrap(); // chain becomes reclaimable
+        assert!(idx.lookup(7, 32, &kv).cached_tokens == 32);
+        // Fill the pool: the allocator reclaims the LRU chain blocks.
+        kv.admit(2, 1600).unwrap();
+        let reclaimed = kv.take_reclaimed();
+        assert!(!reclaimed.is_empty());
+        // Unsynced index entries validate against the allocator and miss.
+        assert_eq!(idx.lookup(7, 32, &kv), PrefixMatch::empty());
+        let extra = idx.forget_blocks(&reclaimed, &mut kv);
+        // Both chain entries drop (reclaimed blocks plus descendants).
+        assert_eq!(idx.len(), 0);
+        let _ = (blocks, extra);
+    }
+
+    #[test]
+    fn forget_removes_descendants() {
+        let (mut idx, mut kv) = setup();
+        let blocks = prefill(&mut idx, &mut kv, 1, 7, 49, 48);
+        kv.release(1).unwrap();
+        assert_eq!(idx.len(), 3);
+        // Simulate the allocator reclaiming the chain head.
+        kv.unmark_cached(blocks[0]);
+        let extra = idx.forget_blocks(&blocks[..1], &mut kv);
+        assert_eq!(extra, 2, "both descendants drop with the head");
+        assert_eq!(idx.len(), 0);
+        assert_eq!(idx.lookup(7, 48, &kv), PrefixMatch::empty());
+    }
+
+    #[test]
+    fn stale_full_entry_reregistered_shallower_shrinks_coverage() {
+        // Regression: a stale node that used to be full must not keep its
+        // old token count when a shallower chain re-registers it — lookups
+        // would serve family tokens the new block does not hold.
+        // Small 4-block pool so a full reclaim is easy to force.
+        let mut idx = PrefixIndex::new(16);
+        let mut kv = KvManager::new(64, 16);
+        // Register a 48-token chain, release it, and force full reclaim.
+        kv.admit(1, 48).unwrap();
+        let blocks = kv.blocks_of(1).unwrap().to_vec();
+        idx.insert(7, 48, &blocks, &mut kv);
+        kv.release(1).unwrap();
+        kv.admit(2, 64).unwrap(); // reclaims all three cached blocks
+        kv.release(2).unwrap();
+        // Note: the reclaim log is deliberately NOT synced (stale nodes).
+        // A shallower registration (20 tokens: 1 full + 4 partial) reuses
+        // the stale entries.
+        kv.admit(3, 21).unwrap();
+        let b3 = kv.blocks_of(3).unwrap().to_vec();
+        idx.insert(7, 20, &b3, &mut kv);
+        let m = idx.lookup(7, 48, &kv);
+        assert_eq!(
+            m.cached_tokens, 20,
+            "coverage must shrink to the re-registered span, got {m:?}"
+        );
+        assert_eq!(m.full_blocks, vec![b3[0]]);
+        assert_eq!(m.partial, Some((b3[1], 4)));
+    }
+
+    #[test]
+    fn purge_clears_everything() {
+        let (mut idx, mut kv) = setup();
+        prefill(&mut idx, &mut kv, 1, 7, 49, 48);
+        prefill(&mut idx, &mut kv, 2, 9, 33, 32);
+        kv.release(1).unwrap();
+        let dropped = idx.purge(&mut kv);
+        assert_eq!(dropped, 5);
+        assert!(idx.is_empty());
+        assert_eq!(idx.lookup(7, 48, &kv), PrefixMatch::empty());
+        // Released blocks went back to the free pool on unmark.
+        kv.release(2).unwrap();
+        assert_eq!(kv.free_blocks(), kv.total_blocks());
+    }
+
+    #[test]
+    fn families_branch_at_the_root() {
+        let (mut idx, mut kv) = setup();
+        prefill(&mut idx, &mut kv, 1, 7, 33, 32);
+        prefill(&mut idx, &mut kv, 2, 9, 33, 32);
+        assert_eq!(idx.len(), 4);
+        assert_eq!(idx.lookup(7, 32, &kv).cached_tokens, 32);
+        assert_eq!(idx.lookup(9, 32, &kv).cached_tokens, 32);
+    }
+
+    #[test]
+    fn chain_keys_are_stable_and_distinct() {
+        assert_eq!(chain_key(7, 3), chain_key(7, 3));
+        assert_ne!(chain_key(7, 3), chain_key(7, 4));
+        assert_ne!(chain_key(7, 3), chain_key(8, 3));
+    }
+}

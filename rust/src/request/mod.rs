@@ -44,6 +44,19 @@ pub enum Phase {
     Finished,
 }
 
+/// A shareable-prompt declaration (DESIGN.md §3.7): the first `len`
+/// tokens of this request's prompt are — by construction of the trace —
+/// the same tokens as every other request declaring `family` (a shared
+/// system prompt, a few-shot template, or the growing context of one
+/// agentic conversation). The prefix cache keys hashed token blocks by
+/// `(family, block index)`, the identity stand-in for a content hash.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixRef {
+    pub family: u64,
+    /// Shareable span in tokens (≤ `prompt_len`).
+    pub len: usize,
+}
+
 /// A single inference request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -66,6 +79,8 @@ pub struct Request {
     /// Times this request's offline work was evicted and re-prefilled
     /// (recompute overhead accounting).
     pub evictions: u32,
+    /// Shared-prompt declaration for the prefix cache, if any.
+    pub prefix: Option<PrefixRef>,
 }
 
 impl Request {
@@ -87,7 +102,18 @@ impl Request {
             first_token_at: None,
             finished_at: None,
             evictions: 0,
+            prefix: None,
         }
+    }
+
+    /// Declare the first `len` prompt tokens as `family`'s shared prefix
+    /// (clamped to the prompt length).
+    pub fn with_prefix(mut self, family: u64, len: usize) -> Self {
+        self.prefix = Some(PrefixRef {
+            family,
+            len: len.min(self.prompt_len),
+        });
+        self
     }
 
     /// Current KV length: prompt + tokens generated so far.
@@ -213,6 +239,18 @@ mod tests {
         r.finished_at = Some(1.0);
         // output_len == 1 -> no decode phase -> no TPOT.
         assert_eq!(r.avg_tpot(), None);
+    }
+
+    #[test]
+    fn prefix_declaration_clamps_to_prompt() {
+        let r = Request::new(5, Class::Offline, 0.0, 100, 10)
+            .with_prefix(42, 4000);
+        let p = r.prefix.unwrap();
+        assert_eq!(p.family, 42);
+        assert_eq!(p.len, 100);
+        assert!(Request::new(6, Class::Offline, 0.0, 100, 10)
+            .prefix
+            .is_none());
     }
 
     #[test]

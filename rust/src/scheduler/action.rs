@@ -13,7 +13,9 @@
 //!   executor track per-request resources (real KV buffers, staging copies,
 //!   logs, metrics): [`Action::TransferStart`], [`Action::TransferDone`],
 //!   [`Action::TransferCancel`], [`Action::Evict`], [`Action::Migrate`],
-//!   [`Action::Admit`], [`Action::Complete`], and the elastic pool
+//!   [`Action::Admit`], [`Action::Complete`], the prefix-cache
+//!   hit/miss/evict stream ([`Action::PrefixResolve`],
+//!   [`Action::PrefixEvict`] — DESIGN.md §3.7), and the elastic pool
 //!   manager's plan timeline — [`Action::RepartitionPlan`] and
 //!   [`Action::RoleChange`] (the timed warm-up after a flip rides on an
 //!   ordinary [`Action::StartStep`] with [`StepKind::Warm`]).
@@ -65,6 +67,11 @@ pub enum Action {
         /// Roofline-predicted iteration latency (s). The virtual executor
         /// uses it as the actual duration; real executors measure instead.
         predicted_latency: f64,
+        /// Prompt tokens of this step served from the prefix cache
+        /// (DESIGN.md §3.7) — prefill work the perf model did *not* price
+        /// because the KV is already resident. Always 0 for decode and
+        /// warm steps.
+        cached_tokens: usize,
         /// Step sequence id; stale completions are ignored by the core.
         seq: u64,
     },
@@ -123,6 +130,24 @@ pub enum Action {
     /// The gating cost model (§3.4.2) admitted an offline request for
     /// (re-)prefill on relaxed instance `inst`.
     Admit { inst: usize, req: RequestId },
+    /// The prefix cache (DESIGN.md §3.7) was consulted for `req`'s
+    /// declared shared prefix at prefill admission (notification).
+    /// `cached_tokens > 0` is a hit (that many prompt tokens need no
+    /// recompute); 0 is a miss. Part of the differential action stream, so
+    /// both executors must resolve identically.
+    PrefixResolve {
+        inst: InstanceRef,
+        req: RequestId,
+        /// Prompt tokens served from cache-resident blocks.
+        cached_tokens: usize,
+        /// Cache entries referenced (full blocks + a copy-on-write
+        /// partial, when present).
+        cached_blocks: usize,
+    },
+    /// `blocks` reclaimable prefix-cache blocks on `inst` were evicted
+    /// (LRU reclaim by an admission, or a drain purge) and their chain
+    /// entries dropped (notification).
+    PrefixEvict { inst: InstanceRef, blocks: usize },
     /// The elastic pool manager re-planned the strict/relaxed split
     /// (notification; `epoch` is the monotone plan counter). Targets always
     /// satisfy `relaxed_target + strict_target ==` current cluster size —
@@ -159,6 +184,7 @@ impl Action {
             Action::Preempt { .. } => None,
             Action::RepartitionPlan { .. } => None,
             Action::RoleChange { .. } => None,
+            Action::PrefixEvict { .. } => None,
             Action::Evict { req, .. }
             | Action::Migrate { req, .. }
             | Action::TransferStart { req, .. }
@@ -166,6 +192,7 @@ impl Action {
             | Action::TransferDone { req, .. }
             | Action::TransferCancel { req, .. }
             | Action::Admit { req, .. }
+            | Action::PrefixResolve { req, .. }
             | Action::Complete { req } => Some(*req),
         }
     }
@@ -203,9 +230,28 @@ mod tests {
             kind: StepKind::PrefillOnline,
             participants: vec![1, 2],
             predicted_latency: 0.5,
+            cached_tokens: 0,
             seq: 4,
         };
         assert_eq!(step.request(), None);
+        assert_eq!(
+            Action::PrefixResolve {
+                inst: InstanceRef::Relaxed(0),
+                req: 6,
+                cached_tokens: 32,
+                cached_blocks: 2,
+            }
+            .request(),
+            Some(6)
+        );
+        assert_eq!(
+            Action::PrefixEvict {
+                inst: InstanceRef::Relaxed(0),
+                blocks: 3
+            }
+            .request(),
+            None
+        );
         // Pool-manager actions are cluster-level, not per-request.
         let plan = Action::RepartitionPlan {
             epoch: 1,

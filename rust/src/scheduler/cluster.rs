@@ -87,6 +87,28 @@ pub struct ClusterState {
     pub offloads: u64,
     /// Staged KV streams restored to a relaxed instance.
     pub restores: u64,
+    // ---- prefix-sharing cache accounting (DESIGN.md §3.7) ----
+    /// Cache resolutions at prefill admission (requests with a declared
+    /// shared prefix only).
+    pub prefix_lookups: u64,
+    /// Resolutions that matched at least one cached block.
+    pub prefix_hits: u64,
+    /// Prompt tokens served from cache (prefill recompute skipped), by
+    /// scheduled class.
+    pub prefix_hit_tokens_online: u64,
+    pub prefix_hit_tokens_offline: u64,
+    /// Prompt tokens admitted to prefill (hit-rate denominator; all
+    /// requests, shared prefix declared or not).
+    pub prefix_prompt_tokens: u64,
+    /// Reclaimable cache blocks evicted (LRU reclaim + drain purges).
+    pub prefix_evicted_blocks: u64,
+    /// KV tokens *not* moved by dispatch/migration/rescue/restore because
+    /// the destination already held the prefix blocks.
+    pub transfer_tokens_saved: u64,
+    /// Time-integral of reclaimable cached blocks (block·s) — capacity
+    /// held as cache while staying admittable.
+    pub cached_block_s: f64,
+    last_cache_t: f64,
 }
 
 impl ClusterState {
@@ -143,7 +165,42 @@ impl ClusterState {
             rescues: 0,
             offloads: 0,
             restores: 0,
+            prefix_lookups: 0,
+            prefix_hits: 0,
+            prefix_hit_tokens_online: 0,
+            prefix_hit_tokens_offline: 0,
+            prefix_prompt_tokens: 0,
+            prefix_evicted_blocks: 0,
+            transfer_tokens_saved: 0,
+            cached_block_s: 0.0,
+            last_cache_t: 0.0,
         }
+    }
+
+    /// Current reclaimable (cached, unpinned) blocks across the cluster.
+    pub fn reclaimable_cache_blocks(&self) -> usize {
+        self.relaxed
+            .iter()
+            .chain(&self.strict)
+            .map(|i| i.kv.reclaimable_blocks())
+            .sum()
+    }
+
+    /// Integrate reclaimable-cache block·s up to `now`. Called at the top
+    /// of every core entry point, before any cache mutation.
+    pub fn accrue_cache_seconds(&mut self, now: f64) {
+        let dt = (now - self.last_cache_t).max(0.0);
+        if dt > 0.0 {
+            self.cached_block_s +=
+                dt * self.reclaimable_cache_blocks() as f64;
+        }
+        self.last_cache_t = now;
+    }
+
+    /// Reclaimable-cache block·s over `[0, until]` (read-only projection).
+    pub fn cache_block_seconds(&self, until: f64) -> f64 {
+        let dt = (until - self.last_cache_t).max(0.0);
+        self.cached_block_s + dt * self.reclaimable_cache_blocks() as f64
     }
 
     /// Cluster size — invariant across repartitions (property-tested).
@@ -226,7 +283,8 @@ impl ClusterState {
     /// No queued, running, or in-flight work anywhere in the cluster.
     /// (The backlog may legitimately stay non-empty when gating keeps
     /// rejecting; executors treat "drained" as a stop condition only once
-    /// no more events can fire.)
+    /// no more events can fire.) Retained prefix-cache blocks are *not*
+    /// work: only pinned KV counts.
     pub fn drained(&self) -> bool {
         self.offline_backlog.is_empty()
             && self.staged_offline.is_empty()
@@ -234,7 +292,7 @@ impl ClusterState {
                 .relaxed
                 .iter()
                 .chain(&self.strict)
-                .all(|i| i.drained_for_flip())
+                .all(|i| i.workload_empty() && i.kv.pinned_blocks() == 0)
     }
 
     /// Aggregate busy seconds earned in the strict role (live + retired).

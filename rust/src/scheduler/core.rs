@@ -29,10 +29,13 @@ use crate::coordinator::{
     shed_online_overload, Ablation, Candidate, LengthPref, OverloadMode,
     Policy,
 };
-use crate::instance::{PoolRole, Step, StepKind};
-use crate::metrics::{LinkReport, PoolReport, TransportReport};
+use crate::instance::{Instance, PoolRole, Step, StepKind};
+use crate::metrics::{
+    LinkReport, PoolReport, PrefixReport, TransportReport,
+};
 use crate::perfmodel::{BatchStats, PerfModel};
 use crate::pool::{PoolManager, Transition, TransitionPhase, WARMUP_S};
+use crate::prefix::PrefixMatch;
 use crate::request::{Phase, Request, RequestId};
 use crate::transport::{
     ChunkOrder, JobId, Progress, TransferJob, TransferKind, TransportEngine,
@@ -151,6 +154,7 @@ impl SchedulerCore {
     /// A request arrived at time `now`.
     pub fn on_arrival(&mut self, now: f64, rid: RequestId) -> Vec<Action> {
         self.now = now;
+        self.cluster.accrue_cache_seconds(now);
         let (prompt, output) = {
             let r = &self.cluster.requests[rid as usize];
             (r.prompt_len, r.output_len)
@@ -167,6 +171,7 @@ impl SchedulerCore {
         self.pool.observe_arrival(now, class, prompt, output);
         self.arrival(rid);
         self.pool_tick();
+        self.flush_cache_events();
         std::mem::take(&mut self.actions)
     }
 
@@ -179,11 +184,13 @@ impl SchedulerCore {
         seq: u64,
     ) -> Vec<Action> {
         self.now = now;
+        self.cluster.accrue_cache_seconds(now);
         match inst {
             InstanceRef::Relaxed(i) => self.relaxed_step_end(i, seq),
             InstanceRef::Strict(i) => self.strict_step_end(i, seq),
         }
         self.pool_tick();
+        self.flush_cache_events();
         std::mem::take(&mut self.actions)
     }
 
@@ -197,6 +204,7 @@ impl SchedulerCore {
         seq: u64,
     ) -> Vec<Action> {
         self.now = now;
+        self.cluster.accrue_cache_seconds(now);
         match self.transport.on_chunk_done(now, job, seq) {
             Progress::Stale => {}
             Progress::Advanced { orders } => self.emit_chunk_orders(orders),
@@ -211,15 +219,230 @@ impl SchedulerCore {
             }
         }
         self.pool_tick();
+        self.flush_cache_events();
         std::mem::take(&mut self.actions)
+    }
+
+    // ---------------------------------------------- prefix cache (§3.7)
+
+    fn instance_mut(&mut self, inst: InstanceRef) -> &mut Instance {
+        match inst {
+            InstanceRef::Relaxed(i) => &mut self.cluster.relaxed[i],
+            InstanceRef::Strict(i) => &mut self.cluster.strict[i],
+        }
+    }
+
+    fn instance(&self, inst: InstanceRef) -> &Instance {
+        match inst {
+            InstanceRef::Relaxed(i) => &self.cluster.relaxed[i],
+            InstanceRef::Strict(i) => &self.cluster.strict[i],
+        }
+    }
+
+    /// Resolve `rid`'s declared shared prefix against an instance's cache
+    /// (pure; empty when the cache is off or nothing is declared).
+    fn peek_prefix(&self, inst: InstanceRef, rid: RequestId) -> PrefixMatch {
+        if !self.cfg.serving.prefix.enabled {
+            return PrefixMatch::empty();
+        }
+        let req = &self.cluster.requests[rid as usize];
+        let Some(p) = req.prefix else {
+            return PrefixMatch::empty();
+        };
+        let want = p.len.min(req.recompute_len());
+        if want == 0 {
+            return PrefixMatch::empty();
+        }
+        let instance = self.instance(inst);
+        instance.cache.lookup(p.family, want, &instance.kv)
+    }
+
+    /// Admit `rid`'s KV on `inst` with prefix sharing: reference the
+    /// matched full blocks (zero recompute), copy-on-write a terminal
+    /// partial, allocate the private remainder (the allocator LRU-reclaims
+    /// cache blocks on demand; shared blocks are pinned first, so they can
+    /// never be stolen). Fit must have been checked by the caller.
+    fn admit_prefixed(
+        &mut self,
+        inst: InstanceRef,
+        rid: RequestId,
+        tokens: usize,
+        m: &PrefixMatch,
+    ) {
+        let instance = self.instance_mut(inst);
+        instance.kv.touch_blocks(&m.full_blocks);
+        instance
+            .kv
+            .admit_shared(rid, tokens, &m.full_blocks, m.partial)
+            .expect("fit checked");
+        self.cluster.kv_home[rid as usize] = match inst {
+            InstanceRef::Relaxed(i) => KvHome::Relaxed(i),
+            InstanceRef::Strict(i) => KvHome::Strict(i),
+        };
+    }
+
+    /// Record a prefill-admission cache resolution: counters, the planner's
+    /// cache-adjusted load estimate, and the hit/miss notification.
+    fn note_prefix_use(
+        &mut self,
+        inst: InstanceRef,
+        rid: RequestId,
+        m: &PrefixMatch,
+        prompt_tokens: usize,
+    ) {
+        self.cluster.prefix_prompt_tokens += prompt_tokens as u64;
+        // The planner sizes the *strict* pool from the online estimator,
+        // and its footprint figure is prompt + half the output (KV at the
+        // decode midpoint). Feed the share on exactly that population and
+        // basis: online admissions only, cached prompt tokens over the
+        // full per-request KV footprint — offline hit rates and unshared
+        // output KV must not deflate the online capacity check.
+        if self.scheduled_online(rid) {
+            let kv_basis = prompt_tokens
+                + self.cluster.requests[rid as usize].output_len / 2;
+            self.pool.observe_prefix(m.cached_tokens, kv_basis.max(1));
+        }
+        if !self.cfg.serving.prefix.enabled
+            || self.cluster.requests[rid as usize].prefix.is_none()
+        {
+            return;
+        }
+        self.cluster.prefix_lookups += 1;
+        if m.cached_tokens > 0 {
+            self.cluster.prefix_hits += 1;
+            if self.scheduled_online(rid) {
+                self.cluster.prefix_hit_tokens_online +=
+                    m.cached_tokens as u64;
+            } else {
+                self.cluster.prefix_hit_tokens_offline +=
+                    m.cached_tokens as u64;
+            }
+        }
+        self.actions.push(Action::PrefixResolve {
+            inst,
+            req: rid,
+            cached_tokens: m.cached_tokens,
+            cached_blocks: m.cached_blocks(),
+        });
+    }
+
+    /// Register `rid`'s freshly materialized prefix chain in `inst`'s
+    /// cache (prefill completion, or a transfer landing at a new home).
+    /// Draining instances take no new cache entries.
+    fn register_prefix(&mut self, inst: InstanceRef, rid: RequestId) {
+        if !self.cfg.serving.prefix.enabled {
+            return;
+        }
+        let Some(p) = self.cluster.requests[rid as usize].prefix else {
+            return;
+        };
+        let instance = self.instance_mut(inst);
+        if instance.draining {
+            return;
+        }
+        let upto = p.len.min(instance.kv.tokens_of(rid));
+        if upto == 0 {
+            return;
+        }
+        let Some(blocks) = instance.kv.blocks_of(rid).map(|b| b.to_vec())
+        else {
+            return;
+        };
+        let Instance { cache, kv, .. } = instance;
+        cache.insert(p.family, upto, &blocks, kv);
+    }
+
+    /// Sync allocator-side LRU reclaims back into the prefix indexes and
+    /// emit the evict notifications. Runs once per entry point, after all
+    /// decisions (stale index entries are validated away in the meantime).
+    fn flush_cache_events(&mut self) {
+        if !self.cfg.serving.prefix.enabled {
+            return;
+        }
+        for i in 0..self.cluster.relaxed.len() {
+            self.flush_cache_on(InstanceRef::Relaxed(i));
+        }
+        for i in 0..self.cluster.strict.len() {
+            self.flush_cache_on(InstanceRef::Strict(i));
+        }
+    }
+
+    fn flush_cache_on(&mut self, inst: InstanceRef) {
+        let instance = self.instance_mut(inst);
+        let reclaimed = instance.kv.take_reclaimed();
+        if reclaimed.is_empty() {
+            return;
+        }
+        let Instance { cache, kv, .. } = instance;
+        let extra = cache.forget_blocks(&reclaimed, kv);
+        let blocks = reclaimed.len() + extra;
+        self.cluster.prefix_evicted_blocks += blocks as u64;
+        self.actions.push(Action::PrefixEvict { inst, blocks });
+    }
+
+    /// Drop every cache entry on a draining instance (run at drain start
+    /// and on every drain tick, since releases keep re-caching blocks
+    /// until the residents are gone).
+    fn purge_cache(&mut self, inst: InstanceRef) {
+        if !self.cfg.serving.prefix.enabled {
+            return;
+        }
+        let instance = self.instance_mut(inst);
+        if instance.cache.is_empty() {
+            return;
+        }
+        let Instance { cache, kv, .. } = instance;
+        let blocks = cache.purge(kv);
+        // Purged entries were dropped directly; clear any allocator log
+        // for them so the flush does not double-forget.
+        let _ = kv.take_reclaimed();
+        if blocks > 0 {
+            self.cluster.prefix_evicted_blocks += blocks as u64;
+            self.actions.push(Action::PrefixEvict { inst, blocks });
+        }
+    }
+
+    /// Snapshot the prefix-cache metrics (DESIGN.md §3.7).
+    pub fn prefix_report(&self) -> PrefixReport {
+        let c = &self.cluster;
+        let saved =
+            c.prefix_hit_tokens_online + c.prefix_hit_tokens_offline;
+        let cow: u64 = c
+            .relaxed
+            .iter()
+            .chain(&c.strict)
+            .map(|i| i.kv.cow_copies)
+            .sum();
+        PrefixReport {
+            enabled: self.cfg.serving.prefix.enabled,
+            lookups: c.prefix_lookups,
+            hits: c.prefix_hits,
+            hit_rate: saved as f64 / c.prefix_prompt_tokens.max(1) as f64,
+            prefill_tokens_saved: saved,
+            online_tokens_saved: c.prefix_hit_tokens_online,
+            offline_tokens_saved: c.prefix_hit_tokens_offline,
+            transfer_tokens_saved: c.transfer_tokens_saved,
+            cow_copies: cow,
+            evicted_blocks: c.prefix_evicted_blocks,
+            reclaimed_block_s: c.cache_block_seconds(self.now),
+            cached_blocks_final: c.reclaimable_cache_blocks(),
+        }
     }
 
     // ------------------------------------------------------- transport glue
 
-    /// Enqueue a transfer of `rid`'s current KV on the transport engine and
-    /// emit the start notification plus any immediate chunk orders.
-    fn enqueue_transfer(&mut self, rid: RequestId, kind: TransferKind) {
-        let kv_tokens = self.cluster.requests[rid as usize].kv_len();
+    /// Enqueue a transfer of `kv_tokens` of `rid`'s KV on the transport
+    /// engine and emit the start notification plus any immediate chunk
+    /// orders. `kv_tokens` may be less than the request's full KV when the
+    /// destination already holds its prefix blocks (only non-resident
+    /// blocks move — DESIGN.md §3.7).
+    fn enqueue_transfer(
+        &mut self,
+        rid: RequestId,
+        kind: TransferKind,
+        kv_tokens: usize,
+    ) {
+        let kv_tokens = kv_tokens.max(1);
         let (job, orders) =
             self.transport.enqueue(self.now, rid, kind, kv_tokens);
         self.actions.push(Action::TransferStart {
@@ -230,6 +453,23 @@ impl SchedulerCore {
             chunks: self.transport.chunks_per_job(),
         });
         self.emit_chunk_orders(orders);
+    }
+
+    /// Transfer volume after destination-resident prefix dedup, recording
+    /// the saving.
+    fn transfer_tokens_for(
+        &mut self,
+        rid: RequestId,
+        m: &PrefixMatch,
+    ) -> usize {
+        let full = self.cluster.requests[rid as usize].kv_len();
+        if m.cached_tokens > 0 {
+            let moved = full.saturating_sub(m.cached_tokens).max(1);
+            self.cluster.transfer_tokens_saved += (full - moved) as u64;
+            moved
+        } else {
+            full
+        }
     }
 
     fn emit_chunk_orders(&mut self, orders: Vec<ChunkOrder>) {
@@ -260,6 +500,8 @@ impl SchedulerCore {
                     .retain(|&r| r != rid);
                 self.cluster.requests[rid as usize].phase = Phase::Decoding;
                 self.cluster.relaxed[to_relaxed].offline_decoding.push(rid);
+                // The landed chain is cacheable content at its new home.
+                self.register_prefix(InstanceRef::Relaxed(to_relaxed), rid);
                 if matches!(job.kind, TransferKind::Restore { .. }) {
                     self.cluster.restores += 1;
                 }
@@ -282,6 +524,8 @@ impl SchedulerCore {
 
     /// Stream staged KV back into the relaxed pool wherever space permits
     /// (keeping the same online-prefill headroom the gating path reserves).
+    /// Prefix blocks already resident at the destination are shared, not
+    /// re-streamed.
     fn try_restores(&mut self) {
         for inst in 0..self.cluster.relaxed.len() {
             if self.cluster.relaxed[inst].draining {
@@ -296,15 +540,14 @@ impl SchedulerCore {
                     break;
                 }
                 self.cluster.staged_offline.pop_front();
-                self.cluster.relaxed[inst]
-                    .kv
-                    .admit(rid, need)
-                    .expect("fit checked");
-                self.cluster.kv_home[rid as usize] = KvHome::Relaxed(inst);
+                let m = self.peek_prefix(InstanceRef::Relaxed(inst), rid);
+                self.admit_prefixed(InstanceRef::Relaxed(inst), rid, need, &m);
                 self.cluster.relaxed[inst].inbound.push(rid);
+                let moved = self.transfer_tokens_for(rid, &m);
                 self.enqueue_transfer(
                     rid,
                     TransferKind::Restore { to_relaxed: inst },
+                    moved,
                 );
             }
             if self.cluster.staged_offline.is_empty() {
@@ -391,6 +634,9 @@ impl SchedulerCore {
                     inst: InstanceRef::Relaxed(i),
                     to: PoolRole::Strict,
                 });
+                // Cached blocks are `used` capacity to the flip check:
+                // drop them now (and on every drain tick below).
+                self.purge_cache(InstanceRef::Relaxed(i));
                 Transition::drain(from, i, self.now)
             }
             PoolRole::Strict => {
@@ -402,6 +648,7 @@ impl SchedulerCore {
                     inst: InstanceRef::Strict(i),
                     to: PoolRole::Relaxed,
                 });
+                self.purge_cache(InstanceRef::Strict(i));
                 // Online admissions parked on the draining instance would
                 // wait forever (it frees no space for new work): re-route
                 // them to the surviving pool now.
@@ -424,6 +671,10 @@ impl SchedulerCore {
         let i = t.inst;
         match t.from {
             PoolRole::Relaxed => {
+                // Releases since the last tick may have re-cached blocks;
+                // the drain keeps the cache empty so the flip check sees
+                // only pinned capacity.
+                self.purge_cache(InstanceRef::Relaxed(i));
                 // Cheap no-op on the event-dense common case: the tick
                 // runs at every entry point while draining.
                 if self.cluster.relaxed[i].offline_decoding.is_empty()
@@ -452,6 +703,7 @@ impl SchedulerCore {
                 }
             }
             PoolRole::Strict => {
+                self.purge_cache(InstanceRef::Strict(i));
                 if self.cluster.strict[i].offline.is_empty()
                     && self.cluster.strict[i].inbound.is_empty()
                 {
@@ -611,6 +863,7 @@ impl SchedulerCore {
             kind: StepKind::Warm,
             participants: Vec::new(),
             predicted_latency: WARMUP_S,
+            cached_tokens: 0,
             seq,
         });
     }
@@ -729,7 +982,11 @@ impl SchedulerCore {
         self.start_relaxed_decode(inst);
     }
 
-    /// Batch online prefills up to the token budget.
+    /// Batch online prefills up to the token budget. Declared shared
+    /// prefixes resolve against the instance's cache first: cached tokens
+    /// are admitted as block references and priced at zero — the budget,
+    /// the roofline cost, and the emitted `StartStep` all see only the
+    /// uncached remainder (§3.7).
     fn start_online_prefill(&mut self, inst: usize) -> bool {
         if self.cluster.relaxed[inst].online_queue.is_empty() {
             return false;
@@ -738,13 +995,18 @@ impl SchedulerCore {
         let mut batch: Vec<RequestId> = Vec::new();
         let mut lens: Vec<usize> = Vec::new();
         let mut used = 0usize;
+        let mut cached_total = 0usize;
         while let Some(&rid) = self.cluster.relaxed[inst].online_queue.front() {
             let len = self.cluster.requests[rid as usize].recompute_len();
-            if !batch.is_empty() && used + len > budget {
+            let m = self.peek_prefix(InstanceRef::Relaxed(inst), rid);
+            // A fully cached prompt still runs one query token to produce
+            // its first output token.
+            let uncached = len.saturating_sub(m.cached_tokens).max(1);
+            if !batch.is_empty() && used + uncached > budget {
                 break;
             }
             // KV space for the prefill output, evicting offline if needed.
-            if !self.fit_on_relaxed(inst, len + 1) {
+            if !self.fit_on_relaxed(inst, len + 1, &m) {
                 if batch.is_empty() {
                     // Head request cannot fit even after eviction: reject.
                     self.cluster.relaxed[inst].online_queue.pop_front();
@@ -755,30 +1017,46 @@ impl SchedulerCore {
                 break;
             }
             self.cluster.relaxed[inst].online_queue.pop_front();
-            self.cluster.relaxed[inst]
-                .kv
-                .admit(rid, len + 1)
-                .expect("fit checked");
-            self.cluster.kv_home[rid as usize] = KvHome::Relaxed(inst);
+            self.admit_prefixed(InstanceRef::Relaxed(inst), rid, len + 1, &m);
+            self.note_prefix_use(InstanceRef::Relaxed(inst), rid, &m, len);
             self.cluster.requests[rid as usize].phase = Phase::Prefilling;
-            used += len;
+            used += uncached;
+            cached_total += m.cached_tokens;
             batch.push(rid);
-            lens.push(len);
+            lens.push(uncached);
         }
         if batch.is_empty() {
             return false;
         }
         let latency = self.pm.prefill_cost(&lens).latency_s;
-        self.begin_relaxed_step(inst, StepKind::PrefillOnline, batch, latency);
+        self.begin_relaxed_step(
+            inst,
+            StepKind::PrefillOnline,
+            batch,
+            latency,
+            cached_total,
+        );
         true
     }
 
     /// Make room for `tokens` on a relaxed instance by evicting offline
     /// decode residents (oldest first — relaxed nodes have no bottleneck
     /// preference; their decode batch has no SLO), then — if still short —
-    /// by cancelling in-flight rescue/restore reservations.
-    fn fit_on_relaxed(&mut self, inst: usize, tokens: usize) -> bool {
-        while !self.cluster.relaxed[inst].kv.can_fit(tokens) {
+    /// by cancelling in-flight rescue/restore reservations. `m` is the
+    /// admission's prefix match: shared blocks reduce the private need but
+    /// cannot double as free capacity (the admission pins them). Evicted
+    /// residents release their blocks to the cache, not to oblivion, so
+    /// the match stays valid across the loop.
+    fn fit_on_relaxed(
+        &mut self,
+        inst: usize,
+        tokens: usize,
+        m: &PrefixMatch,
+    ) -> bool {
+        while !self.cluster.relaxed[inst]
+            .kv
+            .can_admit_shared(tokens, &m.full_blocks)
+        {
             // Evict a parked/decoding offline resident not in the current
             // step (relaxed instance is idle here, so all are safe).
             if let Some(&victim) =
@@ -812,7 +1090,8 @@ impl SchedulerCore {
             self.cluster.requests[rid as usize].phase = Phase::Migrating;
             self.cluster.evict_started[rid as usize] = self.now;
             self.cluster.offloads += 1;
-            self.enqueue_transfer(rid, TransferKind::Offload);
+            let kv_len = self.cluster.requests[rid as usize].kv_len();
+            self.enqueue_transfer(rid, TransferKind::Offload, kv_len);
             return;
         }
         self.cluster.kv_home[rid as usize] = KvHome::None;
@@ -867,40 +1146,60 @@ impl SchedulerCore {
         let mut batch = Vec::new();
         let mut lens = Vec::new();
         let mut used = 0usize;
+        let mut cached_total = 0usize;
         let reserve = ONLINE_PREFILL_RESERVE_TOKENS;
         while let Some(&rid) = self.cluster.offline_backlog.front() {
             let len = self.cluster.requests[rid as usize].recompute_len();
-            if !batch.is_empty() && used + len > budget {
+            let m = self.peek_prefix(InstanceRef::Relaxed(inst), rid);
+            let uncached = len.saturating_sub(m.cached_tokens).max(1);
+            if !batch.is_empty() && used + uncached > budget {
                 break;
             }
+            // Space check stays on the full length (conservative: shared
+            // blocks reduce the private need, never increase it), keeping
+            // the online-prefill reserve intact.
             let free = self.cluster.relaxed[inst].kv.free_tokens();
             if free < len + 1 + reserve {
                 break;
             }
-            if gating_on && !self.gating_admits(inst, rid, free - reserve) {
+            // The gating cost model prices the prefill it would actually
+            // run: the uncached remainder.
+            if gating_on
+                && !self.gating_admits(inst, rid, uncached, free - reserve)
+            {
                 break;
             }
             self.cluster.offline_backlog.pop_front();
-            self.cluster.relaxed[inst]
-                .kv
-                .admit(rid, len + 1)
-                .expect("fit checked");
-            self.cluster.kv_home[rid as usize] = KvHome::Relaxed(inst);
+            self.admit_prefixed(InstanceRef::Relaxed(inst), rid, len + 1, &m);
+            self.note_prefix_use(InstanceRef::Relaxed(inst), rid, &m, len);
             self.cluster.requests[rid as usize].phase = Phase::Prefilling;
-            used += len;
+            used += uncached;
+            cached_total += m.cached_tokens;
             batch.push(rid);
-            lens.push(len);
+            lens.push(uncached);
             self.actions.push(Action::Admit { inst, req: rid });
         }
         if batch.is_empty() {
             return false;
         }
         let latency = self.pm.prefill_cost(&lens).latency_s;
-        self.begin_relaxed_step(inst, StepKind::PrefillOffline, batch, latency);
+        self.begin_relaxed_step(
+            inst,
+            StepKind::PrefillOffline,
+            batch,
+            latency,
+            cached_total,
+        );
         true
     }
 
-    fn gating_admits(&mut self, inst: usize, rid: RequestId, free: usize) -> bool {
+    fn gating_admits(
+        &mut self,
+        inst: usize,
+        rid: RequestId,
+        prefill_tokens: usize,
+        free: usize,
+    ) -> bool {
         let pool = self.relaxed_pool_stats(inst);
         let req = &self.cluster.requests[rid as usize];
         let remaining: f64 = if self.cluster.relaxed[inst]
@@ -921,7 +1220,7 @@ impl SchedulerCore {
         };
         let input = crate::coordinator::GatingInput {
             pool,
-            candidate_prompt: req.recompute_len(),
+            candidate_prompt: prefill_tokens,
             candidate_output: req.output_len,
             pool_mean_remaining: remaining,
             free_kv_tokens: free,
@@ -957,7 +1256,7 @@ impl SchedulerCore {
             self.cluster.relaxed[inst].offline_decoding.clone();
         let stats = self.relaxed_pool_stats(inst);
         let latency = self.pm.decode_latency(stats);
-        self.begin_relaxed_step(inst, StepKind::DecodeRelaxed, batch, latency);
+        self.begin_relaxed_step(inst, StepKind::DecodeRelaxed, batch, latency, 0);
     }
 
     fn begin_relaxed_step(
@@ -966,6 +1265,7 @@ impl SchedulerCore {
         kind: StepKind,
         participants: Vec<RequestId>,
         latency: f64,
+        cached_tokens: usize,
     ) {
         let seq = self.cluster.alloc_seq();
         let span = latency.max(1e-9);
@@ -975,6 +1275,7 @@ impl SchedulerCore {
             kind,
             participants: participants.clone(),
             predicted_latency: span,
+            cached_tokens,
             seq,
         });
         self.cluster.relaxed[inst].step = Some(Step {
@@ -1045,6 +1346,10 @@ impl SchedulerCore {
     fn finish_prefill_online(&mut self, inst: usize, rid: RequestId) {
         let recompute = self.cluster.requests[rid as usize].recompute_len();
         self.cluster.router.prefill_done(inst, recompute);
+        // The freshly computed prefix chain becomes cache content *before*
+        // any release/dispatch below — released blocks then retain as
+        // reclaimable cache instead of freeing.
+        self.register_prefix(InstanceRef::Relaxed(inst), rid);
         self.cluster.requests[rid as usize].mark_first_token(self.now);
         if self.cluster.requests[rid as usize].is_finished() {
             // Single-token request: done at prefill.
@@ -1062,7 +1367,8 @@ impl SchedulerCore {
     }
 
     /// Reserve KV on the strict instance (evicting offline per policy) and
-    /// start the transfer; park in `waiting_for_space` on failure.
+    /// start the transfer; park in `waiting_for_space` on failure. Prefix
+    /// blocks already resident on the target are referenced, not moved.
     fn try_dispatch_to_strict(
         &mut self,
         rid: RequestId,
@@ -1075,17 +1381,16 @@ impl SchedulerCore {
             self.make_room_on_strict(target, need);
         }
         if self.cluster.strict[target].kv.can_fit(need) {
-            self.cluster.strict[target]
-                .kv
-                .admit(rid, need)
-                .expect("fit checked");
+            let m = self.peek_prefix(InstanceRef::Strict(target), rid);
+            self.admit_prefixed(InstanceRef::Strict(target), rid, need, &m);
             self.cluster.relaxed[from_relaxed].kv.release(rid).expect("kv");
-            self.cluster.kv_home[rid as usize] = KvHome::Strict(target);
             self.cluster.requests[rid as usize].phase = Phase::Migrating;
             self.cluster.strict[target].inbound.push(rid);
+            let moved = self.transfer_tokens_for(rid, &m);
             self.enqueue_transfer(
                 rid,
                 TransferKind::Dispatch { to_strict: target },
+                moved,
             );
         } else {
             // Overload: wait (KV stays on the relaxed node).
@@ -1173,16 +1478,18 @@ impl SchedulerCore {
             })
             .max_by_key(|&i| self.cluster.relaxed[i].kv.free_tokens());
         if let Some(i) = dest {
-            self.cluster.relaxed[i]
-                .kv
-                .admit(rid, need)
-                .expect("fit checked");
-            self.cluster.kv_home[rid as usize] = KvHome::Relaxed(i);
+            let m = self.peek_prefix(InstanceRef::Relaxed(i), rid);
+            self.admit_prefixed(InstanceRef::Relaxed(i), rid, need, &m);
             self.cluster.requests[rid as usize].phase = Phase::Migrating;
             self.cluster.relaxed[i].inbound.push(rid);
             self.cluster.evict_started[rid as usize] = self.now;
             self.cluster.rescues += 1;
-            self.enqueue_transfer(rid, TransferKind::Rescue { to_relaxed: i });
+            let moved = self.transfer_tokens_for(rid, &m);
+            self.enqueue_transfer(
+                rid,
+                TransferKind::Rescue { to_relaxed: i },
+                moved,
+            );
             return true;
         }
         if self.transport.host_staging {
@@ -1190,13 +1497,15 @@ impl SchedulerCore {
             self.cluster.requests[rid as usize].phase = Phase::Migrating;
             self.cluster.evict_started[rid as usize] = self.now;
             self.cluster.offloads += 1;
-            self.enqueue_transfer(rid, TransferKind::Offload);
+            let kv_len = self.cluster.requests[rid as usize].kv_len();
+            self.enqueue_transfer(rid, TransferKind::Offload, kv_len);
             return true;
         }
         false
     }
 
     fn finish_prefill_offline(&mut self, inst: usize, rid: RequestId) {
+        self.register_prefix(InstanceRef::Relaxed(inst), rid);
         self.cluster.requests[rid as usize].mark_first_token(self.now);
         if self.cluster.requests[rid as usize].is_finished() {
             self.cluster.requests[rid as usize].finished_at = Some(self.now);
@@ -1215,17 +1524,21 @@ impl SchedulerCore {
             let kv_len = self.cluster.requests[rid as usize].kv_len();
             let target = self.cluster.router.route_decode(kv_len);
             if self.cluster.strict[target].kv.can_fit(kv_len + 1) {
-                self.cluster.strict[target]
-                    .kv
-                    .admit(rid, kv_len + 1)
-                    .expect("fit");
+                let m = self.peek_prefix(InstanceRef::Strict(target), rid);
+                self.admit_prefixed(
+                    InstanceRef::Strict(target),
+                    rid,
+                    kv_len + 1,
+                    &m,
+                );
                 self.cluster.relaxed[inst].kv.release(rid).expect("kv");
-                self.cluster.kv_home[rid as usize] = KvHome::Strict(target);
                 self.cluster.requests[rid as usize].phase = Phase::Migrating;
                 self.cluster.strict[target].inbound.push(rid);
+                let moved = self.transfer_tokens_for(rid, &m);
                 self.enqueue_transfer(
                     rid,
                     TransferKind::Dispatch { to_strict: target },
+                    moved,
                 );
             } else {
                 // Park on the relaxed node (holds KV, does not decode);
@@ -1377,6 +1690,7 @@ impl SchedulerCore {
             kind: StepKind::DecodeStrict,
             participants: participants.clone(),
             predicted_latency: span,
+            cached_tokens: 0,
             seq,
         });
         self.cluster.strict[inst].step = Some(Step {
@@ -1482,13 +1796,15 @@ impl SchedulerCore {
                     KvHome::Relaxed(i) => i,
                     _ => unreachable!("waiting request KV must be on relaxed"),
                 };
-                self.cluster.strict[inst].kv.admit(rid, need).expect("fit");
+                let m = self.peek_prefix(InstanceRef::Strict(inst), rid);
+                self.admit_prefixed(InstanceRef::Strict(inst), rid, need, &m);
                 self.cluster.relaxed[from].kv.release(rid).expect("kv");
-                self.cluster.kv_home[rid as usize] = KvHome::Strict(inst);
                 self.cluster.strict[inst].inbound.push(rid);
+                let moved = self.transfer_tokens_for(rid, &m);
                 self.enqueue_transfer(
                     rid,
                     TransferKind::Dispatch { to_strict: inst },
+                    moved,
                 );
             } else {
                 remaining.push_back(rid);
@@ -1549,15 +1865,12 @@ impl SchedulerCore {
             if !self.cluster.strict[inst].kv.can_fit(kv_len + 1) {
                 break;
             }
-            self.cluster.strict[inst]
-                .kv
-                .admit(rid, kv_len + 1)
-                .expect("fit");
+            let m = self.peek_prefix(InstanceRef::Strict(inst), rid);
+            self.admit_prefixed(InstanceRef::Strict(inst), rid, kv_len + 1, &m);
             self.cluster.relaxed[src].kv.release(rid).expect("kv");
             self.cluster.relaxed[src]
                 .offline_decoding
                 .retain(|&r| r != rid);
-            self.cluster.kv_home[rid as usize] = KvHome::Strict(inst);
             self.cluster.requests[rid as usize].phase = Phase::Migrating;
             // Book the load on the instance that actually receives the KV
             // (the discharge paths — completion, eviction, drain
@@ -1569,9 +1882,11 @@ impl SchedulerCore {
                 from_relaxed: src,
                 to_strict: inst,
             });
+            let moved = self.transfer_tokens_for(rid, &m);
             self.enqueue_transfer(
                 rid,
                 TransferKind::Migrate { to_strict: inst },
+                moved,
             );
             self.cluster.migrations += 1;
         }
@@ -1595,23 +1910,27 @@ impl SchedulerCore {
                 if !self.cluster.strict[inst].kv.can_fit(kv_len + 1) {
                     return;
                 }
-                self.cluster.strict[inst]
-                    .kv
-                    .admit(rid, kv_len + 1)
-                    .expect("fit");
+                let m = self.peek_prefix(InstanceRef::Strict(inst), rid);
+                self.admit_prefixed(
+                    InstanceRef::Strict(inst),
+                    rid,
+                    kv_len + 1,
+                    &m,
+                );
                 self.cluster.relaxed[src].kv.release(rid).expect("kv");
                 self.cluster.relaxed[src]
                     .offline_decoding
                     .retain(|&r| r != rid);
-                self.cluster.kv_home[rid as usize] = KvHome::Strict(inst);
                 self.cluster.requests[rid as usize].phase = Phase::Migrating;
                 // As in `maybe_pull_migration`: charge the receiving
                 // instance, matching the decode_done debits.
                 self.cluster.router.decode_grow(inst, kv_len);
                 self.cluster.strict[inst].inbound.push(rid);
+                let moved = self.transfer_tokens_for(rid, &m);
                 self.enqueue_transfer(
                     rid,
                     TransferKind::Dispatch { to_strict: inst },
+                    moved,
                 );
             }
         }
@@ -1621,6 +1940,8 @@ impl SchedulerCore {
     /// request becomes a decode resident there.
     fn decode_handoff(&mut self, rid: RequestId, inst: usize) {
         self.cluster.strict[inst].inbound.retain(|&r| r != rid);
+        // The landed chain is cacheable content at its new home.
+        self.register_prefix(InstanceRef::Strict(inst), rid);
         let is_online = self.cluster.requests[rid as usize].class.is_online()
             || self.cfg.policy == Policy::BasePd;
         self.cluster.requests[rid as usize].phase = Phase::Decoding;

@@ -120,6 +120,8 @@ impl VirtualExecutor {
                 | Action::Evict { .. }
                 | Action::Migrate { .. }
                 | Action::Admit { .. }
+                | Action::PrefixResolve { .. }
+                | Action::PrefixEvict { .. }
                 | Action::Complete { .. }
                 | Action::RepartitionPlan { .. }
                 | Action::RoleChange { .. } => {}
@@ -281,6 +283,8 @@ impl StubWallClockExecutor {
                 | Action::Evict { .. }
                 | Action::Migrate { .. }
                 | Action::Admit { .. }
+                | Action::PrefixResolve { .. }
+                | Action::PrefixEvict { .. }
                 | Action::Complete { .. }
                 | Action::RepartitionPlan { .. }
                 | Action::RoleChange { .. } => {}

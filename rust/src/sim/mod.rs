@@ -20,7 +20,9 @@ pub use crate::scheduler::{Event, EventKind, EventQueue};
 
 use crate::config::ServingConfig;
 use crate::coordinator::{Ablation, OverloadMode, Policy};
-use crate::metrics::{PoolReport, Recorder, Report, TransportReport};
+use crate::metrics::{
+    PoolReport, PrefixReport, Recorder, Report, TransportReport,
+};
 use crate::scheduler::{CoreConfig, Executor, SchedulerCore, VirtualExecutor};
 use crate::trace::Trace;
 
@@ -93,6 +95,9 @@ pub struct SimResult {
     pub transport: TransportReport,
     /// Elastic pool-manager accounting (plans, flips, stranded capacity).
     pub pool: PoolReport,
+    /// Prefix-sharing cache accounting (hit rate, prefill tokens saved,
+    /// reclaimable capacity — DESIGN.md §3.7).
+    pub prefix: PrefixReport,
 }
 
 /// Run the simulation of `trace` under `cfg`: build a [`SchedulerCore`],
@@ -142,5 +147,6 @@ fn build_result(
         offloads: cluster.offloads,
         transport: core.transport_report(end_time.max(duration)),
         pool: core.pool_report(),
+        prefix: core.prefix_report(),
     }
 }

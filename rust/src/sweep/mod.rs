@@ -15,7 +15,9 @@ use crate::config::ServingConfig;
 use crate::coordinator::{Ablation, Policy};
 use crate::sim::{simulate, SimConfig, SimResult};
 use crate::trace::datasets::DatasetProfile;
-use crate::trace::generator::{offline_trace, online_trace};
+use crate::trace::generator::{
+    offline_trace_with_prefix, online_trace, PrefixProfile,
+};
 use crate::trace::Trace;
 use crate::util::json::Json;
 
@@ -29,6 +31,10 @@ pub struct SweepPoint {
     pub tpot_p99: f64,
     pub migrations: u64,
     pub evictions: u64,
+    /// Prefix-cache token-weighted hit rate at this load level (0 when the
+    /// cache is off or the trace declares no shared prefixes) — lets a
+    /// sweep plot SLO attainment vs load with and without caching.
+    pub prefix_hit_rate: f64,
 }
 
 /// Sweep settings.
@@ -37,6 +43,11 @@ pub struct SweepConfig {
     pub duration_s: f64,
     pub seed: u64,
     pub ablation: Ablation,
+    /// Shared-prefix structure of the swept offline workload (§3.7) —
+    /// [`PrefixProfile::None`] reproduces the cold pre-cache sweeps; a
+    /// sharing profile makes `SweepPoint::prefix_hit_rate` meaningful so
+    /// attainment-vs-load can be compared with and without caching.
+    pub offline_prefix: PrefixProfile,
 }
 
 impl Default for SweepConfig {
@@ -45,6 +56,7 @@ impl Default for SweepConfig {
             duration_s: 1800.0,
             seed: 42,
             ablation: Ablation::full(),
+            offline_prefix: PrefixProfile::None,
         }
     }
 }
@@ -128,10 +140,11 @@ pub fn offline_sweep(
         .iter()
         .map(|&qps| {
             let trace = if qps > 0.0 {
-                online.clone().merge(offline_trace(
+                online.clone().merge(offline_trace_with_prefix(
                     offline_ds.clone(),
                     qps,
                     sweep.duration_s,
+                    sweep.offline_prefix,
                     sweep.seed + 1,
                 ))
             } else {
@@ -146,6 +159,7 @@ pub fn offline_sweep(
                 tpot_p99: res.report.tpot.p99,
                 migrations: res.migrations,
                 evictions: res.evictions,
+                prefix_hit_rate: res.prefix.hit_rate,
             }
         })
         .collect()
@@ -165,6 +179,7 @@ impl SweepPoint {
             ("tpot_p99", Json::Num(self.tpot_p99)),
             ("migrations", Json::Num(self.migrations as f64)),
             ("evictions", Json::Num(self.evictions as f64)),
+            ("prefix_hit_rate", Json::Num(self.prefix_hit_rate)),
         ])
     }
 }
@@ -219,6 +234,7 @@ mod tests {
             duration_s: 420.0,
             seed: 7,
             ablation: Ablation::full(),
+            offline_prefix: PrefixProfile::None,
         }
     }
 
@@ -241,6 +257,7 @@ mod tests {
             tpot_p99: 0.0,
             migrations: 0,
             evictions: 0,
+            prefix_hit_rate: 0.25,
         };
         let pts = vec![
             mk(1.0, 0.0, 100.0),
@@ -256,6 +273,10 @@ mod tests {
         assert_eq!(j.get("label").as_str(), Some("ooco"));
         let att = j.get("points").idx(2).get("slo_attainment").as_f64();
         assert!((att.unwrap() - 0.92).abs() < 1e-12);
+        assert_eq!(
+            j.get("points").idx(0).get("prefix_hit_rate").as_f64(),
+            Some(0.25)
+        );
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }
 
@@ -278,6 +299,43 @@ mod tests {
             "4x capacity should violate ({})",
             over.report.online_violation_rate
         );
+    }
+
+    #[test]
+    fn shared_prefix_sweep_reports_nonzero_hit_rate() {
+        // The prefix_hit_rate column must be producible end to end: a
+        // sweep over a sharing profile yields hits; the cold profile
+        // stays at zero.
+        let serving = ServingConfig::preset_7b();
+        let mut sweep = quick_sweep();
+        sweep.duration_s = 240.0;
+        sweep.offline_prefix =
+            PrefixProfile::SharedSystem { prefix_len: 1000 };
+        let pts = offline_sweep(
+            &serving,
+            Policy::Ooco,
+            &DatasetProfile::azure_conv(),
+            0.3,
+            &DatasetProfile::ooc_offline(),
+            &[2.0],
+            &sweep,
+        );
+        assert!(
+            pts[0].prefix_hit_rate > 0.0,
+            "sharing profile must produce cache hits: {:?}",
+            pts[0]
+        );
+        sweep.offline_prefix = PrefixProfile::None;
+        let cold = offline_sweep(
+            &serving,
+            Policy::Ooco,
+            &DatasetProfile::azure_conv(),
+            0.3,
+            &DatasetProfile::ooc_offline(),
+            &[2.0],
+            &sweep,
+        );
+        assert_eq!(cold[0].prefix_hit_rate, 0.0);
     }
 
     #[test]

@@ -5,6 +5,12 @@
 //! sampling uses Lewis–Shedler thinning so the generated trace is an exact
 //! draw from the rate function. Offline traffic is uniform-QPS (the paper
 //! regulates offline load that way in §5.2).
+//!
+//! Shared-prefix workload families (DESIGN.md §3.7) ride on the same
+//! machinery: a [`PrefixProfile`] declares how requests share prompt
+//! prefixes — one system prompt, few-shot template groups, or multi-turn
+//! agentic conversations ([`agentic_trace`]) whose context grows turn over
+//! turn.
 
 use crate::request::{Class, Request};
 use crate::util::rng::Pcg;
@@ -22,6 +28,145 @@ pub enum ArrivalPattern {
     UniformQps,
 }
 
+/// Shared-prefix structure of a synthesized workload (DESIGN.md §3.7).
+/// The declared prefix is *prepended* to the dataset-sampled prompt, so
+/// family members really do share their first `prefix_len` tokens.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PrefixProfile {
+    /// Independent prompts (the pre-§3.7 behaviour).
+    None,
+    /// Every request shares one system prompt of `prefix_len` tokens.
+    SharedSystem { prefix_len: usize },
+    /// Requests draw one of `groups` few-shot templates of `prefix_len`
+    /// tokens each.
+    FewShot { groups: usize, prefix_len: usize },
+    /// Multi-turn agentic conversations. Not expressible as a per-arrival
+    /// decoration — use [`agentic_trace`]; [`TraceGenerator`] treats this
+    /// variant like [`PrefixProfile::None`].
+    Agentic { conversations: usize, turns: usize },
+}
+
+impl PrefixProfile {
+    pub const DEFAULT_SHARED: PrefixProfile =
+        PrefixProfile::SharedSystem { prefix_len: 1024 };
+    pub const DEFAULT_FEW_SHOT: PrefixProfile =
+        PrefixProfile::FewShot { groups: 8, prefix_len: 1024 };
+    pub const DEFAULT_AGENTIC: PrefixProfile =
+        PrefixProfile::Agentic { conversations: 16, turns: 6 };
+}
+
+impl std::str::FromStr for PrefixProfile {
+    type Err = anyhow::Error;
+
+    /// Parse `none`, `shared-system`, `few-shot`, `agentic`, or the
+    /// parameterized forms `Display` emits — e.g.
+    /// `shared-system(len=2048)`, `few-shot(groups=4,len=512)`,
+    /// `agentic(convs=32,turns=8)` (keys optional, any order).
+    fn from_str(name: &str) -> anyhow::Result<PrefixProfile> {
+        fn params<'a>(
+            body: &'a str,
+            kind: &str,
+        ) -> anyhow::Result<Vec<(&'a str, usize)>> {
+            let mut out = Vec::new();
+            for tok in body.split(',').filter(|t| !t.trim().is_empty()) {
+                let (k, v) = tok.trim().split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!("bad {kind} parameter `{tok}`")
+                })?;
+                out.push((k.trim(), v.trim().parse::<usize>()?));
+            }
+            Ok(out)
+        }
+        match name {
+            "none" => return Ok(PrefixProfile::None),
+            "shared-system" => return Ok(Self::DEFAULT_SHARED),
+            "few-shot" => return Ok(Self::DEFAULT_FEW_SHOT),
+            "agentic" => return Ok(Self::DEFAULT_AGENTIC),
+            _ => {}
+        }
+        if let Some(body) = name
+            .strip_prefix("shared-system(")
+            .and_then(|s| s.strip_suffix(')'))
+        {
+            let mut prefix_len = match Self::DEFAULT_SHARED {
+                PrefixProfile::SharedSystem { prefix_len } => prefix_len,
+                _ => unreachable!(),
+            };
+            for (k, v) in params(body, "shared-system")? {
+                match k {
+                    "len" | "prefix_len" => prefix_len = v,
+                    _ => anyhow::bail!("unknown shared-system parameter `{k}`"),
+                }
+            }
+            anyhow::ensure!(prefix_len > 0, "prefix_len must be positive");
+            return Ok(PrefixProfile::SharedSystem { prefix_len });
+        }
+        if let Some(body) = name
+            .strip_prefix("few-shot(")
+            .and_then(|s| s.strip_suffix(')'))
+        {
+            let (mut groups, mut prefix_len) = match Self::DEFAULT_FEW_SHOT {
+                PrefixProfile::FewShot { groups, prefix_len } => {
+                    (groups, prefix_len)
+                }
+                _ => unreachable!(),
+            };
+            for (k, v) in params(body, "few-shot")? {
+                match k {
+                    "groups" => groups = v,
+                    "len" | "prefix_len" => prefix_len = v,
+                    _ => anyhow::bail!("unknown few-shot parameter `{k}`"),
+                }
+            }
+            anyhow::ensure!(
+                groups > 0 && prefix_len > 0,
+                "few-shot needs positive groups and prefix_len"
+            );
+            return Ok(PrefixProfile::FewShot { groups, prefix_len });
+        }
+        if let Some(body) = name
+            .strip_prefix("agentic(")
+            .and_then(|s| s.strip_suffix(')'))
+        {
+            let (mut conversations, mut turns) = match Self::DEFAULT_AGENTIC {
+                PrefixProfile::Agentic { conversations, turns } => {
+                    (conversations, turns)
+                }
+                _ => unreachable!(),
+            };
+            for (k, v) in params(body, "agentic")? {
+                match k {
+                    "convs" | "conversations" => conversations = v,
+                    "turns" => turns = v,
+                    _ => anyhow::bail!("unknown agentic parameter `{k}`"),
+                }
+            }
+            anyhow::ensure!(
+                conversations > 0 && turns > 0,
+                "agentic needs positive conversations and turns"
+            );
+            return Ok(PrefixProfile::Agentic { conversations, turns });
+        }
+        anyhow::bail!("unknown prefix profile `{name}`")
+    }
+}
+
+impl std::fmt::Display for PrefixProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PrefixProfile::None => f.write_str("none"),
+            PrefixProfile::SharedSystem { prefix_len } => {
+                write!(f, "shared-system(len={prefix_len})")
+            }
+            PrefixProfile::FewShot { groups, prefix_len } => {
+                write!(f, "few-shot(groups={groups},len={prefix_len})")
+            }
+            PrefixProfile::Agentic { conversations, turns } => {
+                write!(f, "agentic(convs={conversations},turns={turns})")
+            }
+        }
+    }
+}
+
 /// Everything needed to synthesize one class's trace.
 #[derive(Debug, Clone)]
 pub struct TraceSpec {
@@ -34,6 +179,9 @@ pub struct TraceSpec {
     pub duration_s: f64,
     /// Phase offset into the day (s) — where on the tide the trace starts.
     pub day_phase_s: f64,
+    /// Shared-prefix structure ([`PrefixProfile::None`] = independent
+    /// prompts; `Agentic` is ignored here — use [`agentic_trace`]).
+    pub prefix: PrefixProfile,
     pub seed: u64,
 }
 
@@ -142,8 +290,81 @@ impl TraceGenerator {
     fn make_request(&self, id: u64, t: f64, len_rng: &mut Pcg) -> Request {
         let prompt = self.spec.dataset.prompt.sample(len_rng);
         let output = self.spec.dataset.output.sample(len_rng);
-        Request::new(id, self.spec.class, t, prompt, output)
+        match self.spec.prefix {
+            PrefixProfile::None | PrefixProfile::Agentic { .. } => {
+                Request::new(id, self.spec.class, t, prompt, output)
+            }
+            PrefixProfile::SharedSystem { prefix_len } => {
+                let family = prefix_family(self.spec.seed, 0);
+                Request::new(
+                    id,
+                    self.spec.class,
+                    t,
+                    prefix_len + prompt,
+                    output,
+                )
+                .with_prefix(family, prefix_len)
+            }
+            PrefixProfile::FewShot { groups, prefix_len } => {
+                let g = len_rng.below(groups.max(1)) as u64;
+                Request::new(
+                    id,
+                    self.spec.class,
+                    t,
+                    prefix_len + prompt,
+                    output,
+                )
+                .with_prefix(prefix_family(self.spec.seed, g), prefix_len)
+            }
+        }
     }
+}
+
+/// Deterministic family id for `(seed, group)` — distinct across seeds so
+/// merged traces never alias prefix content.
+fn prefix_family(seed: u64, group: u64) -> u64 {
+    crate::prefix::splitmix64(
+        seed ^ 0x00c0_ffee ^ group.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    )
+}
+
+/// Multi-turn agentic conversations (the heavy-share offline workload):
+/// each conversation is a chain of `turns` requests where turn *t*'s
+/// prompt is the whole prior context — previous prompt, previous output,
+/// and a fresh user message — and is declared fully shareable under the
+/// conversation's family. Turn *t* therefore hits the chain turn *t−1*
+/// registered and recomputes only the last exchange. Conversations start
+/// uniformly over `duration_s`; turns follow after `think_s`-scale gaps.
+pub fn agentic_trace(
+    ds: DatasetProfile,
+    conversations: usize,
+    turns: usize,
+    think_s: f64,
+    duration_s: f64,
+    seed: u64,
+) -> Trace {
+    let mut rng = Pcg::new(seed, 505);
+    let mut reqs = Vec::new();
+    let mut id = 0u64;
+    for c in 0..conversations {
+        let family = prefix_family(seed, 0x0a9e_0000 + c as u64);
+        let mut t = rng.range_f64(0.0, duration_s.max(1e-9));
+        let mut context = ds.prompt.sample(&mut rng);
+        for _ in 0..turns {
+            let prompt = context.min(16_384);
+            let output = ds.output.sample(&mut rng);
+            reqs.push(
+                Request::new(id, Class::Offline, t, prompt, output)
+                    .with_prefix(family, prompt),
+            );
+            id += 1;
+            // The whole exchange joins the next turn's context after a
+            // think-time gap.
+            context = prompt + output + 32 + rng.below(96);
+            t += think_s.max(1e-3) * (0.5 + rng.f64());
+        }
+    }
+    Trace::new(reqs)
 }
 
 /// Convenience: synthesize an online trace for a dataset.
@@ -160,6 +381,7 @@ pub fn online_trace(
         base_rate,
         duration_s,
         day_phase_s: 10.0 * 3600.0, // start near mid-morning ramp
+        prefix: PrefixProfile::None,
         seed,
     })
     .generate()
@@ -204,6 +426,34 @@ pub fn offline_trace(
     duration_s: f64,
     seed: u64,
 ) -> Trace {
+    offline_trace_with_prefix(
+        dataset,
+        qps,
+        duration_s,
+        PrefixProfile::None,
+        seed,
+    )
+}
+
+/// [`offline_trace`] with a shared-prefix workload family (§3.7). An
+/// [`PrefixProfile::Agentic`] profile delegates to [`agentic_trace`] with
+/// think time set so the requested QPS is met in expectation.
+pub fn offline_trace_with_prefix(
+    dataset: DatasetProfile,
+    qps: f64,
+    duration_s: f64,
+    prefix: PrefixProfile,
+    seed: u64,
+) -> Trace {
+    if let PrefixProfile::Agentic { conversations, turns } = prefix {
+        // conversations × turns requests over the duration ≈ qps·duration:
+        // scale the conversation count to the requested volume and spread
+        // turns across roughly half the window.
+        let want = (qps * duration_s).round().max(1.0) as usize;
+        let convs = want.div_ceil(turns.max(1)).max(conversations.min(want));
+        let think = (duration_s / (2.0 * turns.max(1) as f64)).max(1e-3);
+        return agentic_trace(dataset, convs, turns, think, duration_s, seed);
+    }
     TraceGenerator::new(TraceSpec {
         dataset,
         class: Class::Offline,
@@ -211,6 +461,7 @@ pub fn offline_trace(
         base_rate: qps,
         duration_s,
         day_phase_s: 0.0,
+        prefix,
         seed,
     })
     .generate()
@@ -257,6 +508,7 @@ mod tests {
             base_rate,
             duration_s: duration,
             day_phase_s: 0.0,
+            prefix: PrefixProfile::None,
             seed,
         })
     }
@@ -340,6 +592,102 @@ mod tests {
     fn zero_rate_empty() {
         assert!(offline_trace(DatasetProfile::ooc_offline(), 0.0, 100.0, 1)
             .is_empty());
+    }
+
+    #[test]
+    fn prefix_profile_parse_display_roundtrip() {
+        for p in [
+            PrefixProfile::None,
+            PrefixProfile::DEFAULT_SHARED,
+            PrefixProfile::DEFAULT_FEW_SHOT,
+            PrefixProfile::DEFAULT_AGENTIC,
+            PrefixProfile::SharedSystem { prefix_len: 2048 },
+            PrefixProfile::FewShot { groups: 4, prefix_len: 512 },
+            PrefixProfile::Agentic { conversations: 32, turns: 8 },
+        ] {
+            assert_eq!(p.to_string().parse::<PrefixProfile>().unwrap(), p);
+        }
+        assert_eq!(
+            "shared-system".parse::<PrefixProfile>().unwrap(),
+            PrefixProfile::DEFAULT_SHARED
+        );
+        assert!("prefixy".parse::<PrefixProfile>().is_err());
+        assert!("shared-system(len=0)".parse::<PrefixProfile>().is_err());
+        assert!("few-shot(flavors=2)".parse::<PrefixProfile>().is_err());
+        assert!("agentic(turns=0)".parse::<PrefixProfile>().is_err());
+    }
+
+    #[test]
+    fn shared_system_prefixes_every_request() {
+        let t = offline_trace_with_prefix(
+            DatasetProfile::ooc_offline(),
+            2.0,
+            100.0,
+            PrefixProfile::SharedSystem { prefix_len: 777 },
+            3,
+        );
+        assert!(t.len() > 100);
+        let fam = t.requests[0].prefix.unwrap().family;
+        for r in &t.requests {
+            let p = r.prefix.unwrap();
+            assert_eq!(p.family, fam, "one shared system prompt");
+            assert_eq!(p.len, 777);
+            assert!(r.prompt_len >= 777, "prefix prepended to the prompt");
+        }
+    }
+
+    #[test]
+    fn few_shot_groups_bound_family_count() {
+        let t = offline_trace_with_prefix(
+            DatasetProfile::ooc_offline(),
+            2.0,
+            200.0,
+            PrefixProfile::FewShot { groups: 4, prefix_len: 300 },
+            5,
+        );
+        let mut fams: Vec<u64> =
+            t.requests.iter().map(|r| r.prefix.unwrap().family).collect();
+        fams.sort_unstable();
+        fams.dedup();
+        assert!(
+            (2..=4).contains(&fams.len()),
+            "expected ≤4 template families, got {}",
+            fams.len()
+        );
+    }
+
+    #[test]
+    fn agentic_contexts_grow_and_nest() {
+        let t = agentic_trace(
+            DatasetProfile::azure_conv(),
+            6,
+            5,
+            10.0,
+            300.0,
+            9,
+        );
+        assert_eq!(t.len(), 30);
+        // Group by family: each conversation's prompts strictly grow and
+        // each turn declares its whole prompt shareable.
+        use std::collections::HashMap;
+        let mut convs: HashMap<u64, Vec<&Request>> = HashMap::new();
+        for r in &t.requests {
+            let p = r.prefix.unwrap();
+            assert_eq!(p.len, r.prompt_len);
+            convs.entry(p.family).or_default().push(r);
+        }
+        assert_eq!(convs.len(), 6);
+        for turns in convs.values_mut() {
+            turns.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+            assert_eq!(turns.len(), 5);
+            for w in turns.windows(2) {
+                assert!(
+                    w[1].prompt_len > w[0].prompt_len
+                        || w[1].prompt_len == 16_384, // context cap reached
+                    "context must grow turn over turn"
+                );
+            }
+        }
     }
 
     #[test]

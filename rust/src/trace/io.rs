@@ -3,7 +3,10 @@
 //! Format: `{"requests": [{"class": "online", "arrival": 1.5,
 //! "prompt_len": 100, "output_len": 50}, ...]}` — the same fields a
 //! de-identified production trace (like the paper's OOC dataset) would
-//! carry.
+//! carry. Shared-prefix declarations (DESIGN.md §3.7) ride as an optional
+//! pair per request: `"prefix_id"` (the family, serialized as a string —
+//! u64 families do not fit a JSON double) and `"prefix_len"` (the
+//! shareable span, `1..=prompt_len`). Either both are present or neither.
 
 use std::path::Path;
 
@@ -17,12 +20,17 @@ pub fn trace_to_json(trace: &Trace) -> Json {
         .requests
         .iter()
         .map(|r| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("class", Json::Str(r.class.name().to_string())),
                 ("arrival", Json::Num(r.arrival)),
                 ("prompt_len", Json::Num(r.prompt_len as f64)),
                 ("output_len", Json::Num(r.output_len as f64)),
-            ])
+            ];
+            if let Some(p) = r.prefix {
+                fields.push(("prefix_id", Json::Str(p.family.to_string())));
+                fields.push(("prefix_len", Json::Num(p.len as f64)));
+            }
+            Json::obj(fields)
         })
         .collect();
     Json::obj(vec![("requests", Json::Arr(requests))])
@@ -40,13 +48,49 @@ pub fn trace_from_json(v: &Json) -> anyhow::Result<Trace> {
             "offline" => Class::Offline,
             other => anyhow::bail!("request {i}: unknown class `{other}`"),
         };
-        requests.push(Request::new(
+        let prompt_len = item.req_usize("prompt_len")?;
+        let mut req = Request::new(
             i as u64,
             class,
             item.req_f64("arrival")?,
-            item.req_usize("prompt_len")?,
+            prompt_len,
             item.req_usize("output_len")?,
-        ));
+        );
+        match (item.get("prefix_id"), item.get("prefix_len")) {
+            (Json::Null, Json::Null) => {}
+            (Json::Null, _) => {
+                anyhow::bail!("request {i}: prefix_len without prefix_id")
+            }
+            (_, Json::Null) => {
+                anyhow::bail!("request {i}: prefix_id without prefix_len")
+            }
+            (id, len) => {
+                let family = id
+                    .as_str()
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "request {i}: prefix_id must be a string"
+                        )
+                    })?
+                    .parse::<u64>()
+                    .map_err(|e| {
+                        anyhow::anyhow!("request {i}: bad prefix_id: {e}")
+                    })?;
+                let len = len.as_usize().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "request {i}: prefix_len must be a non-negative \
+                         integer"
+                    )
+                })?;
+                anyhow::ensure!(
+                    len >= 1 && len <= prompt_len,
+                    "request {i}: prefix_len {len} outside 1..=prompt_len \
+                     ({prompt_len})"
+                );
+                req = req.with_prefix(family, len);
+            }
+        }
+        requests.push(req);
     }
     Ok(Trace::new(requests))
 }
@@ -64,7 +108,9 @@ pub fn load_trace(path: &Path) -> anyhow::Result<Trace> {
 mod tests {
     use super::*;
     use crate::trace::datasets::DatasetProfile;
-    use crate::trace::generator::{offline_trace, online_trace};
+    use crate::trace::generator::{
+        offline_trace, offline_trace_with_prefix, online_trace, PrefixProfile,
+    };
 
     #[test]
     fn roundtrip_through_file() {
@@ -81,7 +127,56 @@ mod tests {
             assert!((a.arrival - b.arrival).abs() < 1e-9);
             assert_eq!(a.prompt_len, b.prompt_len);
             assert_eq!(a.output_len, b.output_len);
+            assert_eq!(a.prefix, b.prefix);
         }
+    }
+
+    #[test]
+    fn prefix_fields_roundtrip_exactly() {
+        // Families exceed 2^53, so string serialization is load-bearing:
+        // a Num would silently round.
+        let t = online_trace(DatasetProfile::azure_conv(), 0.5, 200.0, 5)
+            .merge(offline_trace_with_prefix(
+                DatasetProfile::ooc_offline(),
+                1.0,
+                200.0,
+                PrefixProfile::FewShot { groups: 3, prefix_len: 640 },
+                6,
+            ));
+        assert!(t.requests.iter().any(|r| r.prefix.is_some()));
+        assert!(t.requests.iter().any(|r| r.prefix.is_none()));
+        let t2 = trace_from_json(&trace_to_json(&t)).unwrap();
+        for (a, b) in t.requests.iter().zip(&t2.requests) {
+            assert_eq!(a.prefix, b.prefix, "request {}", a.id);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_prefix_declarations() {
+        let base = r#"{"class": "offline", "arrival": 0, "prompt_len": 100, "output_len": 10"#;
+        for (frag, why) in [
+            (r#", "prefix_len": 50}"#, "prefix_len without prefix_id"),
+            (r#", "prefix_id": "7"}"#, "prefix_id without prefix_len"),
+            (r#", "prefix_id": "x9", "prefix_len": 50}"#, "non-numeric id"),
+            (r#", "prefix_id": 7, "prefix_len": 50}"#, "id must be string"),
+            (r#", "prefix_id": "7", "prefix_len": 0}"#, "zero span"),
+            (r#", "prefix_id": "7", "prefix_len": 101}"#, "span > prompt"),
+        ] {
+            let v = Json::parse(&format!(
+                r#"{{"requests": [{base}{frag}]}}"#
+            ))
+            .unwrap();
+            assert!(trace_from_json(&v).is_err(), "accepted: {why}");
+        }
+        // And the well-formed declaration parses.
+        let v = Json::parse(&format!(
+            r#"{{"requests": [{base}, "prefix_id": "18446744073709551615", "prefix_len": 100}}]}}"#
+        ))
+        .unwrap();
+        let t = trace_from_json(&v).unwrap();
+        let p = t.requests[0].prefix.unwrap();
+        assert_eq!(p.family, u64::MAX);
+        assert_eq!(p.len, 100);
     }
 
     #[test]

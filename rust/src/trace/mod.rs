@@ -13,7 +13,9 @@ pub mod io;
 pub mod scaling;
 
 pub use datasets::{DatasetProfile, LengthProfile};
-pub use generator::{ArrivalPattern, TraceGenerator, TraceSpec};
+pub use generator::{
+    ArrivalPattern, PrefixProfile, TraceGenerator, TraceSpec,
+};
 pub use scaling::scale_trace;
 
 use crate::request::{Class, Request};

@@ -245,6 +245,46 @@ fn elastic_repartition_runs_on_the_real_engine() {
 }
 
 #[test]
+fn engine_accounts_shared_prefixes() {
+    // A shared-prefix offline family on the real substrate: the core
+    // shares and prices cached blocks (the engine still recomputes them —
+    // DESIGN.md §3.7 divergence), so the outcome's prefix report must show
+    // hits and savings. Arrivals are spaced well past the tiny model's
+    // prefill time so each request finds its predecessor's chain
+    // registered.
+    with_runtime(|rt| {
+        let fam = 0xfeed_u64;
+        let reqs: Vec<Request> = (0..6u64)
+            .map(|i| {
+                Request::new(i, Class::Offline, 2.0 * i as f64, 96, 4)
+                    .with_prefix(fam, 64)
+            })
+            .collect();
+        let trace = Trace::new(reqs);
+        let cfg = EngineConfig {
+            policy: Policy::Ooco,
+            time_scale: 10.0,
+            max_output: 4,
+            ..Default::default()
+        };
+        let out = serve_trace_with_runtime(rt, &trace, &cfg).unwrap();
+        assert_eq!(
+            out.report.offline_finished,
+            6,
+            "{}",
+            out.report.summary_line()
+        );
+        assert!(out.prefix.enabled);
+        assert!(
+            out.prefix.hits >= 1,
+            "later family members must hit the chain: {}",
+            out.prefix.summary_line()
+        );
+        assert!(out.prefix.prefill_tokens_saved > 0);
+    });
+}
+
+#[test]
 fn serve_small_mixed_trace_end_to_end() {
     with_runtime(|rt| {
         let mut reqs = Vec::new();

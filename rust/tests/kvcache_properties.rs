@@ -1,0 +1,250 @@
+//! Property tests for the refcounted, prefix-sharing KV allocator
+//! (DESIGN.md §3.7): block conservation across alloc/share/cow/free
+//! cycles, no double-free, LRU eviction never reclaiming a pinned or
+//! referenced block, and `free_tokens` honesty under sharing.
+//!
+//! The external model mirrors how the scheduler uses the allocator: plain
+//! admissions, chain registrations (`mark_cached` over a resident's full
+//! blocks), shared admissions validated the way the prefix index validates
+//! (`is_cached` per block), growth, and release — with
+//! `KvManager::check_invariants` auditing the internal state after every
+//! operation.
+
+use ooco::kvcache::KvManager;
+use ooco::prop_assert;
+use ooco::testutil::forall;
+
+const BT: usize = 16;
+
+struct LiveReq {
+    id: u64,
+    tokens: usize,
+    /// The cache blocks this admission referenced (must stay its block
+    /// prefix, verbatim, for its whole life).
+    shared: Vec<u32>,
+}
+
+#[test]
+fn refcounted_allocator_invariants_under_churn() {
+    forall(40, |r| {
+        let total_blocks = 20 + r.below(60); // 20..=79 blocks
+        let mut kv = KvManager::new(total_blocks * BT, BT);
+        let mut live: Vec<LiveReq> = Vec::new();
+        let mut chains: Vec<Vec<u32>> = Vec::new();
+        let mut next_id = 0u64;
+
+        for _ in 0..400 {
+            match r.below(6) {
+                0 | 1 => {
+                    // Plain (cold) admission.
+                    let toks = r.below(6 * BT) + 1;
+                    if kv.admit(next_id, toks).is_ok() {
+                        live.push(LiveReq {
+                            id: next_id,
+                            tokens: toks,
+                            shared: Vec::new(),
+                        });
+                    }
+                    next_id += 1;
+                }
+                2 => {
+                    // Register a resident's full blocks as a cached chain
+                    // (the shape of a prefix-index insertion).
+                    if !live.is_empty() {
+                        let lr = &live[r.below(live.len())];
+                        let blocks = kv.blocks_of(lr.id).unwrap().to_vec();
+                        let full = lr.tokens / BT;
+                        if full > 0 {
+                            for &b in &blocks[..full] {
+                                kv.mark_cached(b);
+                            }
+                            chains.push(blocks[..full].to_vec());
+                        }
+                    }
+                }
+                3 => {
+                    // Shared admission off a chain, validated per block the
+                    // way the index validates (stale entries skipped), with
+                    // occasional copy-on-write partial reuse.
+                    if !chains.is_empty() {
+                        let chain = chains[r.below(chains.len())].clone();
+                        let valid: Vec<u32> = chain
+                            .iter()
+                            .copied()
+                            .take_while(|&b| kv.is_cached(b))
+                            .collect();
+                        let shared: Vec<u32> =
+                            valid.iter().copied().take(1 + r.below(4)).collect();
+                        let partial = if valid.len() > shared.len()
+                            && r.below(2) == 0
+                        {
+                            Some((valid[shared.len()], 1 + r.below(BT - 1)))
+                        } else {
+                            None
+                        };
+                        let toks = shared.len() * BT + r.below(3 * BT) + 1;
+                        if kv.can_admit_shared(toks, &shared) {
+                            kv.admit_shared(next_id, toks, &shared, partial)
+                                .unwrap();
+                            live.push(LiveReq {
+                                id: next_id,
+                                tokens: toks,
+                                shared,
+                            });
+                        } else {
+                            prop_assert!(
+                                kv.admit_shared(next_id, toks, &shared, partial)
+                                    .is_err(),
+                                "can_admit_shared said no but admit succeeded"
+                            );
+                        }
+                        next_id += 1;
+                    }
+                }
+                4 => {
+                    // Decode growth.
+                    if !live.is_empty() {
+                        let i = r.below(live.len());
+                        let extra = r.below(2 * BT) + 1;
+                        if kv.grow(live[i].id, extra).is_ok() {
+                            live[i].tokens += extra;
+                        }
+                    }
+                }
+                5 => {
+                    // Release (finish/evict/migrate-out).
+                    if !live.is_empty() {
+                        let i = r.below(live.len());
+                        let lr = live.swap_remove(i);
+                        let toks = kv.release(lr.id).unwrap();
+                        prop_assert!(
+                            toks == lr.tokens,
+                            "release token drift: {toks} vs {}",
+                            lr.tokens
+                        );
+                    }
+                }
+                _ => unreachable!(),
+            }
+
+            // Full internal audit after every operation: refcounts equal
+            // owner counts, every block exactly one of free / pinned /
+            // reclaimable, free list duplicate-free.
+            kv.check_invariants()?;
+
+            for lr in &live {
+                let blocks = kv.blocks_of(lr.id).expect("live resident");
+                prop_assert!(
+                    kv.tokens_of(lr.id) == lr.tokens,
+                    "tokens drift for {}",
+                    lr.id
+                );
+                prop_assert!(
+                    blocks.len() == kv.blocks_needed(lr.tokens),
+                    "block-count drift for {}",
+                    lr.id
+                );
+                // Reclamation/CoW must never touch a live request's shared
+                // prefix references.
+                prop_assert!(
+                    blocks[..lr.shared.len()] == lr.shared[..],
+                    "shared prefix of {} was stolen",
+                    lr.id
+                );
+            }
+
+            prop_assert!(
+                kv.free_tokens()
+                    == (kv.free_blocks() + kv.reclaimable_blocks()) * BT,
+                "free_tokens must count free + reclaimable blocks"
+            );
+
+            // Eviction never reclaims a pinned or referenced block: every
+            // logged reclaim is absent from all live shared prefixes.
+            for b in kv.take_reclaimed() {
+                for lr in &live {
+                    prop_assert!(
+                        !lr.shared.contains(&b),
+                        "reclaimed block {b} was pinned by {}",
+                        lr.id
+                    );
+                }
+            }
+        }
+
+        // free_tokens honesty, end to end: exactly what it promises must
+        // be admittable in one go (reclaiming cached blocks on demand).
+        let promised = kv.free_tokens();
+        if promised > 0 {
+            kv.admit(next_id, promised).map_err(|e| {
+                format!("free_tokens promised {promised} tokens: {e}")
+            })?;
+            live.push(LiveReq {
+                id: next_id,
+                tokens: promised,
+                shared: Vec::new(),
+            });
+        }
+
+        // Teardown: releasing every request and unmarking every chain must
+        // restore the whole pool — no leaks, no double-frees.
+        for lr in live.drain(..) {
+            kv.release(lr.id).unwrap();
+        }
+        for chain in chains {
+            for b in chain {
+                let _ = kv.unmark_cached(b);
+            }
+        }
+        kv.check_invariants()?;
+        prop_assert!(
+            kv.free_blocks() == kv.total_blocks(),
+            "pool not restored: {} of {} blocks free",
+            kv.free_blocks(),
+            kv.total_blocks()
+        );
+        Ok(())
+    });
+}
+
+/// Directed share/cow/free cycle: the exact lifecycle the scheduler drives
+/// — prefill + register, sharers arrive (full refs + CoW partial), owners
+/// leave (chain demotes to reclaimable), memory pressure reclaims LRU —
+/// conserving blocks at every stage.
+#[test]
+fn share_cow_free_cycle_conserves_blocks() {
+    let mut kv = KvManager::new(12 * BT, BT);
+    // Prefill a 40-token request; register its chain (2 full + partial).
+    kv.admit(1, 40).unwrap();
+    let blocks = kv.blocks_of(1).unwrap().to_vec();
+    for &b in &blocks {
+        kv.mark_cached(b);
+    }
+    assert_eq!(kv.used_blocks(), 3);
+    assert_eq!(kv.reclaimable_blocks(), 0); // pinned by request 1
+
+    // A sharer references both full blocks and CoW-reuses the partial.
+    kv.admit_shared(2, 50, &blocks[..2], Some((blocks[2], 8))).unwrap();
+    assert_eq!(kv.cow_copies, 1);
+    // 3 (req 1) + 2 private tail blocks for req 2's tokens 33..=50.
+    assert_eq!(kv.used_blocks(), 5);
+    kv.check_invariants().unwrap();
+
+    // Owners leave: the chain becomes reclaimable capacity.
+    kv.release(1).unwrap();
+    kv.release(2).unwrap();
+    assert_eq!(kv.reclaimable_blocks(), 3);
+    assert_eq!(kv.pinned_blocks(), 0);
+    assert_eq!(kv.free_tokens(), 12 * BT);
+    kv.check_invariants().unwrap();
+
+    // Memory pressure: a full-pool admission reclaims the LRU chain.
+    kv.admit(3, 12 * BT).unwrap();
+    assert_eq!(kv.free_blocks(), 0);
+    assert_eq!(kv.reclaimable_blocks(), 0);
+    let reclaimed = kv.take_reclaimed();
+    assert_eq!(reclaimed.len(), 3, "the whole chain was reclaimed");
+    kv.release(3).unwrap();
+    kv.check_invariants().unwrap();
+    assert_eq!(kv.free_blocks(), kv.total_blocks());
+}

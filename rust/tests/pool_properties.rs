@@ -257,6 +257,7 @@ fn planner_is_monotone_in_load() {
                     online_rate: rate,
                     mean_prompt: prompt,
                     mean_output: output,
+                    shared_kv_fraction: 0.0,
                 },
                 total,
                 headroom,
