@@ -1,0 +1,64 @@
+//! Simulator-throughput bench: simulated requests per wall-clock second on
+//! a 100k-request co-locate trace, with chunking on and off — the metric
+//! that keeps simulator speed on the scaling trajectory (the hot-loop
+//! scratch-buffer work in `scheduler::core` lands here).
+//!
+//! Run: `cargo bench --bench bench_sim_throughput` (plain binary, no
+//! harness).
+
+use std::time::Instant;
+
+use ooco::config::{ChunkMode, ServingConfig};
+use ooco::coordinator::Policy;
+use ooco::sim::{simulate, SimConfig};
+use ooco::trace::datasets::{DatasetProfile, LengthProfile};
+use ooco::trace::generator::{offline_trace, online_trace};
+use ooco::trace::Trace;
+
+/// ~100k requests: steady co-locate load with short outputs so the run is
+/// step-dense but bounded.
+fn trace_100k() -> Trace {
+    let duration = 4000.0;
+    let mut online_ds = DatasetProfile::azure_conv();
+    online_ds.prompt = LengthProfile::new(900.0, 0.8, 32, 8192);
+    online_ds.output = LengthProfile::new(24.0, 0.6, 1, 96);
+    let mut offline_ds = DatasetProfile::ooc_offline();
+    offline_ds.prompt = LengthProfile::new(1100.0, 0.8, 32, 8192);
+    offline_ds.output = LengthProfile::new(32.0, 0.6, 1, 128);
+    // 15 online/s + 10 offline/s over 4000 s ≈ 100k requests.
+    let online = online_trace(online_ds, 15.0, duration, 4242);
+    let offline = offline_trace(offline_ds, 10.0, duration, 4243);
+    online.merge(offline)
+}
+
+fn main() {
+    let trace = trace_100k();
+    println!(
+        "trace: {} requests ({} online / {} offline), {:.0} s span",
+        trace.len(),
+        trace.count_class(ooco::request::Class::Online),
+        trace.count_class(ooco::request::Class::Offline),
+        trace.duration()
+    );
+
+    for (label, mode) in [
+        ("chunked (auto)", ChunkMode::Auto),
+        ("exclusive (off)", ChunkMode::Off),
+    ] {
+        let mut serving = ServingConfig::preset_7b();
+        serving.cluster.relaxed_instances = 4;
+        serving.cluster.strict_instances = 4;
+        serving.chunk_tokens = mode;
+        let mut cfg = SimConfig::new(serving, Policy::Ooco);
+        cfg.drain_s = 600.0;
+        let t0 = Instant::now();
+        let res = simulate(&trace, &cfg);
+        let wall = t0.elapsed().as_secs_f64();
+        let req_per_s = trace.len() as f64 / wall.max(1e-9);
+        println!(
+            "{label:>16}: {wall:6.2} s wall | {req_per_s:9.0} sim req/s | {}",
+            res.report.summary_line()
+        );
+        println!("{:>16}  {}", "", res.chunk.summary_line());
+    }
+}

@@ -600,6 +600,65 @@ impl std::fmt::Display for PoolPolicy {
     }
 }
 
+/// Chunked-prefill iteration model (DESIGN.md §3.8): how much prefill
+/// work a relaxed-pool iteration may fuse with its decode batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ChunkMode {
+    /// Exclusive steps (the pre-§3.8 behaviour): an iteration is a whole
+    /// prefill batch *or* a decode batch, never both. Kept as the
+    /// differential baseline for the refactor.
+    Off,
+    /// Solver-chosen budget: each iteration takes the largest chunk that
+    /// keeps its predicted latency inside the headroom-reduced TPOT budget
+    /// (`PerfModel::chunk_budget`), floored at the minimum progress
+    /// quantum.
+    #[default]
+    Auto,
+    /// Fixed per-iteration chunk budget in tokens.
+    Fixed(usize),
+}
+
+impl ChunkMode {
+    pub fn is_enabled(self) -> bool {
+        !matches!(self, ChunkMode::Off)
+    }
+}
+
+impl std::str::FromStr for ChunkMode {
+    type Err = anyhow::Error;
+
+    /// Parse `off`, `auto`, or a fixed token count (`0` = off).
+    fn from_str(name: &str) -> anyhow::Result<ChunkMode> {
+        match name {
+            "off" | "exclusive" => Ok(ChunkMode::Off),
+            "auto" => Ok(ChunkMode::Auto),
+            other => {
+                let n: usize = other.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "chunk_tokens must be `off`, `auto`, or a token \
+                         count, got `{other}`"
+                    )
+                })?;
+                Ok(if n == 0 {
+                    ChunkMode::Off
+                } else {
+                    ChunkMode::Fixed(n)
+                })
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ChunkMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ChunkMode::Off => f.write_str("off"),
+            ChunkMode::Auto => f.write_str("auto"),
+            ChunkMode::Fixed(n) => write!(f, "{n}"),
+        }
+    }
+}
+
 /// Prefix-sharing KV cache configuration (DESIGN.md §3.7).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PrefixSpec {
@@ -776,6 +835,8 @@ pub struct ServingConfig {
     pub pool: PoolPolicy,
     /// Prefix-sharing KV cache (DESIGN.md §3.7).
     pub prefix: PrefixSpec,
+    /// Chunked-prefill iteration model (DESIGN.md §3.8).
+    pub chunk_tokens: ChunkMode,
 }
 
 impl ServingConfig {
@@ -790,6 +851,7 @@ impl ServingConfig {
             cluster: ClusterSpec::default(),
             pool: PoolPolicy::Static,
             prefix: PrefixSpec::default(),
+            chunk_tokens: ChunkMode::Auto,
         }
     }
 
@@ -804,6 +866,7 @@ impl ServingConfig {
             cluster: ClusterSpec::default(),
             pool: PoolPolicy::Static,
             prefix: PrefixSpec::default(),
+            chunk_tokens: ChunkMode::Auto,
         }
     }
 
@@ -861,6 +924,21 @@ impl ServingConfig {
                 Json::Null => PrefixSpec::default(),
                 Json::Bool(b) => PrefixSpec { enabled: *b },
                 p => PrefixSpec::from_json(p)?,
+            },
+            chunk_tokens: match v.get("chunk_tokens") {
+                Json::Null => ChunkMode::Auto,
+                Json::Str(s) => s.parse()?,
+                Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => {
+                    if *n == 0.0 {
+                        ChunkMode::Off
+                    } else {
+                        ChunkMode::Fixed(*n as usize)
+                    }
+                }
+                other => anyhow::bail!(
+                    "chunk_tokens must be \"off\", \"auto\", or a whole \
+                     token count, got {other:?}"
+                ),
             },
         })
     }
@@ -1076,6 +1154,43 @@ mod tests {
         assert_eq!(cfg.cluster.relaxed_instances, 1);
         assert_eq!(cfg.pool, PoolPolicy::Static);
         assert!(cfg.prefix.enabled); // cache defaults on
+    }
+
+    #[test]
+    fn chunk_mode_parse_display_roundtrip() {
+        assert_eq!("off".parse::<ChunkMode>().unwrap(), ChunkMode::Off);
+        assert_eq!("auto".parse::<ChunkMode>().unwrap(), ChunkMode::Auto);
+        assert_eq!(
+            "2048".parse::<ChunkMode>().unwrap(),
+            ChunkMode::Fixed(2048)
+        );
+        assert_eq!("0".parse::<ChunkMode>().unwrap(), ChunkMode::Off);
+        assert!("sometimes".parse::<ChunkMode>().is_err());
+        for m in [ChunkMode::Off, ChunkMode::Auto, ChunkMode::Fixed(512)] {
+            assert_eq!(m.to_string().parse::<ChunkMode>().unwrap(), m);
+        }
+        assert!(ChunkMode::Auto.is_enabled());
+        assert!(!ChunkMode::Off.is_enabled());
+        assert_eq!(ChunkMode::default(), ChunkMode::Auto);
+    }
+
+    #[test]
+    fn chunk_tokens_from_file() {
+        let dir = std::env::temp_dir().join("ooco_cfg_chunk");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"chunk_tokens": "off"}"#).unwrap();
+        let cfg = ServingConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.chunk_tokens, ChunkMode::Off);
+        std::fs::write(&path, r#"{"chunk_tokens": 1024}"#).unwrap();
+        let cfg = ServingConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.chunk_tokens, ChunkMode::Fixed(1024));
+        // Fractional token counts are rejected, not truncated to 0.
+        std::fs::write(&path, r#"{"chunk_tokens": 0.5}"#).unwrap();
+        assert!(ServingConfig::from_file(&path).is_err());
+        std::fs::write(&path, "{}").unwrap();
+        let cfg = ServingConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.chunk_tokens, ChunkMode::Auto); // default on
     }
 
     #[test]

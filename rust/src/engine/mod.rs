@@ -34,13 +34,14 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::{
-    ClusterSpec, HardwareProfile, PoolPolicy, PrefixSpec, SchedulerParams,
-    ServingConfig, SloSpec, TransportSpec,
+    ChunkMode, ClusterSpec, HardwareProfile, PoolPolicy, PrefixSpec,
+    SchedulerParams, ServingConfig, SloSpec, TransportSpec,
 };
 use crate::coordinator::{Ablation, OverloadMode, Policy};
-use crate::instance::StepKind;
+use crate::instance::{PrefillSegment, StepKind};
 use crate::metrics::{
-    PoolReport, PrefixReport, Recorder, Report, TransportReport,
+    ChunkReport, PoolReport, PrefixReport, Recorder, Report,
+    TransportReport,
 };
 use crate::perfmodel::BatchStats;
 use crate::perfmodel::{calibrate, PerfModel, Sample, SampleKind};
@@ -69,6 +70,10 @@ pub struct EngineConfig {
     /// prices cached blocks; this substrate still recomputes them
     /// (documented divergence).
     pub prefix: PrefixSpec,
+    /// Chunked-prefill iteration model (DESIGN.md §3.8). Partial chunks
+    /// do no model work on this substrate; the full prompt runs at the
+    /// final chunk (documented divergence).
+    pub chunk_tokens: ChunkMode,
     /// Wall-clock compression: trace time / `time_scale` (e.g. 10 replays a
     /// 600 s trace in 60 s).
     pub time_scale: f64,
@@ -94,6 +99,7 @@ impl Default for EngineConfig {
             },
             pool: PoolPolicy::Static,
             prefix: PrefixSpec::default(),
+            chunk_tokens: ChunkMode::Auto,
             time_scale: 1.0,
             max_output: 32,
             seed: 0,
@@ -122,6 +128,8 @@ pub struct EngineOutcome {
     pub pool: PoolReport,
     /// Prefix-sharing cache accounting (hits, savings, evictions).
     pub prefix: PrefixReport,
+    /// Chunked-prefill iteration accounting (DESIGN.md §3.8).
+    pub chunk: ChunkReport,
 }
 
 /// Live execution state of one request on the real substrate: its KV cache
@@ -140,6 +148,8 @@ struct PendingStep {
     inst: InstanceRef,
     kind: StepKind,
     participants: Vec<RequestId>,
+    /// Chunked-prefill segments of a composed iteration (DESIGN.md §3.8).
+    prefill: Vec<PrefillSegment>,
     seq: u64,
 }
 
@@ -257,6 +267,7 @@ pub fn serve_trace_with_runtime(
             cluster: cfg.cluster,
             pool: cfg.pool,
             prefix: cfg.prefix,
+            chunk_tokens: cfg.chunk_tokens,
         },
         policy: cfg.policy,
         ablation: Ablation::full(),
@@ -356,6 +367,7 @@ impl<'rt> EngineExecutor<'rt> {
                     inst,
                     kind,
                     participants,
+                    prefill,
                     seq,
                     ..
                 } => {
@@ -363,6 +375,7 @@ impl<'rt> EngineExecutor<'rt> {
                         inst,
                         kind,
                         participants,
+                        prefill,
                         seq,
                     }));
                 }
@@ -443,10 +456,32 @@ impl<'rt> EngineExecutor<'rt> {
     ) -> Result<()> {
         match step.kind {
             StepKind::PrefillOnline | StepKind::PrefillOffline => {
-                self.exec_prefill(core, &step)?;
+                self.exec_prefill(core, &step.participants)?;
             }
             StepKind::DecodeRelaxed | StepKind::DecodeStrict => {
-                self.exec_decode(&step)?;
+                self.exec_decode(&step.participants)?;
+            }
+            StepKind::Composed => {
+                // Composed iteration (DESIGN.md §3.8): decode every
+                // participant, and run the prefill of each request whose
+                // *final* chunk lands this step. The AOT prefill
+                // executables take whole prompts, so partial chunks do no
+                // model work here and the full prompt runs at the last
+                // chunk — a documented substrate divergence (the core
+                // prices chunks individually; this executor pays the cost
+                // where the KV materializes).
+                let finishing: Vec<RequestId> = step
+                    .prefill
+                    .iter()
+                    .filter(|s| s.last)
+                    .map(|s| s.req)
+                    .collect();
+                if !finishing.is_empty() {
+                    self.exec_prefill(core, &finishing)?;
+                }
+                if !step.participants.is_empty() {
+                    self.exec_decode(&step.participants)?;
+                }
             }
             StepKind::Warm => {
                 // Role-transition warm-up: no model work on this substrate;
@@ -489,11 +524,11 @@ impl<'rt> EngineExecutor<'rt> {
         self.apply(actions);
     }
 
-    /// Run each participant's (re-)prefill through the runtime.
+    /// Run each listed request's (re-)prefill through the runtime.
     fn exec_prefill(
         &mut self,
         core: &mut SchedulerCore,
-        step: &PendingStep,
+        rids: &[RequestId],
     ) -> Result<()> {
         let smax = self.rt.manifest.smax;
         let vocab = self.rt.manifest.vocab;
@@ -504,7 +539,7 @@ impl<'rt> EngineExecutor<'rt> {
             .last()
             .copied()
             .unwrap_or(smax);
-        for &rid in &step.participants {
+        for &rid in rids {
             let (len, class) = {
                 let req = &core.cluster.requests[rid as usize];
                 (
@@ -543,13 +578,13 @@ impl<'rt> EngineExecutor<'rt> {
         Ok(())
     }
 
-    /// Run one decode iteration over the step's participants, chunked to
+    /// Run one decode iteration over the listed participants, chunked to
     /// the runtime's largest decode bucket. Every participant advances one
     /// token, matching the core's step semantics.
-    fn exec_decode(&mut self, step: &PendingStep) -> Result<()> {
+    fn exec_decode(&mut self, rids: &[RequestId]) -> Result<()> {
         let max_batch = self.rt.max_decode_batch().max(1);
         let smax = self.rt.manifest.smax as i32;
-        for chunk in step.participants.chunks(max_batch) {
+        for chunk in rids.chunks(max_batch) {
             let mut batch: Vec<(RequestId, Live)> = chunk
                 .iter()
                 .filter_map(|&rid| self.lives.remove(&rid).map(|l| (rid, l)))
@@ -612,6 +647,7 @@ impl<'rt> EngineExecutor<'rt> {
             transport: core.transport_report(duration),
             pool: core.pool_report(),
             prefix: core.prefix_report(),
+            chunk: core.chunk_report(),
             wall_s: self.start.elapsed().as_secs_f64(),
             prefills: self.prefills,
             strict_steps: self.strict_steps,

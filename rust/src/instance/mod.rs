@@ -54,18 +54,39 @@ impl std::fmt::Display for PoolRole {
 /// What one iteration (step) on an instance is doing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StepKind {
-    /// Prefill of online requests (latency-relaxed pool).
+    /// Prefill of online requests (exclusive-step mode,
+    /// `chunk_tokens = off`; latency-relaxed pool).
     PrefillOnline,
-    /// Prefill of offline requests (latency-relaxed pool).
+    /// Prefill of offline requests (exclusive-step mode; relaxed pool).
     PrefillOffline,
-    /// Offline decode on a latency-relaxed instance (OOCO's flexibility).
+    /// Offline decode on a latency-relaxed instance (OOCO's flexibility;
+    /// exclusive-step mode).
     DecodeRelaxed,
     /// Mixed decode on a latency-strict instance.
     DecodeStrict,
+    /// Chunked-prefill continuous-batching iteration on a relaxed instance
+    /// (DESIGN.md §3.8): decode tokens for every resident plus up to the
+    /// chunk budget of prefill work from per-request cursors. The step's
+    /// real content is its composition (`Step::participants` +
+    /// `Step::prefill`), not the kind.
+    Composed,
     /// Role-transition warm-up after a pool flip (DESIGN.md §3.6): the
     /// instance re-initializes role-specific runtime state and serves no
     /// requests until the step completes.
     Warm,
+}
+
+/// One request's slice of an iteration's prefill work (DESIGN.md §3.8):
+/// `tokens` uncached prompt tokens drawn from the request's progress
+/// cursor. Part of the differential action stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillSegment {
+    pub req: RequestId,
+    /// Uncached prompt tokens this iteration computes for `req`.
+    pub tokens: usize,
+    /// True when this segment completes the request's prefill (the TTFT
+    /// clock stops at this iteration's end).
+    pub last: bool,
 }
 
 /// A running iteration.
@@ -74,13 +95,30 @@ pub struct Step {
     pub kind: StepKind,
     pub started: f64,
     pub ends: f64,
+    /// Decode participants (each advances one token), plus — in
+    /// exclusive-step mode — the prefill batch of a `Prefill*` step.
     pub participants: Vec<RequestId>,
+    /// Prefill chunk segments of a [`StepKind::Composed`] iteration
+    /// (empty for exclusive-step and pure-decode iterations).
+    pub prefill: Vec<PrefillSegment>,
     /// Monotonic id used to invalidate stale completion events after a
     /// preemption reschedules the step end.
     pub seq: u64,
-    /// Set when an online arrival truncated this (offline prefill) step at
-    /// a layer boundary — its work is discarded on completion.
+    /// Preemption latch. Exclusive-step mode: an online arrival truncated
+    /// this (offline prefill) step at a layer boundary and its work is
+    /// discarded on completion. Composed iterations: an online arrival was
+    /// counted against this step's offline chunks (progress is retained by
+    /// the cursors — the flag only stops a burst of arrivals from being
+    /// counted as multiple preemptions).
     pub preempted: bool,
+}
+
+impl Step {
+    /// Is `rid` part of this iteration (decode or prefill side)?
+    pub fn involves(&self, rid: RequestId) -> bool {
+        self.participants.contains(&rid)
+            || self.prefill.iter().any(|s| s.req == rid)
+    }
 }
 
 /// One serving instance. Which fields are active depends on `role`; the
@@ -103,6 +141,10 @@ pub struct Instance {
     // ---- relaxed-role state ----
     /// Online requests waiting to prefill here (router-assigned).
     pub online_queue: VecDeque<RequestId>,
+    /// Mid-prefill residents of the chunked iteration model (DESIGN.md
+    /// §3.8): admitted, KV partially allocated, progress tracked by the
+    /// request's cursor. Admission order is preserved (FIFO resume).
+    pub prefilling: Vec<RequestId>,
     /// Offline decode residents (their KV lives here).
     pub offline_decoding: Vec<RequestId>,
     // ---- strict-role state ----
@@ -141,6 +183,7 @@ impl Instance {
             kv: KvManager::new(kv_capacity_tokens, block_tokens),
             cache: PrefixIndex::new(block_tokens),
             online_queue: VecDeque::new(),
+            prefilling: Vec::new(),
             offline_decoding: Vec::new(),
             online: Vec::new(),
             offline: Vec::new(),
@@ -173,6 +216,7 @@ impl Instance {
     pub fn workload_empty(&self) -> bool {
         self.step.is_none()
             && self.online_queue.is_empty()
+            && self.prefilling.is_empty()
             && self.offline_decoding.is_empty()
             && self.online.is_empty()
             && self.offline.is_empty()
@@ -235,7 +279,30 @@ mod tests {
         i.waiting_for_space.push_back(3);
         assert!(!i.drained_for_flip());
         i.waiting_for_space.clear();
+        i.prefilling.push(4);
+        assert!(!i.drained_for_flip());
+        i.prefilling.clear();
         assert!(i.drained_for_flip());
+    }
+
+    #[test]
+    fn step_involves_both_sides() {
+        let step = Step {
+            kind: StepKind::Composed,
+            started: 0.0,
+            ends: 1.0,
+            participants: vec![1, 2],
+            prefill: vec![PrefillSegment {
+                req: 9,
+                tokens: 128,
+                last: false,
+            }],
+            seq: 1,
+            preempted: false,
+        };
+        assert!(step.involves(1));
+        assert!(step.involves(9));
+        assert!(!step.involves(3));
     }
 
     #[test]

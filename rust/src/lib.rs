@@ -40,18 +40,18 @@ pub mod util;
 /// ```
 pub mod prelude {
     pub use crate::config::{
-        ClusterSpec, HardwareProfile, LinkSharing, LinkSpec, ModelSpec,
-        PoolPolicy, PrefixSpec, SchedulerParams, ServingConfig, SloSpec,
-        TransportSpec,
+        ChunkMode, ClusterSpec, HardwareProfile, LinkSharing, LinkSpec,
+        ModelSpec, PoolPolicy, PrefixSpec, SchedulerParams, ServingConfig,
+        SloSpec, TransportSpec,
     };
     pub use crate::coordinator::{Ablation, OverloadMode, Policy};
     pub use crate::engine::{
         serve_trace, serve_trace_with_runtime, EngineConfig, EngineExecutor,
         EngineOutcome,
     };
-    pub use crate::instance::PoolRole;
+    pub use crate::instance::{PoolRole, PrefillSegment, StepKind};
     pub use crate::metrics::{
-        LinkReport, PoolReport, PrefixReport, Recorder, Report,
+        ChunkReport, LinkReport, PoolReport, PrefixReport, Recorder, Report,
         TransportReport,
     };
     pub use crate::perfmodel::{BatchStats, Bottleneck, PerfModel};
@@ -69,7 +69,7 @@ pub mod prelude {
     };
     pub use crate::trace::{
         datasets::DatasetProfile,
-        generator::{offline_trace, online_trace},
+        generator::{offline_trace, online_trace, PromptProfile},
         Trace,
     };
 }

@@ -64,6 +64,8 @@ USAGE: ooco <serve|simulate|sweep|roofline|trace> [--flags]
             [--pool-policy static|periodic|reactive|'periodic(epoch=60,headroom=0.15)']
             [--prefix-profile none|shared-system|few-shot|agentic]
             [--prefix-cache true|false]
+            [--chunk-tokens auto|off|<n>]
+            [--prompt-profile dataset|'long-prompt(mean=6000,sigma=1.2,max=16384)']
             [--ablation full] [--overload best-effort|shed] [--seed 42]
             [--json-out result.json]
   sweep     --policy ooco --online-rate 0.5 --qps 1,2,4,8 --duration 600
@@ -75,7 +77,9 @@ USAGE: ooco <serve|simulate|sweep|roofline|trace> [--flags]
   trace     --dataset azure-conv --rate 1.0 --duration 3600 --scale 1.0
             --out trace.json [--offline-qps 0]
             [--prefix-profile 'shared-system(len=1024)'|'few-shot(groups=8,len=1024)'|'agentic(convs=16,turns=6)']
-            (shared-prefix families apply to the offline portion)"
+            (shared-prefix families apply to the offline portion)
+            [--prompt-profile dataset|long-prompt|'long-prompt(mean=6000,sigma=1.2,max=16384)']
+            (prompt-length override applies to both portions)"
     );
 }
 
@@ -121,7 +125,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     use ooco::trace::generator::offline_trace_with_prefix;
-    use ooco::trace::PrefixProfile;
+    use ooco::trace::{PrefixProfile, PromptProfile};
 
     let seed = args.u64("seed", 42);
     let duration = args.f64("duration", 1800.0);
@@ -130,13 +134,17 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             ooco::trace::io::load_trace(std::path::Path::new(path))?
         }
         None => {
-            let online_ds =
-                DatasetProfile::by_name(args.str("dataset", "azure-conv"))?;
+            let prompt: PromptProfile =
+                args.parse_flag("prompt-profile", PromptProfile::Dataset)?;
+            let online_ds = prompt.apply(&DatasetProfile::by_name(
+                args.str("dataset", "azure-conv"),
+            )?);
+            let offline_ds = prompt.apply(&DatasetProfile::ooc_offline());
             let prefix: PrefixProfile =
                 args.parse_flag("prefix-profile", PrefixProfile::None)?;
             online_trace(online_ds, args.f64("online-rate", 0.5), duration, seed)
                 .merge(offline_trace_with_prefix(
-                    DatasetProfile::ooc_offline(),
+                    offline_ds,
                     args.f64("offline-qps", 10.0),
                     duration,
                     prefix,
@@ -169,15 +177,23 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     if cfg.serving.prefix.enabled && res.prefix.lookups > 0 {
         println!("{}", res.prefix.summary_line());
     }
+    if res.chunk.enabled {
+        println!("{}", res.chunk.summary_line());
+    }
     if let Some(path) = args.opt_str("json-out") {
         let out = Json::obj(vec![
             ("policy", Json::Str(cfg.policy.to_string())),
             ("pool_policy", Json::Str(cfg.serving.pool.to_string())),
+            (
+                "chunk_tokens",
+                Json::Str(cfg.serving.chunk_tokens.to_string()),
+            ),
             ("seed", Json::Num(seed as f64)),
             ("report", res.report.to_json()),
             ("transport", res.transport.to_json()),
             ("pool", res.pool.to_json()),
             ("prefix", res.prefix.to_json()),
+            ("chunk", res.chunk.to_json()),
         ]);
         std::fs::write(path, out.to_pretty())?;
         println!("wrote machine-readable result to {path}");
@@ -202,6 +218,8 @@ fn serving_from_args(args: &Args) -> anyhow::Result<ServingConfig> {
     serving.pool = args.parse_flag("pool-policy", serving.pool)?;
     serving.prefix.enabled =
         args.bool("prefix-cache", serving.prefix.enabled);
+    serving.chunk_tokens =
+        args.parse_flag("chunk-tokens", serving.chunk_tokens)?;
     Ok(serving)
 }
 
@@ -212,7 +230,11 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
 
     let serving = serving_from_args(args)?;
     let policy = args.parse_flag("policy", Policy::Ooco)?;
-    let online_ds = DatasetProfile::by_name(args.str("dataset", "azure-conv"))?;
+    let prompt: ooco::trace::PromptProfile =
+        args.parse_flag("prompt-profile", ooco::trace::PromptProfile::Dataset)?;
+    let online_ds = prompt.apply(&DatasetProfile::by_name(
+        args.str("dataset", "azure-conv"),
+    )?);
     let qps = args.f64_list("qps", &[1.0, 2.0, 4.0, 8.0]);
     let sweep_cfg = SweepConfig {
         duration_s: args.f64("duration", 600.0),
@@ -228,7 +250,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         policy,
         &online_ds,
         args.f64("online-rate", 0.5),
-        &DatasetProfile::ooc_offline(),
+        &prompt.apply(&DatasetProfile::ooc_offline()),
         &qps,
         &sweep_cfg,
     );
@@ -276,18 +298,21 @@ fn cmd_roofline(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     use ooco::trace::generator::offline_trace_with_prefix;
-    use ooco::trace::PrefixProfile;
+    use ooco::trace::{PrefixProfile, PromptProfile};
 
     let seed = args.u64("seed", 42);
     let duration = args.f64("duration", 3600.0);
-    let ds = DatasetProfile::by_name(args.str("dataset", "azure-conv"))?;
+    let prompt: PromptProfile =
+        args.parse_flag("prompt-profile", PromptProfile::Dataset)?;
+    let ds = prompt
+        .apply(&DatasetProfile::by_name(args.str("dataset", "azure-conv"))?);
     let mut trace = online_trace(ds, args.f64("rate", 1.0), duration, seed);
     let offline_qps = args.f64("offline-qps", 0.0);
     let prefix: PrefixProfile =
         args.parse_flag("prefix-profile", PrefixProfile::None)?;
     if offline_qps > 0.0 {
         trace = trace.merge(offline_trace_with_prefix(
-            DatasetProfile::ooc_offline(),
+            prompt.apply(&DatasetProfile::ooc_offline()),
             offline_qps,
             duration,
             prefix,

@@ -282,6 +282,107 @@ impl PrefixReport {
     }
 }
 
+/// Chunked-prefill iteration metrics over one run (DESIGN.md §3.8):
+/// chunk-budget utilization, prefill/decode interference delay, and the
+/// preemption work retained by the cursor model vs. discarded by the old
+/// exclusive-step truncation baseline.
+#[derive(Debug, Clone)]
+pub struct ChunkReport {
+    pub enabled: bool,
+    /// `ChunkMode` display form (`off` / `auto` / token count).
+    pub mode: String,
+    /// Composed iterations started.
+    pub steps: u64,
+    /// Composed iterations that genuinely mixed decode and prefill.
+    pub mixed_steps: u64,
+    /// Prefill chunk segments scheduled.
+    pub prefill_chunks: u64,
+    /// Uncached prompt tokens prefilled through chunks.
+    pub prefill_tokens: u64,
+    /// Σ per-iteration chunk budgets over iterations that scheduled at
+    /// least one segment.
+    pub budget_offered_tokens: u64,
+    /// `prefill_tokens / budget_offered_tokens` (0 when nothing offered).
+    pub budget_utilization: f64,
+    /// Σ over mixed iterations of (composed − pure-decode) latency: the
+    /// delay chunked prefill adds to co-resident decodes.
+    pub interference_delay_s: f64,
+    /// Online-over-offline preemption events (chunk-granular halts in
+    /// chunked mode; layer-level truncations in exclusive mode).
+    pub preemptions: u64,
+    /// Prefill work retained across preemptions by the progress cursors,
+    /// measured against the discard-and-recompute counterfactual:
+    /// *each* preemption books the computed cursor progress that one
+    /// exclusive-step truncation would have thrown away at that moment.
+    /// Deliberately cumulative — the baseline re-prefills from scratch
+    /// after every truncation, so a request preempted twice at cursors
+    /// 512 and 3584 really would have recomputed 512 + 3584 tokens.
+    pub preempted_work_retained: u64,
+    /// Prefill work discarded by exclusive-step truncation (always 0 when
+    /// chunking is on — asserted by the CI smoke).
+    pub preempted_work_discarded: u64,
+    /// Cursor/target mismatches at prefill completion (must stay 0).
+    pub accounting_errors: u64,
+}
+
+impl ChunkReport {
+    /// One-line summary for bench output.
+    pub fn summary_line(&self) -> String {
+        if !self.enabled {
+            return format!(
+                "chunk: off (exclusive steps) | preemptions {} discarded {} tok",
+                self.preemptions, self.preempted_work_discarded
+            );
+        }
+        format!(
+            "chunk[{}]: {} iters ({} mixed) | {} chunks, {} tok ({:.1}% of budget) | interference {:.2}s | preemptions {} retained {} tok discarded {}",
+            self.mode,
+            self.steps,
+            self.mixed_steps,
+            self.prefill_chunks,
+            self.prefill_tokens,
+            self.budget_utilization * 100.0,
+            self.interference_delay_s,
+            self.preemptions,
+            self.preempted_work_retained,
+            self.preempted_work_discarded,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.enabled)),
+            ("mode", Json::Str(self.mode.clone())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("mixed_steps", Json::Num(self.mixed_steps as f64)),
+            ("prefill_chunks", Json::Num(self.prefill_chunks as f64)),
+            ("prefill_tokens", Json::Num(self.prefill_tokens as f64)),
+            (
+                "budget_offered_tokens",
+                Json::Num(self.budget_offered_tokens as f64),
+            ),
+            ("budget_utilization", Json::Num(self.budget_utilization)),
+            (
+                "interference_delay_s",
+                Json::Num(self.interference_delay_s),
+            ),
+            ("preemptions", Json::Num(self.preemptions as f64)),
+            (
+                "preempted_work_retained",
+                Json::Num(self.preempted_work_retained as f64),
+            ),
+            (
+                "preempted_work_discarded",
+                Json::Num(self.preempted_work_discarded as f64),
+            ),
+            (
+                "accounting_errors",
+                Json::Num(self.accounting_errors as f64),
+            ),
+        ])
+    }
+}
+
 /// Outcome snapshot for one finished (or dropped) request.
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
@@ -669,6 +770,38 @@ mod tests {
             ..rep
         };
         assert_eq!(off.summary_line(), "prefix: disabled");
+    }
+
+    #[test]
+    fn chunk_report_summary_and_json() {
+        let rep = ChunkReport {
+            enabled: true,
+            mode: "auto".into(),
+            steps: 100,
+            mixed_steps: 40,
+            prefill_chunks: 60,
+            prefill_tokens: 48_000,
+            budget_offered_tokens: 60_000,
+            budget_utilization: 0.8,
+            interference_delay_s: 1.25,
+            preemptions: 5,
+            preempted_work_retained: 9_000,
+            preempted_work_discarded: 0,
+            accounting_errors: 0,
+        };
+        let line = rep.summary_line();
+        assert!(line.contains("auto"), "{line}");
+        assert!(line.contains("retained 9000"), "{line}");
+        let j = rep.to_json();
+        assert_eq!(j.get("budget_utilization").as_f64(), Some(0.8));
+        assert_eq!(j.get("preempted_work_discarded").as_f64(), Some(0.0));
+        assert_eq!(j.get("prefill_tokens").as_f64(), Some(48_000.0));
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        let off = ChunkReport {
+            enabled: false,
+            ..rep
+        };
+        assert!(off.summary_line().contains("exclusive"));
     }
 
     #[test]

@@ -238,6 +238,103 @@ impl PerfModel {
             + self.hw.overhead_decode
     }
 
+    /// Roofline cost of one *composed* iteration (DESIGN.md §3.8): a
+    /// decode batch described by `decode` fused with `prefill_tokens` of
+    /// chunked prefill work in the same model forward. GEMMs see the
+    /// combined row count; attention splits into the decode aggregate part
+    /// (decode achievable rates) and the chunk part (prefill achievable
+    /// rates, priced at chunk-local context — the documented
+    /// approximation: a chunk deep into a long prompt reads more context
+    /// than this model charges). With `prefill_tokens == 0` this is
+    /// *exactly* [`PerfModel::decode_cost`], which keeps the elastic
+    /// planner's pure-decode sizing byte-identical when chunking is off.
+    pub fn mixed_iter_cost(
+        &self,
+        decode: BatchStats,
+        prefill_tokens: usize,
+    ) -> IterCost {
+        if prefill_tokens == 0 {
+            return self.decode_cost(decode);
+        }
+        let p = prefill_tokens as f64;
+        let l = self.model.layers as f64;
+        let n = decode.size as f64;
+        // GEMM rows: every decode query token plus every prefill token;
+        // the LM head samples one row per decode participant plus the
+        // chunk's boundary token.
+        let rows = n + p;
+        let head_rows = n + 1.0;
+        let gemm = OpCost {
+            flops: (self.layer_gemm_fixed.flops + rows * self.layer_gemm_unit.flops)
+                * l
+                + self.lm_head_fixed.flops
+                + head_rows * self.lm_head_unit.flops,
+            bytes: (self.layer_gemm_fixed.bytes + rows * self.layer_gemm_unit.bytes)
+                * l
+                + self.lm_head_fixed.bytes
+                + head_rows * self.lm_head_unit.bytes,
+        };
+        // Decode attention over the batch aggregates (decode rates).
+        let d_h = (self.model.q_heads * self.model.head_dim) as f64;
+        let d_kv = (self.model.kv_heads * self.model.head_dim) as f64;
+        let d = self.model.bytes_per_value;
+        let tkv = decode.total_kv_tokens as f64;
+        let dec_attn = OpCost {
+            flops: 4.0 * d_h * tkv * l,
+            bytes: d * (2.0 * n * d_h + 2.0 * tkv * d_kv) * l,
+        };
+        // Chunk attention over its own span (prefill rates).
+        let pre_attn = operators::attention(&self.model, p, p).scale(l);
+        let comm_s = self.tp_comm_s(rows);
+        let latency_s = op_latency(gemm, self.f_gemm, self.m_gemm)
+            + op_latency(dec_attn, self.f_attn_decode, self.m_attn)
+            + op_latency(pre_attn, self.f_attn_prefill, self.m_attn)
+            + comm_s
+            + self.hw.overhead_prefill.max(self.hw.overhead_decode);
+        IterCost {
+            gemm,
+            attn: dec_attn.add(pre_attn),
+            comm_s,
+            overhead_s: self.hw.overhead_prefill.max(self.hw.overhead_decode),
+            latency_s,
+        }
+    }
+
+    /// Chunk-budget solver (DESIGN.md §3.8): the largest prefill-token
+    /// chunk that keeps the composed iteration's predicted latency within
+    /// `latency_budget`, capped at `max_tokens`. Returns 0 when even the
+    /// pure-decode iteration misses the budget (callers apply a minimum
+    /// progress quantum). Binary search over the monotone latency.
+    pub fn chunk_budget(
+        &self,
+        decode: BatchStats,
+        latency_budget: f64,
+        max_tokens: usize,
+    ) -> usize {
+        if max_tokens == 0
+            || self.mixed_iter_cost(decode, 1).latency_s > latency_budget
+        {
+            return 0;
+        }
+        let fits = |b: usize| {
+            self.mixed_iter_cost(decode, b).latency_s <= latency_budget
+        };
+        let (mut lo, mut hi) = (1usize, max_tokens);
+        if fits(hi) {
+            return hi;
+        }
+        // Invariant: fits(lo), !fits(hi).
+        while lo + 1 < hi {
+            let mid = lo + (hi - lo) / 2;
+            if fits(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
     /// Contention-free KV-cache transfer latency between instances over the
     /// profile's `B_c`. Scheduling no longer uses this directly — the
     /// `transport` subsystem models links, queuing, and chunking — but it
@@ -400,6 +497,61 @@ mod tests {
         // Paper §3.4.1: layer-level preemption lands within tens of ms.
         let per_layer = pm.prefill_layer_latency(4000);
         assert!(per_layer < 0.05, "per-layer {per_layer}");
+    }
+
+    #[test]
+    fn mixed_iter_cost_degenerates_to_decode() {
+        let pm = pm7b();
+        for (n, tkv) in [(0usize, 0usize), (1, 500), (64, 64_000)] {
+            let b = BatchStats::new(n, tkv);
+            let mixed = pm.mixed_iter_cost(b, 0).latency_s;
+            let pure = pm.decode_cost(b).latency_s;
+            assert!(
+                (mixed - pure).abs() < 1e-15,
+                "mixed(b,0) {mixed} != decode {pure}"
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_iter_cost_monotone_in_chunk() {
+        let pm = pm7b();
+        let b = BatchStats::new(20, 30_000);
+        let mut last = pm.mixed_iter_cost(b, 0).latency_s;
+        for p in [1usize, 64, 256, 1024, 4096, 16384] {
+            let lat = pm.mixed_iter_cost(b, p).latency_s;
+            assert!(lat >= last, "chunk {p}: {lat} < {last}");
+            last = lat;
+        }
+        // And monotone in the decode side too.
+        let small = pm.mixed_iter_cost(BatchStats::new(5, 5_000), 512);
+        let big = pm.mixed_iter_cost(BatchStats::new(50, 100_000), 512);
+        assert!(big.latency_s > small.latency_s);
+    }
+
+    #[test]
+    fn chunk_budget_maximal_under_bound() {
+        let pm = pm7b();
+        let b = BatchStats::new(10, 15_000);
+        let budget = 0.09;
+        let chunk = pm.chunk_budget(b, budget, 8192);
+        assert!(chunk > 0, "90 ms must fit some prefill over a small batch");
+        assert!(
+            pm.mixed_iter_cost(b, chunk).latency_s <= budget,
+            "solver answer misses its own budget"
+        );
+        if chunk < 8192 {
+            assert!(
+                pm.mixed_iter_cost(b, chunk + 1).latency_s > budget,
+                "chunk {chunk} is not maximal"
+            );
+        }
+        // A decode batch already over the bound leaves no chunk room.
+        let heavy = BatchStats::new(900, 900 * 2500);
+        assert!(pm.decode_latency(heavy) > budget);
+        assert_eq!(pm.chunk_budget(heavy, budget, 8192), 0);
+        // Huge budget saturates at the cap.
+        assert_eq!(pm.chunk_budget(b, 10.0, 8192), 8192);
     }
 
     #[test]

@@ -32,8 +32,8 @@ pub mod transition;
 
 pub use estimator::{ClassLoad, LoadEstimator};
 pub use planner::{
-    max_slo_batch, max_slo_batch_shared, min_strict_pool,
-    pressure_with_capacity, strict_pressure, PlannerInput,
+    max_slo_batch, max_slo_batch_chunked, max_slo_batch_shared,
+    min_strict_pool, pressure_with_capacity, strict_pressure, PlannerInput,
 };
 pub use transition::{Transition, TransitionPhase, WARMUP_S};
 
@@ -81,6 +81,10 @@ pub struct PoolManager {
     /// EWMA fraction of admitted prompt tokens served from the prefix
     /// cache — the planner's cache-adjusted load signal.
     prefix_share: f64,
+    /// Prefill-chunk reserve of the composed iteration model (DESIGN.md
+    /// §3.8), set by the core from the configured `chunk_tokens`: the
+    /// planner sizes for composed iterations, not pure-decode ones.
+    chunk_reserve: usize,
     // ---- metrics ----
     epochs: Vec<PoolEpoch>,
     transition_s: Vec<f64>,
@@ -105,6 +109,7 @@ impl PoolManager {
             next_check_at: 0.0,
             cooldown_until: 0.0,
             prefix_share: 0.0,
+            chunk_reserve: 0,
             epochs: Vec::new(),
             transition_s: Vec::new(),
             plans: 0,
@@ -144,6 +149,17 @@ impl PoolManager {
         self.prefix_share
     }
 
+    /// Set the chunk-token reserve the planner prices into every composed
+    /// iteration (0 = exclusive-step sizing).
+    pub fn set_chunk_reserve(&mut self, tokens: usize) {
+        self.chunk_reserve = tokens;
+    }
+
+    /// Current chunk-token reserve (exposed for tests).
+    pub fn chunk_reserve(&self) -> usize {
+        self.chunk_reserve
+    }
+
     /// Compute a repartition plan if one is due at `now` (Periodic epoch
     /// boundary crossed, or Reactive thresholds tripped outside the
     /// cooldown). Returns `None` when nothing is due — including always,
@@ -170,6 +186,7 @@ impl PoolManager {
                 let online = self.estimator.online(now);
                 let mut load = PlannerInput::from_load(&online);
                 load.shared_kv_fraction = self.prefix_share;
+                load.chunk_prefill_tokens = self.chunk_reserve;
                 let target = min_strict_pool(pm, slo, &load, total, headroom)
                     .clamp(1, total.saturating_sub(1).max(1));
                 let rates = (online.rate, self.estimator.offline(now).rate);
@@ -186,15 +203,17 @@ impl PoolManager {
                 let online = self.estimator.online(now);
                 let mut load = PlannerInput::from_load(&online);
                 load.shared_kv_fraction = self.prefix_share;
+                load.chunk_prefill_tokens = self.chunk_reserve;
                 // One roofline capacity probe serves both threshold
                 // checks (`strict_pressure` would rerun its binary search
                 // per call; per-instance capacity does not depend on n).
                 let concurrent = load.concurrent_decodes(slo.tpot);
-                let per_inst = max_slo_batch_shared(
+                let per_inst = max_slo_batch_chunked(
                     pm,
                     load.mean_kv(),
                     slo.tpot,
                     load.shared_kv_fraction,
+                    load.chunk_prefill_tokens,
                 );
                 let pressure =
                     |n: usize| pressure_with_capacity(concurrent, per_inst, n);
@@ -382,6 +401,35 @@ mod tests {
             .replan(100.0, &perf, &slo, 1, 4)
             .expect("idle overprovision must trigger shrink");
         assert_eq!(plan.strict_target, 3);
+    }
+
+    #[test]
+    fn chunk_reserve_flows_into_periodic_plans() {
+        // With a chunk reserve set (a substrate fusing prefill into
+        // SLO-bounded iterations — DESIGN.md §3.8), the planner prices
+        // composed iterations and can only ask for an equal-or-larger
+        // strict pool than the pure-decode sizing.
+        let (perf, slo) = setup();
+        let policy = PoolPolicy::Periodic {
+            epoch_s: 60.0,
+            headroom: 0.15,
+        };
+        let run = |reserve: usize| {
+            let mut mgr = PoolManager::new(policy);
+            assert_eq!(mgr.chunk_reserve(), 0);
+            mgr.set_chunk_reserve(reserve);
+            assert_eq!(mgr.chunk_reserve(), reserve);
+            feed(&mut mgr, 40.0, 0.0, 60.0);
+            mgr.replan(61.0, &perf, &slo, 6, 2)
+                .expect("epoch due")
+                .strict_target
+        };
+        let pure = run(0);
+        let composed = run(4096);
+        assert!(
+            composed >= pure,
+            "chunk reserve shrank the plan: {pure} -> {composed}"
+        );
     }
 
     #[test]

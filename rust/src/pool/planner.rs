@@ -37,6 +37,12 @@ pub struct PlannerInput {
     /// already deduplicates. Latency stays undeflated: attention reads
     /// every token per request regardless of block sharing. 0 = no cache.
     pub shared_kv_fraction: f64,
+    /// Prefill-chunk reserve of the composed iteration model (DESIGN.md
+    /// §3.8): the sizing no longer assumes pure-decode iterations — each
+    /// candidate batch is priced as a *composed* iteration carrying this
+    /// many chunk tokens (`PerfModel::mixed_iter_cost`). 0 = exclusive
+    /// steps (the pre-§3.8 behaviour, byte-identical sizing).
+    pub chunk_prefill_tokens: usize,
 }
 
 impl PlannerInput {
@@ -46,6 +52,7 @@ impl PlannerInput {
             mean_prompt: l.mean_prompt,
             mean_output: l.mean_output,
             shared_kv_fraction: 0.0,
+            chunk_prefill_tokens: 0,
         }
     }
 
@@ -72,13 +79,17 @@ fn pool_feasible(
     concurrent: f64,
     mean_kv: f64,
     share: f64,
+    chunk: usize,
     budget: f64,
 ) -> bool {
     let batch = (concurrent / n as f64).ceil().max(1.0) as usize;
     let kv_tokens = (batch as f64 * mean_kv).ceil() as usize;
     let resident = unique_kv(kv_tokens, share);
     resident <= pm.max_kv_tokens()
-        && pm.decode_latency(BatchStats::new(batch, kv_tokens)) <= budget
+        && pm
+            .mixed_iter_cost(BatchStats::new(batch, kv_tokens), chunk)
+            .latency_s
+            <= budget
 }
 
 /// Deduplicated resident footprint of `kv_tokens` at cache share `share`.
@@ -112,6 +123,7 @@ pub fn min_strict_pool(
             concurrent,
             mean_kv,
             load.shared_kv_fraction,
+            load.chunk_prefill_tokens,
             budget,
         ) {
             return n;
@@ -138,11 +150,27 @@ pub fn max_slo_batch_shared(
     budget: f64,
     share: f64,
 ) -> usize {
+    max_slo_batch_chunked(pm, mean_kv, budget, share, 0)
+}
+
+/// [`max_slo_batch_shared`] under the composed iteration model (DESIGN.md
+/// §3.8): each candidate batch is priced as a composed iteration carrying
+/// `chunk` prefill tokens, so the capacity figure accounts for the chunk
+/// reserve instead of assuming pure-decode iterations. `chunk = 0`
+/// degenerates exactly to the pure-decode figure.
+pub fn max_slo_batch_chunked(
+    pm: &PerfModel,
+    mean_kv: f64,
+    budget: f64,
+    share: f64,
+    chunk: usize,
+) -> usize {
     let mean_kv = mean_kv.max(1.0);
     let fits = |b: usize| -> bool {
         let kv = (b as f64 * mean_kv).ceil() as usize;
         unique_kv(kv, share) <= pm.max_kv_tokens()
-            && pm.decode_latency(BatchStats::new(b, kv)) <= budget
+            && pm.mixed_iter_cost(BatchStats::new(b, kv), chunk).latency_s
+                <= budget
     };
     if !fits(1) {
         return 0;
@@ -193,11 +221,12 @@ pub fn strict_pressure(
 ) -> f64 {
     pressure_with_capacity(
         load.concurrent_decodes(slo.tpot),
-        max_slo_batch_shared(
+        max_slo_batch_chunked(
             pm,
             load.mean_kv(),
             slo.tpot,
             load.shared_kv_fraction,
+            load.chunk_prefill_tokens,
         ),
         n,
     )
@@ -219,6 +248,7 @@ mod tests {
             mean_prompt: 1500.0,
             mean_output: 100.0,
             shared_kv_fraction: 0.0,
+            chunk_prefill_tokens: 0,
         }
     }
 
@@ -301,6 +331,29 @@ mod tests {
         let b0 = max_slo_batch_shared(&pm_sq, 1550.0, slo.tpot, 0.0);
         let b7 = max_slo_batch_shared(&pm_sq, 1550.0, slo.tpot, 0.7);
         assert!(b7 >= b0, "share shrank capacity {b0} -> {b7}");
+    }
+
+    #[test]
+    fn chunk_reserve_never_shrinks_the_plan() {
+        // Composed-iteration sizing: reserving chunk room in the latency
+        // budget can only demand an equal-or-larger strict pool, and the
+        // per-instance capacity figure can only shrink (or hold).
+        let (pm, slo) = setup();
+        for rate in [0.5, 2.0, 8.0, 64.0] {
+            let mut chunked = load(rate);
+            chunked.chunk_prefill_tokens = 512;
+            let base = min_strict_pool(&pm, &slo, &load(rate), 8, 0.15);
+            let with = min_strict_pool(&pm, &slo, &chunked, 8, 0.15);
+            assert!(
+                with >= base,
+                "rate {rate}: chunk reserve shrank plan {base} -> {with}"
+            );
+        }
+        let b0 = max_slo_batch_chunked(&pm, 1550.0, slo.tpot, 0.0, 0);
+        let b512 = max_slo_batch_chunked(&pm, 1550.0, slo.tpot, 0.0, 512);
+        assert!(b512 <= b0, "chunk reserve grew capacity {b0} -> {b512}");
+        // chunk = 0 degenerates to the pure-decode figure.
+        assert_eq!(b0, max_slo_batch_shared(&pm, 1550.0, slo.tpot, 0.0));
     }
 
     #[test]

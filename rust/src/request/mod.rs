@@ -81,6 +81,17 @@ pub struct Request {
     pub evictions: u32,
     /// Shared-prompt declaration for the prefix cache, if any.
     pub prefix: Option<PrefixRef>,
+    /// Chunked-prefill progress cursor: prompt tokens of the *current*
+    /// prefill attempt already computed or served from the prefix cache.
+    /// Reset on eviction (recompute restarts the attempt).
+    pub prefilled_tokens: usize,
+    /// Prompt tokens the current prefill attempt must cover — the
+    /// recompute length frozen at admission. 0 = not admitted.
+    pub prefill_target: usize,
+    /// Prefix-cache credit of the current attempt (tokens of
+    /// `prefilled_tokens` that were never computed). Lets metrics count
+    /// *computed* progress only.
+    pub prefill_cached: usize,
 }
 
 impl Request {
@@ -103,6 +114,9 @@ impl Request {
             finished_at: None,
             evictions: 0,
             prefix: None,
+            prefilled_tokens: 0,
+            prefill_target: 0,
+            prefill_cached: 0,
         }
     }
 
@@ -157,6 +171,38 @@ impl Request {
         debug_assert!(!self.is_finished());
         self.evictions += 1;
         self.phase = Phase::Queued;
+        self.prefilled_tokens = 0;
+        self.prefill_target = 0;
+        self.prefill_cached = 0;
+    }
+
+    /// Open a prefill attempt covering `target` tokens, of which `cached`
+    /// were served from the prefix cache. At least one token is always
+    /// computed (a fully cached prompt still runs its query token), so the
+    /// cache credit is capped at `target - 1`.
+    pub fn begin_prefill(&mut self, target: usize, cached: usize) {
+        let target = target.max(1);
+        self.prefill_target = target;
+        self.prefilled_tokens = cached.min(target - 1);
+        self.prefill_cached = self.prefilled_tokens;
+    }
+
+    /// Prompt tokens of the current attempt actually computed so far
+    /// (cursor minus the prefix-cache credit).
+    pub fn computed_prefill(&self) -> usize {
+        self.prefilled_tokens.saturating_sub(self.prefill_cached)
+    }
+
+    /// Credit `tokens` of computed prefill work to the cursor. Deliberately
+    /// unclamped: a cursor past the target means a chunk was double-counted
+    /// somewhere, and the completion check must be able to see it.
+    pub fn advance_prefill(&mut self, tokens: usize) {
+        self.prefilled_tokens += tokens;
+    }
+
+    /// Prompt tokens of the current attempt still to compute.
+    pub fn remaining_prefill(&self) -> usize {
+        self.prefill_target.saturating_sub(self.prefilled_tokens)
     }
 
     /// Prompt length a re-prefill after eviction must process.
@@ -251,6 +297,27 @@ mod tests {
         assert!(Request::new(6, Class::Offline, 0.0, 100, 10)
             .prefix
             .is_none());
+    }
+
+    #[test]
+    fn prefill_cursor_lifecycle() {
+        let mut r = Request::new(7, Class::Offline, 0.0, 1000, 4);
+        assert_eq!(r.remaining_prefill(), 0); // not admitted yet
+        r.begin_prefill(1000, 0);
+        assert_eq!(r.remaining_prefill(), 1000);
+        r.advance_prefill(600);
+        assert_eq!(r.remaining_prefill(), 400);
+        r.advance_prefill(400);
+        assert_eq!(r.remaining_prefill(), 0);
+        assert_eq!(r.prefilled_tokens, r.prefill_target);
+        // Eviction resets the attempt.
+        r.evict();
+        assert_eq!(r.prefilled_tokens, 0);
+        assert_eq!(r.prefill_target, 0);
+        // Cache credit is capped so one query token always runs.
+        let mut c = Request::new(8, Class::Online, 0.0, 512, 4);
+        c.begin_prefill(512, 512);
+        assert_eq!(c.remaining_prefill(), 1);
     }
 
     #[test]

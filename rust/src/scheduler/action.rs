@@ -28,7 +28,7 @@
 //! lives in the core; executors only own the clock and the execution
 //! substrate.
 
-use crate::instance::{PoolRole, StepKind};
+use crate::instance::{PoolRole, PrefillSegment, StepKind};
 use crate::request::RequestId;
 use crate::transport::{JobId, TransferKind};
 
@@ -63,7 +63,15 @@ pub enum Action {
     StartStep {
         inst: InstanceRef,
         kind: StepKind,
+        /// Decode participants (plus, in exclusive-step mode, the prefill
+        /// batch of a `Prefill*` step).
         participants: Vec<RequestId>,
+        /// Chunked-prefill segments of a [`StepKind::Composed`] iteration
+        /// (DESIGN.md §3.8): per-request uncached token slices drawn from
+        /// the progress cursors. Empty for exclusive-step, decode, and
+        /// warm steps. Part of the differential stream, so both executors
+        /// must compose identically.
+        prefill: Vec<PrefillSegment>,
         /// Roofline-predicted iteration latency (s). The virtual executor
         /// uses it as the actual duration; real executors measure instead.
         predicted_latency: f64,
@@ -80,8 +88,11 @@ pub enum Action {
     /// must deliver the step's `on_step_end(inst, seq)` after `delay`
     /// instead of at the originally scheduled end.
     Preempt { inst: usize, delay: f64, seq: u64 },
-    /// An offline request's KV was dropped to make room; it re-enters the
-    /// backlog for recompute. Executors holding real KV buffers free them.
+    /// A request's KV was dropped to make room; it re-enters its queue
+    /// for recompute (offline work returns to the backlog; an online
+    /// mid-prefill resident requeued to break a chunked-admission
+    /// overcommit returns to the head of its online queue — DESIGN.md
+    /// §3.8). Executors holding real KV buffers free them.
     Evict { inst: InstanceRef, req: RequestId },
     /// Algorithm 1 pull: `req`'s offline decode moves from a relaxed to a
     /// strict instance. Always followed by the matching
@@ -229,6 +240,11 @@ mod tests {
             inst: InstanceRef::Relaxed(1),
             kind: StepKind::PrefillOnline,
             participants: vec![1, 2],
+            prefill: vec![PrefillSegment {
+                req: 3,
+                tokens: 256,
+                last: true,
+            }],
             predicted_latency: 0.5,
             cached_tokens: 0,
             seq: 4,

@@ -109,6 +109,34 @@ pub struct ClusterState {
     /// held as cache while staying admittable.
     pub cached_block_s: f64,
     last_cache_t: f64,
+    // ---- chunked-prefill iteration accounting (DESIGN.md §3.8) ----
+    /// Composed iterations started (chunked mode only).
+    pub chunk_steps: u64,
+    /// Composed iterations carrying both decode work and prefill chunks
+    /// (the genuinely mixed ones).
+    pub chunk_mixed_steps: u64,
+    /// Prefill chunk segments scheduled.
+    pub chunk_segments: u64,
+    /// Uncached prompt tokens prefilled through chunk segments.
+    pub chunk_prefill_tokens: u64,
+    /// Sum of per-iteration chunk budgets over iterations that scheduled
+    /// at least one segment (utilization denominator).
+    pub chunk_budget_offered: u64,
+    /// Prefill/decode interference: Σ over mixed iterations of
+    /// (composed latency − pure-decode latency) — the delay chunked
+    /// prefill adds to co-resident decodes.
+    pub chunk_interference_s: f64,
+    /// Prefill tokens already computed when an online arrival halted
+    /// offline chunk scheduling — work the exclusive-step preemption
+    /// would have discarded, retained by the cursor.
+    pub chunk_retained_tokens: u64,
+    /// Prefill work discarded by exclusive-step preemption truncation
+    /// (layer-level discard-and-recompute; structurally 0 when chunking
+    /// is on).
+    pub chunk_discarded_tokens: u64,
+    /// Cursor/target mismatches detected at prefill completion (lost or
+    /// double-counted chunks — property-tested to stay 0).
+    pub chunk_accounting_errors: u64,
 }
 
 impl ClusterState {
@@ -174,6 +202,15 @@ impl ClusterState {
             transfer_tokens_saved: 0,
             cached_block_s: 0.0,
             last_cache_t: 0.0,
+            chunk_steps: 0,
+            chunk_mixed_steps: 0,
+            chunk_segments: 0,
+            chunk_prefill_tokens: 0,
+            chunk_budget_offered: 0,
+            chunk_interference_s: 0.0,
+            chunk_retained_tokens: 0,
+            chunk_discarded_tokens: 0,
+            chunk_accounting_errors: 0,
         }
     }
 

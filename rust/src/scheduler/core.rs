@@ -22,16 +22,18 @@
 //! orders into [`Action::TransferChunk`] work orders so the transfer
 //! timeline is part of the substrate-independent action stream.
 
-use crate::config::ServingConfig;
+use crate::config::{ChunkMode, ServingConfig};
 use crate::coordinator::{
     migration_decision, pick_migration_candidates, preemption_delay,
     select_decode_batch, select_decode_batch_capped, select_evictions,
     shed_online_overload, Ablation, Candidate, LengthPref, OverloadMode,
     Policy,
 };
-use crate::instance::{Instance, PoolRole, Step, StepKind};
+use crate::instance::{
+    Instance, PoolRole, PrefillSegment, Step, StepKind,
+};
 use crate::metrics::{
-    LinkReport, PoolReport, PrefixReport, TransportReport,
+    ChunkReport, LinkReport, PoolReport, PrefixReport, TransportReport,
 };
 use crate::perfmodel::{BatchStats, PerfModel};
 use crate::pool::{PoolManager, Transition, TransitionPhase, WARMUP_S};
@@ -51,6 +53,13 @@ use super::cluster::{ClusterState, KvHome};
 /// rescue) don't crowd out preempting arrivals. One constant, three users —
 /// the headrooms are deliberately coupled.
 const ONLINE_PREFILL_RESERVE_TOKENS: usize = 4096;
+
+/// Minimum per-iteration chunk quantum of the chunked-prefill model
+/// (DESIGN.md §3.8): even when the decode batch alone exhausts the
+/// latency budget, prefill cursors keep advancing by at least this many
+/// tokens per iteration — the progress guarantee that makes long prompts
+/// servable under sustained decode pressure.
+const MIN_CHUNK_TOKENS: usize = 512;
 
 /// Configuration of the decision core (substrate-independent: no drain
 /// horizon, no wall-clock compression — those belong to executors).
@@ -79,6 +88,17 @@ impl CoreConfig {
     }
 }
 
+/// Outcome of a chunked admission attempt (DESIGN.md §3.8).
+enum AdmitChunk {
+    /// Admitted; the first chunk segment joins this iteration, with the
+    /// admission's cache-resolved token count.
+    Scheduled(PrefillSegment, usize),
+    /// Head online request cannot fit even after eviction: dropped.
+    Rejected,
+    /// No budget/space/gating headroom right now; try next iteration.
+    NoSpace,
+}
+
 /// The unified §3.4 scheduling state machine.
 #[derive(Debug)]
 pub struct SchedulerCore {
@@ -98,6 +118,11 @@ pub struct SchedulerCore {
     now: f64,
     /// Action buffer of the entry point currently executing.
     actions: Vec<Action>,
+    // ---- hot-loop scratch buffers (reused across steps; contents are
+    // garbage between uses and every user clears before filling) ----
+    scratch_ids: Vec<RequestId>,
+    scratch_online: Vec<Candidate>,
+    scratch_offline: Vec<Candidate>,
 }
 
 impl SchedulerCore {
@@ -132,6 +157,14 @@ impl SchedulerCore {
             cfg.serving.model.layers,
         );
         let pool = PoolManager::new(cfg.serving.pool);
+        // The planner's sizing path prices candidate batches as composed
+        // iterations (`max_slo_batch_chunked`, DESIGN.md §3.8). In this
+        // architecture the *strict* pool runs pure-decode iterations —
+        // prefill chunks compose only on relaxed instances — so its chunk
+        // reserve stays 0: charging strict capacity for prefill it never
+        // schedules would systematically oversize the strict pool. A
+        // substrate that fuses prefill into SLO-bounded iterations sets
+        // `PoolManager::set_chunk_reserve` to its per-iteration quantum.
         SchedulerCore {
             cfg,
             pm,
@@ -141,6 +174,9 @@ impl SchedulerCore {
             rng,
             now: 0.0,
             actions: Vec::new(),
+            scratch_ids: Vec::new(),
+            scratch_online: Vec::new(),
+            scratch_offline: Vec::new(),
         }
     }
 
@@ -429,6 +465,31 @@ impl SchedulerCore {
         }
     }
 
+    /// Snapshot the chunked-prefill iteration metrics (DESIGN.md §3.8).
+    pub fn chunk_report(&self) -> ChunkReport {
+        let c = &self.cluster;
+        ChunkReport {
+            enabled: self.cfg.serving.chunk_tokens.is_enabled(),
+            mode: self.cfg.serving.chunk_tokens.to_string(),
+            steps: c.chunk_steps,
+            mixed_steps: c.chunk_mixed_steps,
+            prefill_chunks: c.chunk_segments,
+            prefill_tokens: c.chunk_prefill_tokens,
+            budget_offered_tokens: c.chunk_budget_offered,
+            budget_utilization: if c.chunk_budget_offered == 0 {
+                0.0
+            } else {
+                c.chunk_prefill_tokens as f64
+                    / c.chunk_budget_offered as f64
+            },
+            interference_delay_s: c.chunk_interference_s,
+            preemptions: c.preemptions,
+            preempted_work_retained: c.chunk_retained_tokens,
+            preempted_work_discarded: c.chunk_discarded_tokens,
+            accounting_errors: c.chunk_accounting_errors,
+        }
+    }
+
     // ------------------------------------------------------- transport glue
 
     /// Enqueue a transfer of `kv_tokens` of `rid`'s KV on the transport
@@ -679,28 +740,50 @@ impl SchedulerCore {
                 // runs at every entry point while draining.
                 if self.cluster.relaxed[i].offline_decoding.is_empty()
                     && self.cluster.relaxed[i].inbound.is_empty()
+                    && !self.has_offline_prefilling(i)
                 {
                     return;
                 }
-                let in_step: Vec<RequestId> = self.cluster.relaxed[i]
-                    .step
-                    .as_ref()
-                    .map(|s| s.participants.clone())
-                    .unwrap_or_default();
-                let victims: Vec<RequestId> = self.cluster.relaxed[i]
-                    .offline_decoding
-                    .iter()
-                    .copied()
-                    .filter(|r| !in_step.contains(r))
-                    .collect();
-                for rid in victims {
+                // Victims collected into the reusable scratch (hot path:
+                // runs at every entry point while draining); step
+                // participants are checked in place, not cloned.
+                let mut victims = std::mem::take(&mut self.scratch_ids);
+                victims.clear();
+                {
+                    let node = &self.cluster.relaxed[i];
+                    let step = node.step.as_ref();
+                    victims.extend(
+                        node.offline_decoding.iter().copied().filter(|&r| {
+                            step.map(|s| !s.involves(r)).unwrap_or(true)
+                        }),
+                    );
+                }
+                for &rid in &victims {
                     self.evict_offline_from_relaxed(i, rid);
                 }
-                let inbound: Vec<RequestId> =
-                    self.cluster.relaxed[i].inbound.clone();
-                for rid in inbound {
+                // Offline mid-prefill residents: partial chains are not
+                // rescuable — discard for recompute elsewhere.
+                victims.clear();
+                {
+                    let node = &self.cluster.relaxed[i];
+                    let step = node.step.as_ref();
+                    for &r in &node.prefilling {
+                        if !self.scheduled_online(r)
+                            && step.map(|s| !s.involves(r)).unwrap_or(true)
+                        {
+                            victims.push(r);
+                        }
+                    }
+                }
+                for &rid in &victims {
+                    self.evict_prefilling(i, rid);
+                }
+                victims.clear();
+                victims.extend(self.cluster.relaxed[i].inbound.iter().copied());
+                for &rid in &victims {
                     self.cancel_inbound_relaxed(i, rid);
                 }
+                self.scratch_ids = victims;
             }
             PoolRole::Strict => {
                 self.purge_cache(InstanceRef::Strict(i));
@@ -709,18 +792,16 @@ impl SchedulerCore {
                 {
                     return;
                 }
-                let in_step: Vec<RequestId> = self.cluster.strict[i]
-                    .step
-                    .as_ref()
-                    .map(|s| s.participants.clone())
-                    .unwrap_or_default();
-                let victims: Vec<RequestId> = self.cluster.strict[i]
-                    .offline
-                    .iter()
-                    .copied()
-                    .filter(|r| !in_step.contains(r))
-                    .collect();
-                for rid in victims {
+                let mut victims = std::mem::take(&mut self.scratch_ids);
+                victims.clear();
+                {
+                    let node = &self.cluster.strict[i];
+                    let step = node.step.as_ref();
+                    victims.extend(node.offline.iter().copied().filter(
+                        |&r| step.map(|s| !s.involves(r)).unwrap_or(true),
+                    ));
+                }
+                for &rid in &victims {
                     self.evict_offline_from_strict(i, rid);
                 }
                 // Abort in-flight *offline* inbound streams (Algorithm 1
@@ -729,15 +810,19 @@ impl SchedulerCore {
                 // Online dispatches ride out and decode in place: a
                 // cancelled online KV would force a recompute and risk the
                 // very SLO violation the drain contract forbids.
-                let inbound_offline: Vec<RequestId> = self.cluster.strict[i]
-                    .inbound
-                    .iter()
-                    .copied()
-                    .filter(|&r| !self.scheduled_online(r))
-                    .collect();
-                for rid in inbound_offline {
+                victims.clear();
+                {
+                    let node = &self.cluster.strict[i];
+                    for &r in &node.inbound {
+                        if !self.scheduled_online(r) {
+                            victims.push(r);
+                        }
+                    }
+                }
+                for &rid in &victims {
                     self.cancel_inbound_strict(i, rid);
                 }
+                self.scratch_ids = victims;
             }
         }
     }
@@ -855,6 +940,7 @@ impl SchedulerCore {
             started: self.now,
             ends: self.now + WARMUP_S,
             participants: Vec::new(),
+            prefill: Vec::new(),
             seq,
             preempted: false,
         });
@@ -862,6 +948,7 @@ impl SchedulerCore {
             inst: inst_ref,
             kind: StepKind::Warm,
             participants: Vec::new(),
+            prefill: Vec::new(),
             predicted_latency: WARMUP_S,
             cached_tokens: 0,
             seq,
@@ -902,18 +989,78 @@ impl SchedulerCore {
             || self.cfg.policy == Policy::BasePd
     }
 
+    /// Any offline-scheduled mid-prefill resident on relaxed `inst`?
+    fn has_offline_prefilling(&self, inst: usize) -> bool {
+        self.cluster.relaxed[inst]
+            .prefilling
+            .iter()
+            .any(|&r| !self.scheduled_online(r))
+    }
+
     fn arrival(&mut self, rid: RequestId) {
         if self.scheduled_online(rid) {
             let prompt = self.cluster.requests[rid as usize].prompt_len;
             let inst = self.cluster.router.route_prefill(prompt);
             self.cluster.relaxed[inst].online_queue.push_back(rid);
-            self.maybe_preempt(inst);
+            if self.chunk_enabled() {
+                // Chunk-granular fast preemption (§3.4.1, DESIGN.md
+                // §3.8): composed iterations are latency-bounded, so the
+                // arrival just halts offline chunk scheduling at the next
+                // boundary — completed progress is retained by the
+                // cursors instead of discarded.
+                self.note_chunk_preemption(inst);
+            } else {
+                self.maybe_preempt(inst);
+            }
             if self.cluster.relaxed[inst].is_idle() {
                 self.start_relaxed_step(inst);
             }
         } else {
             self.cluster.offline_backlog.push_back(rid);
             self.kick_idle_relaxed();
+        }
+    }
+
+    /// An online arrival found offline prefill chunks in flight on `inst`:
+    /// record the chunk-granular preemption (the §3.8 counterpart of the
+    /// exclusive-step truncation) and the *computed* prefill progress the
+    /// cursors retain — exactly the work the discard-and-recompute
+    /// baseline would have thrown away at this moment (cumulative across
+    /// events by design: the baseline restarts from scratch after every
+    /// truncation, so each event books the full would-be recompute).
+    /// Latched per step via `Step::preempted` (mirroring the
+    /// exclusive-step latch), so a burst of arrivals during one iteration
+    /// counts once.
+    fn note_chunk_preemption(&mut self, inst: usize) {
+        if !self.cfg.policy.preempts_offline_prefill() {
+            return;
+        }
+        let (hit, retained) = {
+            let Some(step) = self.cluster.relaxed[inst].step.as_ref() else {
+                return;
+            };
+            if step.preempted {
+                return; // already counted for this iteration
+            }
+            let mut hit = false;
+            let mut retained = 0usize;
+            for s in &step.prefill {
+                if !self.scheduled_online(s.req) {
+                    hit = true;
+                    retained += self.cluster.requests[s.req as usize]
+                        .computed_prefill();
+                }
+            }
+            (hit, retained)
+        };
+        if hit {
+            let step = self.cluster.relaxed[inst]
+                .step
+                .as_mut()
+                .expect("checked above");
+            step.preempted = true;
+            self.cluster.preemptions += 1;
+            self.cluster.chunk_retained_tokens += retained as u64;
         }
     }
 
@@ -944,6 +1091,17 @@ impl SchedulerCore {
         if new_end >= step.ends {
             return;
         }
+        // Work actually performed before the truncation point — what the
+        // discard-and-recompute throws away (the §3.8 chunked model's
+        // `preempted_work_retained` counterpart).
+        let discarded: f64 = step
+            .participants
+            .iter()
+            .map(|&r| {
+                self.cluster.requests[r as usize].remaining_prefill() as f64
+            })
+            .sum::<f64>()
+            * elapsed_frac;
         let seq = self.cluster.alloc_seq();
         let step = self.cluster.relaxed[inst].step.as_mut().expect("checked");
         step.ends = new_end;
@@ -951,6 +1109,7 @@ impl SchedulerCore {
         step.seq = seq;
         self.actions.push(Action::Preempt { inst, delay, seq });
         self.cluster.preemptions += 1;
+        self.cluster.chunk_discarded_tokens += discarded as u64;
     }
 
     fn kick_idle_relaxed(&mut self) {
@@ -973,6 +1132,13 @@ impl SchedulerCore {
         if !self.cluster.relaxed[inst].is_idle() {
             return;
         }
+        if self.chunk_enabled() {
+            self.compose_relaxed_step(inst);
+            return;
+        }
+        // Exclusive-step mode (`chunk_tokens = off`): an iteration is a
+        // whole prefill batch *or* a decode batch — the pre-§3.8 model,
+        // kept as the refactor's differential baseline.
         if self.start_online_prefill(inst) {
             return;
         }
@@ -980,6 +1146,439 @@ impl SchedulerCore {
             return;
         }
         self.start_relaxed_decode(inst);
+    }
+
+    // ----------------------------------- chunked composition (§3.8)
+
+    fn chunk_enabled(&self) -> bool {
+        self.cfg.serving.chunk_tokens.is_enabled()
+    }
+
+    /// Per-iteration chunk budget over the instance's current decode
+    /// batch: solver-chosen under `auto` (largest chunk keeping the
+    /// composed iteration inside the headroom-reduced TPOT budget,
+    /// floored at the progress quantum), fixed otherwise.
+    fn chunk_budget_for(&self, stats: BatchStats) -> usize {
+        let cap = self.cfg.serving.sched.prefill_token_budget.max(1);
+        match self.cfg.serving.chunk_tokens {
+            ChunkMode::Off => 0,
+            ChunkMode::Fixed(n) => n.clamp(1, cap),
+            ChunkMode::Auto => {
+                let budget = self.cfg.serving.slo.tpot
+                    * (1.0 - self.cfg.serving.sched.slo_margin);
+                self.pm
+                    .chunk_budget(stats, budget, cap)
+                    .max(MIN_CHUNK_TOKENS.min(cap))
+            }
+        }
+    }
+
+    /// The §3.8 batch-composer — the single replacement for the exclusive
+    /// `start_online_prefill`/`start_offline_prefill`/`start_relaxed_decode`
+    /// trio: every iteration carries decode tokens for all offline
+    /// residents plus up to the chunk budget of prefill work drawn from
+    /// per-request progress cursors. Online prefill work fills the budget
+    /// first; offline chunks are scheduled only while no online prefill is
+    /// pending (chunk-granular fast preemption), and new offline
+    /// admissions still pass the §3.4.2 gating priced at their *remaining
+    /// uncached* tokens.
+    fn compose_relaxed_step(&mut self, inst: usize) {
+        let draining = self.cluster.relaxed[inst].draining;
+        // Does this iteration actually carry a decode side? Parked
+        // residents under `online priority` (hold KV, never decode here)
+        // and a draining instance's residents must not be priced as
+        // phantom decode work — that would both inflate the predicted
+        // latency and collapse the auto budget to its floor.
+        let decodes_here =
+            !draining && self.cfg.policy.offline_decode_on_relaxed();
+        // Budget from the pre-admission decode batch (admissions below may
+        // evict residents, which only loosens the bound). Steady-state
+        // decode iterations with no prefill candidate anywhere skip the
+        // solver entirely — it sits on the hottest loop in the simulator.
+        let any_prefill = !self.cluster.relaxed[inst].prefilling.is_empty()
+            || !self.cluster.relaxed[inst].online_queue.is_empty()
+            || !self.cluster.offline_backlog.is_empty();
+        let budget = if any_prefill {
+            let stats0 = if decodes_here {
+                self.relaxed_pool_stats(inst)
+            } else {
+                BatchStats::empty()
+            };
+            self.chunk_budget_for(stats0)
+        } else {
+            0
+        };
+        let mut segs: Vec<PrefillSegment> = Vec::new();
+        let mut used = 0usize;
+        let mut cached_total = 0usize;
+
+        // 1. Resume online mid-prefill residents, admission order.
+        let mut resident = std::mem::take(&mut self.scratch_ids);
+        resident.clear();
+        resident.extend(self.cluster.relaxed[inst].prefilling.iter().copied());
+        for &rid in &resident {
+            if used >= budget {
+                break;
+            }
+            if !self.scheduled_online(rid) {
+                continue;
+            }
+            if let Some(seg) = self.schedule_chunk(inst, rid, budget - used)
+            {
+                used += seg.tokens;
+                segs.push(seg);
+            }
+        }
+
+        // 2. Admit new online arrivals into the composition (head-of-queue
+        // rejection semantics match the exclusive-step path).
+        while used < budget {
+            let Some(&rid) =
+                self.cluster.relaxed[inst].online_queue.front()
+            else {
+                break;
+            };
+            match self.admit_chunked_online(inst, rid, budget - used) {
+                AdmitChunk::Scheduled(seg, cached) => {
+                    self.cluster.relaxed[inst].online_queue.pop_front();
+                    used += seg.tokens;
+                    cached_total += cached;
+                    segs.push(seg);
+                }
+                AdmitChunk::Rejected => {
+                    // Cannot fit even after eviction: drop, keep going.
+                    self.cluster.relaxed[inst].online_queue.pop_front();
+                    self.cluster.requests[rid as usize].phase =
+                        Phase::Finished;
+                    self.actions.push(Action::Complete { req: rid });
+                }
+                AdmitChunk::NoSpace => break,
+            }
+        }
+
+        // 3. Offline chunks — only while no online prefill work is
+        // pending (an online arrival halts offline chunk scheduling at
+        // the iteration boundary) and the instance is not draining.
+        let online_pending = !segs.is_empty()
+            || !self.cluster.relaxed[inst].online_queue.is_empty();
+        let offline_ok = !draining
+            && (!online_pending || !self.cfg.policy.offline_idle_only());
+        if offline_ok {
+            for &rid in &resident {
+                if used >= budget {
+                    break;
+                }
+                if self.scheduled_online(rid) {
+                    continue;
+                }
+                if let Some(seg) =
+                    self.schedule_chunk(inst, rid, budget - used)
+                {
+                    used += seg.tokens;
+                    segs.push(seg);
+                }
+            }
+            while used < budget {
+                let Some(&rid) = self.cluster.offline_backlog.front()
+                else {
+                    break;
+                };
+                match self.admit_chunked_offline(inst, rid, budget - used) {
+                    AdmitChunk::Scheduled(seg, cached) => {
+                        self.cluster.offline_backlog.pop_front();
+                        used += seg.tokens;
+                        cached_total += cached;
+                        segs.push(seg);
+                        self.actions.push(Action::Admit { inst, req: rid });
+                    }
+                    AdmitChunk::Rejected | AdmitChunk::NoSpace => break,
+                }
+            }
+        }
+        self.scratch_ids = resident;
+
+        // A later admission's eviction may have displaced a resident whose
+        // segment was already scheduled this composition (offline discard
+        // or online overcommit requeue): drop those stale segments so the
+        // step neither prices nor executes work for departed requests.
+        // (`cached_total` stays as admitted — the admission-time cache
+        // counters already ran, and the stream invariant compares against
+        // exactly those.)
+        segs.retain(|s| {
+            self.cluster.kv_home[s.req as usize] == KvHome::Relaxed(inst)
+                && self.cluster.requests[s.req as usize].phase
+                    == Phase::Prefilling
+        });
+        let used: usize = segs.iter().map(|s| s.tokens).sum();
+
+        // 4. Decode side: every offline decode resident (post-eviction
+        // view — admissions above may have reclaimed space).
+        let decode: Vec<RequestId> = if decodes_here {
+            self.cluster.relaxed[inst].offline_decoding.clone()
+        } else {
+            Vec::new()
+        };
+        if decode.is_empty() && segs.is_empty() {
+            return; // nothing to run; instance stays idle
+        }
+
+        // Price the iteration with the decode work it actually performs
+        // (parked residents hold KV but run nothing).
+        let stats = if decodes_here {
+            self.relaxed_pool_stats(inst)
+        } else {
+            BatchStats::empty()
+        };
+        let latency = self.pm.mixed_iter_cost(stats, used).latency_s;
+        self.cluster.chunk_steps += 1;
+        if !decode.is_empty() && !segs.is_empty() {
+            self.cluster.chunk_mixed_steps += 1;
+            self.cluster.chunk_interference_s +=
+                (latency - self.pm.decode_latency(stats)).max(0.0);
+        }
+        if !segs.is_empty() {
+            self.cluster.chunk_segments += segs.len() as u64;
+            self.cluster.chunk_prefill_tokens += used as u64;
+            self.cluster.chunk_budget_offered += budget as u64;
+        }
+
+        self.begin_relaxed_step_composed(
+            inst,
+            StepKind::Composed,
+            decode,
+            segs,
+            latency,
+            cached_total,
+        );
+    }
+
+    /// Schedule the next chunk of an already-resident mid-prefill request:
+    /// grow its KV by the chunk (plus the first-output-token slot on the
+    /// final chunk), evicting offline residents if the allocator is short.
+    /// Returns `None` (cursor stalls one iteration) when no room remains.
+    fn schedule_chunk(
+        &mut self,
+        inst: usize,
+        rid: RequestId,
+        room: usize,
+    ) -> Option<PrefillSegment> {
+        let rem = self.cluster.requests[rid as usize].remaining_prefill();
+        if rem == 0 || room == 0 {
+            return None;
+        }
+        let take = rem.min(room);
+        let last = take == rem;
+        let grow = take + usize::from(last);
+        if !self.fit_for_grow(inst, grow, rid) {
+            return None;
+        }
+        self.cluster.relaxed[inst]
+            .kv
+            .grow(rid, grow)
+            .expect("fit checked");
+        Some(PrefillSegment {
+            req: rid,
+            tokens: take,
+            last,
+        })
+    }
+
+    /// Make room for a mid-prefill cursor's `tokens`-token growth,
+    /// evicting offline work — but never `rid` itself (the request being
+    /// grown). When `rid` is online and no offline work remains, another
+    /// *online* mid-prefill resident is requeued instead: the conservative
+    /// admission gate checks the full footprint but allocates
+    /// incrementally, so concurrent online prefills can overcommit KV —
+    /// without this last resort they would all stall forever (online
+    /// residents are otherwise never evictable). The loser returns to the
+    /// head of the online queue and re-admits once the winner finishes.
+    /// Returns false when the cursor must stall an iteration.
+    fn fit_for_grow(
+        &mut self,
+        inst: usize,
+        tokens: usize,
+        rid: RequestId,
+    ) -> bool {
+        while !self.cluster.relaxed[inst].kv.can_fit(tokens) {
+            if let Some(&victim) =
+                self.cluster.relaxed[inst].offline_decoding.first()
+            {
+                self.evict_offline_from_relaxed(inst, victim);
+            } else if let Some(&victim) =
+                self.cluster.relaxed[inst].inbound.first()
+            {
+                self.cancel_inbound_relaxed(inst, victim);
+            } else {
+                // Newest offline partial chain first (least recompute
+                // wasted).
+                let victim = self.cluster.relaxed[inst]
+                    .prefilling
+                    .iter()
+                    .copied()
+                    .rev()
+                    .find(|&r| r != rid && !self.scheduled_online(r));
+                if let Some(v) = victim {
+                    self.evict_prefilling(inst, v);
+                    continue;
+                }
+                if !self.scheduled_online(rid) {
+                    return false;
+                }
+                // Online-vs-online overcommit: requeue the newest online
+                // resident admitted *after* `rid` (oldest admission wins —
+                // FIFO-fair and deadlock-free: the oldest resident can
+                // always reclaim what later admissions overcommitted,
+                // while a newer grower stalls instead of undoing older
+                // work).
+                let other = {
+                    let pf = &self.cluster.relaxed[inst].prefilling;
+                    let my_pos =
+                        pf.iter().position(|&r| r == rid).unwrap_or(0);
+                    pf[my_pos + 1..]
+                        .iter()
+                        .copied()
+                        .rev()
+                        .find(|&r| self.scheduled_online(r))
+                };
+                match other {
+                    Some(v) => self.requeue_prefilling_online(inst, v),
+                    None => return false,
+                }
+            }
+        }
+        true
+    }
+
+    /// Return an online mid-prefill resident to the head of its online
+    /// queue (KV released, cursor reset — recompute on re-admission).
+    /// Only used to break online-vs-online KV overcommit in
+    /// [`SchedulerCore::fit_for_grow`].
+    fn requeue_prefilling_online(&mut self, inst: usize, rid: RequestId) {
+        self.cluster.relaxed[inst].kv.release(rid).expect("resident kv");
+        self.cluster.relaxed[inst].prefilling.retain(|&r| r != rid);
+        self.cluster.kv_home[rid as usize] = KvHome::None;
+        self.cluster.requests[rid as usize].evict();
+        self.cluster.relaxed[inst].online_queue.push_front(rid);
+        self.cluster.evictions += 1;
+        self.actions.push(Action::Evict {
+            inst: InstanceRef::Relaxed(inst),
+            req: rid,
+        });
+    }
+
+    /// Admit the head online request with its first chunk. The admission
+    /// gate is conservative — the *full* remaining footprint must fit now
+    /// (evicting offline work if needed) — but blocks are allocated
+    /// incrementally per chunk.
+    fn admit_chunked_online(
+        &mut self,
+        inst: usize,
+        rid: RequestId,
+        room: usize,
+    ) -> AdmitChunk {
+        let target = self.cluster.requests[rid as usize].recompute_len();
+        let m = self.peek_prefix(InstanceRef::Relaxed(inst), rid);
+        if !self.fit_on_relaxed(inst, target + 1, &m) {
+            // Space held by other *online* requests frees on its own —
+            // mid-prefill residents finish and dispatch, and a completed
+            // prefill parked in a strict `waiting_for_space` queue still
+            // holds its KV here until the dispatch retries. Wait instead
+            // of dropping (in particular, an overcommit loser requeued by
+            // `fit_for_grow` must survive until the winner leaves).
+            let online_kv_resident = {
+                let node = &self.cluster.relaxed[inst];
+                node.kv
+                    .resident_requests()
+                    .any(|r| r != rid && self.scheduled_online(r))
+            };
+            if online_kv_resident {
+                return AdmitChunk::NoSpace;
+            }
+            return AdmitChunk::Rejected;
+        }
+        AdmitChunk::Scheduled(
+            self.admit_first_chunk(inst, rid, target, &m, room),
+            m.cached_tokens,
+        )
+    }
+
+    /// Admit the head offline request with its first chunk: space check
+    /// keeps the online-prefill reserve intact and the §3.4.2 gating cost
+    /// model prices the *remaining uncached* tokens it would compute.
+    fn admit_chunked_offline(
+        &mut self,
+        inst: usize,
+        rid: RequestId,
+        room: usize,
+    ) -> AdmitChunk {
+        let target = self.cluster.requests[rid as usize].recompute_len();
+        let m = self.peek_prefix(InstanceRef::Relaxed(inst), rid);
+        let uncached = target.saturating_sub(m.cached_tokens).max(1);
+        let free = self.cluster.relaxed[inst].kv.free_tokens();
+        if free < target + 1 + ONLINE_PREFILL_RESERVE_TOKENS {
+            return AdmitChunk::NoSpace;
+        }
+        let gating_on =
+            self.cfg.policy.gating_enabled() && self.cfg.ablation.gating;
+        if gating_on
+            && !self.gating_admits(
+                inst,
+                rid,
+                uncached,
+                free - ONLINE_PREFILL_RESERVE_TOKENS,
+            )
+        {
+            return AdmitChunk::NoSpace;
+        }
+        AdmitChunk::Scheduled(
+            self.admit_first_chunk(inst, rid, target, &m, room),
+            m.cached_tokens,
+        )
+    }
+
+    /// Shared tail of chunked admission: open the cursor, reserve the
+    /// cached blocks plus the first chunk, and join the `prefilling`
+    /// residents. Fit was checked by the caller.
+    fn admit_first_chunk(
+        &mut self,
+        inst: usize,
+        rid: RequestId,
+        target: usize,
+        m: &PrefixMatch,
+        room: usize,
+    ) -> PrefillSegment {
+        let uncached = target.saturating_sub(m.cached_tokens).max(1);
+        let take = uncached.min(room.max(1));
+        let last = take == uncached;
+        let credit = m.cached_tokens.min(target.saturating_sub(1));
+        let admit_tokens = credit + take + usize::from(last);
+        self.admit_prefixed(InstanceRef::Relaxed(inst), rid, admit_tokens, m);
+        self.note_prefix_use(InstanceRef::Relaxed(inst), rid, m, target);
+        let req = &mut self.cluster.requests[rid as usize];
+        req.phase = Phase::Prefilling;
+        req.begin_prefill(target, m.cached_tokens);
+        self.cluster.relaxed[inst].prefilling.push(rid);
+        PrefillSegment {
+            req: rid,
+            tokens: take,
+            last,
+        }
+    }
+
+    /// Evict an offline mid-prefill resident for capacity: partial chains
+    /// are not rescuable (the KV is incomplete), so this is always
+    /// discard-and-recompute — the cursor resets with the eviction.
+    fn evict_prefilling(&mut self, inst: usize, rid: RequestId) {
+        self.cluster.relaxed[inst].kv.release(rid).expect("resident kv");
+        self.cluster.relaxed[inst].prefilling.retain(|&r| r != rid);
+        self.cluster.kv_home[rid as usize] = KvHome::None;
+        self.cluster.requests[rid as usize].evict();
+        self.cluster.offline_backlog.push_back(rid);
+        self.cluster.evictions += 1;
+        self.actions.push(Action::Evict {
+            inst: InstanceRef::Relaxed(inst),
+            req: rid,
+        });
     }
 
     /// Batch online prefills up to the token budget. Declared shared
@@ -1019,7 +1618,9 @@ impl SchedulerCore {
             self.cluster.relaxed[inst].online_queue.pop_front();
             self.admit_prefixed(InstanceRef::Relaxed(inst), rid, len + 1, &m);
             self.note_prefix_use(InstanceRef::Relaxed(inst), rid, &m, len);
-            self.cluster.requests[rid as usize].phase = Phase::Prefilling;
+            let req = &mut self.cluster.requests[rid as usize];
+            req.phase = Phase::Prefilling;
+            req.begin_prefill(len, m.cached_tokens);
             used += uncached;
             cached_total += m.cached_tokens;
             batch.push(rid);
@@ -1068,7 +1669,20 @@ impl SchedulerCore {
             {
                 self.cancel_inbound_relaxed(inst, victim);
             } else {
-                return false;
+                // Chunked mode: an offline mid-prefill resident's partial
+                // chain makes way (discard-and-recompute; never online).
+                // Newest first — the least-progressed chain wastes the
+                // least recompute.
+                let victim = self.cluster.relaxed[inst]
+                    .prefilling
+                    .iter()
+                    .copied()
+                    .rev()
+                    .find(|&r| !self.scheduled_online(r));
+                match victim {
+                    Some(v) => self.evict_prefilling(inst, v),
+                    None => return false,
+                }
             }
         }
         true
@@ -1172,7 +1786,9 @@ impl SchedulerCore {
             self.cluster.offline_backlog.pop_front();
             self.admit_prefixed(InstanceRef::Relaxed(inst), rid, len + 1, &m);
             self.note_prefix_use(InstanceRef::Relaxed(inst), rid, &m, len);
-            self.cluster.requests[rid as usize].phase = Phase::Prefilling;
+            let req = &mut self.cluster.requests[rid as usize];
+            req.phase = Phase::Prefilling;
+            req.begin_prefill(len, m.cached_tokens);
             used += uncached;
             cached_total += m.cached_tokens;
             batch.push(rid);
@@ -1267,6 +1883,28 @@ impl SchedulerCore {
         latency: f64,
         cached_tokens: usize,
     ) {
+        self.begin_relaxed_step_composed(
+            inst,
+            kind,
+            participants,
+            Vec::new(),
+            latency,
+            cached_tokens,
+        );
+    }
+
+    /// Shared step-creation tail for every relaxed iteration — exclusive
+    /// (`prefill` empty) and composed alike: one place owns the seq
+    /// allocation, span clamp, action emission, and busy accrual.
+    fn begin_relaxed_step_composed(
+        &mut self,
+        inst: usize,
+        kind: StepKind,
+        participants: Vec<RequestId>,
+        prefill: Vec<PrefillSegment>,
+        latency: f64,
+        cached_tokens: usize,
+    ) {
         let seq = self.cluster.alloc_seq();
         let span = latency.max(1e-9);
         let ends = self.now + span;
@@ -1274,6 +1912,7 @@ impl SchedulerCore {
             inst: InstanceRef::Relaxed(inst),
             kind,
             participants: participants.clone(),
+            prefill: prefill.clone(),
             predicted_latency: span,
             cached_tokens,
             seq,
@@ -1283,6 +1922,7 @@ impl SchedulerCore {
             started: self.now,
             ends,
             participants,
+            prefill,
             seq,
             preempted: false,
         });
@@ -1309,21 +1949,31 @@ impl SchedulerCore {
         match step.kind {
             StepKind::PrefillOnline => {
                 for &rid in &step.participants {
+                    self.complete_prefill_cursor(rid);
                     self.finish_prefill_online(inst, rid);
                 }
             }
             StepKind::PrefillOffline => {
                 if step.preempted {
                     // Layer-level interruption: work discarded, requests
-                    // return to the backlog for recompute.
+                    // return to the backlog for recompute (exclusive-step
+                    // mode only — the chunked model retains progress).
+                    // (The discarded-work tokens were booked at the
+                    // truncation decision in `maybe_preempt`, where the
+                    // elapsed fraction was known.)
                     for &rid in &step.participants {
                         self.cluster.relaxed[inst].kv.release(rid).expect("kv");
                         self.cluster.kv_home[rid as usize] = KvHome::None;
-                        self.cluster.requests[rid as usize].phase = Phase::Queued;
+                        let req = &mut self.cluster.requests[rid as usize];
+                        req.prefilled_tokens = 0;
+                        req.prefill_target = 0;
+                        req.prefill_cached = 0;
+                        req.phase = Phase::Queued;
                         self.cluster.offline_backlog.push_front(rid);
                     }
                 } else {
                     for &rid in &step.participants {
+                        self.complete_prefill_cursor(rid);
                         self.finish_prefill_offline(inst, rid);
                     }
                 }
@@ -1331,6 +1981,36 @@ impl SchedulerCore {
             StepKind::DecodeRelaxed => {
                 for &rid in &step.participants {
                     self.relaxed_decode_token(inst, rid);
+                }
+            }
+            StepKind::Composed => {
+                // Decode side first (token marks may free space), then the
+                // prefill cursors advance by their scheduled segments.
+                for &rid in &step.participants {
+                    self.relaxed_decode_token(inst, rid);
+                }
+                for seg in &step.prefill {
+                    let rid = seg.req;
+                    // Evicted/migrated-mid-step guard, as in decode.
+                    if self.cluster.kv_home[rid as usize]
+                        != KvHome::Relaxed(inst)
+                        || self.cluster.requests[rid as usize].phase
+                            != Phase::Prefilling
+                    {
+                        continue;
+                    }
+                    self.cluster.requests[rid as usize]
+                        .advance_prefill(seg.tokens);
+                    if seg.last {
+                        self.cluster.relaxed[inst]
+                            .prefilling
+                            .retain(|&r| r != rid);
+                        if self.scheduled_online(rid) {
+                            self.finish_prefill_online(inst, rid);
+                        } else {
+                            self.finish_prefill_offline(inst, rid);
+                        }
+                    }
                 }
             }
             StepKind::Warm => {
@@ -1343,7 +2023,30 @@ impl SchedulerCore {
         self.start_relaxed_step(inst);
     }
 
+    /// Exclusive-step completion: the whole uncached remainder ran in one
+    /// step — advance the cursor to the target so both iteration models
+    /// share one completion invariant (checked in `finish_prefill_*`).
+    fn complete_prefill_cursor(&mut self, rid: RequestId) {
+        let req = &mut self.cluster.requests[rid as usize];
+        let rem = req.remaining_prefill();
+        req.advance_prefill(rem);
+    }
+
+    /// The §3.8 conservation check, run at every prefill completion: the
+    /// cursor must land exactly on the admission-time target — a mismatch
+    /// means a chunk was lost or double-counted across
+    /// preemption/eviction/migration (property-tested to stay 0).
+    fn audit_prefill_cursor(&mut self, rid: RequestId) {
+        let req = &self.cluster.requests[rid as usize];
+        if req.prefill_target == 0
+            || req.prefilled_tokens != req.prefill_target
+        {
+            self.cluster.chunk_accounting_errors += 1;
+        }
+    }
+
     fn finish_prefill_online(&mut self, inst: usize, rid: RequestId) {
+        self.audit_prefill_cursor(rid);
         let recompute = self.cluster.requests[rid as usize].recompute_len();
         self.cluster.router.prefill_done(inst, recompute);
         // The freshly computed prefix chain becomes cache content *before*
@@ -1404,24 +2107,31 @@ impl SchedulerCore {
         if self.cluster.strict[inst].offline.is_empty() {
             return;
         }
-        // Never evict requests participating in a running step.
-        let in_flight: Vec<RequestId> = self.cluster.strict[inst]
-            .step
-            .as_ref()
-            .map(|s| s.participants.clone())
-            .unwrap_or_default();
-        let victims: Vec<Candidate> = self.cluster.strict[inst]
-            .offline
-            .iter()
-            .filter(|r| !in_flight.contains(r))
-            .map(|&r| (r, self.cluster.requests[r as usize].kv_len()))
-            .collect();
+        // Victim candidates into the reusable scratch (hot path: runs on
+        // decode-growth overflow); running-step membership is checked in
+        // place instead of cloning the participant list.
+        let mut victims = std::mem::take(&mut self.scratch_offline);
+        victims.clear();
+        {
+            let node = &self.cluster.strict[inst];
+            let step = node.step.as_ref();
+            victims.extend(
+                node.offline
+                    .iter()
+                    .filter(|&&r| step.map(|s| !s.involves(r)).unwrap_or(true))
+                    .map(|&r| {
+                        (r, self.cluster.requests[r as usize].kv_len())
+                    }),
+            );
+        }
         if victims.is_empty() {
+            self.scratch_offline = victims;
             return;
         }
         let free_now = self.cluster.strict[inst].kv.free_tokens();
         let deficit = need.saturating_sub(free_now);
         if deficit == 0 {
+            self.scratch_offline = victims;
             return;
         }
         let stats = self.strict_resident_stats(inst);
@@ -1430,6 +2140,7 @@ impl SchedulerCore {
             && self.cfg.ablation.bottleneck_eviction;
         let chosen =
             select_evictions(&self.pm, &victims, deficit, bottleneck, aware);
+        self.scratch_offline = victims;
         for rid in chosen {
             self.evict_offline_from_strict(inst, rid);
         }
@@ -1505,6 +2216,7 @@ impl SchedulerCore {
     }
 
     fn finish_prefill_offline(&mut self, inst: usize, rid: RequestId) {
+        self.audit_prefill_cursor(rid);
         self.register_prefix(InstanceRef::Relaxed(inst), rid);
         self.cluster.requests[rid as usize].mark_first_token(self.now);
         if self.cluster.requests[rid as usize].is_finished() {
@@ -1595,11 +2307,16 @@ impl SchedulerCore {
         {
             return;
         }
-        let mut online: Vec<Candidate> = self.cluster.strict[inst]
-            .online
-            .iter()
-            .map(|&r| (r, self.cluster.requests[r as usize].kv_len()))
-            .collect();
+        // Participant candidates into the reusable scratch buffers (hot
+        // path: every strict iteration rebuilds these).
+        let mut online = std::mem::take(&mut self.scratch_online);
+        online.clear();
+        online.extend(
+            self.cluster.strict[inst]
+                .online
+                .iter()
+                .map(|&r| (r, self.cluster.requests[r as usize].kv_len())),
+        );
 
         // §3.4.4 overload handling: in Shed mode, sacrifice the longest
         // online requests when even the online-only batch exceeds the SLO,
@@ -1634,15 +2351,16 @@ impl SchedulerCore {
         // A draining strict instance batches online residents only: its
         // offline mix-ins must sit out the step so the drain ticks can
         // stream them off between iterations.
-        let offline: Vec<Candidate> = if self.cluster.strict[inst].draining {
-            Vec::new()
-        } else {
-            self.cluster.strict[inst]
-                .offline
-                .iter()
-                .map(|&r| (r, self.cluster.requests[r as usize].kv_len()))
-                .collect()
-        };
+        let mut offline = std::mem::take(&mut self.scratch_offline);
+        offline.clear();
+        if !self.cluster.strict[inst].draining {
+            offline.extend(
+                self.cluster.strict[inst]
+                    .offline
+                    .iter()
+                    .map(|&r| (r, self.cluster.requests[r as usize].kv_len())),
+            );
+        }
 
         let slo = self.cfg.serving.slo.tpot;
         let selection = match self.cfg.policy {
@@ -1673,6 +2391,9 @@ impl SchedulerCore {
         let mut participants: Vec<RequestId> =
             online.iter().map(|c| c.0).collect();
         participants.extend(&selection.offline);
+        // Return the scratch buffers before any exit path.
+        self.scratch_online = online;
+        self.scratch_offline = offline;
         if participants.is_empty() {
             return;
         }
@@ -1689,6 +2410,7 @@ impl SchedulerCore {
             inst: InstanceRef::Strict(inst),
             kind: StepKind::DecodeStrict,
             participants: participants.clone(),
+            prefill: Vec::new(),
             predicted_latency: span,
             cached_tokens: 0,
             seq,
@@ -1698,6 +2420,7 @@ impl SchedulerCore {
             started: self.now,
             ends,
             participants,
+            prefill: Vec::new(),
             seq,
             preempted: false,
         });
@@ -1847,16 +2570,20 @@ impl SchedulerCore {
         else {
             return;
         };
-        let cands: Vec<Candidate> = self.cluster.relaxed[src]
-            .offline_decoding
-            .iter()
-            .map(|&r| (r, self.cluster.requests[r as usize].kv_len()))
-            .collect();
+        let mut cands = std::mem::take(&mut self.scratch_offline);
+        cands.clear();
+        cands.extend(
+            self.cluster.relaxed[src]
+                .offline_decoding
+                .iter()
+                .map(|&r| (r, self.cluster.requests[r as usize].kv_len())),
+        );
         let picked = pick_migration_candidates(
             pref,
             &cands,
             self.cfg.serving.sched.migration_batch,
         );
+        self.scratch_offline = cands;
         for rid in picked {
             // Relaxed decode step may be running with this request; removal
             // from residency makes the in-flight token a no-op (guarded in
@@ -1965,9 +2692,38 @@ mod tests {
     }
 
     #[test]
-    fn online_arrival_starts_a_prefill_step() {
+    fn online_arrival_starts_a_composed_prefill_step() {
         let mut core =
             core_with(vec![Request::new(0, Class::Online, 0.0, 500, 8)]);
+        let actions = core.on_arrival(0.0, 0);
+        match actions.as_slice() {
+            [Action::StartStep {
+                inst: InstanceRef::Relaxed(0),
+                kind: StepKind::Composed,
+                participants,
+                prefill,
+                ..
+            }] => {
+                assert!(participants.is_empty(), "no decode residents yet");
+                assert_eq!(prefill.len(), 1);
+                assert_eq!(prefill[0].req, 0);
+                assert_eq!(prefill[0].tokens, 500);
+                assert!(prefill[0].last, "500 tokens fit one chunk");
+            }
+            other => panic!("expected one composed step, got {other:?}"),
+        }
+        // The step is registered; a stale step-end seq is ignored.
+        assert!(core.on_step_end(1.0, InstanceRef::Relaxed(0), 999).is_empty());
+    }
+
+    #[test]
+    fn exclusive_mode_starts_legacy_prefill_step() {
+        let mut cfg = CoreConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+        cfg.serving.chunk_tokens = crate::config::ChunkMode::Off;
+        let mut core = SchedulerCore::new(
+            vec![Request::new(0, Class::Online, 0.0, 500, 8)],
+            cfg,
+        );
         let actions = core.on_arrival(0.0, 0);
         assert!(matches!(
             actions.as_slice(),
@@ -1977,8 +2733,60 @@ mod tests {
                 ..
             }]
         ));
-        // The step is registered; a stale step-end seq is ignored.
-        assert!(core.on_step_end(1.0, InstanceRef::Relaxed(0), 999).is_empty());
+    }
+
+    #[test]
+    fn long_prompt_prefills_across_multiple_chunks() {
+        // A 4000-token offline prompt cannot fit one auto-budget chunk:
+        // the cursor advances across iterations and TTFT lands at the
+        // last chunk's boundary.
+        let mut core =
+            core_with(vec![Request::new(0, Class::Offline, 0.0, 4000, 4)]);
+        let mut actions = core.on_arrival(0.0, 0);
+        let mut t = 0.0;
+        let mut chunks = 0usize;
+        let mut total = 0usize;
+        loop {
+            let Some((seq, lat, tokens, last)) =
+                actions.iter().find_map(|a| match a {
+                    Action::StartStep {
+                        inst: InstanceRef::Relaxed(0),
+                        kind: StepKind::Composed,
+                        prefill,
+                        predicted_latency,
+                        seq,
+                        ..
+                    } if !prefill.is_empty() => Some((
+                        *seq,
+                        *predicted_latency,
+                        prefill[0].tokens,
+                        prefill[0].last,
+                    )),
+                    _ => None,
+                })
+            else {
+                break;
+            };
+            chunks += 1;
+            total += tokens;
+            assert!(chunks < 100, "runaway chunk loop");
+            t += lat;
+            actions = core.on_step_end(t, InstanceRef::Relaxed(0), seq);
+            if last {
+                assert!(core.cluster.requests[0].first_token_at.is_some());
+                break;
+            }
+            assert!(
+                core.cluster.requests[0].first_token_at.is_none(),
+                "TTFT must wait for the last chunk"
+            );
+        }
+        assert!(chunks > 1, "4000 tokens must take several chunks");
+        assert_eq!(total, 4000, "chunks must cover the prompt exactly");
+        assert_eq!(core.cluster.chunk_accounting_errors, 0);
+        // The finished prefill decodes on the relaxed pool (OOCO).
+        assert!(core.cluster.relaxed[0].offline_decoding.contains(&0));
+        assert!(core.cluster.relaxed[0].prefilling.is_empty());
     }
 
     /// Drive every pending transfer chunk in `actions` (and the follow-up
@@ -2126,9 +2934,10 @@ mod tests {
         assert!(actions.iter().any(|a| matches!(
             a,
             Action::StartStep {
-                kind: StepKind::PrefillOffline,
+                kind: StepKind::Composed,
+                prefill,
                 ..
-            }
+            } if !prefill.is_empty()
         )));
     }
 
@@ -2140,10 +2949,15 @@ mod tests {
             cfg,
         );
         let actions = core.on_arrival(0.0, 0);
+        // Scheduled through the online path: a composed prefill step with
+        // no gating Admit notification.
+        assert!(!actions
+            .iter()
+            .any(|a| matches!(a, Action::Admit { .. })));
         assert!(matches!(
             actions.as_slice(),
             [Action::StartStep {
-                kind: StepKind::PrefillOnline,
+                kind: StepKind::Composed,
                 ..
             }]
         ));
@@ -2254,11 +3068,16 @@ mod tests {
     }
 
     #[test]
-    fn online_arrival_preempts_running_offline_prefill() {
-        let mut core = core_with(vec![
-            Request::new(0, Class::Offline, 0.0, 4000, 64),
-            Request::new(1, Class::Online, 0.001, 500, 8),
-        ]);
+    fn online_arrival_preempts_running_offline_prefill_exclusive() {
+        let mut cfg = CoreConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+        cfg.serving.chunk_tokens = crate::config::ChunkMode::Off;
+        let mut core = SchedulerCore::new(
+            vec![
+                Request::new(0, Class::Offline, 0.0, 4000, 64),
+                Request::new(1, Class::Online, 0.001, 500, 8),
+            ],
+            cfg,
+        );
         let a0 = core.on_arrival(0.0, 0);
         assert!(a0.iter().any(|a| matches!(
             a,
@@ -2273,5 +3092,57 @@ mod tests {
             "online arrival mid-offline-prefill must preempt: {a1:?}"
         );
         assert_eq!(core.cluster.preemptions, 1);
+    }
+
+    #[test]
+    fn chunked_preemption_retains_offline_progress() {
+        // Chunk-granular fast preemption: an online arrival halts offline
+        // chunk scheduling at the next iteration boundary, retaining the
+        // cursor progress the exclusive-step truncation would discard —
+        // and emits no Preempt (truncation) work order at all.
+        let mut core = core_with(vec![
+            Request::new(0, Class::Offline, 0.0, 4000, 64),
+            Request::new(1, Class::Online, 0.0, 500, 8),
+        ]);
+        let a0 = core.on_arrival(0.0, 0);
+        let (seq, lat) = a0
+            .iter()
+            .find_map(|a| match a {
+                Action::StartStep {
+                    kind: StepKind::Composed,
+                    predicted_latency,
+                    seq,
+                    ..
+                } => Some((*seq, *predicted_latency)),
+                _ => None,
+            })
+            .expect("offline arrival must start a composed chunk step");
+        // Finish the first chunk, then let the next chunk start.
+        let a1 = core.on_step_end(lat, InstanceRef::Relaxed(0), seq);
+        assert!(
+            a1.iter().any(|a| matches!(
+                a,
+                Action::StartStep { kind: StepKind::Composed, .. }
+            )),
+            "offline prefill must continue chunking: {a1:?}"
+        );
+        let progressed = core.cluster.requests[0].prefilled_tokens;
+        assert!(progressed > 0, "first chunk must advance the cursor");
+        // Online arrival mid-(second)-chunk: chunk-granular preemption.
+        let a2 = core.on_arrival(lat * 1.5, 1);
+        assert!(
+            !a2.iter().any(|a| matches!(a, Action::Preempt { .. })),
+            "no truncation work order in chunked mode: {a2:?}"
+        );
+        assert_eq!(core.cluster.preemptions, 1);
+        assert_eq!(
+            core.cluster.chunk_retained_tokens,
+            progressed as u64,
+            "retained work = the cursor progress at the preemption"
+        );
+        assert_eq!(core.cluster.chunk_discarded_tokens, 0);
+        // The retained cursor survives: the request is still mid-prefill.
+        assert!(core.cluster.relaxed[0].prefilling.contains(&0));
+        assert_eq!(core.cluster.requests[0].prefilled_tokens, progressed);
     }
 }

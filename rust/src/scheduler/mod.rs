@@ -48,8 +48,10 @@ pub use self::executor::{
 pub use crate::transport::{JobId, TransferKind, TransportEngine};
 
 // The pool-role vocabulary of the elastic pool manager (DESIGN.md §3.6),
-// whose plan/transition decisions ride on this module's action stream.
-pub use crate::instance::PoolRole;
+// whose plan/transition decisions ride on this module's action stream —
+// plus the iteration-composition vocabulary of the chunked-prefill model
+// (DESIGN.md §3.8) the `StartStep` actions carry.
+pub use crate::instance::{PoolRole, PrefillSegment, Step, StepKind};
 pub use crate::pool::{PoolManager, PoolPlan};
 
 // The underlying §3.4 decision functions, re-exported so all scheduling

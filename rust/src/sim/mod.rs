@@ -21,7 +21,8 @@ pub use crate::scheduler::{Event, EventKind, EventQueue};
 use crate::config::ServingConfig;
 use crate::coordinator::{Ablation, OverloadMode, Policy};
 use crate::metrics::{
-    PoolReport, PrefixReport, Recorder, Report, TransportReport,
+    ChunkReport, PoolReport, PrefixReport, Recorder, Report,
+    TransportReport,
 };
 use crate::scheduler::{CoreConfig, Executor, SchedulerCore, VirtualExecutor};
 use crate::trace::Trace;
@@ -98,6 +99,9 @@ pub struct SimResult {
     /// Prefix-sharing cache accounting (hit rate, prefill tokens saved,
     /// reclaimable capacity — DESIGN.md §3.7).
     pub prefix: PrefixReport,
+    /// Chunked-prefill iteration accounting (budget utilization,
+    /// interference delay, preemption work retained — DESIGN.md §3.8).
+    pub chunk: ChunkReport,
 }
 
 /// Run the simulation of `trace` under `cfg`: build a [`SchedulerCore`],
@@ -148,5 +152,6 @@ fn build_result(
         transport: core.transport_report(end_time.max(duration)),
         pool: core.pool_report(),
         prefix: core.prefix_report(),
+        chunk: core.chunk_report(),
     }
 }

@@ -167,6 +167,123 @@ impl std::fmt::Display for PrefixProfile {
     }
 }
 
+/// Prompt-length override profile (DESIGN.md §3.8): replaces a dataset's
+/// prompt distribution with a long-prompt / heavy-tail one, the workload
+/// family the chunked-prefill iteration model exists for (agentic
+/// contexts, retrieval-stuffed prompts). Selected `--prefix-profile`-style
+/// on the CLI (`--prompt-profile`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PromptProfile {
+    /// Keep the dataset's own prompt distribution.
+    Dataset,
+    /// Heavy-tailed lognormal with arithmetic mean `mean`: large `sigma`
+    /// puts substantial mass near `max`, so single prompts genuinely
+    /// dominate exclusive-step iterations.
+    LongPrompt { mean: usize, sigma: f64, max: usize },
+}
+
+impl PromptProfile {
+    pub const DEFAULT_LONG: PromptProfile = PromptProfile::LongPrompt {
+        mean: 6000,
+        sigma: 1.2,
+        max: 16384,
+    };
+
+    /// Apply the override to a dataset (no-op for [`PromptProfile::Dataset`]).
+    pub fn apply(&self, ds: &super::datasets::DatasetProfile) -> super::datasets::DatasetProfile {
+        match *self {
+            PromptProfile::Dataset => ds.clone(),
+            PromptProfile::LongPrompt { mean, sigma, max } => {
+                let mut out = ds.clone();
+                out.prompt = super::datasets::LengthProfile::new(
+                    mean as f64,
+                    sigma,
+                    64.min(max),
+                    max,
+                );
+                out
+            }
+        }
+    }
+
+    /// JSON form (the `Display` string), round-trippable via
+    /// [`PromptProfile::from_json`].
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::Str(self.to_string())
+    }
+
+    pub fn from_json(
+        v: &crate::util::json::Json,
+    ) -> anyhow::Result<PromptProfile> {
+        match v {
+            crate::util::json::Json::Str(s) => s.parse(),
+            other => {
+                anyhow::bail!("prompt profile must be a string, got {other:?}")
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for PromptProfile {
+    type Err = anyhow::Error;
+
+    /// Parse `dataset`, `long-prompt`, or the parameterized form `Display`
+    /// emits — `long-prompt(mean=6000,sigma=1.2,max=16384)` (keys
+    /// optional, any order).
+    fn from_str(name: &str) -> anyhow::Result<PromptProfile> {
+        match name {
+            "dataset" | "default" | "none" => {
+                return Ok(PromptProfile::Dataset)
+            }
+            "long-prompt" | "heavy-tail" => {
+                return Ok(Self::DEFAULT_LONG)
+            }
+            _ => {}
+        }
+        if let Some(body) = name
+            .strip_prefix("long-prompt(")
+            .and_then(|s| s.strip_suffix(')'))
+        {
+            let (mut mean, mut sigma, mut max) = match Self::DEFAULT_LONG {
+                PromptProfile::LongPrompt { mean, sigma, max } => {
+                    (mean, sigma, max)
+                }
+                _ => unreachable!(),
+            };
+            for tok in body.split(',').filter(|t| !t.trim().is_empty()) {
+                let (k, v) = tok.trim().split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!("bad long-prompt parameter `{tok}`")
+                })?;
+                match k.trim() {
+                    "mean" => mean = v.trim().parse::<usize>()?,
+                    "sigma" => sigma = v.trim().parse::<f64>()?,
+                    "max" => max = v.trim().parse::<usize>()?,
+                    other => anyhow::bail!(
+                        "unknown long-prompt parameter `{other}`"
+                    ),
+                }
+            }
+            anyhow::ensure!(
+                mean > 0 && max >= mean && sigma > 0.0,
+                "long-prompt needs mean > 0, max >= mean, sigma > 0"
+            );
+            return Ok(PromptProfile::LongPrompt { mean, sigma, max });
+        }
+        anyhow::bail!("unknown prompt profile `{name}`")
+    }
+}
+
+impl std::fmt::Display for PromptProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PromptProfile::Dataset => f.write_str("dataset"),
+            PromptProfile::LongPrompt { mean, sigma, max } => {
+                write!(f, "long-prompt(mean={mean},sigma={sigma},max={max})")
+            }
+        }
+    }
+}
+
 /// Everything needed to synthesize one class's trace.
 #[derive(Debug, Clone)]
 pub struct TraceSpec {
@@ -688,6 +805,72 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn prompt_profile_parse_display_json_roundtrip() {
+        for p in [
+            PromptProfile::Dataset,
+            PromptProfile::DEFAULT_LONG,
+            PromptProfile::LongPrompt {
+                mean: 12000,
+                sigma: 0.8,
+                max: 16384,
+            },
+        ] {
+            assert_eq!(p.to_string().parse::<PromptProfile>().unwrap(), p);
+            assert_eq!(PromptProfile::from_json(&p.to_json()).unwrap(), p);
+        }
+        assert_eq!(
+            "long-prompt".parse::<PromptProfile>().unwrap(),
+            PromptProfile::DEFAULT_LONG
+        );
+        assert_eq!(
+            "long-prompt(mean=9000)".parse::<PromptProfile>().unwrap(),
+            PromptProfile::LongPrompt {
+                mean: 9000,
+                sigma: 1.2,
+                max: 16384
+            }
+        );
+        // A max below the 64-token floor must not panic at sample time.
+        let tiny = "long-prompt(mean=40,max=50)"
+            .parse::<PromptProfile>()
+            .unwrap()
+            .apply(&DatasetProfile::ooc_offline());
+        assert!(tiny.prompt.min <= tiny.prompt.max);
+        let mut rng = Pcg::seeded(3);
+        assert!(tiny.prompt.sample(&mut rng) <= 50);
+        assert!("short-prompt".parse::<PromptProfile>().is_err());
+        assert!("long-prompt(mean=0)".parse::<PromptProfile>().is_err());
+        assert!("long-prompt(mean=9,max=8)".parse::<PromptProfile>().is_err());
+        assert!("long-prompt(warp=2)".parse::<PromptProfile>().is_err());
+    }
+
+    #[test]
+    fn long_prompt_profile_shifts_the_tail() {
+        let base = DatasetProfile::ooc_offline();
+        let long = PromptProfile::DEFAULT_LONG.apply(&base);
+        assert_eq!(long.prompt.mean, 6000.0);
+        assert_eq!(long.prompt.max, 16384);
+        // Outputs and arrival shape untouched.
+        assert_eq!(long.output, base.output);
+        // Sampled prompts are markedly longer than the base profile's.
+        let t_base = offline_trace(base, 2.0, 200.0, 11);
+        let t_long = offline_trace(long, 2.0, 200.0, 11);
+        let mean = |t: &crate::trace::Trace| {
+            t.requests.iter().map(|r| r.prompt_len as f64).sum::<f64>()
+                / t.len().max(1) as f64
+        };
+        assert!(
+            mean(&t_long) > 2.0 * mean(&t_base),
+            "long {} vs base {}",
+            mean(&t_long),
+            mean(&t_base)
+        );
+        // Dataset profile is the identity.
+        assert_eq!(PromptProfile::Dataset.apply(&DatasetProfile::azure_conv()).prompt,
+            DatasetProfile::azure_conv().prompt);
     }
 
     #[test]

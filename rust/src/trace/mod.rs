@@ -14,7 +14,7 @@ pub mod scaling;
 
 pub use datasets::{DatasetProfile, LengthProfile};
 pub use generator::{
-    ArrivalPattern, PrefixProfile, TraceGenerator, TraceSpec,
+    ArrivalPattern, PrefixProfile, PromptProfile, TraceGenerator, TraceSpec,
 };
 pub use scaling::scale_trace;
 

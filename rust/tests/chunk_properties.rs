@@ -1,0 +1,244 @@
+//! Property and acceptance tests for the chunked-prefill continuous-
+//! batching iteration model (DESIGN.md §3.8).
+//!
+//! 1. SLO-by-construction: every composed iteration containing online
+//!    decodes keeps its predicted latency within the TPOT budget.
+//! 2. Chunk conservation: total prefilled tokens per request exactly cover
+//!    the prompt — no lost or double-counted chunks across preemption,
+//!    eviction, migration, and rescue churn (the core audits every prefill
+//!    completion; the counter must stay 0).
+//! 3. The headline trade: on a long-prompt + offline co-locate trace the
+//!    chunked model serves offline work with zero discarded prefill while
+//!    keeping the online SLO (p99 TPOT included); the exclusive-step
+//!    baseline burns its offline attempts in truncation discard loops.
+
+use std::collections::HashSet;
+
+use ooco::config::{ChunkMode, ServingConfig};
+use ooco::request::Class;
+use ooco::scheduler::{
+    Action, CoreConfig, Executor, Policy, SchedulerCore, VirtualExecutor,
+};
+use ooco::sim::{simulate, SimConfig};
+use ooco::trace::datasets::{DatasetProfile, LengthProfile};
+use ooco::trace::generator::{
+    offline_trace, offline_trace_with_prefix, online_trace, PrefixProfile,
+};
+use ooco::trace::Trace;
+
+/// Offline dataset with long prompts but short outputs, so offline decode
+/// completes within test-sized horizons.
+fn long_prompt_offline(mean: usize, max: usize) -> DatasetProfile {
+    let mut ds = DatasetProfile::ooc_offline();
+    ds.prompt = LengthProfile::new(mean as f64, 0.5, 512, max);
+    ds.output = LengthProfile::new(120.0, 0.5, 8, 256);
+    ds
+}
+
+fn run_core_with_log(
+    trace: &Trace,
+    cfg: CoreConfig,
+) -> (SchedulerCore, Vec<Action>) {
+    let horizon = trace.duration() + 600.0;
+    let mut virt = VirtualExecutor::new(trace, horizon);
+    virt.log = Some(Vec::new());
+    let mut core = SchedulerCore::new(trace.requests.clone(), cfg);
+    virt.run(&mut core).unwrap();
+    (core, virt.log.unwrap())
+}
+
+/// §3.8 property: with chunking enabled, (a) the predicted latency of
+/// every iteration containing online decodes stays within the TPOT
+/// budget (Algorithm 2's per-iteration SLO enforcement), and (b) every
+/// *composed* iteration whose chunk exceeds the 512-token progress floor
+/// — i.e. every solver-chosen budget — stays within the headroom-reduced
+/// TPOT budget the `chunk_budget` solver promises by construction.
+#[test]
+fn composed_online_iterations_stay_within_tpot() {
+    let online = online_trace(DatasetProfile::azure_conv(), 0.3, 120.0, 61);
+    let offline = offline_trace(long_prompt_offline(6000, 16384), 1.0, 120.0, 62);
+    let trace = online.merge(offline);
+    let online_ids: HashSet<u64> = trace
+        .requests
+        .iter()
+        .filter(|r| r.class == Class::Online)
+        .map(|r| r.id)
+        .collect();
+    let mut cfg = CoreConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+    cfg.serving.chunk_tokens = ChunkMode::Auto;
+    let tpot = cfg.serving.slo.tpot;
+    let chunk_bound = tpot * (1.0 - cfg.serving.sched.slo_margin);
+    let (_, log) = run_core_with_log(&trace, cfg);
+    let mut checked = 0usize;
+    let mut solver_checked = 0usize;
+    for a in &log {
+        if let Action::StartStep {
+            participants,
+            prefill,
+            predicted_latency,
+            ..
+        } = a
+        {
+            if participants.iter().any(|r| online_ids.contains(r)) {
+                assert!(
+                    *predicted_latency <= tpot * (1.0 + 1e-9),
+                    "iteration with online decodes over budget: {} > {}",
+                    predicted_latency,
+                    tpot
+                );
+                checked += 1;
+            }
+            // Composed iterations above the progress floor carry a
+            // solver-chosen chunk: the solver's bound must hold.
+            let chunk_tokens: usize = prefill.iter().map(|s| s.tokens).sum();
+            if chunk_tokens > 512 {
+                assert!(
+                    *predicted_latency <= chunk_bound * (1.0 + 1e-9),
+                    "solver-budgeted composed iteration over bound: {} > {} ({chunk_tokens} chunk tokens)",
+                    predicted_latency,
+                    chunk_bound
+                );
+                solver_checked += 1;
+            }
+        }
+    }
+    assert!(checked > 50, "too few online decode iterations ({checked})");
+    assert!(
+        solver_checked > 50,
+        "too few solver-budgeted composed iterations ({solver_checked})"
+    );
+}
+
+/// §3.8 conservation property: across prefix hits, chunk-granular
+/// preemption, capacity evictions, migration, and rescue churn, every
+/// prefill completion lands its cursor exactly on the admission target —
+/// the core's audit counter stays 0 and all online work still finishes.
+#[test]
+fn chunk_accounting_exact_under_churn() {
+    let online = online_trace(DatasetProfile::azure_conv(), 0.5, 120.0, 71);
+    let offline = offline_trace_with_prefix(
+        long_prompt_offline(3000, 8000),
+        1.5,
+        120.0,
+        PrefixProfile::FewShot {
+            groups: 6,
+            prefix_len: 800,
+        },
+        72,
+    );
+    let trace = online.merge(offline);
+    for mode in [ChunkMode::Auto, ChunkMode::Fixed(1024)] {
+        let mut cfg =
+            CoreConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+        cfg.serving.chunk_tokens = mode;
+        // Squeeze KV so admissions, decode growth, and rescues churn:
+        // weights ~15.2 GB, so ~45k KV tokens per instance.
+        cfg.serving.hardware.mem_capacity = 18.5e9;
+        let (core, log) = run_core_with_log(&trace, cfg);
+        assert_eq!(
+            core.cluster.chunk_accounting_errors, 0,
+            "{mode:?}: lost or double-counted chunks"
+        );
+        // The run must actually have exercised the churn paths.
+        assert!(
+            core.cluster.preemptions > 0,
+            "{mode:?}: no chunk-granular preemptions"
+        );
+        assert!(
+            core.cluster.evictions
+                + core.cluster.rescues
+                + core.cluster.offloads
+                + core.cluster.migrations
+                > 0,
+            "{mode:?}: no eviction/migration churn under squeezed memory"
+        );
+        // The stream really is chunked: some request needed > 1 segment.
+        let mut seen: HashSet<u64> = HashSet::new();
+        let mut resumed = false;
+        for a in &log {
+            if let Action::StartStep { prefill, .. } = a {
+                for s in prefill {
+                    resumed |= !seen.insert(s.req) && s.tokens > 0;
+                }
+            }
+        }
+        assert!(resumed, "{mode:?}: no multi-chunk prefill in the stream");
+        // Every online request still finished despite the churn.
+        for r in &core.cluster.requests {
+            if r.class == Class::Online {
+                assert!(
+                    r.finished_at.is_some(),
+                    "{mode:?}: online request {} unfinished",
+                    r.id
+                );
+            }
+        }
+    }
+}
+
+/// The §3.8 acceptance comparison: long-prompt offline work co-located
+/// with steady online traffic. Chunked iterations retain preempted
+/// progress (zero discard) and serve the offline stream while the online
+/// SLO — p99 TPOT included — holds; the exclusive-step baseline truncates
+/// every offline attempt into a discard-and-recompute loop that starves
+/// offline throughput.
+#[test]
+fn chunked_serves_long_prompts_where_exclusive_discards() {
+    let duration = 180.0;
+    let online =
+        online_trace(DatasetProfile::azure_conv(), 0.7, duration, 81);
+    let offline =
+        offline_trace(long_prompt_offline(10000, 16384), 0.4, duration, 82);
+    let trace = online.merge(offline);
+
+    let run = |mode: ChunkMode| {
+        let mut cfg =
+            SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+        cfg.serving.chunk_tokens = mode;
+        cfg.drain_s = 600.0;
+        simulate(&trace, &cfg)
+    };
+    let chunked = run(ChunkMode::Auto);
+    let exclusive = run(ChunkMode::Off);
+    let slo = ServingConfig::preset_7b().slo;
+
+    // Chunked mode: online SLO holds, p99 TPOT inside the bound, no
+    // prefill work ever discarded, and the long-prompt offline stream is
+    // actually served.
+    assert!(
+        chunked.report.meets_slo(&slo),
+        "chunked mode must keep the online SLO: {}",
+        chunked.report.summary_line()
+    );
+    assert!(
+        chunked.report.tpot.p99 <= slo.tpot * (1.0 + 1e-9),
+        "chunked online p99 TPOT {} over bound {}",
+        chunked.report.tpot.p99,
+        slo.tpot
+    );
+    assert_eq!(chunked.chunk.preempted_work_discarded, 0);
+    assert_eq!(chunked.chunk.accounting_errors, 0);
+    assert!(
+        chunked.report.offline_finished > 0,
+        "chunked mode must finish long-prompt offline work: {}",
+        chunked.report.summary_line()
+    );
+
+    // Exclusive mode: every online arrival mid-offline-prefill truncates
+    // and discards the attempt — the co-located offline stream starves.
+    assert!(
+        exclusive.chunk.preempted_work_discarded > 0,
+        "exclusive mode must discard truncated prefill work"
+    );
+    assert!(
+        chunked.report.offline_token_throughput
+            > 2.0 * exclusive.report.offline_token_throughput,
+        "chunked offline throughput {} must dwarf exclusive {}",
+        chunked.report.offline_token_throughput,
+        exclusive.report.offline_token_throughput
+    );
+    assert!(
+        chunked.chunk.preempted_work_retained > 0,
+        "chunked preemptions must retain progress"
+    );
+}

@@ -258,6 +258,7 @@ fn planner_is_monotone_in_load() {
                     mean_prompt: prompt,
                     mean_output: output,
                     shared_kv_fraction: 0.0,
+                    chunk_prefill_tokens: 0,
                 },
                 total,
                 headroom,

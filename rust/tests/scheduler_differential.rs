@@ -13,7 +13,7 @@
 
 use std::collections::HashMap;
 
-use ooco::config::{LinkSharing, PoolPolicy, ServingConfig};
+use ooco::config::{ChunkMode, LinkSharing, PoolPolicy, ServingConfig};
 use ooco::coordinator::{Ablation, OverloadMode};
 use ooco::prop_assert;
 use ooco::scheduler::{
@@ -404,6 +404,90 @@ fn prefix_cache_disabled_is_cold() {
     assert!(!rep.enabled);
     assert_eq!(rep.lookups, 0);
     assert_eq!(rep.prefill_tokens_saved, 0);
+}
+
+/// Chunked-prefill acceptance criterion (DESIGN.md §3.8): with chunking
+/// on (`auto` and a fixed budget) and off, on a long-prompt + offline
+/// co-locate trace, both executors emit identical action streams for
+/// every policy — and the chunked streams actually carry composed
+/// iterations with prefill segments.
+#[test]
+fn chunked_prefill_differential_on_and_off_all_policies() {
+    use ooco::trace::PromptProfile;
+    let online =
+        online_trace(DatasetProfile::azure_conv(), 0.5, 90.0, 51);
+    let offline = offline_trace(
+        PromptProfile::DEFAULT_LONG.apply(&DatasetProfile::ooc_offline()),
+        0.8,
+        90.0,
+        52,
+    );
+    let trace = online.merge(offline);
+    let horizon = trace.duration() + 300.0;
+    for mode in [ChunkMode::Auto, ChunkMode::Fixed(2048), ChunkMode::Off] {
+        for policy in Policy::all() {
+            let mut cfg = CoreConfig::new(ServingConfig::preset_7b(), policy);
+            cfg.seed = 37;
+            cfg.serving.chunk_tokens = mode;
+
+            let mut virt = VirtualExecutor::new(&trace, horizon);
+            virt.log = Some(Vec::new());
+            let mut core_v =
+                SchedulerCore::new(trace.requests.clone(), cfg.clone());
+            virt.run(&mut core_v).unwrap();
+
+            let mut stub = StubWallClockExecutor::new(&trace, horizon);
+            stub.log = Some(Vec::new());
+            let mut core_s = SchedulerCore::new(trace.requests.clone(), cfg);
+            stub.run(&mut core_s).unwrap();
+
+            let (v, s) = (virt.log.unwrap(), stub.log.unwrap());
+            assert_eq!(
+                v.len(),
+                s.len(),
+                "{policy:?}/{mode:?}: stream lengths differ ({} vs {})",
+                v.len(),
+                s.len()
+            );
+            for (i, (a, b)) in v.iter().zip(&s).enumerate() {
+                assert_eq!(
+                    a, b,
+                    "{policy:?}/{mode:?}: streams diverge at action {i}"
+                );
+            }
+            let composed = v.iter().any(|a| {
+                matches!(
+                    a,
+                    Action::StartStep { prefill, .. } if !prefill.is_empty()
+                )
+            });
+            if mode.is_enabled() {
+                assert!(
+                    composed,
+                    "{policy:?}/{mode:?}: no composed prefill iterations"
+                );
+                assert_eq!(
+                    core_v.chunk_report().preempted_work_discarded,
+                    0,
+                    "{policy:?}/{mode:?}: chunked mode must never discard"
+                );
+            } else {
+                assert!(
+                    !composed,
+                    "{policy:?}: exclusive mode must not compose"
+                );
+            }
+            assert_eq!(
+                core_v.cluster.chunk_accounting_errors, 0,
+                "{policy:?}/{mode:?}: chunk conservation violated"
+            );
+            assert_eq!(
+                core_v.cluster.preemptions,
+                core_s.cluster.preemptions,
+                "{policy:?}/{mode:?}"
+            );
+        }
+    }
 }
 
 #[test]
