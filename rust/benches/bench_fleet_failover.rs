@@ -1,0 +1,160 @@
+//! Fleet failover bench (DESIGN.md §3.9): the same co-locate trace under
+//! the same relaxed-instance crash schedule, recovered two ways —
+//!
+//!   restream  — crashes arrive with advance notice; resident offline KV
+//!               evacuates through the recoverable-eviction transport
+//!               paths (host staging / live relaxed instances) and
+//!               restreams after the crash instead of being recomputed;
+//!   recompute — identical schedule with the notice stripped; whatever KV
+//!               the crash catches is lost and re-prefilled from scratch.
+//!
+//! The headline: restream recovery spares recompute tokens and holds (or
+//! beats) recompute recovery on offline throughput, while online p99 TTFT
+//! inside the down windows stays within the failover SLO bound.
+//!
+//! Run: `cargo bench --bench bench_fleet_failover [-- --json-out BENCH_fleet_failover.json]`
+
+use std::time::Instant;
+
+use ooco::config::{FaultSpec, FleetSpec, ServingConfig};
+use ooco::coordinator::Policy;
+use ooco::sweep::{failover_compare, SweepConfig};
+use ooco::trace::datasets::{DatasetProfile, LengthProfile};
+use ooco::trace::generator::{offline_trace, online_trace};
+use ooco::trace::Trace;
+use ooco::util::cli::Args;
+use ooco::util::json::Json;
+
+/// Offline-heavy co-locate load: deep backlog and long offline contexts so
+/// a relaxed-instance crash has real KV at stake.
+fn failover_trace() -> Trace {
+    let duration = 900.0;
+    let mut online_ds = DatasetProfile::azure_conv();
+    online_ds.output = LengthProfile::new(60.0, 0.6, 4, 200);
+    let mut offline_ds = DatasetProfile::ooc_offline();
+    offline_ds.prompt = LengthProfile::new(2400.0, 0.8, 64, 8192);
+    offline_ds.output = LengthProfile::new(220.0, 0.6, 16, 800);
+    let online = online_trace(online_ds, 0.5, duration, 2026);
+    let offline = offline_trace(offline_ds, 6.0, duration, 2027);
+    online.merge(offline)
+}
+
+fn main() {
+    let args = Args::parse_env();
+    let trace = failover_trace();
+
+    let mut serving = ServingConfig::preset_7b();
+    serving.cluster.relaxed_instances = 2;
+    serving.cluster.strict_instances = 2;
+    let slo = serving.slo;
+
+    // Three relaxed crashes spread across the run, 45 s of notice each,
+    // two minutes down — enough KV at stake per crash to matter, never
+    // the last live instance (the two never overlap).
+    let fault: FaultSpec =
+        "crash(at=200,inst=0,down=120,notice=45); \
+         crash(at=420,inst=1,down=120,notice=45); \
+         crash(at=640,inst=0,down=120,notice=45)"
+            .parse()
+            .expect("static schedule parses");
+    let sweep = SweepConfig {
+        duration_s: trace.duration(),
+        seed: 2028,
+        ..Default::default()
+    };
+
+    println!(
+        "trace: {} requests, {:.0} s span | schedule: {fault}",
+        trace.len(),
+        trace.duration()
+    );
+
+    let t0 = Instant::now();
+    let (restream, recompute) = failover_compare(
+        &serving,
+        Policy::Ooco,
+        &trace,
+        FleetSpec::default(),
+        &fault,
+        &sweep,
+    );
+    let wall = t0.elapsed().as_secs_f64();
+
+    for (label, res) in
+        [("restream", &restream), ("recompute", &recompute)]
+    {
+        println!("{label:>10}: {}", res.report.summary_line());
+        println!("{:>10}  {}", "", res.fleet.summary_line());
+    }
+    println!(
+        "offline throughput: restream {:.1} tok/s vs recompute {:.1} tok/s ({:+.1}%) | {wall:.1} s wall",
+        restream.report.offline_token_throughput,
+        recompute.report.offline_token_throughput,
+        100.0
+            * (restream.report.offline_token_throughput
+                / recompute.report.offline_token_throughput.max(1e-9)
+                - 1.0),
+    );
+
+    // The claims this bench exists to pin.
+    assert_eq!(restream.fleet.crashes, 3, "all three crashes must fire");
+    assert_eq!(restream.fleet.accounting_errors, 0);
+    assert_eq!(recompute.fleet.accounting_errors, 0);
+    assert!(
+        restream.fleet.evacuated_tokens > 0,
+        "advance notice must evacuate some KV"
+    );
+    assert!(
+        restream.fleet.recompute_tokens <= recompute.fleet.recompute_tokens,
+        "evacuated KV must shrink the recompute bill ({} vs {})",
+        restream.fleet.recompute_tokens,
+        recompute.fleet.recompute_tokens,
+    );
+    assert!(
+        restream.report.offline_token_throughput
+            >= recompute.report.offline_token_throughput,
+        "restream recovery must hold or beat recompute on offline throughput ({:.1} vs {:.1} tok/s)",
+        restream.report.offline_token_throughput,
+        recompute.report.offline_token_throughput,
+    );
+    // Online latency during the down windows: p99 TTFT within the
+    // failover bound (5x the steady-state SLO).
+    let bound = 5.0 * slo.ttft;
+    for (label, res) in
+        [("restream", &restream), ("recompute", &recompute)]
+    {
+        assert!(
+            res.fleet.failover_ttft.p99 <= bound,
+            "{label}: failover p99 ttft {:.2}s exceeds {bound:.1}s",
+            res.fleet.failover_ttft.p99,
+        );
+    }
+
+    if let Some(path) = args.opt_str("json-out") {
+        let side = |res: &ooco::fleet::FleetResult| {
+            Json::obj(vec![
+                ("report", res.report.to_json()),
+                ("fleet", res.fleet.to_json()),
+            ])
+        };
+        let out = Json::obj(vec![
+            ("bench", Json::Str("fleet_failover".into())),
+            ("schedule", fault.to_json()),
+            ("restream", side(&restream)),
+            ("recompute", side(&recompute)),
+            (
+                "throughput_gain",
+                Json::Num(
+                    restream.report.offline_token_throughput
+                        / recompute
+                            .report
+                            .offline_token_throughput
+                            .max(1e-9),
+                ),
+            ),
+            ("wall_s", Json::Num(wall)),
+        ]);
+        std::fs::write(path, out.to_pretty()).expect("write json");
+        println!("wrote {path}");
+    }
+}

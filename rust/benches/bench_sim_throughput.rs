@@ -14,6 +14,8 @@ use ooco::sim::{simulate, SimConfig};
 use ooco::trace::datasets::{DatasetProfile, LengthProfile};
 use ooco::trace::generator::{offline_trace, online_trace};
 use ooco::trace::Trace;
+use ooco::util::cli::Args;
+use ooco::util::json::Json;
 
 /// ~100k requests: steady co-locate load with short outputs so the run is
 /// step-dense but bounded.
@@ -32,6 +34,7 @@ fn trace_100k() -> Trace {
 }
 
 fn main() {
+    let args = Args::parse_env();
     let trace = trace_100k();
     println!(
         "trace: {} requests ({} online / {} offline), {:.0} s span",
@@ -41,6 +44,7 @@ fn main() {
         trace.duration()
     );
 
+    let mut points = Vec::new();
     for (label, mode) in [
         ("chunked (auto)", ChunkMode::Auto),
         ("exclusive (off)", ChunkMode::Off),
@@ -60,5 +64,22 @@ fn main() {
             res.report.summary_line()
         );
         println!("{:>16}  {}", "", res.chunk.summary_line());
+        points.push(Json::obj(vec![
+            ("label", Json::Str(label.into())),
+            ("wall_s", Json::Num(wall)),
+            ("sim_req_per_s", Json::Num(req_per_s)),
+            ("report", res.report.to_json()),
+            ("chunk", res.chunk.to_json()),
+        ]));
+    }
+
+    if let Some(path) = args.opt_str("json-out") {
+        let out = Json::obj(vec![
+            ("bench", Json::Str("sim_throughput".into())),
+            ("requests", Json::Num(trace.len() as f64)),
+            ("points", Json::Arr(points)),
+        ]);
+        std::fs::write(path, out.to_pretty()).expect("write json");
+        println!("wrote {path}");
     }
 }

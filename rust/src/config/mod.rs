@@ -944,6 +944,432 @@ impl ServingConfig {
     }
 }
 
+/// Split a `k=v,k=v` parameter body into raw string pairs (shared by the
+/// fleet/fault spec parsers; values are typed per key at the call site).
+fn kv_pairs<'a>(
+    body: &'a str,
+    kind: &str,
+) -> anyhow::Result<Vec<(&'a str, &'a str)>> {
+    let mut out = Vec::new();
+    for tok in body.split(',').filter(|t| !t.trim().is_empty()) {
+        let (k, v) = tok.trim().split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("bad {kind} parameter `{tok}`")
+        })?;
+        out.push((k.trim(), v.trim()));
+    }
+    Ok(out)
+}
+
+/// Which pool of a replica a fault event targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPool {
+    Relaxed,
+    Strict,
+}
+
+impl std::str::FromStr for FaultPool {
+    type Err = anyhow::Error;
+
+    fn from_str(name: &str) -> anyhow::Result<FaultPool> {
+        match name {
+            "relaxed" => Ok(FaultPool::Relaxed),
+            "strict" => Ok(FaultPool::Strict),
+            other => anyhow::bail!("unknown fault pool `{other}`"),
+        }
+    }
+}
+
+impl std::fmt::Display for FaultPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FaultPool::Relaxed => "relaxed",
+            FaultPool::Strict => "strict",
+        })
+    }
+}
+
+/// One scheduled instance crash (DESIGN.md §3.9): instance `inst` of
+/// `pool` on fleet replica `replica` dies at `at`, recovers `down_s`
+/// later, with `notice_s` of advance warning (0 = none) during which its
+/// offline KV evacuates through the recoverable-eviction paths.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashEvent {
+    pub at: f64,
+    pub replica: usize,
+    pub pool: FaultPool,
+    pub inst: usize,
+    pub down_s: f64,
+    pub notice_s: f64,
+}
+
+impl CrashEvent {
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        Ok(CrashEvent {
+            at: v.req_f64("at")?,
+            replica: v.get("replica").as_usize().unwrap_or(0),
+            pool: match v.get("pool").as_str() {
+                Some(s) => s.parse()?,
+                None => FaultPool::Relaxed,
+            },
+            inst: v.get("inst").as_usize().unwrap_or(0),
+            down_s: v.get("down_s").as_f64().unwrap_or(60.0),
+            notice_s: v.get("notice_s").as_f64().unwrap_or(0.0),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("at", Json::Num(self.at)),
+            ("replica", Json::Num(self.replica as f64)),
+            ("pool", Json::Str(self.pool.to_string())),
+            ("inst", Json::Num(self.inst as f64)),
+            ("down_s", Json::Num(self.down_s)),
+            ("notice_s", Json::Num(self.notice_s)),
+        ])
+    }
+}
+
+impl std::fmt::Display for CrashEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "crash(at={},replica={},pool={},inst={},down={},notice={})",
+            self.at, self.replica, self.pool, self.inst, self.down_s,
+            self.notice_s
+        )
+    }
+}
+
+/// Stochastic crash process: per-instance exponential time between
+/// failures with `mean_s` MTBF, `mttr_s` mean time to recover, and
+/// `notice_s` of advance warning. Sampled from the run's seeded RNG, so
+/// the fault schedule is part of the deterministic replay.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MtbfSpec {
+    pub mean_s: f64,
+    pub mttr_s: f64,
+    pub notice_s: f64,
+}
+
+impl MtbfSpec {
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        Ok(MtbfSpec {
+            mean_s: v.req_f64("mean_s")?,
+            mttr_s: v.get("mttr_s").as_f64().unwrap_or(60.0),
+            notice_s: v.get("notice_s").as_f64().unwrap_or(0.0),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mean_s", Json::Num(self.mean_s)),
+            ("mttr_s", Json::Num(self.mttr_s)),
+            ("notice_s", Json::Num(self.notice_s)),
+        ])
+    }
+}
+
+impl std::fmt::Display for MtbfSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mtbf(mean={},mttr={},notice={})",
+            self.mean_s, self.mttr_s, self.notice_s
+        )
+    }
+}
+
+/// Fleet fault model (DESIGN.md §3.9): scheduled crash events plus an
+/// optional stochastic MTBF process. `FaultSpec::none()` is the default —
+/// and the differential guarantee: a zero-fault fleet behaves exactly
+/// like the fault-free scheduler.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultSpec {
+    pub crashes: Vec<CrashEvent>,
+    pub mtbf: Option<MtbfSpec>,
+}
+
+impl FaultSpec {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.crashes.is_empty() && self.mtbf.is_none()
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let mut crashes = Vec::new();
+        if let Json::Arr(items) = v.get("crashes") {
+            for it in items {
+                crashes.push(CrashEvent::from_json(it)?);
+            }
+        }
+        Ok(FaultSpec {
+            crashes,
+            mtbf: match v.get("mtbf") {
+                Json::Null => None,
+                m => Some(MtbfSpec::from_json(m)?),
+            },
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "crashes",
+                Json::Arr(self.crashes.iter().map(|c| c.to_json()).collect()),
+            ),
+            (
+                "mtbf",
+                self.mtbf.as_ref().map_or(Json::Null, |m| m.to_json()),
+            ),
+        ])
+    }
+}
+
+impl std::str::FromStr for FaultSpec {
+    type Err = anyhow::Error;
+
+    /// Parse `none`, or a `;`-separated list of
+    /// `crash(at=300,replica=0,pool=relaxed,inst=0,down=60,notice=5)` and
+    /// `mtbf(mean=600,mttr=60,notice=0)` terms (keys optional, any order;
+    /// at most one `mtbf` term).
+    fn from_str(name: &str) -> anyhow::Result<FaultSpec> {
+        let name = name.trim();
+        if name.is_empty() || name == "none" {
+            return Ok(FaultSpec::none());
+        }
+        let mut spec = FaultSpec::none();
+        for term in name.split(';').filter(|t| !t.trim().is_empty()) {
+            let term = term.trim();
+            if let Some(body) = term
+                .strip_prefix("crash(")
+                .and_then(|s| s.strip_suffix(')'))
+            {
+                let mut ev = CrashEvent {
+                    at: f64::NAN,
+                    replica: 0,
+                    pool: FaultPool::Relaxed,
+                    inst: 0,
+                    down_s: 60.0,
+                    notice_s: 0.0,
+                };
+                for (k, v) in kv_pairs(body, "crash")? {
+                    match k {
+                        "at" => ev.at = v.parse()?,
+                        "replica" => ev.replica = v.parse()?,
+                        "pool" => ev.pool = v.parse()?,
+                        "inst" => ev.inst = v.parse()?,
+                        "down" | "down_s" => ev.down_s = v.parse()?,
+                        "notice" | "notice_s" => ev.notice_s = v.parse()?,
+                        _ => anyhow::bail!("unknown crash parameter `{k}`"),
+                    }
+                }
+                anyhow::ensure!(
+                    ev.at.is_finite() && ev.at >= 0.0,
+                    "crash needs at=<seconds>"
+                );
+                anyhow::ensure!(ev.down_s > 0.0, "down must be positive");
+                anyhow::ensure!(ev.notice_s >= 0.0, "notice must be >= 0");
+                spec.crashes.push(ev);
+            } else if let Some(body) = term
+                .strip_prefix("mtbf(")
+                .and_then(|s| s.strip_suffix(')'))
+            {
+                anyhow::ensure!(
+                    spec.mtbf.is_none(),
+                    "at most one mtbf term"
+                );
+                let mut m = MtbfSpec {
+                    mean_s: f64::NAN,
+                    mttr_s: 60.0,
+                    notice_s: 0.0,
+                };
+                for (k, v) in kv_pairs(body, "mtbf")? {
+                    match k {
+                        "mean" | "mean_s" => m.mean_s = v.parse()?,
+                        "mttr" | "mttr_s" => m.mttr_s = v.parse()?,
+                        "notice" | "notice_s" => m.notice_s = v.parse()?,
+                        _ => anyhow::bail!("unknown mtbf parameter `{k}`"),
+                    }
+                }
+                anyhow::ensure!(
+                    m.mean_s.is_finite() && m.mean_s > 0.0,
+                    "mtbf needs mean=<seconds> > 0"
+                );
+                anyhow::ensure!(m.mttr_s > 0.0, "mttr must be positive");
+                anyhow::ensure!(m.notice_s >= 0.0, "notice must be >= 0");
+                spec.mtbf = Some(m);
+            } else {
+                anyhow::bail!("unknown fault term `{term}`");
+            }
+        }
+        Ok(spec)
+    }
+}
+
+impl std::fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_none() {
+            return f.write_str("none");
+        }
+        let mut first = true;
+        for c in &self.crashes {
+            if !first {
+                f.write_str(";")?;
+            }
+            write!(f, "{c}")?;
+            first = false;
+        }
+        if let Some(m) = &self.mtbf {
+            if !first {
+                f.write_str(";")?;
+            }
+            write!(f, "{m}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Fleet admission policy: how the top-level router picks a replica for
+/// each arriving request (DESIGN.md §3.9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Cycle through live replicas.
+    RoundRobin,
+    /// Least loaded (class-aware outstanding-work score) over all live
+    /// replicas.
+    #[default]
+    LeastLoaded,
+    /// Power-of-two-choices: sample two distinct live replicas from the
+    /// seeded RNG, keep the less loaded — O(1) with near-least-loaded
+    /// balance.
+    PowerOfTwo,
+}
+
+impl std::str::FromStr for RoutePolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(name: &str) -> anyhow::Result<RoutePolicy> {
+        match name {
+            "rr" | "round-robin" => Ok(RoutePolicy::RoundRobin),
+            "least" | "least-loaded" => Ok(RoutePolicy::LeastLoaded),
+            "p2c" | "power-of-two" => Ok(RoutePolicy::PowerOfTwo),
+            other => anyhow::bail!("unknown route policy `{other}`"),
+        }
+    }
+}
+
+impl std::fmt::Display for RoutePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            RoutePolicy::RoundRobin => "rr",
+            RoutePolicy::LeastLoaded => "least",
+            RoutePolicy::PowerOfTwo => "p2c",
+        })
+    }
+}
+
+/// Fleet shape (DESIGN.md §3.9): how many replica groups (each a full
+/// strict/relaxed cluster), the admission policy across them, and the
+/// cross-replica offline work-stealing batch (0 = stealing off).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetSpec {
+    pub replicas: usize,
+    pub route: RoutePolicy,
+    /// Max offline backlog entries a starved replica steals per pass.
+    pub steal_batch: usize,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec {
+            replicas: 1,
+            route: RoutePolicy::LeastLoaded,
+            steal_batch: 4,
+        }
+    }
+}
+
+impl FleetSpec {
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let d = Self::default();
+        Ok(FleetSpec {
+            replicas: v.get("replicas").as_usize().unwrap_or(d.replicas),
+            route: match v.get("route").as_str() {
+                Some(s) => s.parse()?,
+                None => d.route,
+            },
+            steal_batch: v
+                .get("steal_batch")
+                .as_usize()
+                .unwrap_or(d.steal_batch),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("route", Json::Str(self.route.to_string())),
+            ("steal_batch", Json::Num(self.steal_batch as f64)),
+        ])
+    }
+}
+
+impl std::str::FromStr for FleetSpec {
+    type Err = anyhow::Error;
+
+    /// Parse `single` (one replica), a bare replica count, or
+    /// `fleet(replicas=2,route=p2c,steal=4)` (keys optional, any order).
+    fn from_str(name: &str) -> anyhow::Result<FleetSpec> {
+        let name = name.trim();
+        if name == "single" {
+            return Ok(FleetSpec {
+                replicas: 1,
+                ..FleetSpec::default()
+            });
+        }
+        if let Ok(n) = name.parse::<usize>() {
+            anyhow::ensure!(n >= 1, "fleet needs at least one replica");
+            return Ok(FleetSpec {
+                replicas: n,
+                ..FleetSpec::default()
+            });
+        }
+        let Some(body) = name
+            .strip_prefix("fleet(")
+            .and_then(|s| s.strip_suffix(')'))
+        else {
+            anyhow::bail!("unknown fleet spec `{name}`");
+        };
+        let mut spec = FleetSpec::default();
+        for (k, v) in kv_pairs(body, "fleet")? {
+            match k {
+                "replicas" => spec.replicas = v.parse()?,
+                "route" => spec.route = v.parse()?,
+                "steal" | "steal_batch" => spec.steal_batch = v.parse()?,
+                _ => anyhow::bail!("unknown fleet parameter `{k}`"),
+            }
+        }
+        anyhow::ensure!(
+            spec.replicas >= 1,
+            "fleet needs at least one replica"
+        );
+        Ok(spec)
+    }
+}
+
+impl std::fmt::Display for FleetSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "fleet(replicas={},route={},steal={})",
+            self.replicas, self.route, self.steal_batch
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1191,6 +1617,108 @@ mod tests {
         std::fs::write(&path, "{}").unwrap();
         let cfg = ServingConfig::from_file(&path).unwrap();
         assert_eq!(cfg.chunk_tokens, ChunkMode::Auto); // default on
+    }
+
+    #[test]
+    fn fault_spec_parse_display_roundtrip() {
+        assert_eq!("none".parse::<FaultSpec>().unwrap(), FaultSpec::none());
+        assert_eq!("".parse::<FaultSpec>().unwrap(), FaultSpec::none());
+        let s: FaultSpec =
+            "crash(at=300,replica=1,pool=strict,inst=0,down=45,notice=5);\
+             mtbf(mean=600,mttr=60,notice=2)"
+                .parse()
+                .unwrap();
+        assert_eq!(
+            s.crashes,
+            vec![CrashEvent {
+                at: 300.0,
+                replica: 1,
+                pool: FaultPool::Strict,
+                inst: 0,
+                down_s: 45.0,
+                notice_s: 5.0,
+            }]
+        );
+        assert_eq!(
+            s.mtbf,
+            Some(MtbfSpec {
+                mean_s: 600.0,
+                mttr_s: 60.0,
+                notice_s: 2.0,
+            })
+        );
+        // Defaults fill absent keys.
+        let d: FaultSpec = "crash(at=10)".parse().unwrap();
+        assert_eq!(d.crashes[0].pool, FaultPool::Relaxed);
+        assert_eq!(d.crashes[0].down_s, 60.0);
+        // Display emits a form that parses back to the same value.
+        for spec in [FaultSpec::none(), s.clone(), d] {
+            assert_eq!(
+                spec.to_string().parse::<FaultSpec>().unwrap(),
+                spec
+            );
+        }
+        assert!("crash(down=60)".parse::<FaultSpec>().is_err()); // no at
+        assert!("crash(at=10,down=0)".parse::<FaultSpec>().is_err());
+        assert!("crash(at=10,pool=gpu)".parse::<FaultSpec>().is_err());
+        assert!("mtbf(mttr=60)".parse::<FaultSpec>().is_err()); // no mean
+        assert!("mtbf(mean=10);mtbf(mean=20)".parse::<FaultSpec>().is_err());
+        assert!("meteor(at=10)".parse::<FaultSpec>().is_err());
+    }
+
+    #[test]
+    fn fault_spec_json_roundtrip() {
+        let s: FaultSpec =
+            "crash(at=120,inst=1,notice=3);mtbf(mean=900,mttr=30)"
+                .parse()
+                .unwrap();
+        assert_eq!(FaultSpec::from_json(&s.to_json()).unwrap(), s);
+        let none = FaultSpec::none();
+        assert_eq!(FaultSpec::from_json(&none.to_json()).unwrap(), none);
+    }
+
+    #[test]
+    fn fleet_spec_parse_display_roundtrip() {
+        assert_eq!(
+            "single".parse::<FleetSpec>().unwrap(),
+            FleetSpec {
+                replicas: 1,
+                ..FleetSpec::default()
+            }
+        );
+        assert_eq!("3".parse::<FleetSpec>().unwrap().replicas, 3);
+        let s: FleetSpec =
+            "fleet(replicas=2,route=p2c,steal=8)".parse().unwrap();
+        assert_eq!(
+            s,
+            FleetSpec {
+                replicas: 2,
+                route: RoutePolicy::PowerOfTwo,
+                steal_batch: 8,
+            }
+        );
+        for spec in [FleetSpec::default(), s] {
+            assert_eq!(
+                spec.to_string().parse::<FleetSpec>().unwrap(),
+                spec
+            );
+        }
+        assert!("0".parse::<FleetSpec>().is_err());
+        assert!("fleet(replicas=0)".parse::<FleetSpec>().is_err());
+        assert!("fleet(route=random)".parse::<FleetSpec>().is_err());
+        assert!("armada(replicas=2)".parse::<FleetSpec>().is_err());
+        for r in ["rr", "least", "p2c"] {
+            let p: RoutePolicy = r.parse().unwrap();
+            assert_eq!(p.to_string(), r);
+        }
+    }
+
+    #[test]
+    fn fleet_spec_json_roundtrip() {
+        let s: FleetSpec = "fleet(replicas=4,route=rr,steal=0)"
+            .parse()
+            .unwrap();
+        assert_eq!(FleetSpec::from_json(&s.to_json()).unwrap(), s);
     }
 
     #[test]

@@ -21,6 +21,12 @@ pub struct Router {
     drain_relaxed: Option<usize>,
     /// Strict instance currently draining (excluded from `route_decode`).
     drain_strict: Option<usize>,
+    /// Crashed relaxed instances (fleet fault model): hard-excluded from
+    /// routing — unlike the drain slot, several may be down at once and a
+    /// down instance is never a fallback target.
+    down_relaxed: Vec<bool>,
+    /// Crashed strict instances.
+    down_strict: Vec<bool>,
 }
 
 impl Router {
@@ -31,6 +37,8 @@ impl Router {
             strict_load: vec![0; strict],
             drain_relaxed: None,
             drain_strict: None,
+            down_relaxed: vec![false; relaxed],
+            down_strict: vec![false; strict],
         }
     }
 
@@ -53,12 +61,42 @@ impl Router {
         self.drain_strict = idx;
     }
 
+    /// Mark a relaxed instance crashed (`true`) or recovered (`false`).
+    /// A crashed instance also sheds its phantom load: nothing routed to
+    /// it survives the crash, so the slot restarts empty on recovery.
+    pub fn set_down_relaxed(&mut self, idx: usize, down: bool) {
+        self.down_relaxed[idx] = down;
+        if down {
+            self.relaxed_load[idx] = 0;
+        }
+    }
+
+    /// Mark a strict instance crashed or recovered.
+    pub fn set_down_strict(&mut self, idx: usize, down: bool) {
+        self.down_strict[idx] = down;
+        if down {
+            self.strict_load[idx] = 0;
+        }
+    }
+
+    /// Any live (non-crashed) relaxed instance left?
+    pub fn any_relaxed_up(&self) -> bool {
+        self.down_relaxed.iter().any(|&d| !d)
+    }
+
+    /// Any live strict instance left?
+    pub fn any_strict_up(&self) -> bool {
+        self.down_strict.iter().any(|&d| !d)
+    }
+
     /// Role flip relaxed→strict: retire the tail relaxed load slot and open
     /// a fresh strict one. The flipped instance carries no load (drained).
     pub fn flip_relaxed_to_strict(&mut self) {
         assert!(self.relaxed_load.len() > 1, "last relaxed instance");
+        assert!(!self.down_relaxed.pop().unwrap(), "flip of a down instance");
         self.relaxed_load.pop();
         self.strict_load.push(0);
+        self.down_strict.push(false);
         self.drain_relaxed = None;
     }
 
@@ -66,14 +104,17 @@ impl Router {
     /// a fresh relaxed one.
     pub fn flip_strict_to_relaxed(&mut self) {
         assert!(self.strict_load.len() > 1, "last strict instance");
+        assert!(!self.down_strict.pop().unwrap(), "flip of a down instance");
         self.strict_load.pop();
         self.relaxed_load.push(0);
+        self.down_relaxed.push(false);
         self.drain_strict = None;
     }
 
     /// Pick the relaxed instance for a prefill of `tokens`, recording load.
     pub fn route_prefill(&mut self, tokens: usize) -> usize {
-        let idx = argmin_excl(&self.relaxed_load, self.drain_relaxed);
+        let idx =
+            argmin_excl(&self.relaxed_load, self.drain_relaxed, &self.down_relaxed);
         self.relaxed_load[idx] += tokens as u64;
         idx
     }
@@ -86,7 +127,8 @@ impl Router {
 
     /// Pick the strict instance for a decode of `kv_tokens`, recording load.
     pub fn route_decode(&mut self, kv_tokens: usize) -> usize {
-        let idx = argmin_excl(&self.strict_load, self.drain_strict);
+        let idx =
+            argmin_excl(&self.strict_load, self.drain_strict, &self.down_strict);
         self.strict_load[idx] += kv_tokens as u64;
         idx
     }
@@ -103,11 +145,18 @@ impl Router {
     }
 }
 
-/// Least-loaded index, skipping `excl` unless it is the only instance.
-fn argmin_excl(v: &[u64], excl: Option<usize>) -> usize {
+/// Least-loaded index, skipping `excl` unless it is the only live
+/// instance, and never choosing a crashed (`down[i]`) instance. The last
+/// live instance is always routable — crashing the final instance of a
+/// pool is refused upstream (fleet fault injection skips it).
+fn argmin_excl(v: &[u64], excl: Option<usize>, down: &[bool]) -> usize {
+    let live = down.iter().filter(|&&d| !d).count();
     let mut best: Option<usize> = None;
     for (i, &x) in v.iter().enumerate() {
-        if Some(i) == excl && v.len() > 1 {
+        if down[i] {
+            continue;
+        }
+        if Some(i) == excl && live > 1 {
             continue;
         }
         match best {
@@ -115,7 +164,7 @@ fn argmin_excl(v: &[u64], excl: Option<usize>) -> usize {
             _ => best = Some(i),
         }
     }
-    best.expect("at least one instance")
+    best.expect("at least one live instance")
 }
 
 #[cfg(test)]
@@ -197,6 +246,38 @@ mod tests {
         r.flip_strict_to_relaxed();
         assert_eq!(r.relaxed_count(), 2);
         assert_eq!(r.strict_count(), 1);
+    }
+
+    #[test]
+    fn down_instances_are_hard_excluded() {
+        let mut r = Router::new(3, 2);
+        r.route_prefill(100); // load instance 0
+        r.set_down_relaxed(1, true);
+        r.set_down_relaxed(2, true);
+        // Both lighter instances are down — routing must fall back to 0.
+        for _ in 0..3 {
+            assert_eq!(r.route_prefill(10), 0);
+        }
+        r.set_down_relaxed(1, false);
+        assert_eq!(r.route_prefill(1), 1); // recovered slot restarts empty
+        // Down beats drain: a drained-but-live instance is still the
+        // fallback when every other instance crashed.
+        r.set_down_strict(0, true);
+        r.set_drain_strict(Some(1));
+        assert_eq!(r.route_decode(10), 1);
+        assert!(r.any_strict_up());
+        r.set_down_strict(1, true);
+        assert!(!r.any_strict_up());
+    }
+
+    #[test]
+    fn down_clears_phantom_load() {
+        let mut r = Router::new(2, 1);
+        let i = r.route_prefill(1000);
+        r.set_down_relaxed(i, true);
+        r.set_down_relaxed(i, false);
+        // Crash shed the 1000-token load; the slot competes as empty.
+        assert_eq!(r.route_prefill(1), i);
     }
 
     #[test]

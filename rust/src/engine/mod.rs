@@ -443,6 +443,11 @@ impl<'rt> EngineExecutor<'rt> {
                 | Action::PrefixEvict { .. }
                 | Action::RepartitionPlan { .. }
                 | Action::RoleChange { .. } => {}
+                // Fleet fault injection is a simulator-only facility; this
+                // substrate never receives crash events (DESIGN.md §3.9
+                // divergence table). Per-request teardown, were one ever
+                // delivered, rides the Evict/TransferCancel actions above.
+                Action::InstanceDown { .. } | Action::InstanceUp { .. } => {}
             }
         }
     }

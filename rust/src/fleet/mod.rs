@@ -1,0 +1,854 @@
+//! Fleet layer: N replica groups under one top-level router, with fault
+//! injection and cross-replica work stealing (DESIGN.md §3.9).
+//!
+//! Each replica is a full [`SchedulerCore`] cluster — the same §3.4
+//! decision loop the single-cluster simulator and the real engine run.
+//! The fleet owns a discrete-event heap whose events carry a replica tag;
+//! replica-local events (arrivals, step ends, transfer chunks) replay the
+//! [`crate::scheduler::VirtualExecutor`] semantics verbatim, and three
+//! fleet-only kinds inject the fault model: `CrashNotice` (spot-instance
+//! style advance warning → KV evacuation through the recoverable-eviction
+//! transport paths), `Crash` (KV and in-flight step lost; online residents
+//! re-route for full recompute, offline residents return to the backlog),
+//! and `Recover` (the instance rejoins its pool empty).
+//!
+//! With one replica and no faults the fleet is *bit-identical* to the
+//! single-cluster path: arrivals get the same event ties, the router
+//! short-circuits to replica 0, stealing never engages, and the emitted
+//! action stream matches `VirtualExecutor`'s — asserted by
+//! `tests/fleet_properties.rs` the same way the scheduler differential
+//! tests pin the executor pair.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::config::{CrashEvent, FaultPool, FaultSpec, FleetSpec, RoutePolicy};
+use crate::metrics::{FleetReport, Recorder, Report};
+use crate::request::{Class, RequestId};
+use crate::scheduler::{Action, InstanceRef, JobId, SchedulerCore};
+use crate::sim::SimConfig;
+use crate::trace::Trace;
+use crate::util::rng::Pcg;
+use crate::util::stats::Summary;
+
+/// Dedicated RNG stream base for stochastic fault schedules — disjoint
+/// from the core's decision stream (9090) so fault sampling never
+/// perturbs scheduling randomness.
+const FAULT_STREAM: u64 = 0xF1EE7;
+/// Dedicated RNG stream for the power-of-two-choices router.
+const ROUTE_STREAM: u64 = 0xF1EE8;
+/// Offline requests queue cheaply (latency-tolerant), so they count less
+/// toward a replica's outstanding-load score than online requests.
+const OFFLINE_LOAD_WEIGHT: f64 = 0.2;
+/// Stochastic crashes pre-generated per instance — a safety cap, far above
+/// what any plausible MTBF produces over a trace horizon.
+const MAX_FAULTS_PER_INSTANCE: usize = 256;
+
+/// Fleet simulation parameters: the per-replica simulator config plus the
+/// fleet topology and the fault schedule.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub sim: SimConfig,
+    pub fleet: FleetSpec,
+    pub fault: FaultSpec,
+}
+
+impl FleetConfig {
+    pub fn new(sim: SimConfig) -> Self {
+        FleetConfig {
+            sim,
+            fleet: FleetSpec::default(),
+            fault: FaultSpec::none(),
+        }
+    }
+}
+
+/// Fleet simulation outcome.
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    /// Merged per-request report across all replicas (each request is
+    /// read from its *assigned* replica's final state).
+    pub report: Report,
+    /// Fault-injection, availability, and work-stealing accounting.
+    pub fleet: FleetReport,
+    /// Simulated end time.
+    pub end_time: f64,
+}
+
+// ------------------------------------------------------------- event heap
+
+/// Fleet event kinds: the three replica-local kinds of
+/// `scheduler::EventKind` with a replica tag, plus the fault triple.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum FleetEventKind {
+    Arrival(RequestId),
+    RelaxedStep { replica: usize, inst: usize, seq: u64 },
+    StrictStep { replica: usize, inst: usize, seq: u64 },
+    TransferChunk { replica: usize, job: JobId, seq: u64 },
+    CrashNotice { replica: usize, inst: InstanceRef },
+    Crash { replica: usize, inst: InstanceRef, down_s: f64 },
+    Recover { replica: usize, inst: InstanceRef },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct FleetEvent {
+    time: f64,
+    tie: u64,
+    kind: FleetEventKind,
+}
+
+impl PartialEq for FleetEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.tie == other.tie
+    }
+}
+
+impl Eq for FleetEvent {}
+
+impl Ord for FleetEvent {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse order: BinaryHeap is a max-heap, we want earliest first —
+        // the exact (time, insertion-tie) order of `scheduler::EventQueue`,
+        // so a single-replica zero-fault fleet replays the same schedule.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.tie.cmp(&self.tie))
+    }
+}
+
+impl PartialOrd for FleetEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+// ------------------------------------------------------------ fleet router
+
+/// Top-level class-aware admission router over the replica groups.
+///
+/// Tracks a per-replica outstanding-load score (online requests weigh
+/// 1.0, offline [`OFFLINE_LOAD_WEIGHT`]) charged at assignment, moved on
+/// steal, and discharged when the replica's action stream reports
+/// [`Action::Complete`].
+#[derive(Debug)]
+struct FleetRouter {
+    policy: RoutePolicy,
+    load: Vec<f64>,
+    rr_next: usize,
+    rng: Pcg,
+}
+
+impl FleetRouter {
+    fn new(policy: RoutePolicy, replicas: usize, seed: u64) -> Self {
+        FleetRouter {
+            policy,
+            load: vec![0.0; replicas],
+            rr_next: 0,
+            rng: Pcg::new(seed, ROUTE_STREAM),
+        }
+    }
+
+    /// Pick a replica from `live` (non-empty, ascending indices) and
+    /// charge it `weight`.
+    fn assign(&mut self, live: &[usize], weight: f64) -> usize {
+        debug_assert!(!live.is_empty(), "routing needs a live replica");
+        let pick = if live.len() == 1 {
+            // Short-circuit without an RNG draw so fleets that only
+            // *transiently* have one live replica stay deterministic
+            // relative to their own schedule, and single-replica fleets
+            // never touch the route stream at all.
+            live[0]
+        } else {
+            match self.policy {
+                RoutePolicy::RoundRobin => {
+                    let r = live[self.rr_next % live.len()];
+                    self.rr_next = (self.rr_next + 1) % live.len();
+                    r
+                }
+                RoutePolicy::LeastLoaded => self.argmin(live),
+                RoutePolicy::PowerOfTwo => {
+                    let a = live[self.rng.below(live.len())];
+                    let b = loop {
+                        let c = live[self.rng.below(live.len())];
+                        if c != a {
+                            break c;
+                        }
+                    };
+                    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+                    // Ties break toward the lower index, like least-loaded.
+                    if self.load[hi] < self.load[lo] {
+                        hi
+                    } else {
+                        lo
+                    }
+                }
+            }
+        };
+        self.load[pick] += weight;
+        pick
+    }
+
+    /// Least-loaded replica among `live`; ties break toward the lowest
+    /// index (deterministic).
+    fn argmin(&self, live: &[usize]) -> usize {
+        let mut best = live[0];
+        for &r in &live[1..] {
+            if self.load[r] < self.load[best] {
+                best = r;
+            }
+        }
+        best
+    }
+
+    fn transfer(&mut self, from: usize, to: usize, weight: f64) {
+        self.load[from] = (self.load[from] - weight).max(0.0);
+        self.load[to] += weight;
+    }
+
+    fn complete(&mut self, replica: usize, weight: f64) {
+        self.load[replica] = (self.load[replica] - weight).max(0.0);
+    }
+}
+
+// --------------------------------------------------------------- downtime
+
+/// One instance-down window, closed on recovery (or at end of run).
+#[derive(Debug, Clone, Copy)]
+struct DownWindow {
+    replica: usize,
+    inst: InstanceRef,
+    start: f64,
+    end: Option<f64>,
+}
+
+// ------------------------------------------------------------------ fleet
+
+/// A fleet of replica clusters under one router, with fault injection and
+/// offline work stealing. Construct with [`Fleet::new`], optionally enable
+/// `log`, then [`Fleet::run`].
+#[derive(Debug)]
+pub struct Fleet {
+    cfg: FleetConfig,
+    replicas: Vec<SchedulerCore>,
+    heap: BinaryHeap<FleetEvent>,
+    next_tie: u64,
+    now: f64,
+    horizon: f64,
+    router: FleetRouter,
+    /// Owning replica per request id (updated on steal).
+    assigned: Vec<usize>,
+    /// Router load weight per request id.
+    weights: Vec<f64>,
+    windows: Vec<DownWindow>,
+    total_instances: usize,
+    skipped_faults: u64,
+    steals: u64,
+    stolen_tokens: u64,
+    /// When `Some`, every (replica, action) pair the cores emit is
+    /// appended — the observable stream the fleet property tests assert.
+    pub log: Option<Vec<(usize, Action)>>,
+}
+
+impl Fleet {
+    pub fn new(trace: &Trace, cfg: &FleetConfig) -> Self {
+        assert!(cfg.fleet.replicas >= 1, "fleet needs at least one replica");
+        let n = cfg.fleet.replicas;
+        // Every replica core holds the full request table so ids index
+        // directly; only the assigned replica ever sees a given arrival
+        // (or adopts it via steal_in).
+        let replicas: Vec<SchedulerCore> = (0..n)
+            .map(|_| SchedulerCore::new(trace.requests.clone(), cfg.sim.core()))
+            .collect();
+        let total_instances = n
+            * (replicas[0].cluster.relaxed.len()
+                + replicas[0].cluster.strict.len());
+
+        let mut heap = BinaryHeap::new();
+        let mut next_tie = 0u64;
+        // Arrivals first, in trace order — ties 0..len match the
+        // single-cluster `VirtualExecutor` exactly.
+        for r in &trace.requests {
+            heap.push(FleetEvent {
+                time: r.arrival,
+                tie: next_tie,
+                kind: FleetEventKind::Arrival(r.id),
+            });
+            next_tie += 1;
+        }
+
+        let horizon = trace.duration() + cfg.sim.drain_s;
+        let weights: Vec<f64> = trace
+            .requests
+            .iter()
+            .map(|r| match r.class {
+                Class::Online => 1.0,
+                Class::Offline => OFFLINE_LOAD_WEIGHT,
+            })
+            .collect();
+
+        let mut fleet = Fleet {
+            router: FleetRouter::new(cfg.fleet.route, n, cfg.sim.seed),
+            cfg: cfg.clone(),
+            replicas,
+            heap,
+            next_tie,
+            now: 0.0,
+            horizon,
+            assigned: vec![usize::MAX; trace.requests.len()],
+            weights,
+            windows: Vec::new(),
+            total_instances,
+            skipped_faults: 0,
+            steals: 0,
+            stolen_tokens: 0,
+            log: None,
+        };
+        fleet.schedule_faults();
+        fleet
+    }
+
+    fn push(&mut self, time: f64, kind: FleetEventKind) {
+        debug_assert!(time.is_finite(), "non-finite fleet event time");
+        let tie = self.next_tie;
+        self.next_tie += 1;
+        self.heap.push(FleetEvent { time, tie, kind });
+    }
+
+    /// Schedule the fault plan: explicit [`CrashEvent`]s verbatim, then a
+    /// stochastic schedule pre-generated per instance from a dedicated
+    /// seeded RNG stream (exponential up-gaps, fixed MTTR) — two runs with
+    /// the same seed inject byte-identical faults.
+    fn schedule_faults(&mut self) {
+        let crashes = self.cfg.fault.crashes.clone();
+        for c in &crashes {
+            self.schedule_crash(c);
+        }
+        let Some(mtbf) = self.cfg.fault.mtbf else {
+            return;
+        };
+        let n_relaxed = self.replicas[0].cluster.relaxed.len();
+        let n_strict = self.replicas[0].cluster.strict.len();
+        for replica in 0..self.cfg.fleet.replicas {
+            for (pool, count) in [
+                (FaultPool::Relaxed, n_relaxed),
+                (FaultPool::Strict, n_strict),
+            ] {
+                for inst in 0..count {
+                    let stream = FAULT_STREAM
+                        + (replica as u64) * 1024
+                        + if pool == FaultPool::Strict { 512 } else { 0 }
+                        + inst as u64;
+                    let mut rng = Pcg::new(self.cfg.sim.seed, stream);
+                    let mut t = rng.exp(1.0 / mtbf.mean_s);
+                    let mut scheduled = 0;
+                    while t < self.horizon
+                        && scheduled < MAX_FAULTS_PER_INSTANCE
+                    {
+                        self.schedule_crash(&CrashEvent {
+                            at: t,
+                            replica,
+                            pool,
+                            inst,
+                            down_s: mtbf.mttr_s,
+                            notice_s: mtbf.notice_s,
+                        });
+                        scheduled += 1;
+                        t += mtbf.mttr_s + rng.exp(1.0 / mtbf.mean_s);
+                    }
+                }
+            }
+        }
+    }
+
+    fn schedule_crash(&mut self, c: &CrashEvent) {
+        if c.replica >= self.cfg.fleet.replicas {
+            self.skipped_faults += 1;
+            return;
+        }
+        let inst = match c.pool {
+            FaultPool::Relaxed => InstanceRef::Relaxed(c.inst),
+            FaultPool::Strict => InstanceRef::Strict(c.inst),
+        };
+        if c.notice_s > 0.0 && c.at - c.notice_s > 0.0 {
+            self.push(
+                c.at - c.notice_s,
+                FleetEventKind::CrashNotice {
+                    replica: c.replica,
+                    inst,
+                },
+            );
+        }
+        self.push(
+            c.at,
+            FleetEventKind::Crash {
+                replica: c.replica,
+                inst,
+                down_s: c.down_s.max(1e-3),
+            },
+        );
+    }
+
+    /// Replay one core's action stream on the fleet clock — the
+    /// `VirtualExecutor::apply` semantics with a replica tag — and
+    /// discharge router load on completions.
+    fn apply(&mut self, replica: usize, actions: Vec<Action>) {
+        for a in &actions {
+            match *a {
+                Action::StartStep {
+                    inst,
+                    predicted_latency,
+                    seq,
+                    ..
+                } => {
+                    let kind = match inst {
+                        InstanceRef::Relaxed(i) => FleetEventKind::RelaxedStep {
+                            replica,
+                            inst: i,
+                            seq,
+                        },
+                        InstanceRef::Strict(i) => FleetEventKind::StrictStep {
+                            replica,
+                            inst: i,
+                            seq,
+                        },
+                    };
+                    self.push(self.now + predicted_latency, kind);
+                }
+                Action::Preempt { inst, delay, seq } => {
+                    self.push(
+                        self.now + delay,
+                        FleetEventKind::RelaxedStep {
+                            replica,
+                            inst,
+                            seq,
+                        },
+                    );
+                }
+                Action::TransferChunk {
+                    job,
+                    predicted_latency,
+                    seq,
+                    ..
+                } => {
+                    self.push(
+                        self.now + predicted_latency,
+                        FleetEventKind::TransferChunk { replica, job, seq },
+                    );
+                }
+                Action::Complete { req } => {
+                    self.router
+                        .complete(replica, self.weights[req as usize]);
+                }
+                _ => {}
+            }
+        }
+        if let Some(log) = &mut self.log {
+            log.extend(actions.into_iter().map(|a| (replica, a)));
+        }
+    }
+
+    /// Replicas whose relaxed pool (the admission side) has a live
+    /// instance. Never empty: the crash skip rule refuses to take down the
+    /// last live instance of a pool.
+    fn live_replicas(&self) -> Vec<usize> {
+        let live: Vec<usize> = (0..self.replicas.len())
+            .filter(|&r| self.replicas[r].cluster.router.any_relaxed_up())
+            .collect();
+        debug_assert!(!live.is_empty(), "fault injection kept one live");
+        live
+    }
+
+    fn on_arrival(&mut self, rid: RequestId) {
+        let live = self.live_replicas();
+        let replica = self.router.assign(&live, self.weights[rid as usize]);
+        self.assigned[rid as usize] = replica;
+        let actions = self.replicas[replica].on_arrival(self.now, rid);
+        self.apply(replica, actions);
+    }
+
+    /// Would crashing `inst` leave its pool with no live instance?
+    fn is_last_live(&self, replica: usize, inst: InstanceRef) -> bool {
+        let cluster = &self.replicas[replica].cluster;
+        match inst {
+            InstanceRef::Relaxed(_) => {
+                cluster.relaxed.iter().filter(|i| !i.down).count() <= 1
+            }
+            InstanceRef::Strict(_) => {
+                cluster.strict.iter().filter(|i| !i.down).count() <= 1
+            }
+        }
+    }
+
+    /// Does `inst` currently exist in `replica`'s pool vectors? Elastic
+    /// repartitioning resizes pools mid-run, so a fault scheduled against
+    /// the initial topology can dangle.
+    fn in_range(&self, replica: usize, inst: InstanceRef) -> bool {
+        let cluster = &self.replicas[replica].cluster;
+        match inst {
+            InstanceRef::Relaxed(i) => i < cluster.relaxed.len(),
+            InstanceRef::Strict(i) => i < cluster.strict.len(),
+        }
+    }
+
+    fn instance_flags(
+        &self,
+        replica: usize,
+        inst: InstanceRef,
+    ) -> (bool, bool) {
+        let cluster = &self.replicas[replica].cluster;
+        match inst {
+            InstanceRef::Relaxed(i) => {
+                (cluster.relaxed[i].down, cluster.relaxed[i].evacuating)
+            }
+            InstanceRef::Strict(i) => {
+                (cluster.strict[i].down, cluster.strict[i].evacuating)
+            }
+        }
+    }
+
+    fn on_crash_notice(&mut self, replica: usize, inst: InstanceRef) {
+        if !self.in_range(replica, inst) || self.is_last_live(replica, inst) {
+            // Refused up front: don't evacuate an instance we won't kill.
+            return;
+        }
+        let (down, evacuating) = self.instance_flags(replica, inst);
+        if down || evacuating {
+            return;
+        }
+        let actions = self.replicas[replica].on_crash_notice(self.now, inst);
+        self.apply(replica, actions);
+    }
+
+    fn on_crash(&mut self, replica: usize, inst: InstanceRef, down_s: f64) {
+        let skip = !self.in_range(replica, inst)
+            || self.instance_flags(replica, inst).0
+            || self.is_last_live(replica, inst);
+        if skip {
+            self.skipped_faults += 1;
+            // A notice may have gone out before the skip condition arose
+            // (e.g. the *other* instance crashed in between): stand the
+            // evacuating instance back up or it stays excluded forever.
+            if self.in_range(replica, inst) {
+                let (down, evacuating) = self.instance_flags(replica, inst);
+                if !down && evacuating {
+                    let actions =
+                        self.replicas[replica].on_crash_averted(self.now, inst);
+                    self.apply(replica, actions);
+                }
+            }
+            return;
+        }
+        let actions = self.replicas[replica].on_instance_down(self.now, inst);
+        self.apply(replica, actions);
+        self.windows.push(DownWindow {
+            replica,
+            inst,
+            start: self.now,
+            end: None,
+        });
+        self.push(
+            self.now + down_s,
+            FleetEventKind::Recover { replica, inst },
+        );
+    }
+
+    fn on_recover(&mut self, replica: usize, inst: InstanceRef) {
+        if !self.in_range(replica, inst)
+            || !self.instance_flags(replica, inst).0
+        {
+            // The instance vanished in a repartition or was never downed
+            // (its crash was skipped); nothing to recover.
+            return;
+        }
+        let actions = self.replicas[replica].on_instance_up(self.now, inst);
+        self.apply(replica, actions);
+        for w in self.windows.iter_mut().rev() {
+            if w.replica == replica && w.inst == inst && w.end.is_none() {
+                w.end = Some(self.now);
+                break;
+            }
+        }
+    }
+
+    /// Opportunistic cross-replica offline work stealing: a replica whose
+    /// backlog is empty and whose relaxed pool has an idle live instance
+    /// steals up to `steal_batch` tail entries from the replica with the
+    /// deepest backlog. Deterministic (no RNG, fixed scan order) and
+    /// never engaged by a single-replica fleet.
+    fn try_steal(&mut self) {
+        if self.cfg.fleet.replicas < 2 || self.cfg.fleet.steal_batch == 0 {
+            return;
+        }
+        for thief in 0..self.replicas.len() {
+            if !self.replicas[thief].cluster.offline_backlog.is_empty() {
+                continue;
+            }
+            let hungry = self.replicas[thief]
+                .cluster
+                .relaxed
+                .iter()
+                .any(|i| i.accepts_work() && i.is_idle());
+            if !hungry {
+                continue;
+            }
+            // Deepest backlog wins; ties break toward the lowest index.
+            let victim = (0..self.replicas.len())
+                .filter(|&v| v != thief)
+                .max_by_key(|&v| {
+                    let depth =
+                        self.replicas[v].cluster.offline_backlog.len();
+                    (depth, std::cmp::Reverse(v))
+                });
+            let Some(victim) = victim else { continue };
+            // Leave the victim its FIFO head: stealing the whole backlog
+            // would just move the starvation.
+            for _ in 0..self.cfg.fleet.steal_batch {
+                if self.replicas[victim].cluster.offline_backlog.len() < 2 {
+                    break;
+                }
+                let Some((rid, state)) =
+                    self.replicas[victim].steal_out(self.now)
+                else {
+                    break;
+                };
+                self.steals += 1;
+                self.stolen_tokens += state.prompt_len as u64;
+                self.router.transfer(
+                    victim,
+                    thief,
+                    self.weights[rid as usize],
+                );
+                self.assigned[rid as usize] = thief;
+                let actions =
+                    self.replicas[thief].steal_in(self.now, rid, state);
+                self.apply(thief, actions);
+            }
+        }
+    }
+
+    /// Drive the fleet to completion and aggregate the outcome.
+    pub fn run(&mut self, trace: &Trace) -> FleetResult {
+        while let Some(ev) = self.heap.pop() {
+            if ev.time > self.horizon {
+                break;
+            }
+            self.now = ev.time;
+            match ev.kind {
+                FleetEventKind::Arrival(rid) => self.on_arrival(rid),
+                FleetEventKind::RelaxedStep { replica, inst, seq } => {
+                    let actions = self.replicas[replica].on_step_end(
+                        self.now,
+                        InstanceRef::Relaxed(inst),
+                        seq,
+                    );
+                    self.apply(replica, actions);
+                }
+                FleetEventKind::StrictStep { replica, inst, seq } => {
+                    let actions = self.replicas[replica].on_step_end(
+                        self.now,
+                        InstanceRef::Strict(inst),
+                        seq,
+                    );
+                    self.apply(replica, actions);
+                }
+                FleetEventKind::TransferChunk { replica, job, seq } => {
+                    let actions = self.replicas[replica]
+                        .on_transfer_progress(self.now, job, seq);
+                    self.apply(replica, actions);
+                }
+                FleetEventKind::CrashNotice { replica, inst } => {
+                    self.on_crash_notice(replica, inst);
+                }
+                FleetEventKind::Crash {
+                    replica,
+                    inst,
+                    down_s,
+                } => self.on_crash(replica, inst, down_s),
+                FleetEventKind::Recover { replica, inst } => {
+                    self.on_recover(replica, inst);
+                }
+            }
+            self.try_steal();
+        }
+        self.build_result(trace)
+    }
+
+    fn build_result(&mut self, trace: &Trace) -> FleetResult {
+        let end_time = self.now;
+        let duration = trace.duration().max(1e-9);
+
+        // Merge per-request outcomes from each request's assigned replica
+        // — the only replica whose copy ever advanced. Unrouted requests
+        // (the horizon passed before their arrival) are skipped entirely,
+        // matching what a single cluster would have seen.
+        let mut recorder = Recorder::new();
+        let mut accounting_errors = 0u64;
+        for r in &trace.requests {
+            let replica = self.assigned[r.id as usize];
+            if replica == usize::MAX {
+                continue;
+            }
+            let cluster = &self.replicas[replica].cluster;
+            let req = &cluster.requests[r.id as usize];
+            recorder.record(req);
+            // No request silently lost: unfinished ⇒ still tracked by some
+            // scheduling structure of its assigned replica.
+            if req.finished_at.is_none() && !cluster.holds(r.id) {
+                accounting_errors += 1;
+            }
+        }
+        let report = recorder.report(&self.cfg.sim.serving.slo, duration);
+
+        // Downtime + availability. Open windows (still down at the end)
+        // close at end_time.
+        let mut downtime_inst_s = 0.0;
+        for w in &self.windows {
+            downtime_inst_s += w.end.unwrap_or(end_time) - w.start;
+        }
+        let denom = (self.total_instances as f64) * end_time;
+        let availability = if denom > 0.0 {
+            (1.0 - downtime_inst_s / denom).clamp(0.0, 1.0)
+        } else {
+            1.0
+        };
+
+        // Online latency during failover: requests finishing while any
+        // instance was down anywhere in the fleet.
+        let in_window = |t: f64| {
+            self.windows
+                .iter()
+                .any(|w| t >= w.start && t <= w.end.unwrap_or(end_time))
+        };
+        let mut fo_ttft = Vec::new();
+        let mut fo_tpot = Vec::new();
+        for rec in recorder.records() {
+            if rec.class != Class::Online {
+                continue;
+            }
+            let Some(fin) = rec.finished_at else { continue };
+            if !in_window(fin) {
+                continue;
+            }
+            if let Some(t) = rec.ttft {
+                fo_ttft.push(t);
+            }
+            if let Some(t) = rec.avg_tpot {
+                fo_tpot.push(t);
+            }
+        }
+
+        let sum = |f: fn(&crate::scheduler::ClusterState) -> u64| {
+            self.replicas.iter().map(|c| f(&c.cluster)).sum::<u64>()
+        };
+        let fleet = FleetReport {
+            replicas: self.cfg.fleet.replicas,
+            crashes: sum(|c| c.crashes),
+            recoveries: sum(|c| c.recoveries),
+            skipped_faults: self.skipped_faults,
+            availability,
+            downtime_inst_s,
+            crash_evictions: sum(|c| c.crash_evictions),
+            recompute_tokens: sum(|c| c.crash_recompute_tokens),
+            evacuated_tokens: sum(|c| c.crash_evac_tokens),
+            steals: self.steals,
+            stolen_tokens: self.stolen_tokens,
+            failover_ttft: Summary::of(&fo_ttft),
+            failover_tpot: Summary::of(&fo_tpot),
+            accounting_errors,
+        };
+
+        FleetResult {
+            report,
+            fleet,
+            end_time,
+        }
+    }
+
+    /// Borrow a replica core (tests, post-run inspection).
+    pub fn replica(&self, idx: usize) -> &SchedulerCore {
+        &self.replicas[idx]
+    }
+}
+
+/// Run the fleet simulation of `trace` under `cfg`.
+pub fn simulate_fleet(trace: &Trace, cfg: &FleetConfig) -> FleetResult {
+    Fleet::new(trace, cfg).run(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+    use crate::coordinator::Policy;
+    use crate::trace::{datasets::DatasetProfile, generator::online_trace};
+
+    fn small_cfg() -> FleetConfig {
+        let mut serving = ServingConfig::preset_7b();
+        // Two instances per pool so a crash is never last-live-refused.
+        serving.cluster.relaxed_instances = 2;
+        serving.cluster.strict_instances = 2;
+        let mut sim = SimConfig::new(serving, Policy::Ooco);
+        sim.drain_s = 120.0;
+        FleetConfig::new(sim)
+    }
+
+    fn small_trace() -> Trace {
+        online_trace(DatasetProfile::azure_conv(), 1.0, 60.0, 11)
+    }
+
+    #[test]
+    fn single_replica_no_fault_drains() {
+        let trace = small_trace();
+        let res = simulate_fleet(&trace, &small_cfg());
+        assert_eq!(res.fleet.crashes, 0);
+        assert_eq!(res.fleet.steals, 0);
+        assert_eq!(res.fleet.accounting_errors, 0);
+        assert!((res.fleet.availability - 1.0).abs() < 1e-12);
+        assert!(res.report.online_finished > 0);
+    }
+
+    #[test]
+    fn scheduled_crash_fires_and_recovers() {
+        let trace = small_trace();
+        let mut cfg = small_cfg();
+        cfg.fault = "crash(at=10,inst=1,down=30)".parse().unwrap();
+        let res = simulate_fleet(&trace, &cfg);
+        assert_eq!(res.fleet.crashes, 1);
+        assert_eq!(res.fleet.recoveries, 1);
+        assert!(res.fleet.availability < 1.0);
+        assert!(res.fleet.downtime_inst_s > 29.0);
+        assert_eq!(res.fleet.accounting_errors, 0);
+    }
+
+    #[test]
+    fn crash_on_last_live_instance_is_skipped() {
+        let trace = small_trace();
+        let mut cfg = small_cfg();
+        // Two crashes against the same two-instance relaxed pool, the
+        // second while the first is still down: it must be refused.
+        cfg.fault = "crash(at=10,inst=0,down=50); crash(at=20,inst=1,down=50)"
+            .parse()
+            .unwrap();
+        let res = simulate_fleet(&trace, &cfg);
+        assert_eq!(res.fleet.crashes, 1);
+        assert_eq!(res.fleet.skipped_faults, 1);
+        assert_eq!(res.fleet.accounting_errors, 0);
+    }
+
+    #[test]
+    fn multi_replica_routes_and_steals() {
+        let trace = crate::trace::generator::offline_trace(
+            DatasetProfile::azure_code(),
+            4.0,
+            60.0,
+            7,
+        );
+        let mut cfg = small_cfg();
+        cfg.fleet.replicas = 2;
+        let res = simulate_fleet(&trace, &cfg);
+        assert_eq!(res.fleet.accounting_errors, 0);
+        assert!(res.report.offline_finished > 0);
+    }
+}

@@ -133,6 +133,14 @@ pub struct Instance {
     /// no new work (routing, gating admission, rescue, restore, migration
     /// pull) may target it; resident work finishes or is moved off.
     pub draining: bool,
+    /// Crashed (fleet fault model, DESIGN.md §3.9): the instance holds no
+    /// KV, runs no steps, and is excluded from every placement decision
+    /// until its recovery event flips this back.
+    pub down: bool,
+    /// Advance crash notice received (spot-instance style): resident
+    /// offline KV is being evacuated through the transport engine; the
+    /// instance takes no new work but finishes what it holds.
+    pub evacuating: bool,
     pub kv: KvManager,
     /// Prefix-sharing block cache over `kv` (DESIGN.md §3.7): maps hashed
     /// token-block chains to physical blocks resident on this instance.
@@ -180,6 +188,8 @@ impl Instance {
             id,
             role,
             draining: false,
+            down: false,
+            evacuating: false,
             kv: KvManager::new(kv_capacity_tokens, block_tokens),
             cache: PrefixIndex::new(block_tokens),
             online_queue: VecDeque::new(),
@@ -198,6 +208,13 @@ impl Instance {
 
     pub fn is_idle(&self) -> bool {
         self.step.is_none()
+    }
+
+    /// May new work (admission, rescue/restore, migration pulls, chunked
+    /// prefill starts) be placed here? Draining, evacuating, and crashed
+    /// instances all refuse.
+    pub fn accepts_work(&self) -> bool {
+        !self.draining && !self.down && !self.evacuating
     }
 
     pub fn has_decode_work(&self) -> bool {

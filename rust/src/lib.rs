@@ -13,6 +13,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod fleet;
 pub mod instance;
 pub mod kvcache;
 pub mod metrics;
@@ -40,19 +41,23 @@ pub mod util;
 /// ```
 pub mod prelude {
     pub use crate::config::{
-        ChunkMode, ClusterSpec, HardwareProfile, LinkSharing, LinkSpec,
-        ModelSpec, PoolPolicy, PrefixSpec, SchedulerParams, ServingConfig,
-        SloSpec, TransportSpec,
+        ChunkMode, ClusterSpec, CrashEvent, FaultPool, FaultSpec,
+        FleetSpec, HardwareProfile, LinkSharing, LinkSpec, ModelSpec,
+        MtbfSpec, PoolPolicy, PrefixSpec, RoutePolicy, SchedulerParams,
+        ServingConfig, SloSpec, TransportSpec,
     };
     pub use crate::coordinator::{Ablation, OverloadMode, Policy};
     pub use crate::engine::{
         serve_trace, serve_trace_with_runtime, EngineConfig, EngineExecutor,
         EngineOutcome,
     };
+    pub use crate::fleet::{
+        simulate_fleet, Fleet, FleetConfig, FleetResult,
+    };
     pub use crate::instance::{PoolRole, PrefillSegment, StepKind};
     pub use crate::metrics::{
-        ChunkReport, LinkReport, PoolReport, PrefixReport, Recorder, Report,
-        TransportReport,
+        ChunkReport, FleetReport, LinkReport, PoolReport, PrefixReport,
+        Recorder, Report, TransportReport,
     };
     pub use crate::perfmodel::{BatchStats, Bottleneck, PerfModel};
     pub use crate::pool::{LoadEstimator, PoolManager, PoolPlan};

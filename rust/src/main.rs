@@ -7,8 +7,9 @@
 //!   roofline   — query the performance model
 //!   trace      — generate and export a workload trace (JSON)
 
-use ooco::config::{ModelSpec, ServingConfig};
+use ooco::config::{FaultSpec, FleetSpec, ModelSpec, ServingConfig};
 use ooco::coordinator::Policy;
+use ooco::fleet::{simulate_fleet, FleetConfig};
 use ooco::sim::{simulate, SimConfig};
 use ooco::trace::datasets::DatasetProfile;
 use ooco::trace::generator::{offline_trace, online_trace};
@@ -67,6 +68,8 @@ USAGE: ooco <serve|simulate|sweep|roofline|trace> [--flags]
             [--chunk-tokens auto|off|<n>]
             [--prompt-profile dataset|'long-prompt(mean=6000,sigma=1.2,max=16384)']
             [--ablation full] [--overload best-effort|shed] [--seed 42]
+            [--fleet 2|'fleet(replicas=2,route=least,steal=4)']
+            [--fault 'crash(at=600,replica=0,pool=relaxed,inst=1,down=120,notice=30); mtbf(mean=900,mttr=60)']
             [--json-out result.json]
   sweep     --policy ooco --online-rate 0.5 --qps 1,2,4,8 --duration 600
             [--pool-policy static] [--relaxed 1 --strict 1]
@@ -159,6 +162,36 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         args.parse_flag("overload", ooco::coordinator::OverloadMode::BestEffort)?;
     cfg.ablation = args.parse_flag("ablation", ooco::coordinator::Ablation::full())?;
     cfg.seed = seed;
+
+    // Fleet mode: any multi-replica topology or fault schedule routes
+    // through the fleet layer (DESIGN.md §3.9). A single-replica
+    // zero-fault fleet is bit-identical to the plain path below.
+    let fleet_spec: FleetSpec = args.parse_flag("fleet", FleetSpec::default())?;
+    let fault: FaultSpec = args.parse_flag("fault", FaultSpec::none())?;
+    if fleet_spec.replicas > 1 || !fault.is_none() {
+        let fcfg = FleetConfig {
+            sim: cfg.clone(),
+            fleet: fleet_spec,
+            fault,
+        };
+        let res = simulate_fleet(&trace, &fcfg);
+        println!("{}", res.report.summary_line());
+        println!("{}", res.fleet.summary_line());
+        if let Some(path) = args.opt_str("json-out") {
+            let out = Json::obj(vec![
+                ("policy", Json::Str(cfg.policy.to_string())),
+                ("fleet_spec", fcfg.fleet.to_json()),
+                ("fault_spec", fcfg.fault.to_json()),
+                ("seed", Json::Num(seed as f64)),
+                ("report", res.report.to_json()),
+                ("fleet", res.fleet.to_json()),
+            ]);
+            std::fs::write(path, out.to_pretty())?;
+            println!("wrote machine-readable result to {path}");
+        }
+        return Ok(());
+    }
+
     let res = simulate(&trace, &cfg);
     println!("{}", res.report.summary_line());
     println!(

@@ -383,6 +383,88 @@ impl ChunkReport {
     }
 }
 
+/// Fleet-level metrics over one multi-replica run (DESIGN.md §3.9):
+/// fault-injection accounting, availability, cross-replica work stealing,
+/// and online latency during failover windows.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Replica groups in the fleet.
+    pub replicas: usize,
+    /// Instance crashes that actually fired.
+    pub crashes: u64,
+    /// Crashed instances that rejoined their pool.
+    pub recoveries: u64,
+    /// Scheduled/stochastic faults refused at fire time (target already
+    /// down, out of range after a repartition, or last live in its pool).
+    pub skipped_faults: u64,
+    /// `1 − downtime_inst_s / (total_instances · end_time)`.
+    pub availability: f64,
+    /// Instance-seconds spent down, summed over all down windows.
+    pub downtime_inst_s: f64,
+    /// Requests whose resident KV was lost to a crash.
+    pub crash_evictions: u64,
+    /// KV tokens lost to crashes and recomputed from scratch.
+    pub recompute_tokens: u64,
+    /// KV tokens spared by advance-notice evacuation (streamed to staging
+    /// or a live relaxed instance before the crash fired).
+    pub evacuated_tokens: u64,
+    /// Backlog entries moved between replicas by work stealing.
+    pub steals: u64,
+    /// Prompt tokens carried by stolen backlog entries.
+    pub stolen_tokens: u64,
+    /// TTFT of online requests finishing inside a down window.
+    pub failover_ttft: Summary,
+    /// Avg TPOT of online requests finishing inside a down window.
+    pub failover_tpot: Summary,
+    /// Unfinished requests not held by any scheduling structure of their
+    /// assigned replica — must stay 0 (no request silently lost).
+    pub accounting_errors: u64,
+}
+
+impl FleetReport {
+    /// One-line summary for bench output.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "fleet[{}r]: avail {:.4} ({:.1} inst·s down) | crashes {} rec {} skip {} | lost {} req / {} tok, evac {} tok | steals {} ({} tok) | failover ttft p99 {:.3}s | acct errs {}",
+            self.replicas,
+            self.availability,
+            self.downtime_inst_s,
+            self.crashes,
+            self.recoveries,
+            self.skipped_faults,
+            self.crash_evictions,
+            self.recompute_tokens,
+            self.evacuated_tokens,
+            self.steals,
+            self.stolen_tokens,
+            self.failover_ttft.p99,
+            self.accounting_errors,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("crashes", Json::Num(self.crashes as f64)),
+            ("recoveries", Json::Num(self.recoveries as f64)),
+            ("skipped_faults", Json::Num(self.skipped_faults as f64)),
+            ("availability", Json::Num(self.availability)),
+            ("downtime_inst_s", Json::Num(self.downtime_inst_s)),
+            ("crash_evictions", Json::Num(self.crash_evictions as f64)),
+            ("recompute_tokens", Json::Num(self.recompute_tokens as f64)),
+            ("evacuated_tokens", Json::Num(self.evacuated_tokens as f64)),
+            ("steals", Json::Num(self.steals as f64)),
+            ("stolen_tokens", Json::Num(self.stolen_tokens as f64)),
+            ("failover_ttft", self.failover_ttft.to_json()),
+            ("failover_tpot", self.failover_tpot.to_json()),
+            (
+                "accounting_errors",
+                Json::Num(self.accounting_errors as f64),
+            ),
+        ])
+    }
+}
+
 /// Outcome snapshot for one finished (or dropped) request.
 #[derive(Debug, Clone)]
 pub struct RequestRecord {

@@ -286,6 +286,13 @@ impl PoolManager {
         }
     }
 
+    /// Drop the in-flight transition without completing it (fleet fault
+    /// model, DESIGN.md §3.9: the transitioning instance crashed). No
+    /// duration is recorded; the next replan starts fresh.
+    pub fn abort_transition(&mut self) {
+        self.transition = None;
+    }
+
     /// Snapshot the pool-manager metrics at `now`.
     pub fn report(
         &self,

@@ -185,6 +185,13 @@ pub enum Action {
     /// `req` produced its final token (or was sacrificed under
     /// [`crate::coordinator::OverloadMode::Shed`]) and left the cluster.
     Complete { req: RequestId },
+    /// Fleet fault model (DESIGN.md §3.9): `inst` crashed, losing its KV
+    /// and the running step (notification). Every eviction the crash
+    /// forces arrives as an ordinary [`Action::Evict`]; executors holding
+    /// real resources tear down the instance's buffers.
+    InstanceDown { inst: InstanceRef },
+    /// `inst` recovered and rejoined its pool empty (notification).
+    InstanceUp { inst: InstanceRef },
 }
 
 impl Action {
@@ -196,6 +203,8 @@ impl Action {
             Action::RepartitionPlan { .. } => None,
             Action::RoleChange { .. } => None,
             Action::PrefixEvict { .. } => None,
+            Action::InstanceDown { .. } => None,
+            Action::InstanceUp { .. } => None,
             Action::Evict { req, .. }
             | Action::Migrate { req, .. }
             | Action::TransferStart { req, .. }

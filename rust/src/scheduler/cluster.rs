@@ -87,6 +87,18 @@ pub struct ClusterState {
     pub offloads: u64,
     /// Staged KV streams restored to a relaxed instance.
     pub restores: u64,
+    // ---- fleet fault-model accounting (DESIGN.md §3.9) ----
+    /// Instance crashes delivered to this cluster.
+    pub crashes: u64,
+    /// Instance recoveries delivered to this cluster.
+    pub recoveries: u64,
+    /// Requests whose KV a crash destroyed (forced recompute).
+    pub crash_evictions: u64,
+    /// KV tokens destroyed by crashes — the discard-and-recompute cost.
+    pub crash_recompute_tokens: u64,
+    /// KV tokens evacuated ahead of a crash (advance notice) through the
+    /// recoverable-eviction transport paths — recompute avoided.
+    pub crash_evac_tokens: u64,
     // ---- prefix-sharing cache accounting (DESIGN.md §3.7) ----
     /// Cache resolutions at prefill admission (requests with a declared
     /// shared prefix only).
@@ -193,6 +205,11 @@ impl ClusterState {
             rescues: 0,
             offloads: 0,
             restores: 0,
+            crashes: 0,
+            recoveries: 0,
+            crash_evictions: 0,
+            crash_recompute_tokens: 0,
+            crash_evac_tokens: 0,
             prefix_lookups: 0,
             prefix_hits: 0,
             prefix_hit_tokens_online: 0,
@@ -330,6 +347,25 @@ impl ClusterState {
                 .iter()
                 .chain(&self.strict)
                 .all(|i| i.workload_empty() && i.kv.pinned_blocks() == 0)
+    }
+
+    /// Is `rid` tracked by any scheduling structure — a queue, a resident
+    /// list, an in-flight transfer, the backlog, or host staging? The
+    /// fleet's no-lost-request accounting check: every unfinished request
+    /// must be held *somewhere*, crash or no crash.
+    pub fn holds(&self, rid: RequestId) -> bool {
+        let in_instance = |i: &Instance| {
+            i.online_queue.contains(&rid)
+                || i.prefilling.contains(&rid)
+                || i.offline_decoding.contains(&rid)
+                || i.online.contains(&rid)
+                || i.offline.contains(&rid)
+                || i.waiting_for_space.contains(&rid)
+                || i.inbound.contains(&rid)
+        };
+        self.offline_backlog.contains(&rid)
+            || self.staged_offline.contains(&rid)
+            || self.relaxed.iter().chain(&self.strict).any(in_instance)
     }
 
     /// Aggregate busy seconds earned in the strict role (live + retired).

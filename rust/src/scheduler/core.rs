@@ -259,6 +259,540 @@ impl SchedulerCore {
         std::mem::take(&mut self.actions)
     }
 
+    /// Advance crash notice for `inst` at `now` (spot-instance style,
+    /// DESIGN.md §3.9): the instance stops taking new work and its
+    /// resident offline KV starts evacuating through the same
+    /// recoverable-eviction transport paths a drain uses, so the KV
+    /// survives the coming crash in host staging or on a live relaxed
+    /// instance instead of being recomputed from scratch. Queued work
+    /// that holds no KV re-routes immediately. Online decode residents
+    /// keep running in place — moving them would violate the very SLO
+    /// the evacuation protects; whatever is still resident when the
+    /// crash fires is lost and recomputed then.
+    pub fn on_crash_notice(
+        &mut self,
+        now: f64,
+        inst: InstanceRef,
+    ) -> Vec<Action> {
+        self.now = now;
+        self.cluster.accrue_cache_seconds(now);
+        match inst {
+            InstanceRef::Relaxed(i) => {
+                self.abort_transition_for(PoolRole::Relaxed, i);
+                self.cluster.relaxed[i].evacuating = true;
+                self.cluster.router.set_down_relaxed(i, true);
+                self.reroute_online_queue(i);
+            }
+            InstanceRef::Strict(i) => {
+                self.abort_transition_for(PoolRole::Strict, i);
+                self.cluster.strict[i].evacuating = true;
+                self.cluster.router.set_down_strict(i, true);
+                self.redispatch_waiting(i);
+            }
+        }
+        // The epilogue's evacuation tick performs the first sweep; later
+        // entry points keep sweeping until the crash fires.
+        self.pool_tick();
+        self.flush_cache_events();
+        std::mem::take(&mut self.actions)
+    }
+
+    /// Instance `inst` crashed at `now` (DESIGN.md §3.9): its KV and
+    /// running step are lost. Online residents re-route to live instances
+    /// for full-context recompute, offline residents return to the
+    /// backlog (whatever an advance-notice evacuation already streamed
+    /// off is spared), inbound transfers are cancelled, and the elastic
+    /// pool manager re-plans around the hole. Crashing the last live
+    /// instance of a pool is refused upstream (fleet fault injection
+    /// skips it), so routing always has a live target.
+    pub fn on_instance_down(
+        &mut self,
+        now: f64,
+        inst: InstanceRef,
+    ) -> Vec<Action> {
+        self.now = now;
+        self.cluster.accrue_cache_seconds(now);
+        self.actions.push(Action::InstanceDown { inst });
+        match inst {
+            InstanceRef::Relaxed(i) => self.crash_relaxed(i),
+            InstanceRef::Strict(i) => self.crash_strict(i),
+        }
+        self.cluster.crashes += 1;
+        // Backlogged recompute work may start right away elsewhere.
+        self.kick_idle_relaxed();
+        self.pool_tick();
+        self.flush_cache_events();
+        std::mem::take(&mut self.actions)
+    }
+
+    /// Crashed instance `inst` recovered at `now` and rejoins its pool
+    /// empty. A relaxed recovery immediately offers its capacity to
+    /// staged KV (restores) and the backlog; a strict recovery fills up
+    /// through the ordinary dispatch/migration paths.
+    pub fn on_instance_up(
+        &mut self,
+        now: f64,
+        inst: InstanceRef,
+    ) -> Vec<Action> {
+        self.now = now;
+        self.cluster.accrue_cache_seconds(now);
+        self.actions.push(Action::InstanceUp { inst });
+        match inst {
+            InstanceRef::Relaxed(i) => {
+                assert!(
+                    self.cluster.relaxed[i].down,
+                    "recovery of a live instance"
+                );
+                self.cluster.relaxed[i].down = false;
+                self.cluster.router.set_down_relaxed(i, false);
+                self.try_restores();
+                self.kick_idle_relaxed();
+            }
+            InstanceRef::Strict(i) => {
+                assert!(
+                    self.cluster.strict[i].down,
+                    "recovery of a live instance"
+                );
+                self.cluster.strict[i].down = false;
+                self.cluster.router.set_down_strict(i, false);
+            }
+        }
+        self.cluster.recoveries += 1;
+        self.pool_tick();
+        self.flush_cache_events();
+        std::mem::take(&mut self.actions)
+    }
+
+    /// The crash a notice announced never fired (the fleet refused to kill
+    /// the last live instance of a pool): stand the instance back up. Any
+    /// KV already evacuated stays evacuated — it restores through the
+    /// ordinary staged-KV path.
+    pub fn on_crash_averted(
+        &mut self,
+        now: f64,
+        inst: InstanceRef,
+    ) -> Vec<Action> {
+        self.now = now;
+        self.cluster.accrue_cache_seconds(now);
+        match inst {
+            InstanceRef::Relaxed(i) => {
+                assert!(
+                    self.cluster.relaxed[i].evacuating,
+                    "averting a crash that was never noticed"
+                );
+                self.cluster.relaxed[i].evacuating = false;
+                self.cluster.router.set_down_relaxed(i, false);
+                self.kick_idle_relaxed();
+            }
+            InstanceRef::Strict(i) => {
+                assert!(
+                    self.cluster.strict[i].evacuating,
+                    "averting a crash that was never noticed"
+                );
+                self.cluster.strict[i].evacuating = false;
+                self.cluster.router.set_down_strict(i, false);
+            }
+        }
+        self.pool_tick();
+        self.flush_cache_events();
+        std::mem::take(&mut self.actions)
+    }
+
+    /// Cross-replica work stealing, victim side (DESIGN.md §3.9): surrender
+    /// the *tail* backlog entry — the FIFO front keeps its place — along
+    /// with its request state (an offline backlog entry holds no KV, so the
+    /// state struct is the whole request). Returns `None` when there is
+    /// nothing to steal.
+    pub fn steal_out(&mut self, _now: f64) -> Option<(RequestId, Request)> {
+        let rid = self.cluster.offline_backlog.pop_back()?;
+        debug_assert_eq!(
+            self.cluster.kv_home[rid as usize],
+            KvHome::None,
+            "backlog entries hold no KV"
+        );
+        Some((rid, self.cluster.requests[rid as usize].clone()))
+    }
+
+    /// Cross-replica work stealing, thief side: adopt `state` (the victim's
+    /// request copy, carrying any generated-token progress) into this
+    /// replica's slot and queue it for offline admission.
+    pub fn steal_in(
+        &mut self,
+        now: f64,
+        rid: RequestId,
+        state: Request,
+    ) -> Vec<Action> {
+        self.now = now;
+        self.cluster.accrue_cache_seconds(now);
+        debug_assert_eq!(
+            self.cluster.kv_home[rid as usize],
+            KvHome::None,
+            "stolen request must not be resident here"
+        );
+        self.cluster.requests[rid as usize] = state;
+        self.cluster.evict_started[rid as usize] = f64::NAN;
+        self.cluster.offline_backlog.push_back(rid);
+        self.kick_idle_relaxed();
+        self.pool_tick();
+        self.flush_cache_events();
+        std::mem::take(&mut self.actions)
+    }
+
+    // ------------------------------------- crash mechanics (DESIGN.md §3.9)
+
+    /// Drop the in-flight role transition if it involves instance
+    /// (`role`, `idx`) — a crashed instance can neither finish draining
+    /// (the flip would move a corpse) nor finish warming (its warm step
+    /// died with it).
+    fn abort_transition_for(&mut self, role: PoolRole, idx: usize) {
+        let Some(t) = self.pool.transition else {
+            return;
+        };
+        let (t_role, t_idx) = match t.phase {
+            TransitionPhase::Drain => (t.from, t.inst),
+            // After the flip the instance lives in the destination pool.
+            TransitionPhase::Warm => (t.from.other(), t.inst),
+        };
+        if (t_role, t_idx) != (role, idx) {
+            return;
+        }
+        self.pool.abort_transition();
+        if t.phase == TransitionPhase::Drain {
+            match t.from {
+                PoolRole::Relaxed => {
+                    self.cluster.relaxed[idx].draining = false;
+                    self.cluster.router.set_drain_relaxed(None);
+                }
+                PoolRole::Strict => {
+                    self.cluster.strict[idx].draining = false;
+                    self.cluster.router.set_drain_strict(None);
+                }
+            }
+        }
+    }
+
+    /// Re-route queued online prefills (no KV yet, no loss) off a crashed
+    /// or evacuating relaxed instance to the live pool.
+    fn reroute_online_queue(&mut self, inst: usize) {
+        let moved: Vec<RequestId> =
+            self.cluster.relaxed[inst].online_queue.drain(..).collect();
+        for rid in moved {
+            let tokens = self.cluster.requests[rid as usize].recompute_len();
+            let target = self.cluster.router.route_prefill(tokens);
+            self.cluster.relaxed[target].online_queue.push_back(rid);
+        }
+        self.kick_idle_relaxed();
+    }
+
+    /// Evacuate crash-noticed instances: one sweep per entry point — the
+    /// same cadence the drain ticks use — streaming resident offline KV
+    /// off through the recoverable-eviction paths. Step participants are
+    /// skipped until their iteration boundary, exactly like a drain.
+    fn evacuation_tick(&mut self) {
+        for i in 0..self.cluster.relaxed.len() {
+            if self.cluster.relaxed[i].evacuating {
+                self.evacuate_relaxed(i);
+            }
+        }
+        for i in 0..self.cluster.strict.len() {
+            if self.cluster.strict[i].evacuating {
+                self.evacuate_strict(i);
+            }
+        }
+    }
+
+    fn evacuate_relaxed(&mut self, i: usize) {
+        self.purge_cache(InstanceRef::Relaxed(i));
+        if self.cluster.relaxed[i].offline_decoding.is_empty()
+            && self.cluster.relaxed[i].inbound.is_empty()
+            && !self.has_offline_prefilling(i)
+        {
+            return;
+        }
+        let mut victims = std::mem::take(&mut self.scratch_ids);
+        victims.clear();
+        {
+            let node = &self.cluster.relaxed[i];
+            let step = node.step.as_ref();
+            victims.extend(node.offline_decoding.iter().copied().filter(
+                |&r| step.map(|s| !s.involves(r)).unwrap_or(true),
+            ));
+        }
+        for &rid in &victims {
+            let kv = self.cluster.requests[rid as usize].kv_len() as u64;
+            // Routes through Offload-to-staging when the transport
+            // supports it — the evacuation win the notice buys.
+            self.evict_offline_from_relaxed(i, rid);
+            if self.cluster.kv_home[rid as usize] == KvHome::Staged {
+                self.cluster.crash_evac_tokens += kv;
+            }
+        }
+        // Partial prefill chains are not rescuable: recompute elsewhere.
+        victims.clear();
+        {
+            let node = &self.cluster.relaxed[i];
+            let step = node.step.as_ref();
+            for &r in &node.prefilling {
+                if !self.scheduled_online(r)
+                    && step.map(|s| !s.involves(r)).unwrap_or(true)
+                {
+                    victims.push(r);
+                }
+            }
+        }
+        for &rid in &victims {
+            self.evict_prefilling(i, rid);
+        }
+        // Inbound rescue/restore streams would land on a doomed instance:
+        // cancel now instead of losing them at the crash.
+        victims.clear();
+        victims.extend(self.cluster.relaxed[i].inbound.iter().copied());
+        for &rid in &victims {
+            self.cancel_inbound_relaxed(i, rid);
+        }
+        self.scratch_ids = victims;
+    }
+
+    fn evacuate_strict(&mut self, i: usize) {
+        self.purge_cache(InstanceRef::Strict(i));
+        if self.cluster.strict[i].offline.is_empty()
+            && self.cluster.strict[i].inbound.is_empty()
+        {
+            return;
+        }
+        let mut victims = std::mem::take(&mut self.scratch_ids);
+        victims.clear();
+        {
+            let node = &self.cluster.strict[i];
+            let step = node.step.as_ref();
+            victims.extend(node.offline.iter().copied().filter(|&r| {
+                step.map(|s| !s.involves(r)).unwrap_or(true)
+            }));
+        }
+        for &rid in &victims {
+            let kv = self.cluster.requests[rid as usize].kv_len() as u64;
+            // Rescue to a live relaxed instance or host staging.
+            self.evict_offline_from_strict(i, rid);
+            match self.cluster.kv_home[rid as usize] {
+                KvHome::Staged | KvHome::Relaxed(_) => {
+                    self.cluster.crash_evac_tokens += kv;
+                }
+                _ => {}
+            }
+        }
+        // In-flight offline inbound (Algorithm 1 migrations): recompute.
+        victims.clear();
+        {
+            let node = &self.cluster.strict[i];
+            for &r in &node.inbound {
+                if !self.scheduled_online(r) {
+                    victims.push(r);
+                }
+            }
+        }
+        for &rid in &victims {
+            self.cancel_inbound_strict(i, rid);
+        }
+        self.scratch_ids = victims;
+    }
+
+    /// Tear down a crashed relaxed instance: every resident loses its KV.
+    fn crash_relaxed(&mut self, i: usize) {
+        self.abort_transition_for(PoolRole::Relaxed, i);
+        self.cluster.router.set_down_relaxed(i, true);
+        // The running step dies with the instance; its pending end event
+        // goes stale through the seq guard.
+        self.cluster.relaxed[i].step = None;
+        self.purge_cache(InstanceRef::Relaxed(i));
+        // Inbound rescue/restore streams: the reservation is gone and so
+        // is the wire copy — recompute.
+        let mut victims: Vec<RequestId> =
+            self.cluster.relaxed[i].inbound.clone();
+        for rid in victims.drain(..) {
+            let kv = self.cluster.requests[rid as usize].kv_len() as u64;
+            self.cancel_inbound_relaxed(i, rid);
+            self.cluster.crash_evictions += 1;
+            self.cluster.crash_recompute_tokens += kv;
+        }
+        // Queued online prefills hold no KV: re-route, nothing lost.
+        self.reroute_online_queue(i);
+        // Mid-prefill and offline decode residents: KV destroyed.
+        victims.extend(self.cluster.relaxed[i].prefilling.iter().copied());
+        victims
+            .extend(self.cluster.relaxed[i].offline_decoding.iter().copied());
+        for rid in victims.drain(..) {
+            self.lose_kv_on_relaxed(i, rid);
+        }
+        // Requests parked in a strict `waiting_for_space` queue keep
+        // their prefilled KV *here* without appearing in any local
+        // queue: the crash costs them that KV too.
+        for j in 0..self.cluster.strict.len() {
+            let parked: Vec<RequestId> = self.cluster.strict[j]
+                .waiting_for_space
+                .iter()
+                .copied()
+                .filter(|&r| {
+                    self.cluster.kv_home[r as usize] == KvHome::Relaxed(i)
+                })
+                .collect();
+            for rid in parked {
+                self.cluster.strict[j]
+                    .waiting_for_space
+                    .retain(|&r| r != rid);
+                let kv = self.cluster.requests[rid as usize].kv_len();
+                // Discharge the decode load the dispatch booked on `j`.
+                self.cluster.router.decode_done(j, kv);
+                self.lose_kv_on_relaxed(i, rid);
+            }
+        }
+        // The releases above re-cached every prefix-registered block;
+        // purge again so the corpse really holds nothing.
+        self.purge_cache(InstanceRef::Relaxed(i));
+        let node = &mut self.cluster.relaxed[i];
+        node.down = true;
+        node.evacuating = false;
+        node.draining = false;
+        debug_assert_eq!(
+            node.kv.used_blocks(),
+            0,
+            "crashed relaxed instance must hold no KV"
+        );
+    }
+
+    /// Tear down a crashed strict instance.
+    fn crash_strict(&mut self, i: usize) {
+        self.abort_transition_for(PoolRole::Strict, i);
+        self.cluster.router.set_down_strict(i, true);
+        self.cluster.strict[i].step = None;
+        self.cluster.strict_step_meta[i] = None;
+        self.purge_cache(InstanceRef::Strict(i));
+        // Inbound transfers: an online dispatch's source KV was released
+        // when the stream started, so the wire copy was the only one —
+        // full recompute through a live relaxed instance. Offline
+        // migrations fall back to the backlog.
+        let inbound: Vec<RequestId> = self.cluster.strict[i].inbound.clone();
+        for rid in inbound {
+            let kv = self.cluster.requests[rid as usize].kv_len() as u64;
+            if self.scheduled_online(rid) {
+                self.cancel_inbound_online_strict(i, rid);
+            } else {
+                self.cancel_inbound_strict(i, rid);
+            }
+            self.cluster.crash_evictions += 1;
+            self.cluster.crash_recompute_tokens += kv;
+        }
+        // Parked online admissions hold their KV on a relaxed instance:
+        // unaffected by this crash, just re-dispatch them.
+        self.redispatch_waiting(i);
+        // Decode residents: KV destroyed. Online recomputes its full
+        // context (prompt + tokens generated so far) on a live relaxed
+        // instance; offline returns to the backlog.
+        let mut victims: Vec<RequestId> =
+            self.cluster.strict[i].online.clone();
+        victims.extend(self.cluster.strict[i].offline.iter().copied());
+        for rid in victims {
+            self.lose_kv_on_strict(i, rid);
+        }
+        // The releases above re-cached every prefix-registered block;
+        // purge again so the corpse really holds nothing.
+        self.purge_cache(InstanceRef::Strict(i));
+        let node = &mut self.cluster.strict[i];
+        node.down = true;
+        node.evacuating = false;
+        node.draining = false;
+        debug_assert_eq!(
+            node.kv.used_blocks(),
+            0,
+            "crashed strict instance must hold no KV"
+        );
+    }
+
+    /// `rid`'s KV on crashed relaxed instance `i` is destroyed: drop the
+    /// residency, book the loss, and send the request back for recompute
+    /// — online into a live relaxed instance's queue, offline to the
+    /// backlog.
+    fn lose_kv_on_relaxed(&mut self, i: usize, rid: RequestId) {
+        let kv = self.cluster.requests[rid as usize].kv_len();
+        self.cluster.relaxed[i].kv.release(rid).expect("resident kv");
+        self.cluster.relaxed[i].prefilling.retain(|&r| r != rid);
+        self.cluster.relaxed[i].offline_decoding.retain(|&r| r != rid);
+        self.cluster.kv_home[rid as usize] = KvHome::None;
+        self.cluster.evict_started[rid as usize] = f64::NAN;
+        self.cluster.requests[rid as usize].evict();
+        self.cluster.evictions += 1;
+        self.cluster.crash_evictions += 1;
+        self.cluster.crash_recompute_tokens += kv as u64;
+        self.actions.push(Action::Evict {
+            inst: InstanceRef::Relaxed(i),
+            req: rid,
+        });
+        if self.scheduled_online(rid) {
+            let tokens = self.cluster.requests[rid as usize].recompute_len();
+            let target = self.cluster.router.route_prefill(tokens);
+            self.cluster.relaxed[target].online_queue.push_back(rid);
+        } else {
+            self.cluster.offline_backlog.push_back(rid);
+        }
+    }
+
+    /// Strict-side counterpart of [`SchedulerCore::lose_kv_on_relaxed`].
+    fn lose_kv_on_strict(&mut self, i: usize, rid: RequestId) {
+        let kv = self.cluster.requests[rid as usize].kv_len();
+        self.cluster.strict[i].kv.release(rid).expect("resident kv");
+        self.cluster.strict[i].remove_online(rid);
+        self.cluster.strict[i].remove_offline(rid);
+        self.cluster.kv_home[rid as usize] = KvHome::None;
+        self.cluster.evict_started[rid as usize] = f64::NAN;
+        self.cluster.requests[rid as usize].evict();
+        self.cluster.evictions += 1;
+        self.cluster.crash_evictions += 1;
+        self.cluster.crash_recompute_tokens += kv as u64;
+        self.actions.push(Action::Evict {
+            inst: InstanceRef::Strict(i),
+            req: rid,
+        });
+        if self.scheduled_online(rid) {
+            let tokens = self.cluster.requests[rid as usize].recompute_len();
+            let target = self.cluster.router.route_prefill(tokens);
+            self.cluster.relaxed[target].online_queue.push_back(rid);
+        } else {
+            self.cluster.offline_backlog.push_back(rid);
+        }
+    }
+
+    /// Crash path: an online dispatch was streaming into the crashed
+    /// strict instance. Unlike the drain-time offline cancellation, the
+    /// request must not fall into the offline backlog — it recomputes its
+    /// full context through a live relaxed instance's online queue.
+    fn cancel_inbound_online_strict(&mut self, inst: usize, rid: RequestId) {
+        let job = self
+            .transport
+            .job_of(rid)
+            .expect("inbound request has an active job");
+        let cancelled =
+            self.transport.cancel(job).expect("first cancel of active job");
+        self.actions.push(Action::TransferCancel {
+            job: cancelled.id,
+            req: rid,
+        });
+        let kv_len = self.cluster.requests[rid as usize].kv_len();
+        self.cluster.strict[inst].kv.release(rid).expect("reserved kv");
+        self.cluster.strict[inst].inbound.retain(|&r| r != rid);
+        // Discharge the decode load the dispatch booked on the router.
+        self.cluster.router.decode_done(inst, kv_len);
+        self.cluster.kv_home[rid as usize] = KvHome::None;
+        self.cluster.evict_started[rid as usize] = f64::NAN;
+        self.cluster.requests[rid as usize].evict();
+        self.cluster.evictions += 1;
+        self.actions.push(Action::Evict {
+            inst: InstanceRef::Strict(inst),
+            req: rid,
+        });
+        let tokens = self.cluster.requests[rid as usize].recompute_len();
+        let target = self.cluster.router.route_prefill(tokens);
+        self.cluster.relaxed[target].online_queue.push_back(rid);
+    }
+
     // ---------------------------------------------- prefix cache (§3.7)
 
     fn instance_mut(&mut self, inst: InstanceRef) -> &mut Instance {
@@ -373,7 +907,7 @@ impl SchedulerCore {
             return;
         };
         let instance = self.instance_mut(inst);
-        if instance.draining {
+        if !instance.accepts_work() {
             return;
         }
         let upto = p.len.min(instance.kv.tokens_of(rid));
@@ -589,8 +1123,8 @@ impl SchedulerCore {
     /// re-streamed.
     fn try_restores(&mut self) {
         for inst in 0..self.cluster.relaxed.len() {
-            if self.cluster.relaxed[inst].draining {
-                continue; // no new admissions while draining for a flip
+            if !self.cluster.relaxed[inst].accepts_work() {
+                continue; // no restores onto a draining/doomed/down node
             }
             while let Some(&rid) = self.cluster.staged_offline.front() {
                 let need =
@@ -654,12 +1188,29 @@ impl SchedulerCore {
     /// millisecond-scale step events this is indistinguishable from a
     /// timer, and it keeps the executors free of pool-specific work orders.
     fn pool_tick(&mut self) {
+        // Crash-noticed instances keep streaming KV off every tick until
+        // the crash fires (no-op without an active notice).
+        self.evacuation_tick();
         self.advance_transition();
         if self.pool.transition.is_some() {
             return;
         }
-        let n_relaxed = self.cluster.relaxed.len();
-        let n_strict = self.cluster.strict.len();
+        // Plan around crashed instances: the planner sees live capacity,
+        // not nominal pool sizes (DESIGN.md §3.9).
+        let n_relaxed = self
+            .cluster
+            .relaxed
+            .iter()
+            .filter(|r| !r.down)
+            .count()
+            .max(1);
+        let n_strict = self
+            .cluster
+            .strict
+            .iter()
+            .filter(|s| !s.down)
+            .count()
+            .max(1);
         let slo = self.cfg.serving.slo;
         let Some(plan) =
             self.pool.replan(self.now, &self.pm, &slo, n_relaxed, n_strict)
@@ -675,10 +1226,17 @@ impl SchedulerCore {
         });
         // One transition at a time, always from the tail of the shrinking
         // pool (index stability of everything else); the next re-plan keeps
-        // moving if one step was not enough.
-        if plan.strict_target > n_strict && n_relaxed > 1 {
+        // moving if one step was not enough. A down or evacuating tail
+        // cannot drain — wait for recovery or a later plan.
+        if plan.strict_target > n_strict
+            && n_relaxed > 1
+            && self.cluster.relaxed.last().is_some_and(|r| r.accepts_work())
+        {
             self.start_drain(PoolRole::Relaxed);
-        } else if plan.strict_target < n_strict && n_strict > 1 {
+        } else if plan.strict_target < n_strict
+            && n_strict > 1
+            && self.cluster.strict.last().is_some_and(|s| s.accepts_work())
+        {
             self.start_drain(PoolRole::Strict);
         }
     }
@@ -1129,7 +1687,9 @@ impl SchedulerCore {
         // Step boundaries are also when staged KV gets to stream back in
         // (restores are transfers — they do not occupy the instance).
         self.try_restores();
-        if !self.cluster.relaxed[inst].is_idle() {
+        if self.cluster.relaxed[inst].down
+            || !self.cluster.relaxed[inst].is_idle()
+        {
             return;
         }
         if self.chunk_enabled() {
@@ -1183,14 +1743,17 @@ impl SchedulerCore {
     /// admissions still pass the §3.4.2 gating priced at their *remaining
     /// uncached* tokens.
     fn compose_relaxed_step(&mut self, inst: usize) {
-        let draining = self.cluster.relaxed[inst].draining;
+        // Draining for a flip and evacuating ahead of a crash behave the
+        // same here: no new offline work, residents stream off between
+        // iterations.
+        let no_new_work = !self.cluster.relaxed[inst].accepts_work();
         // Does this iteration actually carry a decode side? Parked
         // residents under `online priority` (hold KV, never decode here)
         // and a draining instance's residents must not be priced as
         // phantom decode work — that would both inflate the predicted
         // latency and collapse the auto budget to its floor.
         let decodes_here =
-            !draining && self.cfg.policy.offline_decode_on_relaxed();
+            !no_new_work && self.cfg.policy.offline_decode_on_relaxed();
         // Budget from the pre-admission decode batch (admissions below may
         // evict residents, which only loosens the bound). Steady-state
         // decode iterations with no prefill candidate anywhere skip the
@@ -1261,7 +1824,7 @@ impl SchedulerCore {
         // the iteration boundary) and the instance is not draining.
         let online_pending = !segs.is_empty()
             || !self.cluster.relaxed[inst].online_queue.is_empty();
-        let offline_ok = !draining
+        let offline_ok = !no_new_work
             && (!online_pending || !self.cfg.policy.offline_idle_only());
         if offline_ok {
             for &rid in &resident {
@@ -1749,7 +2312,7 @@ impl SchedulerCore {
     /// plain idle-only admission in `online priority`).
     fn start_offline_prefill(&mut self, inst: usize) -> bool {
         if self.cluster.offline_backlog.is_empty()
-            || self.cluster.relaxed[inst].draining
+            || !self.cluster.relaxed[inst].accepts_work()
         {
             return false;
         }
@@ -1861,10 +2424,10 @@ impl SchedulerCore {
     fn start_relaxed_decode(&mut self, inst: usize) {
         if !self.cfg.policy.offline_decode_on_relaxed()
             || self.cluster.relaxed[inst].offline_decoding.is_empty()
-            // A draining instance starts no new decode steps: its residents
-            // are being streamed off, and an idle instance is what lets the
-            // next tick evict the stragglers.
-            || self.cluster.relaxed[inst].draining
+            // A draining or evacuating instance starts no new decode
+            // steps: its residents are being streamed off, and an idle
+            // instance is what lets the next tick evict the stragglers.
+            || !self.cluster.relaxed[inst].accepts_work()
         {
             return;
         }
@@ -2183,7 +2746,7 @@ impl SchedulerCore {
         // next online prefill and discarded after burning link bandwidth.
         let dest = (0..self.cluster.relaxed.len())
             .filter(|&i| {
-                !self.cluster.relaxed[i].draining
+                self.cluster.relaxed[i].accepts_work()
                     && self.cluster.relaxed[i].kv.free_tokens()
                         >= need + ONLINE_PREFILL_RESERVE_TOKENS
             })
@@ -2302,7 +2865,8 @@ impl SchedulerCore {
     }
 
     fn start_strict_step(&mut self, inst: usize) {
-        if !self.cluster.strict[inst].is_idle()
+        if self.cluster.strict[inst].down
+            || !self.cluster.strict[inst].is_idle()
             || !self.cluster.strict[inst].has_decode_work()
         {
             return;
@@ -2348,12 +2912,12 @@ impl SchedulerCore {
                 online = kept;
             }
         }
-        // A draining strict instance batches online residents only: its
-        // offline mix-ins must sit out the step so the drain ticks can
-        // stream them off between iterations.
+        // A draining or evacuating strict instance batches online
+        // residents only: its offline mix-ins must sit out the step so
+        // the sweep ticks can stream them off between iterations.
         let mut offline = std::mem::take(&mut self.scratch_offline);
         offline.clear();
-        if !self.cluster.strict[inst].draining {
+        if self.cluster.strict[inst].accepts_work() {
             offline.extend(
                 self.cluster.strict[inst]
                     .offline
@@ -2543,8 +3107,8 @@ impl SchedulerCore {
         {
             return;
         }
-        if self.cluster.strict[inst].draining {
-            // A draining instance pulls no new offline decodes.
+        if !self.cluster.strict[inst].accepts_work() {
+            // A draining/evacuating instance pulls no new offline decodes.
             self.cluster.strict_step_meta[inst] = None;
             return;
         }
@@ -2625,7 +3189,7 @@ impl SchedulerCore {
     fn pull_parked_offline(&mut self, inst: usize) {
         if self.cfg.policy.offline_decode_on_relaxed()
             || self.cfg.policy == Policy::BasePd
-            || self.cluster.strict[inst].draining
+            || !self.cluster.strict[inst].accepts_work()
         {
             return;
         }

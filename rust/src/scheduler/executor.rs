@@ -124,7 +124,9 @@ impl VirtualExecutor {
                 | Action::PrefixEvict { .. }
                 | Action::Complete { .. }
                 | Action::RepartitionPlan { .. }
-                | Action::RoleChange { .. } => {}
+                | Action::RoleChange { .. }
+                | Action::InstanceDown { .. }
+                | Action::InstanceUp { .. } => {}
             }
         }
         if let Some(log) = &mut self.log {
@@ -287,7 +289,9 @@ impl StubWallClockExecutor {
                 | Action::PrefixEvict { .. }
                 | Action::Complete { .. }
                 | Action::RepartitionPlan { .. }
-                | Action::RoleChange { .. } => {}
+                | Action::RoleChange { .. }
+                | Action::InstanceDown { .. }
+                | Action::InstanceUp { .. } => {}
             }
         }
         if let Some(log) = &mut self.log {

@@ -11,8 +11,9 @@
 //! Used by `bench_fig6_colocation`, `bench_ablation`, and the paper-vs-ours
 //! tables in EXPERIMENTS.md.
 
-use crate::config::ServingConfig;
+use crate::config::{FaultSpec, FleetSpec, ServingConfig};
 use crate::coordinator::{Ablation, Policy};
+use crate::fleet::{simulate_fleet, FleetConfig, FleetResult};
 use crate::sim::{simulate, SimConfig, SimResult};
 use crate::trace::datasets::DatasetProfile;
 use crate::trace::generator::{
@@ -195,6 +196,37 @@ pub fn curve_to_json(label: &str, points: &[SweepPoint]) -> Json {
             Json::Arr(points.iter().map(SweepPoint::to_json).collect()),
         ),
     ])
+}
+
+/// Failover recovery comparison (DESIGN.md §3.9): run the same trace under
+/// the same crash schedule twice — once with the schedule's advance notice
+/// intact (KV *restreams* to staging / live instances before the crash)
+/// and once with every notice stripped (lost KV is *recomputed* from
+/// scratch) — and return `(restream, recompute)`. Everything else (seed,
+/// topology, ablation) is held identical, so the delta isolates the
+/// recoverable-evacuation path.
+pub fn failover_compare(
+    serving: &ServingConfig,
+    policy: Policy,
+    trace: &Trace,
+    fleet: FleetSpec,
+    fault: &FaultSpec,
+    sweep: &SweepConfig,
+) -> (FleetResult, FleetResult) {
+    let run = |fault: FaultSpec| {
+        let mut sim = SimConfig::new(serving.clone(), policy);
+        sim.seed = sweep.seed;
+        sim.ablation = sweep.ablation;
+        simulate_fleet(trace, &FleetConfig { sim, fleet, fault })
+    };
+    let mut recompute = fault.clone();
+    for c in &mut recompute.crashes {
+        c.notice_s = 0.0;
+    }
+    if let Some(m) = &mut recompute.mtbf {
+        m.notice_s = 0.0;
+    }
+    (run(fault.clone()), run(recompute))
 }
 
 /// The paper's headline metric: the offline throughput just before the
