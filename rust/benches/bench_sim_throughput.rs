@@ -1,7 +1,9 @@
 //! Simulator-throughput bench: simulated requests per wall-clock second on
 //! a 100k-request co-locate trace, with chunking on and off — the metric
 //! that keeps simulator speed on the scaling trajectory (the hot-loop
-//! scratch-buffer work in `scheduler::core` lands here).
+//! scratch-buffer work in `scheduler::core` lands here) — plus a
+//! flight-recorder point that prices telemetry against the disabled
+//! recorder the first two runs pay (DESIGN.md §3.10).
 //!
 //! Run: `cargo bench --bench bench_sim_throughput` (plain binary, no
 //! harness).
@@ -10,7 +12,8 @@ use std::time::Instant;
 
 use ooco::config::{ChunkMode, ServingConfig};
 use ooco::coordinator::Policy;
-use ooco::sim::{simulate, SimConfig};
+use ooco::sim::{simulate, simulate_traced, SimConfig};
+use ooco::telemetry::TelemetryOpts;
 use ooco::trace::datasets::{DatasetProfile, LengthProfile};
 use ooco::trace::generator::{offline_trace, online_trace};
 use ooco::trace::Trace;
@@ -45,6 +48,7 @@ fn main() {
     );
 
     let mut points = Vec::new();
+    let mut chunked_baseline: Option<(f64, String)> = None;
     for (label, mode) in [
         ("chunked (auto)", ChunkMode::Auto),
         ("exclusive (off)", ChunkMode::Off),
@@ -71,7 +75,54 @@ fn main() {
             ("report", res.report.to_json()),
             ("chunk", res.chunk.to_json()),
         ]));
+        if matches!(mode, ChunkMode::Auto) {
+            chunked_baseline =
+                Some((wall, res.report.to_json().to_string()));
+        }
     }
+
+    // Flight-recorder overhead (DESIGN.md §3.10). The runs above pay the
+    // disabled recorder — a single `Option` check per executor callback —
+    // so their `sim_req_per_s` is the cross-commit ≤3% no-op guard (the
+    // CI artifact diff). Here the same chunked config runs once more with
+    // the flight recorder attached: the recorder must be a pure observer
+    // (byte-identical report), and its full cost lands in the artifact.
+    let (base_wall, base_report) =
+        chunked_baseline.expect("chunked point ran");
+    let mut serving = ServingConfig::preset_7b();
+    serving.cluster.relaxed_instances = 4;
+    serving.cluster.strict_instances = 4;
+    serving.chunk_tokens = ChunkMode::Auto;
+    let mut cfg = SimConfig::new(serving, Policy::Ooco);
+    cfg.drain_s = 600.0;
+    let opts = TelemetryOpts::new(cfg.serving.slo);
+    let t0 = Instant::now();
+    let traced = simulate_traced(&trace, &cfg, Some(opts));
+    let wall_flight = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        base_report,
+        traced.report.to_json().to_string(),
+        "flight recorder perturbed the simulation"
+    );
+    let tel = traced.telemetry.expect("telemetry requested");
+    let overhead = wall_flight / base_wall.max(1e-9) - 1.0;
+    println!(
+        "{:>16}: {wall_flight:6.2} s wall | {:+5.1}% vs disabled | \
+         {} samples, {} attribution rows",
+        "flight recorder",
+        overhead * 100.0,
+        tel.timeline.as_arr().map(|a| a.len()).unwrap_or(0),
+        tel.audit.attribution_rows,
+    );
+    points.push(Json::obj(vec![
+        ("label", Json::Str("flight recorder".into())),
+        ("wall_s", Json::Num(wall_flight)),
+        (
+            "sim_req_per_s",
+            Json::Num(trace.len() as f64 / wall_flight.max(1e-9)),
+        ),
+        ("flight_overhead_frac", Json::Num(overhead)),
+    ]));
 
     if let Some(path) = args.opt_str("json-out") {
         let out = Json::obj(vec![

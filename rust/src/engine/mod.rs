@@ -642,13 +642,13 @@ impl<'rt> EngineExecutor<'rt> {
         if let Some(f) = self.feeder.take() {
             f.join().ok();
         }
-        let mut recorder = Recorder::new();
+        let mut recorder = Recorder::new(&self.cfg.slo);
         for r in &core.cluster.requests {
             recorder.record(r);
         }
         let duration = trace.duration().max(1e-9);
         EngineOutcome {
-            report: recorder.report(&self.cfg.slo, duration),
+            report: recorder.report(duration),
             transport: core.transport_report(duration),
             pool: core.pool_report(),
             prefix: core.prefix_report(),

@@ -27,9 +27,10 @@ use crate::metrics::{FleetReport, Recorder, Report};
 use crate::request::{Class, RequestId};
 use crate::scheduler::{Action, InstanceRef, JobId, SchedulerCore};
 use crate::sim::SimConfig;
+use crate::telemetry::{TelemetryOpts, TelemetryOut, TraceRecorder};
 use crate::trace::Trace;
 use crate::util::rng::Pcg;
-use crate::util::stats::Summary;
+use crate::util::stats::LatencySummary;
 
 /// Dedicated RNG stream base for stochastic fault schedules — disjoint
 /// from the core's decision stream (9090) so fault sampling never
@@ -73,6 +74,9 @@ pub struct FleetResult {
     pub fleet: FleetReport,
     /// Simulated end time.
     pub end_time: f64,
+    /// Flight-recorder output (DESIGN.md §3.10); `None` unless the run
+    /// was traced via [`simulate_fleet_traced`].
+    pub telemetry: Option<TelemetryOut>,
 }
 
 // ------------------------------------------------------------- event heap
@@ -249,6 +253,9 @@ pub struct Fleet {
     /// When `Some`, every (replica, action) pair the cores emit is
     /// appended — the observable stream the fleet property tests assert.
     pub log: Option<Vec<(usize, Action)>>,
+    /// Flight recorder tapping the same replica-tagged stream (disabled
+    /// by default).
+    pub telemetry: TraceRecorder,
 }
 
 impl Fleet {
@@ -304,6 +311,7 @@ impl Fleet {
             steals: 0,
             stolen_tokens: 0,
             log: None,
+            telemetry: TraceRecorder::disabled(),
         };
         fleet.schedule_faults();
         fleet
@@ -394,6 +402,7 @@ impl Fleet {
     /// `VirtualExecutor::apply` semantics with a replica tag — and
     /// discharge router load on completions.
     fn apply(&mut self, replica: usize, actions: Vec<Action>) {
+        self.telemetry.observe(self.now, replica, &actions);
         for a in &actions {
             match *a {
                 Action::StartStep {
@@ -671,6 +680,17 @@ impl Fleet {
                 }
             }
             self.try_steal();
+            if self.telemetry.sample_due(self.now) {
+                for r in 0..self.replicas.len() {
+                    self.telemetry.sample_replica(
+                        self.now,
+                        r,
+                        &self.replicas[r].cluster,
+                        self.replicas[r].transport.links(),
+                    );
+                }
+                self.telemetry.sample_tick(self.now);
+            }
         }
         self.build_result(trace)
     }
@@ -683,24 +703,6 @@ impl Fleet {
         // — the only replica whose copy ever advanced. Unrouted requests
         // (the horizon passed before their arrival) are skipped entirely,
         // matching what a single cluster would have seen.
-        let mut recorder = Recorder::new();
-        let mut accounting_errors = 0u64;
-        for r in &trace.requests {
-            let replica = self.assigned[r.id as usize];
-            if replica == usize::MAX {
-                continue;
-            }
-            let cluster = &self.replicas[replica].cluster;
-            let req = &cluster.requests[r.id as usize];
-            recorder.record(req);
-            // No request silently lost: unfinished ⇒ still tracked by some
-            // scheduling structure of its assigned replica.
-            if req.finished_at.is_none() && !cluster.holds(r.id) {
-                accounting_errors += 1;
-            }
-        }
-        let report = recorder.report(&self.cfg.sim.serving.slo, duration);
-
         // Downtime + availability. Open windows (still down at the end)
         // close at end_time.
         let mut downtime_inst_s = 0.0;
@@ -721,23 +723,41 @@ impl Fleet {
                 .iter()
                 .any(|w| t >= w.start && t <= w.end.unwrap_or(end_time))
         };
-        let mut fo_ttft = Vec::new();
-        let mut fo_tpot = Vec::new();
-        for rec in recorder.records() {
-            if rec.class != Class::Online {
+
+        let mut recorder = Recorder::new(&self.cfg.sim.serving.slo);
+        let mut fo_ttft = LatencySummary::new();
+        let mut fo_tpot = LatencySummary::new();
+        let mut accounting_errors = 0u64;
+        for r in &trace.requests {
+            let replica = self.assigned[r.id as usize];
+            if replica == usize::MAX {
                 continue;
             }
-            let Some(fin) = rec.finished_at else { continue };
-            if !in_window(fin) {
-                continue;
+            let cluster = &self.replicas[replica].cluster;
+            let req = &cluster.requests[r.id as usize];
+            recorder.record(req);
+            self.telemetry.finalize_request(req);
+            // No request silently lost: unfinished ⇒ still tracked by some
+            // scheduling structure of its assigned replica.
+            if req.finished_at.is_none() && !cluster.holds(r.id) {
+                accounting_errors += 1;
             }
-            if let Some(t) = rec.ttft {
-                fo_ttft.push(t);
-            }
-            if let Some(t) = rec.avg_tpot {
-                fo_tpot.push(t);
+            // Failover latency accumulates in the same streaming pass —
+            // no per-request record vector is ever materialized.
+            if req.class == Class::Online {
+                if let Some(fin) = req.finished_at {
+                    if in_window(fin) {
+                        if let Some(t) = req.ttft() {
+                            fo_ttft.record(t);
+                        }
+                        if let Some(t) = req.avg_tpot() {
+                            fo_tpot.record(t);
+                        }
+                    }
+                }
             }
         }
+        let report = recorder.report(duration);
 
         let sum = |f: fn(&crate::scheduler::ClusterState) -> u64| {
             self.replicas.iter().map(|c| f(&c.cluster)).sum::<u64>()
@@ -754,8 +774,8 @@ impl Fleet {
             evacuated_tokens: sum(|c| c.crash_evac_tokens),
             steals: self.steals,
             stolen_tokens: self.stolen_tokens,
-            failover_ttft: Summary::of(&fo_ttft),
-            failover_tpot: Summary::of(&fo_tpot),
+            failover_ttft: fo_ttft.summary(),
+            failover_tpot: fo_tpot.summary(),
             accounting_errors,
         };
 
@@ -763,6 +783,7 @@ impl Fleet {
             report,
             fleet,
             end_time,
+            telemetry: self.telemetry.finish(end_time),
         }
     }
 
@@ -775,6 +796,30 @@ impl Fleet {
 /// Run the fleet simulation of `trace` under `cfg`.
 pub fn simulate_fleet(trace: &Trace, cfg: &FleetConfig) -> FleetResult {
     Fleet::new(trace, cfg).run(trace)
+}
+
+/// [`simulate_fleet`] with an optional flight recorder attached to the
+/// replica-tagged action stream; its output lands in
+/// [`FleetResult::telemetry`].
+pub fn simulate_fleet_traced(
+    trace: &Trace,
+    cfg: &FleetConfig,
+    telemetry: Option<TelemetryOpts>,
+) -> FleetResult {
+    let mut fleet = Fleet::new(trace, cfg);
+    if let Some(opts) = telemetry {
+        let mut rec = TraceRecorder::flight(opts);
+        rec.register_requests(&trace.requests);
+        for r in 0..cfg.fleet.replicas {
+            rec.register_replica(
+                r,
+                fleet.replicas[r].cluster.relaxed.len(),
+                fleet.replicas[r].cluster.strict.len(),
+            );
+        }
+        fleet.telemetry = rec;
+    }
+    fleet.run(trace)
 }
 
 #[cfg(test)]

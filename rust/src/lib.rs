@@ -25,6 +25,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod sim;
 pub mod sweep;
+pub mod telemetry;
 pub mod testutil;
 pub mod trace;
 pub mod transport;
@@ -52,7 +53,8 @@ pub mod prelude {
         EngineOutcome,
     };
     pub use crate::fleet::{
-        simulate_fleet, Fleet, FleetConfig, FleetResult,
+        simulate_fleet, simulate_fleet_traced, Fleet, FleetConfig,
+        FleetResult,
     };
     pub use crate::instance::{PoolRole, PrefillSegment, StepKind};
     pub use crate::metrics::{
@@ -68,7 +70,10 @@ pub mod prelude {
         KvHome, RolePhase, SchedulerCore, StubWallClockExecutor,
         VirtualExecutor,
     };
-    pub use crate::sim::{simulate, SimConfig, SimResult};
+    pub use crate::sim::{simulate, simulate_traced, SimConfig, SimResult};
+    pub use crate::telemetry::{
+        SpanAudit, TelemetryOpts, TelemetryOut, TraceRecorder,
+    };
     pub use crate::transport::{
         ChunkOrder, JobId, TransferJob, TransferKind, TransportEngine,
     };

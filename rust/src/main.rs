@@ -9,8 +9,9 @@
 
 use ooco::config::{FaultSpec, FleetSpec, ModelSpec, ServingConfig};
 use ooco::coordinator::Policy;
-use ooco::fleet::{simulate_fleet, FleetConfig};
-use ooco::sim::{simulate, SimConfig};
+use ooco::fleet::{simulate_fleet_traced, FleetConfig};
+use ooco::sim::{simulate_traced, SimConfig};
+use ooco::telemetry::TelemetryOpts;
 use ooco::trace::datasets::DatasetProfile;
 use ooco::trace::generator::{offline_trace, online_trace};
 use ooco::trace::io::save_trace;
@@ -70,7 +71,9 @@ USAGE: ooco <serve|simulate|sweep|roofline|trace> [--flags]
             [--ablation full] [--overload best-effort|shed] [--seed 42]
             [--fleet 2|'fleet(replicas=2,route=least,steal=4)']
             [--fault 'crash(at=600,replica=0,pool=relaxed,inst=1,down=120,notice=30); mtbf(mean=900,mttr=60)']
-            [--json-out result.json]
+            [--json-out result.json]  (adds timeline + attribution keys)
+            [--trace-out trace.perfetto.json]  (Chrome/Perfetto timeline)
+            [--progress]  (periodic progress line on stderr)
   sweep     --policy ooco --online-rate 0.5 --qps 1,2,4,8 --duration 600
             [--pool-policy static] [--relaxed 1 --strict 1]
             [--prefix-profile shared-system|few-shot|agentic]
@@ -163,6 +166,32 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     cfg.ablation = args.parse_flag("ablation", ooco::coordinator::Ablation::full())?;
     cfg.seed = seed;
 
+    // Flight recorder: enabled whenever an output that needs it was
+    // requested; library/bench callers keep the zero-overhead no-op.
+    let trace_out = args.opt_str("trace-out");
+    let progress = args.bool("progress", false);
+    let telemetry_opts = if trace_out.is_some()
+        || progress
+        || args.opt_str("json-out").is_some()
+    {
+        let mut opts = TelemetryOpts::new(cfg.serving.slo);
+        opts.perfetto = trace_out.is_some();
+        opts.progress = progress;
+        Some(opts)
+    } else {
+        None
+    };
+    let write_trace = |tel: &Option<ooco::telemetry::TelemetryOut>|
+     -> anyhow::Result<()> {
+        if let (Some(path), Some(tel)) = (trace_out, tel.as_ref()) {
+            if let Some(perfetto) = &tel.perfetto {
+                std::fs::write(path, perfetto)?;
+                println!("wrote Perfetto trace to {path}");
+            }
+        }
+        Ok(())
+    };
+
     // Fleet mode: any multi-replica topology or fault schedule routes
     // through the fleet layer (DESIGN.md §3.9). A single-replica
     // zero-fault fleet is bit-identical to the plain path below.
@@ -174,25 +203,31 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             fleet: fleet_spec,
             fault,
         };
-        let res = simulate_fleet(&trace, &fcfg);
+        let res = simulate_fleet_traced(&trace, &fcfg, telemetry_opts);
         println!("{}", res.report.summary_line());
         println!("{}", res.fleet.summary_line());
         if let Some(path) = args.opt_str("json-out") {
-            let out = Json::obj(vec![
+            let mut pairs: Vec<(&str, Json)> = vec![
                 ("policy", Json::Str(cfg.policy.to_string())),
                 ("fleet_spec", fcfg.fleet.to_json()),
                 ("fault_spec", fcfg.fault.to_json()),
                 ("seed", Json::Num(seed as f64)),
                 ("report", res.report.to_json()),
                 ("fleet", res.fleet.to_json()),
-            ]);
+            ];
+            if let Some(tel) = &res.telemetry {
+                pairs.push(("timeline", tel.timeline.clone()));
+                pairs.push(("attribution", tel.attribution.clone()));
+            }
+            let out = Json::obj(pairs);
             std::fs::write(path, out.to_pretty())?;
             println!("wrote machine-readable result to {path}");
         }
+        write_trace(&res.telemetry)?;
         return Ok(());
     }
 
-    let res = simulate(&trace, &cfg);
+    let res = simulate_traced(&trace, &cfg, telemetry_opts);
     println!("{}", res.report.summary_line());
     println!(
         "strict util {:.1}% relaxed util {:.1}% migrations {} evictions {} preemptions {} rescues {}",
@@ -214,7 +249,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         println!("{}", res.chunk.summary_line());
     }
     if let Some(path) = args.opt_str("json-out") {
-        let out = Json::obj(vec![
+        let mut pairs: Vec<(&str, Json)> = vec![
             ("policy", Json::Str(cfg.policy.to_string())),
             ("pool_policy", Json::Str(cfg.serving.pool.to_string())),
             (
@@ -227,10 +262,16 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             ("pool", res.pool.to_json()),
             ("prefix", res.prefix.to_json()),
             ("chunk", res.chunk.to_json()),
-        ]);
+        ];
+        if let Some(tel) = &res.telemetry {
+            pairs.push(("timeline", tel.timeline.clone()));
+            pairs.push(("attribution", tel.attribution.clone()));
+        }
+        let out = Json::obj(pairs);
         std::fs::write(path, out.to_pretty())?;
         println!("wrote machine-readable result to {path}");
     }
+    write_trace(&res.telemetry)?;
     Ok(())
 }
 

@@ -15,7 +15,7 @@
 use crate::config::SloSpec;
 use crate::request::{Class, Request};
 use crate::util::json::Json;
-use crate::util::stats::Summary;
+use crate::util::stats::{LatencySummary, Summary};
 
 /// Per-link transport accounting over one run.
 #[derive(Debug, Clone)]
@@ -588,83 +588,100 @@ impl Report {
     }
 }
 
-/// Collects per-request records during a run.
-#[derive(Debug, Default)]
+/// Streaming per-request metrics accumulator: ingests request outcomes one
+/// at a time and keeps only O(histogram-buckets) state — counters plus
+/// [`LatencySummary`] histograms — so multi-million-request traces never
+/// materialize a `Vec<f64>` of latencies (DESIGN.md §3.10). The SLO is
+/// fixed at construction because violation classification happens at
+/// ingest, not at report time.
+#[derive(Debug, Clone)]
 pub struct Recorder {
-    records: Vec<RequestRecord>,
+    slo: SloSpec,
+    online_total: usize,
+    online_finished: usize,
+    online_violations: usize,
+    ttft: LatencySummary,
+    tpot: LatencySummary,
+    offline_total: usize,
+    offline_finished: usize,
+    offline_tokens: f64,
+    offline_evictions: u64,
 }
 
 impl Recorder {
-    pub fn new() -> Self {
-        Self::default()
+    pub fn new(slo: &SloSpec) -> Self {
+        Recorder {
+            slo: *slo,
+            online_total: 0,
+            online_finished: 0,
+            online_violations: 0,
+            ttft: LatencySummary::new(),
+            tpot: LatencySummary::new(),
+            offline_total: 0,
+            offline_finished: 0,
+            offline_tokens: 0.0,
+            offline_evictions: 0,
+        }
     }
 
     pub fn record(&mut self, r: &Request) {
-        self.records.push(RequestRecord::from_request(r));
+        self.push(RequestRecord::from_request(r));
     }
 
     pub fn push(&mut self, rec: RequestRecord) {
-        self.records.push(rec);
+        match rec.class {
+            Class::Online => {
+                self.online_total += 1;
+                if rec.finished_at.is_some() {
+                    self.online_finished += 1;
+                }
+                if rec.violates(&self.slo) {
+                    self.online_violations += 1;
+                }
+                if let Some(t) = rec.ttft {
+                    self.ttft.record(t);
+                }
+                if let Some(t) = rec.avg_tpot {
+                    self.tpot.record(t);
+                }
+            }
+            Class::Offline => {
+                self.offline_total += 1;
+                if rec.finished_at.is_some() {
+                    self.offline_finished += 1;
+                    self.offline_tokens += rec.output_len as f64;
+                }
+                self.offline_evictions += rec.evictions as u64;
+            }
+        }
     }
 
-    pub fn len(&self) -> usize {
-        self.records.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.records.is_empty()
-    }
-
-    pub fn records(&self) -> &[RequestRecord] {
-        &self.records
+    /// Requests ingested so far.
+    pub fn count(&self) -> usize {
+        self.online_total + self.offline_total
     }
 
     /// Build the aggregate report. `duration_s` is the observation window
     /// used for throughput denominators.
-    pub fn report(&self, slo: &SloSpec, duration_s: f64) -> Report {
-        let online: Vec<&RequestRecord> = self
-            .records
-            .iter()
-            .filter(|r| r.class == Class::Online)
-            .collect();
-        let offline: Vec<&RequestRecord> = self
-            .records
-            .iter()
-            .filter(|r| r.class == Class::Offline)
-            .collect();
-
-        let online_finished = online.iter().filter(|r| r.finished_at.is_some()).count();
-        let online_violations = online.iter().filter(|r| r.violates(slo)).count();
-        let ttfts: Vec<f64> = online.iter().filter_map(|r| r.ttft).collect();
-        let tpots: Vec<f64> = online.iter().filter_map(|r| r.avg_tpot).collect();
-
-        let offline_finished: Vec<&&RequestRecord> = offline
-            .iter()
-            .filter(|r| r.finished_at.is_some())
-            .collect();
-        let offline_tokens: f64 = offline_finished
-            .iter()
-            .map(|r| r.output_len as f64)
-            .sum();
+    pub fn report(&self, duration_s: f64) -> Report {
         let dur = duration_s.max(1e-9);
-
         Report {
             duration_s,
-            online_total: online.len(),
-            online_finished,
-            online_violations,
-            online_violation_rate: if online.is_empty() {
+            online_total: self.online_total,
+            online_finished: self.online_finished,
+            online_violations: self.online_violations,
+            online_violation_rate: if self.online_total == 0 {
                 0.0
             } else {
-                online_violations as f64 / online.len() as f64
+                self.online_violations as f64 / self.online_total as f64
             },
-            ttft: Summary::of(&ttfts),
-            tpot: Summary::of(&tpots),
-            offline_total: offline.len(),
-            offline_finished: offline_finished.len(),
-            offline_token_throughput: offline_tokens / dur,
-            offline_request_throughput: offline_finished.len() as f64 / dur,
-            offline_evictions: offline.iter().map(|r| r.evictions as u64).sum(),
+            ttft: self.ttft.summary(),
+            tpot: self.tpot.summary(),
+            offline_total: self.offline_total,
+            offline_finished: self.offline_finished,
+            offline_token_throughput: self.offline_tokens / dur,
+            offline_request_throughput: self.offline_finished as f64 / dur,
+            offline_evictions: self.offline_evictions,
         }
     }
 }
@@ -723,12 +740,13 @@ mod tests {
     #[test]
     fn report_aggregates() {
         let slo = SloSpec::default();
-        let mut rec = Recorder::new();
+        let mut rec = Recorder::new(&slo);
         rec.push(finished_online(1, 1.0, 0.05, 100));
         rec.push(finished_online(2, 9.0, 0.05, 100)); // ttft violation
         rec.push(finished_offline(3, 500, 50.0));
         rec.push(finished_offline(4, 300, 80.0));
-        let rep = rec.report(&slo, 100.0);
+        assert_eq!(rec.count(), 4);
+        let rep = rec.report(100.0);
         assert_eq!(rep.online_total, 2);
         assert_eq!(rep.online_violations, 1);
         assert!((rep.online_violation_rate - 0.5).abs() < 1e-12);
@@ -767,10 +785,10 @@ mod tests {
     #[test]
     fn report_json_is_machine_readable() {
         let slo = SloSpec::default();
-        let mut rec = Recorder::new();
+        let mut rec = Recorder::new(&slo);
         rec.push(finished_online(1, 1.0, 0.05, 100));
         rec.push(finished_offline(2, 500, 50.0));
-        let rep = rec.report(&slo, 100.0);
+        let rep = rec.report(100.0);
         let j = rep.to_json();
         assert_eq!(j.get("online_total").as_f64(), Some(1.0));
         assert_eq!(j.get("slo_attainment").as_f64(), Some(1.0));
@@ -888,7 +906,7 @@ mod tests {
 
     #[test]
     fn empty_report() {
-        let rep = Recorder::new().report(&SloSpec::default(), 10.0);
+        let rep = Recorder::new(&SloSpec::default()).report(10.0);
         assert_eq!(rep.online_total, 0);
         assert_eq!(rep.online_violation_rate, 0.0);
         assert!(rep.meets_slo(&SloSpec::default()));

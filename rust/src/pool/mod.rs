@@ -41,7 +41,7 @@ use crate::config::{PoolPolicy, SloSpec};
 use crate::metrics::{PoolEpoch, PoolReport};
 use crate::perfmodel::PerfModel;
 use crate::request::Class;
-use crate::util::stats::Summary;
+use crate::util::stats::LatencySummary;
 
 /// Minimum interval between `Reactive` trigger evaluations (s) — bounds
 /// plan-evaluation churn on the event-dense decode path.
@@ -87,7 +87,7 @@ pub struct PoolManager {
     chunk_reserve: usize,
     // ---- metrics ----
     epochs: Vec<PoolEpoch>,
-    transition_s: Vec<f64>,
+    transition_s: LatencySummary,
     plans: u64,
     flips: u64,
     stranded_acc: f64,
@@ -111,7 +111,7 @@ impl PoolManager {
             prefix_share: 0.0,
             chunk_reserve: 0,
             epochs: Vec::new(),
-            transition_s: Vec::new(),
+            transition_s: LatencySummary::new(),
             plans: 0,
             flips: 0,
             stranded_acc: 0.0,
@@ -282,7 +282,7 @@ impl PoolManager {
     /// is complete, record its drain-to-warm duration.
     pub fn on_warm_done(&mut self, now: f64) {
         if let Some(t) = self.transition.take() {
-            self.transition_s.push((now - t.started).max(0.0));
+            self.transition_s.record((now - t.started).max(0.0));
         }
     }
 
@@ -310,7 +310,7 @@ impl PoolManager {
             plans: self.plans,
             flips: self.flips,
             epochs: self.epochs.clone(),
-            transition_s: Summary::of(&self.transition_s),
+            transition_s: self.transition_s.summary(),
             stranded_instance_s: stranded,
             final_relaxed: n_relaxed,
             final_strict: n_strict,

@@ -17,6 +17,7 @@ use crate::coordinator::Router;
 use crate::instance::{Instance, PoolRole};
 use crate::perfmodel::BatchStats;
 use crate::request::{Request, RequestId};
+use crate::util::stats::LatencySummary;
 
 /// Where a not-yet-decoding request's KV currently lives.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -58,8 +59,9 @@ pub struct ClusterState {
     /// Per-request time of the recoverable eviction currently being
     /// recovered from (NaN = none); cleared when decode resumes.
     pub evict_started: Vec<f64>,
-    /// Preemption-to-restart latencies of recovered evictions (s).
-    pub restart_latencies: Vec<f64>,
+    /// Preemption-to-restart latencies of recovered evictions (s),
+    /// accumulated as a streaming histogram (O(buckets) memory).
+    pub restart_latency: LatencySummary,
     // ---- role-scoped accounting across flips ----
     /// Busy seconds earned by instances *while serving a role they have
     /// since flipped away from* (an instance's live counters are retired
@@ -198,7 +200,7 @@ impl ClusterState {
             relaxed_inst_s: 0.0,
             strict_inst_s: 0.0,
             last_role_change_t: 0.0,
-            restart_latencies: Vec::new(),
+            restart_latency: LatencySummary::new(),
             preemptions: 0,
             evictions: 0,
             migrations: 0,

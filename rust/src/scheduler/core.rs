@@ -43,7 +43,6 @@ use crate::transport::{
     ChunkOrder, JobId, Progress, TransferJob, TransferKind, TransportEngine,
 };
 use crate::util::rng::Pcg;
-use crate::util::stats::Summary;
 
 use super::action::{Action, InstanceRef, RolePhase};
 use super::cluster::{ClusterState, KvHome};
@@ -1102,7 +1101,7 @@ impl SchedulerCore {
                 }
                 let started = self.cluster.evict_started[rid as usize];
                 if started.is_finite() {
-                    self.cluster.restart_latencies.push(self.now - started);
+                    self.cluster.restart_latency.record(self.now - started);
                     self.cluster.evict_started[rid as usize] = f64::NAN;
                 }
                 if self.cluster.relaxed[to_relaxed].is_idle() {
@@ -1172,7 +1171,7 @@ impl SchedulerCore {
             rescues: self.cluster.rescues,
             offloads: self.cluster.offloads,
             restores: self.cluster.restores,
-            restart_latency: Summary::of(&self.cluster.restart_latencies),
+            restart_latency: self.cluster.restart_latency.summary(),
             bytes_enqueued: self.transport.bytes_enqueued,
             bytes_delivered: self.transport.bytes_delivered,
             jobs_cancelled: self.transport.jobs_cancelled,
@@ -3479,8 +3478,8 @@ mod tests {
             .iter()
             .any(|a| matches!(a, Action::TransferDone { req: 0, .. })));
         assert!(core.cluster.relaxed[0].offline_decoding.contains(&0));
-        assert_eq!(core.cluster.restart_latencies.len(), 1);
-        assert!(core.cluster.restart_latencies[0] > 0.0);
+        assert_eq!(core.cluster.restart_latency.count(), 1);
+        assert!(core.cluster.restart_latency.min() > 0.0);
         assert_eq!(core.cluster.requests[0].phase, Phase::Decoding);
     }
 

@@ -20,6 +20,7 @@
 //! The third implementation, `engine::EngineExecutor`, lives next to the
 //! PJRT runtime it drives and uses a real wall clock and real model steps.
 
+use crate::telemetry::TraceRecorder;
 use crate::trace::Trace;
 
 use super::action::{Action, InstanceRef};
@@ -59,6 +60,9 @@ pub struct VirtualExecutor {
     /// When `Some`, every action the core emits is appended — the
     /// observable stream asserted by the differential tests.
     pub log: Option<Vec<Action>>,
+    /// Flight recorder tapping the same stream (disabled by default —
+    /// a single branch per action batch).
+    pub telemetry: TraceRecorder,
 }
 
 impl VirtualExecutor {
@@ -74,10 +78,12 @@ impl VirtualExecutor {
             horizon,
             events: 0,
             log: None,
+            telemetry: TraceRecorder::disabled(),
         }
     }
 
     fn apply(&mut self, actions: Vec<Action>) {
+        self.telemetry.observe(self.now, 0, &actions);
         for a in &actions {
             match *a {
                 Action::StartStep {
@@ -160,6 +166,15 @@ impl Executor for VirtualExecutor {
                 }
             };
             self.apply(actions);
+            if self.telemetry.sample_due(self.now) {
+                self.telemetry.sample_replica(
+                    self.now,
+                    0,
+                    &core.cluster,
+                    core.transport.links(),
+                );
+                self.telemetry.sample_tick(self.now);
+            }
         }
         Ok(ExecStats {
             end_time: self.now,

@@ -25,6 +25,7 @@ use crate::metrics::{
     TransportReport,
 };
 use crate::scheduler::{CoreConfig, Executor, SchedulerCore, VirtualExecutor};
+use crate::telemetry::{TelemetryOpts, TelemetryOut, TraceRecorder};
 use crate::trace::Trace;
 
 /// Simulation parameters.
@@ -102,18 +103,50 @@ pub struct SimResult {
     /// Chunked-prefill iteration accounting (budget utilization,
     /// interference delay, preemption work retained — DESIGN.md §3.8).
     pub chunk: ChunkReport,
+    /// Flight-recorder output (timeline, attribution, optional Perfetto
+    /// trace — DESIGN.md §3.10). `None` unless the run was traced via
+    /// [`simulate_traced`].
+    pub telemetry: Option<TelemetryOut>,
 }
 
 /// Run the simulation of `trace` under `cfg`: build a [`SchedulerCore`],
 /// drive it with a [`VirtualExecutor`], and aggregate the outcome.
 pub fn simulate(trace: &Trace, cfg: &SimConfig) -> SimResult {
+    simulate_traced(trace, cfg, None)
+}
+
+/// [`simulate`] with an optional flight recorder attached to the
+/// executor's action stream; its output lands in
+/// [`SimResult::telemetry`].
+pub fn simulate_traced(
+    trace: &Trace,
+    cfg: &SimConfig,
+    telemetry: Option<TelemetryOpts>,
+) -> SimResult {
     let mut core = SchedulerCore::new(trace.requests.clone(), cfg.core());
     let horizon = trace.duration() + cfg.drain_s;
     let mut executor = VirtualExecutor::new(trace, horizon);
+    if let Some(opts) = telemetry {
+        let mut rec = TraceRecorder::flight(opts);
+        rec.register_requests(&trace.requests);
+        rec.register_replica(
+            0,
+            core.cluster.relaxed.len(),
+            core.cluster.strict.len(),
+        );
+        executor.telemetry = rec;
+    }
     let stats = executor
         .run(&mut core)
         .expect("virtual execution is infallible");
-    build_result(&core, trace, cfg, stats.end_time)
+    let mut result = build_result(&core, trace, cfg, stats.end_time);
+    if executor.telemetry.is_enabled() {
+        for r in &core.cluster.requests {
+            executor.telemetry.finalize_request(r);
+        }
+        result.telemetry = executor.telemetry.finish(stats.end_time);
+    }
+    result
 }
 
 fn build_result(
@@ -123,12 +156,12 @@ fn build_result(
     end_time: f64,
 ) -> SimResult {
     let cluster = &core.cluster;
-    let mut recorder = Recorder::new();
+    let mut recorder = Recorder::new(&cfg.serving.slo);
     for r in &cluster.requests {
         recorder.record(r);
     }
     let duration = trace.duration().max(1e-9);
-    let report = recorder.report(&cfg.serving.slo, duration);
+    let report = recorder.report(duration);
     // Utilization denominators are per-role instance-seconds: under
     // elastic repartitioning pool sizes change mid-run, so `duration ×
     // final size` would misattribute. The window runs to the end of the
@@ -153,5 +186,6 @@ fn build_result(
         pool: core.pool_report(),
         prefix: core.prefix_report(),
         chunk: core.chunk_report(),
+        telemetry: None,
     }
 }

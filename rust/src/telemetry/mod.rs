@@ -1,0 +1,1907 @@
+//! Flight-recorder telemetry (DESIGN.md §3.10).
+//!
+//! The scheduler's observable behavior is its typed [`Action`] stream —
+//! the same stream the differential tests assert. This module taps that
+//! single choke point and reconstructs, *without touching the decision
+//! code*, everything an operator needs to see about a run:
+//!
+//! - **per-request lifecycle spans** — arrival → queue → admit → prefill
+//!   chunks → preemption / eviction / migration / transfer → decode →
+//!   complete, with the instance, pool, and cause attached;
+//! - **per-instance tracks** — every iteration as a slice (kind,
+//!   composition, cached tokens), pool flips, preemptions, and crash
+//!   windows;
+//! - **a periodic gauge sampler** — pool sizes, KV occupancy, queue
+//!   depths, link utilization, and sliding-window SLO attainment,
+//!   emitted as the `timeline` key of `--json-out`;
+//! - **a Chrome/Perfetto trace** (`--trace-out`) with flow arrows linking
+//!   evictions, KV transfers, and the rescued request's next step across
+//!   instances; and
+//! - **an SLO-violation attribution report** decomposing each violated
+//!   online request's TTFT and TPOT into queueing, transfer-stall,
+//!   chunk-interference, and compute components whose sum reproduces the
+//!   measured latency exactly (queueing is the closed-form residual).
+//!
+//! The default [`TraceRecorder::disabled`] recorder is a single `Option`
+//! check per executor callback — the simulator's hot loop pays nothing
+//! when tracing is off (guarded by `benches/bench_sim_throughput`).
+//!
+//! Everything recorded derives from the deterministic action stream and
+//! the virtual clock, so for a fixed seed and config the Perfetto JSON
+//! and the `timeline`/`attribution` values are byte-identical across
+//! runs (asserted by `tests/telemetry_properties.rs` and the fleet
+//! determinism test). Wall-clock time is used only for the optional
+//! `--progress` stderr lines.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Instant;
+
+use crate::config::SloSpec;
+use crate::instance::{PoolRole, StepKind};
+use crate::metrics::RequestRecord;
+use crate::request::{Class, Request, RequestId};
+use crate::scheduler::action::{Action, InstanceRef, RolePhase};
+use crate::scheduler::cluster::ClusterState;
+use crate::transport::{JobId, LinkState, TransferKind};
+use crate::util::json::Json;
+
+/// Sliding window (virtual seconds) of the gauge sampler's SLO-attainment
+/// estimate.
+const ATTAINMENT_WINDOW_S: f64 = 60.0;
+/// Perfetto thread id of the per-replica pool-manager notice track.
+const TID_POOL_MANAGER: usize = 50;
+/// Perfetto thread ids of instance tracks start here (one per physical
+/// GPU, stable across role flips).
+const TID_INSTANCE_BASE: usize = 100;
+/// Perfetto thread ids of transfer-lane tracks start here; clusters large
+/// enough to collide with this base are far beyond simulated scales.
+const TID_LANE_BASE: usize = 300;
+/// Concurrent-transfer lanes rendered per link before slices stack.
+const LANES_PER_LINK: usize = 32;
+const EPS: f64 = 1e-9;
+
+// ----------------------------------------------------------------- options
+
+/// Configuration of an enabled flight recorder.
+#[derive(Debug, Clone, Copy)]
+pub struct TelemetryOpts {
+    /// Build the Chrome/Perfetto trace-event buffer (`--trace-out`).
+    pub perfetto: bool,
+    /// Gauge sampling cadence in virtual seconds.
+    pub sample_interval_s: f64,
+    /// SLO bounds used for the attainment gauge and the attribution
+    /// report's violation classification.
+    pub slo: SloSpec,
+    /// Emit periodic progress lines on stderr (wall-clock rates; never
+    /// part of the deterministic outputs).
+    pub progress: bool,
+}
+
+impl TelemetryOpts {
+    pub fn new(slo: SloSpec) -> Self {
+        TelemetryOpts {
+            perfetto: false,
+            sample_interval_s: 5.0,
+            slo,
+            progress: false,
+        }
+    }
+}
+
+// ------------------------------------------------------------------ output
+
+/// Everything a finished recorder hands back to the caller.
+#[derive(Debug, Clone)]
+pub struct TelemetryOut {
+    /// Gauge-sampler series — the `timeline` key of `--json-out`.
+    pub timeline: Json,
+    /// SLO-violation attribution report — the `attribution` key.
+    pub attribution: Json,
+    /// Chrome trace-event JSON (present when
+    /// [`TelemetryOpts::perfetto`] was set).
+    pub perfetto: Option<String>,
+    /// Span well-formedness counters for the property tests.
+    pub audit: SpanAudit,
+}
+
+/// Structural invariants of the recorded spans, checked by
+/// `tests/telemetry_properties.rs`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpanAudit {
+    /// Step spans opened (one per observed `StartStep`).
+    pub opened_spans: u64,
+    /// Spans closed by a successor step on the same track, a preemption
+    /// path, or a crash.
+    pub closed_spans: u64,
+    /// Spans still open when the run ended (0 for a drained run).
+    pub force_closed_spans: u64,
+    /// Track-local timestamp regressions (a step starting measurably
+    /// before its predecessor's end).
+    pub monotone_violations: u64,
+    /// Actions naming an instance outside the registered topology.
+    pub dangling_instance_refs: u64,
+    /// Completed chunked-prefill requests whose chunk-span accounting
+    /// was checked (exclusive-mode prefills carry no chunk segments and
+    /// are skipped).
+    pub chunk_audited: u64,
+    /// Audited requests whose final-attempt chunk spans did not sum to
+    /// the measured `prefill_target - prefill_cached`.
+    pub chunk_mismatches: u64,
+    /// Attribution rows emitted (violated online requests).
+    pub attribution_rows: u64,
+    /// Worst |component sum − measured TTFT| over all attribution rows.
+    pub max_attr_residual: f64,
+}
+
+// ---------------------------------------------------------- recorder state
+
+/// Attribution interval of one pre-first-token step: `own` is the share
+/// of the iteration's token work belonging to this request (the rest is
+/// chunk interference).
+#[derive(Debug, Clone, Copy)]
+struct StepInterval {
+    start: f64,
+    end: f64,
+    own: f64,
+}
+
+/// Where an open step's per-participant attribution went, so preemption
+/// and crash truncation can patch it.
+#[derive(Debug, Clone, Copy)]
+enum PartRef {
+    /// Index into the request's pre-first-token interval list.
+    Pre(usize),
+    /// Decode-phase scalar contribution (union cursor accounting).
+    Dec {
+        eff_start: f64,
+        compute: f64,
+        interfere: f64,
+    },
+    None,
+}
+
+/// A step span awaiting its end (closed by the next step on the track,
+/// a preemption reschedule, a crash, or end-of-run force close).
+#[derive(Debug)]
+struct OpenStep {
+    ev_idx: Option<usize>,
+    start: f64,
+    end: f64,
+    kind: StepKind,
+    parts: Vec<(RequestId, PartRef)>,
+}
+
+/// Per-request recorder state: workload statics, milestone estimates,
+/// prefill-chunk audit credit, and attribution accumulators.
+#[derive(Debug, Clone, Default)]
+struct ReqTrack {
+    online: bool,
+    arrival: f64,
+    prompt_len: usize,
+    output_len: usize,
+    admitted_at: Option<f64>,
+    first_token_est: Option<f64>,
+    finished_est: Option<f64>,
+    evictions: u32,
+    /// Current KV home `(replica, pool, index)` — flow-arrow anchor.
+    home: Option<(usize, u8, usize)>,
+    /// Uncached prefill tokens announced by composed-iteration chunk
+    /// segments for the current attempt; reset on eviction (recompute)
+    /// and on exclusive-mode preemption (work discarded), audited
+    /// against the measured `prefill_target - prefill_cached`.
+    prefill_credit: i64,
+    /// The current prefill attempt ran (at least partly) as an
+    /// exclusive step, which carries no chunk segments — the chunk
+    /// audit does not apply to this request.
+    exclusive_prefill: bool,
+    pre_steps: Vec<StepInterval>,
+    pre_transfers: Vec<(f64, f64)>,
+    dec_busy_until: f64,
+    dec_compute: f64,
+    dec_interfere: f64,
+    dec_transfer: f64,
+}
+
+/// Stable per-GPU track ids, mirrored across pool flips (a flip moves
+/// the drained tail instance between pools; see `ClusterState`).
+#[derive(Debug, Clone, Default)]
+struct ReplicaTracks {
+    relaxed: Vec<usize>,
+    strict: Vec<usize>,
+}
+
+/// An in-flight KV transfer job being rendered and attributed.
+#[derive(Debug)]
+struct TransferTrack {
+    rid: RequestId,
+    kind: TransferKind,
+    /// `(link, lane)` once the first chunk order fixes the link.
+    link_lane: Option<(usize, usize)>,
+    flow: Option<u64>,
+    /// The flow's "s" (or continuing "t") event was emitted.
+    anchored: bool,
+    /// A "t" step was emitted at the first chunk slice.
+    stepped: bool,
+}
+
+/// One buffered Chrome trace event; durations stay patchable until
+/// serialization (preemption truncates, crashes close down-windows).
+#[derive(Debug, Clone)]
+struct TraceEvent {
+    ph: &'static str,
+    name: String,
+    cat: &'static str,
+    pid: usize,
+    tid: usize,
+    ts_us: f64,
+    dur_us: Option<f64>,
+    /// Flow binding: `(flow id, bind to enclosing slice)`.
+    flow: Option<(u64, bool)>,
+    args: Vec<(&'static str, Json)>,
+}
+
+impl TraceEvent {
+    fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("cat", Json::Str(self.cat.to_string())),
+            ("ph", Json::Str(self.ph.to_string())),
+            ("pid", Json::Num(self.pid as f64)),
+            ("tid", Json::Num(self.tid as f64)),
+            ("ts", Json::Num(self.ts_us)),
+        ];
+        if let Some(d) = self.dur_us {
+            pairs.push(("dur", Json::Num(d)));
+        }
+        if let Some((id, bind)) = self.flow {
+            pairs.push(("id", Json::Num(id as f64)));
+            if bind {
+                pairs.push(("bp", Json::Str("e".to_string())));
+            }
+        }
+        if !self.args.is_empty() {
+            let args: Vec<(&str, Json)> = self
+                .args
+                .iter()
+                .map(|(k, v)| (*k, v.clone()))
+                .collect();
+            pairs.push(("args", Json::obj(args)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+fn step_label(kind: StepKind) -> &'static str {
+    match kind {
+        StepKind::PrefillOnline => "prefill-online",
+        StepKind::PrefillOffline => "prefill-offline",
+        StepKind::DecodeRelaxed => "decode-relaxed",
+        StepKind::DecodeStrict => "decode-strict",
+        StepKind::Composed => "composed",
+        StepKind::Warm => "warm",
+    }
+}
+
+fn key_of(replica: usize, inst: InstanceRef) -> (usize, u8, usize) {
+    match inst {
+        InstanceRef::Relaxed(i) => (replica, 0, i),
+        InstanceRef::Strict(i) => (replica, 1, i),
+    }
+}
+
+fn inst_of(key: (usize, u8, usize)) -> InstanceRef {
+    if key.1 == 0 {
+        InstanceRef::Relaxed(key.2)
+    } else {
+        InstanceRef::Strict(key.2)
+    }
+}
+
+// ---------------------------------------------------------------- recorder
+
+/// The action-stream tap. [`TraceRecorder::disabled`] (the executor
+/// default) is a no-op whose every entry point is one branch;
+/// [`TraceRecorder::flight`] records.
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    inner: Option<Box<FlightRecorder>>,
+}
+
+impl TraceRecorder {
+    /// The zero-overhead default: observes nothing.
+    pub fn disabled() -> Self {
+        TraceRecorder { inner: None }
+    }
+
+    /// An enabled flight recorder.
+    pub fn flight(opts: TelemetryOpts) -> Self {
+        TraceRecorder {
+            inner: Some(Box::new(FlightRecorder::new(opts))),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Register workload statics (class, arrival, prompt/output lengths)
+    /// before the run starts.
+    pub fn register_requests(&mut self, requests: &[Request]) {
+        if let Some(f) = &mut self.inner {
+            f.register_requests(requests);
+        }
+    }
+
+    /// Register `replica`'s initial pool topology; tracks stay stable
+    /// across role flips.
+    pub fn register_replica(&mut self, replica: usize, relaxed: usize, strict: usize) {
+        if let Some(f) = &mut self.inner {
+            f.register_replica(replica, relaxed, strict);
+        }
+    }
+
+    /// Tap one action batch from `replica`'s core at virtual time `now`.
+    #[inline]
+    pub fn observe(&mut self, now: f64, replica: usize, actions: &[Action]) {
+        if let Some(f) = &mut self.inner {
+            f.observe(now, replica, actions);
+        }
+    }
+
+    /// True when the gauge sampler's next tick is due.
+    #[inline]
+    pub fn sample_due(&self, now: f64) -> bool {
+        match &self.inner {
+            Some(f) => now >= f.next_sample,
+            None => false,
+        }
+    }
+
+    /// Sample one replica's gauges (call once per replica per due tick).
+    pub fn sample_replica(
+        &mut self,
+        now: f64,
+        replica: usize,
+        cluster: &ClusterState,
+        links: &[LinkState],
+    ) {
+        if let Some(f) = &mut self.inner {
+            f.sample_replica(now, replica, cluster, links);
+        }
+    }
+
+    /// Advance the sampling clock (after all replicas sampled) and emit
+    /// the optional progress line.
+    pub fn sample_tick(&mut self, now: f64) {
+        if let Some(f) = &mut self.inner {
+            f.sample_tick(now);
+        }
+    }
+
+    /// Fold `r`'s final measured state in: chunk-span audit plus the
+    /// TTFT/TPOT attribution row when `r` is a violated online request.
+    pub fn finalize_request(&mut self, r: &Request) {
+        if let Some(f) = &mut self.inner {
+            f.finalize_request(r);
+        }
+    }
+
+    /// Close remaining spans at `end_time` and build the outputs.
+    /// Returns `None` for a disabled recorder.
+    pub fn finish(&mut self, end_time: f64) -> Option<TelemetryOut> {
+        self.inner.take().map(|mut f| f.finish(end_time))
+    }
+}
+
+#[derive(Debug)]
+struct FlightRecorder {
+    opts: TelemetryOpts,
+    reqs: Vec<ReqTrack>,
+    replicas: Vec<ReplicaTracks>,
+    open_steps: BTreeMap<(usize, u8, usize), OpenStep>,
+    /// Crash windows awaiting recovery: key → (event idx, start).
+    open_down: BTreeMap<(usize, u8, usize), (Option<usize>, f64)>,
+    transfers: BTreeMap<(usize, JobId), TransferTrack>,
+    /// Lane occupancy per `(replica, link)`.
+    lanes: BTreeMap<(usize, usize), Vec<bool>>,
+    track_names: BTreeMap<(usize, usize), String>,
+    events: Vec<TraceEvent>,
+    next_flow: u64,
+    /// Flow ids waiting for the rescued request's next step (or its
+    /// next transfer hop, for offload → restore chains).
+    pending_flow: BTreeMap<RequestId, u64>,
+    next_sample: f64,
+    last_sample_at: f64,
+    samples: Vec<Json>,
+    link_busy_prev: BTreeMap<(usize, usize), f64>,
+    actions_seen: u64,
+    online_finished: u64,
+    online_violations_est: u64,
+    /// Recent online completions `(finish time, met SLO)` for the
+    /// sliding-window attainment gauge.
+    window: VecDeque<(f64, bool)>,
+    attr_rows: Vec<Json>,
+    dominant_ttft: BTreeMap<&'static str, u64>,
+    dominant_tpot: BTreeMap<&'static str, u64>,
+    component_totals: BTreeMap<&'static str, f64>,
+    audit: SpanAudit,
+    started_wall: Instant,
+    last_progress_wall: f64,
+    last_progress_actions: u64,
+}
+
+impl FlightRecorder {
+    fn new(opts: TelemetryOpts) -> Self {
+        FlightRecorder {
+            opts,
+            reqs: Vec::new(),
+            replicas: Vec::new(),
+            open_steps: BTreeMap::new(),
+            open_down: BTreeMap::new(),
+            transfers: BTreeMap::new(),
+            lanes: BTreeMap::new(),
+            track_names: BTreeMap::new(),
+            events: Vec::new(),
+            next_flow: 0,
+            pending_flow: BTreeMap::new(),
+            next_sample: 0.0,
+            last_sample_at: 0.0,
+            samples: Vec::new(),
+            link_busy_prev: BTreeMap::new(),
+            actions_seen: 0,
+            online_finished: 0,
+            online_violations_est: 0,
+            window: VecDeque::new(),
+            attr_rows: Vec::new(),
+            dominant_ttft: BTreeMap::new(),
+            dominant_tpot: BTreeMap::new(),
+            component_totals: BTreeMap::new(),
+            audit: SpanAudit::default(),
+            started_wall: Instant::now(),
+            last_progress_wall: 0.0,
+            last_progress_actions: 0,
+        }
+    }
+
+    fn register_requests(&mut self, requests: &[Request]) {
+        let max_id = requests
+            .iter()
+            .map(|r| r.id as usize + 1)
+            .max()
+            .unwrap_or(0);
+        if self.reqs.len() < max_id {
+            self.reqs.resize(max_id, ReqTrack::default());
+        }
+        for r in requests {
+            let t = &mut self.reqs[r.id as usize];
+            t.online = r.class == Class::Online;
+            t.arrival = r.arrival;
+            t.prompt_len = r.prompt_len;
+            t.output_len = r.output_len;
+        }
+    }
+
+    fn register_replica(&mut self, replica: usize, relaxed: usize, strict: usize) {
+        if self.replicas.len() <= replica {
+            self.replicas
+                .resize(replica + 1, ReplicaTracks::default());
+        }
+        let rt = &mut self.replicas[replica];
+        rt.relaxed = (0..relaxed).collect();
+        rt.strict = (relaxed..relaxed + strict).collect();
+    }
+
+    // ---------------------------------------------------------- plumbing
+
+    fn push_event(&mut self, ev: TraceEvent) -> usize {
+        self.events.push(ev);
+        self.events.len() - 1
+    }
+
+    /// Perfetto thread id of `inst`'s stable per-GPU track; `None` (and
+    /// an audit mark) when the reference is outside the topology.
+    fn tid_of(&mut self, replica: usize, inst: InstanceRef) -> Option<usize> {
+        let sid = match self.replicas.get(replica) {
+            Some(rt) => match inst {
+                InstanceRef::Relaxed(i) => rt.relaxed.get(i).copied(),
+                InstanceRef::Strict(i) => rt.strict.get(i).copied(),
+            },
+            None => None,
+        };
+        match sid {
+            Some(s) => {
+                let tid = TID_INSTANCE_BASE + s;
+                self.track_names
+                    .entry((replica, tid))
+                    .or_insert_with(|| format!("gpu{s}"));
+                Some(tid)
+            }
+            None => {
+                self.audit.dangling_instance_refs += 1;
+                None
+            }
+        }
+    }
+
+    fn instant(
+        &mut self,
+        now: f64,
+        replica: usize,
+        inst: InstanceRef,
+        name: String,
+        cat: &'static str,
+    ) {
+        if !self.opts.perfetto {
+            return;
+        }
+        if let Some(tid) = self.tid_of(replica, inst) {
+            self.push_event(TraceEvent {
+                ph: "i",
+                name,
+                cat,
+                pid: replica,
+                tid,
+                ts_us: now * 1e6,
+                dur_us: None,
+                flow: None,
+                args: vec![("s", Json::Str("t".to_string()))],
+            });
+        }
+    }
+
+    fn alloc_lane(&mut self, replica: usize, link: usize) -> usize {
+        let lanes = self.lanes.entry((replica, link)).or_default();
+        if let Some(i) = lanes.iter().position(|used| !*used) {
+            lanes[i] = true;
+            return i;
+        }
+        if lanes.len() < LANES_PER_LINK {
+            lanes.push(true);
+            lanes.len() - 1
+        } else {
+            LANES_PER_LINK - 1
+        }
+    }
+
+    fn free_lane(&mut self, replica: usize, link: usize, lane: usize) {
+        if let Some(lanes) = self.lanes.get_mut(&(replica, link)) {
+            if lane < lanes.len() {
+                lanes[lane] = false;
+            }
+        }
+    }
+
+    /// Decode-phase union-cursor accounting: the step `[start, end]`
+    /// contributes `own` compute share, the rest interference.
+    fn add_decode(t: &mut ReqTrack, start: f64, end: f64, own: f64) -> PartRef {
+        let floor = t.first_token_est.unwrap_or(start);
+        let s = start.max(t.dec_busy_until).max(floor);
+        if end <= s {
+            return PartRef::None;
+        }
+        let d = end - s;
+        let c = d * own;
+        t.dec_compute += c;
+        t.dec_interfere += d - c;
+        t.dec_busy_until = end;
+        PartRef::Dec {
+            eff_start: s,
+            compute: c,
+            interfere: d - c,
+        }
+    }
+
+    /// Shorten an open step to `new_end`, patching its slice and every
+    /// participant's attribution.
+    fn truncate_step(&mut self, st: &mut OpenStep, new_end: f64) {
+        let new_end = new_end.max(st.start);
+        if new_end >= st.end {
+            return;
+        }
+        let old_end = st.end;
+        st.end = new_end;
+        if let Some(i) = st.ev_idx {
+            self.events[i].dur_us = Some((new_end - st.start) * 1e6);
+        }
+        for (rid, pr) in st.parts.iter_mut() {
+            let t = &mut self.reqs[*rid as usize];
+            match pr {
+                PartRef::Pre(idx) => {
+                    let iv = &mut t.pre_steps[*idx];
+                    iv.end = new_end.max(iv.start);
+                    if t.first_token_est == Some(old_end) {
+                        t.first_token_est = Some(new_end);
+                    }
+                }
+                PartRef::Dec {
+                    eff_start,
+                    compute,
+                    interfere,
+                } => {
+                    let denom = old_end - *eff_start;
+                    if denom > 0.0 {
+                        let scale =
+                            ((new_end - *eff_start).max(0.0) / denom).min(1.0);
+                        let nc = *compute * scale;
+                        let ni = *interfere * scale;
+                        t.dec_compute += nc - *compute;
+                        t.dec_interfere += ni - *interfere;
+                        *compute = nc;
+                        *interfere = ni;
+                        if t.dec_busy_until == old_end {
+                            t.dec_busy_until = new_end.max(*eff_start);
+                        }
+                    }
+                }
+                PartRef::None => {}
+            }
+        }
+    }
+
+    // ----------------------------------------------------------- observe
+
+    fn observe(&mut self, now: f64, replica: usize, actions: &[Action]) {
+        self.actions_seen += actions.len() as u64;
+        for a in actions {
+            match a {
+                Action::StartStep {
+                    inst,
+                    kind,
+                    participants,
+                    prefill,
+                    predicted_latency,
+                    cached_tokens,
+                    seq: _,
+                } => self.on_start_step(
+                    now,
+                    replica,
+                    *inst,
+                    *kind,
+                    participants,
+                    prefill,
+                    *predicted_latency,
+                    *cached_tokens,
+                ),
+                Action::Preempt { inst, delay, seq: _ } => {
+                    self.on_preempt(now, replica, *inst, *delay);
+                }
+                Action::Evict { inst, req } => {
+                    self.on_evict(now, replica, *inst, *req);
+                }
+                Action::Migrate {
+                    req, from_relaxed, ..
+                } => {
+                    self.instant(
+                        now,
+                        replica,
+                        InstanceRef::Relaxed(*from_relaxed),
+                        format!("migrate:{req}"),
+                        "migrate",
+                    );
+                }
+                Action::TransferStart {
+                    job,
+                    req,
+                    kind,
+                    kv_tokens,
+                    chunks,
+                } => self.on_transfer_start(
+                    now, replica, *job, *req, *kind, *kv_tokens, *chunks,
+                ),
+                Action::TransferChunk {
+                    job,
+                    req,
+                    link,
+                    chunk,
+                    predicted_latency,
+                    seq: _,
+                } => self.on_transfer_chunk(
+                    now,
+                    replica,
+                    *job,
+                    *req,
+                    *link,
+                    *chunk,
+                    *predicted_latency,
+                ),
+                Action::TransferDone { job, req, kind } => {
+                    self.on_transfer_done(replica, *job, *req, *kind);
+                }
+                Action::TransferCancel { job, req: _ } => {
+                    if let Some(tt) = self.transfers.remove(&(replica, *job)) {
+                        if let Some((link, lane)) = tt.link_lane {
+                            self.free_lane(replica, link, lane);
+                        }
+                    }
+                }
+                Action::Admit { inst, req } => {
+                    if (*req as usize) < self.reqs.len() {
+                        let t = &mut self.reqs[*req as usize];
+                        if t.admitted_at.is_none() {
+                            t.admitted_at = Some(now);
+                        }
+                        t.home = Some((replica, 0, *inst));
+                    }
+                }
+                Action::PrefixResolve { inst, req, .. } => {
+                    self.on_prefix_resolve(now, replica, *inst, *req);
+                }
+                Action::PrefixEvict { .. } => {}
+                Action::RepartitionPlan {
+                    epoch,
+                    relaxed_target,
+                    strict_target,
+                    ..
+                } => {
+                    if self.opts.perfetto {
+                        self.track_names
+                            .entry((replica, TID_POOL_MANAGER))
+                            .or_insert_with(|| "pool-manager".to_string());
+                        self.push_event(TraceEvent {
+                            ph: "i",
+                            name: format!(
+                                "plan#{epoch}:{relaxed_target}r/{strict_target}s"
+                            ),
+                            cat: "pool",
+                            pid: replica,
+                            tid: TID_POOL_MANAGER,
+                            ts_us: now * 1e6,
+                            dur_us: None,
+                            flow: None,
+                            args: vec![("s", Json::Str("t".to_string()))],
+                        });
+                    }
+                }
+                Action::RoleChange { phase, inst, to } => {
+                    self.on_role_change(now, replica, *phase, *inst, *to);
+                }
+                Action::Complete { req } => self.on_complete(now, *req),
+                Action::InstanceDown { inst } => {
+                    self.on_instance_down(now, replica, *inst);
+                }
+                Action::InstanceUp { inst } => {
+                    self.on_instance_up(now, replica, *inst);
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn on_start_step(
+        &mut self,
+        now: f64,
+        replica: usize,
+        inst: InstanceRef,
+        kind: StepKind,
+        participants: &[RequestId],
+        prefill: &[crate::instance::PrefillSegment],
+        predicted_latency: f64,
+        cached_tokens: usize,
+    ) {
+        let key = key_of(replica, inst);
+        if let Some(prev) = self.open_steps.remove(&key) {
+            if now < prev.end - 1e-6 {
+                self.audit.monotone_violations += 1;
+            }
+            self.audit.closed_spans += 1;
+        }
+        self.audit.opened_spans += 1;
+        let end = now + predicted_latency;
+
+        let mut total: f64 = 0.0;
+        match kind {
+            StepKind::PrefillOnline | StepKind::PrefillOffline => {
+                // Exclusive steps carry no per-request token counts;
+                // weight attribution shares by prompt length.
+                for &rid in participants {
+                    if let Some(t) = self.reqs.get(rid as usize) {
+                        total += t.prompt_len.max(1) as f64;
+                    }
+                }
+            }
+            StepKind::Composed => {
+                total += participants.len() as f64;
+                for seg in prefill {
+                    total += seg.tokens as f64;
+                }
+            }
+            StepKind::DecodeRelaxed | StepKind::DecodeStrict => {
+                total = participants.len() as f64;
+            }
+            StepKind::Warm => {}
+        }
+        let total = total.max(1.0);
+
+        let mut parts: Vec<(RequestId, PartRef)> = Vec::new();
+        match kind {
+            StepKind::PrefillOnline | StepKind::PrefillOffline => {
+                for &rid in participants {
+                    if (rid as usize) >= self.reqs.len() {
+                        continue;
+                    }
+                    let t = &mut self.reqs[rid as usize];
+                    let own = t.prompt_len.max(1) as f64 / total;
+                    // The whole uncached remainder runs in this one
+                    // step — there are no chunk segments to audit.
+                    t.exclusive_prefill = true;
+                    let pr = if t.online && t.first_token_est.is_none() {
+                        t.pre_steps.push(StepInterval {
+                            start: now,
+                            end,
+                            own,
+                        });
+                        PartRef::Pre(t.pre_steps.len() - 1)
+                    } else {
+                        PartRef::None
+                    };
+                    parts.push((rid, pr));
+                    // Prefill completes at this step's end; online
+                    // requests emit their first token there.
+                    if t.first_token_est.is_none() {
+                        t.first_token_est = Some(end);
+                    }
+                    t.home = Some(key);
+                }
+            }
+            StepKind::Composed => {
+                for seg in prefill {
+                    let rid = seg.req;
+                    if (rid as usize) >= self.reqs.len() {
+                        continue;
+                    }
+                    let own = seg.tokens as f64 / total;
+                    let t = &mut self.reqs[rid as usize];
+                    t.prefill_credit += seg.tokens as i64;
+                    let pr = if t.online && t.first_token_est.is_none() {
+                        t.pre_steps.push(StepInterval {
+                            start: now,
+                            end,
+                            own,
+                        });
+                        PartRef::Pre(t.pre_steps.len() - 1)
+                    } else {
+                        PartRef::None
+                    };
+                    parts.push((rid, pr));
+                    if seg.last && t.first_token_est.is_none() {
+                        t.first_token_est = Some(end);
+                    }
+                    t.home = Some(key);
+                }
+                for &rid in participants {
+                    if (rid as usize) >= self.reqs.len() {
+                        continue;
+                    }
+                    let own = 1.0 / total;
+                    let t = &mut self.reqs[rid as usize];
+                    let pr = if t.online
+                        && t.finished_est.is_none()
+                        && t.first_token_est.is_some()
+                    {
+                        Self::add_decode(t, now, end, own)
+                    } else {
+                        PartRef::None
+                    };
+                    parts.push((rid, pr));
+                    t.home = Some(key);
+                }
+            }
+            StepKind::DecodeRelaxed | StepKind::DecodeStrict => {
+                for &rid in participants {
+                    if (rid as usize) >= self.reqs.len() {
+                        continue;
+                    }
+                    let own = 1.0 / total;
+                    let t = &mut self.reqs[rid as usize];
+                    let pr = if t.online && t.finished_est.is_none() {
+                        Self::add_decode(t, now, end, own)
+                    } else {
+                        PartRef::None
+                    };
+                    parts.push((rid, pr));
+                    t.home = Some(key);
+                }
+            }
+            StepKind::Warm => {}
+        }
+
+        let ev_idx = if self.opts.perfetto {
+            self.tid_of(replica, inst).map(|tid| {
+                let prefill_tokens: usize =
+                    prefill.iter().map(|s| s.tokens).sum();
+                // Pending flow arrows land on the rescued request's
+                // next step: the "f" end anchors inside this slice.
+                let mut flows: Vec<u64> = Vec::new();
+                for (rid, _) in &parts {
+                    if let Some(fid) = self.pending_flow.remove(rid) {
+                        flows.push(fid);
+                    }
+                }
+                let idx = self.push_event(TraceEvent {
+                    ph: "X",
+                    name: step_label(kind).to_string(),
+                    cat: "step",
+                    pid: replica,
+                    tid,
+                    ts_us: now * 1e6,
+                    dur_us: Some(predicted_latency * 1e6),
+                    flow: None,
+                    args: vec![
+                        (
+                            "participants",
+                            Json::Num(participants.len() as f64),
+                        ),
+                        ("prefill_tokens", Json::Num(prefill_tokens as f64)),
+                        ("cached_tokens", Json::Num(cached_tokens as f64)),
+                    ],
+                });
+                for fid in flows {
+                    self.push_event(TraceEvent {
+                        ph: "f",
+                        name: "kv-flow".to_string(),
+                        cat: "flow",
+                        pid: replica,
+                        tid,
+                        ts_us: now * 1e6,
+                        dur_us: None,
+                        flow: Some((fid, true)),
+                        args: Vec::new(),
+                    });
+                }
+                idx
+            })
+        } else {
+            None
+        };
+
+        self.open_steps.insert(
+            key,
+            OpenStep {
+                ev_idx,
+                start: now,
+                end,
+                kind,
+                parts,
+            },
+        );
+    }
+
+    fn on_preempt(&mut self, now: f64, replica: usize, inst: usize, delay: f64) {
+        let key = (replica, 0u8, inst);
+        if let Some(mut st) = self.open_steps.remove(&key) {
+            self.truncate_step(&mut st, now + delay);
+            if matches!(st.kind, StepKind::PrefillOffline) {
+                // Exclusive-mode offline prefill work is discarded at
+                // the truncated step's end and the requests requeue for
+                // recompute without an `Evict` — reset their audit
+                // state here so the fresh attempt starts clean.
+                for &(rid, _) in &st.parts {
+                    let t = &mut self.reqs[rid as usize];
+                    t.prefill_credit = 0;
+                    t.exclusive_prefill = false;
+                    if t.first_token_est.is_some_and(|e| e > now - EPS) {
+                        t.first_token_est = None;
+                    }
+                }
+            }
+            self.open_steps.insert(key, st);
+        }
+        self.instant(
+            now,
+            replica,
+            InstanceRef::Relaxed(inst),
+            "preempt".to_string(),
+            "preempt",
+        );
+    }
+
+    fn on_evict(&mut self, now: f64, replica: usize, inst: InstanceRef, rid: RequestId) {
+        if (rid as usize) < self.reqs.len() {
+            let t = &mut self.reqs[rid as usize];
+            t.evictions += 1;
+            // KV dropped: the final prefill pass restarts from zero
+            // (minus whatever the prefix cache still serves).
+            t.prefill_credit = 0;
+            t.exclusive_prefill = false;
+            if t.first_token_est.is_some_and(|e| e > now - EPS) {
+                t.first_token_est = None;
+            }
+            t.home = None;
+        }
+        self.instant(now, replica, inst, format!("evict:{rid}"), "evict");
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn on_transfer_start(
+        &mut self,
+        now: f64,
+        replica: usize,
+        job: JobId,
+        rid: RequestId,
+        kind: TransferKind,
+        kv_tokens: usize,
+        chunks: usize,
+    ) {
+        let mut anchored = false;
+        let flow = if self.opts.perfetto {
+            // Continue an existing chain (offload → restore) or open a
+            // new one.
+            let (fid, cont) = match self.pending_flow.remove(&rid) {
+                Some(id) => (id, true),
+                None => {
+                    self.next_flow += 1;
+                    (self.next_flow, false)
+                }
+            };
+            let home = self
+                .reqs
+                .get(rid as usize)
+                .and_then(|t| t.home);
+            if let Some(hkey) = home {
+                if let Some(tid) = self.tid_of(hkey.0, inst_of(hkey)) {
+                    // A zero-duration marker slice hosts the flow's
+                    // departure anchor on the source instance track.
+                    self.push_event(TraceEvent {
+                        ph: "X",
+                        name: format!("{}:{}", kind.name(), rid),
+                        cat: "transfer",
+                        pid: hkey.0,
+                        tid,
+                        ts_us: now * 1e6,
+                        dur_us: Some(0.0),
+                        flow: None,
+                        args: vec![
+                            ("kv_tokens", Json::Num(kv_tokens as f64)),
+                            ("chunks", Json::Num(chunks as f64)),
+                        ],
+                    });
+                    self.push_event(TraceEvent {
+                        ph: if cont { "t" } else { "s" },
+                        name: "kv-flow".to_string(),
+                        cat: "flow",
+                        pid: hkey.0,
+                        tid,
+                        ts_us: now * 1e6,
+                        dur_us: None,
+                        flow: Some((fid, false)),
+                        args: Vec::new(),
+                    });
+                    anchored = true;
+                }
+            }
+            Some(fid)
+        } else {
+            None
+        };
+        self.transfers.insert(
+            (replica, job),
+            TransferTrack {
+                rid,
+                kind,
+                link_lane: None,
+                flow,
+                anchored,
+                stepped: false,
+            },
+        );
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn on_transfer_chunk(
+        &mut self,
+        now: f64,
+        replica: usize,
+        job: JobId,
+        rid: RequestId,
+        link: usize,
+        chunk: usize,
+        predicted_latency: f64,
+    ) {
+        let mut tt = match self.transfers.remove(&(replica, job)) {
+            Some(t) => t,
+            None => return,
+        };
+        if tt.link_lane.is_none() {
+            let lane = self.alloc_lane(replica, link);
+            tt.link_lane = Some((link, lane));
+        }
+        if self.opts.perfetto {
+            let (_, lane) = tt.link_lane.unwrap_or((link, 0));
+            let tid = TID_LANE_BASE + link * LANES_PER_LINK + lane;
+            self.track_names
+                .entry((replica, tid))
+                .or_insert_with(|| format!("xfer link{link} lane{lane}"));
+            self.push_event(TraceEvent {
+                ph: "X",
+                name: format!("{}:{}#{}", tt.kind.name(), rid, chunk),
+                cat: "transfer",
+                pid: replica,
+                tid,
+                ts_us: now * 1e6,
+                dur_us: Some(predicted_latency * 1e6),
+                flow: None,
+                args: Vec::new(),
+            });
+            if let Some(fid) = tt.flow {
+                if !tt.anchored {
+                    self.push_event(TraceEvent {
+                        ph: "s",
+                        name: "kv-flow".to_string(),
+                        cat: "flow",
+                        pid: replica,
+                        tid,
+                        ts_us: now * 1e6,
+                        dur_us: None,
+                        flow: Some((fid, false)),
+                        args: Vec::new(),
+                    });
+                    tt.anchored = true;
+                } else if !tt.stepped {
+                    self.push_event(TraceEvent {
+                        ph: "t",
+                        name: "kv-flow".to_string(),
+                        cat: "flow",
+                        pid: replica,
+                        tid,
+                        ts_us: now * 1e6,
+                        dur_us: None,
+                        flow: Some((fid, false)),
+                        args: Vec::new(),
+                    });
+                    tt.stepped = true;
+                }
+            }
+        }
+        if (rid as usize) < self.reqs.len() {
+            let t = &mut self.reqs[rid as usize];
+            if t.online {
+                if t.first_token_est.is_none() {
+                    t.pre_transfers.push((now, now + predicted_latency));
+                } else if t.finished_est.is_none() {
+                    let s = now.max(t.dec_busy_until);
+                    let e = now + predicted_latency;
+                    if e > s {
+                        t.dec_transfer += e - s;
+                        t.dec_busy_until = e;
+                    }
+                }
+            }
+        }
+        self.transfers.insert((replica, job), tt);
+    }
+
+    fn on_transfer_done(
+        &mut self,
+        replica: usize,
+        job: JobId,
+        rid: RequestId,
+        kind: TransferKind,
+    ) {
+        if let Some(tt) = self.transfers.remove(&(replica, job)) {
+            if let Some((link, lane)) = tt.link_lane {
+                self.free_lane(replica, link, lane);
+            }
+            if let Some(fid) = tt.flow {
+                self.pending_flow.insert(rid, fid);
+            }
+        }
+        if (rid as usize) < self.reqs.len() {
+            self.reqs[rid as usize].home = match kind {
+                TransferKind::Dispatch { to_strict }
+                | TransferKind::Migrate { to_strict } => {
+                    Some((replica, 1, to_strict))
+                }
+                TransferKind::Rescue { to_relaxed }
+                | TransferKind::Restore { to_relaxed } => {
+                    Some((replica, 0, to_relaxed))
+                }
+                TransferKind::Offload => None,
+            };
+        }
+    }
+
+    /// A prefix-cache lookup marks admission: the request has a home
+    /// from here on. (Cached-token credit is *not* tracked from this
+    /// action — the chunk audit compares announced segment tokens
+    /// against the measured `prefill_target - prefill_cached`, so the
+    /// cached share never enters the recorder's books.)
+    fn on_prefix_resolve(
+        &mut self,
+        now: f64,
+        replica: usize,
+        inst: InstanceRef,
+        rid: RequestId,
+    ) {
+        if (rid as usize) >= self.reqs.len() {
+            return;
+        }
+        let key = key_of(replica, inst);
+        let t = &mut self.reqs[rid as usize];
+        if t.admitted_at.is_none() {
+            t.admitted_at = Some(now);
+        }
+        t.home = Some(key);
+    }
+
+    fn on_role_change(
+        &mut self,
+        now: f64,
+        replica: usize,
+        phase: RolePhase,
+        inst: InstanceRef,
+        to: PoolRole,
+    ) {
+        if matches!(phase, RolePhase::Flip) {
+            if let Some(rt) = self.replicas.get_mut(replica) {
+                // Mirror `ClusterState`: a flip moves the drained tail
+                // instance; everyone else's pool index is unchanged.
+                match to {
+                    PoolRole::Strict => {
+                        if let Some(s) = rt.relaxed.pop() {
+                            rt.strict.push(s);
+                        }
+                    }
+                    PoolRole::Relaxed => {
+                        if let Some(s) = rt.strict.pop() {
+                            rt.relaxed.push(s);
+                        }
+                    }
+                }
+            }
+        }
+        let label = match phase {
+            RolePhase::Drain => "drain",
+            RolePhase::Flip => "flip",
+            RolePhase::Warm => "warm-up",
+        };
+        self.instant(
+            now,
+            replica,
+            inst,
+            format!("{label}\u{2192}{}", to.name()),
+            "role",
+        );
+    }
+
+    fn on_complete(&mut self, now: f64, rid: RequestId) {
+        if (rid as usize) >= self.reqs.len() {
+            return;
+        }
+        let (online, arrival, output_len, ft) = {
+            let t = &mut self.reqs[rid as usize];
+            t.finished_est = Some(now);
+            (t.online, t.arrival, t.output_len, t.first_token_est)
+        };
+        if online {
+            self.online_finished += 1;
+            let ok = match ft {
+                Some(f) => {
+                    let ttft_ok = f - arrival <= self.opts.slo.ttft + EPS;
+                    let tpot_ok = if output_len > 1 {
+                        (now - f) / (output_len as f64 - 1.0)
+                            <= self.opts.slo.tpot + EPS
+                    } else {
+                        true
+                    };
+                    ttft_ok && tpot_ok
+                }
+                None => false,
+            };
+            if !ok {
+                self.online_violations_est += 1;
+            }
+            self.window.push_back((now, ok));
+        }
+        while let Some(&(ts, _)) = self.window.front() {
+            if ts < now - ATTAINMENT_WINDOW_S {
+                self.window.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn on_instance_down(&mut self, now: f64, replica: usize, inst: InstanceRef) {
+        let key = key_of(replica, inst);
+        if let Some(mut st) = self.open_steps.remove(&key) {
+            self.truncate_step(&mut st, now);
+            // The crash kills the step: close its span here (the
+            // forced evictions arrive as explicit `Evict` actions,
+            // which reset the victims' chunk-audit state).
+            self.audit.closed_spans += 1;
+        }
+        self.instant(now, replica, inst, "crash".to_string(), "fault");
+        let ev = if self.opts.perfetto {
+            self.tid_of(replica, inst).map(|tid| {
+                self.push_event(TraceEvent {
+                    ph: "X",
+                    name: "down".to_string(),
+                    cat: "fault",
+                    pid: replica,
+                    tid,
+                    ts_us: now * 1e6,
+                    dur_us: Some(0.0),
+                    flow: None,
+                    args: Vec::new(),
+                })
+            })
+        } else {
+            None
+        };
+        self.open_down.insert(key, (ev, now));
+    }
+
+    fn on_instance_up(&mut self, now: f64, replica: usize, inst: InstanceRef) {
+        let key = key_of(replica, inst);
+        if let Some((Some(idx), start)) = self.open_down.remove(&key) {
+            self.events[idx].dur_us = Some((now - start).max(0.0) * 1e6);
+        }
+        self.instant(now, replica, inst, "up".to_string(), "fault");
+    }
+
+    // ------------------------------------------------------------ gauges
+
+    fn sample_replica(
+        &mut self,
+        now: f64,
+        replica: usize,
+        cluster: &ClusterState,
+        links: &[LinkState],
+    ) {
+        let mut kv_used = 0usize;
+        let mut kv_cap = 0usize;
+        let mut queue = 0usize;
+        let mut running = 0usize;
+        let mut down = 0usize;
+        for inst in cluster.relaxed.iter().chain(cluster.strict.iter()) {
+            kv_cap += inst.kv.capacity_tokens();
+            kv_used += inst.kv.capacity_tokens() - inst.kv.free_tokens();
+            queue += inst.online_queue.len() + inst.waiting_for_space.len();
+            if inst.step.is_some() {
+                running += 1;
+            }
+            if inst.down {
+                down += 1;
+            }
+        }
+        let dt = now - self.last_sample_at;
+        let mut util = Vec::with_capacity(links.len());
+        for (i, l) in links.iter().enumerate() {
+            let prev = self
+                .link_busy_prev
+                .get(&(replica, i))
+                .copied()
+                .unwrap_or(0.0);
+            let u = if dt > 0.0 {
+                ((l.busy_s - prev) / dt).clamp(0.0, 1.0)
+            } else {
+                0.0
+            };
+            self.link_busy_prev.insert((replica, i), l.busy_s);
+            util.push(u);
+        }
+        let att = self.attainment();
+        self.samples.push(Json::obj(vec![
+            ("t", Json::Num(now)),
+            ("replica", Json::Num(replica as f64)),
+            ("relaxed", Json::Num(cluster.relaxed.len() as f64)),
+            ("strict", Json::Num(cluster.strict.len() as f64)),
+            ("kv_used_tokens", Json::Num(kv_used as f64)),
+            ("kv_capacity_tokens", Json::Num(kv_cap as f64)),
+            (
+                "kv_used_frac",
+                Json::Num(kv_used as f64 / kv_cap.max(1) as f64),
+            ),
+            ("online_queue", Json::Num(queue as f64)),
+            (
+                "offline_backlog",
+                Json::Num(cluster.offline_backlog.len() as f64),
+            ),
+            ("running_steps", Json::Num(running as f64)),
+            ("down", Json::Num(down as f64)),
+            ("slo_attainment", Json::Num(att)),
+            ("link_utilization", Json::arr_f64(&util)),
+            ("actions", Json::Num(self.actions_seen as f64)),
+        ]));
+        if self.opts.perfetto {
+            let counters: Vec<(&'static str, f64)> = vec![
+                ("pool.relaxed", cluster.relaxed.len() as f64),
+                ("pool.strict", cluster.strict.len() as f64),
+                (
+                    "kv.used_frac",
+                    kv_used as f64 / kv_cap.max(1) as f64,
+                ),
+                ("queue.online", queue as f64),
+                (
+                    "queue.backlog",
+                    cluster.offline_backlog.len() as f64,
+                ),
+                ("slo.attainment", att),
+            ];
+            for (name, v) in counters {
+                self.push_event(TraceEvent {
+                    ph: "C",
+                    name: name.to_string(),
+                    cat: "gauge",
+                    pid: replica,
+                    tid: 0,
+                    ts_us: now * 1e6,
+                    dur_us: None,
+                    flow: None,
+                    args: vec![("value", Json::Num(v))],
+                });
+            }
+            for (i, u) in util.iter().enumerate() {
+                self.push_event(TraceEvent {
+                    ph: "C",
+                    name: format!("link{i}.util"),
+                    cat: "gauge",
+                    pid: replica,
+                    tid: 0,
+                    ts_us: now * 1e6,
+                    dur_us: None,
+                    flow: None,
+                    args: vec![("value", Json::Num(*u))],
+                });
+            }
+        }
+    }
+
+    fn attainment(&self) -> f64 {
+        if self.window.is_empty() {
+            return 1.0;
+        }
+        let ok = self.window.iter().filter(|(_, ok)| *ok).count();
+        ok as f64 / self.window.len() as f64
+    }
+
+    fn sample_tick(&mut self, now: f64) {
+        self.last_sample_at = now;
+        self.next_sample = now + self.opts.sample_interval_s;
+        if self.opts.progress {
+            let wall = self.started_wall.elapsed().as_secs_f64();
+            let dw = (wall - self.last_progress_wall).max(1e-9);
+            let da = self.actions_seen - self.last_progress_actions;
+            eprintln!(
+                "[ooco] t={:.1}s actions={} ({:.0}/s wall) slo_window={:.4}",
+                now,
+                self.actions_seen,
+                da as f64 / dw,
+                self.attainment(),
+            );
+            self.last_progress_wall = wall;
+            self.last_progress_actions = self.actions_seen;
+        }
+    }
+
+    // ------------------------------------------------------ finalization
+
+    fn finalize_request(&mut self, r: &Request) {
+        let rid = r.id as usize;
+        if rid >= self.reqs.len() {
+            return;
+        }
+        // Chunk-span audit (§3.8 conservation, recorder view): a request
+        // whose final prefill pass ran as composed chunk segments must
+        // have those segments sum exactly to the measured uncached
+        // remainder. Exclusive-mode prefills announce no segments and
+        // are skipped — the cursor audit in the core covers them.
+        if r.finished_at.is_some()
+            && r.generated >= r.output_len
+            && r.prefill_target > 0
+        {
+            let t = &self.reqs[rid];
+            if !t.exclusive_prefill && t.prefill_credit > 0 {
+                self.audit.chunk_audited += 1;
+                let owed =
+                    r.prefill_target as i64 - r.prefill_cached as i64;
+                if t.prefill_credit != owed {
+                    self.audit.chunk_mismatches += 1;
+                }
+            }
+        }
+        if r.class != Class::Online {
+            return;
+        }
+        let rec = RequestRecord::from_request(r);
+        if !rec.violates(&self.opts.slo) {
+            return;
+        }
+
+        let slo = self.opts.slo;
+        let ttft = r.ttft();
+        let tpot = r.avg_tpot();
+        let ttft_violated = match ttft {
+            Some(t) => t > slo.ttft,
+            None => true,
+        };
+        let tpot_violated =
+            r.finished_at.is_none() || tpot.is_some_and(|t| t > slo.tpot);
+
+        // ---- TTFT decomposition over [arrival, first token] ----
+        let mut ttft_comp: Option<[f64; 4]> = None;
+        if let (Some(ft), Some(_)) = (r.first_token_at, ttft) {
+            let t = &self.reqs[rid];
+            let w0 = t.arrival;
+            let w1 = ft;
+            let mut merged: Vec<(f64, f64)> = Vec::new();
+            let mut compute = 0.0;
+            let mut interfere = 0.0;
+            let mut cursor = w0;
+            for iv in &t.pre_steps {
+                let s = iv.start.max(cursor).min(w1);
+                let e = iv.end.min(w1).max(s);
+                if e > s {
+                    compute += (e - s) * iv.own;
+                    interfere += (e - s) * (1.0 - iv.own);
+                    merged.push((s, e));
+                    cursor = e;
+                }
+            }
+            let mut stall = 0.0;
+            let mut tcur = w0;
+            for &(s0, e0) in &t.pre_transfers {
+                let s = s0.max(tcur).min(w1);
+                let e = e0.min(w1).max(s);
+                if e <= s {
+                    continue;
+                }
+                tcur = e;
+                let mut covered = 0.0;
+                for &(ms, me) in &merged {
+                    if me <= s {
+                        continue;
+                    }
+                    if ms >= e {
+                        break;
+                    }
+                    covered += me.min(e) - ms.max(s);
+                }
+                stall += (e - s) - covered;
+            }
+            let queueing = (w1 - w0) - compute - interfere - stall;
+            let resid =
+                ((compute + interfere + stall + queueing) - (w1 - w0)).abs();
+            self.audit.max_attr_residual =
+                self.audit.max_attr_residual.max(resid);
+            ttft_comp = Some([queueing, stall, interfere, compute]);
+        }
+
+        // ---- TPOT decomposition over [first token, completion] ----
+        let mut tpot_comp: Option<[f64; 4]> = None;
+        if let (Some(ft), Some(fin)) = (r.first_token_at, r.finished_at) {
+            if r.output_len > 1 {
+                let t = &self.reqs[rid];
+                let n = (r.output_len - 1) as f64;
+                let window = fin - ft;
+                let busy = t.dec_compute + t.dec_interfere + t.dec_transfer;
+                let queueing = window - busy;
+                tpot_comp = Some([
+                    queueing / n,
+                    t.dec_transfer / n,
+                    t.dec_interfere / n,
+                    t.dec_compute / n,
+                ]);
+            }
+        }
+
+        const CAUSES: [&str; 4] =
+            ["queueing", "transfer_stall", "chunk_interference", "compute"];
+        let dominant_of = |c: &[f64; 4]| -> &'static str {
+            let mut best = 0;
+            for i in 1..4 {
+                if c[i] > c[best] {
+                    best = i;
+                }
+            }
+            CAUSES[best]
+        };
+        let comp_json = |c: &[f64; 4]| {
+            Json::obj(vec![
+                ("queueing", Json::Num(c[0])),
+                ("transfer_stall", Json::Num(c[1])),
+                ("chunk_interference", Json::Num(c[2])),
+                ("compute", Json::Num(c[3])),
+                ("sum", Json::Num(c.iter().sum())),
+            ])
+        };
+
+        let dominant = match (ttft_violated, &ttft_comp, &tpot_comp) {
+            (true, Some(c), _) => Some(dominant_of(c)),
+            (false, _, Some(c)) if tpot_violated => Some(dominant_of(c)),
+            _ => None,
+        };
+        if ttft_violated {
+            if let Some(c) = &ttft_comp {
+                *self
+                    .dominant_ttft
+                    .entry(dominant_of(c))
+                    .or_insert(0) += 1;
+                for (i, name) in CAUSES.iter().enumerate() {
+                    *self.component_totals.entry(*name).or_insert(0.0) += c[i];
+                }
+            }
+        }
+        if tpot_violated {
+            if let Some(c) = &tpot_comp {
+                *self
+                    .dominant_tpot
+                    .entry(dominant_of(c))
+                    .or_insert(0) += 1;
+            }
+        }
+
+        let row = Json::obj(vec![
+            ("id", Json::Num(r.id as f64)),
+            (
+                "ttft",
+                ttft.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "tpot",
+                tpot.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("finished", Json::Bool(r.finished_at.is_some())),
+            ("ttft_violated", Json::Bool(ttft_violated)),
+            ("tpot_violated", Json::Bool(tpot_violated)),
+            (
+                "evictions",
+                Json::Num(self.reqs[rid].evictions as f64),
+            ),
+            (
+                "ttft_components",
+                ttft_comp
+                    .as_ref()
+                    .map(comp_json)
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "tpot_components",
+                tpot_comp
+                    .as_ref()
+                    .map(comp_json)
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "dominant",
+                dominant
+                    .map(|d| Json::Str(d.to_string()))
+                    .unwrap_or(Json::Null),
+            ),
+        ]);
+        self.attr_rows.push(row);
+        self.audit.attribution_rows += 1;
+    }
+
+    fn finish(&mut self, end_time: f64) -> TelemetryOut {
+        let keys: Vec<_> = self.open_steps.keys().copied().collect();
+        for k in keys {
+            if let Some(mut st) = self.open_steps.remove(&k) {
+                self.truncate_step(&mut st, end_time);
+                self.audit.force_closed_spans += 1;
+            }
+        }
+        let downs: Vec<_> = self.open_down.keys().copied().collect();
+        for k in downs {
+            if let Some((Some(idx), start)) = self.open_down.remove(&k) {
+                self.events[idx].dur_us =
+                    Some((end_time - start).max(0.0) * 1e6);
+            }
+        }
+        self.pending_flow.clear();
+
+        let ranked = |m: &BTreeMap<&'static str, u64>| {
+            let mut v: Vec<(&str, u64)> =
+                m.iter().map(|(k, c)| (*k, *c)).collect();
+            v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+            Json::Arr(
+                v.into_iter()
+                    .map(|(k, c)| {
+                        Json::obj(vec![
+                            ("cause", Json::Str(k.to_string())),
+                            ("count", Json::Num(c as f64)),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        let totals = Json::Obj(
+            self.component_totals
+                .iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(*v)))
+                .collect(),
+        );
+        let attribution = Json::obj(vec![
+            ("requests", Json::Arr(self.attr_rows.clone())),
+            (
+                "violations",
+                Json::Num(self.attr_rows.len() as f64),
+            ),
+            (
+                "online_finished",
+                Json::Num(self.online_finished as f64),
+            ),
+            ("ranked_ttft_causes", ranked(&self.dominant_ttft)),
+            ("ranked_tpot_causes", ranked(&self.dominant_tpot)),
+            ("component_totals_s", totals),
+            (
+                "max_residual",
+                Json::Num(self.audit.max_attr_residual),
+            ),
+        ]);
+        let timeline = Json::Arr(self.samples.clone());
+
+        let perfetto = if self.opts.perfetto {
+            let mut evs: Vec<Json> = Vec::new();
+            for (r, _) in self.replicas.iter().enumerate() {
+                evs.push(Json::obj(vec![
+                    ("name", Json::Str("process_name".to_string())),
+                    ("ph", Json::Str("M".to_string())),
+                    ("pid", Json::Num(r as f64)),
+                    ("tid", Json::Num(0.0)),
+                    (
+                        "args",
+                        Json::obj(vec![(
+                            "name",
+                            Json::Str(format!("replica{r}")),
+                        )]),
+                    ),
+                ]));
+            }
+            for ((pid, tid), name) in &self.track_names {
+                evs.push(Json::obj(vec![
+                    ("name", Json::Str("thread_name".to_string())),
+                    ("ph", Json::Str("M".to_string())),
+                    ("pid", Json::Num(*pid as f64)),
+                    ("tid", Json::Num(*tid as f64)),
+                    (
+                        "args",
+                        Json::obj(vec![(
+                            "name",
+                            Json::Str(name.clone()),
+                        )]),
+                    ),
+                ]));
+            }
+            for e in &self.events {
+                evs.push(e.to_json());
+            }
+            Some(
+                Json::obj(vec![
+                    ("traceEvents", Json::Arr(evs)),
+                    (
+                        "displayTimeUnit",
+                        Json::Str("ms".to_string()),
+                    ),
+                ])
+                .to_string(),
+            )
+        } else {
+            None
+        };
+
+        TelemetryOut {
+            timeline,
+            attribution,
+            perfetto,
+            audit: self.audit,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let mut rec = TraceRecorder::disabled();
+        assert!(!rec.is_enabled());
+        rec.observe(1.0, 0, &[Action::Complete { req: 0 }]);
+        assert!(!rec.sample_due(1e9));
+        assert!(rec.finish(10.0).is_none());
+    }
+
+    #[test]
+    fn flight_recorder_tracks_steps_and_spans() {
+        let mut opts = TelemetryOpts::new(SloSpec::default());
+        opts.perfetto = true;
+        let mut rec = TraceRecorder::flight(opts);
+        let reqs = vec![Request::new(0, Class::Online, 0.0, 100, 4)];
+        rec.register_requests(&reqs);
+        rec.register_replica(0, 2, 2);
+        rec.observe(
+            0.5,
+            0,
+            &[Action::StartStep {
+                inst: InstanceRef::Relaxed(0),
+                kind: StepKind::PrefillOnline,
+                participants: vec![0],
+                prefill: Vec::new(),
+                predicted_latency: 0.2,
+                cached_tokens: 0,
+                seq: 1,
+            }],
+        );
+        rec.observe(0.7, 0, &[Action::Complete { req: 0 }]);
+        let out = rec.finish(1.0).expect("enabled");
+        assert_eq!(out.audit.opened_spans, 1);
+        // Never closed by a successor: force-closed at end of run.
+        assert_eq!(out.audit.force_closed_spans, 1);
+        assert_eq!(out.audit.monotone_violations, 0);
+        assert_eq!(out.audit.dangling_instance_refs, 0);
+        let trace = out.perfetto.expect("perfetto on");
+        let parsed = Json::parse(&trace).expect("valid json");
+        assert!(matches!(parsed.get("traceEvents"), Json::Arr(_)));
+    }
+
+    #[test]
+    fn dangling_instance_ref_is_audited() {
+        let opts = TelemetryOpts::new(SloSpec::default());
+        let mut rec = TraceRecorder::flight(TelemetryOpts {
+            perfetto: true,
+            ..opts
+        });
+        rec.register_replica(0, 1, 1);
+        rec.observe(
+            0.0,
+            0,
+            &[Action::InstanceDown {
+                inst: InstanceRef::Strict(7),
+            }],
+        );
+        let out = rec.finish(1.0).expect("enabled");
+        assert!(out.audit.dangling_instance_refs > 0);
+    }
+
+    #[test]
+    fn chunk_credit_is_reset_on_evict_and_audited() {
+        use crate::instance::PrefillSegment;
+        let mut rec = TraceRecorder::flight(TelemetryOpts::new(
+            SloSpec::default(),
+        ));
+        let reqs = vec![Request::new(3, Class::Offline, 0.0, 10, 2)];
+        rec.register_requests(&reqs);
+        rec.register_replica(0, 1, 1);
+        let composed = |tokens: usize, last: bool, seq: u64| Action::StartStep {
+            inst: InstanceRef::Relaxed(0),
+            kind: StepKind::Composed,
+            participants: Vec::new(),
+            prefill: vec![PrefillSegment { req: 3, tokens, last }],
+            predicted_latency: 0.05,
+            cached_tokens: 0,
+            seq,
+        };
+        // First attempt: one chunk lands, then the KV is evicted — the
+        // discarded chunk must not pollute the recompute's books.
+        rec.observe(0.0, 0, &[composed(4, false, 1)]);
+        rec.observe(
+            0.05,
+            0,
+            &[Action::Evict {
+                inst: InstanceRef::Relaxed(0),
+                req: 3,
+            }],
+        );
+        {
+            let f = rec.inner.as_ref().expect("flight");
+            assert_eq!(f.reqs[3].prefill_credit, 0);
+            assert_eq!(f.reqs[3].evictions, 1);
+        }
+        // Recompute: the prefix cache serves 2 tokens, chunk segments
+        // cover the remaining 8.
+        rec.observe(0.1, 0, &[composed(5, false, 2)]);
+        rec.observe(0.2, 0, &[composed(3, true, 3)]);
+        // The measured request agrees: target 10, 2 cached at admission.
+        let mut r = reqs[0].clone();
+        r.begin_prefill(10, 2);
+        r.advance_prefill(8);
+        r.mark_first_token(0.25);
+        r.generated = r.output_len;
+        r.finished_at = Some(0.5);
+        rec.finalize_request(&r);
+        let f = rec.inner.as_ref().expect("flight");
+        assert_eq!(f.audit.chunk_audited, 1);
+        assert_eq!(f.audit.chunk_mismatches, 0);
+    }
+}

@@ -146,6 +146,171 @@ impl Online {
     }
 }
 
+// ------------------------------------------------------ streaming summary
+
+/// Smallest representable latency (s): everything at or below lands in the
+/// underflow bucket and is represented as `LS_MIN`.
+const LS_MIN: f64 = 1e-7;
+/// Upper edge of the bucketed range (s); larger values clamp to the last
+/// bucket (exact `min`/`max` are still tracked separately).
+const LS_MAX: f64 = 1e6;
+/// Geometric bucket growth factor: ~4% relative bucket width, so streamed
+/// percentiles sit within one bucket (≤4%) of the exact-sort values.
+const LS_GROWTH: f64 = 1.04;
+
+/// Streaming latency accumulator: exact count/mean/std/min/max (Welford)
+/// plus log-bucketed counts for percentiles in O(buckets) memory — the
+/// replacement for collecting `Vec<f64>` and sorting at end of run
+/// (DESIGN.md §3.10). Buckets span [`LS_MIN`, `LS_MAX`) at [`LS_GROWTH`]
+/// relative width; quantiles return the geometric bucket midpoint clamped
+/// to the exact observed [min, max].
+#[derive(Debug, Clone)]
+pub struct LatencySummary {
+    counts: Vec<u64>,
+    n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LatencySummary {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencySummary {
+    /// Number of log buckets (plus one underflow bucket at index 0).
+    fn buckets() -> usize {
+        ((LS_MAX / LS_MIN).ln() / LS_GROWTH.ln()).ceil() as usize + 2
+    }
+
+    pub fn new() -> Self {
+        LatencySummary {
+            counts: vec![0; Self::buckets()],
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// One-bucket relative width — the accuracy bound on quantiles.
+    pub fn bucket_relative_width() -> f64 {
+        LS_GROWTH - 1.0
+    }
+
+    fn bucket_of(x: f64) -> usize {
+        if x.is_nan() || x <= LS_MIN {
+            return 0; // underflow (incl. zero and negatives)
+        }
+        let idx = ((x / LS_MIN).ln() / LS_GROWTH.ln()).floor() as usize + 1;
+        idx.min(Self::buckets() - 1)
+    }
+
+    /// Geometric midpoint of bucket `i` (the quantile representative).
+    fn bucket_mid(i: usize) -> f64 {
+        if i == 0 {
+            return LS_MIN;
+        }
+        LS_MIN * LS_GROWTH.powf(i as f64 - 0.5)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.counts[Self::bucket_of(x)] += 1;
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Build from any stream of samples — the shared constructor behind
+    /// every report's percentile summary.
+    pub fn from_stream<I: IntoIterator<Item = f64>>(xs: I) -> Self {
+        let mut s = Self::new();
+        for x in xs {
+            s.record(x);
+        }
+        s
+    }
+
+    pub fn merge(&mut self, other: &Self) {
+        if other.n == 0 {
+            return;
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        // Chan et al. parallel mean/M2 combination.
+        let n = (self.n + other.n) as f64;
+        let delta = other.mean - self.mean;
+        self.mean += delta * other.n as f64 / n;
+        self.m2 += other.m2
+            + delta * delta * (self.n as f64) * (other.n as f64) / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+
+    /// Quantile estimate, `p` in [0, 100]: the geometric midpoint of the
+    /// bucket holding the rank, clamped to the exact observed range.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // Underflow bucket: report the exact observed minimum
+                // rather than a synthetic sub-LS_MIN representative.
+                let v = if i == 0 { self.min } else { Self::bucket_mid(i) };
+                return v.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Snapshot in the report-facing [`Summary`] shape.
+    pub fn summary(&self) -> Summary {
+        if self.n == 0 {
+            return Summary::empty();
+        }
+        let var = if self.n < 2 { 0.0 } else { self.m2 / self.n as f64 };
+        Summary {
+            count: self.n,
+            mean: self.mean,
+            std: var.max(0.0).sqrt(),
+            min: self.min,
+            max: self.max,
+            p50: self.quantile(50.0),
+            p90: self.quantile(90.0),
+            p99: self.quantile(99.0),
+        }
+    }
+}
+
 /// Fixed-bucket histogram over [lo, hi); values outside clamp to end buckets.
 #[derive(Debug, Clone)]
 pub struct Histogram {
@@ -229,6 +394,71 @@ mod tests {
         assert!((o.std() - s.std).abs() < 1e-9);
         assert_eq!(o.min(), s.min);
         assert_eq!(o.max(), s.max);
+    }
+
+    #[test]
+    fn latency_summary_tracks_exact_moments() {
+        let vals: Vec<f64> =
+            (0..1000).map(|i| 0.001 + (i as f64).sin().abs() * 5.0).collect();
+        let s = LatencySummary::from_stream(vals.iter().copied());
+        let exact = Summary::of(&vals);
+        assert_eq!(s.count(), exact.count);
+        let snap = s.summary();
+        assert!((snap.mean - exact.mean).abs() < 1e-9);
+        assert!((snap.std - exact.std).abs() < 1e-9);
+        assert_eq!(snap.min, exact.min);
+        assert_eq!(snap.max, exact.max);
+    }
+
+    #[test]
+    fn latency_summary_quantiles_within_one_bucket() {
+        // Log-uniform spread over 5 decades — the adversarial case for a
+        // fixed-range histogram, the design case for a log-bucketed one.
+        let vals: Vec<f64> = (0..5000)
+            .map(|i| 1e-4 * 10f64.powf(5.0 * (i as f64) / 5000.0))
+            .collect();
+        let s = LatencySummary::from_stream(vals.iter().copied());
+        let tol = LatencySummary::bucket_relative_width();
+        for p in [50.0, 90.0, 99.0] {
+            let exact = percentile(&vals, p);
+            let est = s.quantile(p);
+            assert!(
+                (est - exact).abs() <= exact * tol,
+                "p{p}: est {est} vs exact {exact} (tol {tol})"
+            );
+        }
+    }
+
+    #[test]
+    fn latency_summary_degenerate_cases() {
+        assert_eq!(LatencySummary::new().summary(), Summary::empty());
+        // A single sample is reported exactly (clamped to min == max).
+        let s = LatencySummary::from_stream([1.0]);
+        let snap = s.summary();
+        assert_eq!(snap.p50, 1.0);
+        assert_eq!(snap.p99, 1.0);
+        assert_eq!(snap.std, 0.0);
+        // Zero and negative samples land in the underflow bucket but keep
+        // exact min/max.
+        let s = LatencySummary::from_stream([0.0, 0.0, 2.0]);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 2.0);
+        assert_eq!(s.quantile(50.0), 0.0);
+    }
+
+    #[test]
+    fn latency_summary_merge_matches_single_pass() {
+        let a_vals: Vec<f64> = (0..300).map(|i| 0.01 * (i + 1) as f64).collect();
+        let b_vals: Vec<f64> = (0..500).map(|i| 0.5 + 0.002 * i as f64).collect();
+        let mut a = LatencySummary::from_stream(a_vals.iter().copied());
+        let b = LatencySummary::from_stream(b_vals.iter().copied());
+        a.merge(&b);
+        let mut all = a_vals.clone();
+        all.extend(&b_vals);
+        let joint = LatencySummary::from_stream(all.iter().copied());
+        assert_eq!(a.count(), joint.count());
+        assert!((a.mean() - joint.mean()).abs() < 1e-9);
+        assert_eq!(a.summary().p90, joint.summary().p90);
     }
 
     #[test]

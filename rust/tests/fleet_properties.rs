@@ -16,9 +16,10 @@
 
 use ooco::config::{FaultSpec, ServingConfig};
 use ooco::coordinator::Policy;
-use ooco::fleet::{simulate_fleet, Fleet, FleetConfig};
+use ooco::fleet::{simulate_fleet, simulate_fleet_traced, Fleet, FleetConfig};
 use ooco::scheduler::{Executor, SchedulerCore, VirtualExecutor};
 use ooco::sim::SimConfig;
+use ooco::telemetry::TelemetryOpts;
 use ooco::trace::datasets::DatasetProfile;
 use ooco::trace::generator::{offline_trace, online_trace};
 use ooco::trace::Trace;
@@ -158,12 +159,24 @@ fn same_seed_same_bytes_under_stochastic_faults() {
     cfg.fleet.replicas = 2;
     cfg.fault = "mtbf(mean=120,mttr=25)".parse().unwrap();
 
+    // Telemetry rides the same deterministic action stream: the Perfetto
+    // buffer and the timeline/attribution JSON must be byte-identical
+    // across same-seed runs too.
     let dump = |trace: &Trace, cfg: &FleetConfig| {
-        let res = simulate_fleet(trace, cfg);
+        let mut opts = TelemetryOpts::new(cfg.sim.serving.slo);
+        opts.perfetto = true;
+        let res = simulate_fleet_traced(trace, cfg, Some(opts));
+        let tel = res.telemetry.expect("telemetry requested");
         Json::obj(vec![
             ("report", res.report.to_json()),
             ("fleet", res.fleet.to_json()),
             ("end_time", Json::Num(res.end_time)),
+            ("timeline", tel.timeline),
+            ("attribution", tel.attribution),
+            (
+                "perfetto",
+                Json::Str(tel.perfetto.expect("perfetto requested")),
+            ),
         ])
         .to_string()
     };

@@ -1,0 +1,291 @@
+//! Flight-recorder property tests (DESIGN.md §3.10):
+//!
+//! 1. **Span well-formedness**: every opened step span is closed by a
+//!    successor, a preemption/crash path, or the end-of-run force close
+//!    (at most one per instance track); track-local timestamps never
+//!    regress; no action names an instance outside the registered
+//!    topology.
+//! 2. **Chunk-span conservation**: for every completed chunked-prefill
+//!    request, the announced composed segments of its final attempt sum
+//!    exactly to the measured `prefill_target - prefill_cached` —
+//!    across prefix hits, preemption, eviction, and recompute churn.
+//! 3. **Attribution exactness**: each violated online request's TTFT
+//!    components (queueing, transfer stall, chunk interference,
+//!    compute) sum to the measured TTFT within 1e-6.
+//! 4. **Perfetto structure**: the exported trace parses, and a faulted
+//!    fleet run carries cross-instance flow arrows (`s`/`f` events).
+//! 5. **Determinism**: same seed, same telemetry bytes.
+
+use ooco::config::{ChunkMode, ServingConfig};
+use ooco::coordinator::Policy;
+use ooco::fleet::{simulate_fleet_traced, FleetConfig};
+use ooco::sim::{simulate_traced, SimConfig};
+use ooco::telemetry::{SpanAudit, TelemetryOpts, TelemetryOut};
+use ooco::trace::datasets::DatasetProfile;
+use ooco::trace::generator::{offline_trace, online_trace, PromptProfile};
+use ooco::trace::Trace;
+use ooco::util::json::Json;
+
+fn mixed_trace(duration: f64, seed: u64) -> Trace {
+    let online =
+        online_trace(DatasetProfile::azure_conv(), 0.6, duration, seed);
+    let offline =
+        offline_trace(DatasetProfile::ooc_offline(), 1.5, duration, seed + 1);
+    online.merge(offline)
+}
+
+/// Long offline prompts so composed iterations carry real chunk trains.
+fn chunky_trace(duration: f64, seed: u64) -> Trace {
+    let online =
+        online_trace(DatasetProfile::azure_conv(), 0.5, duration, seed);
+    let offline = offline_trace(
+        PromptProfile::DEFAULT_LONG.apply(&DatasetProfile::ooc_offline()),
+        0.8,
+        duration,
+        seed + 1,
+    );
+    online.merge(offline)
+}
+
+/// The structural invariants every run must satisfy, regardless of
+/// iteration mode, policy, or faults.
+fn assert_spans_well_formed(audit: &SpanAudit, max_instances: u64) {
+    assert_eq!(
+        audit.opened_spans,
+        audit.closed_spans + audit.force_closed_spans,
+        "span conservation: opened != closed + force-closed"
+    );
+    assert!(
+        audit.force_closed_spans <= max_instances,
+        "more force-closed spans ({}) than instance tracks ({})",
+        audit.force_closed_spans,
+        max_instances
+    );
+    assert!(audit.opened_spans > 0, "run recorded no steps");
+    assert_eq!(audit.monotone_violations, 0, "track timestamps regressed");
+    assert_eq!(
+        audit.dangling_instance_refs, 0,
+        "action named an unregistered instance"
+    );
+    assert_eq!(
+        audit.chunk_mismatches, 0,
+        "chunk spans did not sum to the measured prefill target"
+    );
+    assert!(
+        audit.max_attr_residual <= 1e-6,
+        "attribution residual {} exceeds 1e-6",
+        audit.max_attr_residual
+    );
+}
+
+/// Walk the attribution rows: every row with a measured TTFT must carry
+/// components that sum back to it within 1e-6. Returns the number of
+/// rows checked.
+fn assert_rows_exact(tel: &TelemetryOut) -> usize {
+    let rows = tel
+        .attribution
+        .get("requests")
+        .as_arr()
+        .expect("attribution.requests is an array");
+    let mut checked = 0;
+    for row in rows {
+        let comp = row.get("ttft_components");
+        let (Some(ttft), Some(_)) =
+            (row.get("ttft").as_f64(), comp.as_obj())
+        else {
+            continue;
+        };
+        let sum = comp.get("sum").as_f64().expect("component sum");
+        assert!(
+            (sum - ttft).abs() <= 1e-6,
+            "request {:?}: components sum {} != ttft {}",
+            row.get("id").as_f64(),
+            sum,
+            ttft
+        );
+        for k in
+            ["queueing", "transfer_stall", "chunk_interference", "compute"]
+        {
+            let v = comp.get(k).as_f64().expect("component value");
+            assert!(v >= -1e-6, "negative {k} component: {v}");
+        }
+        checked += 1;
+    }
+    checked
+}
+
+fn assert_timeline_sane(tel: &TelemetryOut) {
+    let samples = tel.timeline.as_arr().expect("timeline is an array");
+    assert!(!samples.is_empty(), "gauge sampler produced nothing");
+    let mut last_t = f64::NEG_INFINITY;
+    for s in samples {
+        let t = s.get("t").as_f64().expect("sample time");
+        assert!(t >= last_t, "timeline samples out of order");
+        last_t = t;
+        let frac = s.get("kv_used_frac").as_f64().expect("kv gauge");
+        assert!(
+            (0.0..=1.0 + 1e-9).contains(&frac),
+            "kv_used_frac out of range: {frac}"
+        );
+        let att = s.get("slo_attainment").as_f64().expect("slo gauge");
+        assert!((0.0..=1.0 + 1e-9).contains(&att));
+    }
+}
+
+/// Chunked-mode run with a deliberately unattainable SLO so every online
+/// request lands in the attribution report: spans close, chunk spans
+/// conserve, and TTFT decompositions reproduce the measured latencies.
+#[test]
+fn chunked_run_spans_close_and_attribution_is_exact() {
+    let trace = chunky_trace(90.0, 61);
+    let mut serving = ServingConfig::preset_7b();
+    serving.chunk_tokens = ChunkMode::Auto;
+    let mut cfg = SimConfig::new(serving, Policy::Ooco);
+    cfg.seed = 23;
+
+    // The recorder judges against an unattainable SLO — every finished
+    // online request lands in the attribution report — while the
+    // scheduler keeps its real one (the serving SLO drives admission
+    // and chunk budgets; zeroing it would degenerate the run).
+    let mut slo = cfg.serving.slo;
+    slo.ttft = 0.0;
+    slo.tpot = 0.0;
+    let opts = TelemetryOpts::new(slo);
+    let res = simulate_traced(&trace, &cfg, Some(opts));
+    let tel = res.telemetry.expect("telemetry requested");
+
+    let instances = (cfg.serving.cluster.relaxed_instances
+        + cfg.serving.cluster.strict_instances) as u64;
+    assert_spans_well_formed(&tel.audit, instances);
+    assert!(
+        tel.audit.chunk_audited > 0,
+        "chunked mode produced no audited chunk trains"
+    );
+    let checked = assert_rows_exact(&tel);
+    assert!(checked > 20, "too few attribution rows checked ({checked})");
+    assert_eq!(
+        tel.audit.attribution_rows,
+        tel.attribution
+            .get("requests")
+            .as_arr()
+            .expect("rows")
+            .len() as u64
+    );
+    assert_timeline_sane(&tel);
+    assert!(tel.perfetto.is_none(), "perfetto not requested");
+}
+
+/// Exclusive-mode (chunking off) runs keep the same structural
+/// invariants; exclusive prefills are exempt from the chunk audit, so
+/// nothing is audited — and nothing mismatches.
+#[test]
+fn exclusive_run_spans_close() {
+    let trace = mixed_trace(90.0, 67);
+    let mut serving = ServingConfig::preset_7b();
+    serving.chunk_tokens = ChunkMode::Off;
+    let mut cfg = SimConfig::new(serving, Policy::Ooco);
+    cfg.seed = 29;
+
+    // Recorder-side SLO only (see the chunked twin above).
+    let mut slo = cfg.serving.slo;
+    slo.ttft = 0.0;
+    let opts = TelemetryOpts::new(slo);
+    let res = simulate_traced(&trace, &cfg, Some(opts));
+    let tel = res.telemetry.expect("telemetry requested");
+    let instances = (cfg.serving.cluster.relaxed_instances
+        + cfg.serving.cluster.strict_instances) as u64;
+    assert_spans_well_formed(&tel.audit, instances);
+    assert_eq!(
+        tel.audit.chunk_audited, 0,
+        "exclusive mode must not enter the chunk audit"
+    );
+    assert_rows_exact(&tel);
+    assert_timeline_sane(&tel);
+}
+
+/// A faulted fleet run: crashes force-close step spans mid-run, evicted
+/// KV re-routes over the transport, and the Perfetto export carries the
+/// resulting cross-instance flow arrows.
+#[test]
+fn faulted_fleet_trace_has_flows_and_clean_spans() {
+    let trace = mixed_trace(60.0, 7);
+    let mut serving = ServingConfig::preset_7b();
+    serving.cluster.relaxed_instances = 2;
+    serving.cluster.strict_instances = 2;
+    let mut sim = SimConfig::new(serving, Policy::Ooco);
+    sim.seed = 11;
+    sim.drain_s = 3000.0;
+    let mut cfg = FleetConfig::new(sim);
+    cfg.fault =
+        "crash(at=20,pool=relaxed,inst=0,down=30); \
+         crash(at=25,pool=strict,inst=1,down=30)"
+            .parse()
+            .unwrap();
+
+    let mut opts = TelemetryOpts::new(cfg.sim.serving.slo);
+    opts.perfetto = true;
+    let res = simulate_fleet_traced(&trace, &cfg, Some(opts));
+    let tel = res.telemetry.expect("telemetry requested");
+
+    assert_spans_well_formed(&tel.audit, 4);
+    assert_rows_exact(&tel);
+    assert_timeline_sane(&tel);
+
+    let raw = tel.perfetto.as_ref().expect("perfetto requested");
+    let parsed = Json::parse(raw).expect("trace must parse");
+    let events = parsed
+        .get("traceEvents")
+        .as_arr()
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+    let count = |ph: &str| {
+        events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some(ph))
+            .count()
+    };
+    assert!(count("X") > 0, "no duration slices");
+    assert!(count("C") > 0, "no counter samples");
+    assert!(count("i") > 0, "no instant markers");
+    assert!(
+        count("s") > 0 && count("f") > 0,
+        "faulted run produced no KV flow arrows (s={}, f={})",
+        count("s"),
+        count("f")
+    );
+    // Crash windows render as explicit fault slices.
+    assert!(
+        events.iter().any(|e| e.get("cat").as_str() == Some("fault")),
+        "no fault events in a crashed run"
+    );
+}
+
+/// Same seed, same telemetry bytes — the single-cluster twin of the
+/// fleet determinism test (which covers stochastic faults).
+#[test]
+fn sim_telemetry_is_deterministic() {
+    let trace = chunky_trace(60.0, 83);
+    let mut serving = ServingConfig::preset_7b();
+    serving.chunk_tokens = ChunkMode::Auto;
+    let mut cfg = SimConfig::new(serving, Policy::Ooco);
+    cfg.seed = 41;
+
+    let dump = || {
+        let mut slo = cfg.serving.slo;
+        slo.ttft = 0.0;
+        let mut opts = TelemetryOpts::new(slo);
+        opts.perfetto = true;
+        let tel = simulate_traced(&trace, &cfg, Some(opts))
+            .telemetry
+            .expect("telemetry requested");
+        Json::obj(vec![
+            ("timeline", tel.timeline.clone()),
+            ("attribution", tel.attribution.clone()),
+            ("perfetto", Json::Str(tel.perfetto.clone().expect("on"))),
+        ])
+        .to_string()
+    };
+    let a = dump();
+    let b = dump();
+    assert_eq!(a, b, "same seed must reproduce byte-identical telemetry");
+}
