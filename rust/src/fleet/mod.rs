@@ -24,11 +24,13 @@ use std::collections::BinaryHeap;
 
 use crate::config::{CrashEvent, FaultPool, FaultSpec, FleetSpec, RoutePolicy};
 use crate::metrics::{FleetReport, Recorder, Report};
+use crate::obs::{self, EventClass, ProfileReport, Subsystem};
 use crate::request::{Class, RequestId};
 use crate::scheduler::{Action, InstanceRef, JobId, SchedulerCore};
 use crate::sim::SimConfig;
 use crate::telemetry::{TelemetryOpts, TelemetryOut, TraceRecorder};
 use crate::trace::Trace;
+use crate::util::json::Json;
 use crate::util::rng::Pcg;
 use crate::util::stats::LatencySummary;
 
@@ -77,6 +79,11 @@ pub struct FleetResult {
     /// Flight-recorder output (DESIGN.md §3.10); `None` unless the run
     /// was traced via [`simulate_fleet_traced`].
     pub telemetry: Option<TelemetryOut>,
+    /// Fleet-heap events delivered (arrivals, steps, chunks, faults).
+    pub events: u64,
+    /// Self-profiler breakdown (DESIGN.md §3.11). `None` unless the run
+    /// was profiled via [`simulate_fleet_observed`].
+    pub profile: Option<ProfileReport>,
 }
 
 // ------------------------------------------------------------- event heap
@@ -240,6 +247,7 @@ pub struct Fleet {
     next_tie: u64,
     now: f64,
     horizon: f64,
+    events: u64,
     router: FleetRouter,
     /// Owning replica per request id (updated on steal).
     assigned: Vec<usize>,
@@ -260,6 +268,7 @@ pub struct Fleet {
 
 impl Fleet {
     pub fn new(trace: &Trace, cfg: &FleetConfig) -> Self {
+        let _p = obs::scope(Subsystem::Setup);
         assert!(cfg.fleet.replicas >= 1, "fleet needs at least one replica");
         let n = cfg.fleet.replicas;
         // Every replica core holds the full request table so ids index
@@ -303,6 +312,7 @@ impl Fleet {
             next_tie,
             now: 0.0,
             horizon,
+            events: 0,
             assigned: vec![usize::MAX; trace.requests.len()],
             weights,
             windows: Vec::new(),
@@ -318,6 +328,7 @@ impl Fleet {
     }
 
     fn push(&mut self, time: f64, kind: FleetEventKind) {
+        let _p = obs::scope(Subsystem::HeapPush);
         debug_assert!(time.is_finite(), "non-finite fleet event time");
         let tie = self.next_tie;
         self.next_tie += 1;
@@ -470,10 +481,18 @@ impl Fleet {
     }
 
     fn on_arrival(&mut self, rid: RequestId) {
-        let live = self.live_replicas();
-        let replica = self.router.assign(&live, self.weights[rid as usize]);
-        self.assigned[rid as usize] = replica;
-        let actions = self.replicas[replica].on_arrival(self.now, rid);
+        let replica = {
+            let _p = obs::scope(Subsystem::Fleet);
+            let live = self.live_replicas();
+            let replica =
+                self.router.assign(&live, self.weights[rid as usize]);
+            self.assigned[rid as usize] = replica;
+            replica
+        };
+        let actions = {
+            let _p = obs::scope(Subsystem::Scheduler);
+            self.replicas[replica].on_arrival(self.now, rid)
+        };
         self.apply(replica, actions);
     }
 
@@ -590,6 +609,7 @@ impl Fleet {
         if self.cfg.fleet.replicas < 2 || self.cfg.fleet.steal_batch == 0 {
             return;
         }
+        let _p = obs::scope(Subsystem::Fleet);
         for thief in 0..self.replicas.len() {
             if !self.replicas[thief].cluster.offline_backlog.is_empty() {
                 continue;
@@ -639,43 +659,74 @@ impl Fleet {
 
     /// Drive the fleet to completion and aggregate the outcome.
     pub fn run(&mut self, trace: &Trace) -> FleetResult {
-        while let Some(ev) = self.heap.pop() {
+        loop {
+            let ev = {
+                let _p = obs::scope(Subsystem::HeapPop);
+                match self.heap.pop() {
+                    Some(ev) => ev,
+                    None => break,
+                }
+            };
             if ev.time > self.horizon {
                 break;
             }
             self.now = ev.time;
+            self.events += 1;
             match ev.kind {
-                FleetEventKind::Arrival(rid) => self.on_arrival(rid),
+                FleetEventKind::Arrival(rid) => {
+                    obs::count_event(EventClass::Arrival);
+                    self.on_arrival(rid);
+                }
                 FleetEventKind::RelaxedStep { replica, inst, seq } => {
-                    let actions = self.replicas[replica].on_step_end(
-                        self.now,
-                        InstanceRef::Relaxed(inst),
-                        seq,
-                    );
+                    obs::count_event(EventClass::RelaxedStep);
+                    let actions = {
+                        let _p = obs::scope(Subsystem::Scheduler);
+                        self.replicas[replica].on_step_end(
+                            self.now,
+                            InstanceRef::Relaxed(inst),
+                            seq,
+                        )
+                    };
                     self.apply(replica, actions);
                 }
                 FleetEventKind::StrictStep { replica, inst, seq } => {
-                    let actions = self.replicas[replica].on_step_end(
-                        self.now,
-                        InstanceRef::Strict(inst),
-                        seq,
-                    );
+                    obs::count_event(EventClass::StrictStep);
+                    let actions = {
+                        let _p = obs::scope(Subsystem::Scheduler);
+                        self.replicas[replica].on_step_end(
+                            self.now,
+                            InstanceRef::Strict(inst),
+                            seq,
+                        )
+                    };
                     self.apply(replica, actions);
                 }
                 FleetEventKind::TransferChunk { replica, job, seq } => {
-                    let actions = self.replicas[replica]
-                        .on_transfer_progress(self.now, job, seq);
+                    obs::count_event(EventClass::TransferChunk);
+                    let actions = {
+                        let _p = obs::scope(Subsystem::Transport);
+                        self.replicas[replica]
+                            .on_transfer_progress(self.now, job, seq)
+                    };
                     self.apply(replica, actions);
                 }
                 FleetEventKind::CrashNotice { replica, inst } => {
+                    obs::count_event(EventClass::CrashNotice);
+                    let _p = obs::scope(Subsystem::Fleet);
                     self.on_crash_notice(replica, inst);
                 }
                 FleetEventKind::Crash {
                     replica,
                     inst,
                     down_s,
-                } => self.on_crash(replica, inst, down_s),
+                } => {
+                    obs::count_event(EventClass::Crash);
+                    let _p = obs::scope(Subsystem::Fleet);
+                    self.on_crash(replica, inst, down_s);
+                }
                 FleetEventKind::Recover { replica, inst } => {
+                    obs::count_event(EventClass::Recover);
+                    let _p = obs::scope(Subsystem::Fleet);
                     self.on_recover(replica, inst);
                 }
             }
@@ -689,13 +740,14 @@ impl Fleet {
                         self.replicas[r].transport.links(),
                     );
                 }
-                self.telemetry.sample_tick(self.now);
+                self.telemetry.sample_tick(self.now, self.events);
             }
         }
         self.build_result(trace)
     }
 
     fn build_result(&mut self, trace: &Trace) -> FleetResult {
+        let _p = obs::scope(Subsystem::Metrics);
         let end_time = self.now;
         let duration = trace.duration().max(1e-9);
 
@@ -784,6 +836,8 @@ impl Fleet {
             fleet,
             end_time,
             telemetry: self.telemetry.finish(end_time),
+            events: self.events,
+            profile: None,
         }
     }
 
@@ -806,9 +860,26 @@ pub fn simulate_fleet_traced(
     cfg: &FleetConfig,
     telemetry: Option<TelemetryOpts>,
 ) -> FleetResult {
+    simulate_fleet_observed(trace, cfg, telemetry, false)
+}
+
+/// [`simulate_fleet_traced`] with the self-profiler optionally armed
+/// (DESIGN.md §3.11); the breakdown lands in [`FleetResult::profile`].
+/// Probes are pure observers: `profile: true` leaves every deterministic
+/// field byte-identical to an unprofiled same-seed run.
+pub fn simulate_fleet_observed(
+    trace: &Trace,
+    cfg: &FleetConfig,
+    telemetry: Option<TelemetryOpts>,
+    profile: bool,
+) -> FleetResult {
+    if profile {
+        obs::enable();
+    }
     let mut fleet = Fleet::new(trace, cfg);
     if let Some(opts) = telemetry {
         let mut rec = TraceRecorder::flight(opts);
+        rec.set_horizon(fleet.horizon);
         rec.register_requests(&trace.requests);
         for r in 0..cfg.fleet.replicas {
             rec.register_replica(
@@ -819,7 +890,40 @@ pub fn simulate_fleet_traced(
         }
         fleet.telemetry = rec;
     }
-    fleet.run(trace)
+    let mut result = fleet.run(trace);
+    if profile {
+        result.profile = Some(obs::take_report());
+    }
+    result
+}
+
+/// Compose the machine-readable `--json-out` object for a fleet run:
+/// config echo, report sections, optional telemetry, optional profile.
+/// The CLI layers the `meta` header on top; everything except `profile`
+/// is deterministic for a fixed seed.
+pub fn result_json(cfg: &FleetConfig, res: &FleetResult) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("policy", Json::Str(cfg.sim.policy.to_string())),
+        ("pool_policy", Json::Str(cfg.sim.serving.pool.to_string())),
+        (
+            "chunk_tokens",
+            Json::Str(cfg.sim.serving.chunk_tokens.to_string()),
+        ),
+        ("fleet_spec", cfg.fleet.to_json()),
+        ("fault_spec", cfg.fault.to_json()),
+        ("seed", Json::Num(cfg.sim.seed as f64)),
+        ("events", Json::Num(res.events as f64)),
+        ("report", res.report.to_json()),
+        ("fleet", res.fleet.to_json()),
+    ];
+    if let Some(tel) = &res.telemetry {
+        pairs.push(("timeline", tel.timeline.clone()));
+        pairs.push(("attribution", tel.attribution.clone()));
+    }
+    if let Some(profile) = &res.profile {
+        pairs.push(("profile", profile.to_json()));
+    }
+    Json::obj(pairs)
 }
 
 #[cfg(test)]

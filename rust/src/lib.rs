@@ -17,6 +17,7 @@ pub mod fleet;
 pub mod instance;
 pub mod kvcache;
 pub mod metrics;
+pub mod obs;
 pub mod perfmodel;
 pub mod pool;
 pub mod prefix;
@@ -53,14 +54,15 @@ pub mod prelude {
         EngineOutcome,
     };
     pub use crate::fleet::{
-        simulate_fleet, simulate_fleet_traced, Fleet, FleetConfig,
-        FleetResult,
+        simulate_fleet, simulate_fleet_observed, simulate_fleet_traced,
+        Fleet, FleetConfig, FleetResult,
     };
     pub use crate::instance::{PoolRole, PrefillSegment, StepKind};
     pub use crate::metrics::{
         ChunkReport, FleetReport, LinkReport, PoolReport, PrefixReport,
         Recorder, Report, TransportReport,
     };
+    pub use crate::obs::{EventClass, ProfileReport, Subsystem};
     pub use crate::perfmodel::{BatchStats, Bottleneck, PerfModel};
     pub use crate::pool::{LoadEstimator, PoolManager, PoolPlan};
     pub use crate::prefix::{PrefixIndex, PrefixMatch};
@@ -70,7 +72,9 @@ pub mod prelude {
         KvHome, RolePhase, SchedulerCore, StubWallClockExecutor,
         VirtualExecutor,
     };
-    pub use crate::sim::{simulate, simulate_traced, SimConfig, SimResult};
+    pub use crate::sim::{
+        simulate, simulate_observed, simulate_traced, SimConfig, SimResult,
+    };
     pub use crate::telemetry::{
         SpanAudit, TelemetryOpts, TelemetryOut, TraceRecorder,
     };

@@ -4,13 +4,17 @@
 //!   serve      — real PJRT engine over the AOT artifacts (tiny model)
 //!   simulate   — discrete-event cluster simulation at 7B/72B scale
 //!   sweep      — SLO-attainment-vs-load curve (machine-readable JSON)
+//!   bench      — standardized perf suite with self-profiling (§3.11)
 //!   roofline   — query the performance model
 //!   trace      — generate and export a workload trace (JSON)
 
+use std::time::Instant;
+
 use ooco::config::{FaultSpec, FleetSpec, ModelSpec, ServingConfig};
 use ooco::coordinator::Policy;
-use ooco::fleet::{simulate_fleet_traced, FleetConfig};
-use ooco::sim::{simulate_traced, SimConfig};
+use ooco::fleet::{simulate_fleet_observed, FleetConfig};
+use ooco::obs;
+use ooco::sim::{simulate_observed, SimConfig};
 use ooco::telemetry::TelemetryOpts;
 use ooco::trace::datasets::DatasetProfile;
 use ooco::trace::generator::{offline_trace, online_trace};
@@ -42,6 +46,7 @@ fn run() -> anyhow::Result<()> {
         "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
+        "bench" => cmd_bench(&args),
         "roofline" => cmd_roofline(&args),
         "trace" => cmd_trace(&args),
         other => {
@@ -55,7 +60,7 @@ fn print_usage() {
     eprintln!(
         "ooco — latency-disaggregated online-offline co-located LLM serving
 
-USAGE: ooco <serve|simulate|sweep|roofline|trace> [--flags]
+USAGE: ooco <serve|simulate|sweep|bench|roofline|trace> [--flags]
 
   serve     --duration 20 --online-rate 1 --offline-qps 1 --policy ooco
             [--artifacts artifacts] [--seed 42]
@@ -72,13 +77,18 @@ USAGE: ooco <serve|simulate|sweep|roofline|trace> [--flags]
             [--fleet 2|'fleet(replicas=2,route=least,steal=4)']
             [--fault 'crash(at=600,replica=0,pool=relaxed,inst=1,down=120,notice=30); mtbf(mean=900,mttr=60)']
             [--json-out result.json]  (adds timeline + attribution keys)
+            [--metrics-out metrics.prom]  (OpenMetrics text exposition)
+            [--profile]  (self-profiler breakdown in the JSON `profile` key)
             [--trace-out trace.perfetto.json]  (Chrome/Perfetto timeline)
-            [--progress]  (periodic progress line on stderr)
+            [--progress]  (events/s + ETA heartbeat on stderr)
   sweep     --policy ooco --online-rate 0.5 --qps 1,2,4,8 --duration 600
             [--pool-policy static] [--relaxed 1 --strict 1]
             [--prefix-profile shared-system|few-shot|agentic]
             [--prefix-cache true|false]
             [--json-out curve.json]
+  bench     [--scale 1.0] [--seed 42] [--json-out BENCH_sim.json]
+            (standardized 4-scenario perf suite, self-profiled; emits the
+             schema-stable trajectory artifact CI gates against)
   roofline  --model 7b --hw 910c --batch 128 --kv-len 1000 --prompt 1892
   trace     --dataset azure-conv --rate 1.0 --duration 3600 --scale 1.0
             --out trace.json [--offline-qps 0]
@@ -126,6 +136,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "prefills {} strict_steps {} relaxed_steps {} wall {:.1}s",
         out.prefills, out.strict_steps, out.relaxed_steps, out.wall_s
     );
+    if let Some(path) = args.opt_str("metrics-out") {
+        let mut j = Json::obj(vec![
+            ("report", out.report.to_json()),
+            ("prefills", Json::Num(out.prefills as f64)),
+            ("strict_steps", Json::Num(out.strict_steps as f64)),
+            ("relaxed_steps", Json::Num(out.relaxed_steps as f64)),
+            ("wall_s", Json::Num(out.wall_s)),
+        ]);
+        j.set("meta", obs::meta_json(seed, &format!("{cfg:?}"), out.wall_s));
+        std::fs::write(path, ooco::obs::openmetrics::render(&j))?;
+        println!("wrote OpenMetrics exposition to {path}");
+    }
     Ok(())
 }
 
@@ -169,10 +191,14 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     // Flight recorder: enabled whenever an output that needs it was
     // requested; library/bench callers keep the zero-overhead no-op.
     let trace_out = args.opt_str("trace-out");
+    let json_out = args.opt_str("json-out");
+    let metrics_out = args.opt_str("metrics-out");
+    let profile = args.bool("profile", false);
     let progress = args.bool("progress", false);
     let telemetry_opts = if trace_out.is_some()
         || progress
-        || args.opt_str("json-out").is_some()
+        || json_out.is_some()
+        || metrics_out.is_some()
     {
         let mut opts = TelemetryOpts::new(cfg.serving.slo);
         opts.perfetto = trace_out.is_some();
@@ -203,31 +229,30 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             fleet: fleet_spec,
             fault,
         };
-        let res = simulate_fleet_traced(&trace, &fcfg, telemetry_opts);
+        let started = Instant::now();
+        let res =
+            simulate_fleet_observed(&trace, &fcfg, telemetry_opts, profile);
+        let wall_s = started.elapsed().as_secs_f64();
         println!("{}", res.report.summary_line());
         println!("{}", res.fleet.summary_line());
-        if let Some(path) = args.opt_str("json-out") {
-            let mut pairs: Vec<(&str, Json)> = vec![
-                ("policy", Json::Str(cfg.policy.to_string())),
-                ("fleet_spec", fcfg.fleet.to_json()),
-                ("fault_spec", fcfg.fault.to_json()),
-                ("seed", Json::Num(seed as f64)),
-                ("report", res.report.to_json()),
-                ("fleet", res.fleet.to_json()),
-            ];
-            if let Some(tel) = &res.telemetry {
-                pairs.push(("timeline", tel.timeline.clone()));
-                pairs.push(("attribution", tel.attribution.clone()));
-            }
-            let out = Json::obj(pairs);
-            std::fs::write(path, out.to_pretty())?;
-            println!("wrote machine-readable result to {path}");
+        if let Some(p) = &res.profile {
+            println!("{}", p.summary_line());
+        }
+        if json_out.is_some() || metrics_out.is_some() {
+            let mut out = ooco::fleet::result_json(&fcfg, &res);
+            out.set(
+                "meta",
+                obs::meta_json(seed, &format!("{fcfg:?}"), wall_s),
+            );
+            write_result(&out, json_out, metrics_out)?;
         }
         write_trace(&res.telemetry)?;
         return Ok(());
     }
 
-    let res = simulate_traced(&trace, &cfg, telemetry_opts);
+    let started = Instant::now();
+    let res = simulate_observed(&trace, &cfg, telemetry_opts, profile);
+    let wall_s = started.elapsed().as_secs_f64();
     println!("{}", res.report.summary_line());
     println!(
         "strict util {:.1}% relaxed util {:.1}% migrations {} evictions {} preemptions {} rescues {}",
@@ -248,30 +273,52 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     if res.chunk.enabled {
         println!("{}", res.chunk.summary_line());
     }
-    if let Some(path) = args.opt_str("json-out") {
-        let mut pairs: Vec<(&str, Json)> = vec![
-            ("policy", Json::Str(cfg.policy.to_string())),
-            ("pool_policy", Json::Str(cfg.serving.pool.to_string())),
-            (
-                "chunk_tokens",
-                Json::Str(cfg.serving.chunk_tokens.to_string()),
-            ),
-            ("seed", Json::Num(seed as f64)),
-            ("report", res.report.to_json()),
-            ("transport", res.transport.to_json()),
-            ("pool", res.pool.to_json()),
-            ("prefix", res.prefix.to_json()),
-            ("chunk", res.chunk.to_json()),
-        ];
-        if let Some(tel) = &res.telemetry {
-            pairs.push(("timeline", tel.timeline.clone()));
-            pairs.push(("attribution", tel.attribution.clone()));
-        }
-        let out = Json::obj(pairs);
+    if let Some(p) = &res.profile {
+        println!("{}", p.summary_line());
+    }
+    if json_out.is_some() || metrics_out.is_some() {
+        let mut out = ooco::sim::result_json(&cfg, &res);
+        out.set("meta", obs::meta_json(seed, &format!("{cfg:?}"), wall_s));
+        write_result(&out, json_out, metrics_out)?;
+    }
+    write_trace(&res.telemetry)?;
+    Ok(())
+}
+
+/// Write the composed `--json-out` object and/or its OpenMetrics
+/// rendering (`--metrics-out`).
+fn write_result(
+    out: &Json,
+    json_out: Option<&str>,
+    metrics_out: Option<&str>,
+) -> anyhow::Result<()> {
+    if let Some(path) = json_out {
         std::fs::write(path, out.to_pretty())?;
         println!("wrote machine-readable result to {path}");
     }
-    write_trace(&res.telemetry)?;
+    if let Some(path) = metrics_out {
+        std::fs::write(path, ooco::obs::openmetrics::render(out))?;
+        println!("wrote OpenMetrics exposition to {path}");
+    }
+    Ok(())
+}
+
+/// Standardized self-profiled perf suite (DESIGN.md §3.11): four
+/// scenarios, one schema-stable artifact. CI runs this on every PR and
+/// gates the headline against the committed `BENCH_baseline.json`.
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let scale = args.f64("scale", 1.0);
+    let seed = args.u64("seed", 42);
+    let (json, summaries) = ooco::obs::bench::run_suite(scale, seed);
+    for line in &summaries {
+        println!("{line}");
+    }
+    if let Json::Num(headline) = json.get("headline_req_per_s") {
+        println!("bench headline: {headline:.0} req/s");
+    }
+    let path = args.str("json-out", "BENCH_sim.json");
+    std::fs::write(path, json.to_pretty())?;
+    println!("wrote bench artifact to {path}");
     Ok(())
 }
 
@@ -319,6 +366,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             ooco::trace::PrefixProfile::None,
         )?,
     };
+    let started = Instant::now();
     let points = offline_sweep(
         &serving,
         policy,
@@ -328,6 +376,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         &qps,
         &sweep_cfg,
     );
+    let wall_s = started.elapsed().as_secs_f64();
     for p in &points {
         println!(
             "qps {:6.2} | attainment {:6.2}% | offline {:8.1} tok/s | ttft p99 {:.3}s tpot p99 {:.1}ms | prefix hit {:.1}%",
@@ -340,7 +389,15 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         );
     }
     let label = format!("{policy}+{}", serving.pool);
-    let curve = curve_to_json(&label, &points);
+    let mut curve = curve_to_json(&label, &points);
+    curve.set(
+        "meta",
+        obs::meta_json(
+            sweep_cfg.seed,
+            &format!("{label};{serving:?};qps={qps:?};{sweep_cfg:?}"),
+            wall_s,
+        ),
+    );
     if let Some(path) = args.opt_str("json-out") {
         std::fs::write(path, curve.to_pretty())?;
         println!("wrote SLO-attainment-vs-load curve to {path}");

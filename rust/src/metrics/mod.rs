@@ -629,6 +629,7 @@ impl Recorder {
     }
 
     pub fn push(&mut self, rec: RequestRecord) {
+        let _p = crate::obs::scope(crate::obs::Subsystem::Metrics);
         match rec.class {
             Class::Online => {
                 self.online_total += 1;

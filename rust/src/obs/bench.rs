@@ -1,0 +1,327 @@
+//! The `ooco bench` standardized workload suite (DESIGN.md §3.11).
+//!
+//! Four scenarios spanning the simulator's subsystems — plain co-located
+//! serving, chunked-prefill long prompts, a prefix-heavy shared-system
+//! workload, and a faulted two-replica fleet — each run with the
+//! self-profiler armed. The result is the schema-stable `BENCH_sim.json`
+//! (`schema: "ooco-bench-v1"`): headline requests/s, events/s,
+//! per-subsystem breakdown, peak RSS, and config hash. CI runs the suite
+//! on every PR and gates the headline against `BENCH_baseline.json`
+//! (>20% regression fails), seeding the ROADMAP's bench trajectory.
+
+use std::time::Instant;
+
+use crate::config::{FaultSpec, ServingConfig};
+use crate::coordinator::Policy;
+use crate::fleet::{simulate_fleet_observed, FleetConfig};
+use crate::sim::{simulate_observed, SimConfig};
+use crate::trace::datasets::DatasetProfile;
+use crate::trace::generator::{
+    offline_trace_with_prefix, online_trace, PromptProfile,
+};
+use crate::trace::{PrefixProfile, Trace};
+use crate::util::json::Json;
+
+use super::{meta_json, peak_rss_bytes, ProfileReport};
+
+/// Schema tag for `BENCH_sim.json`; bump when the layout changes so the
+/// CI gate can refuse incomparable artifacts.
+pub const BENCH_SCHEMA: &str = "ooco-bench-v1";
+
+/// One scenario of the standardized suite.
+pub struct BenchCase {
+    pub name: &'static str,
+    trace: Trace,
+    sim: SimConfig,
+    /// `Some` routes through the fleet layer.
+    fleet: Option<FleetConfig>,
+}
+
+/// Outcome of one case: throughput figures plus the profiler breakdown.
+pub struct BenchCaseResult {
+    pub name: &'static str,
+    pub requests: usize,
+    pub events: u64,
+    pub wall_s: f64,
+    pub req_per_s: f64,
+    pub events_per_s: f64,
+    pub sim_end_s: f64,
+    pub finished: usize,
+    pub profile: ProfileReport,
+}
+
+impl BenchCaseResult {
+    pub fn summary_line(&self) -> String {
+        format!(
+            "bench[{}]: {} req / {} ev in {:.3}s wall — {:.0} req/s, {:.0} ev/s | {}",
+            self.name,
+            self.requests,
+            self.events,
+            self.wall_s,
+            self.req_per_s,
+            self.events_per_s,
+            self.profile.summary_line(),
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.to_string())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("req_per_s", Json::Num(self.req_per_s)),
+            ("events_per_s", Json::Num(self.events_per_s)),
+            ("sim_end_s", Json::Num(self.sim_end_s)),
+            ("finished", Json::Num(self.finished as f64)),
+            ("profile", self.profile.to_json()),
+        ])
+    }
+}
+
+/// Build the standardized suite. `scale` multiplies every scenario's
+/// trace duration (1.0 is the CI/trajectory configuration; tests use a
+/// small fraction); `seed` feeds every generator and simulator.
+pub fn standard_suite(scale: f64, seed: u64) -> Vec<BenchCase> {
+    let mut cases = Vec::new();
+
+    // 1. single-cluster: the paper's co-located baseline, dense offline
+    //    load through migrations/evictions/transport.
+    {
+        let dur = 600.0 * scale;
+        let trace = online_trace(DatasetProfile::azure_conv(), 0.5, dur, seed)
+            .merge(offline_trace_with_prefix(
+                DatasetProfile::ooc_offline(),
+                10.0,
+                dur,
+                PrefixProfile::None,
+                seed + 1,
+            ));
+        let mut sim = SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+        sim.seed = seed;
+        cases.push(BenchCase {
+            name: "single-cluster",
+            trace,
+            sim,
+            fleet: None,
+        });
+    }
+
+    // 2. chunked: long prompts under the auto chunk budget (§3.8) —
+    //    stresses the chunk solver and preemption bookkeeping.
+    {
+        let dur = 300.0 * scale;
+        let prompt: PromptProfile = "long-prompt(mean=8000,sigma=0.8,max=16384)"
+            .parse()
+            .expect("static profile");
+        let trace = online_trace(
+            prompt.apply(&DatasetProfile::azure_conv()),
+            0.5,
+            dur,
+            seed,
+        )
+        .merge(offline_trace_with_prefix(
+            prompt.apply(&DatasetProfile::ooc_offline()),
+            0.5,
+            dur,
+            PrefixProfile::None,
+            seed + 1,
+        ));
+        let mut serving = ServingConfig::preset_7b();
+        serving.chunk_tokens = "auto".parse().expect("static chunk mode");
+        let mut sim = SimConfig::new(serving, Policy::Ooco);
+        sim.seed = seed;
+        cases.push(BenchCase {
+            name: "chunked",
+            trace,
+            sim,
+            fleet: None,
+        });
+    }
+
+    // 3. prefix-heavy: shared-system offline prompts (§3.7) — stresses
+    //    the radix cache, COW admissions, and eviction flushes.
+    {
+        let dur = 300.0 * scale;
+        let prefix: PrefixProfile =
+            "shared-system(len=1024)".parse().expect("static profile");
+        let trace = online_trace(DatasetProfile::azure_conv(), 0.3, dur, seed)
+            .merge(offline_trace_with_prefix(
+                DatasetProfile::ooc_offline(),
+                4.0,
+                dur,
+                prefix,
+                seed + 1,
+            ));
+        let mut sim = SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+        sim.seed = seed;
+        cases.push(BenchCase {
+            name: "prefix-heavy",
+            trace,
+            sim,
+            fleet: None,
+        });
+    }
+
+    // 4. faulted-fleet: two replicas, a mid-run noticed crash (§3.9) —
+    //    stresses routing, evacuation transport, and recovery.
+    {
+        let dur = 240.0 * scale;
+        let trace = online_trace(DatasetProfile::azure_conv(), 0.5, dur, seed)
+            .merge(offline_trace_with_prefix(
+                DatasetProfile::ooc_offline(),
+                2.0,
+                dur,
+                PrefixProfile::None,
+                seed + 1,
+            ));
+        let mut serving = ServingConfig::preset_7b();
+        serving.cluster.relaxed_instances = 2;
+        serving.cluster.strict_instances = 2;
+        let mut sim = SimConfig::new(serving, Policy::Ooco);
+        sim.seed = seed;
+        let fault: FaultSpec = format!(
+            "crash(at={},pool=relaxed,inst=1,down={},notice={})",
+            60.0 * scale,
+            60.0 * scale,
+            20.0 * scale
+        )
+        .parse()
+        .expect("static fault spec");
+        let mut fleet = FleetConfig::new(sim.clone());
+        fleet.fleet.replicas = 2;
+        fleet.fault = fault;
+        cases.push(BenchCase {
+            name: "faulted-fleet",
+            trace,
+            sim,
+            fleet: Some(fleet),
+        });
+    }
+
+    cases
+}
+
+/// Run one case with the profiler armed and wall-clock measured.
+pub fn run_case(case: &BenchCase) -> BenchCaseResult {
+    let started = Instant::now();
+    let (events, end_time, finished, profile) = match &case.fleet {
+        Some(fcfg) => {
+            let res = simulate_fleet_observed(&case.trace, fcfg, None, true);
+            (
+                res.events,
+                res.end_time,
+                res.report.online_finished + res.report.offline_finished,
+                res.profile.expect("profiling was requested"),
+            )
+        }
+        None => {
+            let res = simulate_observed(&case.trace, &case.sim, None, true);
+            (
+                res.events,
+                res.end_time,
+                res.report.online_finished + res.report.offline_finished,
+                res.profile.expect("profiling was requested"),
+            )
+        }
+    };
+    let wall_s = started.elapsed().as_secs_f64().max(1e-9);
+    BenchCaseResult {
+        name: case.name,
+        requests: case.trace.len(),
+        events,
+        wall_s,
+        req_per_s: case.trace.len() as f64 / wall_s,
+        events_per_s: events as f64 / wall_s,
+        sim_end_s: end_time,
+        finished,
+        profile,
+    }
+}
+
+/// A canonical description of every case's configuration, hashed into the
+/// suite's `meta.config_hash` so trajectory points are comparable only
+/// when the suite definition matches.
+fn suite_config_desc(cases: &[BenchCase]) -> String {
+    let mut desc = format!("schema={BENCH_SCHEMA};");
+    for c in cases {
+        desc.push_str(&format!(
+            "{}:requests={},sim={:?},fleet={:?};",
+            c.name,
+            c.trace.len(),
+            c.sim,
+            c.fleet.as_ref().map(|f| (&f.fleet, &f.fault)),
+        ));
+    }
+    desc
+}
+
+/// Run the full suite and compose `BENCH_sim.json`. Returns the JSON and
+/// the per-case human summaries (printed by the CLI).
+pub fn run_suite(scale: f64, seed: u64) -> (Json, Vec<String>) {
+    let cases = standard_suite(scale, seed);
+    let desc = suite_config_desc(&cases);
+    let started = Instant::now();
+    let results: Vec<BenchCaseResult> = cases.iter().map(run_case).collect();
+    let total_wall = started.elapsed().as_secs_f64().max(1e-9);
+
+    let total_requests: usize = results.iter().map(|r| r.requests).sum();
+    let total_events: u64 = results.iter().map(|r| r.events).sum();
+    // Headline: whole-suite requests per wall second — one number that
+    // moves when any scenario's hot path regresses.
+    let headline = total_requests as f64 / total_wall;
+
+    let summaries: Vec<String> =
+        results.iter().map(|r| r.summary_line()).collect();
+    let json = Json::obj(vec![
+        ("schema", Json::Str(BENCH_SCHEMA.to_string())),
+        ("meta", meta_json(seed, &desc, total_wall)),
+        ("scale", Json::Num(scale)),
+        ("headline_req_per_s", Json::Num(headline)),
+        (
+            "total",
+            Json::obj(vec![
+                ("requests", Json::Num(total_requests as f64)),
+                ("events", Json::Num(total_events as f64)),
+                ("wall_s", Json::Num(total_wall)),
+                (
+                    "events_per_s",
+                    Json::Num(total_events as f64 / total_wall),
+                ),
+            ]),
+        ),
+        ("peak_rss_bytes", Json::Num(peak_rss_bytes() as f64)),
+        (
+            "cases",
+            Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+        ),
+    ]);
+    (json, summaries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::config_hash;
+
+    #[test]
+    fn suite_has_four_scenarios() {
+        let cases = standard_suite(0.01, 42);
+        let names: Vec<&str> = cases.iter().map(|c| c.name).collect();
+        assert_eq!(
+            names,
+            ["single-cluster", "chunked", "prefix-heavy", "faulted-fleet"]
+        );
+        assert!(cases.iter().all(|c| !c.trace.is_empty()));
+        assert!(cases[3].fleet.is_some());
+    }
+
+    #[test]
+    fn suite_config_hash_is_seed_stable() {
+        let a = config_hash(&suite_config_desc(&standard_suite(0.01, 42)));
+        let b = config_hash(&suite_config_desc(&standard_suite(0.01, 42)));
+        let c = config_hash(&suite_config_desc(&standard_suite(0.02, 42)));
+        assert_eq!(a, b);
+        assert_ne!(a, c, "scale changes the suite definition");
+    }
+}

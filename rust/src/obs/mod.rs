@@ -1,0 +1,552 @@
+//! Performance observatory: self-profiling probes, run metadata, and the
+//! standardized bench suite (DESIGN.md §3.11).
+//!
+//! PR 7's flight recorder observes the *simulated workload*; this module
+//! observes the *simulator itself* — the profiling-before-optimizing
+//! discipline the ROADMAP's order-of-magnitude speedup item needs. Three
+//! pieces:
+//!
+//! - **Scoped probes** ([`scope`], [`Subsystem`]): a thread-local profiler
+//!   accumulating per-subsystem *self* wall-time (exclusive: entering a
+//!   nested scope pauses the parent's attribution), call counts, and
+//!   per-event-type tallies. Disabled, every probe is one thread-local
+//!   branch and zero clock reads; enabled, probes read clocks but never
+//!   touch simulation state, so same-seed runs stay byte-identical
+//!   (`tests/obs_properties.rs` pins this).
+//! - **[`ProfileReport`]**: the `profile` key of `--json-out`, whose
+//!   per-subsystem breakdown must cover ≥90% of the measured span.
+//! - **Run metadata** ([`meta_json`], [`config_hash`], [`peak_rss_bytes`])
+//!   and the [`bench`] suite / [`openmetrics`] exporter built on top.
+
+pub mod bench;
+pub mod openmetrics;
+
+use std::cell::{Cell, RefCell};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+// ------------------------------------------------------------- subsystems
+
+/// The instrumented subsystems. Every hot-path probe charges one of these
+/// buckets; the uninstrumented remainder (loop control, event dispatch
+/// branches) is the `1 - coverage` residual of [`ProfileReport`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Subsystem {
+    /// Core/executor construction: request-table clones, heap seeding.
+    Setup,
+    /// Event-heap pops (the loop's ordering work).
+    HeapPop,
+    /// Event-heap pushes while applying the core's action stream.
+    HeapPush,
+    /// `SchedulerCore` decision entry points (§3.4 loop).
+    Scheduler,
+    /// Transport progress: chunk completions and job hand-offs.
+    Transport,
+    /// Prefix-cache lookups, inserts, and eviction flushes (§3.7).
+    Prefix,
+    /// Elastic pool re-planning heartbeat (§3.6).
+    Pool,
+    /// Fleet-only work: admission routing and work stealing (§3.9).
+    Fleet,
+    /// Flight-recorder taps and gauge sampling (§3.10).
+    Telemetry,
+    /// Metrics accumulation and report building.
+    Metrics,
+}
+
+const N_SUB: usize = 10;
+
+const SUB_NAMES: [&str; N_SUB] = [
+    "setup",
+    "heap_pop",
+    "heap_push",
+    "scheduler",
+    "transport",
+    "prefix",
+    "pool",
+    "fleet",
+    "telemetry",
+    "metrics",
+];
+
+impl Subsystem {
+    fn idx(self) -> usize {
+        match self {
+            Subsystem::Setup => 0,
+            Subsystem::HeapPop => 1,
+            Subsystem::HeapPush => 2,
+            Subsystem::Scheduler => 3,
+            Subsystem::Transport => 4,
+            Subsystem::Prefix => 5,
+            Subsystem::Pool => 6,
+            Subsystem::Fleet => 7,
+            Subsystem::Telemetry => 8,
+            Subsystem::Metrics => 9,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        SUB_NAMES[self.idx()]
+    }
+}
+
+/// Event classes tallied per popped loop event (one count per event, so
+/// the tally sum equals the loop's event total).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventClass {
+    Arrival,
+    RelaxedStep,
+    StrictStep,
+    TransferChunk,
+    CrashNotice,
+    Crash,
+    Recover,
+}
+
+const N_EV: usize = 7;
+
+const EV_NAMES: [&str; N_EV] = [
+    "arrival",
+    "relaxed_step",
+    "strict_step",
+    "transfer_chunk",
+    "crash_notice",
+    "crash",
+    "recover",
+];
+
+impl EventClass {
+    fn idx(self) -> usize {
+        match self {
+            EventClass::Arrival => 0,
+            EventClass::RelaxedStep => 1,
+            EventClass::StrictStep => 2,
+            EventClass::TransferChunk => 3,
+            EventClass::CrashNotice => 4,
+            EventClass::Crash => 5,
+            EventClass::Recover => 6,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        EV_NAMES[self.idx()]
+    }
+}
+
+// --------------------------------------------------------------- profiler
+
+#[derive(Debug)]
+struct ProfState {
+    started: Option<Instant>,
+    self_s: [f64; N_SUB],
+    calls: [u64; N_SUB],
+    events: [u64; N_EV],
+    /// Open scopes: (subsystem index, start of the current *self* segment).
+    /// Entering a child attributes the parent's open segment and restarts
+    /// it on exit — exclusive accounting, so buckets sum to ≤ total.
+    stack: Vec<(usize, Instant)>,
+}
+
+impl ProfState {
+    const fn new() -> Self {
+        ProfState {
+            started: None,
+            self_s: [0.0; N_SUB],
+            calls: [0; N_SUB],
+            events: [0; N_EV],
+            stack: Vec::new(),
+        }
+    }
+
+    fn reset(&mut self) {
+        *self = ProfState::new();
+    }
+}
+
+thread_local! {
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+    static STATE: RefCell<ProfState> = const { RefCell::new(ProfState::new()) };
+}
+
+/// Arm this thread's profiler and start the measured span. Resets any
+/// prior accumulation.
+pub fn enable() {
+    STATE.with(|s| {
+        let mut st = s.borrow_mut();
+        st.reset();
+        st.started = Some(Instant::now());
+    });
+    ENABLED.with(|e| e.set(true));
+}
+
+/// Is this thread's profiler armed? (One thread-local read — the whole
+/// cost of a disabled probe.)
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+/// Scope guard: charges `sub` for the wall time between construction and
+/// drop, minus any nested scopes (self-time accounting). No-op (and no
+/// clock read) when the profiler is disabled.
+#[must_use = "the scope measures until dropped — bind it with `let _p = ...`"]
+pub struct Scope {
+    active: bool,
+}
+
+#[inline]
+pub fn scope(sub: Subsystem) -> Scope {
+    if !is_enabled() {
+        return Scope { active: false };
+    }
+    let now = Instant::now();
+    STATE.with(|s| {
+        let st = &mut *s.borrow_mut();
+        if let Some(&(top, seg)) = st.stack.last() {
+            st.self_s[top] += now.duration_since(seg).as_secs_f64();
+        }
+        st.stack.push((sub.idx(), now));
+    });
+    Scope { active: true }
+}
+
+impl Drop for Scope {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let now = Instant::now();
+        STATE.with(|s| {
+            let st = &mut *s.borrow_mut();
+            if let Some((sub, seg)) = st.stack.pop() {
+                st.self_s[sub] += now.duration_since(seg).as_secs_f64();
+                st.calls[sub] += 1;
+            }
+            if let Some(top) = st.stack.last_mut() {
+                top.1 = now; // resume the parent's self segment
+            }
+        });
+    }
+}
+
+/// Tally one popped loop event. Call exactly once per event so the tally
+/// sum equals the loop's event total.
+#[inline]
+pub fn count_event(ev: EventClass) {
+    if !is_enabled() {
+        return;
+    }
+    STATE.with(|s| s.borrow_mut().events[ev.idx()] += 1);
+}
+
+/// Disarm the profiler and build the report over the span since
+/// [`enable`]. All open scopes must have dropped by now.
+pub fn take_report() -> ProfileReport {
+    ENABLED.with(|e| e.set(false));
+    STATE.with(|s| {
+        let mut st = s.borrow_mut();
+        debug_assert!(st.stack.is_empty(), "unbalanced profiler scopes");
+        let total_s = st
+            .started
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        let covered_s: f64 = st.self_s.iter().sum();
+        let subsystems = (0..N_SUB)
+            .filter(|&i| st.calls[i] > 0)
+            .map(|i| SubsystemStat {
+                name: SUB_NAMES[i],
+                calls: st.calls[i],
+                self_s: st.self_s[i],
+            })
+            .collect();
+        let events = (0..N_EV)
+            .filter(|&i| st.events[i] > 0)
+            .map(|i| (EV_NAMES[i], st.events[i]))
+            .collect();
+        let report = ProfileReport {
+            total_s,
+            covered_s,
+            coverage: if total_s > 0.0 {
+                covered_s / total_s
+            } else {
+                0.0
+            },
+            subsystems,
+            events,
+        };
+        st.reset();
+        report
+    })
+}
+
+// ----------------------------------------------------------------- report
+
+/// One subsystem's share of the measured span.
+#[derive(Debug, Clone)]
+pub struct SubsystemStat {
+    pub name: &'static str,
+    /// Scope entries (probe invocations), not loop events.
+    pub calls: u64,
+    /// Exclusive (self) wall time, seconds.
+    pub self_s: f64,
+}
+
+/// Per-subsystem wall-time breakdown of one profiled run — the `profile`
+/// key of `--json-out`. Wall times are inherently non-deterministic;
+/// everything else in the report stays byte-identical across same-seed
+/// runs (the probes are pure observers).
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    /// The full measured span: [`enable`] → [`take_report`].
+    pub total_s: f64,
+    /// Sum of per-subsystem self times.
+    pub covered_s: f64,
+    /// `covered_s / total_s` — the acceptance bar is ≥ 0.9.
+    pub coverage: f64,
+    /// Subsystems with at least one probe hit, in declaration order.
+    pub subsystems: Vec<SubsystemStat>,
+    /// Per-event-type tallies; the sum is the loop's event total.
+    pub events: Vec<(&'static str, u64)>,
+}
+
+impl ProfileReport {
+    /// Total loop events (sum of the per-type tallies).
+    pub fn event_total(&self) -> u64 {
+        self.events.iter().map(|(_, n)| n).sum()
+    }
+
+    /// One-line summary for bench/CLI output, hottest subsystem first.
+    pub fn summary_line(&self) -> String {
+        let mut ranked: Vec<&SubsystemStat> = self.subsystems.iter().collect();
+        ranked.sort_by(|a, b| {
+            b.self_s
+                .partial_cmp(&a.self_s)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let parts: Vec<String> = ranked
+            .iter()
+            .take(4)
+            .map(|s| {
+                format!(
+                    "{} {:.0}%",
+                    s.name,
+                    100.0 * s.self_s / self.total_s.max(1e-12)
+                )
+            })
+            .collect();
+        format!(
+            "profile: {:.3}s measured, {:.1}% covered | {}",
+            self.total_s,
+            self.coverage * 100.0,
+            parts.join(" | ")
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let subsystems = Json::Obj(
+            self.subsystems
+                .iter()
+                .map(|s| {
+                    (
+                        s.name.to_string(),
+                        Json::obj(vec![
+                            ("calls", Json::Num(s.calls as f64)),
+                            ("self_s", Json::Num(s.self_s)),
+                            (
+                                "frac",
+                                Json::Num(s.self_s / self.total_s.max(1e-12)),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let events = Json::Obj(
+            self.events
+                .iter()
+                .map(|(k, n)| (k.to_string(), Json::Num(*n as f64)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("total_s", Json::Num(self.total_s)),
+            ("covered_s", Json::Num(self.covered_s)),
+            ("coverage", Json::Num(self.coverage)),
+            ("subsystems", subsystems),
+            ("event_counts", events),
+        ])
+    }
+}
+
+// ------------------------------------------------------------ run metadata
+
+/// FNV-1a 64-bit — tiny, dependency-free, stable across runs; used for
+/// the config hash in the `meta` header so archived artifacts are
+/// attributable to an exact configuration.
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Hash a canonical config description (e.g. `format!("{cfg:?}")`) to a
+/// 16-hex-digit token.
+pub fn config_hash(desc: &str) -> String {
+    format!("{:016x}", fnv1a64(desc))
+}
+
+/// Self-describing `meta` header attached to every `--json-out` report:
+/// crate version, seed, config hash, and wall-clock duration. `wall_s` is
+/// the only non-deterministic field.
+pub fn meta_json(seed: u64, config_desc: &str, wall_s: f64) -> Json {
+    Json::obj(vec![
+        ("version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("config_hash", Json::Str(config_hash(config_desc))),
+        ("wall_s", Json::Num(wall_s)),
+    ])
+}
+
+/// Peak resident set size in bytes (`VmHWM` from `/proc/self/status`);
+/// 0 where the procfs interface is unavailable.
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_probes_are_inert() {
+        assert!(!is_enabled());
+        {
+            let _p = scope(Subsystem::Scheduler);
+            count_event(EventClass::Arrival);
+        }
+        let rep = take_report();
+        assert_eq!(rep.total_s, 0.0);
+        assert!(rep.subsystems.is_empty());
+        assert!(rep.events.is_empty());
+    }
+
+    #[test]
+    fn nested_scopes_attribute_self_time() {
+        enable();
+        {
+            let _outer = scope(Subsystem::Scheduler);
+            busy(2_000);
+            {
+                let _inner = scope(Subsystem::Prefix);
+                busy(2_000);
+            }
+            busy(2_000);
+        }
+        let rep = take_report();
+        assert!(!is_enabled());
+        let get = |name: &str| {
+            rep.subsystems
+                .iter()
+                .find(|s| s.name == name)
+                .expect(name)
+                .clone()
+        };
+        let sched = get("scheduler");
+        let prefix = get("prefix");
+        assert_eq!(sched.calls, 1);
+        assert_eq!(prefix.calls, 1);
+        assert!(sched.self_s > 0.0 && prefix.self_s > 0.0);
+        // Exclusive accounting: buckets sum to ≤ the measured span.
+        assert!(
+            rep.covered_s <= rep.total_s * 1.01,
+            "covered {} total {}",
+            rep.covered_s,
+            rep.total_s
+        );
+        // A tight loop of scoped work should be almost fully covered.
+        assert!(rep.coverage > 0.5, "coverage {}", rep.coverage);
+    }
+
+    #[test]
+    fn event_tallies_sum() {
+        enable();
+        count_event(EventClass::Arrival);
+        count_event(EventClass::Arrival);
+        count_event(EventClass::StrictStep);
+        let rep = take_report();
+        assert_eq!(rep.event_total(), 3);
+        assert_eq!(rep.events.len(), 2);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        enable();
+        {
+            let _p = scope(Subsystem::HeapPop);
+        }
+        count_event(EventClass::TransferChunk);
+        let j = take_report().to_json();
+        assert!(j.get("total_s").as_f64().is_some());
+        assert!(j.get("subsystems").get("heap_pop").get("calls").as_f64()
+            == Some(1.0));
+        assert_eq!(
+            j.get("event_counts").get("transfer_chunk").as_f64(),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // Pinned values: the config hash must be comparable across runs
+        // and crate versions.
+        assert_eq!(fnv1a64(""), 0xcbf29ce484222325);
+        assert_eq!(config_hash("abc"), config_hash("abc"));
+        assert_ne!(config_hash("abc"), config_hash("abd"));
+        assert_eq!(config_hash("abc").len(), 16);
+    }
+
+    #[test]
+    fn meta_fields() {
+        let m = meta_json(7, "cfg", 1.5);
+        assert_eq!(m.get("seed").as_u64(), Some(7));
+        assert_eq!(m.get("wall_s").as_f64(), Some(1.5));
+        assert_eq!(m.get("version").as_str(), Some(env!("CARGO_PKG_VERSION")));
+        assert_eq!(m.get("config_hash").as_str().unwrap().len(), 16);
+    }
+
+    #[test]
+    fn peak_rss_on_linux() {
+        // Linux CI/dev boxes have procfs; elsewhere 0 is the contract.
+        let rss = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            assert!(rss > 0, "VmHWM should be readable on linux");
+        }
+    }
+
+    /// Spin for roughly `iters` iterations of real work so scopes have
+    /// measurable width without sleeping.
+    fn busy(iters: u64) {
+        let mut x = 0u64;
+        for i in 0..iters {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(x);
+    }
+}

@@ -1,0 +1,266 @@
+//! OpenMetrics/Prometheus text exporter (`--metrics-out`).
+//!
+//! Renders a composed `--json-out` report object into the OpenMetrics
+//! text format so sim and engine runs speak a standard monitoring
+//! format: every numeric leaf becomes an `ooco_*` gauge family with
+//! `# HELP`/`# TYPE` lines, string leaves collect into one
+//! `ooco_run_info` family, the flight-recorder gauge `timeline` renders
+//! as timestamped samples (sim-time seconds), transport links get a
+//! `link` label, and the exposition terminates with `# EOF`.
+//!
+//! Family names are unique by construction (one `BTreeMap` entry per
+//! family), which is exactly what `tests/obs_properties.rs` validates.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+#[derive(Default)]
+struct Family {
+    help: String,
+    /// (label string incl. braces or empty, value, optional timestamp).
+    samples: Vec<(String, f64, Option<f64>)>,
+}
+
+/// Render `root` (a `--json-out`-shaped object) as OpenMetrics text.
+pub fn render(root: &Json) -> String {
+    let mut fams: BTreeMap<String, Family> = BTreeMap::new();
+    let mut info: Vec<(String, String)> = Vec::new();
+    if let Some(obj) = root.as_obj() {
+        for (key, val) in obj {
+            match key.as_str() {
+                "timeline" => render_timeline(&mut fams, val),
+                _ => walk(&mut fams, &mut info, &[sanitize(key)], val),
+            }
+        }
+    }
+    if !info.is_empty() {
+        let fam = fams.entry("ooco_run_info".to_string()).or_default();
+        fam.help =
+            "String-valued run attributes as key/value labels.".to_string();
+        for (k, v) in info {
+            fam.samples.push((
+                format!("{{key=\"{}\",value=\"{}\"}}", escape(&k), escape(&v)),
+                1.0,
+                None,
+            ));
+        }
+    }
+
+    let mut out = String::new();
+    for (name, fam) in &fams {
+        out.push_str(&format!("# HELP {name} {}\n", fam.help));
+        out.push_str(&format!("# TYPE {name} gauge\n"));
+        for (labels, value, ts) in &fam.samples {
+            out.push_str(name);
+            out.push_str(labels);
+            out.push(' ');
+            out.push_str(&fmt_value(*value));
+            if let Some(t) = ts {
+                out.push(' ');
+                out.push_str(&fmt_value(*t));
+            }
+            out.push('\n');
+        }
+    }
+    out.push_str("# EOF\n");
+    out
+}
+
+/// Generic recursive flattening: objects extend the metric path, numeric
+/// and boolean leaves emit samples, strings collect into the info family,
+/// arrays are skipped (the shaped ones — `timeline`, transport `links` —
+/// are special-cased before we get here).
+fn walk(
+    fams: &mut BTreeMap<String, Family>,
+    info: &mut Vec<(String, String)>,
+    path: &[String],
+    v: &Json,
+) {
+    match v {
+        Json::Num(n) => emit(fams, path, None, *n, None),
+        Json::Bool(b) => {
+            emit(fams, path, None, if *b { 1.0 } else { 0.0 }, None)
+        }
+        Json::Str(s) => info.push((path.join("_"), s.clone())),
+        Json::Obj(o) => {
+            for (k, val) in o {
+                let mut p = path.to_vec();
+                p.push(sanitize(k));
+                walk(fams, info, &p, val);
+            }
+        }
+        Json::Arr(items) => {
+            // Transport's per-link rows are the one labelled array shape.
+            if path.last().map(|s| s.as_str()) == Some("links") {
+                render_links(fams, path, items);
+            }
+        }
+        Json::Null => {}
+    }
+}
+
+/// The flight recorder's gauge timeline: one timestamped gauge family per
+/// sample key, labelled by replica when present. Timestamps are sim-time
+/// seconds — the run's own clock, which is what the gauges are plotted
+/// against.
+fn render_timeline(fams: &mut BTreeMap<String, Family>, timeline: &Json) {
+    let Some(samples) = timeline.as_arr() else {
+        return;
+    };
+    for sample in samples {
+        let Some(obj) = sample.as_obj() else { continue };
+        let t = sample.get("t").as_f64();
+        let replica = sample.get("replica").as_u64();
+        let labels = replica
+            .map(|r| format!("{{replica=\"{r}\"}}"))
+            .unwrap_or_default();
+        for (k, v) in obj {
+            if k == "t" || k == "replica" {
+                continue;
+            }
+            if let Some(n) = v.as_f64() {
+                let path =
+                    ["timeline".to_string(), sanitize(k)];
+                emit(fams, &path, Some(labels.clone()), n, t);
+            }
+        }
+    }
+}
+
+fn render_links(
+    fams: &mut BTreeMap<String, Family>,
+    path: &[String],
+    links: &[Json],
+) {
+    for link in links {
+        let name = link.get("name").as_str().unwrap_or("unnamed");
+        let labels = format!("{{link=\"{}\"}}", escape(name));
+        if let Some(obj) = link.as_obj() {
+            for (k, v) in obj {
+                if k == "name" {
+                    continue;
+                }
+                if let Some(n) = v.as_f64() {
+                    let mut p = path.to_vec();
+                    p.pop(); // replace the trailing "links" segment
+                    p.push("link".to_string());
+                    p.push(sanitize(k));
+                    emit(fams, &p, Some(labels.clone()), n, None);
+                }
+            }
+        }
+    }
+}
+
+fn emit(
+    fams: &mut BTreeMap<String, Family>,
+    path: &[String],
+    labels: Option<String>,
+    value: f64,
+    ts: Option<f64>,
+) {
+    let name = format!("ooco_{}", path.join("_"));
+    let fam = fams.entry(name).or_default();
+    if fam.help.is_empty() {
+        fam.help = format!("OOCO report field {}.", path.join("."));
+    }
+    fam.samples.push((labels.unwrap_or_default(), value, ts));
+}
+
+/// Metric-name charset: `[a-zA-Z0-9_]`, everything else folds to `_`.
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_scalars_and_eof() {
+        let root = Json::obj(vec![
+            (
+                "report",
+                Json::obj(vec![
+                    ("duration_s", Json::Num(10.0)),
+                    ("online_total", Json::Num(3.0)),
+                ]),
+            ),
+            ("policy", Json::Str("ooco".to_string())),
+        ]);
+        let text = render(&root);
+        assert!(text.contains("# HELP ooco_report_duration_s "));
+        assert!(text.contains("# TYPE ooco_report_duration_s gauge"));
+        assert!(text.contains("\nooco_report_duration_s 10\n"));
+        assert!(text
+            .contains("ooco_run_info{key=\"policy\",value=\"ooco\"} 1"));
+        assert!(text.ends_with("# EOF\n"));
+    }
+
+    #[test]
+    fn timeline_gets_timestamps_and_replica_labels() {
+        let root = Json::obj(vec![(
+            "timeline",
+            Json::Arr(vec![Json::obj(vec![
+                ("t", Json::Num(5.0)),
+                ("replica", Json::Num(1.0)),
+                ("online_queue", Json::Num(4.0)),
+            ])]),
+        )]);
+        let text = render(&root);
+        assert!(
+            text.contains("ooco_timeline_online_queue{replica=\"1\"} 4 5"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn links_get_link_labels() {
+        let root = Json::obj(vec![(
+            "transport",
+            Json::obj(vec![(
+                "links",
+                Json::Arr(vec![Json::obj(vec![
+                    ("name", Json::Str("pool".to_string())),
+                    ("busy_s", Json::Num(2.5)),
+                ])]),
+            )]),
+        )]);
+        let text = render(&root);
+        assert!(
+            text.contains("ooco_transport_link_busy_s{link=\"pool\"} 2.5"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn family_names_are_unique() {
+        let root = Json::obj(vec![
+            ("a", Json::obj(vec![("x", Json::Num(1.0))])),
+            ("b", Json::obj(vec![("x", Json::Num(2.0))])),
+        ]);
+        let text = render(&root);
+        let helps: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("# HELP"))
+            .collect();
+        let mut dedup = helps.clone();
+        dedup.dedup();
+        assert_eq!(helps.len(), dedup.len());
+    }
+}

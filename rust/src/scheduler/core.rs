@@ -35,6 +35,7 @@ use crate::instance::{
 use crate::metrics::{
     ChunkReport, LinkReport, PoolReport, PrefixReport, TransportReport,
 };
+use crate::obs::{self, Subsystem};
 use crate::perfmodel::{BatchStats, PerfModel};
 use crate::pool::{PoolManager, Transition, TransitionPhase, WARMUP_S};
 use crate::prefix::PrefixMatch;
@@ -814,6 +815,7 @@ impl SchedulerCore {
         if !self.cfg.serving.prefix.enabled {
             return PrefixMatch::empty();
         }
+        let _p = obs::scope(Subsystem::Prefix);
         let req = &self.cluster.requests[rid as usize];
         let Some(p) = req.prefix else {
             return PrefixMatch::empty();
@@ -902,6 +904,7 @@ impl SchedulerCore {
         if !self.cfg.serving.prefix.enabled {
             return;
         }
+        let _p = obs::scope(Subsystem::Prefix);
         let Some(p) = self.cluster.requests[rid as usize].prefix else {
             return;
         };
@@ -928,6 +931,7 @@ impl SchedulerCore {
         if !self.cfg.serving.prefix.enabled {
             return;
         }
+        let _p = obs::scope(Subsystem::Prefix);
         for i in 0..self.cluster.relaxed.len() {
             self.flush_cache_on(InstanceRef::Relaxed(i));
         }
@@ -1187,6 +1191,7 @@ impl SchedulerCore {
     /// millisecond-scale step events this is indistinguishable from a
     /// timer, and it keeps the executors free of pool-specific work orders.
     fn pool_tick(&mut self) {
+        let _p = obs::scope(Subsystem::Pool);
         // Crash-noticed instances keep streaming KV off every tick until
         // the crash fires (no-op without an active notice).
         self.evacuation_tick();

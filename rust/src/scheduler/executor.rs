@@ -20,6 +20,7 @@
 //! The third implementation, `engine::EngineExecutor`, lives next to the
 //! PJRT runtime it drives and uses a real wall clock and real model steps.
 
+use crate::obs::{self, EventClass, Subsystem};
 use crate::telemetry::TraceRecorder;
 use crate::trace::Trace;
 
@@ -68,6 +69,7 @@ pub struct VirtualExecutor {
 impl VirtualExecutor {
     /// Schedule `trace`'s arrivals; process events up to `horizon` seconds.
     pub fn new(trace: &Trace, horizon: f64) -> Self {
+        let _p = obs::scope(Subsystem::HeapPush);
         let mut queue = EventQueue::new();
         for r in &trace.requests {
             queue.push(r.arrival, EventKind::Arrival(r.id));
@@ -84,6 +86,7 @@ impl VirtualExecutor {
 
     fn apply(&mut self, actions: Vec<Action>) {
         self.telemetry.observe(self.now, 0, &actions);
+        let _p = obs::scope(Subsystem::HeapPush);
         for a in &actions {
             match *a {
                 Action::StartStep {
@@ -147,21 +150,38 @@ impl Executor for VirtualExecutor {
     }
 
     fn run(&mut self, core: &mut SchedulerCore) -> anyhow::Result<ExecStats> {
-        while let Some(ev) = self.queue.pop() {
+        loop {
+            let ev = {
+                let _p = obs::scope(Subsystem::HeapPop);
+                match self.queue.pop() {
+                    Some(ev) => ev,
+                    None => break,
+                }
+            };
             if ev.time > self.horizon {
                 break;
             }
             self.now = ev.time;
             self.events += 1;
             let actions = match ev.kind {
-                EventKind::Arrival(rid) => core.on_arrival(self.now, rid),
+                EventKind::Arrival(rid) => {
+                    obs::count_event(EventClass::Arrival);
+                    let _p = obs::scope(Subsystem::Scheduler);
+                    core.on_arrival(self.now, rid)
+                }
                 EventKind::RelaxedStep { inst, seq } => {
+                    obs::count_event(EventClass::RelaxedStep);
+                    let _p = obs::scope(Subsystem::Scheduler);
                     core.on_step_end(self.now, InstanceRef::Relaxed(inst), seq)
                 }
                 EventKind::StrictStep { inst, seq } => {
+                    obs::count_event(EventClass::StrictStep);
+                    let _p = obs::scope(Subsystem::Scheduler);
                     core.on_step_end(self.now, InstanceRef::Strict(inst), seq)
                 }
                 EventKind::TransferChunk { job, seq } => {
+                    obs::count_event(EventClass::TransferChunk);
+                    let _p = obs::scope(Subsystem::Transport);
                     core.on_transfer_progress(self.now, job, seq)
                 }
             };
@@ -173,7 +193,7 @@ impl Executor for VirtualExecutor {
                     &core.cluster,
                     core.transport.links(),
                 );
-                self.telemetry.sample_tick(self.now);
+                self.telemetry.sample_tick(self.now, self.events);
             }
         }
         Ok(ExecStats {

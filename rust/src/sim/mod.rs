@@ -24,9 +24,11 @@ use crate::metrics::{
     ChunkReport, PoolReport, PrefixReport, Recorder, Report,
     TransportReport,
 };
+use crate::obs::{self, ProfileReport, Subsystem};
 use crate::scheduler::{CoreConfig, Executor, SchedulerCore, VirtualExecutor};
 use crate::telemetry::{TelemetryOpts, TelemetryOut, TraceRecorder};
 use crate::trace::Trace;
+use crate::util::json::Json;
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -107,6 +109,11 @@ pub struct SimResult {
     /// trace — DESIGN.md §3.10). `None` unless the run was traced via
     /// [`simulate_traced`].
     pub telemetry: Option<TelemetryOut>,
+    /// Loop events delivered to the core (arrivals, step ends, chunks).
+    pub events: u64,
+    /// Self-profiler breakdown (DESIGN.md §3.11). `None` unless the run
+    /// was profiled via [`simulate_observed`].
+    pub profile: Option<ProfileReport>,
 }
 
 /// Run the simulation of `trace` under `cfg`: build a [`SchedulerCore`],
@@ -123,11 +130,35 @@ pub fn simulate_traced(
     cfg: &SimConfig,
     telemetry: Option<TelemetryOpts>,
 ) -> SimResult {
-    let mut core = SchedulerCore::new(trace.requests.clone(), cfg.core());
+    simulate_observed(trace, cfg, telemetry, false)
+}
+
+/// [`simulate_traced`] with the self-profiler optionally armed
+/// (DESIGN.md §3.11). The probes are pure observers — they read clocks
+/// but never simulation state — so `profile: true` leaves every
+/// deterministic field of the result byte-identical to an unprofiled
+/// same-seed run (`tests/obs_properties.rs` pins this); the breakdown
+/// lands in [`SimResult::profile`].
+pub fn simulate_observed(
+    trace: &Trace,
+    cfg: &SimConfig,
+    telemetry: Option<TelemetryOpts>,
+    profile: bool,
+) -> SimResult {
+    if profile {
+        obs::enable();
+    }
     let horizon = trace.duration() + cfg.drain_s;
-    let mut executor = VirtualExecutor::new(trace, horizon);
+    let (mut core, mut executor) = {
+        let _p = obs::scope(Subsystem::Setup);
+        (
+            SchedulerCore::new(trace.requests.clone(), cfg.core()),
+            VirtualExecutor::new(trace, horizon),
+        )
+    };
     if let Some(opts) = telemetry {
         let mut rec = TraceRecorder::flight(opts);
+        rec.set_horizon(horizon);
         rec.register_requests(&trace.requests);
         rec.register_replica(
             0,
@@ -139,14 +170,51 @@ pub fn simulate_traced(
     let stats = executor
         .run(&mut core)
         .expect("virtual execution is infallible");
-    let mut result = build_result(&core, trace, cfg, stats.end_time);
+    let mut result = {
+        let _p = obs::scope(Subsystem::Metrics);
+        build_result(&core, trace, cfg, stats.end_time)
+    };
+    result.events = stats.events;
     if executor.telemetry.is_enabled() {
         for r in &core.cluster.requests {
             executor.telemetry.finalize_request(r);
         }
         result.telemetry = executor.telemetry.finish(stats.end_time);
     }
+    if profile {
+        result.profile = Some(obs::take_report());
+    }
     result
+}
+
+/// Compose the machine-readable `--json-out` object for a single-cluster
+/// run: config echo, report sections, optional telemetry, optional
+/// profile. The CLI layers the `meta` header on top; everything except
+/// `profile` is deterministic for a fixed seed.
+pub fn result_json(cfg: &SimConfig, res: &SimResult) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("policy", Json::Str(cfg.policy.to_string())),
+        ("pool_policy", Json::Str(cfg.serving.pool.to_string())),
+        (
+            "chunk_tokens",
+            Json::Str(cfg.serving.chunk_tokens.to_string()),
+        ),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("events", Json::Num(res.events as f64)),
+        ("report", res.report.to_json()),
+        ("transport", res.transport.to_json()),
+        ("pool", res.pool.to_json()),
+        ("prefix", res.prefix.to_json()),
+        ("chunk", res.chunk.to_json()),
+    ];
+    if let Some(tel) = &res.telemetry {
+        pairs.push(("timeline", tel.timeline.clone()));
+        pairs.push(("attribution", tel.attribution.clone()));
+    }
+    if let Some(profile) = &res.profile {
+        pairs.push(("profile", profile.to_json()));
+    }
+    Json::obj(pairs)
 }
 
 fn build_result(
@@ -187,5 +255,7 @@ fn build_result(
         prefix: core.prefix_report(),
         chunk: core.chunk_report(),
         telemetry: None,
+        events: 0,
+        profile: None,
     }
 }

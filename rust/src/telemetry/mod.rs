@@ -39,6 +39,7 @@ use std::time::Instant;
 use crate::config::SloSpec;
 use crate::instance::{PoolRole, StepKind};
 use crate::metrics::RequestRecord;
+use crate::obs::{self, Subsystem};
 use crate::request::{Class, Request, RequestId};
 use crate::scheduler::action::{Action, InstanceRef, RolePhase};
 use crate::scheduler::cluster::ClusterState;
@@ -324,6 +325,14 @@ impl TraceRecorder {
         self.inner.is_some()
     }
 
+    /// Declare the simulated horizon (trace duration + drain) so the
+    /// `--progress` heartbeat can print percent-complete and an ETA.
+    pub fn set_horizon(&mut self, horizon: f64) {
+        if let Some(f) = &mut self.inner {
+            f.horizon = horizon;
+        }
+    }
+
     /// Register workload statics (class, arrival, prompt/output lengths)
     /// before the run starts.
     pub fn register_requests(&mut self, requests: &[Request]) {
@@ -344,6 +353,7 @@ impl TraceRecorder {
     #[inline]
     pub fn observe(&mut self, now: f64, replica: usize, actions: &[Action]) {
         if let Some(f) = &mut self.inner {
+            let _p = obs::scope(Subsystem::Telemetry);
             f.observe(now, replica, actions);
         }
     }
@@ -366,15 +376,18 @@ impl TraceRecorder {
         links: &[LinkState],
     ) {
         if let Some(f) = &mut self.inner {
+            let _p = obs::scope(Subsystem::Telemetry);
             f.sample_replica(now, replica, cluster, links);
         }
     }
 
     /// Advance the sampling clock (after all replicas sampled) and emit
-    /// the optional progress line.
-    pub fn sample_tick(&mut self, now: f64) {
+    /// the optional progress line. `events` is the executor's cumulative
+    /// loop-event count, used for the heartbeat's events/s rate.
+    pub fn sample_tick(&mut self, now: f64, events: u64) {
         if let Some(f) = &mut self.inner {
-            f.sample_tick(now);
+            let _p = obs::scope(Subsystem::Telemetry);
+            f.sample_tick(now, events);
         }
     }
 
@@ -382,6 +395,7 @@ impl TraceRecorder {
     /// TTFT/TPOT attribution row when `r` is a violated online request.
     pub fn finalize_request(&mut self, r: &Request) {
         if let Some(f) = &mut self.inner {
+            let _p = obs::scope(Subsystem::Telemetry);
             f.finalize_request(r);
         }
     }
@@ -389,6 +403,7 @@ impl TraceRecorder {
     /// Close remaining spans at `end_time` and build the outputs.
     /// Returns `None` for a disabled recorder.
     pub fn finish(&mut self, end_time: f64) -> Option<TelemetryOut> {
+        let _p = obs::scope(Subsystem::Telemetry);
         self.inner.take().map(|mut f| f.finish(end_time))
     }
 }
@@ -428,6 +443,11 @@ struct FlightRecorder {
     started_wall: Instant,
     last_progress_wall: f64,
     last_progress_actions: u64,
+    last_progress_t: f64,
+    last_progress_events: u64,
+    /// Simulated end time (trace duration + drain), used by the progress
+    /// line's percent-complete and ETA estimates. 0 = unknown.
+    horizon: f64,
 }
 
 impl FlightRecorder {
@@ -460,6 +480,9 @@ impl FlightRecorder {
             started_wall: Instant::now(),
             last_progress_wall: 0.0,
             last_progress_actions: 0,
+            last_progress_t: 0.0,
+            last_progress_events: 0,
+            horizon: 0.0,
         }
     }
 
@@ -1455,22 +1478,40 @@ impl FlightRecorder {
         ok as f64 / self.window.len() as f64
     }
 
-    fn sample_tick(&mut self, now: f64) {
+    fn sample_tick(&mut self, now: f64, events: u64) {
         self.last_sample_at = now;
         self.next_sample = now + self.opts.sample_interval_s;
         if self.opts.progress {
             let wall = self.started_wall.elapsed().as_secs_f64();
             let dw = (wall - self.last_progress_wall).max(1e-9);
             let da = self.actions_seen - self.last_progress_actions;
-            eprintln!(
-                "[ooco] t={:.1}s actions={} ({:.0}/s wall) slo_window={:.4}",
+            let de = events.saturating_sub(self.last_progress_events);
+            // Sim-seconds advanced per wall-second since the last line;
+            // the ETA divides the remaining horizon by this rate.
+            let sim_rate = (now - self.last_progress_t).max(0.0) / dw;
+            let mut line = format!(
+                "[ooco] t={:.1}s events={} ({:.0}/s wall) actions={} ({:.0}/s wall) sim_rate={:.0}x slo_window={:.4}",
                 now,
+                events,
+                de as f64 / dw,
                 self.actions_seen,
                 da as f64 / dw,
+                sim_rate,
                 self.attainment(),
             );
+            if self.horizon > 0.0 {
+                let pct = (now / self.horizon * 100.0).min(100.0);
+                line.push_str(&format!(" {pct:.0}%"));
+                if sim_rate > EPS && now < self.horizon {
+                    let eta = (self.horizon - now) / sim_rate;
+                    line.push_str(&format!(" eta={eta:.0}s"));
+                }
+            }
+            eprintln!("{line}");
             self.last_progress_wall = wall;
             self.last_progress_actions = self.actions_seen;
+            self.last_progress_t = now;
+            self.last_progress_events = events;
         }
     }
 

@@ -134,6 +134,23 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Insert/replace `key` on an object; no-op on non-objects. Lets
+    /// callers layer keys (e.g. the `meta` header) onto a composed report.
+    pub fn set(&mut self, key: &str, v: Json) {
+        if let Json::Obj(o) = self {
+            o.insert(key.to_string(), v);
+        }
+    }
+
+    /// Remove `key` from an object, returning it. Used by tests that
+    /// compare reports modulo non-deterministic keys.
+    pub fn remove(&mut self, key: &str) -> Option<Json> {
+        match self {
+            Json::Obj(o) => o.remove(key),
+            _ => None,
+        }
+    }
+
     pub fn arr_f64(values: &[f64]) -> Json {
         Json::Arr(values.iter().map(|v| Json::Num(*v)).collect())
     }

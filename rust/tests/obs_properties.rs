@@ -1,0 +1,293 @@
+//! Performance-observatory property tests (DESIGN.md §3.11):
+//!
+//! 1. **Pure observers**: arming the self-profiler changes nothing
+//!    observable — the composed `--json-out` object (minus the `profile`
+//!    key itself) is byte-identical between a profiled and an unprofiled
+//!    same-seed run, for both the single-cluster and fleet paths.
+//! 2. **Coverage**: on a non-trivial run the per-subsystem breakdown
+//!    covers ≥90% of the measured span, self-times never exceed the
+//!    span (exclusive accounting), and the event tally sum equals the
+//!    loop's event count.
+//! 3. **Fault tallies**: a faulted fleet run counts its crash-notice /
+//!    crash / recover events.
+//! 4. **OpenMetrics well-formedness**: the `--metrics-out` exposition
+//!    has unique family names, `# HELP`/`# TYPE` preceding every
+//!    family's samples, legal metric-name charset, and a terminating
+//!    `# EOF`.
+//! 5. **Bench suite**: `ooco bench`'s `run_suite` emits the
+//!    schema-stable artifact with all four scenarios profiled.
+
+use std::collections::BTreeMap;
+
+use ooco::config::ServingConfig;
+use ooco::coordinator::Policy;
+use ooco::fleet::{self, simulate_fleet_observed, FleetConfig};
+use ooco::obs;
+use ooco::sim::{self, simulate_observed, SimConfig};
+use ooco::telemetry::TelemetryOpts;
+use ooco::trace::datasets::DatasetProfile;
+use ooco::trace::generator::{offline_trace, online_trace};
+use ooco::trace::Trace;
+
+fn mixed_trace(duration: f64, seed: u64) -> Trace {
+    let online =
+        online_trace(DatasetProfile::azure_conv(), 0.6, duration, seed);
+    let offline =
+        offline_trace(DatasetProfile::ooc_offline(), 2.0, duration, seed + 1);
+    online.merge(offline)
+}
+
+fn sim_cfg(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+    cfg.seed = seed;
+    cfg.drain_s = 120.0;
+    cfg
+}
+
+// ------------------------------------------------------- 1. pure observers
+
+#[test]
+fn profiling_is_a_pure_observer_single_cluster() {
+    let trace = mixed_trace(120.0, 42);
+    let cfg = sim_cfg(42);
+
+    let plain = simulate_observed(&trace, &cfg, None, false);
+    let profiled = simulate_observed(&trace, &cfg, None, true);
+    assert!(plain.profile.is_none());
+    let prof = profiled.profile.as_ref().expect("profile requested");
+    assert!(prof.total_s > 0.0);
+
+    let a = sim::result_json(&cfg, &plain);
+    let mut b = sim::result_json(&cfg, &profiled);
+    assert!(b.remove("profile").is_some(), "profiled run carries the key");
+    assert_eq!(
+        a.to_pretty(),
+        b.to_pretty(),
+        "profiling must not perturb any deterministic output"
+    );
+}
+
+#[test]
+fn profiling_is_a_pure_observer_with_telemetry() {
+    // The telemetry tap is itself probed (Subsystem::Telemetry), so run
+    // the identity check with the flight recorder attached too: timeline
+    // and attribution must not move either.
+    let trace = mixed_trace(90.0, 7);
+    let cfg = sim_cfg(7);
+    let opts = TelemetryOpts::new(cfg.serving.slo);
+
+    let plain = simulate_observed(&trace, &cfg, Some(opts), false);
+    let profiled = simulate_observed(&trace, &cfg, Some(opts), true);
+    let a = sim::result_json(&cfg, &plain);
+    let mut b = sim::result_json(&cfg, &profiled);
+    b.remove("profile");
+    assert_eq!(a.to_pretty(), b.to_pretty());
+}
+
+#[test]
+fn profiling_is_a_pure_observer_fleet() {
+    let trace = mixed_trace(90.0, 11);
+    let mut serving = ServingConfig::preset_7b();
+    serving.cluster.relaxed_instances = 2;
+    serving.cluster.strict_instances = 2;
+    let mut simc = SimConfig::new(serving, Policy::Ooco);
+    simc.seed = 11;
+    simc.drain_s = 120.0;
+    let mut cfg = FleetConfig::new(simc);
+    cfg.fleet.replicas = 2;
+    cfg.fault = "crash(at=20,pool=relaxed,inst=1,down=30,notice=10)"
+        .parse()
+        .unwrap();
+
+    let plain = simulate_fleet_observed(&trace, &cfg, None, false);
+    let profiled = simulate_fleet_observed(&trace, &cfg, None, true);
+    let a = fleet::result_json(&cfg, &plain);
+    let mut b = fleet::result_json(&cfg, &profiled);
+    assert!(b.remove("profile").is_some());
+    assert_eq!(a.to_pretty(), b.to_pretty());
+}
+
+// ------------------------------------------------- 2. coverage + tallies
+
+#[test]
+fn profile_breakdown_covers_the_span() {
+    let trace = mixed_trace(300.0, 42);
+    let cfg = sim_cfg(42);
+    let res = simulate_observed(&trace, &cfg, None, true);
+    let prof = res.profile.expect("profile requested");
+
+    // Exclusive accounting: buckets can never sum past the span (small
+    // tolerance for clock granularity).
+    assert!(
+        prof.covered_s <= prof.total_s * 1.02 + 1e-6,
+        "covered {} > total {}",
+        prof.covered_s,
+        prof.total_s
+    );
+    // The acceptance bar: the breakdown explains ≥90% of loop time.
+    assert!(
+        prof.coverage >= 0.9,
+        "coverage {:.3} below the 0.9 bar ({})",
+        prof.coverage,
+        prof.summary_line()
+    );
+    // One tally per popped loop event.
+    assert_eq!(prof.event_total(), res.events, "event tallies must sum");
+    for name in ["setup", "heap_pop", "heap_push", "scheduler", "metrics"] {
+        assert!(
+            prof.subsystems.iter().any(|s| s.name == name && s.calls > 0),
+            "subsystem {name} never fired"
+        );
+    }
+}
+
+#[test]
+fn fleet_profile_counts_fault_events() {
+    let trace = mixed_trace(90.0, 13);
+    let mut serving = ServingConfig::preset_7b();
+    serving.cluster.relaxed_instances = 2;
+    serving.cluster.strict_instances = 2;
+    let mut simc = SimConfig::new(serving, Policy::Ooco);
+    simc.seed = 13;
+    simc.drain_s = 120.0;
+    let mut cfg = FleetConfig::new(simc);
+    cfg.fleet.replicas = 2;
+    cfg.fault = "crash(at=20,pool=relaxed,inst=1,down=30,notice=10)"
+        .parse()
+        .unwrap();
+
+    let res = simulate_fleet_observed(&trace, &cfg, None, true);
+    let prof = res.profile.expect("profile requested");
+    assert_eq!(prof.event_total(), res.events);
+    let count = |name: &str| {
+        prof.events
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, n)| *n)
+            .unwrap_or(0)
+    };
+    assert!(count("crash_notice") >= 1, "{:?}", prof.events);
+    assert!(count("crash") >= 1);
+    assert!(count("recover") >= 1);
+    assert!(count("arrival") > 0);
+    assert!(
+        prof.subsystems.iter().any(|s| s.name == "fleet" && s.calls > 0),
+        "fleet routing/steal probes never fired"
+    );
+}
+
+// ------------------------------------------------ 4. OpenMetrics export
+
+/// Minimal validator for the subset of the OpenMetrics text format the
+/// exporter emits: `# HELP <name> ...` then `# TYPE <name> gauge` then
+/// that family's samples, families unique, `# EOF` last.
+fn assert_well_formed_openmetrics(text: &str) {
+    assert!(text.ends_with("# EOF\n"), "missing terminating # EOF");
+    let mut declared: BTreeMap<String, bool> = BTreeMap::new(); // name -> typed
+    let mut pending_help: Option<String> = None;
+    for line in text.lines() {
+        if line == "# EOF" {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap().to_string();
+            assert!(
+                !declared.contains_key(&name),
+                "family {name} declared twice"
+            );
+            declared.insert(name.clone(), false);
+            pending_help = Some(name);
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap().to_string();
+            assert_eq!(it.next(), Some("gauge"), "only gauges are emitted");
+            assert_eq!(
+                pending_help.as_deref(),
+                Some(name.as_str()),
+                "TYPE must directly follow its HELP"
+            );
+            declared.insert(name, true);
+            pending_help = None;
+        } else {
+            // Sample line: <name>[{labels}] <value> [<ts>]
+            let name_end = line
+                .find(|c: char| c == '{' || c == ' ')
+                .unwrap_or(line.len());
+            let name = &line[..name_end];
+            assert!(
+                !name.is_empty()
+                    && name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_')
+                    && !name.starts_with(|c: char| c.is_ascii_digit()),
+                "illegal metric name in line: {line}"
+            );
+            assert_eq!(
+                declared.get(name),
+                Some(&true),
+                "sample before HELP/TYPE: {line}"
+            );
+            let after = &line[name_end..];
+            let values = after
+                .rsplit_once('}')
+                .map(|(_, v)| v)
+                .unwrap_or(after)
+                .trim();
+            for tok in values.split_whitespace() {
+                tok.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("bad number in: {line}"));
+            }
+        }
+    }
+    assert!(!declared.is_empty(), "no metric families emitted");
+}
+
+#[test]
+fn openmetrics_exposition_is_well_formed() {
+    let trace = mixed_trace(120.0, 42);
+    let cfg = sim_cfg(42);
+    let opts = TelemetryOpts::new(cfg.serving.slo);
+    let res = simulate_observed(&trace, &cfg, Some(opts), true);
+    let mut out = sim::result_json(&cfg, &res);
+    out.set("meta", obs::meta_json(cfg.seed, "test-config", 0.5));
+    let text = obs::openmetrics::render(&out);
+    assert_well_formed_openmetrics(&text);
+    // Spot checks: headline report gauges, run metadata, timeline points.
+    assert!(text.contains("ooco_report_"), "report section missing");
+    assert!(
+        text.contains("ooco_run_info{key=\"meta_version\""),
+        "meta version label missing"
+    );
+    assert!(text.contains("ooco_timeline_"), "timeline section missing");
+    assert!(text.contains("ooco_profile_coverage "), "profile missing");
+}
+
+// ------------------------------------------------------- 5. bench suite
+
+#[test]
+fn bench_suite_emits_schema_stable_artifact() {
+    // Tiny scale: the suite shape matters here, not the numbers.
+    let (json, summaries) = obs::bench::run_suite(0.02, 42);
+    assert_eq!(summaries.len(), 4);
+    assert_eq!(
+        json.get("schema").as_str(),
+        Some(obs::bench::BENCH_SCHEMA)
+    );
+    assert!(json.get("headline_req_per_s").as_f64().unwrap() > 0.0);
+    assert!(json.get("total").get("events").as_f64().unwrap() > 0.0);
+    assert_eq!(
+        json.get("meta").get("config_hash").as_str().unwrap().len(),
+        16
+    );
+    let cases = json.get("cases").as_arr().expect("cases array");
+    assert_eq!(cases.len(), 4);
+    for case in cases {
+        assert!(case.get("requests").as_f64().unwrap() > 0.0);
+        assert!(
+            case.get("profile").get("coverage").as_f64().is_some(),
+            "every case is self-profiled"
+        );
+    }
+    // The artifact renders cleanly as OpenMetrics too (CI publishes it).
+    assert_well_formed_openmetrics(&obs::openmetrics::render(&json));
+}
