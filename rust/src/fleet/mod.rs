@@ -880,6 +880,9 @@ pub fn simulate_fleet_observed(
     if let Some(opts) = telemetry {
         let mut rec = TraceRecorder::flight(opts);
         rec.set_horizon(fleet.horizon);
+        if let Some(wp) = opts.watch {
+            rec.arm_watch(crate::watch::Watchdog::new(wp, &cfg.sim.serving));
+        }
         rec.register_requests(&trace.requests);
         for r in 0..cfg.fleet.replicas {
             rec.register_replica(
@@ -919,6 +922,9 @@ pub fn result_json(cfg: &FleetConfig, res: &FleetResult) -> Json {
     if let Some(tel) = &res.telemetry {
         pairs.push(("timeline", tel.timeline.clone()));
         pairs.push(("attribution", tel.attribution.clone()));
+        if let Some(inc) = &tel.incidents {
+            pairs.push(("incidents", inc.clone()));
+        }
     }
     if let Some(profile) = &res.profile {
         pairs.push(("profile", profile.to_json()));

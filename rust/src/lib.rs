@@ -31,6 +31,7 @@ pub mod testutil;
 pub mod trace;
 pub mod transport;
 pub mod util;
+pub mod watch;
 
 /// One-stop import surface for the public scheduling API.
 ///
@@ -85,5 +86,8 @@ pub mod prelude {
         datasets::DatasetProfile,
         generator::{offline_trace, online_trace, PromptProfile},
         Trace,
+    };
+    pub use crate::watch::{
+        Incident, IncidentKind, Severity, WatchOut, WatchParams, Watchdog,
     };
 }

@@ -7,6 +7,8 @@
 //!   bench      — standardized perf suite with self-profiling (§3.11)
 //!   roofline   — query the performance model
 //!   trace      — generate and export a workload trace (JSON)
+//!   analyze    — offline incident ledger + Markdown postmortem from a
+//!                recorded `--json-out` report (§3.12)
 
 use std::time::Instant;
 
@@ -49,6 +51,7 @@ fn run() -> anyhow::Result<()> {
         "bench" => cmd_bench(&args),
         "roofline" => cmd_roofline(&args),
         "trace" => cmd_trace(&args),
+        "analyze" => cmd_analyze(&args),
         other => {
             print_usage();
             anyhow::bail!("unknown subcommand `{other}`")
@@ -60,7 +63,7 @@ fn print_usage() {
     eprintln!(
         "ooco — latency-disaggregated online-offline co-located LLM serving
 
-USAGE: ooco <serve|simulate|sweep|bench|roofline|trace> [--flags]
+USAGE: ooco <serve|simulate|sweep|bench|roofline|trace|analyze> [--flags]
 
   serve     --duration 20 --online-rate 1 --offline-qps 1 --policy ooco
             [--artifacts artifacts] [--seed 42]
@@ -81,6 +84,12 @@ USAGE: ooco <serve|simulate|sweep|bench|roofline|trace> [--flags]
             [--profile]  (self-profiler breakdown in the JSON `profile` key)
             [--trace-out trace.perfetto.json]  (Chrome/Perfetto timeline)
             [--progress]  (events/s + ETA heartbeat on stderr)
+            [--watch true|false]  (streaming incident engine, §3.12;
+             on by default with any telemetry output — `incidents` key,
+             Perfetto annotation track, OpenMetrics families; `false`
+             restores byte-identical watchdog-less output)
+            [--slo-gate 0.97]  (exit code 3 when final online SLO
+             attainment falls below the threshold)
   sweep     --policy ooco --online-rate 0.5 --qps 1,2,4,8 --duration 600
             [--pool-policy static] [--relaxed 1 --strict 1]
             [--prefix-profile shared-system|few-shot|agentic]
@@ -95,7 +104,12 @@ USAGE: ooco <serve|simulate|sweep|bench|roofline|trace> [--flags]
             [--prefix-profile 'shared-system(len=1024)'|'few-shot(groups=8,len=1024)'|'agentic(convs=16,turns=6)']
             (shared-prefix families apply to the offline portion)
             [--prompt-profile dataset|long-prompt|'long-prompt(mean=6000,sigma=1.2,max=16384)']
-            (prompt-length override applies to both portions)"
+            (prompt-length override applies to both portions)
+  analyze   --report result.json [--md-out postmortem.md]
+            [--json-out incidents.json]
+            (offline incident ledger + Markdown postmortem from any
+             recorded `--json-out` report; reuses the streaming ledger
+             verbatim when present, re-derives from gauges otherwise)"
     );
 }
 
@@ -203,6 +217,11 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         let mut opts = TelemetryOpts::new(cfg.serving.slo);
         opts.perfetto = trace_out.is_some();
         opts.progress = progress;
+        // Incident engine (§3.12): on by default alongside telemetry;
+        // `--watch false` restores the watchdog-less byte stream.
+        if args.bool("watch", true) {
+            opts.watch = Some(ooco::watch::WatchParams::new(cfg.serving.slo));
+        }
         Some(opts)
     } else {
         None
@@ -247,6 +266,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             write_result(&out, json_out, metrics_out)?;
         }
         write_trace(&res.telemetry)?;
+        apply_slo_gate(args, &res.report)?;
         return Ok(());
     }
 
@@ -282,6 +302,30 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         write_result(&out, json_out, metrics_out)?;
     }
     write_trace(&res.telemetry)?;
+    apply_slo_gate(args, &res.report)?;
+    Ok(())
+}
+
+/// `--slo-gate <attainment>`: exit with code 3 when the final online SLO
+/// attainment falls below the threshold. Runs after every artifact has
+/// been written so a failing gate still leaves the evidence on disk for
+/// `ooco analyze`.
+fn apply_slo_gate(
+    args: &Args,
+    report: &ooco::metrics::Report,
+) -> anyhow::Result<()> {
+    let Some(raw) = args.opt_str("slo-gate") else {
+        return Ok(());
+    };
+    let gate: f64 = raw.parse().map_err(|_| {
+        anyhow::anyhow!("--slo-gate expects an attainment fraction, got `{raw}`")
+    })?;
+    let att = report.slo_attainment();
+    if att < gate {
+        eprintln!("slo-gate: online SLO attainment {att:.4} < gate {gate:.4}");
+        std::process::exit(3);
+    }
+    println!("slo-gate: online SLO attainment {att:.4} >= {gate:.4}");
     Ok(())
 }
 
@@ -424,6 +468,39 @@ fn cmd_roofline(args: &Args) -> anyhow::Result<()> {
         pm.bs_sat(),
         pm.max_kv_tokens()
     );
+    Ok(())
+}
+
+/// Offline incident analysis (§3.12): fold a recorded `--json-out`
+/// report into an incident ledger — verbatim when the run streamed one,
+/// re-derived from the gauge timeline otherwise — and render the
+/// Markdown postmortem (stdout unless `--md-out`).
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    use ooco::watch::analyze::{ledger_from_report, postmortem_md};
+
+    let path = args.opt_str("report").ok_or_else(|| {
+        anyhow::anyhow!(
+            "--report <result.json> is required (a simulate `--json-out` \
+             artifact)"
+        )
+    })?;
+    let report = Json::parse_file(std::path::Path::new(path))?;
+    let ledger = ledger_from_report(&report);
+    if let Some(out) = args.opt_str("json-out") {
+        std::fs::write(out, ledger.to_pretty())?;
+        println!("wrote incident ledger to {out}");
+    }
+    let md = postmortem_md(&report, &ledger);
+    match args.opt_str("md-out") {
+        Some(out) => {
+            std::fs::write(out, &md)?;
+            println!("wrote postmortem to {out}");
+            if let Json::Num(total) = ledger.get("total") {
+                println!("incidents: {total:.0}");
+            }
+        }
+        None => print!("{md}"),
+    }
     Ok(())
 }
 

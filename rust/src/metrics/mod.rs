@@ -532,6 +532,12 @@ impl Report {
         self.online_violation_rate <= slo.violation_threshold
     }
 
+    /// Fraction of online requests that met both SLOs — the quantity
+    /// `--slo-gate` thresholds and the burn-rate watchdog tracks.
+    pub fn slo_attainment(&self) -> f64 {
+        1.0 - self.online_violation_rate
+    }
+
     /// One-line summary for bench output.
     pub fn summary_line(&self) -> String {
         format!(
@@ -564,10 +570,7 @@ impl Report {
                 "online_violation_rate",
                 Json::Num(self.online_violation_rate),
             ),
-            (
-                "slo_attainment",
-                Json::Num(1.0 - self.online_violation_rate),
-            ),
+            ("slo_attainment", Json::Num(self.slo_attainment())),
             ("ttft", self.ttft.to_json()),
             ("tpot", self.tpot.to_json()),
             ("offline_total", Json::Num(self.offline_total as f64)),

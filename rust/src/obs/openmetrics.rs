@@ -30,6 +30,7 @@ pub fn render(root: &Json) -> String {
         for (key, val) in obj {
             match key.as_str() {
                 "timeline" => render_timeline(&mut fams, val),
+                "incidents" => render_incidents(&mut fams, val),
                 _ => walk(&mut fams, &mut info, &[sanitize(key)], val),
             }
         }
@@ -123,6 +124,77 @@ fn render_timeline(fams: &mut BTreeMap<String, Family>, timeline: &Json) {
                 let path =
                     ["timeline".to_string(), sanitize(k)];
                 emit(fams, &path, Some(labels.clone()), n, t);
+            }
+        }
+    }
+}
+
+/// The incident engine's summary (DESIGN.md §3.12): open/total incident
+/// counts and the final multi-window burn-rate readings as labelled
+/// families, instead of the generic walk (whose flattening would mangle
+/// the per-incident array).
+fn render_incidents(fams: &mut BTreeMap<String, Family>, inc: &Json) {
+    {
+        let fam =
+            fams.entry("ooco_incidents_active".to_string()).or_default();
+        fam.help = "Incidents still open when the run ended.".to_string();
+        fam.samples.push((
+            String::new(),
+            inc.get("open_at_end").as_f64().unwrap_or(0.0),
+            None,
+        ));
+    }
+    if let Some(by_kind) =
+        inc.get("by_kind").as_obj().filter(|m| !m.is_empty())
+    {
+        let fam =
+            fams.entry("ooco_incidents_total".to_string()).or_default();
+        fam.help = "Incidents opened over the run, by kind.".to_string();
+        for (kind, n) in by_kind {
+            if let Some(n) = n.as_f64() {
+                fam.samples.push((
+                    format!("{{kind=\"{}\"}}", escape(kind)),
+                    n,
+                    None,
+                ));
+            }
+        }
+    }
+    if let Some(burn) = inc.get("burn").as_obj() {
+        let fam = fams.entry("ooco_burn_rate".to_string()).or_default();
+        fam.help = "Final error-budget burn rates for the online class, \
+                    per SLO metric and alert window."
+            .to_string();
+        for (metric, windows) in burn {
+            for window in ["fast", "slow"] {
+                if let Some(v) = windows.get(window).as_f64() {
+                    fam.samples.push((
+                        format!(
+                            "{{class=\"online-{}\",window=\"{window}\"}}",
+                            escape(metric)
+                        ),
+                        v,
+                        None,
+                    ));
+                }
+            }
+        }
+    }
+    if let Some(wins) =
+        inc.get("bottleneck_windows").as_obj().filter(|m| !m.is_empty())
+    {
+        let fam =
+            fams.entry("ooco_bottleneck_windows".to_string()).or_default();
+        fam.help = "Roofline-classified instance-windows, by dominant \
+                    bottleneck label."
+            .to_string();
+        for (label, n) in wins {
+            if let Some(n) = n.as_f64() {
+                fam.samples.push((
+                    format!("{{label=\"{}\"}}", escape(label)),
+                    n,
+                    None,
+                ));
             }
         }
     }
@@ -244,6 +316,63 @@ mod tests {
         let text = render(&root);
         assert!(
             text.contains("ooco_transport_link_busy_s{link=\"pool\"} 2.5"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn incidents_render_as_labelled_families() {
+        let root = Json::obj(vec![(
+            "incidents",
+            Json::obj(vec![
+                ("open_at_end", Json::Num(1.0)),
+                (
+                    "by_kind",
+                    Json::obj(vec![
+                        ("fault", Json::Num(2.0)),
+                        ("slo_burn", Json::Num(1.0)),
+                    ]),
+                ),
+                (
+                    "burn",
+                    Json::obj(vec![(
+                        "ttft",
+                        Json::obj(vec![
+                            ("fast", Json::Num(6.5)),
+                            ("slow", Json::Num(3.25)),
+                        ]),
+                    )]),
+                ),
+                (
+                    "bottleneck_windows",
+                    Json::obj(vec![("queue", Json::Num(7.0))]),
+                ),
+            ]),
+        )]);
+        let text = render(&root);
+        assert!(text.contains("\nooco_incidents_active 1\n"), "{text}");
+        assert!(
+            text.contains("ooco_incidents_total{kind=\"fault\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("ooco_incidents_total{kind=\"slo_burn\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "ooco_burn_rate{class=\"online-ttft\",window=\"fast\"} 6.5"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "ooco_burn_rate{class=\"online-ttft\",window=\"slow\"} 3.25"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains("ooco_bottleneck_windows{label=\"queue\"} 7"),
             "{text}"
         );
     }

@@ -159,6 +159,11 @@ pub fn simulate_observed(
     if let Some(opts) = telemetry {
         let mut rec = TraceRecorder::flight(opts);
         rec.set_horizon(horizon);
+        if let Some(wp) = opts.watch {
+            // Armed before registration so the watchdog sees the same
+            // workload statics and topology the recorder does.
+            rec.arm_watch(crate::watch::Watchdog::new(wp, &cfg.serving));
+        }
         rec.register_requests(&trace.requests);
         rec.register_replica(
             0,
@@ -210,6 +215,9 @@ pub fn result_json(cfg: &SimConfig, res: &SimResult) -> Json {
     if let Some(tel) = &res.telemetry {
         pairs.push(("timeline", tel.timeline.clone()));
         pairs.push(("attribution", tel.attribution.clone()));
+        if let Some(inc) = &tel.incidents {
+            pairs.push(("incidents", inc.clone()));
+        }
     }
     if let Some(profile) = &res.profile {
         pairs.push(("profile", profile.to_json()));

@@ -51,6 +51,9 @@ use crate::util::json::Json;
 const ATTAINMENT_WINDOW_S: f64 = 60.0;
 /// Perfetto thread id of the per-replica pool-manager notice track.
 const TID_POOL_MANAGER: usize = 50;
+/// Perfetto thread id of the incident-engine annotation track
+/// (DESIGN.md §3.12), one per replica process.
+const TID_WATCHDOG: usize = 60;
 /// Perfetto thread ids of instance tracks start here (one per physical
 /// GPU, stable across role flips).
 const TID_INSTANCE_BASE: usize = 100;
@@ -76,6 +79,12 @@ pub struct TelemetryOpts {
     /// Emit periodic progress lines on stderr (wall-clock rates; never
     /// part of the deterministic outputs).
     pub progress: bool,
+    /// Arm the streaming incident engine (DESIGN.md §3.12) with these
+    /// parameters. `None` (the default) leaves every output byte-identical
+    /// to a watchdog-less build — the watchdog is a pure observer. The
+    /// engine itself is attached via [`TraceRecorder::arm_watch`] because
+    /// it needs the serving config (perf model) at construction.
+    pub watch: Option<crate::watch::WatchParams>,
 }
 
 impl TelemetryOpts {
@@ -85,6 +94,7 @@ impl TelemetryOpts {
             sample_interval_s: 5.0,
             slo,
             progress: false,
+            watch: None,
         }
     }
 }
@@ -101,6 +111,9 @@ pub struct TelemetryOut {
     /// Chrome trace-event JSON (present when
     /// [`TelemetryOpts::perfetto`] was set).
     pub perfetto: Option<String>,
+    /// Incident-engine ledger — the `incidents` key of `--json-out`
+    /// (present only when the watchdog was armed, DESIGN.md §3.12).
+    pub incidents: Option<Json>,
     /// Span well-formedness counters for the property tests.
     pub audit: SpanAudit,
 }
@@ -406,6 +419,16 @@ impl TraceRecorder {
         let _p = obs::scope(Subsystem::Telemetry);
         self.inner.take().map(|mut f| f.finish(end_time))
     }
+
+    /// Attach the streaming incident engine (DESIGN.md §3.12). No-op on a
+    /// disabled recorder. The watchdog taps the same action stream and
+    /// gauge ticks the recorder observes; its ledger comes back in
+    /// [`TelemetryOut::incidents`].
+    pub fn arm_watch(&mut self, watch: crate::watch::Watchdog) {
+        if let Some(f) = &mut self.inner {
+            f.watch = Some(Box::new(watch));
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -448,6 +471,10 @@ struct FlightRecorder {
     /// Simulated end time (trace duration + drain), used by the progress
     /// line's percent-complete and ETA estimates. 0 = unknown.
     horizon: f64,
+    /// Streaming incident engine (DESIGN.md §3.12), armed via
+    /// [`TraceRecorder::arm_watch`]. `None` = pure-observer recorder,
+    /// byte-identical outputs to pre-watchdog builds.
+    watch: Option<Box<crate::watch::Watchdog>>,
 }
 
 impl FlightRecorder {
@@ -483,6 +510,7 @@ impl FlightRecorder {
             last_progress_t: 0.0,
             last_progress_events: 0,
             horizon: 0.0,
+            watch: None,
         }
     }
 
@@ -502,6 +530,9 @@ impl FlightRecorder {
             t.prompt_len = r.prompt_len;
             t.output_len = r.output_len;
         }
+        if let Some(w) = &mut self.watch {
+            w.register_requests(requests);
+        }
     }
 
     fn register_replica(&mut self, replica: usize, relaxed: usize, strict: usize) {
@@ -512,6 +543,9 @@ impl FlightRecorder {
         let rt = &mut self.replicas[replica];
         rt.relaxed = (0..relaxed).collect();
         rt.strict = (relaxed..relaxed + strict).collect();
+        if let Some(w) = &mut self.watch {
+            w.register_replica(replica, relaxed, strict);
+        }
     }
 
     // ---------------------------------------------------------- plumbing
@@ -665,6 +699,9 @@ impl FlightRecorder {
 
     fn observe(&mut self, now: f64, replica: usize, actions: &[Action]) {
         self.actions_seen += actions.len() as u64;
+        if let Some(w) = &mut self.watch {
+            w.on_actions(now, replica, actions);
+        }
         for a in actions {
             match a {
                 Action::StartStep {
@@ -1297,7 +1334,7 @@ impl FlightRecorder {
         };
         if online {
             self.online_finished += 1;
-            let ok = match ft {
+            let (ttft_ok, tpot_ok) = match ft {
                 Some(f) => {
                     let ttft_ok = f - arrival <= self.opts.slo.ttft + EPS;
                     let tpot_ok = if output_len > 1 {
@@ -1306,14 +1343,18 @@ impl FlightRecorder {
                     } else {
                         true
                     };
-                    ttft_ok && tpot_ok
+                    (ttft_ok, tpot_ok)
                 }
-                None => false,
+                None => (false, false),
             };
+            let ok = ttft_ok && tpot_ok;
             if !ok {
                 self.online_violations_est += 1;
             }
             self.window.push_back((now, ok));
+            if let Some(w) = &mut self.watch {
+                w.on_online_complete(now, ttft_ok, tpot_ok);
+            }
         }
         while let Some(&(ts, _)) = self.window.front() {
             if ts < now - ATTAINMENT_WINDOW_S {
@@ -1404,6 +1445,9 @@ impl FlightRecorder {
             util.push(u);
         }
         let att = self.attainment();
+        if let Some(w) = &mut self.watch {
+            w.on_sample(now, replica, cluster, links);
+        }
         self.samples.push(Json::obj(vec![
             ("t", Json::Num(now)),
             ("replica", Json::Num(replica as f64)),
@@ -1481,6 +1525,9 @@ impl FlightRecorder {
     fn sample_tick(&mut self, now: f64, events: u64) {
         self.last_sample_at = now;
         self.next_sample = now + self.opts.sample_interval_s;
+        if let Some(w) = &mut self.watch {
+            w.on_tick(now);
+        }
         if self.opts.progress {
             let wall = self.started_wall.elapsed().as_secs_f64();
             let dw = (wall - self.last_progress_wall).max(1e-9);
@@ -1652,6 +1699,15 @@ impl FlightRecorder {
             (false, _, Some(c)) if tpot_violated => Some(dominant_of(c)),
             _ => None,
         };
+        if let Some(cause) = dominant {
+            let at = r
+                .finished_at
+                .or(self.reqs[rid].finished_est)
+                .unwrap_or(r.arrival);
+            if let Some(w) = &mut self.watch {
+                w.on_attributed(at, cause);
+            }
+        }
         if ttft_violated {
             if let Some(c) = &ttft_comp {
                 *self
@@ -1730,6 +1786,48 @@ impl FlightRecorder {
             }
         }
         self.pending_flow.clear();
+
+        // Close the incident engine's books and draw its ledger as a
+        // dedicated annotation track (one `incidents` thread per replica
+        // process, TID_WATCHDOG).
+        let watch_out = self.watch.take().map(|mut w| w.finish(end_time));
+        if self.opts.perfetto {
+            if let Some(wo) = &watch_out {
+                for inc in &wo.incidents {
+                    let pid = inc.replica.unwrap_or(0);
+                    self.track_names
+                        .entry((pid, TID_WATCHDOG))
+                        .or_insert_with(|| "incidents".to_string());
+                    self.events.push(TraceEvent {
+                        ph: "X",
+                        name: format!(
+                            "{}:{}",
+                            inc.kind.as_str(),
+                            inc.cause
+                        ),
+                        cat: "incident",
+                        pid,
+                        tid: TID_WATCHDOG,
+                        ts_us: inc.opened_at * 1e6,
+                        dur_us: Some(inc.duration_s(end_time) * 1e6),
+                        flow: None,
+                        args: vec![
+                            (
+                                "severity",
+                                Json::Str(
+                                    inc.severity.as_str().to_string(),
+                                ),
+                            ),
+                            (
+                                "bottleneck",
+                                Json::Str(inc.bottleneck.clone()),
+                            ),
+                            ("peak", Json::Num(inc.peak)),
+                        ],
+                    });
+                }
+            }
+        }
 
         let ranked = |m: &BTreeMap<&'static str, u64>| {
             let mut v: Vec<(&str, u64)> =
@@ -1825,6 +1923,7 @@ impl FlightRecorder {
             timeline,
             attribution,
             perfetto,
+            incidents: watch_out.map(|wo| wo.summary),
             audit: self.audit,
         }
     }

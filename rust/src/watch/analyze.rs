@@ -1,0 +1,655 @@
+//! Offline postmortems — the `ooco analyze` subcommand (DESIGN.md §3.12).
+//!
+//! Post-processes any recorded `--json-out` report into the incident
+//! ledger plus a human-readable Markdown postmortem (timeline, top
+//! incidents, per-incident root cause, remediation hint keyed to the
+//! detected bottleneck).
+//!
+//! When the report was recorded with the watchdog armed it already
+//! carries the streaming engine's ledger under `incidents` —
+//! [`ledger_from_report`] passes that through verbatim, so online and
+//! offline analysis agree byte-for-byte. Reports recorded without the
+//! watchdog are re-derived from the gauge `timeline` at sample
+//! granularity: crash windows come from the `down` gauge and SLO burns
+//! from the rolling `slo_attainment` gauge, with the same thresholds and
+//! hysteresis, but bottleneck labels are limited to what gauges can see
+//! (`fault` / `transfer` / `queue` / `idle` — no per-step roofline
+//! split) and the ledger says so via `"derived": true`.
+
+use crate::util::json::Json;
+
+use super::WatchParams;
+
+/// Extract (or re-derive) the incident ledger from a recorded report.
+pub fn ledger_from_report(report: &Json) -> Json {
+    let inc = report.get("incidents");
+    if inc.as_obj().is_some() {
+        return inc.clone();
+    }
+    derive_ledger(report)
+}
+
+/// One gauge tick folded across replicas.
+struct Tick {
+    t: f64,
+    down: f64,
+    queue: f64,
+    link_util: f64,
+    attainment: Option<f64>,
+}
+
+/// Per-replica down-gauge row.
+struct DownRow {
+    t: f64,
+    replica: usize,
+    down: f64,
+}
+
+/// Re-derive a (coarser) ledger from the gauge timeline alone.
+fn derive_ledger(report: &Json) -> Json {
+    let p = WatchParams::default();
+    let rows = report.get("timeline").as_arr().unwrap_or(&[]);
+
+    // Fold per-replica samples into per-tick fleet aggregates (samples at
+    // the same `t` belong to one sampler tick).
+    let mut ticks: Vec<Tick> = Vec::new();
+    let mut down_rows: Vec<DownRow> = Vec::new();
+    for row in rows {
+        let t = row.get("t").as_f64().unwrap_or(0.0);
+        let replica = row.get("replica").as_f64().unwrap_or(0.0) as usize;
+        let down = row.get("down").as_f64().unwrap_or(0.0);
+        let queue = row.get("online_queue").as_f64().unwrap_or(0.0)
+            + row.get("offline_backlog").as_f64().unwrap_or(0.0);
+        let link_util = row
+            .get("link_utilization")
+            .as_arr()
+            .map(|ls| {
+                ls.iter()
+                    .filter_map(|l| l.as_f64())
+                    .fold(0.0f64, f64::max)
+            })
+            .unwrap_or(0.0);
+        let att = row.get("slo_attainment").as_f64();
+        down_rows.push(DownRow { t, replica, down });
+        match ticks.last_mut() {
+            Some(last) if (last.t - t).abs() < 1e-9 => {
+                last.down += down;
+                last.queue += queue;
+                last.link_util = last.link_util.max(link_util);
+                last.attainment = att; // fleet-wide gauge, keep latest
+            }
+            _ => ticks.push(Tick {
+                t,
+                down,
+                queue,
+                link_util,
+                attainment: att,
+            }),
+        }
+    }
+
+    let end_time = ticks.last().map(|s| s.t).unwrap_or(0.0);
+    let mut incidents: Vec<Json> = Vec::new();
+    let mut next_id = 1u64;
+    let mut push = |id: &mut u64,
+                    kind: &str,
+                    severity: &str,
+                    replica: Option<usize>,
+                    opened: f64,
+                    closed: Option<f64>,
+                    peak: f64,
+                    bottleneck: &str,
+                    cause: &str,
+                    detail: String|
+     -> Json {
+        let j = Json::obj(vec![
+            ("id", Json::Num(*id as f64)),
+            ("kind", Json::Str(kind.to_string())),
+            ("severity", Json::Str(severity.to_string())),
+            (
+                "replica",
+                replica.map(|r| Json::Num(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "class",
+                if kind == "slo_burn" {
+                    Json::Str("online".to_string())
+                } else {
+                    Json::Null
+                },
+            ),
+            ("metric", Json::Null),
+            ("opened_at", Json::Num(opened)),
+            ("closed_at", closed.map(Json::Num).unwrap_or(Json::Null)),
+            (
+                "duration_s",
+                Json::Num((closed.unwrap_or(end_time) - opened).max(0.0)),
+            ),
+            ("peak", Json::Num(peak)),
+            ("bottleneck", Json::Str(bottleneck.to_string())),
+            ("cause", Json::Str(cause.to_string())),
+            ("detail", Json::Str(detail)),
+        ]);
+        *id += 1;
+        j
+    };
+
+    // Fault incidents: contiguous down>0 windows per replica.
+    down_rows.sort_by(|a, b| {
+        a.replica.cmp(&b.replica).then(
+            a.t.partial_cmp(&b.t).unwrap_or(std::cmp::Ordering::Equal),
+        )
+    });
+    let mut open: Option<(usize, f64, f64)> = None; // (replica, since, peak)
+    let mut i = 0;
+    while i <= down_rows.len() {
+        let cur = down_rows.get(i);
+        match (&mut open, cur) {
+            (None, Some(r)) if r.down > 0.0 => {
+                open = Some((r.replica, r.t, r.down));
+            }
+            (Some((rep, since, peak)), cur) => {
+                let closes = match cur {
+                    Some(r) if r.replica == *rep => {
+                        if r.down > 0.0 {
+                            *peak = peak.max(r.down);
+                            false
+                        } else {
+                            true
+                        }
+                    }
+                    _ => true, // replica changed or rows exhausted
+                };
+                if closes {
+                    let closed = cur
+                        .filter(|r| r.replica == *rep)
+                        .map(|r| r.t);
+                    let (rep, since, peak) = (*rep, *since, *peak);
+                    incidents.push(push(
+                        &mut next_id,
+                        "fault",
+                        "warn",
+                        Some(rep),
+                        since,
+                        closed,
+                        peak,
+                        "fault",
+                        "fault",
+                        format!(
+                            "derived from `down` gauge (replica {rep})"
+                        ),
+                    ));
+                    open = None;
+                    // Re-examine the current row: it may itself start a
+                    // window on the next replica.
+                    continue;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+
+    // SLO-burn incidents from the rolling attainment gauge: the gauge is
+    // already a trailing fast-window violation fraction, so burn = frac /
+    // budget; the slow reading is its trailing mean. Hysteresis matches
+    // the streaming detector.
+    let budget = p.budget();
+    let mut burn_open: Option<(f64, f64)> = None; // (since, peak)
+    let mut cool = 0u32;
+    for (ti, s) in ticks.iter().enumerate() {
+        let Some(att) = s.attainment else { continue };
+        let fast = (1.0 - att) / budget;
+        let slow_cut = s.t - p.slow_window_s;
+        let (mut sum, mut n) = (0.0, 0usize);
+        for prev in ticks[..=ti].iter().rev() {
+            if prev.t < slow_cut {
+                break;
+            }
+            if let Some(a) = prev.attainment {
+                sum += (1.0 - a) / budget;
+                n += 1;
+            }
+        }
+        let slow = if n > 0 { sum / n as f64 } else { 0.0 };
+        match &mut burn_open {
+            None => {
+                if fast >= p.fast_burn && slow >= p.slow_burn {
+                    burn_open = Some((s.t, fast));
+                    cool = 0;
+                }
+            }
+            Some((since, peak)) => {
+                *peak = peak.max(fast);
+                if fast <= 0.5 * p.fast_burn {
+                    cool += 1;
+                    if cool >= p.clear_ticks {
+                        let (since, peak) = (*since, *peak);
+                        let label = burn_label(&ticks, since, s.t, &p);
+                        let sev = if peak >= 2.0 * p.fast_burn {
+                            "page"
+                        } else {
+                            "warn"
+                        };
+                        incidents.push(push(
+                            &mut next_id,
+                            "slo_burn",
+                            sev,
+                            None,
+                            since,
+                            Some(s.t),
+                            peak,
+                            label,
+                            super::classify::cause_of_label(label),
+                            "derived from `slo_attainment` gauge"
+                                .to_string(),
+                        ));
+                        burn_open = None;
+                    }
+                } else {
+                    cool = 0;
+                }
+            }
+        }
+    }
+    if let Some((since, peak)) = burn_open {
+        let label = burn_label(&ticks, since, end_time, &p);
+        let sev = if peak >= 2.0 * p.fast_burn { "page" } else { "warn" };
+        incidents.push(push(
+            &mut next_id,
+            "slo_burn",
+            sev,
+            None,
+            since,
+            None,
+            peak,
+            label,
+            super::classify::cause_of_label(label),
+            "derived from `slo_attainment` gauge".to_string(),
+        ));
+    }
+
+    incidents.sort_by(|a, b| {
+        a.get("opened_at")
+            .as_f64()
+            .partial_cmp(&b.get("opened_at").as_f64())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    for (i, inc) in incidents.iter_mut().enumerate() {
+        inc.set("id", Json::Num(i as f64 + 1.0));
+    }
+
+    let mut by_kind: std::collections::BTreeMap<String, u64> =
+        Default::default();
+    let mut open_at_end = 0u64;
+    for inc in &incidents {
+        if let Some(k) = inc.get("kind").as_str() {
+            *by_kind.entry(k.to_string()).or_insert(0) += 1;
+        }
+        if inc.get("closed_at").as_f64().is_none() {
+            open_at_end += 1;
+        }
+    }
+
+    Json::obj(vec![
+        ("derived", Json::Bool(true)),
+        ("total", Json::Num(incidents.len() as f64)),
+        ("open_at_end", Json::Num(open_at_end as f64)),
+        (
+            "by_kind",
+            Json::Obj(
+                by_kind
+                    .into_iter()
+                    .map(|(k, v)| (k, Json::Num(v as f64)))
+                    .collect(),
+            ),
+        ),
+        ("incidents", Json::Arr(incidents)),
+    ])
+}
+
+/// Coarse bottleneck label for a derived burn window: what the fleet
+/// gauges can see (`fault` / `transfer` / `queue` / `idle`).
+fn burn_label(ticks: &[Tick], lo: f64, hi: f64, p: &WatchParams) -> &'static str {
+    let (mut fault, mut transfer, mut queue, mut idle) = (0u64, 0u64, 0u64, 0u64);
+    for s in ticks {
+        if s.t < lo || s.t > hi {
+            continue;
+        }
+        if s.down > 0.0 {
+            fault += 1;
+        } else if s.queue > 0.0 && s.link_util >= p.link_util_min {
+            transfer += 1;
+        } else if s.queue > 0.0 {
+            queue += 1;
+        } else {
+            idle += 1;
+        }
+    }
+    [
+        ("fault", fault),
+        ("transfer", transfer),
+        ("queue", queue),
+        ("idle", idle),
+    ]
+    .iter()
+    .max_by_key(|(_, n)| *n)
+    .filter(|(_, n)| *n > 0)
+    .map(|(l, _)| *l)
+    .unwrap_or("unknown")
+}
+
+// -------------------------------------------------------------- markdown
+
+/// Remediation hint keyed to the incident's detected bottleneck — the
+/// paper's own levers, phrased as operator actions.
+pub fn remediation(bottleneck: &str, cause: &str) -> &'static str {
+    match (bottleneck, cause) {
+        (_, "pd_imbalance") | ("pd", _) => {
+            "re-plan the strict/relaxed split (or lower the elastic \
+             planner's reaction window) so provisioned capacity tracks \
+             the intrinsic prefill/decode demand ratio"
+        }
+        ("fault", _) | (_, "fault") => {
+            "provision N+1 per pool and widen the fault notice window so \
+             KV evacuates (restreams) instead of recomputing"
+        }
+        ("transfer", _) | (_, "transfer_stall") => {
+            "add link bandwidth or raise the transfer chunk size; check \
+             that migrations are not fighting evacuations for the same \
+             links"
+        }
+        ("memory_bw", _) => {
+            "decode batches are below the compute-saturation point: grow \
+             per-instance batch (more KV capacity, prefix cache) or \
+             mix in offline decodes to fill the memory-bandwidth window"
+        }
+        ("compute", _) | (_, "chunk_interference") => {
+            "compute-saturated: lower the chunk-prefill budget to protect \
+             TPOT, or add relaxed instances to absorb the prefill wave"
+        }
+        ("queue", _) | (_, "queueing") => {
+            "arrival rate exceeds serving capacity: add replicas, enable \
+             work stealing, or shed offline admission under overload"
+        }
+        _ => {
+            "inspect the Perfetto trace around the incident window \
+             (`--trace-out`) — the gauges did not name a single culprit"
+        }
+    }
+}
+
+fn fmt_num(v: Option<f64>) -> String {
+    match v {
+        Some(x) if x == x.trunc() && x.abs() < 1e12 => {
+            format!("{}", x as i64)
+        }
+        Some(x) => format!("{x:.3}"),
+        None => "—".to_string(),
+    }
+}
+
+fn fmt_opt_str(j: &Json) -> String {
+    j.as_str()
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| "—".to_string())
+}
+
+/// Render the Markdown postmortem for a report + its incident ledger.
+pub fn postmortem_md(report: &Json, ledger: &Json) -> String {
+    let mut md = String::new();
+    let meta = report.get("meta");
+    let seed = report.get("seed").as_f64().or(meta.get("seed").as_f64());
+    let cfg_hash = meta
+        .get("config_hash")
+        .as_str()
+        .unwrap_or("unknown")
+        .to_string();
+    md.push_str(&format!(
+        "# OOCO postmortem — seed {}, config `{}`\n\n",
+        fmt_num(seed),
+        cfg_hash
+    ));
+    md.push_str(
+        "Generated by `ooco analyze` from a recorded `--json-out` \
+         report.\n\n",
+    );
+    if ledger.get("derived").as_bool() == Some(true) {
+        md.push_str(
+            "> **Note:** this report carried no streaming `incidents` \
+             ledger; incidents below were re-derived from the gauge \
+             timeline at sample granularity (bottleneck labels limited \
+             to what gauges can see).\n\n",
+        );
+    }
+
+    md.push_str("## Run summary\n\n");
+    md.push_str("| metric | value |\n|---|---|\n");
+    let rep = report.get("report");
+    for (label, path) in [
+        ("duration (s)", "duration_s"),
+        ("online finished", "online_finished"),
+        ("online SLO attainment", "slo_attainment"),
+        ("online violations", "online_violations"),
+        ("offline finished", "offline_finished"),
+        ("offline tok/s", "offline_token_throughput"),
+    ] {
+        if let Some(v) = rep.get(path).as_f64() {
+            md.push_str(&format!("| {label} | {} |\n", fmt_num(Some(v))));
+        }
+    }
+    for (label, path) in
+        [("TTFT p99 (s)", "ttft"), ("TPOT p99 (s)", "tpot")]
+    {
+        if let Some(v) = rep.get(path).get("p99").as_f64() {
+            md.push_str(&format!("| {label} | {v:.3} |\n"));
+        }
+    }
+    if let Some(f) = report.get("fleet").as_obj() {
+        for key in ["replicas", "crashes", "availability"] {
+            if let Some(v) =
+                f.get(key).and_then(|j| j.as_f64())
+            {
+                md.push_str(&format!(
+                    "| fleet {key} | {} |\n",
+                    fmt_num(Some(v))
+                ));
+            }
+        }
+    }
+    md.push('\n');
+
+    let incidents = ledger.get("incidents").as_arr().unwrap_or(&[]);
+    md.push_str(&format!(
+        "## Incident timeline ({} total, {} open at end)\n\n",
+        fmt_num(ledger.get("total").as_f64()),
+        fmt_num(ledger.get("open_at_end").as_f64()),
+    ));
+    if incidents.is_empty() {
+        md.push_str("No incidents. Quiet run.\n");
+        return md;
+    }
+    md.push_str(
+        "| # | opened | closed | kind | sev | replica | bottleneck | \
+         cause | peak |\n|---|---|---|---|---|---|---|---|---|\n",
+    );
+    let mut ordered: Vec<&Json> = incidents.iter().collect();
+    ordered.sort_by(|a, b| {
+        a.get("opened_at")
+            .as_f64()
+            .partial_cmp(&b.get("opened_at").as_f64())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    for inc in &ordered {
+        md.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {:.1} |\n",
+            fmt_num(inc.get("id").as_f64()),
+            fmt_num(inc.get("opened_at").as_f64()),
+            fmt_num(inc.get("closed_at").as_f64()),
+            fmt_opt_str(inc.get("kind")),
+            fmt_opt_str(inc.get("severity")),
+            fmt_num(inc.get("replica").as_f64()),
+            fmt_opt_str(inc.get("bottleneck")),
+            fmt_opt_str(inc.get("cause")),
+            inc.get("peak").as_f64().unwrap_or(0.0),
+        ));
+    }
+    md.push('\n');
+
+    // Top incidents: longest first, cap at 5 write-ups.
+    let mut top: Vec<&Json> = incidents.iter().collect();
+    top.sort_by(|a, b| {
+        b.get("duration_s")
+            .as_f64()
+            .partial_cmp(&a.get("duration_s").as_f64())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| {
+                a.get("id")
+                    .as_f64()
+                    .partial_cmp(&b.get("id").as_f64())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+    });
+    md.push_str("## Top incidents\n\n");
+    for inc in top.iter().take(5) {
+        let bottleneck = fmt_opt_str(inc.get("bottleneck"));
+        let cause = fmt_opt_str(inc.get("cause"));
+        md.push_str(&format!(
+            "### #{} {} ({}) — {}s\n\n",
+            fmt_num(inc.get("id").as_f64()),
+            fmt_opt_str(inc.get("kind")),
+            fmt_opt_str(inc.get("severity")),
+            fmt_num(inc.get("duration_s").as_f64()),
+        ));
+        if let Some(detail) = inc.get("detail").as_str() {
+            md.push_str(&format!("{detail}\n\n"));
+        }
+        md.push_str(&format!(
+            "- **Root cause:** `{cause}` (window classified \
+             `{bottleneck}`)\n",
+        ));
+        if let Some(att) = report.get("attribution").as_obj() {
+            if let Some(ranked) = att
+                .get("ranked_ttft_causes")
+                .and_then(|j| j.as_arr())
+            {
+                if !ranked.is_empty() && cause != "fault" {
+                    let names: Vec<String> = ranked
+                        .iter()
+                        .take(2)
+                        .filter_map(|r| {
+                            r.get("cause")
+                                .as_str()
+                                .map(|s| s.to_string())
+                        })
+                        .collect();
+                    if !names.is_empty() {
+                        md.push_str(&format!(
+                            "- **Run-wide attribution concurs:** top \
+                             TTFT causes {}\n",
+                            names.join(", ")
+                        ));
+                    }
+                }
+            }
+        }
+        md.push_str(&format!(
+            "- **Remediation:** {}\n\n",
+            remediation(&bottleneck, &cause)
+        ));
+    }
+    md
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t: f64, replica: f64, down: f64, att: f64) -> Json {
+        Json::obj(vec![
+            ("t", Json::Num(t)),
+            ("replica", Json::Num(replica)),
+            ("down", Json::Num(down)),
+            ("online_queue", Json::Num(3.0)),
+            ("offline_backlog", Json::Num(0.0)),
+            ("link_utilization", Json::arr_f64(&[0.7])),
+            ("slo_attainment", Json::Num(att)),
+        ])
+    }
+
+    #[test]
+    fn passthrough_prefers_recorded_ledger() {
+        let ledger = Json::obj(vec![
+            ("total", Json::Num(2.0)),
+            ("incidents", Json::Arr(vec![])),
+        ]);
+        let report =
+            Json::obj(vec![("incidents", ledger.clone())]);
+        assert_eq!(
+            ledger_from_report(&report).to_pretty(),
+            ledger.to_pretty()
+        );
+    }
+
+    #[test]
+    fn derives_fault_and_burn_windows_from_gauges() {
+        // Replica 0 crashes from t=60..120; attainment collapses there.
+        let mut rows = Vec::new();
+        for k in 0..40 {
+            let t = 5.0 * (k + 1) as f64;
+            let down = if (60.0..120.0).contains(&t) { 1.0 } else { 0.0 };
+            let att = if (60.0..150.0).contains(&t) { 0.4 } else { 1.0 };
+            rows.push(sample(t, 0.0, down, att));
+            rows.push(sample(t, 1.0, 0.0, att));
+        }
+        let report =
+            Json::obj(vec![("timeline", Json::Arr(rows))]);
+        let ledger = ledger_from_report(&report);
+        assert_eq!(ledger.get("derived").as_bool(), Some(true));
+        let incidents = ledger.get("incidents").as_arr().unwrap();
+        let kinds: Vec<&str> = incidents
+            .iter()
+            .filter_map(|i| i.get("kind").as_str())
+            .collect();
+        assert!(kinds.contains(&"fault"), "kinds: {kinds:?}");
+        assert!(kinds.contains(&"slo_burn"), "kinds: {kinds:?}");
+        // The fault window must overlap the crash.
+        let fault = incidents
+            .iter()
+            .find(|i| i.get("kind").as_str() == Some("fault"))
+            .unwrap();
+        let lo = fault.get("opened_at").as_f64().unwrap();
+        let hi = fault.get("closed_at").as_f64().unwrap();
+        assert!(lo >= 55.0 && lo <= 65.0, "opened_at {lo}");
+        assert!(hi >= 115.0 && hi <= 125.0, "closed_at {hi}");
+        // Markdown renders with the derived-note and both sections.
+        let md = postmortem_md(&report, &ledger);
+        assert!(md.contains("re-derived from the gauge timeline"));
+        assert!(md.contains("## Incident timeline"));
+        assert!(md.contains("## Top incidents"));
+        assert!(md.contains("Remediation"));
+    }
+
+    #[test]
+    fn quiet_run_renders_a_quiet_postmortem() {
+        let report = Json::obj(vec![(
+            "timeline",
+            Json::Arr(vec![sample(5.0, 0.0, 0.0, 1.0)]),
+        )]);
+        let ledger = ledger_from_report(&report);
+        assert_eq!(ledger.get("total").as_f64(), Some(0.0));
+        let md = postmortem_md(&report, &ledger);
+        assert!(md.contains("No incidents"));
+    }
+
+    #[test]
+    fn remediation_covers_every_label() {
+        for label in
+            ["fault", "transfer", "memory_bw", "compute", "queue", "idle"]
+        {
+            assert!(!remediation(label, "unknown").is_empty());
+        }
+        assert!(remediation("queue", "pd_imbalance")
+            .contains("strict/relaxed"));
+    }
+}

@@ -1,0 +1,227 @@
+//! Multi-window burn-rate SLO alerting (DESIGN.md §3.12).
+//!
+//! The SRE playbook's multi-window, multi-burn-rate alert adapted to the
+//! virtual clock: each detector keeps a rolling deque of per-completion
+//! outcomes for one SLO metric (TTFT or TPOT), evaluates the violation
+//! fraction over a *fast* window (is it still happening?) and a *slow*
+//! window (is it significant?), and normalizes both by the error budget
+//! (`slo.violation_threshold`). An incident opens only when **both**
+//! windows exceed their burn thresholds; it closes only after the fast
+//! burn has stayed under *half* its open threshold for
+//! [`WatchParams::clear_ticks`] consecutive evaluations — readings inside
+//! the half-to-full band keep the incident open and reset the cool-down,
+//! which is the hysteresis that prevents flapping on a
+//! boundary-oscillating trace (pinned by `tests/watch_properties.rs`).
+
+use std::collections::VecDeque;
+
+use super::WatchParams;
+
+/// Burn rates over the two windows, in multiples of the error budget.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BurnRates {
+    pub fast: f64,
+    pub slow: f64,
+}
+
+/// State transition reported by one [`BurnDetector::tick`].
+#[derive(Debug, Clone, Copy)]
+pub enum BurnEvent {
+    Opened { at: f64, fast: f64, slow: f64 },
+    Closed { at: f64, peak: f64 },
+}
+
+/// One metric's (TTFT or TPOT) multi-window burn-rate state machine.
+#[derive(Debug)]
+pub struct BurnDetector {
+    #[allow(dead_code)] // diagnostic tag, useful in Debug output
+    metric: &'static str,
+    /// `(completion time, violated)` outcomes, evicted beyond the slow
+    /// window.
+    window: VecDeque<(f64, bool)>,
+    open: bool,
+    /// Consecutive clear evaluations while open (resets inside the
+    /// hysteresis band).
+    cool: u32,
+    /// Peak fast-window burn observed while open.
+    peak: f64,
+}
+
+impl BurnDetector {
+    pub fn new(metric: &'static str) -> Self {
+        BurnDetector {
+            metric,
+            window: VecDeque::new(),
+            open: false,
+            cool: 0,
+            peak: 0.0,
+        }
+    }
+
+    /// Fold one completion outcome in (called between ticks).
+    pub fn on_complete(&mut self, now: f64, violated: bool) {
+        self.window.push_back((now, violated));
+    }
+
+    /// Current burn rates at `now`. Both read 0 until the slow window
+    /// holds [`WatchParams::min_window_completions`] outcomes, so a lone
+    /// early violation cannot page.
+    pub fn rates(&self, now: f64, p: &WatchParams) -> BurnRates {
+        let slow_cut = now - p.slow_window_s;
+        let fast_cut = now - p.fast_window_s;
+        let (mut sn, mut sv, mut fn_, mut fv) = (0usize, 0usize, 0usize, 0usize);
+        for &(t, bad) in &self.window {
+            if t < slow_cut {
+                continue;
+            }
+            sn += 1;
+            sv += bad as usize;
+            if t >= fast_cut {
+                fn_ += 1;
+                fv += bad as usize;
+            }
+        }
+        if sn < p.min_window_completions {
+            return BurnRates::default();
+        }
+        let budget = p.budget();
+        let frac = |v: usize, n: usize| {
+            if n == 0 {
+                0.0
+            } else {
+                v as f64 / n as f64
+            }
+        };
+        BurnRates {
+            fast: frac(fv, fn_) / budget,
+            slow: frac(sv, sn) / budget,
+        }
+    }
+
+    /// Peak fast burn observed during the currently open incident.
+    pub fn peak(&self) -> f64 {
+        self.peak
+    }
+
+    /// Evaluate at a sampler tick; evicts stale outcomes and runs the
+    /// open/close state machine.
+    pub fn tick(&mut self, now: f64, p: &WatchParams) -> Option<BurnEvent> {
+        while let Some(&(t, _)) = self.window.front() {
+            if t < now - p.slow_window_s {
+                self.window.pop_front();
+            } else {
+                break;
+            }
+        }
+        let r = self.rates(now, p);
+        if !self.open {
+            if r.fast >= p.fast_burn && r.slow >= p.slow_burn {
+                self.open = true;
+                self.cool = 0;
+                self.peak = r.fast;
+                return Some(BurnEvent::Opened {
+                    at: now,
+                    fast: r.fast,
+                    slow: r.slow,
+                });
+            }
+            return None;
+        }
+        self.peak = self.peak.max(r.fast);
+        if r.fast <= 0.5 * p.fast_burn {
+            self.cool += 1;
+            if self.cool >= p.clear_ticks {
+                self.open = false;
+                let peak = self.peak;
+                self.cool = 0;
+                return Some(BurnEvent::Closed { at: now, peak });
+            }
+        } else {
+            // Inside (or above) the hysteresis band: stay open, restart
+            // the cool-down.
+            self.cool = 0;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SloSpec;
+
+    fn params() -> WatchParams {
+        WatchParams::new(SloSpec::default())
+    }
+
+    fn feed(det: &mut BurnDetector, t0: f64, n: usize, violated: bool) {
+        for i in 0..n {
+            det.on_complete(t0 + i as f64 * 0.1, violated);
+        }
+    }
+
+    #[test]
+    fn opens_only_when_both_windows_burn() {
+        let p = params();
+        let mut d = BurnDetector::new("ttft");
+        // Violations confined to the distant past of the slow window:
+        // slow burns, fast does not → no incident.
+        feed(&mut d, 0.0, 50, true);
+        feed(&mut d, 150.0, 50, false);
+        assert!(d.tick(200.0, &p).is_none());
+        // Fresh violations light both windows.
+        feed(&mut d, 200.0, 50, true);
+        assert!(matches!(
+            d.tick(205.0, &p),
+            Some(BurnEvent::Opened { .. })
+        ));
+    }
+
+    #[test]
+    fn thin_windows_never_page() {
+        let p = params();
+        let mut d = BurnDetector::new("ttft");
+        feed(&mut d, 0.0, p.min_window_completions - 1, true);
+        assert!(d.tick(1.0, &p).is_none());
+    }
+
+    #[test]
+    fn hysteresis_band_keeps_incident_open_and_resets_cooldown() {
+        let p = params();
+        let mut d = BurnDetector::new("tpot");
+        feed(&mut d, 0.0, 40, true);
+        assert!(matches!(d.tick(5.0, &p), Some(BurnEvent::Opened { .. })));
+        // Oscillate around the open threshold: mixed outcomes keep the
+        // fast burn above half the threshold → never closes.
+        let mut t = 10.0;
+        for _ in 0..10 {
+            feed(&mut d, t, 5, true);
+            feed(&mut d, t + 1.0, 5, false);
+            assert!(d.tick(t + 5.0, &p).is_none(), "flapped at t={t}");
+            t += 5.0;
+        }
+        // Fully clean traffic for clear_ticks consecutive ticks closes it.
+        let mut closed = None;
+        for k in 0..(p.clear_ticks + 2) {
+            feed(&mut d, t, 30, false);
+            t += p.fast_window_s;
+            if let Some(ev) = d.tick(t, &p) {
+                closed = Some((k, ev));
+                break;
+            }
+        }
+        let (_, ev) = closed.expect("incident never closed");
+        assert!(matches!(ev, BurnEvent::Closed { .. }));
+    }
+
+    #[test]
+    fn peak_tracks_the_worst_fast_window() {
+        let p = params();
+        let mut d = BurnDetector::new("ttft");
+        feed(&mut d, 0.0, 40, true);
+        d.tick(5.0, &p);
+        assert!(d.peak() > 0.0);
+        // All-violating fast window: burn = 1/budget ≈ 33x.
+        assert!((d.peak() - 1.0 / p.budget()).abs() < 1e-9);
+    }
+}

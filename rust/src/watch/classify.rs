@@ -1,0 +1,525 @@
+//! P/D-imbalance detection and Roofline instance-window classification
+//! (DESIGN.md §3.12).
+//!
+//! [`PdDetector`] watches the paper's core failure mode: bursty online
+//! traffic shifting the workload's intrinsic prefill/decode demand ratio
+//! away from the replica's provisioned strict/relaxed split faster than
+//! dynamic adjustment reacts. The watchdog prices demand with the
+//! roofline model over a trailing arrival window and hands each detector
+//! the drift metric `log2(intrinsic P:D / provisioned R:S)`; the detector
+//! is the hysteresis state machine around it.
+//!
+//! [`RooflineClassifier`] labels every instance-window with the §3
+//! bottleneck vocabulary: a busy window is `compute` or `memory_bw`
+//! (decode batches classified against the model's compute-saturated batch
+//! size `bs_sat`, exactly like [`PerfModel::decode_bottleneck`]); an idle
+//! window with pending work is `transfer` when a link ran hot or `queue`
+//! otherwise; a down instance is `fault`; everything else is `idle`. The
+//! per-tick label grid feeds incident `bottleneck` fields and the
+//! `bottleneck_windows` / `bottleneck_timeline` summaries.
+//!
+//! [`PerfModel::decode_bottleneck`]: crate::perfmodel::PerfModel::decode_bottleneck
+
+use std::collections::BTreeMap;
+
+use crate::instance::StepKind;
+use crate::util::json::Json;
+
+use super::WatchParams;
+
+/// Window labels, in tie-break precedence order (earlier wins a tied
+/// tally). `idle` never beats a real explanation.
+const LABELS: [&str; 6] =
+    ["fault", "transfer", "memory_bw", "compute", "queue", "idle"];
+
+fn label_rank(label: &str) -> usize {
+    LABELS.iter().position(|l| *l == label).unwrap_or(LABELS.len())
+}
+
+/// Map a window label onto the §3.10 attribution cause vocabulary, for
+/// incidents with no attributed completions in their window.
+pub fn cause_of_label(label: &str) -> &'static str {
+    match label {
+        "transfer" => "transfer_stall",
+        "queue" => "queueing",
+        "compute" | "memory_bw" => "compute",
+        "fault" => "fault",
+        _ => "unknown",
+    }
+}
+
+// ------------------------------------------------------------ pd drift
+
+/// State transition reported by one [`PdDetector::tick`].
+#[derive(Debug, Clone, Copy)]
+pub enum PdEvent {
+    /// `metric` is the signed log2 drift at open time (positive =
+    /// prefill-starved, negative = decode-starved).
+    Opened { at: f64, metric: f64 },
+    Closed { at: f64, peak: f64 },
+}
+
+/// Per-replica hysteresis state machine over the signed imbalance metric.
+#[derive(Debug)]
+pub struct PdDetector {
+    #[allow(dead_code)] // diagnostic tag, useful in Debug output
+    replica: usize,
+    open: bool,
+    hot: u32,
+    cool: u32,
+    peak: f64,
+}
+
+impl PdDetector {
+    pub fn new(replica: usize) -> Self {
+        PdDetector {
+            replica,
+            open: false,
+            hot: 0,
+            cool: 0,
+            peak: 0.0,
+        }
+    }
+
+    /// Peak |log2 drift| observed during the currently open incident.
+    pub fn peak(&self) -> f64 {
+        self.peak
+    }
+
+    /// Evaluate one tick. `metric` is `None` when demand is too thin (or
+    /// the split degenerate) to judge — which cools an open incident and
+    /// never heats a closed one.
+    pub fn tick(
+        &mut self,
+        now: f64,
+        metric: Option<f64>,
+        p: &WatchParams,
+    ) -> Option<PdEvent> {
+        let abs = metric.map(|m| m.abs());
+        if !self.open {
+            match (metric, abs) {
+                (Some(m), Some(a)) if a >= p.imbalance_log2 => {
+                    self.hot += 1;
+                    if self.hot >= p.imbalance_ticks {
+                        self.open = true;
+                        self.hot = 0;
+                        self.cool = 0;
+                        self.peak = a;
+                        return Some(PdEvent::Opened { at: now, metric: m });
+                    }
+                }
+                _ => self.hot = 0,
+            }
+            return None;
+        }
+        if let Some(a) = abs {
+            self.peak = self.peak.max(a);
+        }
+        let clear = match abs {
+            Some(a) => a <= 0.5 * p.imbalance_log2,
+            None => true,
+        };
+        if clear {
+            self.cool += 1;
+            if self.cool >= p.clear_ticks {
+                self.open = false;
+                let peak = self.peak;
+                self.cool = 0;
+                return Some(PdEvent::Closed { at: now, peak });
+            }
+        } else {
+            self.cool = 0;
+        }
+        None
+    }
+}
+
+// ------------------------------------------------------ roofline labels
+
+/// One replica's gauge snapshot handed to [`RooflineClassifier::on_sample`]
+/// (indexed by the watchdog's stable per-GPU slots).
+#[derive(Debug, Clone)]
+pub struct InstanceGauges {
+    pub replica: usize,
+    /// Pending online work across the replica's pools (queues + waiting
+    /// for KV space).
+    pub queue: usize,
+    /// Offline backlog depth.
+    pub backlog: usize,
+    /// Cumulative per-link busy seconds (utilization comes from the
+    /// tick-over-tick delta).
+    pub link_busy: Vec<f64>,
+    pub down: Vec<bool>,
+    pub kv_used: Vec<usize>,
+}
+
+/// Step work accumulated on one GPU slot since the last tick.
+#[derive(Debug, Clone, Copy, Default)]
+struct SlotAccum {
+    prefill_s: f64,
+    decode_s: f64,
+    /// `decode_s`-weighted participant count (mean batch size =
+    /// `batch_weight / decode_s`).
+    batch_weight: f64,
+}
+
+#[derive(Debug, Default)]
+struct ReplicaState {
+    gauges: Option<InstanceGauges>,
+    link_prev: Vec<f64>,
+    slots: Vec<SlotAccum>,
+}
+
+/// One tick's labels for one replica.
+#[derive(Debug, Clone)]
+struct TickRow {
+    t: f64,
+    replica: usize,
+    dominant: &'static str,
+    labels: Vec<&'static str>,
+}
+
+/// Labels instance-windows with the roofline bottleneck vocabulary.
+#[derive(Debug)]
+pub struct RooflineClassifier {
+    bs_sat: usize,
+    replicas: Vec<ReplicaState>,
+    counts: BTreeMap<&'static str, u64>,
+    timeline: Vec<TickRow>,
+}
+
+impl RooflineClassifier {
+    pub fn new(bs_sat: usize) -> Self {
+        RooflineClassifier {
+            bs_sat,
+            replicas: Vec::new(),
+            counts: BTreeMap::new(),
+            timeline: Vec::new(),
+        }
+    }
+
+    pub fn bs_sat(&self) -> usize {
+        self.bs_sat
+    }
+
+    fn replica_mut(&mut self, replica: usize) -> &mut ReplicaState {
+        if self.replicas.len() <= replica {
+            self.replicas
+                .resize_with(replica + 1, ReplicaState::default);
+        }
+        &mut self.replicas[replica]
+    }
+
+    /// Fold one started step into its slot's window accumulators. A
+    /// [`StepKind::Composed`] iteration splits by computed tokens:
+    /// `prefill_tokens` chunk tokens vs one decode token per participant.
+    pub fn on_step(
+        &mut self,
+        replica: usize,
+        slot: usize,
+        kind: StepKind,
+        participants: usize,
+        prefill_tokens: usize,
+        dur: f64,
+    ) {
+        let rs = self.replica_mut(replica);
+        if rs.slots.len() <= slot {
+            rs.slots.resize(slot + 1, SlotAccum::default());
+        }
+        let acc = &mut rs.slots[slot];
+        match kind {
+            StepKind::PrefillOnline | StepKind::PrefillOffline
+            | StepKind::Warm => acc.prefill_s += dur,
+            StepKind::DecodeRelaxed | StepKind::DecodeStrict => {
+                acc.decode_s += dur;
+                acc.batch_weight += dur * participants as f64;
+            }
+            StepKind::Composed => {
+                let total = (prefill_tokens + participants) as f64;
+                let pfrac = if total > 0.0 {
+                    prefill_tokens as f64 / total
+                } else {
+                    0.0
+                };
+                acc.prefill_s += dur * pfrac;
+                let d = dur * (1.0 - pfrac);
+                acc.decode_s += d;
+                acc.batch_weight += d * participants as f64;
+            }
+        }
+    }
+
+    /// Store the latest gauge snapshot (one per replica per tick).
+    pub fn on_sample(&mut self, gauges: InstanceGauges) {
+        let replica = gauges.replica;
+        self.replica_mut(replica).gauges = Some(gauges);
+    }
+
+    /// Close the `(now - dt, now]` window: label every slot, append the
+    /// per-replica rows, reset the accumulators.
+    pub fn tick(&mut self, now: f64, dt: f64, p: &WatchParams) {
+        let bs_sat = self.bs_sat;
+        for r in 0..self.replicas.len() {
+            let rs = &mut self.replicas[r];
+            let Some(g) = rs.gauges.as_ref() else {
+                for acc in rs.slots.iter_mut() {
+                    *acc = SlotAccum::default();
+                }
+                continue;
+            };
+            let link_util = g
+                .link_busy
+                .iter()
+                .zip(rs.link_prev.iter().chain(std::iter::repeat(&0.0)))
+                .map(|(now_b, prev_b)| ((now_b - prev_b) / dt).max(0.0))
+                .fold(0.0f64, f64::max);
+            let pending = g.queue > 0 || g.backlog > 0;
+            let n_slots = rs.slots.len().max(g.down.len());
+            let mut labels: Vec<&'static str> = Vec::with_capacity(n_slots);
+            for slot in 0..n_slots {
+                let acc = rs.slots.get(slot).copied().unwrap_or_default();
+                let down = g.down.get(slot).copied().unwrap_or(false);
+                let busy =
+                    ((acc.prefill_s + acc.decode_s) / dt).clamp(0.0, 1.0);
+                let label = if down {
+                    "fault"
+                } else if busy >= p.busy_frac_min {
+                    if acc.prefill_s >= acc.decode_s {
+                        // Prefill-dominated windows are GEMM-bound by
+                        // construction (paper §3.3.3).
+                        "compute"
+                    } else {
+                        let mean_batch = if acc.decode_s > 1e-12 {
+                            acc.batch_weight / acc.decode_s
+                        } else {
+                            0.0
+                        };
+                        // Same branch as PerfModel::decode_bottleneck.
+                        if mean_batch >= bs_sat as f64 {
+                            "compute"
+                        } else {
+                            "memory_bw"
+                        }
+                    }
+                } else if pending {
+                    if link_util >= p.link_util_min {
+                        "transfer"
+                    } else {
+                        "queue"
+                    }
+                } else {
+                    "idle"
+                };
+                labels.push(label);
+                *self.counts.entry(label).or_insert(0) += 1;
+            }
+            rs.link_prev = g.link_busy.clone();
+            for acc in rs.slots.iter_mut() {
+                *acc = SlotAccum::default();
+            }
+            let dominant = dominant_of(labels.iter().copied());
+            self.timeline.push(TickRow {
+                t: now,
+                replica: r,
+                dominant,
+                labels,
+            });
+        }
+    }
+
+    /// Dominant label over `[lo, hi]`, optionally restricted to one
+    /// replica: tally of per-slot labels, `idle` only when nothing else
+    /// appears, ties broken by [`LABELS`] precedence.
+    pub fn dominant_label(
+        &self,
+        replica: Option<usize>,
+        lo: f64,
+        hi: f64,
+    ) -> &'static str {
+        let mut tally: BTreeMap<&'static str, u64> = BTreeMap::new();
+        for row in &self.timeline {
+            if row.t < lo || row.t > hi {
+                continue;
+            }
+            if let Some(r) = replica {
+                if row.replica != r {
+                    continue;
+                }
+            }
+            for l in &row.labels {
+                *tally.entry(l).or_insert(0) += 1;
+            }
+        }
+        if tally.is_empty() {
+            return "unknown";
+        }
+        dominant_of_tally(&tally)
+    }
+
+    pub fn counts_json(&self) -> Json {
+        Json::Obj(
+            self.counts
+                .iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(*v as f64)))
+                .collect(),
+        )
+    }
+
+    pub fn timeline_json(&self) -> Json {
+        Json::Arr(
+            self.timeline
+                .iter()
+                .map(|row| {
+                    Json::obj(vec![
+                        ("t", Json::Num(row.t)),
+                        ("replica", Json::Num(row.replica as f64)),
+                        ("label", Json::Str(row.dominant.to_string())),
+                        (
+                            "labels",
+                            Json::Arr(
+                                row.labels
+                                    .iter()
+                                    .map(|l| Json::Str(l.to_string()))
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+fn dominant_of(labels: impl Iterator<Item = &'static str>) -> &'static str {
+    let mut tally: BTreeMap<&'static str, u64> = BTreeMap::new();
+    for l in labels {
+        *tally.entry(l).or_insert(0) += 1;
+    }
+    if tally.is_empty() {
+        return "idle";
+    }
+    dominant_of_tally(&tally)
+}
+
+fn dominant_of_tally(tally: &BTreeMap<&'static str, u64>) -> &'static str {
+    tally
+        .iter()
+        .filter(|(l, _)| **l != "idle")
+        .max_by(|a, b| {
+            a.1.cmp(b.1)
+                .then_with(|| label_rank(b.0).cmp(&label_rank(a.0)))
+        })
+        .map(|(l, _)| *l)
+        .unwrap_or("idle")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SloSpec;
+
+    fn params() -> WatchParams {
+        WatchParams::new(SloSpec::default())
+    }
+
+    #[test]
+    fn pd_detector_needs_sustained_drift_and_clears_with_hysteresis() {
+        let p = params();
+        let mut d = PdDetector::new(0);
+        // One hot tick is not enough.
+        assert!(d.tick(5.0, Some(1.5), &p).is_none());
+        assert!(d.tick(10.0, Some(1.5), &p).is_none());
+        let ev = d.tick(15.0, Some(1.6), &p);
+        assert!(matches!(ev, Some(PdEvent::Opened { metric, .. })
+            if metric > 0.0));
+        // Band readings (between half and full threshold) keep it open.
+        for t in [20.0, 25.0, 30.0] {
+            assert!(d.tick(t, Some(0.8), &p).is_none());
+        }
+        // Sustained clear readings close it; peak survived.
+        assert!(d.tick(35.0, Some(0.1), &p).is_none());
+        assert!(d.tick(40.0, Some(0.1), &p).is_none());
+        let ev = d.tick(45.0, Some(0.1), &p);
+        assert!(matches!(ev, Some(PdEvent::Closed { peak, .. })
+            if (peak - 1.6).abs() < 1e-9));
+    }
+
+    #[test]
+    fn pd_detector_interrupted_heat_resets() {
+        let p = params();
+        let mut d = PdDetector::new(0);
+        assert!(d.tick(5.0, Some(2.0), &p).is_none());
+        assert!(d.tick(10.0, Some(0.2), &p).is_none()); // resets hot count
+        assert!(d.tick(15.0, Some(2.0), &p).is_none());
+        assert!(d.tick(20.0, Some(2.0), &p).is_none());
+        assert!(matches!(
+            d.tick(25.0, Some(2.0), &p),
+            Some(PdEvent::Opened { .. })
+        ));
+    }
+
+    fn gauges(
+        replica: usize,
+        queue: usize,
+        link_busy: Vec<f64>,
+        down: Vec<bool>,
+    ) -> InstanceGauges {
+        let n = down.len();
+        InstanceGauges {
+            replica,
+            queue,
+            backlog: 0,
+            link_busy,
+            down,
+            kv_used: vec![0; n],
+        }
+    }
+
+    #[test]
+    fn busy_windows_classify_by_batch_size_against_bs_sat() {
+        let p = params();
+        let mut c = RooflineClassifier::new(64);
+        // Slot 0: decode at mean batch 128 (>= bs_sat) → compute.
+        c.on_step(0, 0, StepKind::DecodeStrict, 128, 0, 4.0);
+        // Slot 1: decode at mean batch 8 (< bs_sat) → memory_bw.
+        c.on_step(0, 1, StepKind::DecodeStrict, 8, 0, 4.0);
+        c.on_sample(gauges(0, 0, vec![], vec![false, false]));
+        c.tick(5.0, 5.0, &p);
+        // 1:1 tie between the two busy labels → precedence order wins.
+        assert_eq!(c.dominant_label(Some(0), 0.0, 5.0), "memory_bw");
+        let counts = c.counts_json();
+        assert_eq!(counts.get("compute").as_f64(), Some(1.0));
+        assert_eq!(counts.get("memory_bw").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn idle_with_pending_work_is_transfer_or_queue_by_link_util() {
+        let p = params();
+        let mut c = RooflineClassifier::new(64);
+        // Tick 1: idle slots, deep queue, links cold → queue.
+        c.on_sample(gauges(0, 10, vec![0.0], vec![false]));
+        c.tick(5.0, 5.0, &p);
+        assert_eq!(c.dominant_label(Some(0), 0.0, 5.0), "queue");
+        // Tick 2: links ran hot (4 busy-seconds over a 5s window) →
+        // transfer-bound.
+        c.on_sample(gauges(0, 10, vec![4.0], vec![false]));
+        c.tick(10.0, 5.0, &p);
+        assert_eq!(c.dominant_label(Some(0), 6.0, 10.0), "transfer");
+        // Down instance wins over everything.
+        c.on_sample(gauges(0, 10, vec![4.0], vec![true]));
+        c.tick(15.0, 5.0, &p);
+        assert_eq!(c.dominant_label(Some(0), 11.0, 15.0), "fault");
+    }
+
+    #[test]
+    fn dominant_label_ignores_idle_unless_alone() {
+        let p = params();
+        let mut c = RooflineClassifier::new(64);
+        c.on_step(0, 0, StepKind::PrefillOnline, 1, 0, 5.0);
+        c.on_sample(gauges(0, 0, vec![], vec![false, false, false]));
+        c.tick(5.0, 5.0, &p);
+        // Two idle slots vs one compute slot: compute still dominates.
+        assert_eq!(c.dominant_label(Some(0), 0.0, 5.0), "compute");
+        assert_eq!(c.dominant_label(Some(0), 100.0, 200.0), "unknown");
+    }
+}

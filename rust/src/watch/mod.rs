@@ -1,0 +1,903 @@
+//! Streaming incident engine (DESIGN.md §3.12).
+//!
+//! The flight recorder (§3.10) and observatory (§3.11) are passive: they
+//! record what happened but nothing *detects* an SLO burn, a
+//! prefill/decode-imbalance window, or a saturated link while it is
+//! happening. This module rides the same two deterministic taps the
+//! recorder already owns — the typed [`Action`] stream and the periodic
+//! gauge sampler — and turns them into typed [`Incident`] records:
+//!
+//! - **multi-window burn-rate SLO alerting** ([`burn::BurnDetector`]) —
+//!   SRE-style fast/slow window pairs over rolling TTFT and TPOT
+//!   attainment of the online class, with hysteresis so incidents open
+//!   and close without flapping;
+//! - **a per-replica P/D-imbalance detector** ([`classify::PdDetector`])
+//!   — tracks the workload's intrinsic prefill/decode demand ratio
+//!   (roofline-model work estimates over the arrival stream) against the
+//!   replica's current strict/relaxed split, the paper's core failure
+//!   mode surfaced as a first-class signal;
+//! - **a Roofline bottleneck classifier**
+//!   ([`classify::RooflineClassifier`]) — labels each instance-window
+//!   `compute` / `memory_bw` / `transfer` / `queue` (plus `fault` and
+//!   `idle`) using [`PerfModel::decode_bottleneck`], mirroring §3's
+//!   bottleneck-based scheduling vocabulary; and
+//! - **fault incidents** — every `InstanceDown`/`InstanceUp` window
+//!   becomes an incident of its own, so crash windows are first-class in
+//!   the ledger the fleet smoke asserts on.
+//!
+//! The ledger lands under the `incidents` key of `--json-out`, as a
+//! dedicated `incidents` annotation track in the Perfetto export, and as
+//! `ooco_incidents_*` / `ooco_burn_rate` OpenMetrics families. A
+//! disabled watchdog is a pure observer: `--watch false` leaves every
+//! other output byte-identical (`tests/watch_properties.rs` and CI pin
+//! this). Everything derives from the virtual clock and the
+//! deterministic action stream — same seed, byte-identical ledger.
+//!
+//! [`analyze`] re-derives the same ledger offline from any recorded
+//! `--json-out` report (`ooco analyze`) and writes a Markdown
+//! postmortem with per-incident root causes and remediation hints.
+
+pub mod analyze;
+pub mod burn;
+pub mod classify;
+
+use std::collections::BTreeMap;
+
+use crate::config::{ServingConfig, SloSpec};
+use crate::perfmodel::PerfModel;
+use crate::request::{Class, Request};
+use crate::scheduler::action::{Action, InstanceRef, RolePhase};
+use crate::scheduler::cluster::ClusterState;
+use crate::transport::LinkState;
+use crate::util::json::Json;
+
+use burn::{BurnDetector, BurnEvent};
+use classify::{InstanceGauges, PdDetector, PdEvent, RooflineClassifier};
+
+// ---------------------------------------------------------------- params
+
+/// Tuning of the incident engine. `Copy` so it can ride inside
+/// [`crate::telemetry::TelemetryOpts`]; the heavyweight inputs (perf
+/// model, serving config) are supplied to [`Watchdog::new`] at wiring
+/// time instead.
+#[derive(Debug, Clone, Copy)]
+pub struct WatchParams {
+    /// SLO bounds; `slo.violation_threshold` is the error budget the
+    /// burn rates are normalized by.
+    pub slo: SloSpec,
+    /// Fast ("is it still happening") attainment window, virtual seconds.
+    pub fast_window_s: f64,
+    /// Slow ("is it significant") attainment window, virtual seconds.
+    pub slow_window_s: f64,
+    /// Burn-rate threshold on the fast window (multiples of the budget).
+    pub fast_burn: f64,
+    /// Burn-rate threshold on the slow window.
+    pub slow_burn: f64,
+    /// Consecutive clear evaluations (fast burn under half its open
+    /// threshold) before an open incident closes — the hysteresis band.
+    pub clear_ticks: u32,
+    /// Completions the slow window must hold before burn rates count;
+    /// below this both rates read 0 (no paging on the first request).
+    pub min_window_completions: usize,
+    /// |log2(intrinsic P:D ratio / provisioned relaxed:strict ratio)|
+    /// beyond which a replica counts as imbalanced (1.0 = 2x off).
+    pub imbalance_log2: f64,
+    /// Consecutive hot evaluations before a P/D-imbalance incident opens.
+    pub imbalance_ticks: u32,
+    /// Minimum demanded work (model-seconds) in the trailing window for
+    /// the imbalance metric to be meaningful.
+    pub min_demand_s: f64,
+    /// Instance busy fraction above which a window is classified by the
+    /// roofline (below it, waiting explanations — transfer/queue — win).
+    pub busy_frac_min: f64,
+    /// Link utilization above which an under-utilized instance-window
+    /// with pending work is `transfer`-bound rather than `queue`-bound.
+    pub link_util_min: f64,
+}
+
+impl WatchParams {
+    pub fn new(slo: SloSpec) -> Self {
+        WatchParams {
+            slo,
+            fast_window_s: 60.0,
+            slow_window_s: 240.0,
+            fast_burn: 6.0,
+            slow_burn: 3.0,
+            clear_ticks: 3,
+            min_window_completions: 5,
+            imbalance_log2: 1.0,
+            imbalance_ticks: 3,
+            min_demand_s: 1.0,
+            busy_frac_min: 0.5,
+            link_util_min: 0.5,
+        }
+    }
+
+    /// The error budget burn rates are expressed in multiples of.
+    pub fn budget(&self) -> f64 {
+        self.slo.violation_threshold.max(1e-6)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fast_window_s", Json::Num(self.fast_window_s)),
+            ("slow_window_s", Json::Num(self.slow_window_s)),
+            ("fast_burn", Json::Num(self.fast_burn)),
+            ("slow_burn", Json::Num(self.slow_burn)),
+            ("budget", Json::Num(self.budget())),
+            ("clear_ticks", Json::Num(self.clear_ticks as f64)),
+            ("imbalance_log2", Json::Num(self.imbalance_log2)),
+        ])
+    }
+}
+
+impl Default for WatchParams {
+    fn default() -> Self {
+        WatchParams::new(SloSpec::default())
+    }
+}
+
+// -------------------------------------------------------------- incident
+
+/// Incident severity. `Page` means the fast window confirmed the burn at
+/// twice its open threshold (or a strict-pool instance went down).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warn,
+    Page,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Page => "page",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IncidentKind {
+    /// Multi-window burn-rate SLO violation (fleet-wide, online class).
+    SloBurn,
+    /// A replica's strict/relaxed split drifted from the workload's
+    /// intrinsic prefill/decode demand ratio.
+    PdImbalance,
+    /// An instance crash window (fleet fault model, §3.9).
+    Fault,
+}
+
+impl IncidentKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            IncidentKind::SloBurn => "slo_burn",
+            IncidentKind::PdImbalance => "pd_imbalance",
+            IncidentKind::Fault => "fault",
+        }
+    }
+}
+
+/// One typed incident record — the unit of the `incidents` ledger.
+#[derive(Debug, Clone)]
+pub struct Incident {
+    pub id: u64,
+    pub kind: IncidentKind,
+    pub severity: Severity,
+    /// Affected replica; `None` for fleet-wide (burn) incidents.
+    pub replica: Option<usize>,
+    /// Affected request class (`"online"` for SLO burns).
+    pub class: Option<&'static str>,
+    /// Violated metric (`"ttft"` / `"tpot"`) for SLO burns.
+    pub metric: Option<&'static str>,
+    pub opened_at: f64,
+    /// `None` while still open (and for incidents open at end of run).
+    pub closed_at: Option<f64>,
+    /// Peak detector reading: burn rate (multiples of budget) for SLO
+    /// burns, |log2 imbalance| for P/D drift, down-seconds for faults.
+    pub peak: f64,
+    /// Dominant roofline label over the incident's open window.
+    pub bottleneck: String,
+    /// Dominant cause, folded in from the §3.10 attribution machinery
+    /// for SLO burns (`queueing` / `transfer_stall` / … ), `"fault"`
+    /// for crash windows, `"pd_imbalance"` for drift.
+    pub cause: String,
+    /// Human-readable one-liner.
+    pub detail: String,
+}
+
+impl Incident {
+    pub fn duration_s(&self, end_time: f64) -> f64 {
+        (self.closed_at.unwrap_or(end_time) - self.opened_at).max(0.0)
+    }
+
+    pub fn to_json(&self, end_time: f64) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("kind", Json::Str(self.kind.as_str().to_string())),
+            (
+                "severity",
+                Json::Str(self.severity.as_str().to_string()),
+            ),
+            (
+                "replica",
+                self.replica
+                    .map(|r| Json::Num(r as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "class",
+                self.class
+                    .map(|c| Json::Str(c.to_string()))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "metric",
+                self.metric
+                    .map(|m| Json::Str(m.to_string()))
+                    .unwrap_or(Json::Null),
+            ),
+            ("opened_at", Json::Num(self.opened_at)),
+            (
+                "closed_at",
+                self.closed_at.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("duration_s", Json::Num(self.duration_s(end_time))),
+            ("peak", Json::Num(self.peak)),
+            ("bottleneck", Json::Str(self.bottleneck.clone())),
+            ("cause", Json::Str(self.cause.clone())),
+            ("detail", Json::Str(self.detail.clone())),
+        ])
+    }
+}
+
+/// Everything a finished watchdog hands back: the typed records (for the
+/// Perfetto annotation track) and the composed `incidents` Json.
+#[derive(Debug, Clone)]
+pub struct WatchOut {
+    pub incidents: Vec<Incident>,
+    pub summary: Json,
+}
+
+// -------------------------------------------------------------- watchdog
+
+/// Stable per-GPU slot ids per replica, mirrored across pool flips the
+/// same way the flight recorder mirrors its Perfetto tracks.
+#[derive(Debug, Clone, Default)]
+struct SlotMap {
+    relaxed: Vec<usize>,
+    strict: Vec<usize>,
+}
+
+impl SlotMap {
+    fn slot(&self, inst: InstanceRef) -> Option<usize> {
+        match inst {
+            InstanceRef::Relaxed(i) => self.relaxed.get(i).copied(),
+            InstanceRef::Strict(i) => self.strict.get(i).copied(),
+        }
+    }
+}
+
+/// One (arrival, relaxed-pool work, strict-pool work) row of the demand
+/// ledger the P/D detector integrates over. Work estimates come from the
+/// roofline model: prefill (and offline decode) land on the relaxed
+/// pool, online decode on the strict pool.
+#[derive(Debug, Clone, Copy)]
+struct DemandRow {
+    arrival: f64,
+    relaxed_s: f64,
+    strict_s: f64,
+}
+
+/// The streaming incident engine. Fed by the flight recorder from the
+/// same choke points that build the gauge timeline; owns no wall-clock
+/// state, so same-seed ledgers are byte-identical.
+#[derive(Debug)]
+pub struct Watchdog {
+    params: WatchParams,
+    pm: PerfModel,
+    ttft: BurnDetector,
+    tpot: BurnDetector,
+    pd: Vec<PdDetector>,
+    classify: RooflineClassifier,
+    slots: Vec<SlotMap>,
+    /// Demand ledger sorted by arrival; `[demand_lo, demand_hi)` is the
+    /// trailing slow-window slice currently summed into the running
+    /// totals.
+    demand: Vec<DemandRow>,
+    demand_lo: usize,
+    demand_hi: usize,
+    relaxed_demand_s: f64,
+    strict_demand_s: f64,
+    /// Latest sampled (relaxed, strict) pool sizes per replica.
+    splits: Vec<(usize, usize)>,
+    /// Open incident index per burn metric (0 = ttft, 1 = tpot).
+    open_burn: [Option<usize>; 2],
+    /// Open incident index per imbalanced replica.
+    open_pd: BTreeMap<usize, usize>,
+    /// Open fault incident per crashed instance slot.
+    open_fault: BTreeMap<(usize, usize), usize>,
+    incidents: Vec<Incident>,
+    /// `(finish time, dominant cause)` of attributed SLO violations,
+    /// folded into overlapping burn incidents at finish.
+    attributed: Vec<(f64, &'static str)>,
+    last_tick_at: f64,
+    ticks: u64,
+}
+
+impl Watchdog {
+    pub fn new(params: WatchParams, serving: &ServingConfig) -> Self {
+        let pm =
+            PerfModel::new(serving.model.clone(), serving.hardware.clone());
+        Watchdog {
+            ttft: BurnDetector::new("ttft"),
+            tpot: BurnDetector::new("tpot"),
+            pd: Vec::new(),
+            classify: RooflineClassifier::new(pm.bs_sat()),
+            slots: Vec::new(),
+            demand: Vec::new(),
+            demand_lo: 0,
+            demand_hi: 0,
+            relaxed_demand_s: 0.0,
+            strict_demand_s: 0.0,
+            splits: Vec::new(),
+            open_burn: [None, None],
+            open_pd: BTreeMap::new(),
+            open_fault: BTreeMap::new(),
+            incidents: Vec::new(),
+            attributed: Vec::new(),
+            last_tick_at: 0.0,
+            ticks: 0,
+            params,
+            pm,
+        }
+    }
+
+    /// Build the demand ledger from the workload statics. Decode
+    /// occupancy is priced at the compute-saturated batch size — the
+    /// per-token cost an efficiently packed pool would pay.
+    pub fn register_requests(&mut self, requests: &[Request]) {
+        let bs = self.classify.bs_sat().clamp(1, 1 << 12);
+        for r in requests {
+            let prefill_s = self.pm.prefill_latency(r.prompt_len);
+            let ctx = r.prompt_len + r.output_len / 2;
+            let decode_s = r.output_len as f64
+                * self.pm.decode_latency(
+                    crate::perfmodel::BatchStats::new(bs, bs * ctx),
+                )
+                / bs as f64;
+            let (relaxed_s, strict_s) = if r.class == Class::Online {
+                (prefill_s, decode_s)
+            } else {
+                // Offline work (prefill and decode) is the relaxed
+                // pool's responsibility under the paper's split.
+                (prefill_s + decode_s, 0.0)
+            };
+            self.demand.push(DemandRow {
+                arrival: r.arrival,
+                relaxed_s,
+                strict_s,
+            });
+        }
+        self.demand.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+    }
+
+    pub fn register_replica(
+        &mut self,
+        replica: usize,
+        relaxed: usize,
+        strict: usize,
+    ) {
+        if self.slots.len() <= replica {
+            self.slots.resize(replica + 1, SlotMap::default());
+            self.splits.resize(replica + 1, (0, 0));
+            while self.pd.len() <= replica {
+                self.pd.push(PdDetector::new(self.pd.len()));
+            }
+        }
+        let sm = &mut self.slots[replica];
+        sm.relaxed = (0..relaxed).collect();
+        sm.strict = (relaxed..relaxed + strict).collect();
+        self.splits[replica] = (relaxed, strict);
+    }
+
+    // ----------------------------------------------------------- intake
+
+    /// Tap one action batch (same stream the recorder observes).
+    pub fn on_actions(&mut self, now: f64, replica: usize, actions: &[Action]) {
+        for a in actions {
+            match a {
+                Action::StartStep {
+                    inst,
+                    kind,
+                    participants,
+                    prefill,
+                    predicted_latency,
+                    ..
+                } => {
+                    if let Some(slot) =
+                        self.slots.get(replica).and_then(|s| s.slot(*inst))
+                    {
+                        let ptok: usize =
+                            prefill.iter().map(|s| s.tokens).sum();
+                        self.classify.on_step(
+                            replica,
+                            slot,
+                            *kind,
+                            participants.len(),
+                            ptok,
+                            *predicted_latency,
+                        );
+                    }
+                }
+                Action::RoleChange { phase, to, .. } => {
+                    if matches!(phase, RolePhase::Flip) {
+                        if let Some(sm) = self.slots.get_mut(replica) {
+                            // Mirror `ClusterState`: a flip moves the
+                            // drained tail instance between pools.
+                            match to {
+                                crate::instance::PoolRole::Strict => {
+                                    if let Some(s) = sm.relaxed.pop() {
+                                        sm.strict.push(s);
+                                    }
+                                }
+                                crate::instance::PoolRole::Relaxed => {
+                                    if let Some(s) = sm.strict.pop() {
+                                        sm.relaxed.push(s);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                Action::InstanceDown { inst } => {
+                    self.on_instance_down(now, replica, *inst);
+                }
+                Action::InstanceUp { inst } => {
+                    self.on_instance_up(now, replica, *inst);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn on_instance_down(
+        &mut self,
+        now: f64,
+        replica: usize,
+        inst: InstanceRef,
+    ) {
+        let Some(slot) = self.slots.get(replica).and_then(|s| s.slot(inst))
+        else {
+            return;
+        };
+        let (pool, severity) = match inst {
+            // Losing strict capacity directly threatens online decode.
+            InstanceRef::Strict(_) => ("strict", Severity::Page),
+            InstanceRef::Relaxed(_) => ("relaxed", Severity::Warn),
+        };
+        let id = self.incidents.len();
+        self.incidents.push(Incident {
+            id: id as u64 + 1,
+            kind: IncidentKind::Fault,
+            severity,
+            replica: Some(replica),
+            class: None,
+            metric: None,
+            opened_at: now,
+            closed_at: None,
+            peak: 0.0,
+            bottleneck: "fault".to_string(),
+            cause: "fault".to_string(),
+            detail: format!(
+                "instance down (replica {replica}, pool {pool}, gpu{slot})"
+            ),
+        });
+        self.open_fault.insert((replica, slot), id);
+    }
+
+    fn on_instance_up(&mut self, now: f64, replica: usize, inst: InstanceRef) {
+        let Some(slot) = self.slots.get(replica).and_then(|s| s.slot(inst))
+        else {
+            return;
+        };
+        if let Some(idx) = self.open_fault.remove(&(replica, slot)) {
+            let inc = &mut self.incidents[idx];
+            inc.closed_at = Some(now);
+            inc.peak = now - inc.opened_at;
+        }
+    }
+
+    /// Fold one online completion into the burn windows (the recorder
+    /// computes the per-metric outcomes from its milestone estimates).
+    pub fn on_online_complete(
+        &mut self,
+        now: f64,
+        ttft_ok: bool,
+        tpot_ok: bool,
+    ) {
+        self.ttft.on_complete(now, !ttft_ok);
+        self.tpot.on_complete(now, !tpot_ok);
+    }
+
+    /// Record one attributed SLO violation (finish time, dominant cause
+    /// from the §3.10 decomposition); folded into overlapping burn
+    /// incidents at finish.
+    pub fn on_attributed(&mut self, finished_at: f64, cause: &'static str) {
+        self.attributed.push((finished_at, cause));
+    }
+
+    /// Snapshot one replica's gauges (same tick the recorder samples).
+    pub fn on_sample(
+        &mut self,
+        _now: f64,
+        replica: usize,
+        cluster: &ClusterState,
+        links: &[LinkState],
+    ) {
+        if self.splits.len() <= replica {
+            self.register_replica(
+                replica,
+                cluster.relaxed.len(),
+                cluster.strict.len(),
+            );
+        }
+        self.splits[replica] =
+            (cluster.relaxed.len(), cluster.strict.len());
+        let mut queue = 0usize;
+        for inst in cluster.relaxed.iter().chain(cluster.strict.iter()) {
+            queue += inst.online_queue.len() + inst.waiting_for_space.len();
+        }
+        let mut gauges = InstanceGauges {
+            replica,
+            queue,
+            backlog: cluster.offline_backlog.len(),
+            link_busy: links.iter().map(|l| l.busy_s).collect(),
+            down: Vec::new(),
+            kv_used: Vec::new(),
+        };
+        let sm = &self.slots[replica];
+        let n_slots = sm.relaxed.len() + sm.strict.len();
+        gauges.down.resize(n_slots, false);
+        gauges.kv_used.resize(n_slots, 0);
+        for (pool, insts) in
+            [(&sm.relaxed, &cluster.relaxed), (&sm.strict, &cluster.strict)]
+        {
+            for (i, inst) in insts.iter().enumerate() {
+                if let Some(&slot) = pool.get(i) {
+                    if slot < n_slots {
+                        gauges.down[slot] = inst.down;
+                        gauges.kv_used[slot] = inst.kv.capacity_tokens()
+                            - inst.kv.free_tokens();
+                    }
+                }
+            }
+        }
+        self.classify.on_sample(gauges);
+    }
+
+    // ------------------------------------------------------- evaluation
+
+    /// Advance the demand-window pointers to `now` and return the
+    /// trailing-window (relaxed, strict) demanded work.
+    fn demand_window(&mut self, now: f64) -> (f64, f64) {
+        while self.demand_hi < self.demand.len()
+            && self.demand[self.demand_hi].arrival <= now
+        {
+            let r = self.demand[self.demand_hi];
+            self.relaxed_demand_s += r.relaxed_s;
+            self.strict_demand_s += r.strict_s;
+            self.demand_hi += 1;
+        }
+        let cutoff = now - self.params.slow_window_s;
+        while self.demand_lo < self.demand_hi
+            && self.demand[self.demand_lo].arrival < cutoff
+        {
+            let r = self.demand[self.demand_lo];
+            self.relaxed_demand_s -= r.relaxed_s;
+            self.strict_demand_s -= r.strict_s;
+            self.demand_lo += 1;
+        }
+        (self.relaxed_demand_s.max(0.0), self.strict_demand_s.max(0.0))
+    }
+
+    /// The replica's current imbalance metric:
+    /// `log2(intrinsic P:D ratio / provisioned relaxed:strict ratio)`,
+    /// `None` when demand is too thin or the split degenerate.
+    fn imbalance_metric(
+        &self,
+        relaxed_demand: f64,
+        strict_demand: f64,
+        split: (usize, usize),
+    ) -> Option<f64> {
+        if relaxed_demand + strict_demand < self.params.min_demand_s {
+            return None;
+        }
+        if split.0 == 0 || split.1 == 0 {
+            return None;
+        }
+        if strict_demand <= 1e-9 || relaxed_demand <= 1e-9 {
+            return None;
+        }
+        let intrinsic = relaxed_demand / strict_demand;
+        let provisioned = split.0 as f64 / split.1 as f64;
+        Some((intrinsic / provisioned).log2())
+    }
+
+    /// Evaluate every detector at the gauge tick (after all replicas
+    /// sampled). Deterministic order: burn (ttft, tpot), then P/D per
+    /// replica ascending.
+    pub fn on_tick(&mut self, now: f64) {
+        let dt = now - self.last_tick_at;
+        self.ticks += 1;
+        // Close out the instance-window classifications first so an
+        // incident opening on this tick sees the window that opened it.
+        if dt > 1e-9 {
+            self.classify.tick(now, dt, &self.params);
+        }
+
+        for mi in 0..2 {
+            let det = if mi == 0 { &mut self.ttft } else { &mut self.tpot };
+            match det.tick(now, &self.params) {
+                Some(BurnEvent::Opened { at, fast, slow }) => {
+                    let metric = if mi == 0 { "ttft" } else { "tpot" };
+                    let id = self.incidents.len();
+                    self.incidents.push(Incident {
+                        id: id as u64 + 1,
+                        kind: IncidentKind::SloBurn,
+                        severity: Severity::Warn,
+                        replica: None,
+                        class: Some("online"),
+                        metric: Some(metric),
+                        opened_at: at,
+                        closed_at: None,
+                        peak: fast,
+                        bottleneck: String::new(),
+                        cause: String::new(),
+                        detail: format!(
+                            "online {metric} burn {fast:.1}x budget \
+                             (fast) / {slow:.1}x (slow)"
+                        ),
+                    });
+                    self.open_burn[mi] = Some(id);
+                }
+                Some(BurnEvent::Closed { at, peak }) => {
+                    if let Some(idx) = self.open_burn[mi].take() {
+                        let inc = &mut self.incidents[idx];
+                        inc.closed_at = Some(at);
+                        inc.peak = peak;
+                    }
+                }
+                None => {
+                    if let Some(idx) = self.open_burn[mi] {
+                        let det =
+                            if mi == 0 { &self.ttft } else { &self.tpot };
+                        self.incidents[idx].peak = det.peak();
+                    }
+                }
+            }
+        }
+
+        let (rd, sd) = self.demand_window(now);
+        for replica in 0..self.pd.len() {
+            let split = self.splits[replica];
+            let metric = self.imbalance_metric(rd, sd, split);
+            match self.pd[replica].tick(now, metric, &self.params) {
+                Some(PdEvent::Opened { at, metric }) => {
+                    let direction = if metric > 0.0 {
+                        "prefill-starved (relaxed pool undersized)"
+                    } else {
+                        "decode-starved (strict pool undersized)"
+                    };
+                    let id = self.incidents.len();
+                    self.incidents.push(Incident {
+                        id: id as u64 + 1,
+                        kind: IncidentKind::PdImbalance,
+                        severity: Severity::Warn,
+                        replica: Some(replica),
+                        class: None,
+                        metric: None,
+                        opened_at: at,
+                        closed_at: None,
+                        peak: metric.abs(),
+                        bottleneck: String::new(),
+                        cause: "pd_imbalance".to_string(),
+                        detail: format!(
+                            "replica {replica} {direction}: intrinsic \
+                             P:D {:.2}x off the {}r/{}s split",
+                            metric.abs().exp2(),
+                            split.0,
+                            split.1
+                        ),
+                    });
+                    self.open_pd.insert(replica, id);
+                }
+                Some(PdEvent::Closed { at, peak }) => {
+                    if let Some(idx) = self.open_pd.remove(&replica) {
+                        let inc = &mut self.incidents[idx];
+                        inc.closed_at = Some(at);
+                        inc.peak = peak;
+                    }
+                }
+                None => {
+                    if let Some(&idx) = self.open_pd.get(&replica) {
+                        self.incidents[idx].peak =
+                            self.pd[replica].peak();
+                    }
+                }
+            }
+        }
+        self.last_tick_at = now;
+    }
+
+    // ----------------------------------------------------------- finish
+
+    /// Close the books: fold dominant causes and bottleneck labels into
+    /// the incidents and compose the `incidents` Json.
+    pub fn finish(&mut self, end_time: f64) -> WatchOut {
+        // Final partial window so short runs still classify.
+        let dt = end_time - self.last_tick_at;
+        if dt > 1e-9 {
+            self.classify.tick(end_time, dt, &self.params);
+        }
+        self.attributed.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(b.1))
+        });
+
+        for inc in &mut self.incidents {
+            let hi = inc.closed_at.unwrap_or(end_time);
+            if inc.bottleneck.is_empty() {
+                inc.bottleneck = self
+                    .classify
+                    .dominant_label(inc.replica, inc.opened_at, hi)
+                    .to_string();
+            }
+            if inc.kind == IncidentKind::SloBurn {
+                let mut tally: BTreeMap<&'static str, u64> = BTreeMap::new();
+                for &(t, cause) in &self.attributed {
+                    if t >= inc.opened_at && t <= hi {
+                        *tally.entry(cause).or_insert(0) += 1;
+                    }
+                }
+                inc.cause = tally
+                    .iter()
+                    .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
+                    .map(|(c, _)| c.to_string())
+                    .unwrap_or_else(|| {
+                        classify::cause_of_label(&inc.bottleneck).to_string()
+                    });
+                if inc.peak >= 2.0 * self.params.fast_burn {
+                    inc.severity = Severity::Page;
+                }
+            }
+        }
+
+        let mut by_kind: BTreeMap<&'static str, u64> = BTreeMap::new();
+        let mut by_severity: BTreeMap<&'static str, u64> = BTreeMap::new();
+        let mut open_at_end = 0u64;
+        for inc in &self.incidents {
+            *by_kind.entry(inc.kind.as_str()).or_insert(0) += 1;
+            *by_severity.entry(inc.severity.as_str()).or_insert(0) += 1;
+            if inc.closed_at.is_none() {
+                open_at_end += 1;
+            }
+        }
+        let count_map = |m: &BTreeMap<&'static str, u64>| {
+            Json::Obj(
+                m.iter()
+                    .map(|(k, v)| (k.to_string(), Json::Num(*v as f64)))
+                    .collect(),
+            )
+        };
+        let burn_json = |d: &BurnDetector| {
+            let r = d.rates(end_time, &self.params);
+            Json::obj(vec![
+                ("fast", Json::Num(r.fast)),
+                ("slow", Json::Num(r.slow)),
+            ])
+        };
+        let (rd, sd) = (self.relaxed_demand_s, self.strict_demand_s);
+        let pd_rows: Vec<Json> = (0..self.pd.len())
+            .map(|replica| {
+                let m = self
+                    .imbalance_metric(rd, sd, self.splits[replica])
+                    .unwrap_or(0.0);
+                Json::obj(vec![
+                    ("replica", Json::Num(replica as f64)),
+                    ("imbalance_log2", Json::Num(m)),
+                ])
+            })
+            .collect();
+
+        let summary = Json::obj(vec![
+            (
+                "incidents",
+                Json::Arr(
+                    self.incidents
+                        .iter()
+                        .map(|i| i.to_json(end_time))
+                        .collect(),
+                ),
+            ),
+            ("total", Json::Num(self.incidents.len() as f64)),
+            ("open_at_end", Json::Num(open_at_end as f64)),
+            ("by_kind", count_map(&by_kind)),
+            ("by_severity", count_map(&by_severity)),
+            (
+                "burn",
+                Json::obj(vec![
+                    ("ttft", burn_json(&self.ttft)),
+                    ("tpot", burn_json(&self.tpot)),
+                ]),
+            ),
+            ("bottleneck_windows", self.classify.counts_json()),
+            ("bottleneck_timeline", self.classify.timeline_json()),
+            ("pd_imbalance", Json::Arr(pd_rows)),
+            ("params", self.params.to_json()),
+        ]);
+
+        WatchOut {
+            incidents: std::mem::take(&mut self.incidents),
+            summary,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_incident_opens_and_closes_with_the_down_window() {
+        let serving = ServingConfig::preset_7b();
+        let params = WatchParams::new(serving.slo);
+        let mut w = Watchdog::new(params, &serving);
+        w.register_replica(0, 2, 2);
+        w.on_actions(
+            10.0,
+            0,
+            &[Action::InstanceDown {
+                inst: InstanceRef::Relaxed(1),
+            }],
+        );
+        w.on_actions(
+            40.0,
+            0,
+            &[Action::InstanceUp {
+                inst: InstanceRef::Relaxed(1),
+            }],
+        );
+        let out = w.finish(100.0);
+        assert_eq!(out.incidents.len(), 1);
+        let inc = &out.incidents[0];
+        assert_eq!(inc.kind, IncidentKind::Fault);
+        assert_eq!(inc.opened_at, 10.0);
+        assert_eq!(inc.closed_at, Some(40.0));
+        assert_eq!(inc.cause, "fault");
+        assert_eq!(inc.severity, Severity::Warn);
+        assert_eq!(out.summary.get("total").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn strict_fault_pages_and_stays_open_without_recovery() {
+        let serving = ServingConfig::preset_7b();
+        let mut w = Watchdog::new(WatchParams::new(serving.slo), &serving);
+        w.register_replica(0, 1, 1);
+        w.on_actions(
+            5.0,
+            0,
+            &[Action::InstanceDown {
+                inst: InstanceRef::Strict(0),
+            }],
+        );
+        let out = w.finish(50.0);
+        assert_eq!(out.incidents[0].severity, Severity::Page);
+        assert!(out.incidents[0].closed_at.is_none());
+        assert_eq!(out.summary.get("open_at_end").as_f64(), Some(1.0));
+    }
+}

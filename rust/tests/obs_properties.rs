@@ -246,7 +246,8 @@ fn assert_well_formed_openmetrics(text: &str) {
 fn openmetrics_exposition_is_well_formed() {
     let trace = mixed_trace(120.0, 42);
     let cfg = sim_cfg(42);
-    let opts = TelemetryOpts::new(cfg.serving.slo);
+    let mut opts = TelemetryOpts::new(cfg.serving.slo);
+    opts.watch = Some(ooco::watch::WatchParams::new(cfg.serving.slo));
     let res = simulate_observed(&trace, &cfg, Some(opts), true);
     let mut out = sim::result_json(&cfg, &res);
     out.set("meta", obs::meta_json(cfg.seed, "test-config", 0.5));
@@ -260,6 +261,15 @@ fn openmetrics_exposition_is_well_formed() {
     );
     assert!(text.contains("ooco_timeline_"), "timeline section missing");
     assert!(text.contains("ooco_profile_coverage "), "profile missing");
+    // Incident-engine families (§3.12): present and still well-formed.
+    assert!(
+        text.contains("ooco_incidents_active "),
+        "incident active gauge missing"
+    );
+    assert!(
+        text.contains("ooco_burn_rate{class=\"online-ttft\",window=\"fast\"}"),
+        "burn-rate family missing"
+    );
 }
 
 // ------------------------------------------------------- 5. bench suite

@@ -1,0 +1,207 @@
+//! Incident-engine property tests (DESIGN.md §3.12):
+//!
+//! 1. **Determinism**: a faulted fleet run produces a byte-identical
+//!    incident ledger under the same seed, and the crash window is
+//!    covered by a fault incident on the crashed replica.
+//! 2. **Hysteresis**: a trace oscillating around the burn threshold
+//!    opens exactly one incident — the half-threshold band plus the
+//!    clear-tick cooldown prevent flapping.
+//! 3. **Conservation**: one sustained violation burst maps to exactly
+//!    one covering burn incident (opened inside the burst, closed after
+//!    the fast window drains).
+//! 4. **Pure observer**: arming the watchdog changes nothing but the
+//!    `incidents` key — the rest of the composed `--json-out` object is
+//!    byte-identical to a watchdog-less run.
+
+use ooco::config::ServingConfig;
+use ooco::coordinator::Policy;
+use ooco::fleet::{simulate_fleet_traced, FleetConfig};
+use ooco::sim::{simulate_traced, SimConfig};
+use ooco::telemetry::TelemetryOpts;
+use ooco::trace::datasets::DatasetProfile;
+use ooco::trace::generator::{offline_trace, online_trace};
+use ooco::trace::Trace;
+use ooco::util::json::Json;
+use ooco::watch::{WatchParams, Watchdog};
+
+fn mixed_trace(duration: f64, seed: u64) -> Trace {
+    let online =
+        online_trace(DatasetProfile::azure_conv(), 0.6, duration, seed);
+    let offline =
+        offline_trace(DatasetProfile::ooc_offline(), 1.5, duration, seed + 1);
+    online.merge(offline)
+}
+
+/// Faulted 2-replica fleet: same seed, byte-identical ledger; the crash
+/// window is covered by a fault incident pinned to the crashed replica.
+#[test]
+fn faulted_fleet_ledger_is_deterministic_and_covers_the_crash() {
+    let trace = mixed_trace(120.0, 7);
+    let mut serving = ServingConfig::preset_7b();
+    serving.cluster.relaxed_instances = 1;
+    serving.cluster.strict_instances = 1;
+    let mut sim = SimConfig::new(serving, Policy::Ooco);
+    sim.seed = 11;
+    let mut cfg = FleetConfig::new(sim);
+    cfg.fleet = "2".parse().unwrap();
+    cfg.fault = "crash(at=40,replica=0,pool=relaxed,inst=0,down=40)"
+        .parse()
+        .unwrap();
+
+    let dump = || {
+        let mut opts = TelemetryOpts::new(cfg.sim.serving.slo);
+        opts.watch = Some(WatchParams::new(cfg.sim.serving.slo));
+        let tel = simulate_fleet_traced(&trace, &cfg, Some(opts))
+            .telemetry
+            .expect("telemetry requested");
+        tel.incidents.expect("watchdog armed").to_pretty()
+    };
+    let a = dump();
+    let b = dump();
+    assert_eq!(a, b, "same seed must reproduce a byte-identical ledger");
+
+    let ledger = Json::parse(&a).expect("ledger parses");
+    assert!(
+        ledger.get("total").as_f64().unwrap_or(0.0) >= 1.0,
+        "crashed fleet recorded no incidents"
+    );
+    let rows = ledger.get("incidents").as_arr().expect("incident rows");
+    let fault = rows
+        .iter()
+        .find(|r| r.get("kind").as_str() == Some("fault"))
+        .expect("crash produced no fault incident");
+    assert_eq!(fault.get("replica").as_f64(), Some(0.0));
+    assert_eq!(fault.get("cause").as_str(), Some("fault"));
+    let opened = fault.get("opened_at").as_f64().expect("opened_at");
+    let closed =
+        fault.get("closed_at").as_f64().unwrap_or(f64::INFINITY);
+    // The crash window is [40, 80]; the incident must overlap it.
+    assert!(
+        opened < 80.0 && closed > 40.0,
+        "fault incident [{opened}, {closed}] misses the crash window \
+         [40, 80]"
+    );
+}
+
+/// Drive a watchdog directly with completions at 1/s. `violated(t)`
+/// decides the TTFT outcome; TPOT always passes. Ticks ride along at
+/// the same cadence.
+fn drive(
+    until_s: usize,
+    violated: impl Fn(usize) -> bool,
+) -> Vec<ooco::watch::Incident> {
+    let serving = ServingConfig::preset_7b();
+    let params = WatchParams::new(serving.slo);
+    let mut w = Watchdog::new(params, &serving);
+    for t in 0..until_s {
+        let now = t as f64;
+        w.on_online_complete(now, !violated(t), true);
+        w.on_tick(now);
+    }
+    w.finish(until_s as f64).incidents
+}
+
+/// A trace oscillating around the open threshold must not flap: the
+/// half-threshold hysteresis band keeps the one incident open while the
+/// burn hovers, and the cooldown closes it only after sustained calm.
+#[test]
+fn boundary_oscillation_opens_exactly_one_incident() {
+    // Violate every other second for 300 s (fast burn oscillates around
+    // 0.5/budget ≈ 16x — well above threshold, but the *instantaneous*
+    // reading swings tick to tick), then go fully clean for 120 s.
+    let incidents =
+        drive(420, |t| t < 300 && t % 2 == 0);
+    let burns: Vec<_> = incidents
+        .iter()
+        .filter(|i| i.kind == ooco::watch::IncidentKind::SloBurn)
+        .collect();
+    assert_eq!(
+        burns.len(),
+        1,
+        "oscillating trace flapped into {} incidents",
+        burns.len()
+    );
+    let inc = burns[0];
+    assert!(
+        inc.closed_at.is_some(),
+        "incident must close once the trace goes clean"
+    );
+    assert!(
+        inc.closed_at.unwrap() > 300.0,
+        "incident closed at {:?} while the oscillation was still hot",
+        inc.closed_at
+    );
+}
+
+/// One sustained violation burst maps to exactly one covering incident:
+/// opened inside the burst, closed only after the fast window drains.
+#[test]
+fn sustained_burst_is_covered_by_exactly_one_incident() {
+    let incidents = drive(400, |t| (100..200).contains(&t));
+    let burns: Vec<_> = incidents
+        .iter()
+        .filter(|i| i.kind == ooco::watch::IncidentKind::SloBurn)
+        .collect();
+    assert_eq!(
+        burns.len(),
+        1,
+        "one burst must map to one incident, got {}",
+        burns.len()
+    );
+    let inc = burns[0];
+    assert!(
+        (100.0..200.0).contains(&inc.opened_at),
+        "opened at {} outside the burst [100, 200)",
+        inc.opened_at
+    );
+    let closed = inc.closed_at.expect("burst incident must close");
+    assert!(
+        closed >= 200.0,
+        "closed at {closed} before the burst ended"
+    );
+    assert_eq!(inc.class, Some("online"));
+    assert_eq!(inc.metric, Some("ttft"));
+}
+
+/// Arming the watchdog must not perturb the run: the composed
+/// `--json-out` object minus the `incidents` key is byte-identical to a
+/// watchdog-less run, and the watchdog-less object has no such key.
+#[test]
+fn armed_watchdog_is_a_pure_observer() {
+    let trace = mixed_trace(90.0, 67);
+    let mut cfg =
+        SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+    cfg.seed = 29;
+
+    let run = |watch: bool| {
+        let mut opts = TelemetryOpts::new(cfg.serving.slo);
+        if watch {
+            opts.watch = Some(WatchParams::new(cfg.serving.slo));
+        }
+        let res = simulate_traced(&trace, &cfg, Some(opts));
+        ooco::sim::result_json(&cfg, &res).to_pretty()
+    };
+    let off = run(false);
+    let on = run(true);
+
+    let mut on_json = Json::parse(&on).expect("watch-on result parses");
+    if let Json::Obj(m) = &mut on_json {
+        assert!(
+            m.remove("incidents").is_some(),
+            "armed run must emit an incidents key"
+        );
+    } else {
+        panic!("result is not an object");
+    }
+    assert_eq!(
+        on_json.to_pretty(),
+        off,
+        "watchdog perturbed the run beyond the incidents key"
+    );
+
+    let off_json = Json::parse(&off).expect("watch-off result parses");
+    assert!(
+        off_json.get("incidents").as_obj().is_none(),
+        "watchdog-less run must not emit an incidents key"
+    );
+}
