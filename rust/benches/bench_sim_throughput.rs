@@ -2,8 +2,13 @@
 //! a 100k-request co-locate trace, with chunking on and off — the metric
 //! that keeps simulator speed on the scaling trajectory (the hot-loop
 //! scratch-buffer work in `scheduler::core` lands here) — plus a
-//! flight-recorder point that prices telemetry against the disabled
-//! recorder the first two runs pay (DESIGN.md §3.10).
+//! calendar-vs-binary-heap queue comparison row (same run, swapped event
+//! queue, byte-identical report — DESIGN.md §3.13), a million-request
+//! scaling point (same steady-state load over 10x the span; near-constant
+//! sim req/s is the calendar queue's O(1)-amortized claim made visible;
+//! skip with `--million false`), and a flight-recorder point that prices
+//! telemetry against the disabled recorder the first two runs pay
+//! (DESIGN.md §3.10).
 //!
 //! Run: `cargo bench --bench bench_sim_throughput` (plain binary, no
 //! harness).
@@ -12,7 +17,9 @@ use std::time::Instant;
 
 use ooco::config::{ChunkMode, ServingConfig};
 use ooco::coordinator::Policy;
-use ooco::sim::{simulate, simulate_traced, SimConfig};
+use ooco::sim::{
+    simulate, simulate_queued, simulate_traced, QueueKind, SimConfig,
+};
 use ooco::telemetry::TelemetryOpts;
 use ooco::trace::datasets::{DatasetProfile, LengthProfile};
 use ooco::trace::generator::{offline_trace, online_trace};
@@ -34,6 +41,32 @@ fn trace_100k() -> Trace {
     let online = online_trace(online_ds, 15.0, duration, 4242);
     let offline = offline_trace(offline_ds, 10.0, duration, 4243);
     online.merge(offline)
+}
+
+/// ~1M requests: the same steady-state load as [`trace_100k`] over 10x
+/// the span, so the scaling point isolates queue/metrics growth effects
+/// (a longer run, not a denser one).
+fn trace_1m() -> Trace {
+    let duration = 40_000.0;
+    let mut online_ds = DatasetProfile::azure_conv();
+    online_ds.prompt = LengthProfile::new(900.0, 0.8, 32, 8192);
+    online_ds.output = LengthProfile::new(24.0, 0.6, 1, 96);
+    let mut offline_ds = DatasetProfile::ooc_offline();
+    offline_ds.prompt = LengthProfile::new(1100.0, 0.8, 32, 8192);
+    offline_ds.output = LengthProfile::new(32.0, 0.6, 1, 128);
+    let online = online_trace(online_ds, 15.0, duration, 4252);
+    let offline = offline_trace(offline_ds, 10.0, duration, 4253);
+    online.merge(offline)
+}
+
+fn bench_cfg() -> SimConfig {
+    let mut serving = ServingConfig::preset_7b();
+    serving.cluster.relaxed_instances = 4;
+    serving.cluster.strict_instances = 4;
+    serving.chunk_tokens = ChunkMode::Auto;
+    let mut cfg = SimConfig::new(serving, Policy::Ooco);
+    cfg.drain_s = 600.0;
+    cfg
 }
 
 fn main() {
@@ -81,20 +114,72 @@ fn main() {
         }
     }
 
+    let (base_wall, base_report) =
+        chunked_baseline.expect("chunked point ran");
+
+    // Calendar-vs-heap comparison (DESIGN.md §3.13): the same chunked
+    // run on the explicit binary-heap event queue. Both queues honor the
+    // identical (time, insertion-order) contract, so the report must be
+    // byte-identical — the only thing a queue swap may change is wall
+    // time, and the ratio lands in the artifact.
+    {
+        let cfg = bench_cfg();
+        let t0 = Instant::now();
+        let res =
+            simulate_queued(&trace, &cfg, None, false, QueueKind::BinaryHeap);
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            base_report,
+            res.report.to_json().to_string(),
+            "queue swap perturbed the simulation"
+        );
+        let calendar_speedup = wall / base_wall.max(1e-9);
+        println!(
+            "{:>16}: {wall:6.2} s wall | {:9.0} sim req/s | calendar is {calendar_speedup:.2}x faster",
+            "binary heap",
+            trace.len() as f64 / wall.max(1e-9),
+        );
+        points.push(Json::obj(vec![
+            ("label", Json::Str("binary heap".into())),
+            ("wall_s", Json::Num(wall)),
+            (
+                "sim_req_per_s",
+                Json::Num(trace.len() as f64 / wall.max(1e-9)),
+            ),
+            ("calendar_speedup", Json::Num(calendar_speedup)),
+        ]));
+    }
+
+    // Million-request scaling point: near-constant sim req/s from 100k
+    // to 1M is the O(1)-amortized event-queue + streaming-metrics claim.
+    if args.bool("million", true) {
+        let t1m = trace_1m();
+        let cfg = bench_cfg();
+        let t0 = Instant::now();
+        let res = simulate(&t1m, &cfg);
+        let wall = t0.elapsed().as_secs_f64();
+        let req_per_s = t1m.len() as f64 / wall.max(1e-9);
+        println!(
+            "{:>16}: {wall:6.2} s wall | {req_per_s:9.0} sim req/s | {} requests | {}",
+            "chunked 1M",
+            t1m.len(),
+            res.report.summary_line()
+        );
+        points.push(Json::obj(vec![
+            ("label", Json::Str("chunked 1M".into())),
+            ("requests", Json::Num(t1m.len() as f64)),
+            ("wall_s", Json::Num(wall)),
+            ("sim_req_per_s", Json::Num(req_per_s)),
+        ]));
+    }
+
     // Flight-recorder overhead (DESIGN.md §3.10). The runs above pay the
     // disabled recorder — a single `Option` check per executor callback —
     // so their `sim_req_per_s` is the cross-commit ≤3% no-op guard (the
     // CI artifact diff). Here the same chunked config runs once more with
     // the flight recorder attached: the recorder must be a pure observer
     // (byte-identical report), and its full cost lands in the artifact.
-    let (base_wall, base_report) =
-        chunked_baseline.expect("chunked point ran");
-    let mut serving = ServingConfig::preset_7b();
-    serving.cluster.relaxed_instances = 4;
-    serving.cluster.strict_instances = 4;
-    serving.chunk_tokens = ChunkMode::Auto;
-    let mut cfg = SimConfig::new(serving, Policy::Ooco);
-    cfg.drain_s = 600.0;
+    let cfg = bench_cfg();
     let opts = TelemetryOpts::new(cfg.serving.slo);
     let t0 = Instant::now();
     let traced = simulate_traced(&trace, &cfg, Some(opts));

@@ -1,0 +1,89 @@
+//! Parallel sweep-driver bench (DESIGN.md §3.13): the same offline-load
+//! sweep run sequentially and with `--jobs 4`, asserting (1) the merged
+//! curves are byte-identical — worker scheduling must never leak into
+//! results — and (2) the fan-out actually pays: >2x wall-clock speedup
+//! whenever the host exposes at least 4 cores (skipped otherwise, so the
+//! bench stays meaningful on small CI runners).
+//!
+//! Run: `cargo bench --bench bench_sweep_parallel` (plain binary, no
+//! harness).
+
+use std::time::Instant;
+
+use ooco::config::ServingConfig;
+use ooco::coordinator::{Ablation, Policy};
+use ooco::sweep::{curve_to_json, offline_sweep_parallel, SweepConfig};
+use ooco::trace::datasets::DatasetProfile;
+use ooco::trace::PrefixProfile;
+use ooco::util::cli::Args;
+use ooco::util::json::Json;
+
+fn main() {
+    let args = Args::parse_env();
+    let serving = ServingConfig::preset_7b();
+    let sweep = SweepConfig {
+        duration_s: args.f64("duration", 480.0),
+        seed: 42,
+        ablation: Ablation::full(),
+        offline_prefix: PrefixProfile::None,
+    };
+    // Descending load levels: the expensive points start first, so the
+    // atomic-cursor workers pack the makespan tightly.
+    let levels = [8.0, 6.0, 4.0, 3.0, 2.0, 1.0, 0.5, 0.0];
+    let run = |jobs: usize| {
+        let t0 = Instant::now();
+        let pts = offline_sweep_parallel(
+            &serving,
+            Policy::Ooco,
+            &DatasetProfile::azure_conv(),
+            0.4,
+            &DatasetProfile::ooc_offline(),
+            &levels,
+            &sweep,
+            jobs,
+        );
+        (t0.elapsed().as_secs_f64(), pts)
+    };
+
+    let (wall_seq, seq) = run(1);
+    let (wall_par, par) = run(4);
+    let seq_json = curve_to_json("sweep", &seq);
+    let par_json = curve_to_json("sweep", &par);
+    assert_eq!(
+        seq_json.to_string(),
+        par_json.to_string(),
+        "--jobs 4 curve diverged from --jobs 1"
+    );
+
+    let speedup = wall_seq / wall_par.max(1e-9);
+    println!(
+        "{} levels x {:.0} s sweep | sequential {wall_seq:6.2} s | 4 jobs {wall_par:6.2} s | speedup {speedup:.2}x",
+        levels.len(),
+        sweep.duration_s,
+    );
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if cores >= 4 {
+        assert!(
+            speedup > 2.0,
+            "expected >2x speedup at --jobs 4 on {cores} cores, got {speedup:.2}x"
+        );
+    } else {
+        println!("only {cores} cores visible; speedup assert skipped");
+    }
+
+    if let Some(path) = args.opt_str("json-out") {
+        let out = Json::obj(vec![
+            ("bench", Json::Str("sweep_parallel".into())),
+            ("levels", Json::Num(levels.len() as f64)),
+            ("cores", Json::Num(cores as f64)),
+            ("wall_seq_s", Json::Num(wall_seq)),
+            ("wall_par_s", Json::Num(wall_par)),
+            ("speedup", Json::Num(speedup)),
+            ("curve", par_json),
+        ]);
+        std::fs::write(path, out.to_pretty()).expect("write json");
+        println!("wrote {path}");
+    }
+}

@@ -3,7 +3,9 @@
 //!
 //! Each replica is a full [`SchedulerCore`] cluster — the same §3.4
 //! decision loop the single-cluster simulator and the real engine run.
-//! The fleet owns a discrete-event heap whose events carry a replica tag;
+//! The fleet owns a discrete-event time queue (the shared
+//! [`crate::scheduler::TimeQueue`] — calendar by default, heap on
+//! request) whose events carry a replica tag;
 //! replica-local events (arrivals, step ends, transfer chunks) replay the
 //! [`crate::scheduler::VirtualExecutor`] semantics verbatim, and three
 //! fleet-only kinds inject the fault model: `CrashNotice` (spot-instance
@@ -19,14 +21,13 @@
 //! `tests/fleet_properties.rs` the same way the scheduler differential
 //! tests pin the executor pair.
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
-
 use crate::config::{CrashEvent, FaultPool, FaultSpec, FleetSpec, RoutePolicy};
 use crate::metrics::{FleetReport, Recorder, Report};
 use crate::obs::{self, EventClass, ProfileReport, Subsystem};
 use crate::request::{Class, RequestId};
-use crate::scheduler::{Action, InstanceRef, JobId, SchedulerCore};
+use crate::scheduler::{
+    Action, InstanceRef, JobId, QueueKind, SchedulerCore, TimeQueue,
+};
 use crate::sim::SimConfig;
 use crate::telemetry::{TelemetryOpts, TelemetryOut, TraceRecorder};
 use crate::trace::Trace;
@@ -79,17 +80,20 @@ pub struct FleetResult {
     /// Flight-recorder output (DESIGN.md §3.10); `None` unless the run
     /// was traced via [`simulate_fleet_traced`].
     pub telemetry: Option<TelemetryOut>,
-    /// Fleet-heap events delivered (arrivals, steps, chunks, faults).
+    /// Fleet-queue events delivered (arrivals, steps, chunks, faults).
     pub events: u64,
     /// Self-profiler breakdown (DESIGN.md §3.11). `None` unless the run
     /// was profiled via [`simulate_fleet_observed`].
     pub profile: Option<ProfileReport>,
 }
 
-// ------------------------------------------------------------- event heap
+// ------------------------------------------------------------ event queue
 
 /// Fleet event kinds: the three replica-local kinds of
 /// `scheduler::EventKind` with a replica tag, plus the fault triple.
+/// Ordering rides on the shared [`TimeQueue`] — the exact
+/// (time, insertion-tie) contract of `scheduler::EventQueue`, so a
+/// single-replica zero-fault fleet replays the same schedule.
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum FleetEventKind {
     Arrival(RequestId),
@@ -99,40 +103,6 @@ enum FleetEventKind {
     CrashNotice { replica: usize, inst: InstanceRef },
     Crash { replica: usize, inst: InstanceRef, down_s: f64 },
     Recover { replica: usize, inst: InstanceRef },
-}
-
-#[derive(Debug, Clone, Copy)]
-struct FleetEvent {
-    time: f64,
-    tie: u64,
-    kind: FleetEventKind,
-}
-
-impl PartialEq for FleetEvent {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.tie == other.tie
-    }
-}
-
-impl Eq for FleetEvent {}
-
-impl Ord for FleetEvent {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse order: BinaryHeap is a max-heap, we want earliest first —
-        // the exact (time, insertion-tie) order of `scheduler::EventQueue`,
-        // so a single-replica zero-fault fleet replays the same schedule.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
-            .then(other.tie.cmp(&self.tie))
-    }
-}
-
-impl PartialOrd for FleetEvent {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
 }
 
 // ------------------------------------------------------------ fleet router
@@ -243,8 +213,7 @@ struct DownWindow {
 pub struct Fleet {
     cfg: FleetConfig,
     replicas: Vec<SchedulerCore>,
-    heap: BinaryHeap<FleetEvent>,
-    next_tie: u64,
+    queue: TimeQueue<FleetEventKind>,
     now: f64,
     horizon: f64,
     events: u64,
@@ -268,6 +237,17 @@ pub struct Fleet {
 
 impl Fleet {
     pub fn new(trace: &Trace, cfg: &FleetConfig) -> Self {
+        Self::new_with_queue(trace, cfg, QueueKind::Calendar)
+    }
+
+    /// Like [`Fleet::new`] but on an explicit queue implementation —
+    /// `tests/queue_differential.rs` drives both kinds over identical
+    /// faulted fleets to pin the ordering contract.
+    pub fn new_with_queue(
+        trace: &Trace,
+        cfg: &FleetConfig,
+        queue_kind: QueueKind,
+    ) -> Self {
         let _p = obs::scope(Subsystem::Setup);
         assert!(cfg.fleet.replicas >= 1, "fleet needs at least one replica");
         let n = cfg.fleet.replicas;
@@ -281,17 +261,11 @@ impl Fleet {
             * (replicas[0].cluster.relaxed.len()
                 + replicas[0].cluster.strict.len());
 
-        let mut heap = BinaryHeap::new();
-        let mut next_tie = 0u64;
+        let mut queue = TimeQueue::with_kind(queue_kind);
         // Arrivals first, in trace order — ties 0..len match the
         // single-cluster `VirtualExecutor` exactly.
         for r in &trace.requests {
-            heap.push(FleetEvent {
-                time: r.arrival,
-                tie: next_tie,
-                kind: FleetEventKind::Arrival(r.id),
-            });
-            next_tie += 1;
+            queue.push(r.arrival, FleetEventKind::Arrival(r.id));
         }
 
         let horizon = trace.duration() + cfg.sim.drain_s;
@@ -308,8 +282,7 @@ impl Fleet {
             router: FleetRouter::new(cfg.fleet.route, n, cfg.sim.seed),
             cfg: cfg.clone(),
             replicas,
-            heap,
-            next_tie,
+            queue,
             now: 0.0,
             horizon,
             events: 0,
@@ -329,10 +302,7 @@ impl Fleet {
 
     fn push(&mut self, time: f64, kind: FleetEventKind) {
         let _p = obs::scope(Subsystem::HeapPush);
-        debug_assert!(time.is_finite(), "non-finite fleet event time");
-        let tie = self.next_tie;
-        self.next_tie += 1;
-        self.heap.push(FleetEvent { time, tie, kind });
+        self.queue.push(time, kind);
     }
 
     /// Schedule the fault plan: explicit [`CrashEvent`]s verbatim, then a
@@ -412,7 +382,7 @@ impl Fleet {
     /// Replay one core's action stream on the fleet clock — the
     /// `VirtualExecutor::apply` semantics with a replica tag — and
     /// discharge router load on completions.
-    fn apply(&mut self, replica: usize, actions: Vec<Action>) {
+    fn apply(&mut self, replica: usize, mut actions: Vec<Action>) {
         self.telemetry.observe(self.now, replica, &actions);
         for a in &actions {
             match *a {
@@ -465,8 +435,11 @@ impl Fleet {
             }
         }
         if let Some(log) = &mut self.log {
-            log.extend(actions.into_iter().map(|a| (replica, a)));
+            // `drain` moves the items but keeps the vec's capacity for
+            // the recycling below.
+            log.extend(actions.drain(..).map(|a| (replica, a)));
         }
+        self.replicas[replica].recycle_actions(actions);
     }
 
     /// Replicas whose relaxed pool (the admission side) has a live
@@ -662,7 +635,7 @@ impl Fleet {
         loop {
             let ev = {
                 let _p = obs::scope(Subsystem::HeapPop);
-                match self.heap.pop() {
+                match self.queue.pop() {
                     Some(ev) => ev,
                     None => break,
                 }
@@ -860,7 +833,7 @@ pub fn simulate_fleet_traced(
     cfg: &FleetConfig,
     telemetry: Option<TelemetryOpts>,
 ) -> FleetResult {
-    simulate_fleet_observed(trace, cfg, telemetry, false)
+    simulate_fleet_queued(trace, cfg, telemetry, false, QueueKind::Calendar)
 }
 
 /// [`simulate_fleet_traced`] with the self-profiler optionally armed
@@ -873,10 +846,24 @@ pub fn simulate_fleet_observed(
     telemetry: Option<TelemetryOpts>,
     profile: bool,
 ) -> FleetResult {
+    simulate_fleet_queued(trace, cfg, telemetry, profile, QueueKind::Calendar)
+}
+
+/// [`simulate_fleet_observed`] on an explicit time-queue implementation.
+/// Both kinds honor the identical ordering contract, so every
+/// deterministic output field is byte-identical across them — the fleet
+/// half of the queue-swap differential suite.
+pub fn simulate_fleet_queued(
+    trace: &Trace,
+    cfg: &FleetConfig,
+    telemetry: Option<TelemetryOpts>,
+    profile: bool,
+    queue_kind: QueueKind,
+) -> FleetResult {
     if profile {
         obs::enable();
     }
-    let mut fleet = Fleet::new(trace, cfg);
+    let mut fleet = Fleet::new_with_queue(trace, cfg, queue_kind);
     if let Some(opts) = telemetry {
         let mut rec = TraceRecorder::flight(opts);
         rec.set_horizon(fleet.horizon);

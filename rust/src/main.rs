@@ -94,6 +94,7 @@ USAGE: ooco <serve|simulate|sweep|bench|roofline|trace|analyze> [--flags]
             [--pool-policy static] [--relaxed 1 --strict 1]
             [--prefix-profile shared-system|few-shot|agentic]
             [--prefix-cache true|false]
+            [--jobs N]  (parallel load levels; output identical to --jobs 1)
             [--json-out curve.json]
   bench     [--scale 1.0] [--seed 42] [--json-out BENCH_sim.json]
             (standardized 4-scenario perf suite, self-profiled; emits the
@@ -391,7 +392,7 @@ fn serving_from_args(args: &Args) -> anyhow::Result<ServingConfig> {
 /// SLO-attainment-vs-load curve: sweep offline QPS at a fixed online rate
 /// and emit the machine-readable curve for cross-run comparisons.
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
-    use ooco::sweep::{curve_to_json, offline_sweep, SweepConfig};
+    use ooco::sweep::{curve_to_json, offline_sweep_parallel, SweepConfig};
 
     let serving = serving_from_args(args)?;
     let policy = args.parse_flag("policy", Policy::Ooco)?;
@@ -410,8 +411,9 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             ooco::trace::PrefixProfile::None,
         )?,
     };
+    let jobs = args.usize("jobs", 1).max(1);
     let started = Instant::now();
-    let points = offline_sweep(
+    let points = offline_sweep_parallel(
         &serving,
         policy,
         &online_ds,
@@ -419,6 +421,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         &prompt.apply(&DatasetProfile::ooc_offline()),
         &qps,
         &sweep_cfg,
+        jobs,
     );
     let wall_s = started.elapsed().as_secs_f64();
     for p in &points {

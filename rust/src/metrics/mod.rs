@@ -596,7 +596,10 @@ impl Report {
 /// [`LatencySummary`] histograms — so multi-million-request traces never
 /// materialize a `Vec<f64>` of latencies (DESIGN.md §3.10). The SLO is
 /// fixed at construction because violation classification happens at
-/// ingest, not at report time.
+/// ingest, not at report time. Under `cfg(test)` the recorder keeps the
+/// raw samples it would otherwise discard and [`Recorder::report`]
+/// re-proves the streamed summaries against an exact sorted replay
+/// (DESIGN.md §3.13).
 #[derive(Debug, Clone)]
 pub struct Recorder {
     slo: SloSpec,
@@ -609,6 +612,59 @@ pub struct Recorder {
     offline_finished: usize,
     offline_tokens: f64,
     offline_evictions: u64,
+    /// Exact-replay mirrors of the streaming histograms' inputs.
+    #[cfg(test)]
+    ttft_replay: Vec<f64>,
+    #[cfg(test)]
+    tpot_replay: Vec<f64>,
+}
+
+/// Check a streamed [`Summary`] against the raw samples it was built
+/// from: exact count/min/max, near-exact moments, and quantiles within
+/// the documented one-bucket relative width of the same-rank order
+/// statistic (the streamed estimator's own rank convention, so the bound
+/// is a theorem of the bucket layout, not a statistical hope).
+#[cfg(test)]
+fn assert_streamed_matches_replay(
+    name: &str,
+    replay: &[f64],
+    streamed: &Summary,
+) {
+    assert_eq!(streamed.count, replay.len(), "{name}: sample count");
+    if replay.is_empty() {
+        return;
+    }
+    let mut sorted = replay.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    assert_eq!(streamed.min, sorted[0], "{name}: exact min");
+    assert_eq!(streamed.max, sorted[sorted.len() - 1], "{name}: exact max");
+    let exact = Summary::of(&sorted);
+    let moment_tol = 1e-6 * exact.mean.abs().max(1.0);
+    assert!(
+        (streamed.mean - exact.mean).abs() <= moment_tol,
+        "{name}: mean {} vs exact {}",
+        streamed.mean,
+        exact.mean
+    );
+    assert!(
+        (streamed.std - exact.std).abs() <= moment_tol,
+        "{name}: std {} vs exact {}",
+        streamed.std,
+        exact.std
+    );
+    let tol = LatencySummary::bucket_relative_width();
+    for (p, est) in
+        [(50.0, streamed.p50), (90.0, streamed.p90), (99.0, streamed.p99)]
+    {
+        let rank =
+            ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+        let stat = sorted[rank - 1];
+        assert!(
+            (est - stat).abs() <= stat.abs() * tol + 1e-7,
+            "{name} p{p}: streamed {est} vs rank statistic {stat} \
+             (tol {tol})"
+        );
+    }
 }
 
 impl Recorder {
@@ -624,6 +680,10 @@ impl Recorder {
             offline_finished: 0,
             offline_tokens: 0.0,
             offline_evictions: 0,
+            #[cfg(test)]
+            ttft_replay: Vec::new(),
+            #[cfg(test)]
+            tpot_replay: Vec::new(),
         }
     }
 
@@ -644,9 +704,13 @@ impl Recorder {
                 }
                 if let Some(t) = rec.ttft {
                     self.ttft.record(t);
+                    #[cfg(test)]
+                    self.ttft_replay.push(t);
                 }
                 if let Some(t) = rec.avg_tpot {
                     self.tpot.record(t);
+                    #[cfg(test)]
+                    self.tpot_replay.push(t);
                 }
             }
             Class::Offline => {
@@ -669,7 +733,7 @@ impl Recorder {
     /// used for throughput denominators.
     pub fn report(&self, duration_s: f64) -> Report {
         let dur = duration_s.max(1e-9);
-        Report {
+        let report = Report {
             duration_s,
             online_total: self.online_total,
             online_finished: self.online_finished,
@@ -686,7 +750,21 @@ impl Recorder {
             offline_token_throughput: self.offline_tokens / dur,
             offline_request_throughput: self.offline_finished as f64 / dur,
             offline_evictions: self.offline_evictions,
+        };
+        #[cfg(test)]
+        {
+            assert_streamed_matches_replay(
+                "ttft",
+                &self.ttft_replay,
+                &report.ttft,
+            );
+            assert_streamed_matches_replay(
+                "tpot",
+                &self.tpot_replay,
+                &report.tpot,
+            );
         }
+        report
     }
 }
 
@@ -906,6 +984,24 @@ mod tests {
             ..rep
         };
         assert!(off.summary_line().contains("exclusive"));
+    }
+
+    #[test]
+    fn streaming_report_matches_exact_replay() {
+        // Log-spread TTFTs over three decades plus oscillating TPOTs —
+        // `report` itself asserts the streamed summaries sit within one
+        // bucket of the exact sorted replay.
+        let slo = SloSpec::default();
+        let mut rec = Recorder::new(&slo);
+        for i in 0..2000u64 {
+            let ttft = 1e-3 * 10f64.powf(3.0 * (i as f64) / 2000.0);
+            let tpot = 0.01 + (i as f64).sin().abs() * 0.2;
+            rec.push(finished_online(i, ttft, tpot, 64));
+        }
+        let rep = rec.report(500.0);
+        assert_eq!(rep.online_total, 2000);
+        assert_eq!(rep.ttft.count, 2000);
+        assert!(rep.ttft.p99 > rep.ttft.p50);
     }
 
     #[test]

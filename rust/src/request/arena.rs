@@ -1,0 +1,290 @@
+//! Generational arena for request-lifetime state (DESIGN.md §3.13).
+//!
+//! A slot-indexed store whose handles ([`GenId`]) carry a generation
+//! counter: removing an entry bumps its slot's generation, so any handle
+//! issued before the removal goes *stale* — `get`/`get_mut` return `None`
+//! instead of silently aliasing whatever later took the slot. This is the
+//! structural version of the staleness guards the event loops rely on:
+//! a step-end or transfer event that outlives its step compares sequence
+//! ids today, and an arena handle that outlives its entry compares
+//! generations here. Both make index reuse (pool flips, crash/recover
+//! churn) safe by construction.
+//!
+//! The free list recycles slots in LIFO order, so churn-heavy workloads
+//! (millions of requests entering and leaving residency) run at a small
+//! constant live footprint instead of growing the backing vec forever.
+
+/// Generational handle into an [`Arena`]. `index` names the slot,
+/// `generation` must match the slot's current generation to deref.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GenId {
+    index: u32,
+    generation: u32,
+}
+
+impl GenId {
+    /// Slot index (stable for the entry's lifetime).
+    pub fn index(self) -> u32 {
+        self.index
+    }
+
+    /// Generation the handle was issued under.
+    pub fn generation(self) -> u32 {
+        self.generation
+    }
+}
+
+#[derive(Debug)]
+struct Slot<T> {
+    generation: u32,
+    value: Option<T>,
+}
+
+/// Generational slot arena: O(1) insert/get/remove, stale handles read
+/// as absent, slots recycle through a LIFO free list.
+#[derive(Debug)]
+pub struct Arena<T> {
+    slots: Vec<Slot<T>>,
+    free: Vec<u32>,
+    len: usize,
+}
+
+impl<T> Default for Arena<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Arena<T> {
+    pub fn new() -> Self {
+        Arena {
+            slots: Vec::new(),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Arena {
+            slots: Vec::with_capacity(cap),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Slots ever allocated (live + free).
+    pub fn capacity_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Store `value`, reusing a freed slot when one exists.
+    pub fn insert(&mut self, value: T) -> GenId {
+        self.len += 1;
+        if let Some(index) = self.free.pop() {
+            let slot = &mut self.slots[index as usize];
+            debug_assert!(slot.value.is_none(), "free-listed slot occupied");
+            slot.value = Some(value);
+            return GenId {
+                index,
+                generation: slot.generation,
+            };
+        }
+        let index = u32::try_from(self.slots.len())
+            .expect("arena exceeds u32 slot space");
+        self.slots.push(Slot {
+            generation: 0,
+            value: Some(value),
+        });
+        GenId {
+            index,
+            generation: 0,
+        }
+    }
+
+    /// Is `id` still the live entry it was issued for?
+    pub fn contains(&self, id: GenId) -> bool {
+        self.slots
+            .get(id.index as usize)
+            .map(|s| s.generation == id.generation && s.value.is_some())
+            .unwrap_or(false)
+    }
+
+    /// Read through the handle; `None` when stale (removed, or the slot
+    /// was reused under a newer generation).
+    pub fn get(&self, id: GenId) -> Option<&T> {
+        let slot = self.slots.get(id.index as usize)?;
+        if slot.generation != id.generation {
+            return None;
+        }
+        slot.value.as_ref()
+    }
+
+    pub fn get_mut(&mut self, id: GenId) -> Option<&mut T> {
+        let slot = self.slots.get_mut(id.index as usize)?;
+        if slot.generation != id.generation {
+            return None;
+        }
+        slot.value.as_mut()
+    }
+
+    /// Remove the entry behind `id`, bumping the slot's generation so
+    /// every outstanding copy of `id` goes stale. `None` when already
+    /// stale — removal is idempotent per generation.
+    pub fn remove(&mut self, id: GenId) -> Option<T> {
+        let slot = self.slots.get_mut(id.index as usize)?;
+        if slot.generation != id.generation {
+            return None;
+        }
+        let value = slot.value.take()?;
+        slot.generation = slot.generation.wrapping_add(1);
+        self.free.push(id.index);
+        self.len -= 1;
+        Some(value)
+    }
+
+    /// Iterate live entries in slot order.
+    pub fn iter(&self) -> impl Iterator<Item = (GenId, &T)> {
+        self.slots.iter().enumerate().filter_map(|(i, s)| {
+            s.value.as_ref().map(|v| {
+                (
+                    GenId {
+                        index: i as u32,
+                        generation: s.generation,
+                    },
+                    v,
+                )
+            })
+        })
+    }
+}
+
+/// Bounded LIFO pool of cleared-but-capacity-retaining buffers — the
+/// allocation-recycling companion the scheduler core uses for its action
+/// and step-body vecs (DESIGN.md §3.13).
+#[derive(Debug)]
+pub struct Recycler<T> {
+    spare: Vec<T>,
+    cap: usize,
+}
+
+impl<T> Recycler<T> {
+    pub fn new(cap: usize) -> Self {
+        Recycler {
+            spare: Vec::new(),
+            cap,
+        }
+    }
+
+    /// Take a recycled value, if any.
+    pub fn take(&mut self) -> Option<T> {
+        self.spare.pop()
+    }
+
+    /// Return a spent value to the pool; dropped when the pool is full.
+    pub fn put(&mut self, value: T) {
+        if self.spare.len() < self.cap {
+            self.spare.push(value);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.spare.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spare.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut a: Arena<&'static str> = Arena::new();
+        let x = a.insert("x");
+        let y = a.insert("y");
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.get(x), Some(&"x"));
+        assert_eq!(a.get(y), Some(&"y"));
+        assert_eq!(a.remove(x), Some("x"));
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.get(x), None);
+        assert!(!a.contains(x));
+        assert!(a.contains(y));
+    }
+
+    #[test]
+    fn stale_handle_cannot_alias_slot_reuse() {
+        let mut a: Arena<u64> = Arena::new();
+        let old = a.insert(1);
+        a.remove(old).unwrap();
+        // LIFO free list: the next insert reuses the same slot...
+        let new = a.insert(2);
+        assert_eq!(new.index(), old.index());
+        // ...under a newer generation, so the old handle stays dead.
+        assert_ne!(new.generation(), old.generation());
+        assert_eq!(a.get(old), None);
+        assert_eq!(a.remove(old), None, "stale removal is a no-op");
+        assert_eq!(a.get(new), Some(&2));
+    }
+
+    #[test]
+    fn double_remove_is_idempotent() {
+        let mut a: Arena<u8> = Arena::new();
+        let id = a.insert(7);
+        assert_eq!(a.remove(id), Some(7));
+        assert_eq!(a.remove(id), None);
+        assert_eq!(a.len(), 0);
+    }
+
+    #[test]
+    fn footprint_stays_bounded_under_churn() {
+        let mut a: Arena<u64> = Arena::new();
+        for round in 0..1000u64 {
+            let ids: Vec<GenId> =
+                (0..4).map(|i| a.insert(round * 4 + i)).collect();
+            for (i, id) in ids.into_iter().enumerate() {
+                assert_eq!(a.remove(id), Some(round * 4 + i as u64));
+            }
+        }
+        // At most 4 entries were ever live at once.
+        assert!(a.capacity_slots() <= 4, "slots {}", a.capacity_slots());
+        assert_eq!(a.len(), 0);
+    }
+
+    #[test]
+    fn iter_visits_live_entries_only() {
+        let mut a: Arena<u32> = Arena::new();
+        let x = a.insert(10);
+        let _y = a.insert(20);
+        let z = a.insert(30);
+        a.remove(x).unwrap();
+        a.remove(z).unwrap();
+        let live: Vec<u32> = a.iter().map(|(_, v)| *v).collect();
+        assert_eq!(live, vec![20]);
+    }
+
+    #[test]
+    fn recycler_bounds_and_recycles() {
+        let mut r: Recycler<Vec<u8>> = Recycler::new(2);
+        assert!(r.take().is_none());
+        r.put(Vec::with_capacity(8));
+        r.put(Vec::with_capacity(16));
+        r.put(Vec::with_capacity(32)); // over cap: dropped
+        assert_eq!(r.len(), 2);
+        let v = r.take().unwrap();
+        assert!(v.capacity() >= 16);
+        assert!(!r.is_empty());
+    }
+}

@@ -4,6 +4,10 @@
 //! cost-sensitive), prompt/output lengths, and the timing milestones the
 //! metrics layer turns into TTFT/TPOT/SLO statistics.
 
+pub mod arena;
+
+pub use arena::{Arena, GenId, Recycler};
+
 /// Unique request id.
 pub type RequestId = u64;
 

@@ -39,7 +39,7 @@ use crate::obs::{self, Subsystem};
 use crate::perfmodel::{BatchStats, PerfModel};
 use crate::pool::{PoolManager, Transition, TransitionPhase, WARMUP_S};
 use crate::prefix::PrefixMatch;
-use crate::request::{Phase, Request, RequestId};
+use crate::request::{arena::Recycler, Phase, Request, RequestId};
 use crate::transport::{
     ChunkOrder, JobId, Progress, TransferJob, TransferKind, TransportEngine,
 };
@@ -123,7 +123,18 @@ pub struct SchedulerCore {
     scratch_ids: Vec<RequestId>,
     scratch_online: Vec<Candidate>,
     scratch_offline: Vec<Candidate>,
+    // ---- recycled-capacity pools (DESIGN.md §3.13): spent buffers
+    // handed back by the executor and by ended steps, reused so the
+    // per-event steady state allocates nothing. Pooled vecs are always
+    // empty; capacity is what gets recycled. ----
+    spare_actions: Recycler<Vec<Action>>,
+    id_pool: Recycler<Vec<RequestId>>,
+    seg_pool: Recycler<Vec<PrefillSegment>>,
 }
+
+/// Bound on each recycled-buffer pool; beyond it spares drop to the
+/// allocator (the steady state never gets near this).
+const POOL_CAP: usize = 64;
 
 impl SchedulerCore {
     /// Build a core whose perf model derives from `cfg.serving` (the
@@ -177,12 +188,77 @@ impl SchedulerCore {
             scratch_ids: Vec::new(),
             scratch_online: Vec::new(),
             scratch_offline: Vec::new(),
+            spare_actions: Recycler::new(POOL_CAP),
+            id_pool: Recycler::new(POOL_CAP),
+            seg_pool: Recycler::new(POOL_CAP),
         }
     }
 
     /// Clock of the most recent entry-point invocation.
     pub fn now(&self) -> f64 {
         self.now
+    }
+
+    // ------------------------------------------------- capacity recycling
+
+    /// Hand the entry point's action batch to the caller, swapping in a
+    /// recycled buffer so the steady-state loop allocates no action vecs.
+    fn drain_actions(&mut self) -> Vec<Action> {
+        let fresh = self.spare_actions.take().unwrap_or_default();
+        std::mem::replace(&mut self.actions, fresh)
+    }
+
+    /// Return a spent action batch to the pool. When the executor did not
+    /// keep the actions (the no-log hot path), the id/segment vecs inside
+    /// `StartStep`s are harvested too.
+    pub fn recycle_actions(&mut self, mut actions: Vec<Action>) {
+        for a in actions.drain(..) {
+            if let Action::StartStep {
+                participants,
+                prefill,
+                ..
+            } = a
+            {
+                self.recycle_ids(participants);
+                self.recycle_segs(prefill);
+            }
+        }
+        self.spare_actions.put(actions);
+    }
+
+    /// Take a cleared request-id buffer from the pool (or a fresh one).
+    fn pooled_ids(&mut self) -> Vec<RequestId> {
+        self.id_pool.take().unwrap_or_default()
+    }
+
+    /// Take a cleared prefill-segment buffer from the pool.
+    fn pooled_segs(&mut self) -> Vec<PrefillSegment> {
+        self.seg_pool.take().unwrap_or_default()
+    }
+
+    fn recycle_ids(&mut self, mut v: Vec<RequestId>) {
+        if v.capacity() > 0 {
+            v.clear();
+            self.id_pool.put(v);
+        }
+    }
+
+    fn recycle_segs(&mut self, mut v: Vec<PrefillSegment>) {
+        if v.capacity() > 0 {
+            v.clear();
+            self.seg_pool.put(v);
+        }
+    }
+
+    /// Recycle an ended (or crash-discarded) step's body buffers.
+    fn recycle_step(&mut self, step: Step) {
+        let Step {
+            participants,
+            prefill,
+            ..
+        } = step;
+        self.recycle_ids(participants);
+        self.recycle_segs(prefill);
     }
 
     // ------------------------------------------------------- entry points
@@ -208,7 +284,7 @@ impl SchedulerCore {
         self.arrival(rid);
         self.pool_tick();
         self.flush_cache_events();
-        std::mem::take(&mut self.actions)
+        self.drain_actions()
     }
 
     /// The step with sequence id `seq` on `inst` finished at `now`. Stale
@@ -227,7 +303,7 @@ impl SchedulerCore {
         }
         self.pool_tick();
         self.flush_cache_events();
-        std::mem::take(&mut self.actions)
+        self.drain_actions()
     }
 
     /// A chunk of transfer `job` completed on its link at `now`. Stale
@@ -256,7 +332,7 @@ impl SchedulerCore {
         }
         self.pool_tick();
         self.flush_cache_events();
-        std::mem::take(&mut self.actions)
+        self.drain_actions()
     }
 
     /// Advance crash notice for `inst` at `now` (spot-instance style,
@@ -294,7 +370,7 @@ impl SchedulerCore {
         // entry points keep sweeping until the crash fires.
         self.pool_tick();
         self.flush_cache_events();
-        std::mem::take(&mut self.actions)
+        self.drain_actions()
     }
 
     /// Instance `inst` crashed at `now` (DESIGN.md §3.9): its KV and
@@ -322,7 +398,7 @@ impl SchedulerCore {
         self.kick_idle_relaxed();
         self.pool_tick();
         self.flush_cache_events();
-        std::mem::take(&mut self.actions)
+        self.drain_actions()
     }
 
     /// Crashed instance `inst` recovered at `now` and rejoins its pool
@@ -360,7 +436,7 @@ impl SchedulerCore {
         self.cluster.recoveries += 1;
         self.pool_tick();
         self.flush_cache_events();
-        std::mem::take(&mut self.actions)
+        self.drain_actions()
     }
 
     /// The crash a notice announced never fired (the fleet refused to kill
@@ -395,7 +471,7 @@ impl SchedulerCore {
         }
         self.pool_tick();
         self.flush_cache_events();
-        std::mem::take(&mut self.actions)
+        self.drain_actions()
     }
 
     /// Cross-replica work stealing, victim side (DESIGN.md §3.9): surrender
@@ -435,7 +511,7 @@ impl SchedulerCore {
         self.kick_idle_relaxed();
         self.pool_tick();
         self.flush_cache_events();
-        std::mem::take(&mut self.actions)
+        self.drain_actions()
     }
 
     // ------------------------------------- crash mechanics (DESIGN.md §3.9)
@@ -602,7 +678,9 @@ impl SchedulerCore {
         self.cluster.router.set_down_relaxed(i, true);
         // The running step dies with the instance; its pending end event
         // goes stale through the seq guard.
-        self.cluster.relaxed[i].step = None;
+        if let Some(step) = self.cluster.relaxed[i].step.take() {
+            self.recycle_step(step);
+        }
         self.purge_cache(InstanceRef::Relaxed(i));
         // Inbound rescue/restore streams: the reservation is gone and so
         // is the wire copy — recompute.
@@ -663,7 +741,9 @@ impl SchedulerCore {
     fn crash_strict(&mut self, i: usize) {
         self.abort_transition_for(PoolRole::Strict, i);
         self.cluster.router.set_down_strict(i, true);
-        self.cluster.strict[i].step = None;
+        if let Some(step) = self.cluster.strict[i].step.take() {
+            self.recycle_step(step);
+        }
         self.cluster.strict_step_meta[i] = None;
         self.purge_cache(InstanceRef::Strict(i));
         // Inbound transfers: an online dispatch's source KV was released
@@ -1775,7 +1855,7 @@ impl SchedulerCore {
         } else {
             0
         };
-        let mut segs: Vec<PrefillSegment> = Vec::new();
+        let mut segs = self.pooled_segs();
         let mut used = 0usize;
         let mut cached_total = 0usize;
 
@@ -1880,13 +1960,17 @@ impl SchedulerCore {
 
         // 4. Decode side: every offline decode resident (post-eviction
         // view — admissions above may have reclaimed space).
-        let decode: Vec<RequestId> = if decodes_here {
-            self.cluster.relaxed[inst].offline_decoding.clone()
-        } else {
-            Vec::new()
-        };
+        let mut decode = self.pooled_ids();
+        if decodes_here {
+            decode
+                .extend_from_slice(&self.cluster.relaxed[inst].offline_decoding);
+        }
         if decode.is_empty() && segs.is_empty() {
-            return; // nothing to run; instance stays idle
+            // Nothing to run; instance stays idle. Hand the (empty)
+            // buffers straight back.
+            self.recycle_ids(decode);
+            self.recycle_segs(segs);
+            return;
         }
 
         // Price the iteration with the decode work it actually performs
@@ -2475,11 +2559,17 @@ impl SchedulerCore {
         let seq = self.cluster.alloc_seq();
         let span = latency.max(1e-9);
         let ends = self.now + span;
+        // Pooled copies for the action stream (value-identical to clones;
+        // the executor recycles them back after dispatch).
+        let mut action_ids = self.pooled_ids();
+        action_ids.extend_from_slice(&participants);
+        let mut action_segs = self.pooled_segs();
+        action_segs.extend_from_slice(&prefill);
         self.actions.push(Action::StartStep {
             inst: InstanceRef::Relaxed(inst),
             kind,
-            participants: participants.clone(),
-            prefill: prefill.clone(),
+            participants: action_ids,
+            prefill: action_segs,
             predicted_latency: span,
             cached_tokens,
             seq,
@@ -2587,6 +2677,7 @@ impl SchedulerCore {
             }
             StepKind::DecodeStrict => unreachable!("strict step on relaxed"),
         }
+        self.recycle_step(step);
         self.start_relaxed_step(inst);
     }
 
@@ -2956,13 +3047,14 @@ impl SchedulerCore {
             }
         };
 
-        let mut participants: Vec<RequestId> =
-            online.iter().map(|c| c.0).collect();
+        let mut participants = self.pooled_ids();
+        participants.extend(online.iter().map(|c| c.0));
         participants.extend(&selection.offline);
         // Return the scratch buffers before any exit path.
         self.scratch_online = online;
         self.scratch_offline = offline;
         if participants.is_empty() {
+            self.recycle_ids(participants);
             return;
         }
         let stats = selection.stats;
@@ -2974,10 +3066,12 @@ impl SchedulerCore {
         let seq = self.cluster.alloc_seq();
         let span = latency.max(1e-9);
         let ends = self.now + span;
+        let mut action_ids = self.pooled_ids();
+        action_ids.extend_from_slice(&participants);
         self.actions.push(Action::StartStep {
             inst: InstanceRef::Strict(inst),
             kind: StepKind::DecodeStrict,
-            participants: participants.clone(),
+            participants: action_ids,
             prefill: Vec::new(),
             predicted_latency: span,
             cached_tokens: 0,
@@ -3021,6 +3115,7 @@ impl SchedulerCore {
         for &rid in &step.participants {
             self.strict_decode_token(inst, rid);
         }
+        self.recycle_step(step);
         // Step boundary work: retry waiting admissions, then migration pull.
         self.retry_waiting(inst);
         self.maybe_pull_migration(inst);

@@ -1,9 +1,27 @@
-//! Event queue for virtual-clock executors (moved here from `sim::events`;
-//! `sim` re-exports it for compatibility).
+//! Discrete-event time queues for the virtual-clock executors
+//! (DESIGN.md §3.13; moved here from `sim::events`, which re-exports it
+//! for compatibility).
 //!
-//! A binary min-heap keyed on (time, insertion order). The tie-breaking
-//! sequence number makes the simulation fully deterministic regardless of
-//! float equality between event times.
+//! Two interchangeable implementations behind [`TimeQueue`], both honoring
+//! the exact same ordering contract — events pop in ascending
+//! `(time, insertion order)`, so two queues fed the same push sequence
+//! deliver byte-identical schedules:
+//!
+//! - [`CalendarQueue`] (the default): a calendar/bucket queue with an
+//!   overflow heap. The near-horizon band that dominates LLM-serving event
+//!   streams (step ends and transfer chunks all land within a few hundred
+//!   milliseconds of *now*) maps to an array of time buckets with O(1)
+//!   amortized push and pop; far-future events (diurnal arrivals, fault
+//!   schedules) wait in a binary heap and are decanted band by band.
+//! - [`HeapQueue`]: the classic `BinaryHeap` queue — the pre-calendar
+//!   implementation, kept as the differential baseline
+//!   (`tests/queue_differential.rs`) and as an escape hatch.
+//!
+//! Time ordering goes through [`OrderedTime`], a total-order newtype that
+//! asserts finiteness at construction — the old
+//! `partial_cmp(..).unwrap_or(Ordering::Equal)` silently treated a NaN
+//! event time as equal to everything, corrupting the schedule; now it
+//! fails loudly at the push that produced it.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -11,6 +29,52 @@ use std::collections::BinaryHeap;
 use crate::request::RequestId;
 use crate::transport::JobId;
 
+// ---------------------------------------------------------- ordered time
+
+/// Total-order wrapper for event timestamps: construction asserts the
+/// value is finite, which makes `Ord` safe to build on `partial_cmp`.
+/// Both event loops (`scheduler` and `fleet`) order through this type, so
+/// their tie-breaking semantics cannot drift.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OrderedTime(f64);
+
+impl OrderedTime {
+    #[inline]
+    pub fn new(t: f64) -> Self {
+        assert!(t.is_finite(), "non-finite event time: {t}");
+        OrderedTime(t)
+    }
+
+    #[inline]
+    pub fn get(self) -> f64 {
+        self.0
+    }
+}
+
+impl Eq for OrderedTime {}
+
+impl Ord for OrderedTime {
+    #[inline]
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Finiteness is asserted at construction, so partial_cmp is total.
+        self.0.partial_cmp(&other.0).expect("finite by construction")
+    }
+}
+
+impl PartialOrd for OrderedTime {
+    #[inline]
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+// --------------------------------------------------------------- events
+
+/// Simulation event kinds of the single-cluster loop. Step and transfer
+/// events carry the sequence id current when they were scheduled;
+/// completions whose seq no longer matches (superseded by a preemption
+/// reschedule or a pool flip) are dropped by the core — the generational
+/// staleness guard of DESIGN.md §3.13.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum EventKind {
     /// A request arrives at the cluster.
@@ -23,58 +87,73 @@ pub enum EventKind {
     TransferChunk { job: JobId, seq: u64 },
 }
 
+/// A scheduled event: fire time plus a monotone insertion tie so equal
+/// times pop in push order — the deterministic ordering contract every
+/// executor, telemetry stream, and differential test relies on.
 #[derive(Debug, Clone, Copy)]
-pub struct Event {
+pub struct TimedEvent<K> {
     pub time: f64,
     pub tie: u64,
-    pub kind: EventKind,
+    pub kind: K,
 }
 
-impl PartialEq for Event {
+impl<K> PartialEq for TimedEvent<K> {
     fn eq(&self, other: &Self) -> bool {
         self.time == other.time && self.tie == other.tie
     }
 }
 
-impl Eq for Event {}
+impl<K> Eq for TimedEvent<K> {}
 
-impl Ord for Event {
+impl<K> Ord for TimedEvent<K> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse order: BinaryHeap is a max-heap, we want earliest first.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+        OrderedTime::new(other.time)
+            .cmp(&OrderedTime::new(self.time))
             .then(other.tie.cmp(&self.tie))
     }
 }
 
-impl PartialOrd for Event {
+impl<K> PartialOrd for TimedEvent<K> {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 
-/// Deterministic min-heap of simulation events.
-#[derive(Debug, Default)]
-pub struct EventQueue {
-    heap: BinaryHeap<Event>,
+/// The single-cluster loop's event type.
+pub type Event = TimedEvent<EventKind>;
+
+// ----------------------------------------------------------- heap queue
+
+/// The classic binary-heap time queue — O(log n) push/pop.
+#[derive(Debug)]
+pub struct HeapQueue<K> {
+    heap: BinaryHeap<TimedEvent<K>>,
     next_tie: u64,
 }
 
-impl EventQueue {
+impl<K> Default for HeapQueue<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K> HeapQueue<K> {
     pub fn new() -> Self {
-        Self::default()
+        HeapQueue {
+            heap: BinaryHeap::new(),
+            next_tie: 0,
+        }
     }
 
-    pub fn push(&mut self, time: f64, kind: EventKind) {
-        debug_assert!(time.is_finite(), "non-finite event time");
+    pub fn push(&mut self, time: f64, kind: K) {
+        let _ = OrderedTime::new(time);
         let tie = self.next_tie;
         self.next_tie += 1;
-        self.heap.push(Event { time, tie, kind });
+        self.heap.push(TimedEvent { time, tie, kind });
     }
 
-    pub fn pop(&mut self) -> Option<Event> {
+    pub fn pop(&mut self) -> Option<TimedEvent<K>> {
         self.heap.pop()
     }
 
@@ -87,43 +166,415 @@ impl EventQueue {
     }
 }
 
+// ------------------------------------------------------- calendar queue
+
+/// Buckets per band. With the width tracking the mean inter-event gap the
+/// expected bucket occupancy is ~1, making push and pop O(1) amortized.
+const CAL_BUCKETS: usize = 1024;
+/// Bucket width floor (seconds) — guards against a denormal gap EWMA.
+const MIN_WIDTH: f64 = 1e-9;
+/// Width used before any inter-event gap has been observed.
+const DEFAULT_WIDTH: f64 = 1e-3;
+
+/// Calendar/bucket event queue with an overflow heap.
+///
+/// The *band* is a window `[base, base + CAL_BUCKETS × width)` divided
+/// into `CAL_BUCKETS` buckets; events inside it live in their bucket's
+/// unordered vec, events at or beyond its end wait in the overflow heap.
+/// A cursor walks the buckets forward; when the band drains, the queue
+/// re-bases on the earliest overflow event and decants the next window.
+/// The bucket width adapts to an EWMA of observed inter-pop gaps — a
+/// deterministic function of the popped schedule, so same-seed runs build
+/// identical calendars (width only affects speed, never order).
+///
+/// ## Ordering exactness (DESIGN.md §3.13)
+///
+/// Pops are exactly ascending `(time, insertion tie)`:
+///
+/// - The bucket index `floor((t − base) / width)` is monotone in `t`
+///   (IEEE-754 subtraction and division by a positive constant preserve
+///   order), so an earlier-time event can never land in a later bucket
+///   and equal times always share a bucket — the linear min-scan of the
+///   cursor bucket therefore yields the global minimum.
+/// - Events whose computed index falls behind the cursor (possible only
+///   within rounding noise of a bucket edge, since pushed times never
+///   precede the last pop) clamp *to* the cursor bucket, which is
+///   scanned first.
+/// - The same index formula splits band from overflow, so every overflow
+///   event is ≥ every band event and the band always drains first.
+#[derive(Debug)]
+pub struct CalendarQueue<K> {
+    buckets: Vec<Vec<TimedEvent<K>>>,
+    /// Left edge of bucket 0 for the current band.
+    base: f64,
+    width: f64,
+    /// First possibly non-empty bucket; only advances within a band.
+    cursor: usize,
+    /// Events currently in buckets.
+    in_band: usize,
+    /// Events at or beyond the band end.
+    overflow: BinaryHeap<TimedEvent<K>>,
+    /// False until the first rebuild establishes a band.
+    band_active: bool,
+    /// EWMA of positive inter-pop gaps; 0 until the first gap.
+    gap_ewma: f64,
+    last_pop: f64,
+    has_popped: bool,
+    next_tie: u64,
+    len: usize,
+}
+
+impl<K> Default for CalendarQueue<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K> CalendarQueue<K> {
+    pub fn new() -> Self {
+        CalendarQueue {
+            buckets: (0..CAL_BUCKETS).map(|_| Vec::new()).collect(),
+            base: 0.0,
+            width: DEFAULT_WIDTH,
+            cursor: 0,
+            in_band: 0,
+            overflow: BinaryHeap::new(),
+            band_active: false,
+            gap_ewma: 0.0,
+            last_pop: 0.0,
+            has_popped: false,
+            next_tie: 0,
+            len: 0,
+        }
+    }
+
+    /// Bucket index for `time` under the current band, `None` when the
+    /// time falls at or beyond the band end. The single monotone formula
+    /// both `push` and the rebuild decant use — see the ordering argument.
+    #[inline]
+    fn slot(&self, time: f64) -> Option<usize> {
+        let rel = (time - self.base) / self.width;
+        if rel >= CAL_BUCKETS as f64 {
+            None
+        } else {
+            Some(rel.max(0.0) as usize)
+        }
+    }
+
+    pub fn push(&mut self, time: f64, kind: K) {
+        let _ = OrderedTime::new(time);
+        let tie = self.next_tie;
+        self.next_tie += 1;
+        let ev = TimedEvent { time, tie, kind };
+        self.len += 1;
+        if self.band_active {
+            if let Some(i) = self.slot(time) {
+                // Behind-the-cursor indexes (bucket-edge rounding noise)
+                // clamp to the cursor bucket, which pops first.
+                let i = i.max(self.cursor);
+                self.buckets[i].push(ev);
+                self.in_band += 1;
+                return;
+            }
+        }
+        self.overflow.push(ev);
+    }
+
+    /// Re-base the band on the earliest overflow event and decant every
+    /// overflow event that falls inside the new window.
+    fn rebuild(&mut self) {
+        debug_assert_eq!(self.in_band, 0);
+        let Some(head) = self.overflow.peek() else {
+            self.band_active = false;
+            return;
+        };
+        self.base = head.time;
+        self.width = if self.gap_ewma > 0.0 {
+            self.gap_ewma.max(MIN_WIDTH)
+        } else {
+            DEFAULT_WIDTH
+        };
+        self.cursor = 0;
+        self.band_active = true;
+        while let Some(head) = self.overflow.peek() {
+            let Some(i) = self.slot(head.time) else { break };
+            let ev = self.overflow.pop().expect("peeked");
+            self.buckets[i].push(ev);
+            self.in_band += 1;
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<TimedEvent<K>> {
+        if self.len == 0 {
+            return None;
+        }
+        if self.in_band == 0 {
+            // The overflow head lands at rel = 0, so the decant always
+            // moves at least one event into the band.
+            self.rebuild();
+            debug_assert!(self.in_band > 0);
+        }
+        while self.buckets[self.cursor].is_empty() {
+            self.cursor += 1;
+            debug_assert!(self.cursor < CAL_BUCKETS, "in_band desynced");
+        }
+        let bucket = &mut self.buckets[self.cursor];
+        // Full (time, tie) min-scan: order-independent, so swap_remove's
+        // reshuffling of the bucket cannot perturb pop order.
+        let mut best = 0usize;
+        for (j, e) in bucket.iter().enumerate().skip(1) {
+            let b = &bucket[best];
+            if e.time < b.time || (e.time == b.time && e.tie < b.tie) {
+                best = j;
+            }
+        }
+        let ev = bucket.swap_remove(best);
+        self.in_band -= 1;
+        self.len -= 1;
+        // Deterministic width adaptation from observed inter-pop gaps.
+        if self.has_popped {
+            let gap = ev.time - self.last_pop;
+            if gap > 0.0 {
+                self.gap_ewma = if self.gap_ewma > 0.0 {
+                    0.875 * self.gap_ewma + 0.125 * gap
+                } else {
+                    gap
+                };
+            }
+        }
+        self.last_pop = ev.time;
+        self.has_popped = true;
+        Some(ev)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+// ------------------------------------------------------- queue selector
+
+/// Which time-queue implementation an executor runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueKind {
+    /// Calendar/bucket queue with overflow heap (the default).
+    #[default]
+    Calendar,
+    /// Plain binary-heap queue — differential baseline and escape hatch.
+    BinaryHeap,
+}
+
+impl QueueKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            QueueKind::Calendar => "calendar",
+            QueueKind::BinaryHeap => "heap",
+        }
+    }
+}
+
+/// A time queue of either implementation; both honor the identical
+/// `(time, insertion order)` pop contract, enforced by
+/// `tests/queue_differential.rs`.
+#[derive(Debug)]
+pub enum TimeQueue<K> {
+    Calendar(CalendarQueue<K>),
+    Heap(HeapQueue<K>),
+}
+
+impl<K> TimeQueue<K> {
+    pub fn new() -> Self {
+        Self::with_kind(QueueKind::Calendar)
+    }
+
+    pub fn with_kind(kind: QueueKind) -> Self {
+        match kind {
+            QueueKind::Calendar => TimeQueue::Calendar(CalendarQueue::new()),
+            QueueKind::BinaryHeap => TimeQueue::Heap(HeapQueue::new()),
+        }
+    }
+
+    pub fn kind(&self) -> QueueKind {
+        match self {
+            TimeQueue::Calendar(_) => QueueKind::Calendar,
+            TimeQueue::Heap(_) => QueueKind::BinaryHeap,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, time: f64, kind: K) {
+        match self {
+            TimeQueue::Calendar(q) => q.push(time, kind),
+            TimeQueue::Heap(q) => q.push(time, kind),
+        }
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<TimedEvent<K>> {
+        match self {
+            TimeQueue::Calendar(q) => q.pop(),
+            TimeQueue::Heap(q) => q.pop(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TimeQueue::Calendar(q) => q.len(),
+            TimeQueue::Heap(q) => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<K> Default for TimeQueue<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The single-cluster executor's queue type (calendar by default).
+pub type EventQueue = TimeQueue<EventKind>;
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn drain(q: &mut TimeQueue<u32>) -> Vec<(f64, u64, u32)> {
+        let mut out = Vec::new();
+        while let Some(ev) = q.pop() {
+            out.push((ev.time, ev.tie, ev.kind));
+        }
+        out
+    }
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.push(3.0, EventKind::Arrival(3));
-        q.push(1.0, EventKind::Arrival(1));
-        q.push(2.0, EventKind::Arrival(2));
-        let order: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
-        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+        for kind in [QueueKind::Calendar, QueueKind::BinaryHeap] {
+            let mut q = EventQueue::with_kind(kind);
+            q.push(3.0, EventKind::Arrival(3));
+            q.push(1.0, EventKind::Arrival(1));
+            q.push(2.0, EventKind::Arrival(2));
+            let order: Vec<f64> =
+                std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+            assert_eq!(order, vec![1.0, 2.0, 3.0], "{kind:?}");
+        }
     }
 
     #[test]
     fn ties_break_by_insertion_order() {
-        let mut q = EventQueue::new();
-        q.push(1.0, EventKind::Arrival(10));
-        q.push(1.0, EventKind::Arrival(20));
-        q.push(1.0, EventKind::Arrival(30));
-        let ids: Vec<RequestId> = std::iter::from_fn(|| q.pop())
-            .map(|e| match e.kind {
-                EventKind::Arrival(r) => r,
-                _ => unreachable!(),
-            })
-            .collect();
-        assert_eq!(ids, vec![10, 20, 30]);
+        for kind in [QueueKind::Calendar, QueueKind::BinaryHeap] {
+            let mut q = EventQueue::with_kind(kind);
+            q.push(1.0, EventKind::Arrival(10));
+            q.push(1.0, EventKind::Arrival(20));
+            q.push(1.0, EventKind::Arrival(30));
+            let ids: Vec<RequestId> = std::iter::from_fn(|| q.pop())
+                .map(|e| match e.kind {
+                    EventKind::Arrival(r) => r,
+                    _ => unreachable!(),
+                })
+                .collect();
+            assert_eq!(ids, vec![10, 20, 30], "{kind:?}");
+        }
     }
 
     #[test]
     fn len_tracking() {
+        for kind in [QueueKind::Calendar, QueueKind::BinaryHeap] {
+            let mut q = EventQueue::with_kind(kind);
+            assert!(q.is_empty());
+            q.push(1.0, EventKind::Arrival(0));
+            q.push(2.0, EventKind::StrictStep { inst: 0, seq: 1 });
+            assert_eq!(q.len(), 2, "{kind:?}");
+            q.pop();
+            assert_eq!(q.len(), 1, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn calendar_crosses_bands_in_exact_order() {
+        // Events spread far beyond one band window force repeated
+        // rebuilds; the pop order must stay exactly (time, tie).
+        let mut q: TimeQueue<u32> = TimeQueue::with_kind(QueueKind::Calendar);
+        for i in 0..500u32 {
+            q.push(f64::from(i % 100) * 7.3 + 0.0005 * f64::from(i % 7), i);
+        }
+        let popped = drain(&mut q);
+        assert_eq!(popped.len(), 500);
+        let mut sorted = popped.clone();
+        sorted.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+        });
+        assert_eq!(popped, sorted);
+    }
+
+    #[test]
+    fn calendar_interleaved_push_pop_matches_heap() {
+        // Randomized differential: the same deterministic push/pop script
+        // against both queues must yield identical (time, tie) sequences.
+        // Pushes are monotone-from-now like the simulator's `now + lat`.
+        let mut cal: TimeQueue<u32> = TimeQueue::with_kind(QueueKind::Calendar);
+        let mut heap: TimeQueue<u32> =
+            TimeQueue::with_kind(QueueKind::BinaryHeap);
+        let mut rng: u64 = 0x9E3779B97F4A7C15;
+        let mut next = move |m: u64| {
+            rng = rng
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            (rng >> 33) % m
+        };
+        let mut now = 0.0f64;
+        let mut k = 0u32;
+        for _ in 0..200 {
+            // Burst of pushes with latencies spanning six orders of
+            // magnitude, including deliberate exact-duplicate times.
+            let burst = 1 + next(8);
+            for _ in 0..burst {
+                let lat = match next(4) {
+                    0 => 0.0,
+                    1 => 1e-4 * (1 + next(50)) as f64,
+                    2 => 0.05 * (1 + next(20)) as f64,
+                    _ => 10.0 * (1 + next(100)) as f64,
+                };
+                cal.push(now + lat, k);
+                heap.push(now + lat, k);
+                k += 1;
+            }
+            let drains = 1 + next(6);
+            for _ in 0..drains {
+                match (cal.pop(), heap.pop()) {
+                    (Some(a), Some(b)) => {
+                        assert_eq!(
+                            (a.time, a.tie, a.kind),
+                            (b.time, b.tie, b.kind)
+                        );
+                        now = a.time;
+                    }
+                    (None, None) => break,
+                    other => panic!("queues disagree on emptiness: {other:?}"),
+                }
+            }
+        }
+        assert_eq!(drain(&mut cal), drain(&mut heap));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_time_is_rejected_at_push() {
         let mut q = EventQueue::new();
-        assert!(q.is_empty());
-        q.push(1.0, EventKind::Arrival(0));
-        q.push(2.0, EventKind::StrictStep { inst: 0, seq: 1 });
-        assert_eq!(q.len(), 2);
-        q.pop();
-        assert_eq!(q.len(), 1);
+        q.push(f64::NAN, EventKind::Arrival(0));
+    }
+
+    #[test]
+    fn ordered_time_totality() {
+        assert!(OrderedTime::new(1.0) < OrderedTime::new(2.0));
+        assert_eq!(OrderedTime::new(3.5), OrderedTime::new(3.5));
+        assert_eq!(OrderedTime::new(7.25).get(), 7.25);
     }
 }

@@ -26,7 +26,7 @@ use crate::trace::Trace;
 
 use super::action::{Action, InstanceRef};
 use super::core::SchedulerCore;
-use super::events::{EventKind, EventQueue};
+use super::events::{EventKind, EventQueue, QueueKind};
 
 /// Substrate-side outcome of driving a core to completion.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -50,8 +50,9 @@ pub trait Executor {
 
 // --------------------------------------------------------------- virtual
 
-/// Discrete-event substrate: a binary-heap event queue on a virtual clock,
-/// with step/transfer durations taken from the core's roofline predictions.
+/// Discrete-event substrate: a calendar event queue (heap-backed on
+/// request, see [`QueueKind`]) on a virtual clock, with step/transfer
+/// durations taken from the core's roofline predictions.
 #[derive(Debug)]
 pub struct VirtualExecutor {
     queue: EventQueue,
@@ -69,8 +70,15 @@ pub struct VirtualExecutor {
 impl VirtualExecutor {
     /// Schedule `trace`'s arrivals; process events up to `horizon` seconds.
     pub fn new(trace: &Trace, horizon: f64) -> Self {
+        Self::with_queue(trace, horizon, QueueKind::Calendar)
+    }
+
+    /// Like [`VirtualExecutor::new`] but on an explicit queue
+    /// implementation — `tests/queue_differential.rs` drives both kinds
+    /// over identical traces to pin the ordering contract.
+    pub fn with_queue(trace: &Trace, horizon: f64, kind: QueueKind) -> Self {
         let _p = obs::scope(Subsystem::HeapPush);
-        let mut queue = EventQueue::new();
+        let mut queue = EventQueue::with_kind(kind);
         for r in &trace.requests {
             queue.push(r.arrival, EventKind::Arrival(r.id));
         }
@@ -84,10 +92,10 @@ impl VirtualExecutor {
         }
     }
 
-    fn apply(&mut self, actions: Vec<Action>) {
-        self.telemetry.observe(self.now, 0, &actions);
+    fn apply(&mut self, actions: &[Action]) {
+        self.telemetry.observe(self.now, 0, actions);
         let _p = obs::scope(Subsystem::HeapPush);
-        for a in &actions {
+        for a in actions {
             match *a {
                 Action::StartStep {
                     inst,
@@ -138,9 +146,6 @@ impl VirtualExecutor {
                 | Action::InstanceUp { .. } => {}
             }
         }
-        if let Some(log) = &mut self.log {
-            log.extend(actions);
-        }
     }
 }
 
@@ -163,7 +168,7 @@ impl Executor for VirtualExecutor {
             }
             self.now = ev.time;
             self.events += 1;
-            let actions = match ev.kind {
+            let mut actions = match ev.kind {
                 EventKind::Arrival(rid) => {
                     obs::count_event(EventClass::Arrival);
                     let _p = obs::scope(Subsystem::Scheduler);
@@ -185,7 +190,13 @@ impl Executor for VirtualExecutor {
                     core.on_transfer_progress(self.now, job, seq)
                 }
             };
-            self.apply(actions);
+            self.apply(&actions);
+            if let Some(log) = &mut self.log {
+                // `append` moves the items but leaves `actions` its
+                // capacity, which recycling below hands back to the core.
+                log.append(&mut actions);
+            }
+            core.recycle_actions(actions);
             if self.telemetry.sample_due(self.now) {
                 self.telemetry.sample_replica(
                     self.now,

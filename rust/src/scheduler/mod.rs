@@ -38,7 +38,10 @@ pub mod executor;
 pub use self::action::{Action, InstanceRef, RolePhase};
 pub use self::cluster::{ClusterState, KvHome};
 pub use self::core::{CoreConfig, SchedulerCore};
-pub use self::events::{Event, EventKind, EventQueue};
+pub use self::events::{
+    CalendarQueue, Event, EventKind, EventQueue, HeapQueue, OrderedTime,
+    QueueKind, TimeQueue, TimedEvent,
+};
 pub use self::executor::{
     ExecStats, Executor, StubWallClockExecutor, VirtualExecutor,
 };

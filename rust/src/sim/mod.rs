@@ -16,7 +16,7 @@
 //! (layer-level truncation of a running offline prefill) and eviction
 //! (which only takes effect between iterations, as in real engines).
 
-pub use crate::scheduler::{Event, EventKind, EventQueue};
+pub use crate::scheduler::{Event, EventKind, EventQueue, QueueKind};
 
 use crate::config::ServingConfig;
 use crate::coordinator::{Ablation, OverloadMode, Policy};
@@ -145,6 +145,20 @@ pub fn simulate_observed(
     telemetry: Option<TelemetryOpts>,
     profile: bool,
 ) -> SimResult {
+    simulate_queued(trace, cfg, telemetry, profile, QueueKind::Calendar)
+}
+
+/// [`simulate_observed`] on an explicit time-queue implementation. Both
+/// kinds honor the identical (time, insertion-order) contract, so every
+/// deterministic output field is byte-identical across them — pinned by
+/// `tests/queue_differential.rs`.
+pub fn simulate_queued(
+    trace: &Trace,
+    cfg: &SimConfig,
+    telemetry: Option<TelemetryOpts>,
+    profile: bool,
+    queue_kind: QueueKind,
+) -> SimResult {
     if profile {
         obs::enable();
     }
@@ -153,7 +167,7 @@ pub fn simulate_observed(
         let _p = obs::scope(Subsystem::Setup);
         (
             SchedulerCore::new(trace.requests.clone(), cfg.core()),
-            VirtualExecutor::new(trace, horizon),
+            VirtualExecutor::with_queue(trace, horizon, queue_kind),
         )
     };
     if let Some(opts) = telemetry {

@@ -21,6 +21,7 @@ use crate::trace::generator::{
 };
 use crate::trace::Trace;
 use crate::util::json::Json;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// One point of an offline-load sweep.
 #[derive(Debug, Clone)]
@@ -121,6 +122,44 @@ pub fn find_online_capacity(
     lo
 }
 
+/// Evaluate one offline-load level: merge the offline trace for `qps`
+/// into the shared online trace and run one seeded sim. Both the
+/// sequential and the parallel sweep drivers go through this single
+/// helper, which is what makes `--jobs N` output bit-identical to
+/// `--jobs 1`: a point's result depends only on its own inputs, never on
+/// which worker ran it or in what order.
+fn sweep_point(
+    serving: &ServingConfig,
+    policy: Policy,
+    online: &Trace,
+    offline_ds: &DatasetProfile,
+    qps: f64,
+    sweep: &SweepConfig,
+) -> SweepPoint {
+    let trace = if qps > 0.0 {
+        online.clone().merge(offline_trace_with_prefix(
+            offline_ds.clone(),
+            qps,
+            sweep.duration_s,
+            sweep.offline_prefix,
+            sweep.seed + 1,
+        ))
+    } else {
+        online.clone()
+    };
+    let res = sim_once(serving, policy, &trace, sweep);
+    SweepPoint {
+        offline_qps: qps,
+        violation_rate: res.report.online_violation_rate,
+        offline_token_throughput: res.report.offline_token_throughput,
+        ttft_p99: res.report.ttft.p99,
+        tpot_p99: res.report.tpot.p99,
+        migrations: res.migrations,
+        evictions: res.evictions,
+        prefix_hit_rate: res.prefix.hit_rate,
+    }
+}
+
 /// Sweep offline QPS for one policy at a fixed online rate.
 pub fn offline_sweep(
     serving: &ServingConfig,
@@ -140,29 +179,86 @@ pub fn offline_sweep(
     qps_levels
         .iter()
         .map(|&qps| {
-            let trace = if qps > 0.0 {
-                online.clone().merge(offline_trace_with_prefix(
-                    offline_ds.clone(),
-                    qps,
-                    sweep.duration_s,
-                    sweep.offline_prefix,
-                    sweep.seed + 1,
-                ))
-            } else {
-                online.clone()
-            };
-            let res = sim_once(serving, policy, &trace, sweep);
-            SweepPoint {
-                offline_qps: qps,
-                violation_rate: res.report.online_violation_rate,
-                offline_token_throughput: res.report.offline_token_throughput,
-                ttft_p99: res.report.ttft.p99,
-                tpot_p99: res.report.tpot.p99,
-                migrations: res.migrations,
-                evictions: res.evictions,
-                prefix_hit_rate: res.prefix.hit_rate,
-            }
+            sweep_point(serving, policy, &online, offline_ds, qps, sweep)
         })
+        .collect()
+}
+
+/// [`offline_sweep`] fanned out over `jobs` worker threads. Each load
+/// level is an independent seeded simulation (the simulator and the
+/// self-profiler keep no cross-thread state — obs is thread-local), so
+/// workers pull levels from a shared atomic cursor and the results are
+/// merged back into load-level order. Output is element-identical to the
+/// sequential driver for any `jobs`; `jobs <= 1` takes the sequential
+/// path outright.
+#[allow(clippy::too_many_arguments)]
+pub fn offline_sweep_parallel(
+    serving: &ServingConfig,
+    policy: Policy,
+    online_ds: &DatasetProfile,
+    online_rate: f64,
+    offline_ds: &DatasetProfile,
+    qps_levels: &[f64],
+    sweep: &SweepConfig,
+    jobs: usize,
+) -> Vec<SweepPoint> {
+    if jobs <= 1 || qps_levels.len() <= 1 {
+        return offline_sweep(
+            serving,
+            policy,
+            online_ds,
+            online_rate,
+            offline_ds,
+            qps_levels,
+            sweep,
+        );
+    }
+    let online = online_trace(
+        online_ds.clone(),
+        online_rate,
+        sweep.duration_s,
+        sweep.seed,
+    );
+    let next = AtomicUsize::new(0);
+    let workers = jobs.min(qps_levels.len());
+    let mut slots: Vec<Option<SweepPoint>> = vec![None; qps_levels.len()];
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let online = &online;
+                s.spawn(move || {
+                    let mut mine: Vec<(usize, SweepPoint)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= qps_levels.len() {
+                            break;
+                        }
+                        mine.push((
+                            i,
+                            sweep_point(
+                                serving,
+                                policy,
+                                online,
+                                offline_ds,
+                                qps_levels[i],
+                                sweep,
+                            ),
+                        ));
+                    }
+                    mine
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, p) in h.join().expect("sweep worker panicked") {
+                slots[i] = Some(p);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|p| p.expect("every sweep point computed"))
         .collect()
 }
 
@@ -368,6 +464,34 @@ mod tests {
             &sweep,
         );
         assert_eq!(cold[0].prefix_hit_rate, 0.0);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_sequential() {
+        let serving = ServingConfig::preset_7b();
+        let mut sweep = quick_sweep();
+        sweep.duration_s = 180.0;
+        let levels = [0.0, 1.0, 4.0];
+        let run = |jobs: usize| {
+            offline_sweep_parallel(
+                &serving,
+                Policy::Ooco,
+                &DatasetProfile::azure_conv(),
+                0.3,
+                &DatasetProfile::ooc_offline(),
+                &levels,
+                &sweep,
+                jobs,
+            )
+        };
+        let seq = run(1);
+        let par = run(3);
+        // Byte-identical merged curves: worker scheduling must never
+        // leak into the results.
+        assert_eq!(
+            curve_to_json("curve", &seq).to_string(),
+            curve_to_json("curve", &par).to_string()
+        );
     }
 
     #[test]

@@ -1,0 +1,186 @@
+//! Generational-arena property tests (DESIGN.md §3.13): the arena's
+//! generation counters are the structural guard that makes slot reuse
+//! safe — the same role the sequence-id staleness checks play for
+//! step-end and transfer events in the event loops. Three properties:
+//!
+//! 1. **Model equivalence under random churn**: against a reference map,
+//!    every live handle reads its value and every dead handle reads
+//!    `None`, across arbitrary insert/remove interleavings.
+//! 2. **No aliasing after index reuse**: a handle invalidated by removal
+//!    never resolves again, no matter how many later entries recycle its
+//!    slot (the flip/crash index-reuse hazard).
+//! 3. **Conservation through a faulted fleet run**: the end-to-end check
+//!    that the recycled-state machinery never loses a request — a
+//!    crash/recover fleet on the calendar queue finishes with zero
+//!    accounting errors and exact per-request token conservation.
+
+use std::collections::HashMap;
+
+use ooco::config::ServingConfig;
+use ooco::coordinator::Policy;
+use ooco::fleet::{simulate_fleet_queued, FleetConfig};
+use ooco::prop_assert;
+use ooco::request::{Arena, GenId};
+use ooco::sim::{QueueKind, SimConfig};
+use ooco::testutil::forall;
+use ooco::trace::datasets::DatasetProfile;
+use ooco::trace::generator::{offline_trace, online_trace};
+
+/// Property 1: the arena agrees with a reference `HashMap` model under
+/// random insert/remove interleavings, and stale handles stay dead.
+#[test]
+fn arena_matches_model_under_random_churn() {
+    forall(60, |r| {
+        let mut arena: Arena<u64> = Arena::new();
+        let mut model: HashMap<GenId, u64> = HashMap::new();
+        let mut dead: Vec<GenId> = Vec::new();
+        let mut next_value = 0u64;
+        let ops = 200 + r.below(200);
+        for _ in 0..ops {
+            // Bias toward inserts so the arena grows, but churn enough
+            // that slots recycle (removal picks an arbitrary live id).
+            if model.is_empty() || r.chance(0.6) {
+                let id = arena.insert(next_value);
+                prop_assert!(
+                    model.insert(id, next_value).is_none(),
+                    "arena issued a duplicate live handle {id:?}"
+                );
+                next_value += 1;
+            } else {
+                let pick = r.below(model.len());
+                let id = *model.keys().nth(pick).unwrap();
+                let expect = model.remove(&id).unwrap();
+                prop_assert!(
+                    arena.remove(id) == Some(expect),
+                    "remove({id:?}) lost value {expect}"
+                );
+                dead.push(id);
+            }
+            prop_assert!(
+                arena.len() == model.len(),
+                "len {} != model {}",
+                arena.len(),
+                model.len()
+            );
+        }
+        for (id, v) in &model {
+            prop_assert!(
+                arena.get(*id) == Some(v),
+                "live handle {id:?} lost its value"
+            );
+        }
+        for id in &dead {
+            prop_assert!(
+                arena.get(*id).is_none() && !arena.contains(*id),
+                "dead handle {id:?} resolved after removal"
+            );
+        }
+        // The iterator sees exactly the live set.
+        let mut live: Vec<u64> = arena.iter().map(|(_, v)| *v).collect();
+        let mut expect: Vec<u64> = model.values().copied().collect();
+        live.sort_unstable();
+        expect.sort_unstable();
+        prop_assert!(live == expect, "iterator disagrees with model");
+        Ok(())
+    });
+}
+
+/// Property 2: once removed, a handle never aliases — even when its slot
+/// is recycled through many generations by later entries.
+#[test]
+fn stale_handles_never_alias_across_generations() {
+    forall(40, |r| {
+        let mut arena: Arena<u64> = Arena::new();
+        // A small arena so every removal's slot is certain to recycle.
+        let seed: Vec<GenId> = (0..4).map(|i| arena.insert(i)).collect();
+        let mut graveyard: Vec<GenId> = Vec::new();
+        let mut live = seed;
+        let mut next_value = 4u64;
+        for _ in 0..100 {
+            // Kill one live entry, then immediately refill: LIFO free
+            // list guarantees the dead slot is reused under a bumped
+            // generation.
+            let victim = live.swap_remove(r.below(live.len()));
+            arena.remove(victim).unwrap();
+            graveyard.push(victim);
+            let fresh = arena.insert(next_value);
+            next_value += 1;
+            prop_assert!(
+                fresh.index() == victim.index(),
+                "LIFO free list skipped the freed slot"
+            );
+            prop_assert!(
+                fresh.generation() != victim.generation(),
+                "slot reused without a generation bump"
+            );
+            live.push(fresh);
+            // Every handle ever killed stays dead.
+            for id in &graveyard {
+                prop_assert!(
+                    arena.get(*id).is_none(),
+                    "stale handle {id:?} aliased a recycled slot"
+                );
+                prop_assert!(
+                    arena.remove(*id).is_none(),
+                    "stale handle {id:?} removed a recycled entry"
+                );
+            }
+        }
+        prop_assert!(
+            arena.capacity_slots() == 4,
+            "churn grew the arena: {} slots",
+            arena.capacity_slots()
+        );
+        Ok(())
+    });
+}
+
+/// Property 3: the end-to-end conservation check. A crash/recover fleet
+/// run on the calendar queue — the configuration where recycled slots,
+/// recycled action vecs, and event staleness guards are all in play —
+/// loses no request and conserves every finished request's tokens.
+#[test]
+fn faulted_fleet_run_conserves_requests() {
+    let online = online_trace(DatasetProfile::azure_conv(), 0.6, 60.0, 7);
+    let offline =
+        offline_trace(DatasetProfile::ooc_offline(), 1.5, 60.0, 8);
+    let trace = online.merge(offline);
+
+    let mut serving = ServingConfig::preset_7b();
+    serving.cluster.relaxed_instances = 2;
+    serving.cluster.strict_instances = 2;
+    let mut sim = SimConfig::new(serving, Policy::Ooco);
+    sim.seed = 11;
+    sim.drain_s = 3000.0;
+    let mut cfg = FleetConfig::new(sim);
+    cfg.fleet.replicas = 2;
+    cfg.fault =
+        "crash(at=20,pool=relaxed,inst=0,down=30); \
+         crash(at=25,pool=strict,inst=1,down=30)"
+            .parse()
+            .unwrap();
+
+    let res = simulate_fleet_queued(
+        &trace,
+        &cfg,
+        None,
+        false,
+        QueueKind::Calendar,
+    );
+    assert!(res.fleet.crashes >= 1, "fault schedule never fired");
+    assert_eq!(
+        res.fleet.accounting_errors, 0,
+        "a request fell out of every scheduling structure"
+    );
+    assert_eq!(
+        res.report.online_finished, res.report.online_total,
+        "online requests must all finish despite the crashes"
+    );
+    assert!(
+        res.report.offline_finished as f64
+            >= 0.9 * res.report.offline_total as f64,
+        "offline finished {}/{}",
+        res.report.offline_finished,
+        res.report.offline_total
+    );
+}

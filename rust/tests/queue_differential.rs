@@ -1,0 +1,129 @@
+//! Queue-swap differential suite (DESIGN.md §3.13): the calendar/bucket
+//! event queue and the explicit binary heap implement the same
+//! `(time, insertion-order)` contract, so swapping one for the other must
+//! leave every deterministic output byte-identical — the machine-readable
+//! `--json-out` document (report, transport, pool, prefix, chunk,
+//! telemetry timeline, attribution, Perfetto buffer), for every policy,
+//! and for a faulted multi-replica fleet run. This is the acceptance
+//! criterion that lets the calendar queue be the default: if it ever
+//! reorders a tie or drops an event, these string comparisons catch the
+//! first diverging byte.
+
+use ooco::config::ServingConfig;
+use ooco::coordinator::Policy;
+use ooco::fleet::{simulate_fleet_queued, FleetConfig};
+use ooco::sim::{result_json, simulate_queued, QueueKind, SimConfig};
+use ooco::telemetry::TelemetryOpts;
+use ooco::trace::datasets::DatasetProfile;
+use ooco::trace::generator::{offline_trace, online_trace};
+use ooco::trace::Trace;
+use ooco::util::json::Json;
+
+fn mixed_trace(duration: f64, seed: u64) -> Trace {
+    let online =
+        online_trace(DatasetProfile::azure_conv(), 0.6, duration, seed);
+    let offline =
+        offline_trace(DatasetProfile::ooc_offline(), 1.5, duration, seed + 1);
+    online.merge(offline)
+}
+
+/// The tentpole acceptance test: for every policy, the full
+/// machine-readable result — telemetry armed, Perfetto on — is
+/// byte-identical across the two queue implementations.
+#[test]
+fn json_out_identical_across_queues_all_policies() {
+    let trace = mixed_trace(90.0, 42);
+    for policy in Policy::all() {
+        let mut cfg = SimConfig::new(ServingConfig::preset_7b(), policy);
+        cfg.seed = 11;
+        let run = |kind: QueueKind| {
+            let mut opts = TelemetryOpts::new(cfg.serving.slo);
+            opts.perfetto = true;
+            let res = simulate_queued(&trace, &cfg, Some(opts), false, kind);
+            let doc = result_json(&cfg, &res).to_string();
+            let perfetto = res
+                .telemetry
+                .as_ref()
+                .and_then(|t| t.perfetto.clone())
+                .expect("perfetto requested");
+            (doc, perfetto)
+        };
+        let (cal_doc, cal_perfetto) = run(QueueKind::Calendar);
+        let (heap_doc, heap_perfetto) = run(QueueKind::BinaryHeap);
+        assert!(
+            cal_doc.contains("\"timeline\""),
+            "{policy:?}: telemetry missing from result document"
+        );
+        assert_eq!(
+            cal_doc, heap_doc,
+            "{policy:?}: queue swap changed the --json-out document"
+        );
+        assert_eq!(
+            cal_perfetto, heap_perfetto,
+            "{policy:?}: queue swap changed the Perfetto buffer"
+        );
+    }
+}
+
+/// The fleet half: a faulted 2-replica fleet — crash, failover, recovery,
+/// work stealing all in play — still produces byte-identical report,
+/// fleet counters, gauge timeline, and attribution across the queue swap.
+#[test]
+fn faulted_fleet_identical_across_queues() {
+    let trace = mixed_trace(60.0, 7);
+    let mut sim = SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+    sim.seed = 11;
+    sim.drain_s = 3000.0;
+    let mut cfg = FleetConfig::new(sim);
+    cfg.fleet.replicas = 2;
+    cfg.fault = "crash(at=20,pool=relaxed,inst=0,down=30)".parse().unwrap();
+
+    let run = |kind: QueueKind| {
+        let opts = TelemetryOpts::new(cfg.sim.serving.slo);
+        let res = simulate_fleet_queued(&trace, &cfg, Some(opts), false, kind);
+        let tel = res.telemetry.expect("telemetry requested");
+        (
+            Json::obj(vec![
+                ("report", res.report.to_json()),
+                ("fleet", res.fleet.to_json()),
+                ("end_time", Json::Num(res.end_time)),
+                ("timeline", tel.timeline),
+                ("attribution", tel.attribution),
+            ])
+            .to_string(),
+            res.fleet.crashes,
+        )
+    };
+    let (cal, cal_crashes) = run(QueueKind::Calendar);
+    let (heap, heap_crashes) = run(QueueKind::BinaryHeap);
+    assert!(cal_crashes >= 1, "fault schedule never fired");
+    assert_eq!(cal_crashes, heap_crashes);
+    assert_eq!(
+        cal, heap,
+        "queue swap changed the faulted fleet's machine-readable output"
+    );
+}
+
+/// Sanity for the harness itself: the two queue kinds are actually
+/// different code paths — a run on each must *touch* the calendar's
+/// overflow/rebuild machinery. We can't observe internals from here, so
+/// instead pin the sensitivity of the comparison: different seeds
+/// diverge, proving byte-equality above is not vacuous.
+#[test]
+fn differential_harness_is_sensitive() {
+    let trace = mixed_trace(60.0, 3);
+    let mut cfg = SimConfig::new(ServingConfig::preset_7b(), Policy::Ooco);
+    cfg.seed = 11;
+    let a = result_json(
+        &cfg,
+        &simulate_queued(&trace, &cfg, None, false, QueueKind::Calendar),
+    )
+    .to_string();
+    cfg.seed = 12;
+    let b = result_json(
+        &cfg,
+        &simulate_queued(&trace, &cfg, None, false, QueueKind::Calendar),
+    )
+    .to_string();
+    assert_ne!(a, b, "seeds indistinguishable — comparisons are vacuous");
+}
